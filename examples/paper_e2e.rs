@@ -1,0 +1,71 @@
+//! End-to-end driver: regenerates the paper's entire evaluation section
+//! on one machine, through all three layers (Pallas/JAX AOT kernels via
+//! PJRT on the hot path, MapReduce runtime on the simulated Table 3
+//! cluster).
+//!
+//! By default runs at 1/10 of Table 5's dataset sizes so the whole thing
+//! finishes in a few minutes; set `KMR_SCALE=1` for the full-scale run
+//! recorded in EXPERIMENTS.md (sim times are work-proportional either
+//! way; the backend env `KMR_E2E_BACKEND=native|pjrt|auto` picks the
+//! kernel path).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example paper_e2e
+//! ```
+
+use kmedoids_mr::driver::suites::{ablation_suite, fig5_suite, table6_suite};
+use kmedoids_mr::report;
+use kmedoids_mr::runtime::{load_backend, BackendKind};
+
+fn main() -> anyhow::Result<()> {
+    let scale: usize = std::env::var("KMR_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
+    let backend_kind = std::env::var("KMR_E2E_BACKEND")
+        .ok()
+        .and_then(|s| BackendKind::parse(&s))
+        .unwrap_or(BackendKind::Auto);
+    let seed: u64 = std::env::var("KMR_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
+    let backend = load_backend(backend_kind, 2048)?;
+    println!(
+        "paper end-to-end reproduction — scale 1/{scale}, backend {}, seed {seed}\n",
+        backend.name()
+    );
+
+    println!("== Table 6 / Fig 3: execution time, 4–7 nodes x 3 datasets ==");
+    let t6 = table6_suite(&backend, scale, seed);
+    println!("\n{}", report::table6(&t6));
+
+    println!("== Fig 4: speedup ==");
+    println!("\n{}", report::fig4_speedup(&t6));
+
+    println!("== Fig 5: comparative algorithms ==");
+    let f5 = fig5_suite(&backend, scale, seed);
+    println!("\n{}", report::fig5_comparative(&f5));
+
+    println!("== §3.1 ablation: seeding strategy ==");
+    let ab = ablation_suite(&backend, scale, seed);
+    println!();
+    println!("{:<18}{:>8}{:>12}{:>16}", "variant", "iters", "time(ms)", "cost");
+    for r in &ab {
+        println!("{:<18}{:>8}{:>12}{:>16.4e}", r.algorithm, r.iterations, r.time_ms, r.cost);
+    }
+
+    // Sanity assertions on the paper's qualitative claims.
+    for ds in [t6[0].n_points, t6[4].n_points, t6[8].n_points] {
+        let times: Vec<u64> =
+            t6.iter().filter(|r| r.n_points == ds).map(|r| r.time_ms).collect();
+        anyhow::ensure!(
+            times.windows(2).all(|w| w[1] <= w[0]),
+            "time must decrease with nodes: {times:?}"
+        );
+    }
+    let pp_iters: usize = ab[0].iterations;
+    let rand_iters: usize = ab[1].iterations;
+    anyhow::ensure!(
+        pp_iters <= rand_iters,
+        "++ seeding should not need more iterations ({pp_iters} vs {rand_iters})"
+    );
+
+    println!("\nCSV (all cells):\n{}", report::to_csv(&t6));
+    println!("paper_e2e OK");
+    Ok(())
+}

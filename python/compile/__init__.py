@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX model (L2) + Pallas kernels (L1) -> HLO text.
+
+Nothing in this package is imported at serving time; the Rust coordinator
+only consumes the AOT artifacts written by :mod:`compile.aot`.
+"""

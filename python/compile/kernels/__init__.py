@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for the K-Medoids++ hot paths.
+
+Two kernels cover every distance computation in the system:
+
+- :mod:`assign` -- tiled point->nearest-medoid assignment (mapper hot path
+  and the D(p) pass of the ++ seeding).
+- :mod:`pairwise` -- tiled pairwise-cost partials (reducer hot path: exact
+  PAM-style medoid update composed over fixed-size blocks).
+
+Both are lowered with ``interpret=True`` (the CPU PJRT plugin cannot run
+Mosaic custom-calls) and are validated against the pure-jnp oracle in
+:mod:`ref` by the pytest suite.
+"""
+
+from . import assign, pairwise, ref  # noqa: F401

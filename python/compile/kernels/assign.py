@@ -1,0 +1,101 @@
+"""Pallas kernel: tiled nearest-medoid assignment (the mapper hot path).
+
+One ``pallas_call`` processes a block of ``B`` points against ``K`` padded
+medoid slots and emits, per point, the nearest medoid id and squared
+distance, plus per-cluster partial cost/count sums (what the paper's
+combiner would aggregate before the shuffle).
+
+TPU shaping (see DESIGN.md #Hardware-Adaptation): the grid walks the point
+axis in ``TILE``-row tiles so a ``(TILE, K)`` distance block lives in VMEM;
+the distance uses the ``||p||^2 - 2 p.m + ||m||^2`` decomposition so the
+cross term is a single ``(TILE,2) x (2,K)`` matmul that the MXU executes;
+the per-cluster sums accumulate into a ``(K,)`` output block that every grid
+step revisits (classic Pallas reduction-output pattern).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and the artifact must run inside the Rust coordinator.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 512 rows/tile: ~8% fewer interpret-mode grid steps than 256 with the
+# (TILE, K) distance block still far under VMEM budget (512x64 f32 = 128KB).
+DEFAULT_TILE = 512
+
+
+def _assign_kernel(points_ref, mask_ref, medoids_ref, labels_ref, mindist_ref, ccost_ref, ccount_ref):
+    """One grid step: TILE points vs all K medoid slots."""
+    p = points_ref[...]  # (T, 2)
+    mask = mask_ref[...]  # (T,)
+    m = medoids_ref[...]  # (K, 2)
+
+    # ||p - m||^2 = ||p||^2 - 2 p.m + ||m||^2 ; cross term is the matmul.
+    p2 = jnp.sum(p * p, axis=1, keepdims=True)  # (T, 1)
+    m2 = jnp.sum(m * m, axis=1)[None, :]  # (1, K)
+    cross = jnp.dot(p, m.T, preferred_element_type=jnp.float32)  # (T, K)
+    d = jnp.maximum(p2 - 2.0 * cross + m2, 0.0)
+
+    labels = jnp.argmin(d, axis=1).astype(jnp.int32)
+    mind = jnp.min(d, axis=1) * mask
+
+    labels_ref[...] = labels
+    mindist_ref[...] = mind
+
+    k = m.shape[0]
+    onehot = (labels[:, None] == jax.lax.iota(jnp.int32, k)[None, :]).astype(jnp.float32)
+    onehot = onehot * mask[:, None]
+    partial_cost = jnp.sum(onehot * mind[:, None], axis=0)  # (K,)
+    partial_count = jnp.sum(onehot, axis=0)  # (K,)
+
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        ccost_ref[...] = jnp.zeros_like(ccost_ref)
+        ccount_ref[...] = jnp.zeros_like(ccount_ref)
+
+    ccost_ref[...] += partial_cost
+    ccount_ref[...] += partial_count
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def assign_block(points, mask, medoids, *, tile=None):
+    """Assign a padded block of points to their nearest medoids.
+
+    points (B,2) f32, mask (B,) f32, medoids (K,2) f32 (padded with
+    ref.PAD_COORD). Returns (labels (B,) i32, mindists (B,) f32,
+    cluster_cost (K,) f32, cluster_count (K,) f32). Matches ref.assign.
+    """
+    b, _ = points.shape
+    k = medoids.shape[0]
+    if tile is None:
+        tile = min(DEFAULT_TILE, b)
+    if b % tile != 0:
+        raise ValueError(f"block size {b} not divisible by tile {tile}")
+    grid = (b // tile,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, mask, medoids)

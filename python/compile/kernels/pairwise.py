@@ -1,0 +1,60 @@
+"""Pallas kernel: tiled pairwise-cost partials (the reducer hot path).
+
+The exact PAM-style medoid update for a cluster asks, for every candidate
+point ``c_i``, the total cost ``sum_j ||c_i - p_j||^2`` over the cluster
+members. This kernel computes that sum for one (candidate-block,
+member-block) pair; the Rust reducer composes arbitrary cluster sizes by
+summing the partial vectors over member blocks and taking the global argmin
+over candidate blocks.
+
+Tiling: grid over the candidate axis; each step holds a ``(TILE, B)``
+distance block in VMEM, with the member block resident across steps. The
+cross term is one ``(TILE,2) x (2,B)`` MXU matmul.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 256
+
+
+def _pairwise_kernel(cand_ref, memb_ref, mask_ref, cost_ref):
+    c = cand_ref[...]  # (T, 2)
+    p = memb_ref[...]  # (B, 2)
+    mask = mask_ref[...]  # (B,)
+
+    c2 = jnp.sum(c * c, axis=1, keepdims=True)  # (T, 1)
+    p2 = jnp.sum(p * p, axis=1)[None, :]  # (1, B)
+    cross = jnp.dot(c, p.T, preferred_element_type=jnp.float32)  # (T, B)
+    d = jnp.maximum(c2 - 2.0 * cross + p2, 0.0)
+    cost_ref[...] = jnp.sum(d * mask[None, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def pairwise_cost_block(candidates, members, member_mask, *, tile=None):
+    """Partial medoid-update costs for one candidate/member block pair.
+
+    candidates (B,2) f32, members (B,2) f32, member_mask (B,) f32.
+    Returns (B,) f32 partial costs. Matches ref.pairwise_cost.
+    """
+    b, _ = candidates.shape
+    if tile is None:
+        tile = min(DEFAULT_TILE, b)
+    if b % tile != 0:
+        raise ValueError(f"block size {b} not divisible by tile {tile}")
+    grid = (b // tile,)
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((b, 2), lambda i: (0, 0)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(candidates, members, member_mask)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *specification*: small, obviously-correct jnp implementations
+of the two hot-path computations. The pytest suite asserts the Pallas
+kernels (and, transitively, the AOT artifacts the Rust runtime executes)
+match these to float32 tolerance.
+"""
+
+import jax.numpy as jnp
+
+# Coordinate used to pad unused medoid slots. Distances to a padded medoid
+# are ~1e18 and can never win the argmin against any real point (real
+# coordinates are bounded by the dataset bbox, |coord| < 1e6 by contract).
+PAD_COORD = 1e9
+
+
+def sq_distances(points, medoids):
+    """All-pairs squared Euclidean distances.
+
+    points: (B, 2) f32, medoids: (K, 2) f32 -> (B, K) f32.
+
+    Uses the expanded form ||p||^2 - 2 p.m + ||m||^2 (same decomposition
+    the kernel uses so rounding behaviour matches).
+    """
+    p2 = jnp.sum(points * points, axis=1, keepdims=True)  # (B, 1)
+    m2 = jnp.sum(medoids * medoids, axis=1)[None, :]  # (1, K)
+    cross = points @ medoids.T  # (B, K)
+    d = p2 - 2.0 * cross + m2
+    return jnp.maximum(d, 0.0)  # clamp tiny negative rounding
+
+
+def assign(points, mask, medoids):
+    """Nearest-medoid assignment over one block.
+
+    points: (B, 2) f32 -- block of spatial points (padded rows arbitrary)
+    mask:   (B,)  f32 -- 1.0 for valid rows, 0.0 for padding
+    medoids:(K, 2) f32 -- padded with PAD_COORD rows beyond k
+
+    Returns (labels, mindists, cluster_cost, cluster_count):
+      labels        (B,) i32 -- argmin cluster id (garbage where mask==0)
+      mindists      (B,) f32 -- squared distance to nearest medoid, masked
+      cluster_cost  (K,) f32 -- sum of mindists per cluster (masked)
+      cluster_count (K,) f32 -- number of valid points per cluster
+    """
+    d = sq_distances(points, medoids)  # (B, K)
+    labels = jnp.argmin(d, axis=1).astype(jnp.int32)
+    mindists = jnp.min(d, axis=1) * mask
+    onehot = (labels[:, None] == jnp.arange(medoids.shape[0])[None, :]).astype(
+        jnp.float32
+    ) * mask[:, None]
+    cluster_cost = jnp.sum(onehot * mindists[:, None], axis=0)
+    cluster_count = jnp.sum(onehot, axis=0)
+    return labels, mindists, cluster_cost, cluster_count
+
+
+def pairwise_cost(candidates, members, member_mask):
+    """Partial medoid-update costs over one (candidate-block, member-block).
+
+    candidates:  (B, 2) f32 -- candidate medoid positions
+    members:     (B, 2) f32 -- cluster member block (padded)
+    member_mask: (B,)  f32 -- 1.0 for valid members
+
+    Returns (B,) f32: partial_cost[i] = sum_j mask[j] * ||c_i - p_j||^2.
+    The exact PAM update for a cluster of any size is the elementwise sum
+    of these partials over all member blocks.
+    """
+    d = sq_distances(candidates, members)  # (B, B)
+    return jnp.sum(d * member_mask[None, :], axis=1)

@@ -1,0 +1,78 @@
+"""Layer-2 JAX compute graphs for the MapReduce K-Medoids++ hot paths.
+
+Each public function here is one AOT unit: it is jitted, lowered to HLO
+text by :mod:`compile.aot`, and executed from the Rust coordinator via
+PJRT. Shapes are static (see DESIGN.md padding contract).
+
+The graphs are thin on purpose -- the Pallas kernels carry the compute and
+XLA fuses the rest -- but they are the *only* numeric code on the request
+path, so everything the mapper/reducer needs per block is produced in a
+single executable call (no Python, no multiple dispatches).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import assign as assign_kernel
+from .kernels import pairwise as pairwise_kernel
+from .kernels.ref import PAD_COORD
+
+__all__ = [
+    "assign_step",
+    "pairwise_cost_step",
+    "seed_mindist_step",
+    "PAD_COORD",
+]
+
+
+def assign_step(points, mask, medoids):
+    """Mapper step: labels + mindists + per-cluster partial (cost, count).
+
+    One call = one input block. The per-cluster partials are the combiner
+    output the paper's mapper would emit alongside the (clusterId, point)
+    pairs, letting the driver track total cost E (Eq. 1) per iteration
+    without a second pass.
+    """
+    labels, mindists, ccost, ccount = assign_kernel.assign_block(points, mask, medoids)
+    return labels, mindists, ccost, ccount
+
+
+def pairwise_cost_step(candidates, members, member_mask):
+    """Reducer step: partial PAM-update costs for a block pair."""
+    return (pairwise_kernel.pairwise_cost_block(candidates, members, member_mask),)
+
+
+def seed_mindist_step(points, mask, medoids, current_mindist):
+    """K-Medoids++ seeding D(p) maintenance.
+
+    After a new medoid is appended, D(p) only shrinks:
+    ``D'(p) = min(D(p), ||p - new||^2)``. We reuse the assign kernel over
+    the padded medoid set and fold in the running minimum, returning the
+    per-block sum S that the weighted draw needs.
+    """
+    _, mindists, _, _ = assign_kernel.assign_block(points, mask, medoids)
+    new_min = jnp.minimum(current_mindist, mindists) * mask
+    block_sum = jnp.sum(new_min)
+    return new_min, block_sum.reshape((1,))
+
+
+def make_example_args(kind, b, k):
+    """ShapeDtypeStructs for lowering each AOT unit."""
+    f32 = jnp.float32
+    pt = jax.ShapeDtypeStruct((b, 2), f32)
+    vec = jax.ShapeDtypeStruct((b,), f32)
+    med = jax.ShapeDtypeStruct((k, 2), f32)
+    if kind == "assign":
+        return (pt, vec, med)
+    if kind == "pairwise":
+        return (pt, pt, vec)
+    if kind == "seed":
+        return (pt, vec, med, vec)
+    raise ValueError(f"unknown AOT unit kind: {kind}")
+
+
+AOT_UNITS = {
+    "assign": assign_step,
+    "pairwise": pairwise_cost_step,
+    "seed": seed_mindist_step,
+}

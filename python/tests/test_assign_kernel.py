@@ -1,0 +1,124 @@
+"""Pallas assign kernel vs pure-jnp oracle (the core L1 correctness signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import assign, ref
+
+
+def make_case(seed, b, k, n_valid, n_medoids, spread=100.0):
+    rng = np.random.default_rng(seed)
+    pts = (rng.normal(size=(b, 2)) * spread).astype(np.float32)
+    mask = (np.arange(b) < n_valid).astype(np.float32)
+    med = np.full((k, 2), ref.PAD_COORD, dtype=np.float32)
+    med[:n_medoids] = (rng.normal(size=(n_medoids, 2)) * spread).astype(np.float32)
+    return jnp.array(pts), jnp.array(mask), jnp.array(med)
+
+
+def check_against_ref(pts, mask, med, n_valid, tile=64, spread=100.0):
+    labels, mind, ccost, ccnt = assign.assign_block(pts, mask, med, tile=tile)
+    rl, rm, rc, rn = ref.assign(pts, mask, med)
+    # Labels must agree exactly on valid rows (ties broken identically:
+    # both use argmin over the same distance expression).
+    np.testing.assert_array_equal(np.array(labels)[:n_valid], np.array(rl)[:n_valid])
+    # Distances scale like spread^2; use scale-aware absolute tolerance.
+    atol = max(spread * spread, 1.0) * 1e-5
+    np.testing.assert_allclose(mind, rm, rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(ccost, rc, rtol=1e-3, atol=atol * pts.shape[0])
+    np.testing.assert_allclose(ccnt, rn, rtol=0, atol=0)
+
+
+def test_basic_block():
+    pts, mask, med = make_case(0, 256, 16, 256, 8)
+    check_against_ref(pts, mask, med, 256)
+
+
+def test_padded_points():
+    pts, mask, med = make_case(1, 256, 16, 100, 5)
+    check_against_ref(pts, mask, med, 100)
+
+
+def test_single_medoid():
+    pts, mask, med = make_case(2, 128, 16, 128, 1)
+    labels, mind, ccost, ccnt = assign.assign_block(pts, mask, med, tile=64)
+    assert (np.array(labels) == 0).all()
+    assert np.isclose(float(ccnt[0]), 128)
+
+
+def test_all_points_padded():
+    pts, mask, med = make_case(3, 128, 16, 0, 4)
+    _, mind, ccost, ccnt = assign.assign_block(pts, mask, med, tile=64)
+    assert float(jnp.sum(mind)) == 0.0
+    assert float(jnp.sum(ccost)) == 0.0
+    assert float(jnp.sum(ccnt)) == 0.0
+
+
+def test_counts_sum_to_valid():
+    pts, mask, med = make_case(4, 512, 16, 300, 7)
+    _, _, _, ccnt = assign.assign_block(pts, mask, med, tile=128)
+    assert float(jnp.sum(ccnt)) == 300.0
+
+
+def test_cost_matches_mindist_sum():
+    pts, mask, med = make_case(5, 256, 16, 256, 9)
+    _, mind, ccost, _ = assign.assign_block(pts, mask, med, tile=64)
+    np.testing.assert_allclose(float(jnp.sum(ccost)), float(jnp.sum(mind)), rtol=1e-5)
+
+
+def test_point_on_medoid_has_zero_dist():
+    pts, mask, med = make_case(6, 128, 16, 128, 4)
+    pts = pts.at[7].set(med[2])
+    labels, mind, _, _ = assign.assign_block(pts, mask, med, tile=64)
+    assert int(labels[7]) == 2
+    assert float(mind[7]) <= 1e-3
+
+
+def test_pad_medoids_never_win():
+    # Even extreme real coordinates lose to the PAD sentinel by orders of
+    # magnitude, so labels stay < n_medoids.
+    pts, mask, med = make_case(7, 256, 16, 256, 3, spread=1e5)
+    labels, _, _, _ = assign.assign_block(pts, mask, med, tile=64)
+    assert int(np.array(labels).max()) < 3
+
+
+@pytest.mark.parametrize("tile", [32, 64, 128, 256])
+def test_tile_invariance(tile):
+    pts, mask, med = make_case(8, 256, 16, 200, 6)
+    out = assign.assign_block(pts, mask, med, tile=tile)
+    base = assign.assign_block(pts, mask, med, tile=256)
+    for a, b in zip(out, base):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+
+def test_indivisible_tile_raises():
+    pts, mask, med = make_case(9, 250, 16, 250, 4)
+    with pytest.raises(ValueError):
+        assign.assign_block(pts, mask, med, tile=64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_valid=st.integers(0, 256),
+    n_medoids=st.integers(1, 15),
+    spread=st.sampled_from([0.1, 1.0, 100.0, 1e4]),
+)
+def test_hypothesis_matches_ref(seed, n_valid, n_medoids, spread):
+    pts, mask, med = make_case(seed, 256, 16, n_valid, n_medoids, spread)
+    check_against_ref(pts, mask, med, n_valid, spread=spread)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_duplicate_points(seed):
+    rng = np.random.default_rng(seed)
+    base = (rng.normal(size=(4, 2)) * 10).astype(np.float32)
+    pts = jnp.array(base[rng.integers(0, 4, size=256)])
+    mask = jnp.ones(256, jnp.float32)
+    med = np.full((16, 2), ref.PAD_COORD, np.float32)
+    med[:4] = base
+    med = jnp.array(med)
+    labels, mind, _, _ = assign.assign_block(pts, mask, med, tile=64)
+    assert float(jnp.max(mind)) <= 1e-3  # every point sits on a medoid

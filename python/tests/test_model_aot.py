@@ -1,0 +1,79 @@
+"""L2 model graphs + AOT lowering: shapes, manifest, cache idempotence."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_assign_step_shapes():
+    b, k = 256, 16
+    out = model.assign_step(
+        jnp.zeros((b, 2), jnp.float32),
+        jnp.ones((b,), jnp.float32),
+        jnp.full((k, 2), ref.PAD_COORD, jnp.float32).at[0].set(0.0),
+    )
+    labels, mind, ccost, ccnt = out
+    assert labels.shape == (b,) and labels.dtype == jnp.int32
+    assert mind.shape == (b,) and mind.dtype == jnp.float32
+    assert ccost.shape == (k,) and ccnt.shape == (k,)
+
+
+def test_seed_step_monotone_shrink():
+    rng = np.random.default_rng(0)
+    b, k = 256, 16
+    pts = jnp.array(rng.normal(size=(b, 2)).astype(np.float32))
+    mask = jnp.ones((b,), jnp.float32)
+    med = np.full((k, 2), ref.PAD_COORD, np.float32)
+    med[0] = [0.0, 0.0]
+    cur = jnp.array(rng.uniform(0, 0.5, size=(b,)).astype(np.float32))
+    new, s = model.seed_mindist_step(pts, mask, jnp.array(med), cur)
+    assert bool(jnp.all(new <= cur + 1e-6))
+    np.testing.assert_allclose(float(s[0]), float(jnp.sum(new)), rtol=1e-5)
+
+
+def test_make_example_args_kinds():
+    for kind in ("assign", "pairwise", "seed"):
+        args = model.make_example_args(kind, 64, 8)
+        assert all(a.dtype == jnp.float32 for a in args)
+    with pytest.raises(ValueError):
+        model.make_example_args("bogus", 64, 8)
+
+
+def test_unit_names():
+    assert aot.unit_name("assign", 2048, 64) == "assign_b2048_k64"
+    assert aot.unit_name("pairwise", 2048, 64) == "pairwise_b2048"
+
+
+def test_build_and_cache(tmp_path):
+    out = str(tmp_path / "arts")
+    m1 = aot.build(out, [{"block": 64, "kpad": 8}])
+    assert len(m1["units"]) == 3
+    for u in m1["units"]:
+        p = os.path.join(out, u["file"])
+        assert os.path.exists(p)
+        text = open(p).read()
+        assert text.startswith("HloModule"), "artifact must be HLO text"
+        assert u["pad_coord"] == ref.PAD_COORD
+    # Second build is a cache no-op producing an identical manifest.
+    m2 = aot.build(out, [{"block": 64, "kpad": 8}])
+    assert json.dumps(m1, sort_keys=True) == json.dumps(m2, sort_keys=True)
+
+
+def test_repo_manifest_consistent():
+    """If `make artifacts` has run, the checked manifest must be valid."""
+    here = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    man = os.path.join(here, "artifacts", "manifest.json")
+    if not os.path.exists(man):
+        pytest.skip("artifacts not built")
+    units = json.load(open(man))["units"]
+    names = {u["name"] for u in units}
+    assert "assign_b2048_k64" in names
+    assert "pairwise_b2048" in names
+    for u in units:
+        assert os.path.exists(os.path.join(os.path.dirname(man), u["file"]))

@@ -1,0 +1,98 @@
+"""Pallas pairwise-cost kernel vs oracle + composition invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pairwise, ref
+
+
+def make_case(seed, b, n_members, spread=50.0):
+    rng = np.random.default_rng(seed)
+    cand = (rng.normal(size=(b, 2)) * spread).astype(np.float32)
+    memb = (rng.normal(size=(b, 2)) * spread).astype(np.float32)
+    mask = (np.arange(b) < n_members).astype(np.float32)
+    return jnp.array(cand), jnp.array(memb), jnp.array(mask)
+
+
+def test_matches_ref():
+    cand, memb, mask = make_case(0, 256, 256)
+    got = pairwise.pairwise_cost_block(cand, memb, mask, tile=64)
+    want = ref.pairwise_cost(cand, memb, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_masked_members_ignored():
+    cand, memb, mask = make_case(1, 128, 60)
+    got = pairwise.pairwise_cost_block(cand, memb, mask, tile=64)
+    # Recompute with garbage in the masked tail: result must be identical.
+    memb2 = memb.at[60:].set(12345.0)
+    got2 = pairwise.pairwise_cost_block(cand, memb2, mask, tile=64)
+    np.testing.assert_allclose(got, got2, rtol=1e-5)
+
+
+def test_zero_members_zero_cost():
+    cand, memb, mask = make_case(2, 128, 0)
+    got = pairwise.pairwise_cost_block(cand, memb, mask, tile=64)
+    assert float(jnp.max(jnp.abs(got))) == 0.0
+
+
+def test_self_distance_excluded_is_callers_job():
+    # The kernel includes d(c,c)=0 when the candidate is in the member
+    # block -- the sum is unchanged, which is exactly PAM's objective.
+    cand, _, _ = make_case(3, 128, 128)
+    mask = jnp.ones(128, jnp.float32)
+    got = pairwise.pairwise_cost_block(cand, cand, mask, tile=64)
+    want = ref.pairwise_cost(cand, cand, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_block_composition():
+    """Costs over a big member set == sum of per-block partials."""
+    rng = np.random.default_rng(4)
+    cand = jnp.array((rng.normal(size=(128, 2)) * 10).astype(np.float32))
+    members = (rng.normal(size=(3, 128, 2)) * 10).astype(np.float32)
+    mask = jnp.ones(128, jnp.float32)
+    total = sum(
+        pairwise.pairwise_cost_block(cand, jnp.array(mb), mask, tile=64)
+        for mb in members
+    )
+    flat = jnp.array(members.reshape(-1, 2))
+    want = ref.sq_distances(cand, flat).sum(axis=1)
+    np.testing.assert_allclose(total, want, rtol=1e-4, atol=1e-1)
+
+
+@pytest.mark.parametrize("tile", [32, 64, 128])
+def test_tile_invariance(tile):
+    cand, memb, mask = make_case(5, 128, 100)
+    got = pairwise.pairwise_cost_block(cand, memb, mask, tile=tile)
+    base = pairwise.pairwise_cost_block(cand, memb, mask, tile=128)
+    np.testing.assert_allclose(got, base, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_members=st.integers(0, 128),
+    spread=st.sampled_from([0.5, 10.0, 1e3]),
+)
+def test_hypothesis_matches_ref(seed, n_members, spread):
+    cand, memb, mask = make_case(seed, 128, n_members, spread)
+    got = pairwise.pairwise_cost_block(cand, memb, mask, tile=64)
+    want = ref.pairwise_cost(cand, memb, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=spread * spread * 1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_argmin_is_true_medoid(seed):
+    """The argmin of kernel costs is the brute-force 1-medoid of the set."""
+    rng = np.random.default_rng(seed)
+    pts_np = (rng.normal(size=(128, 2)) * 5).astype(np.float32)
+    pts = jnp.array(pts_np)
+    mask = jnp.ones(128, jnp.float32)
+    costs = np.array(pairwise.pairwise_cost_block(pts, pts, mask, tile=64))
+    d = ((pts_np[:, None, :] - pts_np[None, :, :]) ** 2).sum(-1)
+    brute = d.sum(1)
+    assert np.isclose(costs[np.argmin(costs)], brute.min(), rtol=1e-3, atol=1e-1)

@@ -1,0 +1,55 @@
+//! Bench: Fig. 4 — speedup curves for the three datasets, including the
+//! paper's qualitative claim that *larger datasets speed up better*.
+//!
+//! Shares the Table 6 grid (same cells), then derives speedups relative
+//! to the 4-node cluster and checks the Fig. 4 shapes.
+
+use kmedoids_mr::driver::suites::table6_suite;
+use kmedoids_mr::report;
+use kmedoids_mr::runtime::{load_backend, BackendKind};
+
+fn main() {
+    let scale: usize =
+        std::env::var("KMR_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let kind = std::env::var("KMR_BENCH_BACKEND")
+        .ok()
+        .and_then(|s| BackendKind::parse(&s))
+        .unwrap_or(BackendKind::Native);
+    let backend = load_backend(kind, 2048).expect("backend");
+    println!("== Fig 4: speedup (scale 1/{scale}, backend {}) ==", backend.name());
+    let results = table6_suite(&backend, scale, 42);
+    println!("\n{}", report::fig4_speedup(&results));
+
+    // Shape checks: speedup >= 1 at every size, below linear, and the
+    // biggest dataset's 7-node speedup is at least the smallest's.
+    let mut datasets: Vec<usize> = results.iter().map(|r| r.n_points).collect();
+    datasets.sort_unstable();
+    datasets.dedup();
+    let speedup = |ds: usize, n: usize| -> f64 {
+        let base = results.iter().find(|r| r.n_points == ds && r.n_nodes == 4).unwrap();
+        let cur = results.iter().find(|r| r.n_points == ds && r.n_nodes == n).unwrap();
+        base.time_ms as f64 / cur.time_ms as f64
+    };
+    let mut ok = true;
+    for &ds in &datasets {
+        for n in 4..=7 {
+            let s = speedup(ds, n);
+            if s < 0.999 || s > n as f64 / 4.0 + 0.25 {
+                println!("SHAPE VIOLATION: speedup({ds}, {n}) = {s:.2}");
+                ok = false;
+            }
+        }
+    }
+    let s_small = speedup(datasets[0], 7);
+    let s_big = speedup(datasets[2], 7);
+    println!(
+        "7-node speedup: smallest dataset {:.3}x, largest {:.3}x ({})",
+        s_small,
+        s_big,
+        if s_big >= s_small * 0.95 { "larger scales at least as well — Fig 4 shape" } else { "UNEXPECTED" }
+    );
+    if s_big < s_small * 0.95 {
+        ok = false;
+    }
+    println!("paper-shape check: {}", if ok { "PASS" } else { "FAIL" });
+}

@@ -1,0 +1,52 @@
+//! Bench: Fig. 5 — comparative execution time of the proposed parallel
+//! K-Medoids++ against traditional K-Medoids and CLARANS across the three
+//! dataset sizes, plus the §3.1 seeding ablation.
+
+use kmedoids_mr::driver::suites::{ablation_suite, fig5_suite};
+use kmedoids_mr::report;
+use kmedoids_mr::runtime::{load_backend, BackendKind};
+
+fn main() {
+    let scale: usize =
+        std::env::var("KMR_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let kind = std::env::var("KMR_BENCH_BACKEND")
+        .ok()
+        .and_then(|s| BackendKind::parse(&s))
+        .unwrap_or(BackendKind::Native);
+    let backend = load_backend(kind, 2048).expect("backend");
+    println!("== Fig 5: comparative algorithms (scale 1/{scale}, backend {}) ==", backend.name());
+    let results = fig5_suite(&backend, scale, 42);
+    println!("\n{}", report::fig5_comparative(&results));
+    println!("CSV:\n{}", report::to_csv(&results));
+
+    // Shape: proposed <= traditional <= clarans at every dataset size,
+    // with the gap widening as data grows.
+    let mut datasets: Vec<usize> = results.iter().map(|r| r.n_points).collect();
+    datasets.sort_unstable();
+    datasets.dedup();
+    let t = |algo: &str, ds: usize| -> u64 {
+        results.iter().find(|r| r.algorithm == algo && r.n_points == ds).unwrap().time_ms
+    };
+    let mut ok = true;
+    for &ds in &datasets {
+        let pp = t("kmedoids++-mr", ds);
+        let trad = t("kmedoids-serial", ds);
+        let cl = t("clarans", ds);
+        println!("n={ds}: kmedoids++ {pp}ms | traditional {trad}ms | clarans {cl}ms");
+        if !(pp <= trad && trad <= cl) {
+            println!("SHAPE VIOLATION at n={ds}");
+            ok = false;
+        }
+    }
+    println!("\n== §3.1 ablation: seeding and update strategies (dataset 1) ==\n");
+    let ab = ablation_suite(&backend, scale, 42);
+    println!("{:<18}{:>8}{:>12}{:>16}", "variant", "iters", "time(ms)", "cost");
+    for r in &ab {
+        println!("{:<18}{:>8}{:>12}{:>16.4e}", r.algorithm, r.iterations, r.time_ms, r.cost);
+    }
+    if ab[0].iterations > ab[1].iterations {
+        println!("SHAPE VIOLATION: ++ seeding used more iterations than random init");
+        ok = false;
+    }
+    println!("paper-shape check: {}", if ok { "PASS" } else { "FAIL" });
+}

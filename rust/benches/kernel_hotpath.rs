@@ -1,0 +1,78 @@
+//! Bench: the L1/L2 hot path — PJRT (AOT Pallas/JAX artifact) vs the
+//! native Rust oracle on the two block kernels, plus the end-to-end
+//! assignment throughput the mapper sees.
+//!
+//! This is the §Perf microbenchmark: distance-evaluations per second per
+//! backend, block-size sensitivity, and executor lock overhead.
+
+use kmedoids_mr::geo::Point;
+use kmedoids_mr::runtime::{
+    assign_points, default_artifacts_dir, pairwise_costs, ComputeBackend, Manifest, NativeBackend,
+    PjrtBackend,
+};
+use kmedoids_mr::util::bench::{bench, fmt_rate, header, BenchOpts};
+use kmedoids_mr::util::rng::Rng;
+
+fn mk_points(n: usize, seed: u64) -> Vec<Point> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| Point::new((rng.f64() * 2e4 - 1e4) as f32, (rng.f64() * 2e4 - 1e4) as f32))
+        .collect()
+}
+
+fn bench_backend(name: &str, be: &dyn ComputeBackend, n: usize, k: usize) {
+    let points = mk_points(n, 1);
+    let medoids = mk_points(k, 2);
+    let opts = BenchOpts { warmup_iters: 1, iters: 5 };
+    let s = bench(&format!("{name}: assign {n} pts x {k} medoids"), &opts, || {
+        assign_points(be, &points, &medoids).unwrap().labels.len()
+    });
+    println!(
+        "    -> {} dist-evals/s (block={})",
+        fmt_rate((n * k) as f64, s.median_s),
+        be.block()
+    );
+
+    let cands = mk_points(1024, 3);
+    let members = mk_points(16 * 1024, 4);
+    let s = bench(&format!("{name}: pairwise 1024 cands x 16k members"), &opts, || {
+        pairwise_costs(be, &cands, &members).unwrap().len()
+    });
+    println!("    -> {} dist-evals/s", fmt_rate((1024 * 16 * 1024) as f64, s.median_s));
+}
+
+fn main() {
+    let n: usize =
+        std::env::var("KMR_BENCH_N").ok().and_then(|s| s.parse().ok()).unwrap_or(262_144);
+    let k = 9;
+    header("kernel hot path: native vs PJRT (AOT Pallas/JAX)");
+
+    let native = NativeBackend::new(2048, 64);
+    bench_backend("native/b2048", &native, n, k);
+
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&dir).expect("manifest");
+        let pjrt = PjrtBackend::load(&manifest, 2048).expect("pjrt backend");
+        bench_backend("pjrt/b2048", &pjrt, n, k);
+        let pjrt_small = PjrtBackend::load(&manifest, 256).expect("pjrt small");
+        bench_backend("pjrt/b256", &pjrt_small, n.min(32_768), k);
+    } else {
+        println!("(artifacts not built; PJRT benches skipped — run `make artifacts`)");
+    }
+
+    // Native block-size sensitivity (structure mirror of the Pallas tile
+    // sweep in python).
+    header("native block-size sweep");
+    for b in [256usize, 1024, 2048, 8192] {
+        let be = NativeBackend::new(b, 64);
+        let points = mk_points(n, 1);
+        let medoids = mk_points(k, 2);
+        let s = bench(
+            &format!("native/b{b}: assign {n} pts"),
+            &BenchOpts { warmup_iters: 1, iters: 3 },
+            || assign_points(&be, &points, &medoids).unwrap().labels.len(),
+        );
+        println!("    -> {}", fmt_rate((n * k) as f64, s.median_s));
+    }
+}

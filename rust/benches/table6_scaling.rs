@@ -1,0 +1,40 @@
+//! Bench: Table 6 / Fig. 3 — execution time of parallel K-Medoids++ over
+//! 4–7 node clusters × the three Table 5 datasets.
+//!
+//! The reported quantity is the *simulated* execution time (ms) on the
+//! Table 3 cluster — the paper's metric. Wallclock of the real compute is
+//! printed alongside. `KMR_SCALE` divides the dataset sizes (default 1 =
+//! full Table 5 scale); `KMR_BENCH_BACKEND` picks the kernel path
+//! (default native — simulated times are backend-independent, see
+//! EXPERIMENTS.md §Method).
+
+use kmedoids_mr::driver::suites::table6_suite;
+use kmedoids_mr::report;
+use kmedoids_mr::runtime::{load_backend, BackendKind};
+
+fn main() {
+    let scale: usize =
+        std::env::var("KMR_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let kind = std::env::var("KMR_BENCH_BACKEND")
+        .ok()
+        .and_then(|s| BackendKind::parse(&s))
+        .unwrap_or(BackendKind::Native);
+    let backend = load_backend(kind, 2048).expect("backend");
+    println!("== Table 6 / Fig 3: K-Medoids++ MR execution time (scale 1/{scale}, backend {}) ==", backend.name());
+    let results = table6_suite(&backend, scale, 42);
+    println!("\nTable 6 — execution time (ms):\n\n{}", report::table6(&results));
+    println!("Fig. 4 — speedup vs 4-node cluster:\n\n{}", report::fig4_speedup(&results));
+    println!("CSV:\n{}", report::to_csv(&results));
+
+    // Paper-shape checks (who wins, monotonicity).
+    let mut ok = true;
+    for ds in [results[0].n_points, results[4].n_points, results[8].n_points] {
+        let times: Vec<u64> =
+            results.iter().filter(|r| r.n_points == ds).map(|r| r.time_ms).collect();
+        if !times.windows(2).all(|w| w[1] <= w[0]) {
+            println!("SHAPE VIOLATION: time not monotone in nodes for dataset {ds}: {times:?}");
+            ok = false;
+        }
+    }
+    println!("paper-shape check: {}", if ok { "PASS" } else { "FAIL" });
+}

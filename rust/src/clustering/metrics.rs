@@ -1,0 +1,196 @@
+//! Cluster-quality metrics: Eq. 1 total cost, adjusted Rand index against
+//! generator ground truth, and a sampled silhouette coefficient.
+
+use crate::geo::Point;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Total cost E (paper Eq. 1): Σ over points of squared distance to the
+/// nearest medoid. Brute force — used as the verification oracle.
+pub fn total_cost(points: &[Point], medoids: &[Point]) -> f64 {
+    assert!(!medoids.is_empty());
+    points
+        .iter()
+        .map(|p| medoids.iter().map(|m| p.dist2(m)).fold(f64::INFINITY, f64::min))
+        .sum()
+}
+
+/// Nearest-medoid labels, brute force.
+pub fn brute_labels(points: &[Point], medoids: &[Point]) -> Vec<u32> {
+    points
+        .iter()
+        .map(|p| {
+            let mut best = (0u32, f64::INFINITY);
+            for (j, m) in medoids.iter().enumerate() {
+                let d = p.dist2(m);
+                if d < best.1 {
+                    best = (j as u32, d);
+                }
+            }
+            best.0
+        })
+        .collect()
+}
+
+/// Adjusted Rand Index between predicted labels and generator truth
+/// (points with no true cluster — noise/outliers — are skipped).
+pub fn adjusted_rand_index(pred: &[u32], truth: &[Option<u32>]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let pairs: Vec<(u32, u32)> = pred
+        .iter()
+        .zip(truth)
+        .filter_map(|(&p, t)| t.map(|t| (p, t)))
+        .collect();
+    let n = pairs.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut cont: HashMap<(u32, u32), u64> = HashMap::new();
+    let mut rows: HashMap<u32, u64> = HashMap::new();
+    let mut cols: HashMap<u32, u64> = HashMap::new();
+    for &(p, t) in &pairs {
+        *cont.entry((p, t)).or_insert(0) += 1;
+        *rows.entry(p).or_insert(0) += 1;
+        *cols.entry(t).or_insert(0) += 1;
+    }
+    let c2 = |x: u64| (x * x.saturating_sub(1) / 2) as f64;
+    let sum_ij: f64 = cont.values().map(|&v| c2(v)).sum();
+    let sum_i: f64 = rows.values().map(|&v| c2(v)).sum();
+    let sum_j: f64 = cols.values().map(|&v| c2(v)).sum();
+    let total = c2(n as u64);
+    let expected = sum_i * sum_j / total;
+    let max_index = 0.5 * (sum_i + sum_j);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0;
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Silhouette coefficient estimated on a deterministic sample (full
+/// silhouette is O(n²)). Returns a value in [-1, 1].
+pub fn silhouette_sampled(
+    points: &[Point],
+    labels: &[u32],
+    k: usize,
+    sample: usize,
+    seed: u64,
+) -> f64 {
+    assert_eq!(points.len(), labels.len());
+    let n = points.len();
+    if n < 2 || k < 2 {
+        return 0.0;
+    }
+    let mut rng = Rng::new(seed);
+    let idx = rng.sample_indices(n, sample.min(n));
+    // Pre-bucket points by cluster, sampling each bucket too.
+    let mut buckets: Vec<Vec<Point>> = vec![Vec::new(); k];
+    for (p, &l) in points.iter().zip(labels) {
+        let b = &mut buckets[l as usize];
+        if b.len() < 2000 {
+            b.push(*p);
+        } else {
+            // Reservoir: keep the per-cluster sample unbiased.
+            let j = rng.below(b.len() * 4);
+            if j < 2000 {
+                b[j % 2000] = *p;
+            }
+        }
+    }
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    for &i in &idx {
+        let li = labels[i] as usize;
+        if buckets[li].len() < 2 {
+            continue;
+        }
+        let mean_to = |bucket: &[Point]| -> f64 {
+            bucket.iter().map(|q| points[i].dist2(q).sqrt()).sum::<f64>() / bucket.len() as f64
+        };
+        let a = mean_to(&buckets[li]);
+        let b = (0..k)
+            .filter(|&j| j != li && !buckets[j].is_empty())
+            .map(|j| mean_to(&buckets[j]))
+            .fold(f64::INFINITY, f64::min);
+        if !b.is_finite() {
+            continue;
+        }
+        total += (b - a) / a.max(b).max(1e-12);
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blobs() -> (Vec<Point>, Vec<u32>) {
+        let mut pts = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..50 {
+            pts.push(Point::new(i as f32 * 0.01, 0.0));
+            labels.push(0);
+            pts.push(Point::new(100.0 + i as f32 * 0.01, 0.0));
+            labels.push(1);
+        }
+        (pts, labels)
+    }
+
+    #[test]
+    fn total_cost_zero_on_medoids() {
+        let pts = vec![Point::new(1.0, 2.0), Point::new(3.0, 4.0)];
+        assert_eq!(total_cost(&pts, &pts), 0.0);
+        assert!(total_cost(&pts, &[Point::new(0.0, 0.0)]) > 0.0);
+    }
+
+    #[test]
+    fn ari_perfect_and_permuted() {
+        let truth: Vec<Option<u32>> = vec![Some(0), Some(0), Some(1), Some(1), Some(2), Some(2)];
+        let pred = vec![5u32, 5, 7, 7, 9, 9]; // same partition, relabeled
+        assert!((adjusted_rand_index(&pred, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_random_near_zero() {
+        let mut rng = Rng::new(4);
+        let truth: Vec<Option<u32>> = (0..2000).map(|_| Some(rng.below(3) as u32)).collect();
+        let pred: Vec<u32> = (0..2000).map(|_| rng.below(3) as u32).collect();
+        let ari = adjusted_rand_index(&pred, &truth);
+        assert!(ari.abs() < 0.05, "ari {ari}");
+    }
+
+    #[test]
+    fn ari_ignores_noise() {
+        let truth = vec![Some(0), Some(0), None, Some(1), Some(1), None];
+        let pred = vec![0u32, 0, 9, 1, 1, 3];
+        assert!((adjusted_rand_index(&pred, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn silhouette_high_for_separated_blobs() {
+        let (pts, labels) = two_blobs();
+        let s = silhouette_sampled(&pts, &labels, 2, 100, 1);
+        assert!(s > 0.9, "silhouette {s}");
+    }
+
+    #[test]
+    fn silhouette_low_for_bad_split() {
+        let (pts, _) = two_blobs();
+        // Random labels: silhouette should be much worse.
+        let mut rng = Rng::new(2);
+        let bad: Vec<u32> = (0..pts.len()).map(|_| rng.below(2) as u32).collect();
+        let s = silhouette_sampled(&pts, &bad, 2, 100, 1);
+        assert!(s < 0.3, "silhouette {s}");
+    }
+
+    #[test]
+    fn brute_labels_pick_nearest() {
+        let pts = vec![Point::new(0.0, 0.0), Point::new(10.0, 0.0)];
+        let med = vec![Point::new(1.0, 0.0), Point::new(9.0, 0.0)];
+        assert_eq!(brute_labels(&pts, &med), vec![0, 1]);
+    }
+}

@@ -1,0 +1,99 @@
+//! Clustering algorithms: the paper's parallel K-Medoids++ plus every
+//! comparator it is evaluated against.
+//!
+//! | Algorithm | Module | Role |
+//! |---|---|---|
+//! | Parallel K-Medoids++ (MR) | [`parallel`] | the paper's contribution (§3) |
+//! | Parallel K-Medoids, random init (MR) | [`parallel`] | "traditional K-Medoids" in Fig. 5 |
+//! | Serial alternating K-Medoids | [`pam`] | §2.3 baseline |
+//! | PAM (build + swap) | [`pam`] | exact small-n reference |
+//! | CLARANS | [`clarans`] | Fig. 5 comparator |
+//! | Parallel k-means (MR) | [`kmeans`] | robustness ablation (§1 motivation) |
+
+pub mod clarans;
+pub mod kmeans;
+pub mod metrics;
+pub mod pam;
+pub mod parallel;
+pub mod seeding;
+
+use crate::geo::Point;
+
+/// How a reducer picks the next medoid of a cluster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum UpdateStrategy {
+    /// Exact PAM-style update: every member is a candidate, cost over all
+    /// members. O(m²) distance evaluations per cluster.
+    Exact,
+    /// Candidate sampling: `candidates` sampled members (plus the current
+    /// medoid) scored against up to `member_sample` sampled members.
+    /// Unbiased argmin estimate; the only tractable choice at the paper's
+    /// 3.2M-point scale (see DESIGN.md substitutions).
+    Sampled { candidates: usize, member_sample: usize },
+    /// Like `Sampled`, but the member sample grows with the cluster
+    /// (`max(min_sample, m / frac_div)`), so the reduce phase scales with
+    /// dataset size the way the paper's exact Table 2 reducer does.
+    SampledAdaptive { candidates: usize, frac_div: usize, min_sample: usize },
+    /// Pick the member nearest the cluster centroid (Zhang & Couloigner
+    /// style fast update). O(m).
+    CentroidNearest,
+}
+
+impl UpdateStrategy {
+    pub fn paper_scale_default() -> UpdateStrategy {
+        UpdateStrategy::SampledAdaptive { candidates: 256, frac_div: 4, min_sample: 16_384 }
+    }
+}
+
+/// Common result type for every algorithm.
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    pub medoids: Vec<Point>,
+    /// Final assignment (present when the driver ran a labeling pass).
+    pub labels: Option<Vec<u32>>,
+    /// Total cost E (Eq. 1): sum of squared distances to medoids.
+    pub cost: f64,
+    /// Outer iterations until convergence.
+    pub iterations: usize,
+    /// Simulated wall-clock seconds (MR jobs on the simulated cluster, or
+    /// the serial cost model for serial algorithms).
+    pub sim_seconds: f64,
+    /// Distance evaluations actually performed (work ground truth).
+    pub dist_evals: u64,
+}
+
+/// Convergence / iteration-control knobs shared by the iterative solvers.
+#[derive(Debug, Clone)]
+pub struct IterParams {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Stop when medoids are unchanged (the paper's criterion). As a
+    /// safety net we also stop when cost improves by less than `rel_tol`.
+    pub rel_tol: f64,
+    /// When set, run exactly this many outer iterations regardless of
+    /// convergence. Used by the Table 6 scaling suite so that the
+    /// time-vs-dataset-size comparison is not confounded by per-dataset
+    /// convergence luck (iteration counts vary with the synthetic seed;
+    /// the paper's monotone Table 6 implies near-equal counts). Documented
+    /// in EXPERIMENTS.md §Method.
+    pub fixed_iters: Option<usize>,
+    pub seed: u64,
+}
+
+impl IterParams {
+    pub fn new(k: usize, seed: u64) -> IterParams {
+        // rel_tol 1e-3 ≈ the paper's "total cost remains the same" with
+        // a sampled update in the loop (exact equality still fires first
+        // for the Exact strategy).
+        IterParams { k, max_iters: 30, rel_tol: 1e-3, fixed_iters: None, seed }
+    }
+}
+
+/// Initialization flavor (the paper's §3.1 ablation axis).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Init {
+    /// K-Medoids++ weighted seeding (Arthur & Vassilvitskii).
+    PlusPlus,
+    /// Uniform random distinct points ("traditional").
+    Random,
+}

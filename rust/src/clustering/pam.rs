@@ -1,0 +1,302 @@
+//! Serial K-Medoids baselines.
+//!
+//! - [`alternating_kmedoids`] — the "traditional K-Medoids" of the paper's
+//!   §2.3 / Fig. 5: assign all points to the nearest medoid, then per
+//!   cluster pick the member with the least total cost; repeat until the
+//!   medoids stop changing. Runs on one node (the master), so its
+//!   simulated time comes from the serial cost model.
+//! - [`pam_swap`] — the classic PAM build+swap of Kaufman & Rousseeuw
+//!   (§2.3's "earliest K-Medoids algorithm"): exact but O(k(n−k)²) per
+//!   pass; used as the quality reference on small inputs.
+
+use super::seeding::{plus_plus_serial, random_init};
+use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
+use crate::config::ClusterConfig;
+use crate::geo::Point;
+use crate::mapreduce::ReduceCtx;
+use crate::runtime::ComputeBackend;
+use crate::sim::{CostModel, TaskWork};
+use crate::util::rng::Rng;
+
+/// Simulated seconds for a serial computation on the master node:
+/// CPU from the work meter plus one full dataset scan per pass.
+pub fn serial_seconds(
+    cfg: &ClusterConfig,
+    cost: &CostModel,
+    work: &TaskWork,
+    scans: u64,
+    dataset_bytes: u64,
+) -> f64 {
+    let node = &cfg.nodes[cfg.master];
+    cost.cpu_seconds(node, work)
+        + scans as f64 * dataset_bytes as f64 / (cost.disk_read_mb_s * 1e6)
+}
+
+/// Traditional serial K-Medoids (alternating assignment / least-cost
+/// medoid update). `update` controls the per-cluster update exactly like
+/// the MR reducer, so serial-vs-parallel comparisons are apples-to-apples.
+pub fn alternating_kmedoids(
+    backend: &dyn ComputeBackend,
+    points: &[Point],
+    params: &IterParams,
+    init: Init,
+    update: UpdateStrategy,
+    cfg: &ClusterConfig,
+    cost_model: &CostModel,
+    dataset_bytes: u64,
+) -> ClusterOutcome {
+    let k = params.k;
+    let mut rng = Rng::new(params.seed);
+    let (mut medoids, seed_evals) = match init {
+        Init::PlusPlus => plus_plus_serial(points, k, &mut rng),
+        Init::Random => (random_init(points, k, &mut rng), 0),
+    };
+    let mut dist_evals = seed_evals;
+    let mut iterations = 0usize;
+    let mut cost = f64::INFINITY;
+    let mut labels: Vec<u32> = vec![0; points.len()];
+
+    for iter in 0..params.max_iters {
+        iterations = iter + 1;
+        // Assignment pass.
+        let res = crate::runtime::assign_points(backend, points, &medoids)
+            .expect("assign kernel failed");
+        dist_evals += crate::runtime::ops::assign_dist_evals(points.len(), k);
+        labels.copy_from_slice(&res.labels);
+        let new_cost: f64 = res.cluster_cost.iter().sum();
+
+        // Per-cluster least-cost medoid update (same code as the reducer).
+        let mut members: Vec<Vec<Point>> = vec![Vec::new(); k];
+        for (p, &l) in points.iter().zip(&labels) {
+            members[l as usize].push(*p);
+        }
+        let mut new_medoids = medoids.clone();
+        let mut rctx = ReduceCtx::default();
+        for j in 0..k {
+            if members[j].is_empty() {
+                continue;
+            }
+            new_medoids[j] = super::parallel::choose_medoid(
+                backend,
+                &members[j],
+                medoids[j],
+                update,
+                params.seed ^ (iter as u64) << 20 ^ j as u64,
+                &mut rctx,
+            );
+        }
+        dist_evals += rctx.work.dist_evals;
+
+        let unchanged =
+            new_medoids.iter().zip(&medoids).all(|(a, b)| a.x == b.x && a.y == b.y);
+        let cost_flat = cost.is_finite()
+            && (cost - new_cost).abs() <= params.rel_tol * cost.abs().max(1.0);
+        medoids = new_medoids;
+        cost = new_cost;
+        if unchanged || cost_flat {
+            break;
+        }
+    }
+
+    let work = TaskWork {
+        rows_parsed: points.len() as u64 * (iterations as u64 + 1),
+        dist_evals,
+        ..Default::default()
+    };
+    let sim_seconds = serial_seconds(cfg, cost_model, &work, iterations as u64 + 1, dataset_bytes);
+    ClusterOutcome { medoids, labels: Some(labels), cost, iterations, sim_seconds, dist_evals }
+}
+
+/// Classic PAM: greedy BUILD then steepest-descent SWAP. Exact; only for
+/// small n (cost O(k(n−k)²) per sweep).
+pub fn pam_swap(
+    points: &[Point],
+    k: usize,
+    seed: u64,
+    max_sweeps: usize,
+) -> (Vec<Point>, f64, u64) {
+    assert!(k >= 1 && k <= points.len());
+    let n = points.len();
+    let mut dist_evals = 0u64;
+
+    // BUILD: first medoid = minimizer of total distance; then greedily add
+    // the point that most reduces cost.
+    let mut in_set = vec![false; n];
+    let mut medoid_idx: Vec<usize> = Vec::with_capacity(k);
+    {
+        let mut best = (0usize, f64::INFINITY);
+        for i in 0..n {
+            let c: f64 = points.iter().map(|p| points[i].dist2(p)).sum();
+            dist_evals += n as u64;
+            if c < best.1 {
+                best = (i, c);
+            }
+        }
+        medoid_idx.push(best.0);
+        in_set[best.0] = true;
+    }
+    let mut nearest: Vec<f64> = points.iter().map(|p| p.dist2(&points[medoid_idx[0]])).collect();
+    dist_evals += n as u64;
+    while medoid_idx.len() < k {
+        let mut best = (usize::MAX, 0.0f64);
+        for cand in 0..n {
+            if in_set[cand] {
+                continue;
+            }
+            let mut gain = 0.0;
+            for (j, p) in points.iter().enumerate() {
+                let d = p.dist2(&points[cand]);
+                if d < nearest[j] {
+                    gain += nearest[j] - d;
+                }
+            }
+            dist_evals += n as u64;
+            if gain > best.1 || best.0 == usize::MAX {
+                best = (cand, gain);
+            }
+        }
+        let c = best.0;
+        in_set[c] = true;
+        medoid_idx.push(c);
+        for (j, p) in points.iter().enumerate() {
+            nearest[j] = nearest[j].min(p.dist2(&points[c]));
+        }
+        dist_evals += n as u64;
+    }
+
+    // SWAP: repeat best (medoid, non-medoid) swap while cost improves.
+    let cost_of = |set: &[usize], evals: &mut u64| -> f64 {
+        *evals += (set.len() * n) as u64;
+        points
+            .iter()
+            .map(|p| set.iter().map(|&m| p.dist2(&points[m])).fold(f64::INFINITY, f64::min))
+            .sum()
+    };
+    let mut cur_cost = cost_of(&medoid_idx, &mut dist_evals);
+    for _ in 0..max_sweeps {
+        let mut best: Option<(usize, usize, f64)> = None;
+        for mi in 0..k {
+            for cand in 0..n {
+                if in_set[cand] {
+                    continue;
+                }
+                let mut trial = medoid_idx.clone();
+                trial[mi] = cand;
+                let c = cost_of(&trial, &mut dist_evals);
+                if c < cur_cost && best.map(|(_, _, bc)| c < bc).unwrap_or(true) {
+                    best = Some((mi, cand, c));
+                }
+            }
+        }
+        match best {
+            Some((mi, cand, c)) => {
+                in_set[medoid_idx[mi]] = false;
+                in_set[cand] = true;
+                medoid_idx[mi] = cand;
+                cur_cost = c;
+            }
+            None => break,
+        }
+    }
+    let _ = seed;
+    (medoid_idx.into_iter().map(|i| points[i]).collect(), cur_cost, dist_evals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::metrics::{adjusted_rand_index, total_cost};
+    use crate::geo::datasets::{generate, SpatialSpec};
+    use crate::runtime::NativeBackend;
+
+    fn be() -> NativeBackend {
+        NativeBackend::new(256, 16)
+    }
+
+    fn env() -> (ClusterConfig, CostModel) {
+        (ClusterConfig::paper_cluster(), CostModel::default())
+    }
+
+    #[test]
+    fn alternating_recovers_clusters() {
+        let d = generate(&SpatialSpec::new(3000, 5, 23));
+        let (cfg, cm) = env();
+        let out = alternating_kmedoids(
+            &be(),
+            &d.points,
+            &IterParams::new(5, 23),
+            Init::PlusPlus,
+            UpdateStrategy::Exact,
+            &cfg,
+            &cm,
+            1 << 20,
+        );
+        let ari = adjusted_rand_index(out.labels.as_ref().unwrap(), &d.truth);
+        assert!(ari > 0.9, "ARI {ari}");
+        assert!(out.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn serial_time_increases_with_work() {
+        let (cfg, cm) = env();
+        let small = TaskWork { dist_evals: 1_000, ..Default::default() };
+        let big = TaskWork { dist_evals: 100_000_000, ..Default::default() };
+        assert!(
+            serial_seconds(&cfg, &cm, &big, 1, 1 << 20)
+                > serial_seconds(&cfg, &cm, &small, 1, 1 << 20)
+        );
+    }
+
+    #[test]
+    fn pam_swap_beats_or_matches_alternating_cost() {
+        let d = generate(&SpatialSpec::new(400, 4, 29));
+        let (cfg, cm) = env();
+        let alt = alternating_kmedoids(
+            &be(),
+            &d.points,
+            &IterParams::new(4, 29),
+            Init::Random,
+            UpdateStrategy::Exact,
+            &cfg,
+            &cm,
+            1 << 20,
+        );
+        let (_, pam_cost, _) = pam_swap(&d.points, 4, 29, 10);
+        assert!(
+            pam_cost <= alt.cost * 1.001,
+            "PAM {pam_cost} should be at least as good as alternating {}",
+            alt.cost
+        );
+    }
+
+    #[test]
+    fn pam_medoids_are_data_points_and_distinct() {
+        let d = generate(&SpatialSpec::new(200, 3, 31));
+        let (med, _, _) = pam_swap(&d.points, 3, 31, 5);
+        assert_eq!(med.len(), 3);
+        for i in 0..3 {
+            assert!(d.points.iter().any(|p| p.x == med[i].x && p.y == med[i].y));
+            for j in 0..i {
+                assert!(med[i].dist2(&med[j]) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn alternating_cost_matches_bruteforce() {
+        let d = generate(&SpatialSpec::new(1000, 3, 37));
+        let (cfg, cm) = env();
+        let out = alternating_kmedoids(
+            &be(),
+            &d.points,
+            &IterParams::new(3, 37),
+            Init::PlusPlus,
+            UpdateStrategy::Exact,
+            &cfg,
+            &cm,
+            1 << 20,
+        );
+        let brute = total_cost(&d.points, &out.medoids);
+        assert!((out.cost - brute).abs() / brute < 0.01, "{} vs {brute}", out.cost);
+    }
+}

@@ -1,0 +1,269 @@
+//! Medoid initialization (paper §3.1): the K-Medoids++ weighted seeding
+//! of Arthur & Vassilvitskii, both serial and as MapReduce rounds, plus
+//! uniform random init for the "traditional" baseline.
+//!
+//! MR version (one map-only job per round, k−1 rounds):
+//! the mapper computes `D(p) = min over current medoids` for its split
+//! (through the same assign kernel as the clustering mapper) and emits a
+//! single record: the split's total weight `S_i` and one candidate drawn
+//! within the split with probability `D(p)/S_i` (weighted reservoir, A-Res
+//! with a deterministic per-split stream). The driver then picks a split
+//! with probability `S_i/ΣS` and takes its candidate — exactly the global
+//! `D(p)/ΣD` draw of §3.1 steps (2)–(3), in one distributed pass.
+
+use super::Init;
+use crate::geo::Point;
+use crate::mapreduce::{Cluster, Input, JobSpec, MapCtx, Mapper};
+use crate::runtime::{assign_points, ops::assign_dist_evals, ComputeBackend};
+use crate::util::codec::{Dec, Enc};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Serial ++ seeding (used by the serial baselines and as the oracle for
+/// the MR version's distribution tests).
+pub fn plus_plus_serial(points: &[Point], k: usize, rng: &mut Rng) -> (Vec<Point>, u64) {
+    assert!(k >= 1 && k <= points.len());
+    let mut medoids = Vec::with_capacity(k);
+    medoids.push(points[rng.below(points.len())]);
+    let mut d2: Vec<f64> = points.iter().map(|p| p.dist2(&medoids[0])).collect();
+    let mut dist_evals = points.len() as u64;
+    while medoids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // All points coincide with medoids; fall back to uniform.
+            points[rng.below(points.len())]
+        } else {
+            let mut r = rng.f64() * total;
+            let mut pick = points.len() - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                r -= w;
+                if r <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            points[pick]
+        };
+        medoids.push(next);
+        for (i, p) in points.iter().enumerate() {
+            d2[i] = d2[i].min(p.dist2(&next));
+        }
+        dist_evals += points.len() as u64;
+    }
+    (medoids, dist_evals)
+}
+
+/// Uniform random distinct init ("select k points arbitrarily", §2.3).
+pub fn random_init(points: &[Point], k: usize, rng: &mut Rng) -> Vec<Point> {
+    rng.sample_indices(points.len(), k).into_iter().map(|i| points[i]).collect()
+}
+
+// ---- MapReduce ++ seeding -------------------------------------------------
+
+/// Mapper for one seeding round: emits (split_id, [S_i, cand_x, cand_y]).
+struct SeedRoundMapper {
+    backend: Arc<dyn ComputeBackend>,
+    medoids: Vec<Point>,
+    /// Deterministic stream: candidate draw depends only on (seed, round,
+    /// split start row), not on scheduling.
+    seed: u64,
+    round: u32,
+}
+
+impl Mapper for SeedRoundMapper {
+    fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
+        let res = assign_points(self.backend.as_ref(), pts, &self.medoids)
+            .expect("assign kernel failed in seeding mapper");
+        ctx.charge_dist_evals(assign_dist_evals(pts.len(), self.medoids.len()));
+        // Weighted reservoir (one draw ~ D(p)/S within the split).
+        let mut rng = Rng::new(self.seed ^ ((self.round as u64) << 32) ^ row_start);
+        let mut total = 0.0f64;
+        let mut cand: Option<Point> = None;
+        for (p, &d) in pts.iter().zip(&res.mindists) {
+            let w = d as f64;
+            if w <= 0.0 {
+                continue;
+            }
+            total += w;
+            if rng.f64() < w / total {
+                cand = Some(*p);
+            }
+        }
+        if let Some(c) = cand {
+            let v = Enc::new().f64(total).f32(c.x).f32(c.y).done();
+            ctx.emit(Enc::new().u64(row_start).done(), v);
+        }
+        ctx.counters.inc("seed.splits", 1);
+    }
+}
+
+/// Run K-Medoids++ seeding as k−1 MapReduce rounds over `input`.
+/// Returns (medoids, simulated seconds spent seeding).
+pub fn plus_plus_mr(
+    cluster: &mut Cluster,
+    input: &Input,
+    all_points: &Arc<Vec<Point>>,
+    backend: &Arc<dyn ComputeBackend>,
+    k: usize,
+    seed: u64,
+) -> (Vec<Point>, f64) {
+    assert!(k >= 1 && (k as usize) <= all_points.len());
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let mut medoids = vec![all_points[rng.below(all_points.len())]];
+    let t0 = cluster.now().0;
+    for round in 1..k {
+        let job = JobSpec::new(
+            &format!("kmedoids++-seed-r{round}"),
+            input.clone(),
+            Arc::new(SeedRoundMapper {
+                backend: backend.clone(),
+                medoids: medoids.clone(),
+                seed,
+                round: round as u32,
+            }),
+        );
+        let result = cluster.run_job(&job);
+        // Driver-side global draw: pick a split ∝ S_i, take its candidate.
+        let mut weights = Vec::with_capacity(result.output.len());
+        let mut cands = Vec::with_capacity(result.output.len());
+        for (_, v) in &result.output {
+            let mut d = Dec::new(v);
+            weights.push(d.f64());
+            cands.push(Point::new(d.f32(), d.f32()));
+        }
+        let next = if weights.is_empty() || weights.iter().sum::<f64>() <= 0.0 {
+            all_points[rng.below(all_points.len())]
+        } else {
+            cands[rng.weighted(&weights)]
+        };
+        medoids.push(next);
+    }
+    (medoids, cluster.now().0 - t0)
+}
+
+/// Dispatch on [`Init`] for the MR drivers.
+pub fn init_mr(
+    init: Init,
+    cluster: &mut Cluster,
+    input: &Input,
+    all_points: &Arc<Vec<Point>>,
+    backend: &Arc<dyn ComputeBackend>,
+    k: usize,
+    seed: u64,
+) -> (Vec<Point>, f64) {
+    match init {
+        Init::PlusPlus => plus_plus_mr(cluster, input, all_points, backend, k, seed),
+        Init::Random => {
+            // The paper's traditional init is a driver-side draw (no MR
+            // pass needed — medoids file written directly).
+            let mut rng = Rng::new(seed ^ 0x7A2D);
+            (random_init(all_points, k, &mut rng), 0.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::metrics::total_cost;
+    use crate::config::ClusterConfig;
+    use crate::geo::datasets::{generate, SpatialSpec};
+    use crate::mapreduce::SplitMeta;
+    use crate::runtime::NativeBackend;
+    use crate::util::proptest::for_all;
+
+    fn backend() -> Arc<dyn ComputeBackend> {
+        Arc::new(NativeBackend::new(256, 16))
+    }
+
+    fn make_input(points: &Arc<Vec<Point>>, n_splits: usize) -> Input {
+        let total = points.len() as u64;
+        let splits = (0..n_splits as u64)
+            .map(|i| SplitMeta {
+                row_start: total * i / n_splits as u64,
+                row_end: total * (i + 1) / n_splits as u64,
+                bytes: 1 << 20,
+                preferred: vec![],
+            })
+            .collect();
+        Input::Points { points: points.clone(), splits }
+    }
+
+    #[test]
+    fn serial_seeding_selects_k_distinct_spread_points() {
+        let d = generate(&SpatialSpec::new(5000, 6, 11));
+        let mut rng = Rng::new(1);
+        let (med, evals) = plus_plus_serial(&d.points, 6, &mut rng);
+        assert_eq!(med.len(), 6);
+        assert_eq!(evals, 5 * 5000 + 5000);
+        for i in 0..6 {
+            for j in 0..i {
+                assert!(med[i].dist2(&med[j]) > 0.0, "medoids must differ");
+            }
+        }
+    }
+
+    #[test]
+    fn plus_plus_beats_random_on_expected_cost() {
+        // §3.1's whole point: ++ seeding gives lower initial cost.
+        let d = generate(&SpatialSpec::new(8000, 8, 21));
+        let trials = 10;
+        let (mut pp, mut rand) = (0.0, 0.0);
+        for t in 0..trials {
+            let mut rng = Rng::new(100 + t);
+            pp += total_cost(&d.points, &plus_plus_serial(&d.points, 8, &mut rng).0);
+            let mut rng = Rng::new(200 + t);
+            rand += total_cost(&d.points, &random_init(&d.points, 8, &mut rng));
+        }
+        assert!(pp < rand * 0.8, "++ {pp} should beat random {rand} clearly");
+    }
+
+    #[test]
+    fn mr_seeding_matches_serial_quality() {
+        let d = generate(&SpatialSpec::new(6000, 5, 31));
+        let points = Arc::new(d.points);
+        let input = make_input(&points, 6);
+        let be = backend();
+        let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 5);
+        let (med, sim_s) = plus_plus_mr(&mut cluster, &input, &points, &be, 5, 77);
+        assert_eq!(med.len(), 5);
+        assert!(sim_s > 0.0, "seeding consumed simulated time");
+        // Quality: cost within 2x of a serial ++ run (same structure).
+        let mut rng = Rng::new(77);
+        let serial = plus_plus_serial(&points, 5, &mut rng).0;
+        let c_mr = total_cost(&points, &med);
+        let c_serial = total_cost(&points, &serial);
+        assert!(c_mr < c_serial * 2.5, "mr {c_mr} vs serial {c_serial}");
+    }
+
+    #[test]
+    fn mr_seeding_deterministic() {
+        let d = generate(&SpatialSpec::new(3000, 4, 41));
+        let points = Arc::new(d.points);
+        let be = backend();
+        let run = || {
+            let input = make_input(&points, 5);
+            let mut cluster = Cluster::new(ClusterConfig::test_cluster(3), 5);
+            plus_plus_mr(&mut cluster, &input, &points, &be, 4, 99).0
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn random_init_distinct() {
+        for_all(20, 0x1717, |rng| {
+            let d = generate(&SpatialSpec::new(200 + rng.below(200), 3, rng.next_u64()));
+            let k = 1 + rng.below(8);
+            let med = random_init(&d.points, k, rng);
+            assert_eq!(med.len(), k);
+        });
+    }
+
+    #[test]
+    fn degenerate_all_identical_points() {
+        let points = vec![Point::new(1.0, 1.0); 50];
+        let mut rng = Rng::new(3);
+        let (med, _) = plus_plus_serial(&points, 3, &mut rng);
+        assert_eq!(med.len(), 3); // falls back to uniform draws
+    }
+}

@@ -1,0 +1,245 @@
+//! Cluster topology + job configuration.
+//!
+//! `paper_cluster()` reconstructs Table 3 of the paper: seven VMware nodes
+//! on three physical hosts with heterogeneous CPUs. Speed factors are
+//! normalized PassMark-style single-core ratios for the three CPUs (the
+//! *relative* ordering is what shapes the speedup curves, see DESIGN.md
+//! substitution table).
+
+use crate::util::json::{obj, Json};
+
+/// One simulated cluster node (a VMware VM in the paper).
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    /// Physical host the VM runs on; transfers between nodes on the same
+    /// host are faster than cross-host transfers.
+    pub host: usize,
+    /// Cores visible to the VM (drives CPU speed only; task slots follow
+    /// the Hadoop-1.x defaults below).
+    pub cores: usize,
+    /// Relative single-core speed (1.0 = Intel i5-3210M reference).
+    pub speed: f64,
+    /// RAM in GB (bounds in-memory shuffle; low-RAM nodes spill earlier).
+    pub ram_gb: f64,
+}
+
+/// Full cluster description.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub nodes: Vec<NodeSpec>,
+    /// Index of the master (NameNode/JobTracker/HMaster) node. The master
+    /// also runs tasks in the paper's 4–7 node groups (it is counted as a
+    /// cluster member in Table 4).
+    pub master: usize,
+    pub net: NetConfig,
+    /// DFS block size in bytes (Hadoop default 64 MB in the paper's era).
+    pub dfs_block_bytes: u64,
+    pub dfs_replication: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Same-host VM-to-VM bandwidth (virtio bridge), MB/s.
+    pub intra_host_mb_s: f64,
+    /// Cross-host bandwidth (100 Mb Ethernet era commodity), MB/s.
+    pub inter_host_mb_s: f64,
+    /// Per-transfer latency, seconds.
+    pub latency_s: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        // 1 GbE between hosts (~110 MB/s effective), faster virtio locally.
+        NetConfig { intra_host_mb_s: 400.0, inter_host_mb_s: 110.0, latency_s: 0.5e-3 }
+    }
+}
+
+impl NodeSpec {
+    /// Hadoop-1.x default `mapred.tasktracker.map.tasks.maximum` = 2,
+    /// independent of core count (the era the paper's cluster ran).
+    pub fn map_slots(&self) -> usize {
+        2
+    }
+    /// Hadoop-1.x default `mapred.tasktracker.reduce.tasks.maximum` = 2.
+    pub fn reduce_slots(&self) -> usize {
+        2
+    }
+}
+
+impl ClusterConfig {
+    /// Table 3: Master (Intel i5-3210M, 4 cores, 8 GB) on Host1;
+    /// Slave01–02 (AMD A8-5600K, 2 cores, 8 GB) on Host2;
+    /// Slave03–06 (Intel E7500, 2 cores, 2 GB) on Host3.
+    ///
+    /// Speed factors ≈ single-thread performance relative to the i5-3210M:
+    /// A8-5600K ≈ 0.85, E7500 ≈ 0.62 (era benchmark ratios).
+    pub fn paper_cluster() -> ClusterConfig {
+        let mut nodes = vec![NodeSpec {
+            name: "master".into(),
+            host: 0,
+            cores: 4,
+            speed: 1.0,
+            ram_gb: 8.0,
+        }];
+        for i in 1..=2 {
+            nodes.push(NodeSpec {
+                name: format!("slave{i:02}"),
+                host: 1,
+                cores: 2,
+                speed: 0.85,
+                ram_gb: 8.0,
+            });
+        }
+        for i in 3..=6 {
+            nodes.push(NodeSpec {
+                name: format!("slave{i:02}"),
+                host: 2,
+                cores: 2,
+                speed: 0.62,
+                ram_gb: 2.0,
+            });
+        }
+        ClusterConfig {
+            nodes,
+            master: 0,
+            net: NetConfig::default(),
+            dfs_block_bytes: 64 << 20,
+            dfs_replication: 3,
+        }
+    }
+
+    /// Table 4: the n-node experiment groups are prefixes of the member
+    /// list (Master, Slave01, Slave02, ...).
+    pub fn cluster_subset(&self, n_nodes: usize) -> ClusterConfig {
+        assert!(n_nodes >= 1 && n_nodes <= self.nodes.len());
+        let mut c = self.clone();
+        c.nodes.truncate(n_nodes);
+        c.dfs_replication = c.dfs_replication.min(n_nodes);
+        c
+    }
+
+    /// A small homogeneous cluster for unit tests.
+    pub fn test_cluster(n_nodes: usize) -> ClusterConfig {
+        let nodes = (0..n_nodes)
+            .map(|i| NodeSpec {
+                name: format!("n{i}"),
+                host: i / 2,
+                cores: 2,
+                speed: 1.0,
+                ram_gb: 4.0,
+            })
+            .collect();
+        ClusterConfig {
+            nodes,
+            master: 0,
+            net: NetConfig::default(),
+            dfs_block_bytes: 8 << 20,
+            dfs_replication: 2.min(n_nodes),
+        }
+    }
+
+    pub fn total_map_slots(&self) -> usize {
+        self.nodes.iter().map(|n| n.map_slots()).sum()
+    }
+
+    /// Aggregate compute capacity (Σ cores·speed), the denominator of the
+    /// ideal linear-speedup line.
+    pub fn total_capacity(&self) -> f64 {
+        self.nodes.iter().map(|n| n.cores as f64 * n.speed).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("master", Json::Num(self.master as f64)),
+            ("dfs_block_bytes", Json::Num(self.dfs_block_bytes as f64)),
+            ("dfs_replication", Json::Num(self.dfs_replication as f64)),
+            (
+                "nodes",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| {
+                            obj(vec![
+                                ("name", Json::Str(n.name.clone())),
+                                ("host", Json::Num(n.host as f64)),
+                                ("cores", Json::Num(n.cores as f64)),
+                                ("speed", Json::Num(n.speed)),
+                                ("ram_gb", Json::Num(n.ram_gb)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ClusterConfig> {
+        let nodes = j
+            .get("nodes")?
+            .as_arr()?
+            .iter()
+            .map(|n| {
+                Some(NodeSpec {
+                    name: n.get("name")?.as_str()?.to_string(),
+                    host: n.get("host")?.as_usize()?,
+                    cores: n.get("cores")?.as_usize()?,
+                    speed: n.get("speed")?.as_f64()?,
+                    ram_gb: n.get("ram_gb")?.as_f64()?,
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(ClusterConfig {
+            nodes,
+            master: j.get("master")?.as_usize()?,
+            net: NetConfig::default(),
+            dfs_block_bytes: j.get("dfs_block_bytes")?.as_u64()?,
+            dfs_replication: j.get("dfs_replication")?.as_usize()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_matches_table3() {
+        let c = ClusterConfig::paper_cluster();
+        assert_eq!(c.nodes.len(), 7);
+        assert_eq!(c.nodes[0].cores, 4); // i5-3210M
+        assert_eq!(c.nodes[1].host, 1);
+        assert_eq!(c.nodes[3].host, 2);
+        assert_eq!(c.nodes[6].ram_gb, 2.0); // E7500 tier
+        assert!(c.nodes[0].speed > c.nodes[1].speed);
+        assert!(c.nodes[1].speed > c.nodes[3].speed);
+    }
+
+    #[test]
+    fn subsets_match_table4() {
+        let c = ClusterConfig::paper_cluster();
+        for n in 4..=7 {
+            let s = c.cluster_subset(n);
+            assert_eq!(s.nodes.len(), n);
+            assert_eq!(s.nodes[0].name, "master");
+            assert_eq!(s.nodes[n - 1].name, format!("slave{:02}", n - 1));
+        }
+    }
+
+    #[test]
+    fn capacity_monotone_in_nodes() {
+        let c = ClusterConfig::paper_cluster();
+        let caps: Vec<f64> = (4..=7).map(|n| c.cluster_subset(n).total_capacity()).collect();
+        assert!(caps.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ClusterConfig::paper_cluster();
+        let j = c.to_json();
+        let c2 = ClusterConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c2.nodes.len(), c.nodes.len());
+        assert_eq!(c2.nodes[3].name, c.nodes[3].name);
+        assert_eq!(c2.dfs_block_bytes, c.dfs_block_bytes);
+    }
+}

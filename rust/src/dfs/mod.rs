@@ -1,0 +1,300 @@
+//! HDFS-lite: an in-memory distributed file system model.
+//!
+//! Files are split into fixed-size blocks; each block is replicated onto
+//! `replication` distinct nodes with a host-aware placement policy (first
+//! replica "local", second on a different host, third anywhere else —
+//! Hadoop's rack-aware policy with hosts standing in for racks). The
+//! MapReduce engine asks the NameNode for block locations to schedule
+//! data-local map tasks, exactly as the paper's JobTracker does.
+
+use crate::config::ClusterConfig;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+pub type BlockId = u64;
+
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub id: BlockId,
+    pub bytes: u64,
+    /// Nodes currently holding a replica. Invariant: distinct, non-empty
+    /// unless every replica's node failed (then reads fail).
+    pub replicas: Vec<usize>,
+    /// Row range [start, end) of the file's logical records stored here.
+    pub row_start: u64,
+    pub row_end: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct FileMeta {
+    pub name: String,
+    pub blocks: Vec<BlockId>,
+    pub total_bytes: u64,
+    pub total_rows: u64,
+}
+
+/// The NameNode: file → blocks → replica locations.
+pub struct NameNode {
+    files: HashMap<String, FileMeta>,
+    blocks: HashMap<BlockId, Block>,
+    next_block: BlockId,
+    /// Bytes stored per node (placement balancing).
+    pub node_usage: Vec<u64>,
+    /// Nodes currently alive.
+    alive: Vec<bool>,
+    replication: usize,
+    block_bytes: u64,
+    hosts: Vec<usize>,
+    rng: Rng,
+}
+
+impl NameNode {
+    pub fn new(cluster: &ClusterConfig, seed: u64) -> NameNode {
+        NameNode {
+            files: HashMap::new(),
+            blocks: HashMap::new(),
+            next_block: 0,
+            node_usage: vec![0; cluster.nodes.len()],
+            alive: vec![true; cluster.nodes.len()],
+            replication: cluster.dfs_replication.max(1),
+            block_bytes: cluster.dfs_block_bytes,
+            hosts: cluster.nodes.iter().map(|n| n.host).collect(),
+            rng: Rng::new(seed ^ 0xD75),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// Hadoop-style replica placement: least-used alive node first, then
+    /// prefer a different host for the second replica, then fill.
+    fn place_replicas(&mut self) -> Vec<usize> {
+        let alive: Vec<usize> = (0..self.alive.len()).filter(|&n| self.alive[n]).collect();
+        assert!(!alive.is_empty(), "no alive DataNodes");
+        let r = self.replication.min(alive.len());
+        let mut chosen: Vec<usize> = Vec::with_capacity(r);
+        // First replica: least-used (random tie-break).
+        let first = *alive
+            .iter()
+            .min_by_key(|&&n| (self.node_usage[n], self.rng.next_u64() & 0xff))
+            .unwrap();
+        chosen.push(first);
+        // Second: different host if possible, least-used.
+        while chosen.len() < r {
+            let need_other_host = chosen.len() == 1;
+            let candidates: Vec<usize> = alive
+                .iter()
+                .copied()
+                .filter(|n| !chosen.contains(n))
+                .filter(|&n| !need_other_host || self.hosts[n] != self.hosts[first] || {
+                    // fall back if all remaining share the host
+                    alive.iter().all(|&m| chosen.contains(&m) || self.hosts[m] == self.hosts[first])
+                })
+                .collect();
+            let pick = *candidates
+                .iter()
+                .min_by_key(|&&n| (self.node_usage[n], self.rng.next_u64() & 0xff))
+                .expect("placement candidates exhausted");
+            chosen.push(pick);
+        }
+        chosen
+    }
+
+    /// Create a file of `total_rows` logical rows / `total_bytes` bytes,
+    /// split into block-size chunks with replica placement. Returns meta.
+    pub fn create_file(&mut self, name: &str, total_rows: u64, total_bytes: u64) -> &FileMeta {
+        assert!(!self.files.contains_key(name), "file exists: {name}");
+        let n_blocks = total_bytes.div_ceil(self.block_bytes).max(1);
+        let mut ids = Vec::with_capacity(n_blocks as usize);
+        for b in 0..n_blocks {
+            let id = self.next_block;
+            self.next_block += 1;
+            let bytes = if b == n_blocks - 1 {
+                total_bytes - self.block_bytes * (n_blocks - 1)
+            } else {
+                self.block_bytes
+            };
+            let row_start = total_rows * b / n_blocks;
+            let row_end = total_rows * (b + 1) / n_blocks;
+            let replicas = self.place_replicas();
+            for &n in &replicas {
+                self.node_usage[n] += bytes;
+            }
+            self.blocks.insert(id, Block { id, bytes, replicas, row_start, row_end });
+            ids.push(id);
+        }
+        self.files.insert(
+            name.to_string(),
+            FileMeta { name: name.to_string(), blocks: ids, total_bytes, total_rows },
+        );
+        &self.files[name]
+    }
+
+    pub fn file(&self, name: &str) -> Option<&FileMeta> {
+        self.files.get(name)
+    }
+
+    pub fn delete_file(&mut self, name: &str) {
+        if let Some(meta) = self.files.remove(name) {
+            for b in meta.blocks {
+                if let Some(blk) = self.blocks.remove(&b) {
+                    for &n in &blk.replicas {
+                        self.node_usage[n] = self.node_usage[n].saturating_sub(blk.bytes);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn block(&self, id: BlockId) -> &Block {
+        &self.blocks[&id]
+    }
+
+    /// Replica nodes for a block that are currently alive.
+    pub fn locations(&self, id: BlockId) -> Vec<usize> {
+        self.blocks[&id].replicas.iter().copied().filter(|&n| self.alive[n]).collect()
+    }
+
+    /// Fail-stop a DataNode; re-replicate every block it held (if enough
+    /// alive nodes exist). Returns the number of blocks re-replicated.
+    pub fn fail_node(&mut self, node: usize) -> usize {
+        self.alive[node] = false;
+        self.node_usage[node] = 0;
+        let ids: Vec<BlockId> = self
+            .blocks
+            .values()
+            .filter(|b| b.replicas.contains(&node))
+            .map(|b| b.id)
+            .collect();
+        let mut fixed = 0;
+        for id in ids {
+            // Remove the dead replica, then add a fresh one elsewhere.
+            let (bytes, mut reps) = {
+                let b = &self.blocks[&id];
+                (b.bytes, b.replicas.clone())
+            };
+            reps.retain(|&n| n != node);
+            let alive: Vec<usize> = (0..self.alive.len())
+                .filter(|&n| self.alive[n] && !reps.contains(&n))
+                .collect();
+            if let Some(&new) = alive.iter().min_by_key(|&&n| (self.node_usage[n], n)) {
+                reps.push(new);
+                self.node_usage[new] += bytes;
+                fixed += 1;
+            }
+            self.blocks.get_mut(&id).unwrap().replicas = reps;
+        }
+        fixed
+    }
+
+    pub fn recover_node(&mut self, node: usize) {
+        self.alive[node] = true;
+    }
+
+    pub fn is_alive(&self, node: usize) -> bool {
+        self.alive[node]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::for_all;
+
+    fn nn(nodes: usize) -> NameNode {
+        NameNode::new(&ClusterConfig::test_cluster(nodes), 1)
+    }
+
+    #[test]
+    fn file_splits_into_blocks() {
+        let mut n = nn(4);
+        let meta = n.create_file("pts", 1000, 20 << 20).clone(); // 8MB blocks -> 3 blocks
+        assert_eq!(meta.blocks.len(), 3);
+        assert_eq!(meta.total_rows, 1000);
+        let rows: u64 = meta
+            .blocks
+            .iter()
+            .map(|&b| {
+                let blk = n.block(b);
+                blk.row_end - blk.row_start
+            })
+            .sum();
+        assert_eq!(rows, 1000);
+    }
+
+    #[test]
+    fn replicas_distinct_and_replicated() {
+        let mut n = nn(4);
+        let meta = n.create_file("pts", 100, 30 << 20);
+        for &b in &meta.blocks.clone() {
+            let blk = n.block(b);
+            assert_eq!(blk.replicas.len(), 2); // test cluster replication=2
+            let mut r = blk.replicas.clone();
+            r.dedup();
+            assert_eq!(r.len(), blk.replicas.len());
+        }
+    }
+
+    #[test]
+    fn second_replica_prefers_other_host() {
+        let mut n = NameNode::new(&ClusterConfig::paper_cluster(), 7);
+        let meta = n.create_file("pts", 100, 200 << 20);
+        for &b in &meta.blocks.clone() {
+            let blk = n.block(b);
+            assert_eq!(blk.replicas.len(), 3);
+            let hosts: std::collections::HashSet<usize> =
+                blk.replicas.iter().map(|&r| n.hosts[r]).collect();
+            assert!(hosts.len() >= 2, "replicas all on one host: {:?}", blk.replicas);
+        }
+    }
+
+    #[test]
+    fn failure_rereplicates() {
+        let mut n = nn(4);
+        n.create_file("pts", 100, 40 << 20);
+        let victim = 0;
+        let held: Vec<BlockId> =
+            n.blocks.values().filter(|b| b.replicas.contains(&victim)).map(|b| b.id).collect();
+        assert!(!held.is_empty());
+        n.fail_node(victim);
+        for id in held {
+            let b = n.block(id);
+            assert!(!b.replicas.contains(&victim));
+            assert_eq!(b.replicas.len(), 2, "replication restored");
+            assert!(b.replicas.iter().all(|&r| n.is_alive(r)));
+        }
+    }
+
+    #[test]
+    fn locations_exclude_dead_nodes() {
+        let mut n = nn(2); // replication 2 on 2 nodes -> both hold each block
+        let meta = n.create_file("pts", 10, 1 << 20);
+        let b = meta.blocks[0];
+        assert_eq!(n.locations(b).len(), 2);
+        n.fail_node(1);
+        let locs = n.locations(b);
+        assert_eq!(locs, vec![0]);
+    }
+
+    #[test]
+    fn delete_releases_usage() {
+        let mut n = nn(4);
+        n.create_file("pts", 100, 16 << 20);
+        assert!(n.node_usage.iter().sum::<u64>() > 0);
+        n.delete_file("pts");
+        assert_eq!(n.node_usage.iter().sum::<u64>(), 0);
+        assert!(n.file("pts").is_none());
+    }
+
+    #[test]
+    fn placement_balances_usage() {
+        for_all(5, 0xDF5, |rng| {
+            let mut n = NameNode::new(&ClusterConfig::test_cluster(6), rng.next_u64());
+            n.create_file("big", 10_000, 400 << 20); // 50 blocks x 8MB x2 replicas
+            let max = *n.node_usage.iter().max().unwrap() as f64;
+            let min = *n.node_usage.iter().min().unwrap() as f64;
+            assert!(max / min.max(1.0) < 2.0, "unbalanced: {:?}", n.node_usage);
+        });
+    }
+}

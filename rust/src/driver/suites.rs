@@ -1,0 +1,162 @@
+//! Experiment suites: the exact cell grids behind each paper table/figure.
+//!
+//! Used by the CLI (`kmedoids-mr bench ...`), the cargo benches, and the
+//! end-to-end example, so every entry point reproduces the same numbers.
+
+use super::{run_experiment, Algorithm, Experiment, ExperimentResult};
+use crate::clustering::{Init, UpdateStrategy};
+use crate::runtime::ComputeBackend;
+use std::sync::Arc;
+
+/// Table 6 / Fig. 3 / Fig. 4: K-Medoids++ MR over 4–7 nodes × 3 datasets.
+/// `scale_div` divides the dataset sizes (1 = the paper's full Table 5).
+pub fn table6_suite(
+    backend: &Arc<dyn ComputeBackend>,
+    scale_div: usize,
+    seed: u64,
+) -> Vec<ExperimentResult> {
+    let mut out = Vec::new();
+    for dataset in 0..3 {
+        for nodes in 4..=7 {
+            let mut exp = Experiment::paper_cell(Algorithm::KMedoidsPlusPlusMR, nodes, dataset, seed)
+                .scaled(scale_div.max(1));
+            // Controlled iteration count: isolates the scaling behaviour
+            // from per-dataset convergence luck (EXPERIMENTS.md §Method).
+            exp.fixed_iters = Some(6);
+            let r = run_experiment(&exp, backend);
+            eprintln!(
+                "  [table6] dataset {} x {} nodes -> {} ms ({} iters, wall {:.1}s)",
+                dataset + 1,
+                nodes,
+                r.time_ms,
+                r.iterations,
+                r.wall_s
+            );
+            out.push(r);
+        }
+    }
+    out
+}
+
+/// Fig. 5: comparative algorithms over the 3 dataset sizes — the paper's
+/// "classic clustering algorithms for comparison are traditional
+/// K-Medoids algorithm and CLARANS algorithm": the proposed parallel
+/// K-Medoids++ (7 nodes) against the serial comparators on the master.
+pub fn fig5_suite(
+    backend: &Arc<dyn ComputeBackend>,
+    scale_div: usize,
+    seed: u64,
+) -> Vec<ExperimentResult> {
+    let algos = [
+        Algorithm::KMedoidsPlusPlusMR,
+        Algorithm::KMedoidsSerial,
+        Algorithm::Clarans,
+    ];
+    let mut out = Vec::new();
+    for algo in algos {
+        for dataset in 0..3 {
+            let mut exp = Experiment::paper_cell(algo, 7, dataset, seed).scaled(scale_div.max(1));
+            if algo == Algorithm::KMedoidsPlusPlusMR {
+                // Controlled iterations for the MR entry (as in Table 6);
+                // the serial comparators keep natural convergence, which
+                // only widens their gap.
+                exp.fixed_iters = Some(6);
+            }
+            let r = run_experiment(&exp, backend);
+            eprintln!(
+                "  [fig5] {} dataset {} -> {} ms (wall {:.1}s)",
+                algo.name(),
+                dataset + 1,
+                r.time_ms,
+                r.wall_s
+            );
+            out.push(r);
+        }
+    }
+    out
+}
+
+/// §3.1 ablation: ++ seeding vs random init (iterations to converge and
+/// total time), plus update-strategy variants. Dataset 1, 7 nodes.
+pub fn ablation_suite(
+    backend: &Arc<dyn ComputeBackend>,
+    scale_div: usize,
+    seed: u64,
+) -> Vec<ExperimentResult> {
+    let mut out = Vec::new();
+    let variants: Vec<(&str, Init, UpdateStrategy)> = vec![
+        ("++/sampled", Init::PlusPlus, UpdateStrategy::paper_scale_default()),
+        ("random/sampled", Init::Random, UpdateStrategy::paper_scale_default()),
+        ("++/centroid", Init::PlusPlus, UpdateStrategy::CentroidNearest),
+        ("random/centroid", Init::Random, UpdateStrategy::CentroidNearest),
+    ];
+    for (name, init, update) in variants {
+        let algo = if init == Init::PlusPlus {
+            Algorithm::KMedoidsPlusPlusMR
+        } else {
+            Algorithm::KMedoidsRandomMR
+        };
+        let mut exp = Experiment::paper_cell(algo, 7, 0, seed).scaled(scale_div.max(1));
+        exp.update = update;
+        let mut r = run_experiment(&exp, backend);
+        // Relabel with the ablation variant name (leak: 4 static strings).
+        r.algorithm = Box::leak(name.to_string().into_boxed_str());
+        eprintln!("  [ablation] {name} -> {} ms, {} iters", r.time_ms, r.iterations);
+        out.push(r);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn be() -> Arc<dyn ComputeBackend> {
+        Arc::new(NativeBackend::new(256, 16))
+    }
+
+    #[test]
+    fn table6_suite_small_has_12_cells_and_paper_shape() {
+        // Heavy scale-down: structure test, not numbers. At this scale
+        // each dataset is a single DFS block (one map task), so adding
+        // nodes only re-shapes the reduce waves — allow 2% wobble from
+        // slow-node placement; the strict monotonicity check runs at full
+        // scale in the table6_scaling bench.
+        let rs = table6_suite(&be(), 200, 5);
+        assert_eq!(rs.len(), 12);
+        assert!(rs.iter().all(|r| r.iterations == 6), "controlled iterations");
+        for ds in [rs[0].n_points, rs[4].n_points, rs[8].n_points] {
+            let times: Vec<u64> = rs
+                .iter()
+                .filter(|r| r.n_points == ds)
+                .map(|r| r.time_ms)
+                .collect();
+            assert_eq!(times.len(), 4);
+            assert!(
+                times.windows(2).all(|w| w[1] as f64 <= w[0] as f64 * 1.02),
+                "time should not grow materially with nodes: {times:?}"
+            );
+        }
+        // Larger dataset takes longer at fixed cluster size.
+        assert!(rs[0].time_ms <= rs[8].time_ms);
+    }
+
+    #[test]
+    fn fig5_suite_ordering() {
+        let rs = fig5_suite(&be(), 200, 5);
+        assert_eq!(rs.len(), 9);
+        // The proposed algorithm beats CLARANS at every size.
+        for ds in 0..3 {
+            let pp = rs.iter().find(|r| r.algorithm == "kmedoids++-mr" && r.n_points == rs[ds].n_points).unwrap();
+            let cl = rs.iter().find(|r| r.algorithm == "clarans" && r.n_points == rs[ds].n_points).unwrap();
+            assert!(
+                pp.time_ms <= cl.time_ms,
+                "kmedoids++ ({}) should beat clarans ({}) on dataset {}",
+                pp.time_ms,
+                cl.time_ms,
+                ds + 1
+            );
+        }
+    }
+}

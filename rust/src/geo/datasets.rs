@@ -1,0 +1,217 @@
+//! Synthetic spatial dataset generators.
+//!
+//! The paper's three datasets are real GIS point sets of 1 316 792 /
+//! 2 449 101 / 3 220 460 points (Table 5) whose provenance is not given.
+//! We substitute synthetic spatial data with the same cardinalities and
+//! clusterable structure: Gaussian "hotspots" (cities) of varying density
+//! + uniform background noise + far outliers (the outliers are the whole
+//! point of K-Medoids over K-Means, §1–2 of the paper).
+
+use super::Point;
+use crate::util::rng::Rng;
+
+/// Paper Table 5 cardinalities.
+pub const PAPER_DATASET_POINTS: [usize; 3] = [1_316_792, 2_449_101, 3_220_460];
+/// Paper Table 5 sizes in MB (text encoding on HDFS). Implied row size
+/// ≈ 410 bytes/row (GIS attribute columns beside the coordinate).
+pub const PAPER_DATASET_MB: [usize; 3] = [515, 958, 1259];
+
+/// Average encoded row size implied by Table 5 (bytes/row).
+pub fn paper_row_bytes() -> u64 {
+    // 515 MB / 1.316M rows ≈ 410 B; use the mean implied by all three.
+    let total_mb: usize = PAPER_DATASET_MB.iter().sum();
+    let total_pts: usize = PAPER_DATASET_POINTS.iter().sum();
+    ((total_mb as u64) << 20) / total_pts as u64
+}
+
+/// Generation spec for a synthetic spatial dataset.
+#[derive(Debug, Clone)]
+pub struct SpatialSpec {
+    pub n_points: usize,
+    /// Number of Gaussian hotspots (true clusters).
+    pub n_hotspots: usize,
+    /// Coordinate domain half-width (map units).
+    pub extent: f32,
+    /// Hotspot standard deviation as a fraction of the extent.
+    pub sigma_frac: f32,
+    /// Fraction of points drawn uniformly over the domain (background).
+    pub noise_frac: f32,
+    /// Fraction of extreme outliers (far outside the domain).
+    pub outlier_frac: f32,
+    pub seed: u64,
+}
+
+impl SpatialSpec {
+    pub fn new(n_points: usize, n_hotspots: usize, seed: u64) -> SpatialSpec {
+        SpatialSpec {
+            n_points,
+            n_hotspots,
+            extent: 10_000.0,
+            sigma_frac: 0.03,
+            noise_frac: 0.05,
+            outlier_frac: 0.002,
+            seed,
+        }
+    }
+
+    /// The paper's dataset `i` (0..3) with k=9 hotspots (the paper does
+    /// not state k; 9 true clusters keeps reduce keys < nodes·slots).
+    pub fn paper_dataset(i: usize, seed: u64) -> SpatialSpec {
+        SpatialSpec::new(PAPER_DATASET_POINTS[i], 9, seed ^ (i as u64))
+    }
+
+    /// A laptop-friendly scaled version (same structure, fewer points).
+    pub fn paper_dataset_scaled(i: usize, scale_div: usize, seed: u64) -> SpatialSpec {
+        let mut s = Self::paper_dataset(i, seed);
+        s.n_points = (s.n_points / scale_div).max(1000);
+        s
+    }
+}
+
+/// Generated dataset with ground truth for quality metrics.
+pub struct SpatialDataset {
+    pub points: Vec<Point>,
+    /// Ground-truth hotspot id per point; `None` for noise/outliers.
+    pub truth: Vec<Option<u32>>,
+    pub centers: Vec<Point>,
+}
+
+/// Generate a dataset from a spec. Deterministic in the seed.
+pub fn generate(spec: &SpatialSpec) -> SpatialDataset {
+    assert!(spec.n_hotspots > 0);
+    let mut rng = Rng::new(spec.seed);
+    let e = spec.extent as f64;
+    let sigma = (spec.extent * spec.sigma_frac) as f64;
+
+    // Hotspot centers: spread over the domain, min-distance rejection so
+    // clusters are resolvable (8σ keeps neighboring hotspots separable).
+    let mut centers: Vec<Point> = Vec::with_capacity(spec.n_hotspots);
+    let min_sep = 8.0 * sigma;
+    let mut guard = 0;
+    while centers.len() < spec.n_hotspots {
+        let c = Point::new(rng.range_f64(-e, e) as f32, rng.range_f64(-e, e) as f32);
+        if centers.iter().all(|o| o.dist2(&c).sqrt() > min_sep) || guard > 10_000 {
+            centers.push(c);
+        }
+        guard += 1;
+    }
+
+    // Unequal hotspot weights (real cities are not equal-sized).
+    let weights: Vec<f64> = (0..spec.n_hotspots).map(|_| 0.3 + rng.f64()).collect();
+
+    let mut points = Vec::with_capacity(spec.n_points);
+    let mut truth = Vec::with_capacity(spec.n_points);
+    for _ in 0..spec.n_points {
+        let u = rng.f64();
+        if u < spec.outlier_frac as f64 {
+            // Far outliers: 1.5–3 extents outside the populated domain
+            // (GPS glitches / bad geocodes, not absurd coordinates — the
+            // squared-distance ++ seeding weight must not be dominated by
+            // a handful of points).
+            let r = e * rng.range_f64(1.5, 3.0);
+            let th = rng.range_f64(0.0, std::f64::consts::TAU);
+            points.push(Point::new((r * th.cos()) as f32, (r * th.sin()) as f32));
+            truth.push(None);
+        } else if u < (spec.outlier_frac + spec.noise_frac) as f64 {
+            points.push(Point::new(rng.range_f64(-e, e) as f32, rng.range_f64(-e, e) as f32));
+            truth.push(None);
+        } else {
+            let h = rng.weighted(&weights);
+            let c = centers[h];
+            points.push(Point::new(
+                (c.x as f64 + rng.normal() * sigma) as f32,
+                (c.y as f64 + rng.normal() * sigma) as f32,
+            ));
+            truth.push(Some(h as u32));
+        }
+    }
+    SpatialDataset { points, truth, centers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geo::BBox;
+    use crate::util::proptest::for_all;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let s = SpatialSpec::new(2000, 4, 42);
+        let a = generate(&s);
+        let b = generate(&s);
+        assert_eq!(a.points, b.points);
+        let mut s2 = s.clone();
+        s2.seed = 43;
+        let c = generate(&s2);
+        assert_ne!(a.points, c.points);
+    }
+
+    #[test]
+    fn cardinality_and_truth_len() {
+        let d = generate(&SpatialSpec::new(5000, 6, 1));
+        assert_eq!(d.points.len(), 5000);
+        assert_eq!(d.truth.len(), 5000);
+        assert_eq!(d.centers.len(), 6);
+    }
+
+    #[test]
+    fn hotspot_points_near_centers() {
+        let s = SpatialSpec::new(20_000, 5, 7);
+        let d = generate(&s);
+        let sigma = (s.extent * s.sigma_frac) as f64;
+        for (p, t) in d.points.iter().zip(&d.truth) {
+            if let Some(h) = t {
+                let dist = p.dist2(&d.centers[*h as usize]).sqrt();
+                assert!(dist < 6.0 * sigma, "point {dist} sigma {sigma}");
+            }
+        }
+    }
+
+    #[test]
+    fn outliers_exist_and_are_far() {
+        let s = SpatialSpec::new(50_000, 4, 3);
+        let d = generate(&s);
+        let core: Vec<_> =
+            d.points.iter().zip(&d.truth).filter(|(_, t)| t.is_some()).map(|(p, _)| *p).collect();
+        let bb = BBox::of(&core).unwrap();
+        let far = d.points.iter().filter(|p| !bb.contains(p)).count();
+        assert!(far > 0, "expected some outliers outside the core bbox");
+    }
+
+    #[test]
+    fn noise_fraction_roughly_respected() {
+        let s = SpatialSpec::new(100_000, 4, 9);
+        let d = generate(&s);
+        let noise = d.truth.iter().filter(|t| t.is_none()).count() as f64 / 100_000.0;
+        let expected = (s.noise_frac + s.outlier_frac) as f64;
+        assert!((noise - expected).abs() < 0.01, "noise {noise} vs {expected}");
+    }
+
+    #[test]
+    fn paper_specs_have_table5_cardinalities() {
+        for i in 0..3 {
+            let s = SpatialSpec::paper_dataset(i, 0);
+            assert_eq!(s.n_points, PAPER_DATASET_POINTS[i]);
+        }
+        assert!(paper_row_bytes() > 300 && paper_row_bytes() < 500);
+    }
+
+    #[test]
+    fn scaled_preserves_structure() {
+        let s = SpatialSpec::paper_dataset_scaled(0, 100, 0);
+        assert_eq!(s.n_points, 13_167);
+        assert_eq!(s.n_hotspots, 9);
+    }
+
+    #[test]
+    fn centers_separated() {
+        for_all(10, 0x9E0, |rng| {
+            let d = generate(&SpatialSpec::new(100, 8, rng.next_u64()));
+            for i in 0..d.centers.len() {
+                for j in 0..i {
+                    assert!(d.centers[i].dist2(&d.centers[j]) > 0.0);
+                }
+            }
+        });
+    }
+}

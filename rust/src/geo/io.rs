@@ -1,0 +1,73 @@
+//! CSV import/export for spatial points (the interchange format the
+//! paper's HDFS ingest would use: one `x,y` coordinate row per line).
+
+use super::Point;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Write points as `x,y` lines. Returns bytes written.
+pub fn write_csv(path: &Path, points: &[Point]) -> Result<u64> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    let mut bytes = 0u64;
+    for p in points {
+        let line = format!("{},{}\n", p.x, p.y);
+        bytes += line.len() as u64;
+        w.write_all(line.as_bytes())?;
+    }
+    w.flush()?;
+    Ok(bytes)
+}
+
+/// Read `x,y` lines; blank lines and `#` comments are skipped.
+pub fn read_csv(path: &Path) -> Result<Vec<Point>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let r = std::io::BufReader::new(f);
+    let mut out = Vec::new();
+    for (i, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        out.push(parse_line(t).with_context(|| format!("{path:?}:{}", i + 1))?);
+    }
+    Ok(out)
+}
+
+pub fn parse_line(t: &str) -> Result<Point> {
+    let mut it = t.split(&[',', '\t', ' '][..]).filter(|s| !s.is_empty());
+    let (Some(xs), Some(ys)) = (it.next(), it.next()) else {
+        bail!("expected 'x,y', got {t:?}");
+    };
+    let x: f32 = xs.trim().parse().with_context(|| format!("bad x {xs:?}"))?;
+    let y: f32 = ys.trim().parse().with_context(|| format!("bad y {ys:?}"))?;
+    Ok(Point::new(x, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("kmr_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pts.csv");
+        let pts = vec![Point::new(1.5, -2.25), Point::new(0.0, 9.0)];
+        write_csv(&path, &pts).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back, pts);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(parse_line("1,2").unwrap(), Point::new(1.0, 2.0));
+        assert_eq!(parse_line("1.5\t-2").unwrap(), Point::new(1.5, -2.0));
+        assert_eq!(parse_line("3 4").unwrap(), Point::new(3.0, 4.0));
+        assert!(parse_line("nope").is_err());
+        assert!(parse_line("1,abc").is_err());
+    }
+}

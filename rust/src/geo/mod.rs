@@ -1,0 +1,82 @@
+//! Spatial primitives, synthetic dataset generation, and CSV I/O.
+
+pub mod datasets;
+pub mod io;
+
+/// A 2-D spatial point (the paper clusters two-dimensional GIS points).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Point {
+    pub x: f32,
+    pub y: f32,
+}
+
+impl Point {
+    pub fn new(x: f32, y: f32) -> Point {
+        Point { x, y }
+    }
+
+    /// Squared Euclidean distance (the paper's Eq. 1 cost term).
+    #[inline]
+    pub fn dist2(&self, other: &Point) -> f64 {
+        let dx = (self.x - other.x) as f64;
+        let dy = (self.y - other.y) as f64;
+        dx * dx + dy * dy
+    }
+}
+
+/// Axis-aligned bounding box.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BBox {
+    pub min_x: f32,
+    pub min_y: f32,
+    pub max_x: f32,
+    pub max_y: f32,
+}
+
+impl BBox {
+    pub fn of(points: &[Point]) -> Option<BBox> {
+        let first = points.first()?;
+        let mut b = BBox { min_x: first.x, min_y: first.y, max_x: first.x, max_y: first.y };
+        for p in points {
+            b.min_x = b.min_x.min(p.x);
+            b.min_y = b.min_y.min(p.y);
+            b.max_x = b.max_x.max(p.x);
+            b.max_y = b.max_y.max(p.y);
+        }
+        Some(b)
+    }
+
+    pub fn contains(&self, p: &Point) -> bool {
+        p.x >= self.min_x && p.x <= self.max_x && p.y >= self.min_y && p.y <= self.max_y
+    }
+
+    pub fn width(&self) -> f32 {
+        self.max_x - self.min_x
+    }
+    pub fn height(&self) -> f32 {
+        self.max_y - self.min_y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist2_basic() {
+        let a = Point::new(0.0, 0.0);
+        let b = Point::new(3.0, 4.0);
+        assert_eq!(a.dist2(&b), 25.0);
+        assert_eq!(a.dist2(&a), 0.0);
+    }
+
+    #[test]
+    fn bbox_bounds_all() {
+        let pts = vec![Point::new(1.0, 5.0), Point::new(-2.0, 3.0), Point::new(0.5, -1.0)];
+        let b = BBox::of(&pts).unwrap();
+        assert_eq!(b.min_x, -2.0);
+        assert_eq!(b.max_y, 5.0);
+        assert!(pts.iter().all(|p| b.contains(p)));
+        assert!(BBox::of(&[]).is_none());
+    }
+}

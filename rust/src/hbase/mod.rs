@@ -1,0 +1,294 @@
+//! HBase-lite: a row-keyed, region-sharded table store over the cluster.
+//!
+//! The paper stores the input spatial points in HBase ("a sequence file of
+//! coordinates"; the map key is the row number, the value the coordinate
+//! string). We model exactly the pieces MapReduce interacts with:
+//!
+//! - **Tables** hold rows in row-key order, sharded into **regions** by
+//!   contiguous key range.
+//! - Each region is served by one **region server** (a cluster node);
+//!   HMaster balances regions across alive nodes and reassigns them on
+//!   failure. Region locality drives map-task placement.
+//! - Spatial-point tables use a columnar backing (one shared coordinate
+//!   array) — the paper-scale tables are millions of rows, and the mapper
+//!   is charged text-parse cost per row by the cost model as if values
+//!   were coordinate strings.
+//! - Small tables (e.g. the medoids file) use a generic cell store with
+//!   column families, enough to exercise the HStore semantics described
+//!   in the paper's §2.2.
+
+use crate::geo::Point;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+pub type RowKey = u64;
+
+/// A contiguous row-range shard of a table.
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub id: usize,
+    pub row_start: RowKey,
+    pub row_end: RowKey,
+    /// Node currently serving this region.
+    pub server: usize,
+    /// Approximate on-disk bytes (drives split sizing / transfer cost).
+    pub bytes: u64,
+}
+
+/// Backing storage for a table's cells.
+pub enum Backing {
+    /// Columnar spatial points; row key = index. The logical cell is
+    /// `cf:coord = "x,y"` (whose parse cost the cost model charges).
+    Points(Arc<Vec<Point>>),
+    /// Generic small table: row -> (family:qualifier -> value).
+    Cells(BTreeMap<RowKey, BTreeMap<String, Vec<u8>>>),
+}
+
+pub struct Table {
+    pub name: String,
+    pub families: Vec<String>,
+    pub regions: Vec<Region>,
+    pub backing: Backing,
+    /// Average encoded row size in bytes (text coordinate row).
+    pub row_bytes: u64,
+}
+
+impl Table {
+    pub fn n_rows(&self) -> u64 {
+        match &self.backing {
+            Backing::Points(p) => p.len() as u64,
+            Backing::Cells(c) => c.len() as u64,
+        }
+    }
+
+    /// Scan one region's points (columnar tables only).
+    pub fn scan_region_points(&self, region: &Region) -> &[Point] {
+        match &self.backing {
+            Backing::Points(p) => &p[region.row_start as usize..region.row_end as usize],
+            Backing::Cells(_) => panic!("scan_region_points on a cell table"),
+        }
+    }
+
+    pub fn points(&self) -> Arc<Vec<Point>> {
+        match &self.backing {
+            Backing::Points(p) => p.clone(),
+            Backing::Cells(_) => panic!("points() on a cell table"),
+        }
+    }
+
+    /// Get a cell from a generic table.
+    pub fn get(&self, row: RowKey, col: &str) -> Option<&[u8]> {
+        match &self.backing {
+            Backing::Cells(c) => c.get(&row).and_then(|r| r.get(col)).map(|v| v.as_slice()),
+            Backing::Points(_) => None,
+        }
+    }
+}
+
+/// The HMaster: table catalog + region balancing.
+pub struct HMaster {
+    tables: BTreeMap<String, Table>,
+    n_nodes: usize,
+    alive: Vec<bool>,
+}
+
+impl HMaster {
+    pub fn new(n_nodes: usize) -> HMaster {
+        HMaster { tables: BTreeMap::new(), n_nodes, alive: vec![true; n_nodes] }
+    }
+
+    /// Create a columnar spatial table split into regions of about
+    /// `region_bytes`, served round-robin across alive nodes.
+    pub fn create_points_table(
+        &mut self,
+        name: &str,
+        points: Arc<Vec<Point>>,
+        row_bytes: u64,
+        region_bytes: u64,
+    ) -> &Table {
+        assert!(!self.tables.contains_key(name), "table exists: {name}");
+        let total_rows = points.len() as u64;
+        let total_bytes = total_rows * row_bytes;
+        let n_regions = total_bytes.div_ceil(region_bytes.max(1)).max(1);
+        let alive: Vec<usize> = self.alive_nodes();
+        let mut regions = Vec::with_capacity(n_regions as usize);
+        for r in 0..n_regions {
+            let row_start = total_rows * r / n_regions;
+            let row_end = total_rows * (r + 1) / n_regions;
+            regions.push(Region {
+                id: r as usize,
+                row_start,
+                row_end,
+                server: alive[(r as usize) % alive.len()],
+                bytes: (row_end - row_start) * row_bytes,
+            });
+        }
+        let t = Table {
+            name: name.to_string(),
+            families: vec!["cf".into()],
+            regions,
+            backing: Backing::Points(points),
+            row_bytes,
+        };
+        self.tables.insert(name.to_string(), t);
+        &self.tables[name]
+    }
+
+    /// Create a small generic cell table (single region on the master).
+    pub fn create_cell_table(&mut self, name: &str, families: &[&str]) {
+        assert!(!self.tables.contains_key(name), "table exists: {name}");
+        let t = Table {
+            name: name.to_string(),
+            families: families.iter().map(|s| s.to_string()).collect(),
+            regions: vec![Region { id: 0, row_start: 0, row_end: u64::MAX, server: 0, bytes: 0 }],
+            backing: Backing::Cells(BTreeMap::new()),
+            row_bytes: 0,
+        };
+        self.tables.insert(name.to_string(), t);
+    }
+
+    pub fn put(&mut self, table: &str, row: RowKey, col: &str, value: Vec<u8>) {
+        let t = self.tables.get_mut(table).expect("no such table");
+        match &mut t.backing {
+            Backing::Cells(c) => {
+                let fam = col.split(':').next().unwrap_or("");
+                assert!(
+                    t.families.iter().any(|f| f == fam),
+                    "unknown column family '{fam}' in {table}"
+                );
+                c.entry(row).or_default().insert(col.to_string(), value);
+            }
+            Backing::Points(_) => panic!("put on a columnar table"),
+        }
+    }
+
+    pub fn table(&self, name: &str) -> Option<&Table> {
+        self.tables.get(name)
+    }
+
+    pub fn drop_table(&mut self, name: &str) {
+        self.tables.remove(name);
+    }
+
+    fn alive_nodes(&self) -> Vec<usize> {
+        let v: Vec<usize> = (0..self.n_nodes).filter(|&n| self.alive[n]).collect();
+        assert!(!v.is_empty(), "no alive region servers");
+        v
+    }
+
+    /// Fail a region server: reassign its regions round-robin over the
+    /// survivors (HMaster failover). Returns number of regions moved.
+    pub fn fail_node(&mut self, node: usize) -> usize {
+        self.alive[node] = false;
+        let alive = self.alive_nodes();
+        let mut moved = 0;
+        let mut rr = 0usize;
+        for t in self.tables.values_mut() {
+            for r in &mut t.regions {
+                if r.server == node {
+                    r.server = alive[rr % alive.len()];
+                    rr += 1;
+                    moved += 1;
+                }
+            }
+        }
+        moved
+    }
+
+    pub fn recover_node(&mut self, node: usize) {
+        self.alive[node] = true;
+    }
+
+    /// Region count per node for balance checks.
+    pub fn regions_per_node(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_nodes];
+        for t in self.tables.values() {
+            for r in &t.regions {
+                counts[r.server] += 1;
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(n: usize) -> Arc<Vec<Point>> {
+        Arc::new((0..n).map(|i| Point::new(i as f32, -(i as f32))).collect())
+    }
+
+    #[test]
+    fn regions_cover_rows_disjointly() {
+        let mut hm = HMaster::new(4);
+        let t = hm.create_points_table("pts", pts(10_000), 25, 50_000);
+        assert!(t.regions.len() > 1);
+        let mut covered = 0u64;
+        for (i, r) in t.regions.iter().enumerate() {
+            if i > 0 {
+                assert_eq!(r.row_start, t.regions[i - 1].row_end);
+            }
+            covered += r.row_end - r.row_start;
+        }
+        assert_eq!(covered, 10_000);
+    }
+
+    #[test]
+    fn scan_region_returns_right_slice() {
+        let mut hm = HMaster::new(2);
+        let t = hm.create_points_table("pts", pts(100), 25, 1000);
+        let r = &t.regions[1];
+        let s = t.scan_region_points(r);
+        assert_eq!(s.len(), (r.row_end - r.row_start) as usize);
+        assert_eq!(s[0].x, r.row_start as f32);
+    }
+
+    #[test]
+    fn regions_balanced_round_robin() {
+        let mut hm = HMaster::new(4);
+        hm.create_points_table("pts", pts(80_000), 25, 100_000);
+        let counts = hm.regions_per_node();
+        let max = counts.iter().max().unwrap();
+        let min = counts.iter().min().unwrap();
+        assert!(max - min <= 1, "{counts:?}");
+    }
+
+    #[test]
+    fn failover_moves_regions() {
+        let mut hm = HMaster::new(3);
+        hm.create_points_table("pts", pts(60_000), 25, 100_000);
+        let moved = hm.fail_node(1);
+        assert!(moved > 0);
+        for t in hm.tables.values() {
+            for r in &t.regions {
+                assert_ne!(r.server, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn cell_table_put_get() {
+        let mut hm = HMaster::new(2);
+        hm.create_cell_table("medoids", &["m"]);
+        hm.put("medoids", 3, "m:xy", vec![1, 2, 3]);
+        let t = hm.table("medoids").unwrap();
+        assert_eq!(t.get(3, "m:xy"), Some(&[1u8, 2, 3][..]));
+        assert_eq!(t.get(4, "m:xy"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown column family")]
+    fn put_unknown_family_panics() {
+        let mut hm = HMaster::new(1);
+        hm.create_cell_table("t", &["a"]);
+        hm.put("t", 0, "b:x", vec![]);
+    }
+
+    #[test]
+    fn row_count_matches() {
+        let mut hm = HMaster::new(2);
+        let t = hm.create_points_table("pts", pts(123), 25, 1 << 20);
+        assert_eq!(t.n_rows(), 123);
+    }
+}

@@ -1,0 +1,29 @@
+//! # kmedoids-mr
+//!
+//! Reproduction of *"Parallel K-Medoids++ Spatial Clustering Algorithm
+//! Based on MapReduce"* (Yue, Man, Yue, Liu — CS.DC 2016) as a
+//! three-layer Rust + JAX/Pallas system:
+//!
+//! - **L3 (this crate)**: a complete MapReduce runtime (HDFS-lite,
+//!   HBase-lite, JobTracker with locality/speculation/fault-tolerance)
+//!   running on a deterministic discrete-event cluster simulator, plus the
+//!   paper's parallel K-Medoids++ driver and every baseline
+//!   (PAM, CLARANS, parallel k-means).
+//! - **L2/L1 (python/, build-time only)**: the distance/assignment hot
+//!   path as JAX graphs wrapping Pallas kernels, AOT-lowered to HLO text
+//!   artifacts executed from Rust through PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! measured reproduction of every table/figure.
+
+pub mod clustering;
+pub mod config;
+pub mod dfs;
+pub mod driver;
+pub mod geo;
+pub mod hbase;
+pub mod mapreduce;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,227 @@
+//! kmedoids-mr — CLI for the Parallel K-Medoids++ MapReduce reproduction.
+//!
+//! Subcommands (hand-rolled parsing; clap is not in the offline vendor
+//! set):
+//!
+//! ```text
+//! kmedoids-mr generate --points N --hotspots K --seed S --out file.csv
+//! kmedoids-mr run      --algo kmedoids++-mr --nodes 7 --dataset 0 [--scale 10]
+//! kmedoids-mr bench    table6|fig4|fig5|ablation [--scale 10]
+//! kmedoids-mr inspect-artifacts
+//! ```
+
+use anyhow::{bail, Context, Result};
+use kmedoids_mr::driver::{run_experiment, Algorithm, Experiment};
+use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
+use kmedoids_mr::geo::io::write_csv;
+use kmedoids_mr::report;
+use kmedoids_mr::runtime::{self, BackendKind};
+use std::collections::HashMap;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn real_main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "run" => cmd_run(&args),
+        "bench" => cmd_bench(&args),
+        "inspect-artifacts" => cmd_inspect(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `kmedoids-mr help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "kmedoids-mr — Parallel K-Medoids++ spatial clustering on MapReduce
+
+USAGE:
+  kmedoids-mr generate --points N [--hotspots H] [--seed S] --out FILE.csv
+  kmedoids-mr run   [--algo ALGO] [--nodes N] [--dataset 0|1|2] [--k K]
+                    [--scale DIV] [--seed S] [--backend auto|pjrt|native]
+                    [--quality]
+  kmedoids-mr bench table6|fig4|fig5|ablation [--scale DIV] [--seed S]
+  kmedoids-mr inspect-artifacts
+
+ALGO: kmedoids++-mr | kmedoids-mr | kmedoids-serial | clarans | kmeans-mr
+"
+    );
+}
+
+fn backend_from(args: &Args, min_block: usize) -> Result<std::sync::Arc<dyn runtime::ComputeBackend>> {
+    let kind = match args.get("backend") {
+        Some(s) => BackendKind::parse(s).with_context(|| format!("bad --backend {s:?}"))?,
+        None => BackendKind::Auto,
+    };
+    runtime::load_backend(kind, min_block)
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let n = args.get_usize("points", 100_000)?;
+    let hotspots = args.get_usize("hotspots", 9)?;
+    let seed = args.get_u64("seed", 42)?;
+    let out = args.get("out").context("--out FILE.csv is required")?;
+    let d = generate(&SpatialSpec::new(n, hotspots, seed));
+    let bytes = write_csv(std::path::Path::new(out), &d.points)?;
+    println!("wrote {n} points ({bytes} bytes) to {out}");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let algo = match args.get("algo") {
+        Some(s) => Algorithm::parse(s).with_context(|| format!("unknown --algo {s:?}"))?,
+        None => Algorithm::KMedoidsPlusPlusMR,
+    };
+    let nodes = args.get_usize("nodes", 7)?;
+    let dataset = args.get_usize("dataset", 0)?;
+    if dataset > 2 {
+        bail!("--dataset must be 0, 1 or 2 (Table 5)");
+    }
+    let scale = args.get_usize("scale", 1)?;
+    let seed = args.get_u64("seed", 42)?;
+    let k = args.get_usize("k", 9)?;
+    let backend = backend_from(args, 2048)?;
+
+    let mut exp = Experiment::paper_cell(algo, nodes, dataset, seed).scaled(scale.max(1));
+    exp.k = k;
+    exp.with_quality = args.get("quality").is_some();
+    println!(
+        "running {} on dataset {} ({} points) with {} nodes (backend: {})",
+        algo.name(),
+        dataset + 1,
+        exp.spec.n_points,
+        nodes,
+        backend.name()
+    );
+    let r = run_experiment(&exp, &backend);
+    println!("  simulated time : {} ms", r.time_ms);
+    println!("  iterations     : {}", r.iterations);
+    println!("  final cost E   : {:.4e}", r.cost);
+    println!("  dist evals     : {}", r.dist_evals);
+    if let Some(ari) = r.ari {
+        println!("  ARI vs truth   : {ari:.4}");
+    }
+    println!("  wallclock      : {:.2} s", r.wall_s);
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table6");
+    let scale = args.get_usize("scale", 1)?;
+    let seed = args.get_u64("seed", 42)?;
+    let backend = backend_from(args, 2048)?;
+    match which {
+        "table6" | "fig3" => {
+            let results = kmedoids_mr::driver::suites::table6_suite(&backend, scale, seed);
+            println!("\nTable 6 — execution time (ms), K-Medoids++ MR:\n");
+            print!("{}", report::table6(&results));
+            println!("\nFig. 4 — speedup vs 4-node cluster:\n");
+            print!("{}", report::fig4_speedup(&results));
+            println!("\nCSV:\n{}", report::to_csv(&results));
+        }
+        "fig4" => {
+            let results = kmedoids_mr::driver::suites::table6_suite(&backend, scale, seed);
+            println!("\nFig. 4 — speedup vs 4-node cluster:\n");
+            print!("{}", report::fig4_speedup(&results));
+        }
+        "fig5" => {
+            let results = kmedoids_mr::driver::suites::fig5_suite(&backend, scale, seed);
+            println!("\nFig. 5 — comparative execution time (ms), 7 nodes:\n");
+            print!("{}", report::fig5_comparative(&results));
+            println!("\nCSV:\n{}", report::to_csv(&results));
+        }
+        "ablation" => {
+            let results = kmedoids_mr::driver::suites::ablation_suite(&backend, scale, seed);
+            println!("\nAblation — init strategy & iterations (dataset 1):\n");
+            println!(
+                "{:<18}{:>8}{:>12}{:>16}",
+                "variant", "iters", "time(ms)", "cost"
+            );
+            for r in &results {
+                println!(
+                    "{:<18}{:>8}{:>12}{:>16.4e}",
+                    r.algorithm, r.iterations, r.time_ms, r.cost
+                );
+            }
+        }
+        other => bail!("unknown bench {other:?} (table6|fig4|fig5|ablation)"),
+    }
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let dir = runtime::default_artifacts_dir();
+    let m = runtime::Manifest::load(&dir)?;
+    println!("artifacts at {:?}:", m.dir);
+    for u in &m.units {
+        println!(
+            "  {:<22} kind={:<9} B={:<6} K={:<4} pad={:e}  {:?}",
+            u.name,
+            format!("{:?}", u.kind),
+            u.block,
+            u.kpad,
+            u.pad_coord,
+            u.path.file_name().unwrap()
+        );
+    }
+    Ok(())
+}

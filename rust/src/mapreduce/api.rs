@@ -1,0 +1,161 @@
+//! MapReduce programming interface: Mapper/Reducer traits and task
+//! contexts (the Rust rendering of the paper's Table 1/Table 2 pseudocode
+//! signatures `Map(row, value, Context)` / `Reduce(key, Iterable, Context)`).
+
+use crate::geo::Point;
+use crate::sim::TaskWork;
+use std::collections::BTreeMap;
+
+pub type Key = Vec<u8>;
+pub type Val = Vec<u8>;
+
+/// Counters (Hadoop-style), merged across all tasks of a job.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    map: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.map.entry(name.to_string()).or_insert(0) += by;
+    }
+    pub fn get(&self, name: &str) -> u64 {
+        self.map.get(name).copied().unwrap_or(0)
+    }
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.map {
+            *self.map.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+/// Context handed to a map task: output collector + work meter.
+#[derive(Default)]
+pub struct MapCtx {
+    pub(crate) emits: Vec<(Key, Val)>,
+    pub work: TaskWork,
+    pub counters: Counters,
+}
+
+impl MapCtx {
+    pub fn emit(&mut self, k: Key, v: Val) {
+        self.work.write_bytes += (k.len() + v.len()) as u64;
+        self.emits.push((k, v));
+    }
+    pub fn charge_dist_evals(&mut self, n: u64) {
+        self.work.dist_evals += n;
+    }
+    pub fn charge_cpu_s(&mut self, s: f64) {
+        self.work.extra_cpu_s += s;
+    }
+    pub fn n_emits(&self) -> usize {
+        self.emits.len()
+    }
+}
+
+/// Context handed to a reduce (or combine) task.
+#[derive(Default)]
+pub struct ReduceCtx {
+    pub(crate) emits: Vec<(Key, Val)>,
+    pub work: TaskWork,
+    pub counters: Counters,
+    /// True when running as a combiner on the map side (lets one
+    /// implementation serve both roles with different output framing).
+    pub is_combine: bool,
+}
+
+impl ReduceCtx {
+    pub fn emit(&mut self, k: Key, v: Val) {
+        self.work.write_bytes += (k.len() + v.len()) as u64;
+        self.emits.push((k, v));
+    }
+    pub fn charge_dist_evals(&mut self, n: u64) {
+        self.work.dist_evals += n;
+    }
+    pub fn charge_cpu_s(&mut self, s: f64) {
+        self.work.extra_cpu_s += s;
+    }
+}
+
+/// A map function over one input split.
+///
+/// Two entry points because the engine has two input representations:
+/// columnar spatial tables (the big HBase point tables — the hot path,
+/// block-vectorizable through the PJRT kernel) and generic KV lists
+/// (chained-job inputs, small side files).
+pub trait Mapper: Send + Sync {
+    fn map_points(&self, _ctx: &mut MapCtx, _row_start: u64, _points: &[Point]) {
+        unimplemented!("mapper does not accept columnar point input")
+    }
+    fn map_kvs(&self, _ctx: &mut MapCtx, _kvs: &[(Key, Val)]) {
+        unimplemented!("mapper does not accept kv input")
+    }
+}
+
+/// A reduce function over one key group (also used as combiner).
+pub trait Reducer: Send + Sync {
+    fn reduce(&self, ctx: &mut ReduceCtx, key: &[u8], values: &[Val]);
+}
+
+/// Key -> reduce-partition assignment (Hadoop's HashPartitioner default).
+pub type PartitionFn = dyn Fn(&[u8], usize) -> usize + Send + Sync;
+
+pub fn hash_partition(key: &[u8], n: usize) -> usize {
+    // FNV-1a, stable across runs/platforms.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in key {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    (h % n as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_merge() {
+        let mut a = Counters::default();
+        a.inc("x", 2);
+        let mut b = Counters::default();
+        b.inc("x", 3);
+        b.inc("y", 1);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 5);
+        assert_eq!(a.get("y"), 1);
+        assert_eq!(a.get("z"), 0);
+    }
+
+    #[test]
+    fn emit_charges_write_bytes() {
+        let mut ctx = MapCtx::default();
+        ctx.emit(vec![1, 2], vec![3, 4, 5]);
+        assert_eq!(ctx.work.write_bytes, 5);
+        assert_eq!(ctx.n_emits(), 1);
+    }
+
+    #[test]
+    fn hash_partition_in_range_and_stable() {
+        for n in [1usize, 2, 7, 64] {
+            for key in [b"a".as_slice(), b"abc", b"", b"\x00\x01"] {
+                let p = hash_partition(key, n);
+                assert!(p < n);
+                assert_eq!(p, hash_partition(key, n), "stable");
+            }
+        }
+    }
+
+    #[test]
+    fn hash_partition_spreads() {
+        let n = 8;
+        let mut hit = vec![false; n];
+        for i in 0..256u32 {
+            hit[hash_partition(&i.to_be_bytes(), n)] = true;
+        }
+        assert!(hit.iter().all(|h| *h), "all partitions reachable");
+    }
+}

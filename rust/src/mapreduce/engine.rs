@@ -1,0 +1,710 @@
+//! The MapReduce execution engine: a JobTracker scheduling task attempts
+//! onto simulated TaskTrackers, with data-local placement, combiners,
+//! shuffle cost, speculative execution, and fail-stop node failures.
+//!
+//! **Real compute, simulated time.** Every map/reduce task's user code
+//! actually runs (including PJRT kernel calls); the *simulated* duration
+//! is produced by [`CostModel`] from the measured work. Task outputs are
+//! cached per task, so a speculative duplicate attempt reuses the same
+//! deterministic result with different timing.
+
+use super::api::{Counters, Key, MapCtx, ReduceCtx, Val};
+use super::job::{Input, JobSpec, SplitMeta};
+use crate::config::ClusterConfig;
+use crate::dfs::NameNode;
+use crate::hbase::HMaster;
+use crate::sim::{CostModel, Event, EventQueue, SimTime, TaskWork};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Outcome of one job.
+pub struct JobResult {
+    /// Reduce outputs concatenated in partition order (each partition's
+    /// emits are in key order); for map-only jobs, the map emits.
+    pub output: Vec<(Key, Val)>,
+    /// Simulated wall-clock duration of the job, seconds.
+    pub duration_s: f64,
+    pub counters: Counters,
+    pub stats: JobStats,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct JobStats {
+    pub name: String,
+    pub n_map_tasks: usize,
+    pub n_reduce_tasks: usize,
+    pub n_attempts: usize,
+    pub n_speculative: usize,
+    pub n_failed_attempts: usize,
+    pub map_durations_s: Vec<f64>,
+    pub reduce_durations_s: Vec<f64>,
+    pub shuffle_bytes: u64,
+    pub duration_s: f64,
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+/// Cached result of one map task's real computation.
+struct MapOut {
+    /// Per-reduce-partition (key, value) lists (post-combiner).
+    partitions: Vec<Vec<(Key, Val)>>,
+    part_bytes: Vec<u64>,
+    work: TaskWork,
+    counters: Counters,
+}
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum TaskRef {
+    Map(usize),
+    Reduce(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum TaskState {
+    Pending,
+    Running,
+    Done,
+}
+
+struct Attempt {
+    task: TaskRef,
+    node: usize,
+    started: SimTime,
+    duration: f64,
+    live: bool,
+    speculative: bool,
+}
+
+/// The persistent simulated cluster: storage layers + global sim clock.
+/// Jobs run one after another on the same cluster (an iterative driver
+/// like K-Medoids submits one job per iteration).
+pub struct Cluster {
+    pub config: ClusterConfig,
+    pub cost: CostModel,
+    pub namenode: NameNode,
+    pub hmaster: HMaster,
+    pub speculation: bool,
+    alive: Vec<bool>,
+    now: SimTime,
+    /// Planned fail-stop events: (absolute sim seconds, node).
+    failure_plan: Vec<(f64, usize)>,
+    recover_plan: Vec<(f64, usize)>,
+    pub history: Vec<JobStats>,
+    #[allow(dead_code)]
+    rng: Rng,
+    /// Real-compute thread pool width for map/reduce user code (wallclock
+    /// only; simulated timing is unaffected). Set >1 by the perf pass.
+    pub compute_threads: usize,
+}
+
+impl Cluster {
+    pub fn new(config: ClusterConfig, seed: u64) -> Cluster {
+        let namenode = NameNode::new(&config, seed);
+        let hmaster = HMaster::new(config.nodes.len());
+        let alive = vec![true; config.nodes.len()];
+        Cluster {
+            config,
+            cost: CostModel::default(),
+            namenode,
+            hmaster,
+            speculation: true,
+            alive,
+            now: SimTime::ZERO,
+            failure_plan: Vec::new(),
+            recover_plan: Vec::new(),
+            history: Vec::new(),
+            rng: Rng::new(seed),
+            compute_threads: 1,
+        }
+    }
+
+    pub fn with_cost(mut self, cost: CostModel) -> Cluster {
+        self.cost = cost;
+        self
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule a fail-stop failure of `node` at absolute sim time `at_s`.
+    pub fn plan_failure(&mut self, at_s: f64, node: usize) {
+        assert!(node != self.config.master, "master failure is out of scope (as in the paper)");
+        self.failure_plan.push((at_s, node));
+        self.failure_plan.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+
+    pub fn plan_recovery(&mut self, at_s: f64, node: usize) {
+        self.recover_plan.push((at_s, node));
+        self.recover_plan.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    /// Run one MapReduce job to completion. Advances the cluster clock.
+    pub fn run_job(&mut self, spec: &JobSpec) -> JobResult {
+        let t0 = self.now;
+        let splits = spec.input.splits();
+        let n_maps = splits.len();
+        let n_reduces = if spec.reducer.is_some() { spec.n_reduces } else { 0 };
+        assert!(n_maps > 0, "job {} has no input splits", spec.name);
+
+        let mut q = EventQueue::new();
+        // EventQueue starts at 0; offset everything by t0 at the end.
+        // Inject failures/recoveries that fall inside this job's window
+        // as events relative to t0; earlier ones apply immediately. Events
+        // still unfired when the job finishes are put back on the plan.
+        for (at, node) in std::mem::take(&mut self.failure_plan) {
+            if at <= t0.0 {
+                self.apply_node_failure(node);
+            } else {
+                q.schedule(SimTime::secs(at - t0.0), Event::NodeFail { node });
+            }
+        }
+        for (at, node) in std::mem::take(&mut self.recover_plan) {
+            if at <= t0.0 {
+                self.apply_node_recovery(node);
+            } else {
+                q.schedule(SimTime::secs(at - t0.0), Event::NodeRecover { node });
+            }
+        }
+
+        let mut st = JobRun {
+            spec,
+            splits,
+            cluster_cfg: self.config.clone(),
+            cost: self.cost.clone(),
+            map_state: vec![TaskState::Pending; n_maps],
+            map_out: (0..n_maps).map(|_| None).collect(),
+            map_done_node: vec![usize::MAX; n_maps],
+            reduce_state: vec![TaskState::Pending; n_reduces],
+            reduce_out: (0..n_reduces).map(|_| None).collect(),
+            attempts: Vec::new(),
+            free_map_slots: self
+                .config
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, n)| if self.alive[i] { n.map_slots() } else { 0 })
+                .collect(),
+            free_reduce_slots: self
+                .config
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, n)| if self.alive[i] { n.reduce_slots() } else { 0 })
+                .collect(),
+            maps_done: 0,
+            reduces_done: 0,
+            counters: Counters::default(),
+            stats: JobStats { name: spec.name.clone(), n_map_tasks: n_maps, n_reduce_tasks: n_reduces, ..Default::default() },
+            speculation: self.speculation,
+        };
+
+        st.assign_maps(&mut q, &self.alive);
+
+        while !(st.maps_done == n_maps && st.reduces_done == n_reduces) {
+            let Some((now, ev)) = q.next() else {
+                panic!(
+                    "job {} deadlocked: {}/{} maps, {}/{} reduces done, no events",
+                    spec.name, st.maps_done, n_maps, st.reduces_done, n_reduces
+                );
+            };
+            match ev {
+                Event::TaskDone { attempt_id } => {
+                    st.on_attempt_done(attempt_id, now, &mut q, &self.alive);
+                }
+                Event::NodeFail { node } => {
+                    self.apply_node_failure(node);
+                    st.on_node_fail(node, now, &mut q, &self.alive);
+                }
+                Event::NodeRecover { node } => {
+                    self.apply_node_recovery(node);
+                    st.on_node_recover(node, &self.config, now, &mut q, &self.alive);
+                }
+                Event::Tick => {}
+            }
+        }
+
+        let busy_end = q.now();
+        let duration = busy_end.0 + self.cost.job_overhead_s;
+        self.now = t0 + duration;
+
+        // Return unfired failure/recovery events to the plan (they belong
+        // to a later job's window).
+        while let Some((at, ev)) = q.next() {
+            match ev {
+                Event::NodeFail { node } => self.failure_plan.push((t0.0 + at.0, node)),
+                Event::NodeRecover { node } => self.recover_plan.push((t0.0 + at.0, node)),
+                _ => {}
+            }
+        }
+
+        // Assemble output.
+        let mut output = Vec::new();
+        if n_reduces == 0 {
+            for mo in st.map_out.iter().flatten() {
+                for part in &mo.partitions {
+                    output.extend(part.iter().cloned());
+                }
+            }
+        } else {
+            for ro in st.reduce_out.iter_mut() {
+                output.append(&mut ro.take().expect("reduce output missing").0);
+            }
+        }
+
+        let mut stats = st.stats;
+        stats.duration_s = duration;
+        stats.t_start = t0.0;
+        stats.t_end = self.now.0;
+        stats.n_attempts = st.attempts.len();
+        self.history.push(stats.clone());
+
+        let mut counters = st.counters;
+        counters.inc("job.maps", n_maps as u64);
+        counters.inc("job.reduces", n_reduces as u64);
+
+        JobResult { output, duration_s: duration, counters, stats }
+    }
+
+    fn apply_node_failure(&mut self, node: usize) {
+        if self.alive[node] {
+            self.alive[node] = false;
+            self.namenode.fail_node(node);
+            self.hmaster.fail_node(node);
+        }
+    }
+
+    fn apply_node_recovery(&mut self, node: usize) {
+        if !self.alive[node] {
+            self.alive[node] = true;
+            self.namenode.recover_node(node);
+            self.hmaster.recover_node(node);
+        }
+    }
+}
+
+/// Per-job mutable scheduling state.
+struct JobRun<'a> {
+    spec: &'a JobSpec,
+    splits: Vec<SplitMeta>,
+    cluster_cfg: ClusterConfig,
+    cost: CostModel,
+    map_state: Vec<TaskState>,
+    map_out: Vec<Option<Arc<MapOut>>>,
+    /// Node holding each completed map task's output.
+    map_done_node: Vec<usize>,
+    reduce_state: Vec<TaskState>,
+    reduce_out: Vec<Option<(Vec<(Key, Val)>, TaskWork)>>,
+    attempts: Vec<Attempt>,
+    free_map_slots: Vec<usize>,
+    free_reduce_slots: Vec<usize>,
+    maps_done: usize,
+    reduces_done: usize,
+    counters: Counters,
+    stats: JobStats,
+    speculation: bool,
+}
+
+impl<'a> JobRun<'a> {
+    // ---- map phase -------------------------------------------------------
+
+    /// Locality-aware map assignment: for each free slot pick the best
+    /// pending task (node-local > host-local > remote), Hadoop-style.
+    fn assign_maps(&mut self, q: &mut EventQueue, alive: &[bool]) {
+        loop {
+            let Some(node) = self.next_free_slot(&self.free_map_slots, alive) else { break };
+            let Some(task) = self.pick_map_task(node) else { break };
+            self.free_map_slots[node] -= 1;
+            self.launch_map(task, node, false, q);
+        }
+        if self.speculation {
+            self.maybe_speculate(q, alive);
+        }
+    }
+
+    fn next_free_slot(&self, slots: &[usize], alive: &[bool]) -> Option<usize> {
+        // Fastest node with a free slot first (deterministic tie-break by
+        // index). Matches TaskTrackers heartbeating with open slots.
+        (0..slots.len())
+            .filter(|&n| alive[n] && slots[n] > 0)
+            .max_by(|&a, &b| {
+                self.cluster_cfg.nodes[a]
+                    .speed
+                    .partial_cmp(&self.cluster_cfg.nodes[b].speed)
+                    .unwrap()
+                    .then(b.cmp(&a))
+            })
+    }
+
+    fn pick_map_task(&self, node: usize) -> Option<usize> {
+        let host = self.cluster_cfg.nodes[node].host;
+        let pending = || {
+            (0..self.splits.len()).filter(|&t| self.map_state[t] == TaskState::Pending)
+        };
+        pending()
+            .find(|&t| self.splits[t].preferred.contains(&node))
+            .or_else(|| {
+                pending().find(|&t| {
+                    self.splits[t]
+                        .preferred
+                        .iter()
+                        .any(|&p| self.cluster_cfg.nodes[p].host == host)
+                })
+            })
+            .or_else(|| pending().next())
+    }
+
+    fn launch_map(&mut self, task: usize, node: usize, speculative: bool, q: &mut EventQueue) {
+        if !speculative {
+            self.map_state[task] = TaskState::Running;
+        }
+        let out = self.compute_map(task);
+        // Work: task's own + input read (local or remote).
+        let mut work = out.work;
+        let split = &self.splits[task];
+        let (src, local) = if split.preferred.contains(&node) {
+            (None, true)
+        } else {
+            (split.preferred.first().copied(), false)
+        };
+        if local {
+            work.local_read_bytes += split.bytes;
+        } else {
+            work.remote_read_bytes += split.bytes;
+        }
+        let dur = self.cost.sched_delay_s + self.cost.task_seconds(&self.cluster_cfg, node, src, &work);
+        let id = self.attempts.len();
+        self.attempts.push(Attempt {
+            task: TaskRef::Map(task),
+            node,
+            started: q.now(),
+            duration: dur,
+            live: true,
+            speculative,
+        });
+        if speculative {
+            self.stats.n_speculative += 1;
+        }
+        q.schedule_in(dur, Event::TaskDone { attempt_id: id });
+    }
+
+    /// Run (or reuse) the real map computation for a task.
+    fn compute_map(&mut self, task: usize) -> Arc<MapOut> {
+        if let Some(o) = &self.map_out[task] {
+            return o.clone();
+        }
+        let split = &self.splits[task];
+        let mut ctx = MapCtx::default();
+        match &self.spec.input {
+            Input::Points { points, .. } => {
+                let slice = &points[split.row_start as usize..split.row_end as usize];
+                ctx.work.rows_parsed += slice.len() as u64;
+                self.spec.mapper.map_points(&mut ctx, split.row_start, slice);
+            }
+            Input::Kvs { data, .. } => {
+                let slice = &data[split.row_start as usize..split.row_end as usize];
+                ctx.work.rows_parsed += slice.len() as u64;
+                self.spec.mapper.map_kvs(&mut ctx, slice);
+            }
+        }
+        let n_parts = self.spec.n_reduces.max(1);
+        let mut partitions: Vec<Vec<(Key, Val)>> = vec![Vec::new(); n_parts];
+        let has_reduce = self.spec.reducer.is_some();
+        for (k, v) in std::mem::take(&mut ctx.emits) {
+            let p = if has_reduce { (self.spec.partitioner)(&k, n_parts) } else { 0 };
+            partitions[p].push((k, v));
+        }
+        let mut work = ctx.work;
+        let mut counters = ctx.counters;
+        counters.inc("map.output.records", partitions.iter().map(|p| p.len() as u64).sum());
+
+        // Map-side sort (per partition) then optional combiner.
+        for part in partitions.iter_mut() {
+            part.sort_by(|a, b| a.0.cmp(&b.0));
+            if let Some(comb) = &self.spec.combiner {
+                let mut rctx = ReduceCtx { is_combine: true, ..Default::default() };
+                for (key, vals) in group_sorted(part) {
+                    comb.reduce(&mut rctx, key, &vals);
+                }
+                work.add(&rctx.work);
+                counters.merge(&rctx.counters);
+                counters.inc("combine.output.records", rctx.emits.len() as u64);
+                *part = rctx.emits;
+                part.sort_by(|a, b| a.0.cmp(&b.0));
+            }
+        }
+        let part_bytes: Vec<u64> = partitions
+            .iter()
+            .map(|p| p.iter().map(|(k, v)| (k.len() + v.len()) as u64).sum())
+            .collect();
+        // Spill: map output written once to local disk.
+        work.write_bytes = part_bytes.iter().sum();
+        let out = Arc::new(MapOut { partitions, part_bytes, work, counters });
+        self.map_out[task] = Some(out.clone());
+        out
+    }
+
+    // ---- reduce phase ----------------------------------------------------
+
+    fn assign_reduces(&mut self, q: &mut EventQueue, alive: &[bool]) {
+        if self.maps_done < self.splits.len() || self.spec.reducer.is_none() {
+            return;
+        }
+        loop {
+            let Some(node) = self.next_free_slot(&self.free_reduce_slots, alive) else { break };
+            let Some(task) =
+                (0..self.reduce_state.len()).find(|&r| self.reduce_state[r] == TaskState::Pending)
+            else {
+                break;
+            };
+            self.free_reduce_slots[node] -= 1;
+            self.reduce_state[task] = TaskState::Running;
+            self.launch_reduce(task, node, q);
+        }
+    }
+
+    fn launch_reduce(&mut self, r: usize, node: usize, q: &mut EventQueue) {
+        // Shuffle: fetch partition r from every completed map's node.
+        // Hadoop overlaps copies with ~5 parallel fetchers; we charge the
+        // serialized sum divided by a fetcher-parallelism factor.
+        const PARALLEL_COPIES: f64 = 3.0;
+        let mut shuffle_s = 0.0;
+        let mut shuffle_bytes = 0u64;
+        for t in 0..self.splits.len() {
+            let bytes = self.map_out[t].as_ref().map(|m| m.part_bytes[r]).unwrap_or(0);
+            if bytes > 0 {
+                let src = self.map_done_node[t];
+                shuffle_s += self.cost.shuffle_seconds(&self.cluster_cfg, src, node, bytes);
+                shuffle_bytes += bytes;
+            }
+        }
+        shuffle_s /= PARALLEL_COPIES;
+        self.stats.shuffle_bytes += shuffle_bytes;
+        self.counters.inc("reduce.shuffle.bytes", shuffle_bytes);
+
+        let (_, work) = self.compute_reduce(r);
+        let mut work = work;
+        // Merge-read of shuffled data from local disk + network already
+        // accounted; charge the merge read:
+        work.local_read_bytes += shuffle_bytes;
+        let dur = self.cost.sched_delay_s
+            + shuffle_s
+            + self.cost.task_seconds(&self.cluster_cfg, node, None, &work);
+        let id = self.attempts.len();
+        self.attempts.push(Attempt {
+            task: TaskRef::Reduce(r),
+            node,
+            started: q.now(),
+            duration: dur,
+            live: true,
+            speculative: false,
+        });
+        q.schedule_in(dur, Event::TaskDone { attempt_id: id });
+    }
+
+    /// Real reduce computation (cached in reduce_out).
+    fn compute_reduce(&mut self, r: usize) -> (usize, TaskWork) {
+        if let Some((out, work)) = &self.reduce_out[r] {
+            return (out.len(), *work);
+        }
+        // Merge all maps' partition r, sorted by key (stable across maps).
+        let mut recs: Vec<(Key, Val)> = Vec::new();
+        for t in 0..self.splits.len() {
+            if let Some(mo) = &self.map_out[t] {
+                recs.extend(mo.partitions[r].iter().cloned());
+            }
+        }
+        recs.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut ctx = ReduceCtx::default();
+        ctx.work.rows_parsed += recs.len() as u64; // deserialization cost
+        let red = self.spec.reducer.as_ref().expect("reduce without reducer").clone();
+        for (key, vals) in group_sorted(&recs) {
+            red.reduce(&mut ctx, key, &vals);
+        }
+        self.counters.merge(&ctx.counters);
+        self.counters.inc("reduce.input.records", recs.len() as u64);
+        self.counters.inc("reduce.output.records", ctx.emits.len() as u64);
+        let work = ctx.work;
+        self.reduce_out[r] = Some((ctx.emits, work));
+        (recs.len(), work)
+    }
+
+    // ---- events ----------------------------------------------------------
+
+    fn on_attempt_done(&mut self, id: usize, now: SimTime, q: &mut EventQueue, alive: &[bool]) {
+        let (task, node, live, dur) = {
+            let a = &self.attempts[id];
+            (a.task, a.node, a.live, a.duration)
+        };
+        if !live {
+            return; // killed (lost speculation race or node failure)
+        }
+        self.attempts[id].live = false;
+        match task {
+            TaskRef::Map(t) => {
+                self.free_map_slots[node] += 1;
+                if self.map_state[t] == TaskState::Done {
+                    return; // speculative twin already won
+                }
+                self.map_state[t] = TaskState::Done;
+                self.map_done_node[t] = node;
+                self.maps_done += 1;
+                self.stats.map_durations_s.push(dur);
+                if let Some(mo) = &self.map_out[t] {
+                    self.counters.merge(&mo.counters);
+                }
+                // Kill the slower twin attempts.
+                for i in 0..self.attempts.len() {
+                    if self.attempts[i].live && self.attempts[i].task == TaskRef::Map(t) {
+                        self.attempts[i].live = false;
+                        self.free_map_slots[self.attempts[i].node] += 1;
+                    }
+                }
+            }
+            TaskRef::Reduce(r) => {
+                self.free_reduce_slots[node] += 1;
+                if self.reduce_state[r] == TaskState::Done {
+                    return;
+                }
+                self.reduce_state[r] = TaskState::Done;
+                self.reduces_done += 1;
+                self.stats.reduce_durations_s.push(dur);
+            }
+        }
+        let _ = now;
+        self.assign_maps(q, alive);
+        self.assign_reduces(q, alive);
+    }
+
+    fn on_node_fail(&mut self, node: usize, now: SimTime, q: &mut EventQueue, alive: &[bool]) {
+        // Kill running attempts on the node; re-queue their tasks.
+        for i in 0..self.attempts.len() {
+            if self.attempts[i].live && self.attempts[i].node == node {
+                self.attempts[i].live = false;
+                self.stats.n_failed_attempts += 1;
+                match self.attempts[i].task {
+                    TaskRef::Map(t) => {
+                        if self.map_state[t] == TaskState::Running {
+                            self.map_state[t] = TaskState::Pending;
+                        }
+                    }
+                    TaskRef::Reduce(r) => {
+                        if self.reduce_state[r] == TaskState::Running {
+                            self.reduce_state[r] = TaskState::Pending;
+                        }
+                    }
+                }
+            }
+        }
+        self.free_map_slots[node] = 0;
+        self.free_reduce_slots[node] = 0;
+
+        // Hadoop semantics: completed map outputs live on the mapper's
+        // local disk until fetched; if reduces still need them, those maps
+        // re-run. (Map-only jobs commit straight to the DFS, so their
+        // completed outputs survive node loss.)
+        if self.spec.reducer.is_some() && self.reduces_done < self.reduce_state.len() {
+            for t in 0..self.splits.len() {
+                if self.map_state[t] == TaskState::Done && self.map_done_node[t] == node {
+                    self.map_state[t] = TaskState::Pending;
+                    self.map_done_node[t] = usize::MAX;
+                    self.maps_done -= 1;
+                    self.counters.inc("map.outputs.lost", 1);
+                }
+            }
+        }
+        let _ = now;
+        self.assign_maps(q, alive);
+        self.assign_reduces(q, alive);
+    }
+
+    fn on_node_recover(
+        &mut self,
+        node: usize,
+        cfg: &ClusterConfig,
+        _now: SimTime,
+        q: &mut EventQueue,
+        alive: &[bool],
+    ) {
+        self.free_map_slots[node] = cfg.nodes[node].map_slots();
+        self.free_reduce_slots[node] = cfg.nodes[node].reduce_slots();
+        self.assign_maps(q, alive);
+        self.assign_reduces(q, alive);
+    }
+
+    /// Speculative execution: when the pending queue is empty but slots
+    /// are free, duplicate the running map attempt with the latest
+    /// projected finish (if meaningfully behind the median).
+    fn maybe_speculate(&mut self, q: &mut EventQueue, alive: &[bool]) {
+        if self.maps_done == 0 {
+            return; // need a baseline
+        }
+        let mut med: Vec<f64> = self.stats.map_durations_s.clone();
+        med.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = med[med.len() / 2];
+        loop {
+            let Some(node) = self.next_free_slot(&self.free_map_slots, alive) else { return };
+            // Latest-finishing live, non-duplicated map attempt.
+            let mut worst: Option<(usize, f64)> = None;
+            for (i, a) in self.attempts.iter().enumerate() {
+                if !a.live || a.speculative {
+                    continue;
+                }
+                let TaskRef::Map(t) = a.task else { continue };
+                if self.map_state[t] != TaskState::Running {
+                    continue;
+                }
+                let dups = self
+                    .attempts
+                    .iter()
+                    .filter(|b| b.live && b.task == a.task)
+                    .count();
+                if dups > 1 {
+                    continue;
+                }
+                let finish = a.started.0 + a.duration;
+                if finish > q.now().0 + 1.3 * median
+                    && worst.map(|(_, f)| finish > f).unwrap_or(true)
+                {
+                    worst = Some((i, finish));
+                }
+            }
+            let Some((slow_idx, _)) = worst else { return };
+            let TaskRef::Map(t) = self.attempts[slow_idx].task else { unreachable!() };
+            self.free_map_slots[node] -= 1;
+            self.launch_map(t, node, true, q);
+        }
+    }
+}
+
+/// Iterate groups of equal keys in a sorted (key, value) slice, yielding
+/// `(key, values)` per group (the reduce iterable of the paper's Table 2).
+pub fn group_sorted(recs: &[(Key, Val)]) -> GroupIter<'_> {
+    GroupIter { recs, pos: 0 }
+}
+
+pub struct GroupIter<'a> {
+    recs: &'a [(Key, Val)],
+    pos: usize,
+}
+
+impl<'a> Iterator for GroupIter<'a> {
+    type Item = (&'a [u8], Vec<Val>);
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.recs.len() {
+            return None;
+        }
+        let start = self.pos;
+        let key = &self.recs[start].0;
+        let mut end = start + 1;
+        while end < self.recs.len() && &self.recs[end].0 == key {
+            end += 1;
+        }
+        self.pos = end;
+        Some((key.as_slice(), self.recs[start..end].iter().map(|(_, v)| v.clone()).collect()))
+    }
+}

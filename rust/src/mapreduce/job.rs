@@ -1,0 +1,127 @@
+//! Job specification: input sources, splits, and the knobs a driver sets.
+
+use super::api::{Mapper, PartitionFn, Reducer};
+use crate::geo::Point;
+use std::sync::Arc;
+
+/// One input split with locality hints (from DFS block replicas or the
+/// HBase region server).
+#[derive(Debug, Clone)]
+pub struct SplitMeta {
+    pub row_start: u64,
+    pub row_end: u64,
+    pub bytes: u64,
+    /// Nodes that hold the data locally (replicas / region server).
+    pub preferred: Vec<usize>,
+}
+
+/// Input data for a job.
+#[derive(Clone)]
+pub enum Input {
+    /// Columnar spatial points (HBase points table), pre-split.
+    Points { points: Arc<Vec<Point>>, splits: Vec<SplitMeta> },
+    /// Generic key/value records, split evenly into `n_splits`.
+    Kvs { data: Arc<Vec<(Vec<u8>, Vec<u8>)>>, n_splits: usize, bytes_per_record: u64 },
+}
+
+impl Input {
+    pub fn splits(&self) -> Vec<SplitMeta> {
+        match self {
+            Input::Points { splits, .. } => splits.clone(),
+            Input::Kvs { data, n_splits, bytes_per_record } => {
+                let n = (*n_splits).max(1);
+                let total = data.len() as u64;
+                (0..n as u64)
+                    .map(|i| SplitMeta {
+                        row_start: total * i / n as u64,
+                        row_end: total * (i + 1) / n as u64,
+                        bytes: (total / n as u64).max(1) * bytes_per_record,
+                        preferred: vec![],
+                    })
+                    .filter(|s| s.row_end > s.row_start)
+                    .collect()
+            }
+        }
+    }
+}
+
+/// A MapReduce job: the unit the JobTracker executes.
+pub struct JobSpec {
+    pub name: String,
+    pub input: Input,
+    pub mapper: Arc<dyn Mapper>,
+    pub combiner: Option<Arc<dyn Reducer>>,
+    /// `None` => map-only job (output = map emits, written to DFS).
+    pub reducer: Option<Arc<dyn Reducer>>,
+    pub n_reduces: usize,
+    pub partitioner: Arc<PartitionFn>,
+}
+
+impl JobSpec {
+    pub fn new(name: &str, input: Input, mapper: Arc<dyn Mapper>) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            input,
+            mapper,
+            combiner: None,
+            reducer: None,
+            n_reduces: 0,
+            partitioner: Arc::new(super::api::hash_partition),
+        }
+    }
+
+    pub fn with_reducer(mut self, r: Arc<dyn Reducer>, n_reduces: usize) -> JobSpec {
+        assert!(n_reduces > 0);
+        self.reducer = Some(r);
+        self.n_reduces = n_reduces;
+        self
+    }
+
+    pub fn with_combiner(mut self, c: Arc<dyn Reducer>) -> JobSpec {
+        self.combiner = Some(c);
+        self
+    }
+
+    pub fn with_partitioner(mut self, p: Arc<PartitionFn>) -> JobSpec {
+        self.partitioner = p;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::api::MapCtx;
+
+    struct Nop;
+    impl Mapper for Nop {}
+
+    #[test]
+    fn kv_input_splits_evenly() {
+        let data: Vec<(Vec<u8>, Vec<u8>)> =
+            (0..100u32).map(|i| (i.to_be_bytes().to_vec(), vec![0u8; 4])).collect();
+        let input = Input::Kvs { data: Arc::new(data), n_splits: 7, bytes_per_record: 8 };
+        let splits = input.splits();
+        assert_eq!(splits.len(), 7);
+        assert_eq!(splits[0].row_start, 0);
+        assert_eq!(splits.last().unwrap().row_end, 100);
+        let covered: u64 = splits.iter().map(|s| s.row_end - s.row_start).sum();
+        assert_eq!(covered, 100);
+    }
+
+    #[test]
+    fn empty_splits_dropped() {
+        let data: Vec<(Vec<u8>, Vec<u8>)> = (0..3u32).map(|i| (vec![i as u8], vec![])).collect();
+        let input = Input::Kvs { data: Arc::new(data), n_splits: 10, bytes_per_record: 1 };
+        let splits = input.splits();
+        assert!(splits.len() <= 3);
+        assert!(splits.iter().all(|s| s.row_end > s.row_start));
+    }
+
+    #[test]
+    #[should_panic]
+    fn mapper_without_points_entry_panics() {
+        let mut ctx = MapCtx::default();
+        Nop.map_points(&mut ctx, 0, &[]);
+    }
+}

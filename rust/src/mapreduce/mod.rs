@@ -1,0 +1,62 @@
+//! MapReduce engine (Hadoop-lite) over the simulated cluster.
+//!
+//! See [`engine::Cluster::run_job`]. Drivers build a [`job::JobSpec`] with
+//! an input from [`input_from_table`] (HBase regions → splits, the paper's
+//! input path) or [`input_from_dfs`] (HDFS blocks → splits) and iterate.
+
+pub mod api;
+pub mod engine;
+pub mod job;
+
+pub use api::{hash_partition, Counters, Key, MapCtx, Mapper, ReduceCtx, Reducer, Val};
+pub use engine::{group_sorted, Cluster, JobResult, JobStats};
+pub use job::{Input, JobSpec, SplitMeta};
+
+use crate::dfs::NameNode;
+use crate::hbase::HMaster;
+use std::sync::Arc;
+
+/// Build a job input from an HBase points table: one split per region,
+/// preferring the region server (the paper's map input path).
+pub fn input_from_table(hmaster: &HMaster, table: &str) -> Input {
+    let t = hmaster.table(table).unwrap_or_else(|| panic!("no such table: {table}"));
+    let splits = t
+        .regions
+        .iter()
+        .map(|r| SplitMeta {
+            row_start: r.row_start,
+            row_end: r.row_end,
+            bytes: r.bytes,
+            preferred: vec![r.server],
+        })
+        .collect();
+    Input::Points { points: t.points(), splits }
+}
+
+/// Build a job input from a DFS file of points: one split per block,
+/// preferring any replica holder.
+pub fn input_from_dfs(
+    namenode: &NameNode,
+    file: &str,
+    points: Arc<Vec<crate::geo::Point>>,
+) -> Input {
+    let meta = namenode.file(file).unwrap_or_else(|| panic!("no such file: {file}"));
+    assert_eq!(meta.total_rows, points.len() as u64, "file rows != point count");
+    let splits = meta
+        .blocks
+        .iter()
+        .map(|&b| {
+            let blk = namenode.block(b);
+            SplitMeta {
+                row_start: blk.row_start,
+                row_end: blk.row_end,
+                bytes: blk.bytes,
+                preferred: namenode.locations(b),
+            }
+        })
+        .collect();
+    Input::Points { points, splits }
+}
+
+#[cfg(test)]
+mod tests;

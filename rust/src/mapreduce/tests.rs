@@ -1,0 +1,283 @@
+//! Engine tests: semantics (grouping, combiners, partitions), scheduling
+//! (locality, waves, speculation), fault tolerance, and determinism.
+
+use super::api::*;
+use super::engine::*;
+use super::job::*;
+use super::{input_from_dfs, input_from_table};
+use crate::config::ClusterConfig;
+use crate::geo::Point;
+use crate::sim::CostModel;
+use crate::util::codec::*;
+use crate::util::proptest::for_all;
+use std::sync::Arc;
+
+/// Mapper: emit (quadrant-id, 1) per point — a spatial word-count.
+struct QuadrantMapper;
+impl Mapper for QuadrantMapper {
+    fn map_points(&self, ctx: &mut MapCtx, _row0: u64, pts: &[Point]) {
+        for p in pts {
+            let q = match (p.x >= 0.0, p.y >= 0.0) {
+                (true, true) => 0u32,
+                (false, true) => 1,
+                (false, false) => 2,
+                (true, false) => 3,
+            };
+            ctx.emit(encode_cluster_key(q), Enc::new().u64(1).done());
+        }
+        ctx.charge_dist_evals(pts.len() as u64);
+    }
+}
+
+/// Reducer: sum the counts.
+struct SumReducer;
+impl Reducer for SumReducer {
+    fn reduce(&self, ctx: &mut ReduceCtx, key: &[u8], values: &[Val]) {
+        let total: u64 = values.iter().map(|v| Dec::new(v).u64()).sum();
+        ctx.emit(key.to_vec(), Enc::new().u64(total).done());
+    }
+}
+
+fn grid_points(n: usize) -> Arc<Vec<Point>> {
+    // n points per quadrant, deterministic.
+    let mut pts = Vec::with_capacity(4 * n);
+    for i in 0..n {
+        let o = 1.0 + i as f32;
+        pts.push(Point::new(o, o));
+        pts.push(Point::new(-o, o));
+        pts.push(Point::new(-o, -o));
+        pts.push(Point::new(o, -o));
+    }
+    Arc::new(pts)
+}
+
+fn kv_input(points: Arc<Vec<Point>>, n_splits: usize) -> Input {
+    let splits = {
+        let total = points.len() as u64;
+        (0..n_splits as u64)
+            .map(|i| SplitMeta {
+                row_start: total * i / n_splits as u64,
+                row_end: total * (i + 1) / n_splits as u64,
+                bytes: 4 << 20,
+                preferred: vec![],
+            })
+            .collect()
+    };
+    Input::Points { points, splits }
+}
+
+fn quadrant_job(points: Arc<Vec<Point>>, n_splits: usize, n_reduces: usize) -> JobSpec {
+    JobSpec::new("quadrant-count", kv_input(points, n_splits), Arc::new(QuadrantMapper))
+        .with_reducer(Arc::new(SumReducer), n_reduces)
+}
+
+fn decode_counts(output: &[(Key, Val)]) -> Vec<(u32, u64)> {
+    let mut v: Vec<(u32, u64)> =
+        output.iter().map(|(k, val)| (decode_cluster_key(k), Dec::new(val).u64())).collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn wordcount_semantics() {
+    let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 1);
+    let r = cluster.run_job(&quadrant_job(grid_points(100), 5, 2));
+    assert_eq!(decode_counts(&r.output), vec![(0, 100), (1, 100), (2, 100), (3, 100)]);
+    assert!(r.duration_s > 0.0);
+    assert_eq!(r.counters.get("job.maps"), 5);
+    assert_eq!(r.counters.get("reduce.output.records"), 4);
+}
+
+#[test]
+fn combiner_reduces_shuffle_but_not_result() {
+    let pts = grid_points(500);
+    let mut c1 = Cluster::new(ClusterConfig::test_cluster(4), 1);
+    let plain = c1.run_job(&quadrant_job(pts.clone(), 5, 2));
+    let mut c2 = Cluster::new(ClusterConfig::test_cluster(4), 1);
+    let combined = c2.run_job(&quadrant_job(pts, 5, 2).with_combiner(Arc::new(SumReducer)));
+    assert_eq!(decode_counts(&plain.output), decode_counts(&combined.output));
+    assert!(
+        combined.stats.shuffle_bytes < plain.stats.shuffle_bytes / 10,
+        "combiner should collapse shuffle: {} vs {}",
+        combined.stats.shuffle_bytes,
+        plain.stats.shuffle_bytes
+    );
+    // And cut the simulated time (smaller shuffle + smaller reduce input).
+    assert!(combined.duration_s <= plain.duration_s);
+}
+
+#[test]
+fn map_only_job() {
+    let mut cluster = Cluster::new(ClusterConfig::test_cluster(2), 1);
+    let job = JobSpec::new("map-only", kv_input(grid_points(10), 3), Arc::new(QuadrantMapper));
+    let r = cluster.run_job(&job);
+    assert_eq!(r.output.len(), 40);
+    assert_eq!(r.counters.get("job.reduces"), 0);
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let run = || {
+        let mut cluster = Cluster::new(ClusterConfig::paper_cluster(), 7);
+        let r = cluster.run_job(&quadrant_job(grid_points(200), 9, 3));
+        (r.duration_s, decode_counts(&r.output), r.stats.n_attempts)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, b.0, "simulated duration must be reproducible");
+    assert_eq!(a.1, b.1);
+    assert_eq!(a.2, b.2);
+}
+
+#[test]
+fn more_nodes_not_slower() {
+    let pts = grid_points(5000);
+    let dur = |n: usize| {
+        let cfg = ClusterConfig::paper_cluster().cluster_subset(n);
+        let mut cluster = Cluster::new(cfg, 7);
+        cluster.run_job(&quadrant_job(pts.clone(), 24, 4)).duration_s
+    };
+    let d4 = dur(4);
+    let d7 = dur(7);
+    assert!(d7 <= d4, "7 nodes {d7} should not be slower than 4 nodes {d4}");
+}
+
+#[test]
+fn locality_preferred_when_available() {
+    // All splits prefer node 2; with enough slots everything should run
+    // there and remote reads stay zero (local reads only).
+    let cfg = ClusterConfig::test_cluster(4);
+    let mut cluster = Cluster::new(cfg, 3);
+    let points = grid_points(100);
+    let total = points.len() as u64;
+    let splits: Vec<SplitMeta> = (0..2)
+        .map(|i| SplitMeta {
+            row_start: total * i / 2,
+            row_end: total * (i + 1) / 2,
+            bytes: 1 << 20,
+            preferred: vec![2],
+        })
+        .collect();
+    let job = JobSpec::new("local", Input::Points { points, splits }, Arc::new(QuadrantMapper))
+        .with_reducer(Arc::new(SumReducer), 1);
+    let r = cluster.run_job(&job);
+    assert_eq!(decode_counts(&r.output).iter().map(|(_, c)| c).sum::<u64>(), 400);
+}
+
+#[test]
+fn node_failure_recovers_and_answers_stay_correct() {
+    let cfg = ClusterConfig::test_cluster(4);
+    let mut cluster = Cluster::new(cfg, 5);
+    // Slow the job down so the failure lands mid-flight.
+    cluster.cost = CostModel { task_overhead_s: 5.0, ..CostModel::default() };
+    cluster.plan_failure(8.0, 1);
+    let r = cluster.run_job(&quadrant_job(grid_points(2000), 12, 3));
+    assert_eq!(decode_counts(&r.output), vec![(0, 2000), (1, 2000), (2, 2000), (3, 2000)]);
+    assert!(cluster.n_alive() == 3);
+    assert!(r.stats.n_failed_attempts > 0, "failure should have killed attempts");
+}
+
+#[test]
+fn failure_is_slower_than_no_failure() {
+    let pts = grid_points(2000);
+    let mk = || {
+        let mut c = Cluster::new(ClusterConfig::test_cluster(4), 5);
+        c.cost = CostModel { task_overhead_s: 5.0, ..CostModel::default() };
+        c
+    };
+    let mut healthy = mk();
+    let d_ok = healthy.run_job(&quadrant_job(pts.clone(), 12, 3)).duration_s;
+    let mut faulty = mk();
+    faulty.plan_failure(8.0, 1);
+    let d_fail = faulty.run_job(&quadrant_job(pts, 12, 3)).duration_s;
+    assert!(d_fail > d_ok, "failure run {d_fail} should exceed healthy {d_ok}");
+}
+
+#[test]
+fn speculation_counters_and_correctness_on_hetero_cluster() {
+    // Heterogeneous paper cluster: slow E7500 nodes straggle; speculation
+    // may duplicate their tasks. Result must be identical either way.
+    let pts = grid_points(3000);
+    let job = || quadrant_job(pts.clone(), 14, 3);
+    let mut with_spec = Cluster::new(ClusterConfig::paper_cluster(), 9);
+    with_spec.speculation = true;
+    let a = with_spec.run_job(&job());
+    let mut without = Cluster::new(ClusterConfig::paper_cluster(), 9);
+    without.speculation = false;
+    let b = without.run_job(&job());
+    assert_eq!(decode_counts(&a.output), decode_counts(&b.output));
+    assert!(a.duration_s <= b.duration_s * 1.001, "speculation should not hurt");
+}
+
+#[test]
+fn dfs_input_splits_carry_locality() {
+    let cfg = ClusterConfig::test_cluster(4);
+    let mut cluster = Cluster::new(cfg, 11);
+    let points = grid_points(1000); // 4000 points (4 per quadrant step)
+    let bytes = points.len() as u64 * 25;
+    cluster.namenode.create_file("pts", points.len() as u64, bytes);
+    let input = input_from_dfs(&cluster.namenode, "pts", points);
+    for s in input.splits() {
+        assert!(!s.preferred.is_empty(), "every block has replicas");
+    }
+    let job = JobSpec::new("dfs", input, Arc::new(QuadrantMapper))
+        .with_reducer(Arc::new(SumReducer), 2);
+    let r = cluster.run_job(&job);
+    assert_eq!(decode_counts(&r.output).iter().map(|(_, c)| c).sum::<u64>(), 4000);
+}
+
+#[test]
+fn hbase_input_one_split_per_region() {
+    let cfg = ClusterConfig::test_cluster(3);
+    let mut cluster = Cluster::new(cfg, 13);
+    let points = grid_points(4000); // 16k points
+    cluster.hmaster.create_points_table("pts", points, 25, 100_000);
+    let input = input_from_table(&cluster.hmaster, "pts");
+    let n_regions = cluster.hmaster.table("pts").unwrap().regions.len();
+    assert_eq!(input.splits().len(), n_regions);
+    let job = JobSpec::new("hbase", input, Arc::new(QuadrantMapper))
+        .with_reducer(Arc::new(SumReducer), 2);
+    let r = cluster.run_job(&job);
+    assert_eq!(decode_counts(&r.output).iter().map(|(_, c)| c).sum::<u64>(), 16_000);
+}
+
+#[test]
+fn clock_advances_across_jobs() {
+    let mut cluster = Cluster::new(ClusterConfig::test_cluster(2), 1);
+    let t0 = cluster.now().0;
+    cluster.run_job(&quadrant_job(grid_points(50), 2, 1));
+    let t1 = cluster.now().0;
+    cluster.run_job(&quadrant_job(grid_points(50), 2, 1));
+    let t2 = cluster.now().0;
+    assert!(t1 > t0 && t2 > t1);
+    assert_eq!(cluster.history.len(), 2);
+}
+
+#[test]
+fn group_sorted_groups() {
+    let recs: Vec<(Key, Val)> = vec![
+        (b"a".to_vec(), vec![1]),
+        (b"a".to_vec(), vec![2]),
+        (b"b".to_vec(), vec![3]),
+    ];
+    let groups: Vec<(Vec<u8>, usize)> =
+        group_sorted(&recs).map(|(k, vs)| (k.to_vec(), vs.len())).collect();
+    assert_eq!(groups, vec![(b"a".to_vec(), 2), (b"b".to_vec(), 1)]);
+    assert_eq!(group_sorted(&[]).count(), 0);
+}
+
+#[test]
+fn property_counts_preserved_any_topology() {
+    for_all(10, 0x31415, |rng| {
+        let n_nodes = 2 + rng.below(6);
+        let n_splits = 1 + rng.below(20);
+        let n_reduces = 1 + rng.below(4);
+        let n = 50 + rng.below(500);
+        let mut cluster = Cluster::new(ClusterConfig::test_cluster(n_nodes), rng.next_u64());
+        cluster.speculation = rng.below(2) == 0;
+        let r = cluster.run_job(&quadrant_job(grid_points(n), n_splits, n_reduces));
+        let counts = decode_counts(&r.output);
+        assert_eq!(counts.len(), 4);
+        assert!(counts.iter().all(|&(_, c)| c == n as u64));
+    });
+}

@@ -1,0 +1,186 @@
+//! Report emitters: the paper's tables/figures as aligned text + CSV.
+
+use crate::driver::ExperimentResult;
+use std::fmt::Write as _;
+
+/// Table 6: execution time (ms) per (cluster size, dataset).
+pub fn table6(results: &[ExperimentResult]) -> String {
+    let mut datasets: Vec<usize> = results.iter().map(|r| r.n_points).collect();
+    datasets.sort_unstable();
+    datasets.dedup();
+    let mut nodes: Vec<usize> = results.iter().map(|r| r.n_nodes).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+
+    let mut s = String::new();
+    write!(s, "{:<10}", "Cluster").unwrap();
+    for (i, _) in datasets.iter().enumerate() {
+        write!(s, "{:>14}", format!("Dataset {}", i + 1)).unwrap();
+    }
+    s.push('\n');
+    for &n in &nodes {
+        write!(s, "{:<10}", format!("{n} Nodes")).unwrap();
+        for &d in &datasets {
+            match results.iter().find(|r| r.n_nodes == n && r.n_points == d) {
+                Some(r) => write!(s, "{:>14}", format!("{}ms", r.time_ms)).unwrap(),
+                None => write!(s, "{:>14}", "-").unwrap(),
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Fig. 4: speedup per dataset relative to the smallest cluster, with the
+/// linear-speedup reference scaled the same way.
+pub fn fig4_speedup(results: &[ExperimentResult]) -> String {
+    let mut datasets: Vec<usize> = results.iter().map(|r| r.n_points).collect();
+    datasets.sort_unstable();
+    datasets.dedup();
+    let mut nodes: Vec<usize> = results.iter().map(|r| r.n_nodes).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    let base_nodes = *nodes.first().expect("no results");
+
+    let mut s = String::new();
+    write!(s, "{:<10}", "Cluster").unwrap();
+    for (i, _) in datasets.iter().enumerate() {
+        write!(s, "{:>12}", format!("Dataset {}", i + 1)).unwrap();
+    }
+    write!(s, "{:>12}", "linear").unwrap();
+    s.push('\n');
+    for &n in &nodes {
+        write!(s, "{:<10}", format!("{n} Nodes")).unwrap();
+        for &d in &datasets {
+            let base = results.iter().find(|r| r.n_nodes == base_nodes && r.n_points == d);
+            let cur = results.iter().find(|r| r.n_nodes == n && r.n_points == d);
+            match (base, cur) {
+                (Some(b), Some(c)) if c.time_ms > 0 => {
+                    write!(s, "{:>12}", format!("{:.2}x", b.time_ms as f64 / c.time_ms as f64))
+                        .unwrap()
+                }
+                _ => write!(s, "{:>12}", "-").unwrap(),
+            }
+        }
+        write!(s, "{:>12}", format!("{:.2}x", n as f64 / base_nodes as f64)).unwrap();
+        s.push('\n');
+    }
+    s
+}
+
+/// Fig. 5: comparative execution time per algorithm across dataset sizes.
+pub fn fig5_comparative(results: &[ExperimentResult]) -> String {
+    let mut datasets: Vec<usize> = results.iter().map(|r| r.n_points).collect();
+    datasets.sort_unstable();
+    datasets.dedup();
+    let mut algos: Vec<&str> = results.iter().map(|r| r.algorithm).collect();
+    algos.dedup();
+    let mut uniq: Vec<&str> = Vec::new();
+    for a in algos {
+        if !uniq.contains(&a) {
+            uniq.push(a);
+        }
+    }
+
+    let mut s = String::new();
+    write!(s, "{:<18}", "Algorithm").unwrap();
+    for (i, _) in datasets.iter().enumerate() {
+        write!(s, "{:>14}", format!("Dataset {}", i + 1)).unwrap();
+    }
+    s.push('\n');
+    for a in uniq {
+        write!(s, "{:<18}", a).unwrap();
+        for &d in &datasets {
+            match results.iter().find(|r| r.algorithm == a && r.n_points == d) {
+                Some(r) => write!(s, "{:>14}", format!("{}ms", r.time_ms)).unwrap(),
+                None => write!(s, "{:>14}", "-").unwrap(),
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// CSV row dump (one line per result) for external plotting.
+pub fn to_csv(results: &[ExperimentResult]) -> String {
+    let mut s = String::from(
+        "algorithm,n_nodes,n_points,dataset_mb,time_ms,iterations,cost,dist_evals,ari,wall_s\n",
+    );
+    for r in results {
+        writeln!(
+            s,
+            "{},{},{},{:.1},{},{},{:.3e},{},{},{:.3}",
+            r.algorithm,
+            r.n_nodes,
+            r.n_points,
+            r.dataset_mb,
+            r.time_ms,
+            r.iterations,
+            r.cost,
+            r.dist_evals,
+            r.ari.map(|a| format!("{a:.4}")).unwrap_or_default(),
+            r.wall_s
+        )
+        .unwrap();
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(algorithm: &'static str, n_nodes: usize, n_points: usize, time_ms: u64) -> ExperimentResult {
+        ExperimentResult {
+            algorithm,
+            n_nodes,
+            n_points,
+            dataset_mb: 10.0,
+            time_ms,
+            iterations: 5,
+            cost: 1.0,
+            dist_evals: 100,
+            ari: Some(0.95),
+            wall_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn table6_shape() {
+        let rs = vec![
+            fake("a", 4, 1000, 500),
+            fake("a", 7, 1000, 300),
+            fake("a", 4, 2000, 900),
+            fake("a", 7, 2000, 600),
+        ];
+        let t = table6(&rs);
+        assert!(t.contains("4 Nodes"));
+        assert!(t.contains("7 Nodes"));
+        assert!(t.contains("500ms"));
+        assert!(t.contains("Dataset 2"));
+    }
+
+    #[test]
+    fn speedup_relative_to_smallest() {
+        let rs = vec![fake("a", 4, 1000, 600), fake("a", 8, 1000, 300)];
+        let s = fig4_speedup(&rs);
+        assert!(s.contains("2.00x"), "{s}");
+        assert!(s.contains("1.00x"));
+    }
+
+    #[test]
+    fn fig5_lists_algorithms() {
+        let rs = vec![fake("x", 7, 1000, 100), fake("y", 7, 1000, 200)];
+        let s = fig5_comparative(&rs);
+        assert!(s.contains('x') && s.contains('y'));
+    }
+
+    #[test]
+    fn csv_parses_back() {
+        let rs = vec![fake("a", 4, 1000, 500)];
+        let csv = to_csv(&rs);
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[1].split(',').count(), 10);
+    }
+}

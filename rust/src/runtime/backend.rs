@@ -1,0 +1,211 @@
+//! Compute backend abstraction + the pure-Rust native implementation.
+//!
+//! The hot-path numeric ops (block assignment, block pairwise cost) have
+//! two interchangeable implementations:
+//! - [`super::pjrt::PjrtBackend`] — the production path: AOT HLO
+//!   artifacts (JAX/Pallas) executed via the PJRT CPU client.
+//! - [`NativeBackend`] — a pure-Rust oracle used for cross-checking the
+//!   artifacts at startup, for tests without artifacts, and as the
+//!   baseline in the kernel benchmark.
+
+use anyhow::Result;
+
+/// Result of one assign block call (matches `ref.assign` in python).
+#[derive(Debug, Clone)]
+pub struct AssignOut {
+    pub labels: Vec<i32>,
+    pub mindists: Vec<f32>,
+    pub cluster_cost: Vec<f32>,
+    pub cluster_count: Vec<f32>,
+}
+
+/// Fixed-shape block compute. Inputs are flat row-major f32 slices:
+/// points `(B,2)`, mask `(B,)`, medoids `(K,2)` padded with `pad_coord`.
+pub trait ComputeBackend: Send + Sync {
+    /// Block size B (points per call).
+    fn block(&self) -> usize;
+    /// Padded medoid capacity K.
+    fn kpad(&self) -> usize;
+    /// Padding coordinate for unused medoid slots.
+    fn pad_coord(&self) -> f32;
+    fn name(&self) -> &str;
+
+    /// Nearest-medoid assignment for one block.
+    fn assign_block(&self, points: &[f32], mask: &[f32], medoids: &[f32]) -> Result<AssignOut>;
+
+    /// Partial PAM-update costs: for each candidate i,
+    /// `sum_j mask[j] * ||c_i - p_j||^2` over the member block.
+    fn pairwise_block(&self, cand: &[f32], members: &[f32], mask: &[f32]) -> Result<Vec<f32>>;
+
+    /// Like [`Self::pairwise_block`] but only the first `n_cand`
+    /// candidates are meaningful; backends that can skip the padded tail
+    /// (native) override this (§Perf: the reducer typically fills an
+    /// eighth of the candidate block). The PJRT executable has a fixed
+    /// shape, so its default just runs the full block.
+    fn pairwise_block_partial(
+        &self,
+        cand: &[f32],
+        members: &[f32],
+        mask: &[f32],
+        n_cand: usize,
+    ) -> Result<Vec<f32>> {
+        let _ = n_cand;
+        self.pairwise_block(cand, members, mask)
+    }
+}
+
+/// Pure-Rust reference backend (no artifacts needed).
+pub struct NativeBackend {
+    pub block_size: usize,
+    pub kpad_size: usize,
+}
+
+impl NativeBackend {
+    pub fn new(block: usize, kpad: usize) -> NativeBackend {
+        NativeBackend { block_size: block, kpad_size: kpad }
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn block(&self) -> usize {
+        self.block_size
+    }
+    fn kpad(&self) -> usize {
+        self.kpad_size
+    }
+    fn pad_coord(&self) -> f32 {
+        1e9
+    }
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn assign_block(&self, points: &[f32], mask: &[f32], medoids: &[f32]) -> Result<AssignOut> {
+        let b = self.block_size;
+        let k = self.kpad_size;
+        assert_eq!(points.len(), 2 * b);
+        assert_eq!(mask.len(), b);
+        assert_eq!(medoids.len(), 2 * k);
+        let mut labels = vec![0i32; b];
+        let mut mindists = vec![0f32; b];
+        let mut cost = vec![0f32; k];
+        let mut count = vec![0f32; k];
+        // Padded medoid slots (trailing PAD_COORD rows) can never win the
+        // argmin — skip them instead of evaluating 64 slots for k=9.
+        // (§Perf: 7x fewer distance evals on the assignment hot path.)
+        let pad = self.pad_coord();
+        let k_eff = (0..k)
+            .rposition(|j| medoids[2 * j] != pad || medoids[2 * j + 1] != pad)
+            .map(|j| j + 1)
+            .unwrap_or(k);
+        // Same expanded form as the Pallas kernel so rounding matches:
+        // ||p-m||^2 = ||p||^2 - 2 p.m + ||m||^2.
+        let m2: Vec<f32> = (0..k_eff)
+            .map(|j| medoids[2 * j] * medoids[2 * j] + medoids[2 * j + 1] * medoids[2 * j + 1])
+            .collect();
+        for i in 0..b {
+            let (px, py) = (points[2 * i], points[2 * i + 1]);
+            let p2 = px * px + py * py;
+            let mut best = f32::INFINITY;
+            let mut best_j = 0usize;
+            for j in 0..k_eff {
+                let cross = px * medoids[2 * j] + py * medoids[2 * j + 1];
+                let d = (p2 - 2.0 * cross + m2[j]).max(0.0);
+                if d < best {
+                    best = d;
+                    best_j = j;
+                }
+            }
+            labels[i] = best_j as i32;
+            let md = best * mask[i];
+            mindists[i] = md;
+            cost[best_j] += md;
+            count[best_j] += mask[i];
+        }
+        Ok(AssignOut { labels, mindists, cluster_cost: cost, cluster_count: count })
+    }
+
+    fn pairwise_block(&self, cand: &[f32], members: &[f32], mask: &[f32]) -> Result<Vec<f32>> {
+        self.pairwise_block_partial(cand, members, mask, self.block_size)
+    }
+
+    fn pairwise_block_partial(
+        &self,
+        cand: &[f32],
+        members: &[f32],
+        mask: &[f32],
+        n_cand: usize,
+    ) -> Result<Vec<f32>> {
+        let b = self.block_size;
+        assert_eq!(cand.len(), 2 * b);
+        assert_eq!(members.len(), 2 * b);
+        assert_eq!(mask.len(), b);
+        let mut out = vec![0f32; b];
+        for i in 0..n_cand.min(b) {
+            let (cx, cy) = (cand[2 * i], cand[2 * i + 1]);
+            let c2 = cx * cx + cy * cy;
+            let mut acc = 0f32;
+            for j in 0..b {
+                if mask[j] == 0.0 {
+                    continue;
+                }
+                let (px, py) = (members[2 * j], members[2 * j + 1]);
+                let p2 = px * px + py * py;
+                let cross = cx * px + cy * py;
+                acc += (c2 - 2.0 * cross + p2).max(0.0);
+            }
+            out[i] = acc;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_setup() -> (NativeBackend, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let be = NativeBackend::new(4, 3);
+        // 4 points: two near (0,0), two near (10,10); medoids at both, one pad.
+        let points = vec![0.1, 0.0, 0.0, 0.2, 10.0, 9.9, 10.1, 10.0];
+        let mask = vec![1.0, 1.0, 1.0, 1.0];
+        let medoids = vec![0.0, 0.0, 10.0, 10.0, 1e9, 1e9];
+        (be, points, mask, medoids)
+    }
+
+    #[test]
+    fn assign_matches_intuition() {
+        let (be, points, mask, medoids) = simple_setup();
+        let out = be.assign_block(&points, &mask, &medoids).unwrap();
+        assert_eq!(out.labels, vec![0, 0, 1, 1]);
+        assert_eq!(out.cluster_count, vec![2.0, 2.0, 0.0]);
+        assert!(out.cluster_cost[2] == 0.0);
+        assert!((out.mindists[0] - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn masked_points_do_not_count() {
+        let (be, points, _, medoids) = simple_setup();
+        let mask = vec![1.0, 0.0, 1.0, 0.0];
+        let out = be.assign_block(&points, &mask, &medoids).unwrap();
+        assert_eq!(out.cluster_count, vec![1.0, 1.0, 0.0]);
+        assert_eq!(out.mindists[1], 0.0);
+    }
+
+    #[test]
+    fn pairwise_cost_sums() {
+        let be = NativeBackend::new(2, 2);
+        let cand = vec![0.0, 0.0, 1.0, 0.0];
+        let members = vec![0.0, 0.0, 2.0, 0.0];
+        let mask = vec![1.0, 1.0];
+        let out = be.pairwise_block(&cand, &members, &mask).unwrap();
+        assert_eq!(out, vec![4.0, 2.0]); // c0: 0+4 ; c1: 1+1
+    }
+
+    #[test]
+    fn pad_medoids_never_selected() {
+        let (be, points, mask, medoids) = simple_setup();
+        let out = be.assign_block(&points, &mask, &medoids).unwrap();
+        assert!(out.labels.iter().all(|&l| l < 2));
+    }
+}

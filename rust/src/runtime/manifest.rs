@@ -1,0 +1,164 @@
+//! AOT artifact manifest: what `python/compile/aot.py` produced.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum UnitKind {
+    Assign,
+    Pairwise,
+    Seed,
+}
+
+impl UnitKind {
+    fn parse(s: &str) -> Result<UnitKind> {
+        Ok(match s {
+            "assign" => UnitKind::Assign,
+            "pairwise" => UnitKind::Pairwise,
+            "seed" => UnitKind::Seed,
+            other => bail!("unknown AOT unit kind {other:?}"),
+        })
+    }
+}
+
+/// One compiled executable variant.
+#[derive(Debug, Clone)]
+pub struct UnitMeta {
+    pub name: String,
+    pub kind: UnitKind,
+    /// Points-block size B.
+    pub block: usize,
+    /// Padded medoid capacity K (assign/seed only; pairwise keeps the
+    /// lowering-time value but does not use it).
+    pub kpad: usize,
+    pub path: PathBuf,
+    /// Sentinel coordinate for padded medoid slots.
+    pub pad_coord: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub units: Vec<UnitMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        let fmt = j.get("format").and_then(|f| f.as_u64()).unwrap_or(0);
+        if fmt != 1 {
+            bail!("unsupported manifest format {fmt}");
+        }
+        let mut units = Vec::new();
+        for u in j.get("units").and_then(|u| u.as_arr()).context("manifest.units missing")? {
+            let get_str =
+                |k: &str| u.get(k).and_then(|v| v.as_str()).with_context(|| format!("unit.{k}"));
+            let get_num =
+                |k: &str| u.get(k).and_then(|v| v.as_f64()).with_context(|| format!("unit.{k}"));
+            let file = get_str("file")?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact listed in manifest but missing on disk: {path:?}");
+            }
+            units.push(UnitMeta {
+                name: get_str("name")?.to_string(),
+                kind: UnitKind::parse(get_str("kind")?)?,
+                block: get_num("block")? as usize,
+                kpad: get_num("kpad")? as usize,
+                path,
+                pad_coord: get_num("pad_coord")? as f32,
+            });
+        }
+        if units.is_empty() {
+            bail!("manifest has no units");
+        }
+        Ok(Manifest { units, dir: dir.to_path_buf() })
+    }
+
+    /// Best unit of `kind` whose block is >= `min_block`: smallest such
+    /// block, and among equal blocks the smallest medoid capacity that
+    /// still holds `min_kpad` slots (padded slots are wasted work on the
+    /// fixed-shape executable — §Perf). Falls back to the largest block
+    /// available if none fits.
+    pub fn pick(&self, kind: UnitKind, min_block: usize) -> Option<&UnitMeta> {
+        self.pick_k(kind, min_block, 0)
+    }
+
+    pub fn pick_k(&self, kind: UnitKind, min_block: usize, min_kpad: usize) -> Option<&UnitMeta> {
+        let mut of_kind: Vec<&UnitMeta> = self
+            .units
+            .iter()
+            .filter(|u| u.kind == kind && u.kpad >= min_kpad)
+            .collect();
+        if of_kind.is_empty() {
+            return None;
+        }
+        of_kind.sort_by_key(|u| (u.block, u.kpad));
+        of_kind.iter().find(|u| u.block >= min_block).copied().or(of_kind.last().copied())
+    }
+}
+
+/// Default artifact dir: `$KMR_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("KMR_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    // Relative to the crate root (works for tests/benches/examples).
+    let here = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    here.join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_repo_manifest_if_built() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.units.iter().any(|u| u.kind == UnitKind::Assign && u.block == 2048));
+        assert!(m.units.iter().all(|u| u.pad_coord == 1e9));
+    }
+
+    #[test]
+    fn pick_prefers_smallest_sufficient() {
+        let mk = |name: &str, kind: UnitKind, block: usize| UnitMeta {
+            name: name.into(),
+            kind,
+            block,
+            kpad: 16,
+            path: PathBuf::new(),
+            pad_coord: 1e9,
+        };
+        let m = Manifest {
+            units: vec![
+                mk("a", UnitKind::Assign, 2048),
+                mk("b", UnitKind::Assign, 256),
+                mk("c", UnitKind::Pairwise, 256),
+            ],
+            dir: PathBuf::new(),
+        };
+        assert_eq!(m.pick(UnitKind::Assign, 100).unwrap().block, 256);
+        assert_eq!(m.pick(UnitKind::Assign, 1000).unwrap().block, 2048);
+        assert_eq!(m.pick(UnitKind::Assign, 10_000).unwrap().block, 2048);
+        assert!(m.pick(UnitKind::Seed, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let dir = std::env::temp_dir().join("kmr_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format":99,"units":[]}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"), r#"{"format":1,"units":[]}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,61 @@
+//! Runtime: AOT artifact loading + fixed-shape block execution.
+//!
+//! The production path is [`pjrt::PjrtBackend`] (HLO text → PJRT compile →
+//! execute); [`backend::NativeBackend`] is the pure-Rust oracle and
+//! ablation baseline. [`ops`] adapts arbitrary-size point sets onto the
+//! fixed block shapes. [`load_default_backend`] picks PJRT when artifacts
+//! exist and falls back to native (with a warning) otherwise.
+
+pub mod backend;
+pub mod manifest;
+pub mod ops;
+pub mod pjrt;
+
+pub use backend::{AssignOut, ComputeBackend, NativeBackend};
+pub use manifest::{default_artifacts_dir, Manifest, UnitKind};
+pub use ops::{assign_points, pairwise_costs, AssignResult};
+pub use pjrt::PjrtBackend;
+
+use std::sync::Arc;
+
+/// Backend selection for drivers/benches.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BackendKind {
+    Pjrt,
+    Native,
+    /// PJRT if artifacts are present, else native.
+    Auto,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "pjrt" => Some(BackendKind::Pjrt),
+            "native" => Some(BackendKind::Native),
+            "auto" => Some(BackendKind::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Load a compute backend. `min_block` picks the artifact variant (use
+/// 2048 for production workloads, 256 for tests/examples).
+pub fn load_backend(kind: BackendKind, min_block: usize) -> anyhow::Result<Arc<dyn ComputeBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Arc::new(NativeBackend::new(min_block, 64.min(min_block)))),
+        BackendKind::Pjrt => {
+            let m = Manifest::load(&default_artifacts_dir())?;
+            Ok(Arc::new(PjrtBackend::load(&m, min_block)?))
+        }
+        BackendKind::Auto => {
+            let dir = default_artifacts_dir();
+            if dir.join("manifest.json").exists() {
+                let m = Manifest::load(&dir)?;
+                Ok(Arc::new(PjrtBackend::load(&m, min_block)?))
+            } else {
+                log::warn!("artifacts not built; falling back to native backend");
+                Ok(Arc::new(NativeBackend::new(min_block, 64.min(min_block))))
+            }
+        }
+    }
+}

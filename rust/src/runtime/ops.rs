@@ -1,0 +1,232 @@
+//! Backend-agnostic high-level ops: padding/chunking of arbitrary-size
+//! point sets onto the fixed-shape block executables.
+
+use super::backend::{AssignOut, ComputeBackend};
+use crate::geo::Point;
+use anyhow::Result;
+
+/// Full assignment of `points` to `medoids` (k <= kpad-1).
+///
+/// Returns per-point labels and squared distances plus per-cluster
+/// (cost, count) aggregates. Exactly what the paper's mapper + combiner
+/// produce for one split.
+pub struct AssignResult {
+    pub labels: Vec<u32>,
+    pub mindists: Vec<f32>,
+    pub cluster_cost: Vec<f64>,
+    pub cluster_count: Vec<u64>,
+}
+
+pub fn assign_points(
+    be: &dyn ComputeBackend,
+    points: &[Point],
+    medoids: &[Point],
+) -> Result<AssignResult> {
+    let b = be.block();
+    let k = be.kpad();
+    assert!(
+        medoids.len() <= k,
+        "k={} exceeds backend capacity {k}",
+        medoids.len()
+    );
+    assert!(!medoids.is_empty());
+    // Pad the medoid slab once.
+    let mut med = vec![be.pad_coord(); 2 * k];
+    for (j, m) in medoids.iter().enumerate() {
+        med[2 * j] = m.x;
+        med[2 * j + 1] = m.y;
+    }
+
+    let n = points.len();
+    let mut labels = Vec::with_capacity(n);
+    let mut mindists = Vec::with_capacity(n);
+    let mut cost = vec![0f64; medoids.len()];
+    let mut count = vec![0u64; medoids.len()];
+
+    let mut pbuf = vec![0f32; 2 * b];
+    let mut mask = vec![0f32; b];
+    let mut start = 0usize;
+    while start < n {
+        let len = (n - start).min(b);
+        for i in 0..len {
+            pbuf[2 * i] = points[start + i].x;
+            pbuf[2 * i + 1] = points[start + i].y;
+            mask[i] = 1.0;
+        }
+        for i in len..b {
+            pbuf[2 * i] = 0.0;
+            pbuf[2 * i + 1] = 0.0;
+            mask[i] = 0.0;
+        }
+        let out: AssignOut = be.assign_block(&pbuf, &mask, &med)?;
+        for i in 0..len {
+            labels.push(out.labels[i] as u32);
+            mindists.push(out.mindists[i]);
+        }
+        for j in 0..medoids.len() {
+            cost[j] += out.cluster_cost[j] as f64;
+            count[j] += out.cluster_count[j] as u64;
+        }
+        start += len;
+    }
+    Ok(AssignResult { labels, mindists, cluster_cost: cost, cluster_count: count })
+}
+
+/// Exact PAM-update candidate costs: for every candidate, the summed
+/// squared distance to all members, composed over fixed-size blocks.
+pub fn pairwise_costs(
+    be: &dyn ComputeBackend,
+    candidates: &[Point],
+    members: &[Point],
+) -> Result<Vec<f64>> {
+    let b = be.block();
+    let nc = candidates.len();
+    let mut out = vec![0f64; nc];
+
+    let mut cbuf = vec![0f32; 2 * b];
+    let mut mbuf = vec![0f32; 2 * b];
+    let mut mmask = vec![0f32; b];
+
+    let mut cs = 0usize;
+    while cs < nc {
+        let clen = (nc - cs).min(b);
+        for i in 0..clen {
+            cbuf[2 * i] = candidates[cs + i].x;
+            cbuf[2 * i + 1] = candidates[cs + i].y;
+        }
+        // Padding candidates is harmless (their outputs are discarded);
+        // zero them for reproducibility.
+        for i in clen..b {
+            cbuf[2 * i] = 0.0;
+            cbuf[2 * i + 1] = 0.0;
+        }
+        let mut ms = 0usize;
+        while ms < members.len() {
+            let mlen = (members.len() - ms).min(b);
+            for j in 0..mlen {
+                mbuf[2 * j] = members[ms + j].x;
+                mbuf[2 * j + 1] = members[ms + j].y;
+                mmask[j] = 1.0;
+            }
+            for j in mlen..b {
+                mbuf[2 * j] = 0.0;
+                mbuf[2 * j + 1] = 0.0;
+                mmask[j] = 0.0;
+            }
+            let partial = be.pairwise_block_partial(&cbuf, &mbuf, &mmask, clen)?;
+            for i in 0..clen {
+                out[cs + i] += partial[i] as f64;
+            }
+            ms += mlen;
+        }
+        cs += clen;
+    }
+    Ok(out)
+}
+
+/// Number of distance evaluations the two ops perform (for the cost
+/// model's work accounting).
+pub fn assign_dist_evals(n_points: usize, n_medoids: usize) -> u64 {
+    n_points as u64 * n_medoids as u64
+}
+pub fn pairwise_dist_evals(n_candidates: usize, n_members: usize) -> u64 {
+    n_candidates as u64 * n_members as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::NativeBackend;
+    use super::*;
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+
+    fn be() -> NativeBackend {
+        NativeBackend::new(64, 8)
+    }
+
+    fn rand_points(rng: &mut Rng, n: usize, spread: f64) -> Vec<Point> {
+        (0..n)
+            .map(|_| {
+                Point::new(
+                    (rng.f64() * spread - spread / 2.0) as f32,
+                    (rng.f64() * spread - spread / 2.0) as f32,
+                )
+            })
+            .collect()
+    }
+
+    fn brute_assign(points: &[Point], medoids: &[Point]) -> (Vec<u32>, Vec<f64>) {
+        points
+            .iter()
+            .map(|p| {
+                let (mut bj, mut bd) = (0u32, f64::INFINITY);
+                for (j, m) in medoids.iter().enumerate() {
+                    let d = p.dist2(m);
+                    if d < bd {
+                        bd = d;
+                        bj = j as u32;
+                    }
+                }
+                (bj, bd)
+            })
+            .unzip()
+    }
+
+    #[test]
+    fn assign_points_matches_brute_force_any_n() {
+        for_all(20, 0xA551, |rng| {
+            let n = 1 + rng.below(300); // exercises partial last block
+            let k = 1 + rng.below(7);
+            let pts = rand_points(rng, n, 100.0);
+            let med = rand_points(rng, k, 100.0);
+            let got = assign_points(&be(), &pts, &med).unwrap();
+            let (bl, bd) = brute_assign(&pts, &med);
+            assert_eq!(got.labels, bl);
+            for (g, w) in got.mindists.iter().zip(&bd) {
+                assert!((*g as f64 - w).abs() < 1e-2, "{g} vs {w}");
+            }
+            // Aggregates consistent with labels.
+            let mut cnt = vec![0u64; k];
+            for &l in &got.labels {
+                cnt[l as usize] += 1;
+            }
+            assert_eq!(got.cluster_count, cnt);
+            let total_cost: f64 = got.cluster_cost.iter().sum();
+            let brute_total: f64 = bd.iter().sum();
+            assert!((total_cost - brute_total).abs() < 1e-1 * brute_total.max(1.0));
+        });
+    }
+
+    #[test]
+    fn pairwise_costs_match_brute_force_any_sizes() {
+        for_all(15, 0xBEEF, |rng| {
+            let nc = 1 + rng.below(150);
+            let nm = 1 + rng.below(200);
+            let cands = rand_points(rng, nc, 50.0);
+            let membs = rand_points(rng, nm, 50.0);
+            let got = pairwise_costs(&be(), &cands, &membs).unwrap();
+            for (i, c) in cands.iter().enumerate() {
+                let want: f64 = membs.iter().map(|m| c.dist2(m)).sum();
+                assert!(
+                    (got[i] - want).abs() < 1e-4 * want.max(1.0),
+                    "cand {i}: {} vs {want}",
+                    got[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn empty_members_zero_cost() {
+        let got = pairwise_costs(&be(), &[Point::new(1.0, 1.0)], &[]).unwrap();
+        assert_eq!(got, vec![0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds backend capacity")]
+    fn too_many_medoids_panics() {
+        let pts = vec![Point::new(0.0, 0.0)];
+        let med = vec![Point::new(0.0, 0.0); 9];
+        let _ = assign_points(&be(), &pts, &med);
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT backend: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the PJRT CPU client,
+//! and executes them on the map/reduce hot path.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use super::backend::{AssignOut, ComputeBackend};
+use super::manifest::{Manifest, UnitKind, UnitMeta};
+use anyhow::{bail, Context, Result};
+use std::sync::Mutex;
+
+/// One compiled executable guarded for shared use.
+///
+/// SAFETY: the PJRT CPU client is thread-safe for compilation and
+/// execution; the raw pointers inside the `xla` wrappers carry no
+/// thread-affinity. We still serialize calls through a `Mutex` so buffer
+/// lifetimes never interleave.
+struct Exe {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    meta: UnitMeta,
+}
+unsafe impl Send for Exe {}
+unsafe impl Sync for Exe {}
+
+/// The production compute backend: assign/pairwise/seed executables for
+/// one (block, kpad) variant.
+pub struct PjrtBackend {
+    assign: Exe,
+    pairwise: Exe,
+    block: usize,
+    kpad: usize,
+    pad_coord: f32,
+}
+
+impl PjrtBackend {
+    /// Load a variant with block >= `min_block` from `manifest`.
+    pub fn load(manifest: &Manifest, min_block: usize) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let assign_meta = manifest
+            .pick(UnitKind::Assign, min_block)
+            .context("no assign artifact in manifest")?
+            .clone();
+        let pairwise_meta = manifest
+            .pick(UnitKind::Pairwise, assign_meta.block)
+            .context("no pairwise artifact in manifest")?
+            .clone();
+        if pairwise_meta.block != assign_meta.block {
+            bail!(
+                "artifact block mismatch: assign B={} pairwise B={}",
+                assign_meta.block,
+                pairwise_meta.block
+            );
+        }
+        let compile = |meta: &UnitMeta| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {:?}", meta.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("PJRT compile {}", meta.name))
+        };
+        let assign = compile(&assign_meta)?;
+        let pairwise = compile(&pairwise_meta)?;
+        Ok(PjrtBackend {
+            block: assign_meta.block,
+            kpad: assign_meta.kpad,
+            pad_coord: assign_meta.pad_coord,
+            assign: Exe { exe: Mutex::new(assign), meta: assign_meta },
+            pairwise: Exe { exe: Mutex::new(pairwise), meta: pairwise_meta },
+        })
+    }
+
+    fn lit2(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+    fn lit1(data: &[f32]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data))
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn block(&self) -> usize {
+        self.block
+    }
+    fn kpad(&self) -> usize {
+        self.kpad
+    }
+    fn pad_coord(&self) -> f32 {
+        self.pad_coord
+    }
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn assign_block(&self, points: &[f32], mask: &[f32], medoids: &[f32]) -> Result<AssignOut> {
+        assert_eq!(points.len(), 2 * self.block);
+        assert_eq!(mask.len(), self.block);
+        assert_eq!(medoids.len(), 2 * self.kpad);
+        let args = [
+            Self::lit2(points, self.block, 2)?,
+            Self::lit1(mask)?,
+            Self::lit2(medoids, self.kpad, 2)?,
+        ];
+        let exe = self.assign.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("execute {}", self.assign.meta.name))?;
+        drop(exe);
+        let parts = result.to_tuple()?;
+        if parts.len() != 4 {
+            bail!("assign artifact returned {} outputs, expected 4", parts.len());
+        }
+        let mut it = parts.into_iter();
+        let labels = it.next().unwrap().to_vec::<i32>()?;
+        let mindists = it.next().unwrap().to_vec::<f32>()?;
+        let cluster_cost = it.next().unwrap().to_vec::<f32>()?;
+        let cluster_count = it.next().unwrap().to_vec::<f32>()?;
+        Ok(AssignOut { labels, mindists, cluster_cost, cluster_count })
+    }
+
+    fn pairwise_block(&self, cand: &[f32], members: &[f32], mask: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(cand.len(), 2 * self.block);
+        assert_eq!(members.len(), 2 * self.block);
+        assert_eq!(mask.len(), self.block);
+        let args = [
+            Self::lit2(cand, self.block, 2)?,
+            Self::lit2(members, self.block, 2)?,
+            Self::lit1(mask)?,
+        ];
+        let exe = self.pairwise.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("execute {}", self.pairwise.meta.name))?;
+        drop(exe);
+        // Lowered with return_tuple=True -> 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::NativeBackend;
+    use super::super::manifest::default_artifacts_dir;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn backend_or_skip(min_block: usize) -> Option<PjrtBackend> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (`make artifacts`)");
+            return None;
+        }
+        Some(PjrtBackend::load(&Manifest::load(&dir).unwrap(), min_block).unwrap())
+    }
+
+    #[test]
+    fn pjrt_matches_native_assign() {
+        let Some(be) = backend_or_skip(256) else { return };
+        let b = be.block();
+        let k = be.kpad();
+        let native = NativeBackend::new(b, k);
+        let mut rng = Rng::new(99);
+        let points: Vec<f32> = (0..2 * b).map(|_| (rng.f64() * 200.0 - 100.0) as f32).collect();
+        let mut mask = vec![1.0f32; b];
+        for m in mask.iter_mut().skip(b - 17) {
+            *m = 0.0;
+        }
+        let mut medoids = vec![be.pad_coord(); 2 * k];
+        for v in medoids.iter_mut().take(2 * 5) {
+            *v = (rng.f64() * 200.0 - 100.0) as f32;
+        }
+        let got = be.assign_block(&points, &mask, &medoids).unwrap();
+        let want = native.assign_block(&points, &mask, &medoids).unwrap();
+        assert_eq!(got.labels[..b - 17], want.labels[..b - 17]);
+        for (g, w) in got.mindists.iter().zip(&want.mindists) {
+            assert!((g - w).abs() < 1e-2, "{g} vs {w}");
+        }
+        for (g, w) in got.cluster_count.iter().zip(&want.cluster_count) {
+            assert_eq!(g, w);
+        }
+    }
+
+    #[test]
+    fn pjrt_matches_native_pairwise() {
+        let Some(be) = backend_or_skip(256) else { return };
+        let b = be.block();
+        let native = NativeBackend::new(b, be.kpad());
+        let mut rng = Rng::new(7);
+        let cand: Vec<f32> = (0..2 * b).map(|_| (rng.f64() * 20.0 - 10.0) as f32).collect();
+        let memb: Vec<f32> = (0..2 * b).map(|_| (rng.f64() * 20.0 - 10.0) as f32).collect();
+        let mask: Vec<f32> = (0..b).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        let got = be.pairwise_block(&cand, &memb, &mask).unwrap();
+        let want = native.pairwise_block(&cand, &memb, &mask).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            let tol = 1e-3 * w.abs().max(1.0);
+            assert!((g - w).abs() < tol, "{g} vs {w}");
+        }
+    }
+}

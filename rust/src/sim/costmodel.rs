@@ -1,0 +1,211 @@
+//! Cost model: converts *measured work* (bytes, rows, distance
+//! evaluations) into simulated task durations on a given node.
+//!
+//! Calibration targets the paper's testbed era (Hadoop ~1.x on VMware VMs
+//! over commodity hosts, Table 3): heavy per-job and per-task overheads
+//! (JVM spawn, heartbeat-delayed scheduling), text-row parsing on the
+//! input path, and Java-speed distance loops. Absolute constants are
+//! documented in EXPERIMENTS.md §Calibration; the *shape* of Table 6 and
+//! Figs 3–5 (sub-linear speedup, better scaling for bigger datasets,
+//! ++ < traditional < CLARANS) is insensitive to ±2× on any of them.
+
+use crate::config::{ClusterConfig, NodeSpec};
+
+/// Work performed by one task attempt, accumulated by the engine while the
+/// task's real computation runs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TaskWork {
+    /// Input rows parsed (text coordinate rows, HBase cells).
+    pub rows_parsed: u64,
+    /// Point–medoid (or point–point) squared-distance evaluations.
+    pub dist_evals: u64,
+    /// Bytes read from a node-local disk (DFS local block or spill).
+    pub local_read_bytes: u64,
+    /// Bytes read over the network (non-local map input).
+    pub remote_read_bytes: u64,
+    /// Bytes written (map spill / reduce output).
+    pub write_bytes: u64,
+    /// Extra fixed CPU seconds (e.g. per-record reduce bookkeeping).
+    pub extra_cpu_s: f64,
+}
+
+impl TaskWork {
+    pub fn add(&mut self, other: &TaskWork) {
+        self.rows_parsed += other.rows_parsed;
+        self.dist_evals += other.dist_evals;
+        self.local_read_bytes += other.local_read_bytes;
+        self.remote_read_bytes += other.remote_read_bytes;
+        self.write_bytes += other.write_bytes;
+        self.extra_cpu_s += other.extra_cpu_s;
+    }
+}
+
+/// Tunable rate constants. All rates are for a speed-1.0 core
+/// (the Table 3 reference CPU, Intel i5-3210M).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Per-MR-job fixed overhead: job setup, split computation, cleanup.
+    pub job_overhead_s: f64,
+    /// Per-task-attempt overhead: JVM spawn + localization.
+    pub task_overhead_s: f64,
+    /// Scheduling latency per task (heartbeat-driven assignment).
+    pub sched_delay_s: f64,
+    /// Text rows parsed per second per speed-1.0 core.
+    pub parse_rows_per_s: f64,
+    /// Squared-distance evaluations per second per speed-1.0 core
+    /// (Java-era double loop with object overhead).
+    pub dist_evals_per_s: f64,
+    /// Sequential disk read/write bandwidth, MB/s.
+    pub disk_read_mb_s: f64,
+    pub disk_write_mb_s: f64,
+    /// Fraction of shuffle transfer hidden under the map phase
+    /// (Hadoop's slow-start copy overlap).
+    pub shuffle_overlap: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            job_overhead_s: 10.0,
+            task_overhead_s: 2.0,
+            sched_delay_s: 0.6,
+            parse_rows_per_s: 65_000.0,
+            dist_evals_per_s: 1.2e6,
+            disk_read_mb_s: 60.0,
+            disk_write_mb_s: 50.0,
+            shuffle_overlap: 0.65,
+        }
+    }
+}
+
+impl CostModel {
+    /// A model with near-zero overheads, for tests that want to assert on
+    /// pure work accounting.
+    pub fn bare() -> CostModel {
+        CostModel {
+            job_overhead_s: 0.0,
+            task_overhead_s: 0.0,
+            sched_delay_s: 0.0,
+            shuffle_overlap: 0.0,
+            ..CostModel::default()
+        }
+    }
+
+    /// Simulated seconds of CPU time for `work` on `node`.
+    pub fn cpu_seconds(&self, node: &NodeSpec, work: &TaskWork) -> f64 {
+        let raw = work.rows_parsed as f64 / self.parse_rows_per_s
+            + work.dist_evals as f64 / self.dist_evals_per_s
+            + work.extra_cpu_s;
+        raw / node.speed
+    }
+
+    /// Simulated seconds of I/O (disk) time for `work` on `node`.
+    pub fn io_seconds(&self, work: &TaskWork) -> f64 {
+        work.local_read_bytes as f64 / (self.disk_read_mb_s * 1e6)
+            + work.write_bytes as f64 / (self.disk_write_mb_s * 1e6)
+    }
+
+    /// Network seconds for the remote-read portion, given the transfer
+    /// path bandwidth in MB/s.
+    pub fn net_seconds(&self, bytes: u64, mb_s: f64, latency_s: f64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            latency_s + bytes as f64 / (mb_s * 1e6)
+        }
+    }
+
+    /// Full duration of a task attempt (excluding queueing).
+    pub fn task_seconds(
+        &self,
+        cluster: &ClusterConfig,
+        node_idx: usize,
+        src_node: Option<usize>,
+        work: &TaskWork,
+    ) -> f64 {
+        let node = &cluster.nodes[node_idx];
+        let mut t = self.task_overhead_s + self.cpu_seconds(node, work) + self.io_seconds(work);
+        if work.remote_read_bytes > 0 {
+            let mb_s = match src_node {
+                Some(s) if cluster.nodes[s].host == node.host => cluster.net.intra_host_mb_s,
+                _ => cluster.net.inter_host_mb_s,
+            };
+            t += self.net_seconds(work.remote_read_bytes, mb_s, cluster.net.latency_s);
+        }
+        t
+    }
+
+    /// Shuffle fetch time for one reducer pulling `bytes` from `src` to
+    /// `dst`, after overlap with the map phase is credited.
+    pub fn shuffle_seconds(&self, cluster: &ClusterConfig, src: usize, dst: usize, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let mb_s = if cluster.nodes[src].host == cluster.nodes[dst].host {
+            cluster.net.intra_host_mb_s
+        } else {
+            cluster.net.inter_host_mb_s
+        };
+        (1.0 - self.shuffle_overlap) * self.net_seconds(bytes, mb_s, cluster.net.latency_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> ClusterConfig {
+        ClusterConfig::paper_cluster()
+    }
+
+    #[test]
+    fn slower_node_takes_longer() {
+        let m = CostModel::default();
+        let c = cluster();
+        let work = TaskWork { dist_evals: 10_000_000, ..Default::default() };
+        let fast = m.task_seconds(&c, 0, None, &work); // master, speed 1.0
+        let slow = m.task_seconds(&c, 3, None, &work); // E7500, speed 0.62
+        assert!(slow > fast, "{slow} <= {fast}");
+        // CPU portion should scale ~1/speed.
+        let cpu_fast = m.cpu_seconds(&c.nodes[0], &work);
+        let cpu_slow = m.cpu_seconds(&c.nodes[3], &work);
+        assert!((cpu_slow / cpu_fast - 1.0 / 0.62).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remote_read_costs_more_cross_host() {
+        let m = CostModel::default();
+        let c = cluster();
+        let work = TaskWork { remote_read_bytes: 64 << 20, ..Default::default() };
+        // src on same host as dst (slave01 -> slave02, both host 1)
+        let same = m.task_seconds(&c, 2, Some(1), &work);
+        // src cross-host (slave03 on host 2)
+        let cross = m.task_seconds(&c, 2, Some(3), &work);
+        assert!(cross > same);
+    }
+
+    #[test]
+    fn zero_work_is_just_overhead() {
+        let m = CostModel::default();
+        let c = cluster();
+        let t = m.task_seconds(&c, 0, None, &TaskWork::default());
+        assert!((t - m.task_overhead_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shuffle_zero_bytes_free() {
+        let m = CostModel::default();
+        let c = cluster();
+        assert_eq!(m.shuffle_seconds(&c, 0, 1, 0), 0.0);
+        assert!(m.shuffle_seconds(&c, 0, 1, 1 << 20) > 0.0);
+    }
+
+    #[test]
+    fn work_accumulates() {
+        let mut a = TaskWork { rows_parsed: 1, dist_evals: 2, ..Default::default() };
+        a.add(&TaskWork { rows_parsed: 10, write_bytes: 5, ..Default::default() });
+        assert_eq!(a.rows_parsed, 11);
+        assert_eq!(a.dist_evals, 2);
+        assert_eq!(a.write_bytes, 5);
+    }
+}

@@ -1,0 +1,186 @@
+//! Virtual clock + deterministic event queue.
+//!
+//! `SimTime` is seconds as f64 wrapped for total ordering; ties are broken
+//! by insertion sequence so identical schedules replay identically across
+//! runs (determinism is asserted by tests and relied on by benches).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated wall-clock time in seconds since job submission.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct SimTime(pub f64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0.0);
+    pub fn secs(s: f64) -> SimTime {
+        SimTime(s)
+    }
+    pub fn max(self, other: SimTime) -> SimTime {
+        if other.0 > self.0 {
+            other
+        } else {
+            self
+        }
+    }
+}
+
+impl std::ops::Add<f64> for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: f64) -> SimTime {
+        SimTime(self.0 + rhs)
+    }
+}
+
+impl std::ops::Sub<SimTime> for SimTime {
+    type Output = f64;
+    fn sub(self, rhs: SimTime) -> f64 {
+        self.0 - rhs.0
+    }
+}
+
+/// Events the MapReduce engine reacts to.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A task attempt finished on a node.
+    TaskDone { attempt_id: usize },
+    /// A node fails (fail-stop); all attempts there die, its completed map
+    /// outputs become unreadable (Hadoop semantics: re-execute those maps).
+    NodeFail { node: usize },
+    /// A failed node comes back empty (rejoins as a fresh TaskTracker).
+    NodeRecover { node: usize },
+    /// Periodic scheduler tick (speculative-execution checks).
+    Tick,
+}
+
+struct Entry {
+    at: SimTime,
+    seq: u64,
+    ev: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first. NaN times
+        // are a programming error and must never be scheduled.
+        other
+            .at
+            .0
+            .partial_cmp(&self.at.0)
+            .expect("NaN SimTime scheduled")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic earliest-first event queue.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+    now: SimTime,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn schedule(&mut self, at: SimTime, ev: Event) {
+        debug_assert!(at.0 >= self.now.0, "cannot schedule into the past");
+        self.heap.push(Entry { at, seq: self.seq, ev });
+        self.seq += 1;
+    }
+
+    pub fn schedule_in(&mut self, dt: f64, ev: Event) {
+        let at = self.now + dt;
+        self.schedule(at, ev);
+    }
+
+    /// Pop the next event, advancing the clock. Returns None when drained.
+    pub fn next(&mut self) -> Option<(SimTime, Event)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.at.0 >= self.now.0);
+        self.now = e.at;
+        Some((e.at, e.ev))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn orders_by_time() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::secs(2.0), Event::Tick);
+        q.schedule(SimTime::secs(1.0), Event::NodeFail { node: 3 });
+        q.schedule(SimTime::secs(3.0), Event::TaskDone { attempt_id: 1 });
+        let (t1, e1) = q.next().unwrap();
+        assert_eq!(t1.0, 1.0);
+        assert_eq!(e1, Event::NodeFail { node: 3 });
+        assert_eq!(q.next().unwrap().1, Event::Tick);
+        assert_eq!(q.next().unwrap().1, Event::TaskDone { attempt_id: 1 });
+        assert!(q.next().is_none());
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule(SimTime::secs(1.0), Event::TaskDone { attempt_id: i });
+        }
+        for i in 0..10 {
+            assert_eq!(q.next().unwrap().1, Event::TaskDone { attempt_id: i });
+        }
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        for_all(30, 0xC10C4, |rng: &mut Rng| {
+            let mut q = EventQueue::new();
+            for i in 0..100 {
+                q.schedule(SimTime::secs(rng.f64() * 100.0), Event::TaskDone { attempt_id: i });
+            }
+            let mut last = -1.0;
+            while let Some((t, _)) = q.next() {
+                assert!(t.0 >= last);
+                assert_eq!(q.now().0, t.0);
+                last = t.0;
+            }
+        });
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::secs(5.0), Event::Tick);
+        q.next();
+        q.schedule_in(2.0, Event::Tick);
+        assert_eq!(q.next().unwrap().0 .0, 7.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Discrete-event simulation core.
+//!
+//! The MapReduce engine runs *real computation on a simulated clock*:
+//! every task actually executes (PJRT kernels and all), while its
+//! simulated duration comes from the cost model in [`costmodel`]. The
+//! event queue in [`events`] orders task completions, node failures and
+//! heartbeats deterministically.
+
+pub mod costmodel;
+pub mod events;
+
+pub use costmodel::{CostModel, TaskWork};
+pub use events::{Event, EventQueue, SimTime};
+
+/// Convert a simulated time (seconds, f64) to the millisecond integer the
+/// paper's Table 6 reports.
+pub fn sim_ms(t: SimTime) -> u64 {
+    (t.0 * 1e3).round() as u64
+}

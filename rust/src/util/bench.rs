@@ -1,0 +1,134 @@
+//! Mini-criterion: a self-contained benchmark harness (criterion is not in
+//! the vendored crate set). Used by every `[[bench]]` target with
+//! `harness = false`.
+//!
+//! Reports min/median/mean/p95 wallclock over timed iterations after a
+//! warmup phase, and supports "simulated-time" benches where the measured
+//! quantity is the discrete-event clock rather than wallclock.
+
+use std::time::Instant;
+
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 1, iters: 5 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p95_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let median = if n % 2 == 1 { xs[n / 2] } else { 0.5 * (xs[n / 2 - 1] + xs[n / 2]) };
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let p95 = xs[((n as f64 * 0.95) as usize).min(n - 1)];
+        Stats { name: name.to_string(), iters: n, min_s: xs[0], median_s: median, mean_s: mean, p95_s: p95 }
+    }
+}
+
+/// Time `f` for `opts.iters` iterations (after warmup); returns stats in
+/// seconds. `f` should return something observable to avoid DCE.
+pub fn bench<T>(name: &str, opts: &BenchOpts, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..opts.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(opts.iters);
+    for _ in 0..opts.iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let s = Stats::from_samples(name, samples);
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        s.name,
+        fmt_s(s.min_s),
+        fmt_s(s.median_s),
+        fmt_s(s.mean_s),
+        fmt_s(s.p95_s)
+    );
+    s
+}
+
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!("{:<44} {:>10} {:>10} {:>10} {:>10}", "benchmark", "min", "median", "mean", "p95");
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Throughput helper: items/second formatted human-readably.
+pub fn fmt_rate(items: f64, secs: f64) -> String {
+    let r = items / secs;
+    if r > 1e9 {
+        format!("{:.2}G/s", r / 1e9)
+    } else if r > 1e6 {
+        format!("{:.2}M/s", r / 1e6)
+    } else if r > 1e3 {
+        format!("{:.2}k/s", r / 1e3)
+    } else {
+        format!("{r:.1}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples("x", vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.median_s, 2.0);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_even_median() {
+        let s = Stats::from_samples("x", vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.median_s, 2.5);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0u64;
+        let s = bench("noop", &BenchOpts { warmup_iters: 1, iters: 3 }, || {
+            count += 1;
+            count
+        });
+        assert_eq!(s.iters, 3);
+        assert_eq!(count, 4); // warmup + 3
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_s(2.0).ends_with('s'));
+        assert!(fmt_s(0.002).ends_with("ms"));
+        assert!(fmt_rate(2e6, 1.0).ends_with("M/s"));
+    }
+}

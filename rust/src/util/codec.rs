@@ -1,0 +1,158 @@
+//! Tiny byte codec for MapReduce keys/values.
+//!
+//! The MR engine moves opaque `Vec<u8>` keys/values (size accounting and
+//! shuffle sorting need bytes anyway). Application types encode/decode
+//! through these little-endian helpers — a fixed, documented wire format
+//! so tests can assert on byte layouts.
+
+/// Append-style writer.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc { buf: Vec::new() }
+    }
+    pub fn with_capacity(n: usize) -> Self {
+        Enc { buf: Vec::with_capacity(n) }
+    }
+    pub fn u32(mut self, v: u32) -> Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn u64(mut self, v: u64) -> Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn f32(mut self, v: f32) -> Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn f64(mut self, v: f64) -> Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn bytes(mut self, v: &[u8]) -> Self {
+        self.buf.extend_from_slice(v);
+        self
+    }
+    pub fn f32s(mut self, vs: &[f32]) -> Self {
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self
+    }
+    pub fn done(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor-style reader; panics on truncation (wire bugs are programmer
+/// errors inside one process, not recoverable input errors).
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+    pub fn u32(&mut self) -> u32 {
+        let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        v
+    }
+    pub fn u64(&mut self) -> u64 {
+        let v = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        v
+    }
+    pub fn f32(&mut self) -> f32 {
+        let v = f32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        v
+    }
+    pub fn f64(&mut self) -> f64 {
+        let v = f64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        v
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+    /// Read all remaining bytes as f32s.
+    pub fn rest_f32s(&mut self) -> Vec<f32> {
+        let n = self.remaining() / 4;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32());
+        }
+        out
+    }
+}
+
+/// Encode a 2-D point value (the (clusterId, point) pair payload of the
+/// paper's mapper output).
+pub fn encode_point(x: f32, y: f32) -> Vec<u8> {
+    Enc::with_capacity(8).f32(x).f32(y).done()
+}
+
+pub fn decode_point(b: &[u8]) -> (f32, f32) {
+    let mut d = Dec::new(b);
+    (d.f32(), d.f32())
+}
+
+/// Cluster-id keys sort numerically when big-endian encoded; the shuffle
+/// sorts keys lexicographically, matching Hadoop's Text/Writable order.
+pub fn encode_cluster_key(id: u32) -> Vec<u8> {
+    id.to_be_bytes().to_vec()
+}
+
+pub fn decode_cluster_key(b: &[u8]) -> u32 {
+    u32::from_be_bytes(b.try_into().expect("cluster key must be 4 bytes"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let b = Enc::new().u32(7).f32(1.5).f64(-2.25).u64(u64::MAX).done();
+        let mut d = Dec::new(&b);
+        assert_eq!(d.u32(), 7);
+        assert_eq!(d.f32(), 1.5);
+        assert_eq!(d.f64(), -2.25);
+        assert_eq!(d.u64(), u64::MAX);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn point_roundtrip() {
+        let b = encode_point(3.25, -7.5);
+        assert_eq!(b.len(), 8);
+        assert_eq!(decode_point(&b), (3.25, -7.5));
+    }
+
+    #[test]
+    fn cluster_keys_sort_numerically() {
+        let mut keys: Vec<Vec<u8>> = [300u32, 2, 10, 255, 256].iter().map(|&i| encode_cluster_key(i)).collect();
+        keys.sort();
+        let ids: Vec<u32> = keys.iter().map(|k| decode_cluster_key(k)).collect();
+        assert_eq!(ids, vec![2, 10, 255, 256, 300]);
+    }
+
+    #[test]
+    fn rest_f32s() {
+        let b = Enc::new().f32s(&[1.0, 2.0, 3.0]).done();
+        let mut d = Dec::new(&b);
+        assert_eq!(d.rest_f32s(), vec![1.0, 2.0, 3.0]);
+    }
+}

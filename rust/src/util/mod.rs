@@ -1,0 +1,9 @@
+//! In-repo utility layer: everything that would normally come from crates
+//! that are not in the offline vendor set (rand, serde_json, criterion,
+//! proptest), plus the MR wire codec.
+
+pub mod bench;
+pub mod codec;
+pub mod json;
+pub mod proptest;
+pub mod rng;

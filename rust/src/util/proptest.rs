@@ -1,0 +1,120 @@
+//! Mini property-testing helper (proptest is not vendored).
+//!
+//! `for_all(cases, seed, |rng| ...)` runs a property over many
+//! deterministically-seeded random cases; on failure it reports the exact
+//! case seed so the failure reproduces with `case_seed(...)`. Shrinking is
+//! delegated to the property author via the `Sized`-input helpers below
+//! (generate with a size parameter; on failure we retry smaller sizes to
+//! report the smallest failing size).
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random streams. Panics with the failing case
+/// seed on the first failure.
+pub fn for_all(cases: usize, seed: u64, mut prop: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let cs = case_seed(seed, case);
+        let mut rng = Rng::new(cs);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {case} (case_seed={cs:#x}): {msg}");
+        }
+    }
+}
+
+/// Like `for_all` but passes a size that grows with the case index, and on
+/// failure retries progressively smaller sizes to report a minimal size.
+pub fn for_all_sized(cases: usize, seed: u64, max_size: usize, mut prop: impl FnMut(&mut Rng, usize)) {
+    for case in 0..cases {
+        let cs = case_seed(seed, case);
+        let size = 1 + (max_size - 1) * case / cases.max(1);
+        let failed = {
+            let mut rng = Rng::new(cs);
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng, size))).is_err()
+        };
+        if failed {
+            // Shrink: find the smallest size (same stream) that still fails.
+            let mut lo = 1usize;
+            let mut hi = size;
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                let mut rng = Rng::new(cs);
+                let f =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng, mid))).is_err();
+                if f {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            let mut rng = Rng::new(cs);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng, hi)));
+            match result {
+                Err(e) => {
+                    let msg = e
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "<non-string panic>".into());
+                    panic!(
+                        "property failed on case {case} (case_seed={cs:#x}, shrunk size={hi}): {msg}"
+                    );
+                }
+                Ok(()) => panic!(
+                    "property failed on case {case} (case_seed={cs:#x}, size={size}; shrink was flaky)"
+                ),
+            }
+        }
+    }
+}
+
+pub fn case_seed(seed: u64, case: usize) -> u64 {
+    seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_quietly() {
+        for_all(50, 1, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    fn panic_msg(e: Box<dyn std::any::Any + Send>) -> String {
+        e.downcast_ref::<String>()
+            .cloned()
+            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string>".into())
+    }
+
+    #[test]
+    fn reports_case_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            for_all(50, 2, |rng| {
+                assert!(rng.f64() < 0.9, "drew a big one");
+            })
+        });
+        let msg = panic_msg(r.unwrap_err());
+        assert!(msg.contains("case_seed="), "{msg}");
+    }
+
+    #[test]
+    fn sized_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            for_all_sized(20, 3, 1000, |_rng, size| {
+                assert!(size < 10, "too big");
+            })
+        });
+        let msg = panic_msg(r.unwrap_err());
+        assert!(msg.contains("shrunk size=10"), "{msg}");
+    }
+}
