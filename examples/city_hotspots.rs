@@ -3,19 +3,13 @@
 //! check-ins / incident reports) that contains GPS-glitch outliers, and
 //! show why K-Medoids (not K-Means) is the right tool.
 //!
-//! Compares, on the same data and same simulated cluster:
+//! Session showcase: the city is ingested **once**, then both solvers run
+//! against the same `DatasetHandle` on the same simulated cluster:
 //!   - parallel K-Medoids++ (the paper's method)
 //!   - parallel k-means     (the paper's Ref. 6 baseline)
 //! reporting hotspot-coverage error and robustness to the outliers.
 
-use kmedoids_mr::clustering::kmeans::ParallelKMeans;
-use kmedoids_mr::clustering::parallel::ParallelKMedoids;
-use kmedoids_mr::clustering::{Init, IterParams, UpdateStrategy};
-use kmedoids_mr::config::ClusterConfig;
-use kmedoids_mr::driver::setup_cluster;
-use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
-use kmedoids_mr::geo::Point;
-use kmedoids_mr::runtime::{load_backend, BackendKind};
+use kmedoids_mr::prelude::*;
 
 fn coverage(truth: &[Point], fitted: &[Point]) -> f64 {
     truth
@@ -38,26 +32,28 @@ fn main() -> anyhow::Result<()> {
         spec.outlier_frac * 100.0
     );
 
-    let cfg = ClusterConfig::paper_cluster(); // all 7 nodes
-    let backend = load_backend(BackendKind::Auto, 2048)?;
-    println!("backend: {}", backend.name());
+    // One session: the paper's full 7-node cluster, city ingested once.
+    let mut session = ClusterSession::builder()
+        .cluster(ClusterConfig::paper_cluster())
+        .backend_kind(BackendKind::Auto)
+        .seed(7)
+        .build()?;
+    println!("backend: {}", session.backend().name());
+    let city = session.ingest("city", &dataset);
 
     // Parallel K-Medoids++ (random init for the robustness comparison —
     // both methods get identical initialization).
-    let (mut c1, input1, points1) = setup_cluster(&cfg, &dataset, 7);
-    let mut kmed = ParallelKMedoids::new(backend.clone(), IterParams::new(9, 7));
-    kmed.init = Init::Random;
-    kmed.update = UpdateStrategy::Sampled { candidates: 256, member_sample: 8192 };
-    let kmed_out = kmed.run(&mut c1, &input1, &points1);
+    let kmed = KMedoids::mapreduce()
+        .random_init()
+        .k(9)
+        .seed(7)
+        .update(UpdateStrategy::Sampled { candidates: 256, member_sample: 8192 })
+        .build();
+    let kmed_out = kmed.fit(&mut session, &city)?;
 
-    // Parallel k-means, same init.
-    let (mut c2, input2, points2) = setup_cluster(&cfg, &dataset, 7);
-    let km = ParallelKMeans {
-        backend: backend.clone(),
-        init: Init::Random,
-        params: IterParams::new(9, 7),
-    };
-    let km_out = km.run(&mut c2, &input2, &points2);
+    // Parallel k-means, same init, same ingested data.
+    let km = KMeans::mapreduce().random_init().k(9).seed(7).build();
+    let km_out = km.fit(&mut session, &city)?;
 
     let kmed_cov = coverage(&dataset.centers, &kmed_out.medoids);
     let km_cov = coverage(&dataset.centers, &km_out.medoids);
@@ -71,15 +67,21 @@ fn main() -> anyhow::Result<()> {
         "{:<22}{:>14}{:>13.1}s{:>13.1}m",
         "k-means (MR)", km_out.iterations, km_out.sim_seconds, km_cov
     );
+    println!(
+        "\nsession accounting: {} MR jobs, {:.1} simulated seconds total",
+        session.jobs_run(),
+        session.now_s()
+    );
 
     // Medoids are data points: every reported hotspot is a real location.
+    let points = session.dataset_points(&city);
     for m in &kmed_out.medoids {
         anyhow::ensure!(
-            points1.iter().any(|p| p.x == m.x && p.y == m.y),
+            points.iter().any(|p| p.x == m.x && p.y == m.y),
             "every medoid must be an actual observed location"
         );
     }
-    println!("\nall k-medoid hotspots are observed data points (k-means centroids are not)");
+    println!("all k-medoid hotspots are observed data points (k-means centroids are not)");
     println!("city_hotspots OK");
     Ok(())
 }

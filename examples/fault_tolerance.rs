@@ -3,46 +3,57 @@
 //! re-replication, HBase region failover — with the clustering result
 //! bit-identical to the healthy run (the Hadoop property the paper's
 //! §2.1–2.2 leans on: "automatically handle the hardware failure").
+//!
+//! Failures are planned on the session (`ClusterSession::plan_failure`);
+//! the per-job history exposes how many attempts the failure killed.
 
-use kmedoids_mr::clustering::parallel::ParallelKMedoids;
-use kmedoids_mr::clustering::{Init, IterParams, UpdateStrategy};
-use kmedoids_mr::config::ClusterConfig;
-use kmedoids_mr::driver::setup_cluster;
-use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
-use kmedoids_mr::runtime::{load_backend, BackendKind};
+use kmedoids_mr::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let mut spec = SpatialSpec::new(500_000, 6, 11);
     spec.outlier_frac = 0.0;
     let dataset = generate(&spec);
-    let cfg = ClusterConfig::paper_cluster().cluster_subset(5);
     let backend = load_backend(BackendKind::Auto, 2048)?;
 
-    let run = |fail: bool| {
-        let (mut cluster, input, points) = setup_cluster(&cfg, &dataset, 11);
+    let run = |fail: bool| -> anyhow::Result<(ClusterOutcome, usize, usize)> {
+        let mut session = ClusterSession::builder()
+            .cluster(ClusterConfig::paper_cluster())
+            .nodes(5)
+            .backend(backend.clone())
+            .seed(11)
+            .build()?;
+        let data = session.ingest("points", &dataset);
         if fail {
             // Kill slave01 (node index 1) mid-iteration — it runs map
             // tasks and reducers — and bring it back two jobs later.
-            cluster.plan_failure(85.0, 1);
-            cluster.plan_recovery(150.0, 1);
+            session.plan_failure(85.0, 1);
+            session.plan_recovery(150.0, 1);
         }
-        let mut drv = ParallelKMedoids::new(backend.clone(), IterParams::new(6, 11));
-        drv.init = Init::PlusPlus;
-        drv.update = UpdateStrategy::SampledAdaptive { candidates: 128, frac_div: 4, min_sample: 8192 };
-        let out = drv.run(&mut cluster, &input, &points);
+        let solver = KMedoids::mapreduce()
+            .plus_plus()
+            .k(6)
+            .seed(11)
+            .update(UpdateStrategy::SampledAdaptive {
+                candidates: 128,
+                frac_div: 4,
+                min_sample: 8192,
+            })
+            .build();
+        let out = solver.fit(&mut session, &data)?;
         let failed_attempts: usize =
-            cluster.history.iter().map(|j| j.n_failed_attempts).sum();
-        let lost_outputs: u64 = 0; // counted per job in counters
-        let _ = lost_outputs;
-        (out, failed_attempts, points.len())
+            session.history().iter().map(|j| j.n_failed_attempts).sum();
+        Ok((out, failed_attempts, session.dataset_n_points(&data)))
     };
 
     println!("healthy run:");
-    let (ok, _, n) = run(false);
-    println!("  {} points, {} iterations, cost {:.4e}, sim {:.1}s", n, ok.iterations, ok.cost, ok.sim_seconds);
+    let (ok, _, n) = run(false)?;
+    println!(
+        "  {} points, {} iterations, cost {:.4e}, sim {:.1}s",
+        n, ok.iterations, ok.cost, ok.sim_seconds
+    );
 
     println!("\nrun with slave01 failing at t=85s (recovering at t=150s):");
-    let (faulty, failed_attempts, _) = run(true);
+    let (faulty, failed_attempts, _) = run(true)?;
     println!(
         "  {} iterations, cost {:.4e}, sim {:.1}s, {} attempts killed by the failure",
         faulty.iterations, faulty.cost, faulty.sim_seconds, failed_attempts
@@ -53,7 +64,10 @@ fn main() -> anyhow::Result<()> {
         faulty.sim_seconds >= ok.sim_seconds,
         "the failure should not make the job faster"
     );
-    println!("\nresult identical to the healthy run; recovery cost {:.1}s of simulated time", faulty.sim_seconds - ok.sim_seconds);
+    println!(
+        "\nresult identical to the healthy run; recovery cost {:.1}s of simulated time",
+        faulty.sim_seconds - ok.sim_seconds
+    );
     println!("fault_tolerance OK");
     Ok(())
 }

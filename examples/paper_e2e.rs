@@ -1,19 +1,19 @@
 //! End-to-end driver: regenerates the paper's entire evaluation section
 //! on one machine, through all three layers (Pallas/JAX AOT kernels via
 //! PJRT on the hot path, MapReduce runtime on the simulated Table 3
-//! cluster).
+//! cluster), driven by the session-based suites.
 //!
 //! By default runs at 1/10 of Table 5's dataset sizes so the whole thing
 //! finishes in a few minutes; set `KMR_SCALE=1` for the full-scale run
 //! recorded in EXPERIMENTS.md (sim times are work-proportional either
 //! way; the backend env `KMR_E2E_BACKEND=native|pjrt|auto` picks the
-//! kernel path).
+//! kernel path, and `KMR_TRACE=1` streams live per-iteration events).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example paper_e2e
 //! ```
 
-use kmedoids_mr::driver::suites::{ablation_suite, fig5_suite, table6_suite};
+use kmedoids_mr::driver::suites::{ablation_suite, fig5_suite, table6_suite, SuiteOpts};
 use kmedoids_mr::report;
 use kmedoids_mr::runtime::{load_backend, BackendKind};
 
@@ -24,25 +24,27 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| BackendKind::parse(&s))
         .unwrap_or(BackendKind::Auto);
     let seed: u64 = std::env::var("KMR_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
+    let trace = std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false"));
     let backend = load_backend(backend_kind, 2048)?;
+    let opts = SuiteOpts::new(scale, seed).with_trace(trace);
     println!(
         "paper end-to-end reproduction — scale 1/{scale}, backend {}, seed {seed}\n",
         backend.name()
     );
 
     println!("== Table 6 / Fig 3: execution time, 4–7 nodes x 3 datasets ==");
-    let t6 = table6_suite(&backend, scale, seed);
+    let t6 = table6_suite(&backend, &opts);
     println!("\n{}", report::table6(&t6));
 
     println!("== Fig 4: speedup ==");
     println!("\n{}", report::fig4_speedup(&t6));
 
     println!("== Fig 5: comparative algorithms ==");
-    let f5 = fig5_suite(&backend, scale, seed);
+    let f5 = fig5_suite(&backend, &opts);
     println!("\n{}", report::fig5_comparative(&f5));
 
     println!("== §3.1 ablation: seeding strategy ==");
-    let ab = ablation_suite(&backend, scale, seed);
+    let ab = ablation_suite(&backend, &opts);
     println!();
     println!("{:<18}{:>8}{:>12}{:>16}", "variant", "iters", "time(ms)", "cost");
     for r in &ab {

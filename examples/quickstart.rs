@@ -1,62 +1,72 @@
 //! Quickstart: cluster a synthetic spatial dataset with the paper's
-//! parallel K-Medoids++ on a simulated 4-node Hadoop cluster.
+//! parallel K-Medoids++ through the session API — build the simulated
+//! 4-node Hadoop cluster once, ingest once, fit through the
+//! `SpatialClusterer` trait with live iteration streaming.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
 use kmedoids_mr::clustering::metrics::{adjusted_rand_index, silhouette_sampled};
-use kmedoids_mr::clustering::parallel::ParallelKMedoids;
-use kmedoids_mr::clustering::{Init, IterParams, UpdateStrategy};
-use kmedoids_mr::config::ClusterConfig;
-use kmedoids_mr::driver::setup_cluster;
-use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
-use kmedoids_mr::runtime::{load_backend, BackendKind};
+use kmedoids_mr::prelude::*;
+use kmedoids_mr::report;
 
 fn main() -> anyhow::Result<()> {
     // 1. A small spatial dataset: 30k points around 6 hotspots + noise.
     let mut spec = SpatialSpec::new(30_000, 6, 42);
     spec.outlier_frac = 0.0;
-    let dataset = generate(&spec);
-    println!("generated {} points around {} hotspots", dataset.points.len(), 6);
 
-    // 2. A 4-node simulated cluster with the data ingested into HBase.
-    let cfg = ClusterConfig::paper_cluster().cluster_subset(4);
-    let (mut cluster, input, points) = setup_cluster(&cfg, &dataset, 42);
+    // 2. A session: 4-node simulated cluster + compute backend (PJRT
+    //    when AOT artifacts are built, native Rust otherwise).
+    let mut session = ClusterSession::builder()
+        .cluster(ClusterConfig::paper_cluster())
+        .nodes(4)
+        .backend_kind(BackendKind::Auto)
+        .seed(42)
+        .build()?;
+    let data = session.ingest_spec("quickstart", &spec);
     println!(
-        "cluster: {} nodes, {} map slots, {} HBase regions",
-        cfg.nodes.len(),
-        cfg.total_map_slots(),
-        input.splits().len()
+        "session: {} nodes, {} HBase splits, backend {}",
+        session.config().nodes.len(),
+        session.dataset_input(&data).splits().len(),
+        session.backend().name()
     );
 
-    // 3. The compute backend: PJRT (AOT JAX/Pallas artifacts) when built,
-    //    native Rust otherwise.
-    let backend = load_backend(BackendKind::Auto, 2048)?;
-    println!("backend: {}", backend.name());
+    // 3. Observers: record the iteration stream (and print it live).
+    let log = IterationLog::new();
+    session.add_observer(Box::new(log.clone()));
+    session.add_observer(Box::new(StderrProgress::new()));
 
-    // 4. Parallel K-Medoids++ (the paper's §3).
-    let mut driver = ParallelKMedoids::new(backend, IterParams::new(6, 42));
-    driver.init = Init::PlusPlus;
-    driver.update = UpdateStrategy::Exact;
-    driver.label_pass = true;
-    let out = driver.run(&mut cluster, &input, &points);
+    // 4. Parallel K-Medoids++ (the paper's §3) via the fluent builder.
+    let solver = KMedoids::mapreduce()
+        .plus_plus()
+        .k(6)
+        .seed(42)
+        .update(UpdateStrategy::Exact)
+        .with_labels()
+        .build();
+    let out = solver.fit(&mut session, &data)?;
 
-    println!("\nresults:");
+    println!("\niteration trace:\n{}", report::iteration_trace(&log.events()));
+    println!("results:");
     println!("  iterations      : {}", out.iterations);
     println!("  total cost E    : {:.4e}", out.cost);
     println!("  simulated time  : {:.1} s (on the 2012-era 4-node cluster)", out.sim_seconds);
     println!("  distance evals  : {}", out.dist_evals);
+    println!("  MR jobs run     : {}", session.jobs_run());
     for (i, m) in out.medoids.iter().enumerate() {
         println!("  medoid {i}: ({:.1}, {:.1})", m.x, m.y);
     }
 
+    let points = session.dataset_points(&data);
+    let truth = session.dataset_truth(&data).expect("ingest_spec keeps ground truth");
     let labels = out.labels.as_ref().unwrap();
-    let ari = adjusted_rand_index(labels, &dataset.truth);
+    let ari = adjusted_rand_index(labels, truth);
     let sil = silhouette_sampled(&points, labels, 6, 500, 42);
     println!("  ARI vs truth    : {ari:.4}");
     println!("  silhouette (est): {sil:.4}");
     anyhow::ensure!(ari > 0.8, "clustering should recover the planted hotspots");
+    anyhow::ensure!(log.len() == out.iterations, "one event per iteration");
     println!("\nquickstart OK");
     Ok(())
 }

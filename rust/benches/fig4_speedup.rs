@@ -4,7 +4,7 @@
 //! Shares the Table 6 grid (same cells), then derives speedups relative
 //! to the 4-node cluster and checks the Fig. 4 shapes.
 
-use kmedoids_mr::driver::suites::table6_suite;
+use kmedoids_mr::driver::suites::{table6_suite, SuiteOpts};
 use kmedoids_mr::report;
 use kmedoids_mr::runtime::{load_backend, BackendKind};
 
@@ -17,7 +17,8 @@ fn main() {
         .unwrap_or(BackendKind::Native);
     let backend = load_backend(kind, 2048).expect("backend");
     println!("== Fig 4: speedup (scale 1/{scale}, backend {}) ==", backend.name());
-    let results = table6_suite(&backend, scale, 42);
+    let opts = SuiteOpts::new(scale, 42).with_trace(std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false")));
+    let results = table6_suite(&backend, &opts);
     println!("\n{}", report::fig4_speedup(&results));
 
     // Shape checks: speedup >= 1 at every size, below linear, and the

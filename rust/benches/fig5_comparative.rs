@@ -2,7 +2,7 @@
 //! K-Medoids++ against traditional K-Medoids and CLARANS across the three
 //! dataset sizes, plus the §3.1 seeding ablation.
 
-use kmedoids_mr::driver::suites::{ablation_suite, fig5_suite};
+use kmedoids_mr::driver::suites::{ablation_suite, fig5_suite, SuiteOpts};
 use kmedoids_mr::report;
 use kmedoids_mr::runtime::{load_backend, BackendKind};
 
@@ -15,7 +15,8 @@ fn main() {
         .unwrap_or(BackendKind::Native);
     let backend = load_backend(kind, 2048).expect("backend");
     println!("== Fig 5: comparative algorithms (scale 1/{scale}, backend {}) ==", backend.name());
-    let results = fig5_suite(&backend, scale, 42);
+    let opts = SuiteOpts::new(scale, 42).with_trace(std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false")));
+    let results = fig5_suite(&backend, &opts);
     println!("\n{}", report::fig5_comparative(&results));
     println!("CSV:\n{}", report::to_csv(&results));
 
@@ -39,7 +40,7 @@ fn main() {
         }
     }
     println!("\n== §3.1 ablation: seeding and update strategies (dataset 1) ==\n");
-    let ab = ablation_suite(&backend, scale, 42);
+    let ab = ablation_suite(&backend, &opts);
     println!("{:<18}{:>8}{:>12}{:>16}", "variant", "iters", "time(ms)", "cost");
     for r in &ab {
         println!("{:<18}{:>8}{:>12}{:>16.4e}", r.algorithm, r.iterations, r.time_ms, r.cost);

@@ -8,7 +8,7 @@
 //! (default native — simulated times are backend-independent, see
 //! EXPERIMENTS.md §Method).
 
-use kmedoids_mr::driver::suites::table6_suite;
+use kmedoids_mr::driver::suites::{table6_suite, SuiteOpts};
 use kmedoids_mr::report;
 use kmedoids_mr::runtime::{load_backend, BackendKind};
 
@@ -21,7 +21,9 @@ fn main() {
         .unwrap_or(BackendKind::Native);
     let backend = load_backend(kind, 2048).expect("backend");
     println!("== Table 6 / Fig 3: K-Medoids++ MR execution time (scale 1/{scale}, backend {}) ==", backend.name());
-    let results = table6_suite(&backend, scale, 42);
+    // KMR_TRACE=1 streams live per-iteration events from every cell.
+    let opts = SuiteOpts::new(scale, 42).with_trace(std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false")));
+    let results = table6_suite(&backend, &opts);
     println!("\nTable 6 — execution time (ms):\n\n{}", report::table6(&results));
     println!("Fig. 4 — speedup vs 4-node cluster:\n\n{}", report::fig4_speedup(&results));
     println!("CSV:\n{}", report::to_csv(&results));

@@ -1,0 +1,559 @@
+//! The unified solver API: the [`SpatialClusterer`] trait plus fluent
+//! builders for every algorithm in this crate.
+//!
+//! All five evaluation-grid algorithms are interchangeable solvers over a
+//! shared [`ClusterSession`]:
+//!
+//! ```text
+//! let mut session = ClusterSession::builder()
+//!     .cluster(ClusterConfig::paper_cluster())
+//!     .seed(42)
+//!     .build()?;
+//! let data = session.ingest_spec("city", &SpatialSpec::new(100_000, 9, 42));
+//!
+//! let solver = KMedoids::mapreduce()
+//!     .plus_plus()
+//!     .k(9)
+//!     .update(UpdateStrategy::paper_scale_default())
+//!     .build();
+//! let outcome = solver.fit(&mut session, &data)?;
+//! // same session, same ingested data, different solver:
+//! let km = KMeans::mapreduce().k(9).build();
+//! let outcome2 = km.fit(&mut session, &data)?;
+//! ```
+//!
+//! | Builder | Algorithm name | Engine |
+//! |---|---|---|
+//! | `KMedoids::mapreduce().plus_plus()` | `kmedoids++-mr` | [`super::parallel`] |
+//! | `KMedoids::mapreduce().random_init()` | `kmedoids-mr` | [`super::parallel`] |
+//! | `KMedoids::serial()` | `kmedoids-serial` | [`super::pam`] |
+//! | `Clarans::serial()` | `clarans` | [`super::clarans`] |
+//! | `KMeans::mapreduce()` | `kmeans-mr` | [`super::kmeans`] |
+
+use super::clarans::{clarans_observed, ClaransParams};
+use super::kmeans::ParallelKMeans;
+use super::observe::ObserverHub;
+use super::pam::alternating_kmedoids_observed;
+use super::parallel::ParallelKMedoids;
+use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
+use crate::config::ClusterConfig;
+use crate::mapreduce::Cluster;
+use crate::session::{ClusterSession, DatasetHandle};
+use crate::sim::CostModel;
+use anyhow::{ensure, Result};
+
+/// Shared MR-fit plumbing: pair `fit_start` with exactly one of
+/// `fit_end` / `fit_error` around the engine run.
+fn run_mr_fit(
+    session: &mut ClusterSession,
+    name: &'static str,
+    n_points: usize,
+    k: usize,
+    run: impl FnOnce(&mut Cluster, &mut ObserverHub) -> Result<ClusterOutcome>,
+) -> Result<ClusterOutcome> {
+    let (cluster, hub) = session.cluster_and_observers();
+    hub.fit_start(name, n_points, k);
+    match run(cluster, hub) {
+        Ok(outcome) => {
+            session.observers_mut().fit_end(&outcome);
+            Ok(outcome)
+        }
+        Err(e) => {
+            session.observers_mut().fit_error(name, &format!("{e:#}"));
+            Err(e)
+        }
+    }
+}
+
+/// Shared serial-fit plumbing: same `fit_start`/`fit_end` pairing as
+/// [`run_mr_fit`], plus clock accounting for off-cluster work. Serial
+/// engines are infallible once started.
+fn run_serial_fit(
+    session: &mut ClusterSession,
+    name: &'static str,
+    n_points: usize,
+    k: usize,
+    run: impl FnOnce(&ClusterConfig, &CostModel, &mut ObserverHub) -> ClusterOutcome,
+) -> ClusterOutcome {
+    let cfg = session.config().clone();
+    let cost = session.cost_model().clone();
+    let hub = session.observers_mut();
+    hub.fit_start(name, n_points, k);
+    let outcome = run(&cfg, &cost, hub);
+    session.account_serial_fit(&outcome);
+    outcome
+}
+
+/// A clustering algorithm runnable against a [`ClusterSession`]'s
+/// ingested data. Implementations stream [`super::IterationEvent`]s
+/// through the session's observers while fitting.
+pub trait SpatialClusterer {
+    /// Stable algorithm name (the `Algorithm::parse` vocabulary).
+    fn name(&self) -> &'static str;
+    /// Number of clusters this solver is configured for.
+    fn k(&self) -> usize;
+    /// Fit on `data` (previously ingested into `session`), returning the
+    /// paper-comparable outcome. MR solvers advance the session's
+    /// simulated clock by running jobs; serial solvers account their
+    /// modeled serial time on the same clock.
+    fn fit(&self, session: &mut ClusterSession, data: &DatasetHandle) -> Result<ClusterOutcome>;
+}
+
+/// How a `KMedoids` solver executes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Exec {
+    MapReduce,
+    Serial,
+}
+
+// ---- K-Medoids (the paper's family) ----------------------------------------
+
+/// K-Medoids solver: the paper's parallel MR driver (++ or random init)
+/// or the serial alternating baseline. Build via [`KMedoids::mapreduce`]
+/// / [`KMedoids::serial`].
+#[derive(Debug, Clone)]
+pub struct KMedoids {
+    exec: Exec,
+    init: Init,
+    k: usize,
+    seed: u64,
+    update: UpdateStrategy,
+    max_iters: usize,
+    rel_tol: f64,
+    fixed_iters: Option<usize>,
+    label_pass: bool,
+}
+
+/// Fluent builder for [`KMedoids`].
+#[derive(Debug, Clone)]
+pub struct KMedoidsBuilder {
+    inner: KMedoids,
+}
+
+impl KMedoids {
+    /// The paper's §3 driver: one MR job per iteration on the session's
+    /// simulated cluster. Defaults: ++ seeding, k=9, exact update.
+    pub fn mapreduce() -> KMedoidsBuilder {
+        KMedoidsBuilder {
+            inner: KMedoids {
+                exec: Exec::MapReduce,
+                init: Init::PlusPlus,
+                k: 9,
+                seed: 42,
+                update: UpdateStrategy::Exact,
+                max_iters: 30,
+                rel_tol: 1e-3,
+                fixed_iters: None,
+                label_pass: false,
+            },
+        }
+    }
+
+    /// The §2.3 "traditional K-Medoids" baseline: serial alternation on
+    /// the master node (random init by default, as in the paper).
+    pub fn serial() -> KMedoidsBuilder {
+        let mut b = KMedoids::mapreduce();
+        b.inner.exec = Exec::Serial;
+        b.inner.init = Init::Random;
+        b
+    }
+}
+
+impl KMedoidsBuilder {
+    /// K-Medoids++ weighted seeding (§3.1).
+    pub fn plus_plus(mut self) -> Self {
+        self.inner.init = Init::PlusPlus;
+        self
+    }
+    /// Uniform random init ("traditional").
+    pub fn random_init(mut self) -> Self {
+        self.inner.init = Init::Random;
+        self
+    }
+    pub fn init(mut self, init: Init) -> Self {
+        self.inner.init = init;
+        self
+    }
+    pub fn k(mut self, k: usize) -> Self {
+        self.inner.k = k;
+        self
+    }
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.inner.seed = seed;
+        self
+    }
+    /// Reducer medoid-update strategy (Table 2 flavor).
+    pub fn update(mut self, update: UpdateStrategy) -> Self {
+        self.inner.update = update;
+        self
+    }
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.inner.max_iters = n;
+        self
+    }
+    pub fn rel_tol(mut self, tol: f64) -> Self {
+        self.inner.rel_tol = tol;
+        self
+    }
+    /// Run exactly `n` outer iterations (the Table 6 controlled-iteration
+    /// mode) instead of converging.
+    pub fn fixed_iters(mut self, n: usize) -> Self {
+        self.inner.fixed_iters = Some(n);
+        self
+    }
+    /// Run the final map-only labeling pass so the outcome carries labels.
+    pub fn with_labels(mut self) -> Self {
+        self.inner.label_pass = true;
+        self
+    }
+    pub fn label_pass(mut self, on: bool) -> Self {
+        self.inner.label_pass = on;
+        self
+    }
+    pub fn build(self) -> KMedoids {
+        self.inner
+    }
+}
+
+impl KMedoids {
+    fn iter_params(&self) -> IterParams {
+        let mut p = IterParams::new(self.k, self.seed);
+        p.max_iters = self.max_iters;
+        p.rel_tol = self.rel_tol;
+        p.fixed_iters = self.fixed_iters;
+        p
+    }
+}
+
+impl SpatialClusterer for KMedoids {
+    fn name(&self) -> &'static str {
+        match (self.exec, self.init) {
+            (Exec::MapReduce, Init::PlusPlus) => "kmedoids++-mr",
+            (Exec::MapReduce, Init::Random) => "kmedoids-mr",
+            (Exec::Serial, _) => "kmedoids-serial",
+        }
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn fit(&self, session: &mut ClusterSession, data: &DatasetHandle) -> Result<ClusterOutcome> {
+        let points = session.dataset_points(data);
+        ensure!(
+            self.k >= 1 && self.k <= points.len(),
+            "k={} must be in 1..={} (dataset size)",
+            self.k,
+            points.len()
+        );
+        let name = self.name();
+        match self.exec {
+            Exec::MapReduce => {
+                let input = session.dataset_input(data);
+                let drv = ParallelKMedoids {
+                    backend: session.backend(),
+                    init: self.init,
+                    update: self.update,
+                    params: self.iter_params(),
+                    label_pass: self.label_pass,
+                };
+                run_mr_fit(session, name, points.len(), self.k, |cluster, hub| {
+                    drv.run_observed(cluster, &input, &points, hub)
+                })
+            }
+            Exec::Serial => {
+                // Refuse rather than silently converge early: the serial
+                // engine has no controlled-iteration mode (same rule the
+                // JSON run-spec layer enforces).
+                ensure!(
+                    self.fixed_iters.is_none(),
+                    "kmedoids-serial ignores fixed_iters (only the MR drivers support \
+                     controlled iterations)"
+                );
+                let backend = session.backend();
+                let bytes = session.dataset_bytes(data);
+                let mut outcome =
+                    run_serial_fit(session, name, points.len(), self.k, |cfg, cost, hub| {
+                        alternating_kmedoids_observed(
+                            backend.as_ref(),
+                            &points,
+                            &self.iter_params(),
+                            self.init,
+                            self.update,
+                            cfg,
+                            cost,
+                            bytes,
+                            hub,
+                        )
+                    });
+                if !self.label_pass {
+                    // The serial engine always labels; drop them unless
+                    // asked, matching the MR solver's contract.
+                    outcome.labels = None;
+                }
+                Ok(outcome)
+            }
+        }
+    }
+}
+
+// ---- Parallel k-means (robustness ablation) --------------------------------
+
+/// MR k-means (Zhao/Ma/He), the outlier-sensitivity comparator. Build via
+/// [`KMeans::mapreduce`].
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    init: Init,
+    k: usize,
+    seed: u64,
+    max_iters: usize,
+    rel_tol: f64,
+}
+
+/// Fluent builder for [`KMeans`].
+#[derive(Debug, Clone)]
+pub struct KMeansBuilder {
+    inner: KMeans,
+}
+
+impl KMeans {
+    pub fn mapreduce() -> KMeansBuilder {
+        KMeansBuilder {
+            inner: KMeans { init: Init::PlusPlus, k: 9, seed: 42, max_iters: 30, rel_tol: 1e-3 },
+        }
+    }
+}
+
+impl KMeansBuilder {
+    pub fn plus_plus(mut self) -> Self {
+        self.inner.init = Init::PlusPlus;
+        self
+    }
+    pub fn random_init(mut self) -> Self {
+        self.inner.init = Init::Random;
+        self
+    }
+    pub fn init(mut self, init: Init) -> Self {
+        self.inner.init = init;
+        self
+    }
+    pub fn k(mut self, k: usize) -> Self {
+        self.inner.k = k;
+        self
+    }
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.inner.seed = seed;
+        self
+    }
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.inner.max_iters = n;
+        self
+    }
+    pub fn rel_tol(mut self, tol: f64) -> Self {
+        self.inner.rel_tol = tol;
+        self
+    }
+    pub fn build(self) -> KMeans {
+        self.inner
+    }
+}
+
+impl SpatialClusterer for KMeans {
+    fn name(&self) -> &'static str {
+        "kmeans-mr"
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn fit(&self, session: &mut ClusterSession, data: &DatasetHandle) -> Result<ClusterOutcome> {
+        let points = session.dataset_points(data);
+        ensure!(
+            self.k >= 1 && self.k <= points.len(),
+            "k={} must be in 1..={} (dataset size)",
+            self.k,
+            points.len()
+        );
+        let input = session.dataset_input(data);
+        let mut params = IterParams::new(self.k, self.seed);
+        params.max_iters = self.max_iters;
+        params.rel_tol = self.rel_tol;
+        let km = ParallelKMeans { backend: session.backend(), init: self.init, params };
+        run_mr_fit(session, self.name(), points.len(), self.k, |cluster, hub| {
+            km.run_observed(cluster, &input, &points, hub)
+        })
+    }
+}
+
+// ---- CLARANS (Ng & Han) -----------------------------------------------------
+
+/// CLARANS randomized-search comparator (serial, on the master node).
+/// Build via [`Clarans::serial`]. Parameters default to Ng & Han's
+/// recommendations derived from the dataset size at fit time, with the
+/// paper-scale cost-sampling substitution above 100k points (DESIGN.md).
+#[derive(Debug, Clone)]
+pub struct Clarans {
+    k: usize,
+    seed: u64,
+    num_local: Option<usize>,
+    max_neighbor: Option<usize>,
+    cost_sample: Option<usize>,
+    paper_scale_sampling: bool,
+}
+
+/// Fluent builder for [`Clarans`].
+#[derive(Debug, Clone)]
+pub struct ClaransBuilder {
+    inner: Clarans,
+}
+
+impl Clarans {
+    pub fn serial() -> ClaransBuilder {
+        ClaransBuilder {
+            inner: Clarans {
+                k: 9,
+                seed: 42,
+                num_local: None,
+                max_neighbor: None,
+                cost_sample: None,
+                paper_scale_sampling: true,
+            },
+        }
+    }
+
+    /// Resolve the effective parameters for a dataset of `n` points.
+    fn params_for(&self, n: usize) -> ClaransParams {
+        let mut p = ClaransParams::recommended(self.k, n, self.seed);
+        if self.paper_scale_sampling && n > 100_000 {
+            // Sampled cost evaluation at paper scale; the sample grows
+            // with n so CLARANS keeps its Fig. 5 scaling (DESIGN.md).
+            p.cost_sample = (16_000 + n / 100).min(n);
+            p.max_neighbor = p.max_neighbor.min(1_500);
+        }
+        if let Some(v) = self.num_local {
+            p.num_local = v;
+        }
+        if let Some(v) = self.max_neighbor {
+            p.max_neighbor = v;
+        }
+        if let Some(v) = self.cost_sample {
+            p.cost_sample = v;
+        }
+        p
+    }
+}
+
+impl ClaransBuilder {
+    pub fn k(mut self, k: usize) -> Self {
+        self.inner.k = k;
+        self
+    }
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.inner.seed = seed;
+        self
+    }
+    /// Override the number of restarts (Ng & Han recommend 2).
+    pub fn num_local(mut self, n: usize) -> Self {
+        self.inner.num_local = Some(n);
+        self
+    }
+    /// Override the neighbors examined before declaring a local minimum.
+    pub fn max_neighbor(mut self, n: usize) -> Self {
+        self.inner.max_neighbor = Some(n);
+        self
+    }
+    /// Override the cost-evaluation sample size (`usize::MAX` = exact).
+    pub fn cost_sample(mut self, n: usize) -> Self {
+        self.inner.cost_sample = Some(n);
+        self
+    }
+    /// Disable the automatic >100k-point cost-sampling substitution.
+    pub fn exact_cost(mut self) -> Self {
+        self.inner.paper_scale_sampling = false;
+        self
+    }
+    pub fn build(self) -> Clarans {
+        self.inner
+    }
+}
+
+impl SpatialClusterer for Clarans {
+    fn name(&self) -> &'static str {
+        "clarans"
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn fit(&self, session: &mut ClusterSession, data: &DatasetHandle) -> Result<ClusterOutcome> {
+        let points = session.dataset_points(data);
+        // Strictly k < n (not <= as for the other solvers): CLARANS swaps
+        // a medoid for a *non-medoid*, which cannot exist when k == n.
+        ensure!(
+            self.k >= 1 && self.k < points.len(),
+            "k={} must be in 1..{} (dataset size)",
+            self.k,
+            points.len()
+        );
+        let params = self.params_for(points.len());
+        let bytes = session.dataset_bytes(data);
+        let outcome = run_serial_fit(session, self.name(), points.len(), self.k, |cfg, cost, hub| {
+            clarans_observed(&points, &params, cfg, cost, bytes, hub)
+        });
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_are_fluent_and_defaulted() {
+        let m = KMedoids::mapreduce()
+            .plus_plus()
+            .k(9)
+            .update(UpdateStrategy::paper_scale_default())
+            .build();
+        assert_eq!(m.name(), "kmedoids++-mr");
+        assert_eq!(m.k(), 9);
+
+        let r = KMedoids::mapreduce().random_init().k(4).build();
+        assert_eq!(r.name(), "kmedoids-mr");
+
+        let s = KMedoids::serial().k(5).seed(7).build();
+        assert_eq!(s.name(), "kmedoids-serial");
+
+        let km = KMeans::mapreduce().k(3).build();
+        assert_eq!(km.name(), "kmeans-mr");
+
+        let cl = Clarans::serial().k(4).num_local(1).max_neighbor(60).build();
+        assert_eq!(cl.name(), "clarans");
+        assert_eq!(cl.k(), 4);
+    }
+
+    #[test]
+    fn clarans_params_scale_with_dataset() {
+        let cl = Clarans::serial().k(9).build();
+        let small = cl.params_for(10_000);
+        assert_eq!(small.cost_sample, usize::MAX, "small n evaluates exactly");
+        let big = cl.params_for(1_000_000);
+        assert!(big.cost_sample < 1_000_000, "paper scale samples the cost");
+        assert!(big.max_neighbor <= 1_500);
+
+        let exact = Clarans::serial().k(9).exact_cost().build().params_for(1_000_000);
+        assert_eq!(exact.cost_sample, usize::MAX);
+
+        let overridden = Clarans::serial().k(9).cost_sample(123).build().params_for(1_000_000);
+        assert_eq!(overridden.cost_sample, 123, "explicit override wins");
+    }
+
+    #[test]
+    fn kmedoids_iter_params_carry_through() {
+        let m =
+            KMedoids::mapreduce().k(5).seed(11).max_iters(12).rel_tol(1e-4).fixed_iters(6).build();
+        let p = m.iter_params();
+        assert_eq!((p.k, p.seed, p.max_iters), (5, 11, 12));
+        assert_eq!(p.fixed_iters, Some(6));
+        assert_eq!(p.rel_tol, 1e-4);
+    }
+}

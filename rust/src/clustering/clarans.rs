@@ -10,6 +10,7 @@
 //! is documented in DESIGN.md's substitutions.
 
 use super::metrics::total_cost;
+use super::observe::{IterationEvent, ObserverHub};
 use super::ClusterOutcome;
 use crate::config::ClusterConfig;
 use crate::geo::Point;
@@ -41,6 +42,22 @@ pub fn clarans(
     cfg: &ClusterConfig,
     cost_model: &CostModel,
     dataset_bytes: u64,
+) -> ClusterOutcome {
+    clarans_observed(points, params, cfg, cost_model, dataset_bytes, &mut ObserverHub::default())
+}
+
+/// [`clarans`] with streaming: one [`IterationEvent`] per *accepted swap
+/// move* (CLARANS' outer-iteration unit, matching `outcome.iterations`).
+/// Event `cost` is the (possibly sampled) evaluation cost of the accepted
+/// node and `sim_seconds` a running serial-cost estimate; the final
+/// outcome reports the exact Eq. 1 cost.
+pub fn clarans_observed(
+    points: &[Point],
+    params: &ClaransParams,
+    cfg: &ClusterConfig,
+    cost_model: &CostModel,
+    dataset_bytes: u64,
+    hub: &mut ObserverHub,
 ) -> ClusterOutcome {
     let n = points.len();
     let k = params.k;
@@ -83,7 +100,7 @@ pub fn clarans(
     let mut best_cost = f64::INFINITY;
     let mut moves_total = 0usize;
 
-    for _local in 0..params.num_local {
+    for local in 0..params.num_local {
         // Random start node.
         let mut current = rng.sample_indices(n, k);
         let mut current_cost = eval_cost(&current, &mut dist_evals);
@@ -99,10 +116,27 @@ pub fn clarans(
             neighbor[mi] = cand;
             let c = eval_cost(&neighbor, &mut dist_evals);
             if c < current_cost {
+                let drift = points[current[mi]].dist2(&points[cand]).sqrt();
                 current = neighbor;
                 current_cost = c;
                 moves_total += 1;
                 j = 0; // restart neighbor count at the new node
+                let work_so_far =
+                    TaskWork { rows_parsed: n as u64, dist_evals, ..Default::default() };
+                hub.iteration(&IterationEvent {
+                    algorithm: "clarans",
+                    iteration: moves_total,
+                    cost: current_cost,
+                    medoid_drift: drift,
+                    sim_seconds: super::pam::serial_seconds(
+                        cfg,
+                        cost_model,
+                        &work_so_far,
+                        local as u64 + 1,
+                        dataset_bytes,
+                    ),
+                    dist_evals,
+                });
             } else {
                 j += 1;
             }

@@ -6,6 +6,7 @@
 //! driver: map = assign + partial (sum, count) per cluster (combiner-style
 //! pre-aggregation in the mapper), reduce = new mean.
 
+use super::observe::{IterationEvent, ObserverHub};
 use super::seeding::{plus_plus_serial, random_init};
 use super::{ClusterOutcome, Init, IterParams};
 use crate::geo::Point;
@@ -81,12 +82,27 @@ pub struct ParallelKMeans {
 }
 
 impl ParallelKMeans {
+    /// Run to convergence; panics on job-level failure. Use
+    /// [`ParallelKMeans::run_observed`] for the fallible, streaming path.
     pub fn run(
         &self,
         cluster: &mut Cluster,
         input: &Input,
         points: &Arc<Vec<Point>>,
     ) -> ClusterOutcome {
+        self.run_observed(cluster, input, points, &mut ObserverHub::default())
+            .expect("parallel k-means job failed")
+    }
+
+    /// Run to convergence, emitting one [`IterationEvent`] per Lloyd
+    /// iteration. Last event matches the final [`ClusterOutcome`].
+    pub fn run_observed(
+        &self,
+        cluster: &mut Cluster,
+        input: &Input,
+        points: &Arc<Vec<Point>>,
+        hub: &mut ObserverHub,
+    ) -> anyhow::Result<ClusterOutcome> {
         let k = self.params.k;
         let t0 = cluster.now().0;
         let mut rng = Rng::new(self.params.seed);
@@ -106,7 +122,7 @@ impl ParallelKMeans {
             )
             .with_combiner(Arc::new(MeanReducer))
             .with_reducer(Arc::new(MeanReducer), k.min(4).max(1));
-            let result = cluster.run_job(&job);
+            let result = cluster.try_run_job(&job)?;
             dist_evals += result.counters.get("work.dist.evals");
             let new_cost = result.counters.get("assign.cost.units") as f64;
             let mut new_centers = centers.clone();
@@ -117,23 +133,33 @@ impl ParallelKMeans {
             }
             let moved: f64 =
                 new_centers.iter().zip(&centers).map(|(a, b)| a.dist2(b)).sum::<f64>();
+            let drift: f64 =
+                new_centers.iter().zip(&centers).map(|(a, b)| a.dist2(b).sqrt()).sum();
             centers = new_centers;
             let done = moved == 0.0
                 || (cost.is_finite()
                     && (cost - new_cost).abs() <= self.params.rel_tol * cost.abs().max(1.0));
             cost = new_cost;
+            hub.iteration(&IterationEvent {
+                algorithm: "kmeans-mr",
+                iteration: iterations,
+                cost,
+                medoid_drift: drift,
+                sim_seconds: cluster.now().0 - t0,
+                dist_evals,
+            });
             if done {
                 break;
             }
         }
-        ClusterOutcome {
+        Ok(ClusterOutcome {
             medoids: centers,
             labels: None,
             cost,
             iterations,
             sim_seconds: cluster.now().0 - t0,
             dist_evals,
-        }
+        })
     }
 }
 

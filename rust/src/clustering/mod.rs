@@ -10,12 +10,19 @@
 //! | CLARANS | [`clarans`] | Fig. 5 comparator |
 //! | Parallel k-means (MR) | [`kmeans`] | robustness ablation (§1 motivation) |
 
+pub mod api;
 pub mod clarans;
 pub mod kmeans;
 pub mod metrics;
+pub mod observe;
 pub mod pam;
 pub mod parallel;
 pub mod seeding;
+
+pub use api::{
+    Clarans, ClaransBuilder, KMeans, KMeansBuilder, KMedoids, KMedoidsBuilder, SpatialClusterer,
+};
+pub use observe::{IterationEvent, IterationLog, IterationObserver, ObserverHub, StderrProgress};
 
 use crate::geo::Point;
 

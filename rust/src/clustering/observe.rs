@@ -1,0 +1,215 @@
+//! Streaming iteration observers: live per-iteration telemetry from every
+//! solver, consumed by the CLI, the report module, and the benches.
+//!
+//! Each outer iteration of a [`crate::clustering::api::SpatialClusterer`]
+//! fit emits one [`IterationEvent`] through the session's [`ObserverHub`].
+//! Events are cumulative *within one fit*: `sim_seconds` and `dist_evals`
+//! count from the start of the fit, so the last event of a run matches the
+//! final [`ClusterOutcome`] totals (asserted by tests) — except for
+//! optional post-convergence passes such as the labeling job, which run
+//! after the last iteration event.
+
+use super::ClusterOutcome;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// One outer iteration of a clustering fit.
+///
+/// For CLARANS, whose "iterations" are accepted swap moves, `cost` is the
+/// (possibly sampled) evaluation cost of the accepted node, while the
+/// final outcome reports the exact Eq. 1 cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterationEvent {
+    /// Algorithm name (same vocabulary as `Algorithm::name`).
+    pub algorithm: &'static str,
+    /// 1-based outer iteration index.
+    pub iteration: usize,
+    /// Total cost E (Eq. 1) after this iteration.
+    pub cost: f64,
+    /// Sum over clusters of the distance each medoid/center moved.
+    pub medoid_drift: f64,
+    /// Simulated seconds elapsed since the fit started (cumulative,
+    /// including seeding rounds for the MR drivers).
+    pub sim_seconds: f64,
+    /// Distance evaluations performed since the fit started (cumulative).
+    pub dist_evals: u64,
+}
+
+/// Hook receiving the event stream of a fit. All methods default to
+/// no-ops so observers implement only what they need.
+pub trait IterationObserver {
+    /// A fit is starting on `n_points` points with `k` clusters.
+    fn on_fit_start(&mut self, _algorithm: &'static str, _n_points: usize, _k: usize) {}
+    /// One outer iteration completed.
+    fn on_iteration(&mut self, _event: &IterationEvent) {}
+    /// The fit finished with `outcome`.
+    fn on_fit_end(&mut self, _outcome: &ClusterOutcome) {}
+    /// The fit aborted with an error after `on_fit_start`. Every fit
+    /// ends in exactly one of `on_fit_end` / `on_fit_error`, so stateful
+    /// observers can rely on the start/end pairing.
+    fn on_fit_error(&mut self, _algorithm: &'static str, _message: &str) {}
+}
+
+/// Fan-out registry for observers, owned by the `ClusterSession` and
+/// threaded through the solver engines.
+#[derive(Default)]
+pub struct ObserverHub {
+    observers: Vec<Box<dyn IterationObserver>>,
+}
+
+impl ObserverHub {
+    pub fn add(&mut self, observer: Box<dyn IterationObserver>) {
+        self.observers.push(observer);
+    }
+    pub fn clear(&mut self) {
+        self.observers.clear();
+    }
+    pub fn len(&self) -> usize {
+        self.observers.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.observers.is_empty()
+    }
+
+    pub fn fit_start(&mut self, algorithm: &'static str, n_points: usize, k: usize) {
+        for o in &mut self.observers {
+            o.on_fit_start(algorithm, n_points, k);
+        }
+    }
+    pub fn iteration(&mut self, event: &IterationEvent) {
+        for o in &mut self.observers {
+            o.on_iteration(event);
+        }
+    }
+    pub fn fit_end(&mut self, outcome: &ClusterOutcome) {
+        for o in &mut self.observers {
+            o.on_fit_end(outcome);
+        }
+    }
+    pub fn fit_error(&mut self, algorithm: &'static str, message: &str) {
+        for o in &mut self.observers {
+            o.on_fit_error(algorithm, message);
+        }
+    }
+}
+
+/// Recording observer: collects every event into shared storage, so the
+/// caller keeps a handle (a clone) while the session owns the boxed
+/// observer.
+///
+/// ```text
+/// let log = IterationLog::new();
+/// session.add_observer(Box::new(log.clone()));
+/// clusterer.fit(&mut session, &data)?;
+/// for ev in log.events() { ... }
+/// ```
+#[derive(Clone, Default)]
+pub struct IterationLog {
+    events: Rc<RefCell<Vec<IterationEvent>>>,
+}
+
+impl IterationLog {
+    pub fn new() -> IterationLog {
+        IterationLog::default()
+    }
+    /// Snapshot of all recorded events.
+    pub fn events(&self) -> Vec<IterationEvent> {
+        self.events.borrow().clone()
+    }
+    pub fn len(&self) -> usize {
+        self.events.borrow().len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.events.borrow().is_empty()
+    }
+    pub fn last(&self) -> Option<IterationEvent> {
+        self.events.borrow().last().cloned()
+    }
+    pub fn clear(&self) {
+        self.events.borrow_mut().clear();
+    }
+}
+
+impl IterationObserver for IterationLog {
+    fn on_iteration(&mut self, event: &IterationEvent) {
+        self.events.borrow_mut().push(event.clone());
+    }
+}
+
+/// Live-progress observer: one stderr line per iteration (the CLI's and
+/// benches' streaming view).
+#[derive(Default)]
+pub struct StderrProgress;
+
+impl StderrProgress {
+    pub fn new() -> StderrProgress {
+        StderrProgress
+    }
+}
+
+impl IterationObserver for StderrProgress {
+    fn on_fit_start(&mut self, algorithm: &'static str, n_points: usize, k: usize) {
+        eprintln!("    [{algorithm}] fit start: {n_points} points, k={k}");
+    }
+    fn on_iteration(&mut self, ev: &IterationEvent) {
+        eprintln!(
+            "    [{}] iter {:>3}: cost {:.4e}  drift {:>10.2}  sim {:>8.1}s  dist-evals {}",
+            ev.algorithm, ev.iteration, ev.cost, ev.medoid_drift, ev.sim_seconds, ev.dist_evals
+        );
+    }
+    fn on_fit_end(&mut self, outcome: &ClusterOutcome) {
+        eprintln!(
+            "    [done] {} iterations, cost {:.4e}, sim {:.1}s",
+            outcome.iterations, outcome.cost, outcome.sim_seconds
+        );
+    }
+    fn on_fit_error(&mut self, algorithm: &'static str, message: &str) {
+        eprintln!("    [{algorithm}] fit FAILED: {message}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: usize) -> IterationEvent {
+        IterationEvent {
+            algorithm: "test",
+            iteration: i,
+            cost: 100.0 / i as f64,
+            medoid_drift: 1.0,
+            sim_seconds: i as f64,
+            dist_evals: 10 * i as u64,
+        }
+    }
+
+    #[test]
+    fn log_records_through_hub() {
+        let log = IterationLog::new();
+        let mut hub = ObserverHub::default();
+        hub.add(Box::new(log.clone()));
+        assert_eq!(hub.len(), 1);
+        hub.fit_start("test", 100, 3);
+        hub.iteration(&ev(1));
+        hub.iteration(&ev(2));
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.last().unwrap().iteration, 2);
+        assert_eq!(log.events()[0].dist_evals, 10);
+    }
+
+    #[test]
+    fn multiple_observers_all_fire() {
+        let a = IterationLog::new();
+        let b = IterationLog::new();
+        let mut hub = ObserverHub::default();
+        hub.add(Box::new(a.clone()));
+        hub.add(Box::new(b.clone()));
+        hub.iteration(&ev(1));
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.len(), 1);
+        hub.clear();
+        assert!(hub.is_empty());
+        hub.iteration(&ev(2));
+        assert_eq!(a.len(), 1, "cleared observers stop receiving");
+    }
+}

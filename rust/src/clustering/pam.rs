@@ -9,6 +9,7 @@
 //!   (§2.3's "earliest K-Medoids algorithm"): exact but O(k(n−k)²) per
 //!   pass; used as the quality reference on small inputs.
 
+use super::observe::{IterationEvent, ObserverHub};
 use super::seeding::{plus_plus_serial, random_init};
 use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
 use crate::config::ClusterConfig;
@@ -44,6 +45,35 @@ pub fn alternating_kmedoids(
     cfg: &ClusterConfig,
     cost_model: &CostModel,
     dataset_bytes: u64,
+) -> ClusterOutcome {
+    alternating_kmedoids_observed(
+        backend,
+        points,
+        params,
+        init,
+        update,
+        cfg,
+        cost_model,
+        dataset_bytes,
+        &mut ObserverHub::default(),
+    )
+}
+
+/// [`alternating_kmedoids`] with per-iteration streaming: one
+/// [`IterationEvent`] per alternation, whose cumulative `sim_seconds`
+/// uses the same serial cost formula as the final outcome (so the last
+/// event matches the returned [`ClusterOutcome`] exactly).
+#[allow(clippy::too_many_arguments)]
+pub fn alternating_kmedoids_observed(
+    backend: &dyn ComputeBackend,
+    points: &[Point],
+    params: &IterParams,
+    init: Init,
+    update: UpdateStrategy,
+    cfg: &ClusterConfig,
+    cost_model: &CostModel,
+    dataset_bytes: u64,
+    hub: &mut ObserverHub,
 ) -> ClusterOutcome {
     let k = params.k;
     let mut rng = Rng::new(params.seed);
@@ -91,8 +121,29 @@ pub fn alternating_kmedoids(
             new_medoids.iter().zip(&medoids).all(|(a, b)| a.x == b.x && a.y == b.y);
         let cost_flat = cost.is_finite()
             && (cost - new_cost).abs() <= params.rel_tol * cost.abs().max(1.0);
+        let drift: f64 = new_medoids.iter().zip(&medoids).map(|(a, b)| a.dist2(b).sqrt()).sum();
         medoids = new_medoids;
         cost = new_cost;
+        // Running sim time with the same formula as the final outcome.
+        let work_so_far = TaskWork {
+            rows_parsed: points.len() as u64 * (iterations as u64 + 1),
+            dist_evals,
+            ..Default::default()
+        };
+        hub.iteration(&IterationEvent {
+            algorithm: "kmedoids-serial",
+            iteration: iterations,
+            cost,
+            medoid_drift: drift,
+            sim_seconds: serial_seconds(
+                cfg,
+                cost_model,
+                &work_so_far,
+                iterations as u64 + 1,
+                dataset_bytes,
+            ),
+            dist_evals,
+        });
         if unchanged || cost_flat {
             break;
         }

@@ -15,6 +15,7 @@
 //! The medoids file lives in an HBase cell table (`__medoids__`), matching
 //! the paper's "file of medoids" that mappers load each iteration.
 
+use super::observe::{IterationEvent, ObserverHub};
 use super::seeding::init_mr;
 use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
 use crate::geo::Point;
@@ -48,19 +49,45 @@ impl ParallelKMedoids {
         }
     }
 
-    /// Run to convergence on the simulated cluster.
+    /// Run to convergence on the simulated cluster. Panics on job-level
+    /// failure; use [`ParallelKMedoids::run_observed`] to propagate errors
+    /// and stream per-iteration events.
     pub fn run(
         &self,
         cluster: &mut Cluster,
         input: &Input,
         points: &Arc<Vec<Point>>,
     ) -> ClusterOutcome {
+        self.run_observed(cluster, input, points, &mut ObserverHub::default())
+            .expect("parallel k-medoids job failed")
+    }
+
+    /// The algorithm name events are tagged with (`Algorithm` vocabulary).
+    fn event_name(&self) -> &'static str {
+        match self.init {
+            Init::PlusPlus => "kmedoids++-mr",
+            Init::Random => "kmedoids-mr",
+        }
+    }
+
+    /// Run to convergence, emitting one [`IterationEvent`] per outer
+    /// iteration through `hub`. Event `sim_seconds`/`dist_evals` are
+    /// cumulative from the start of the fit (seeding included), so with
+    /// `label_pass == false` the last event matches the final
+    /// [`ClusterOutcome`] exactly.
+    pub fn run_observed(
+        &self,
+        cluster: &mut Cluster,
+        input: &Input,
+        points: &Arc<Vec<Point>>,
+        hub: &mut ObserverHub,
+    ) -> anyhow::Result<ClusterOutcome> {
         let k = self.params.k;
         let t_start = cluster.now().0;
 
         // §3.2 step (1): initial medoids.
         let (mut medoids, _seed_s) =
-            init_mr(self.init, cluster, input, points, &self.backend, k, self.params.seed);
+            init_mr(self.init, cluster, input, points, &self.backend, k, self.params.seed)?;
 
         // The paper's medoids file (HBase cell table).
         if cluster.hmaster.table("__medoids__").is_none() {
@@ -99,7 +126,7 @@ impl ParallelKMedoids {
                 decode_cluster_key(key) as usize % n
             }));
 
-            let result = cluster.run_job(&job);
+            let result = cluster.try_run_job(&job)?;
             let new_cost = result.counters.get("assign.cost.units") as f64;
             dist_evals += result.counters.get("work.dist.evals");
 
@@ -119,8 +146,18 @@ impl ParallelKMedoids {
                 .all(|(a, b)| a.x == b.x && a.y == b.y);
             let cost_flat = cost.is_finite()
                 && (cost - new_cost).abs() <= self.params.rel_tol * cost.abs().max(1.0);
+            let drift: f64 =
+                new_medoids.iter().zip(&medoids).map(|(a, b)| a.dist2(b).sqrt()).sum();
             medoids = new_medoids;
             cost = new_cost;
+            hub.iteration(&IterationEvent {
+                algorithm: self.event_name(),
+                iteration: iterations,
+                cost,
+                medoid_drift: drift,
+                sim_seconds: cluster.now().0 - t_start,
+                dist_evals,
+            });
             if self.params.fixed_iters.is_none() && (unchanged || cost_flat) {
                 break;
             }
@@ -128,19 +165,19 @@ impl ParallelKMedoids {
 
         // Optional final labeling pass (map-only).
         let labels = if self.label_pass {
-            Some(run_label_pass(cluster, input, points, &self.backend, &medoids))
+            Some(run_label_pass(cluster, input, points, &self.backend, &medoids)?)
         } else {
             None
         };
 
-        ClusterOutcome {
+        Ok(ClusterOutcome {
             medoids,
             labels,
             cost,
             iterations,
             sim_seconds: cluster.now().0 - t_start,
             dist_evals,
-        }
+        })
     }
 }
 
@@ -338,13 +375,13 @@ fn run_label_pass(
     points: &Arc<Vec<Point>>,
     backend: &Arc<dyn ComputeBackend>,
     medoids: &[Point],
-) -> Vec<u32> {
+) -> anyhow::Result<Vec<u32>> {
     let job = JobSpec::new(
         "kmedoids-labels",
         input.clone(),
         Arc::new(LabelMapper { backend: backend.clone(), medoids: medoids.to_vec() }),
     );
-    let result = cluster.run_job(&job);
+    let result = cluster.try_run_job(&job)?;
     let mut labels = vec![0u32; points.len()];
     for (key, val) in &result.output {
         let row_start = Dec::new(key).u64() as usize;
@@ -355,7 +392,7 @@ fn run_label_pass(
             i += 1;
         }
     }
-    labels
+    Ok(labels)
 }
 
 #[cfg(test)]

@@ -106,7 +106,7 @@ pub fn plus_plus_mr(
     backend: &Arc<dyn ComputeBackend>,
     k: usize,
     seed: u64,
-) -> (Vec<Point>, f64) {
+) -> anyhow::Result<(Vec<Point>, f64)> {
     assert!(k >= 1 && (k as usize) <= all_points.len());
     let mut rng = Rng::new(seed ^ 0x5EED);
     let mut medoids = vec![all_points[rng.below(all_points.len())]];
@@ -122,7 +122,7 @@ pub fn plus_plus_mr(
                 round: round as u32,
             }),
         );
-        let result = cluster.run_job(&job);
+        let result = cluster.try_run_job(&job)?;
         // Driver-side global draw: pick a split ∝ S_i, take its candidate.
         let mut weights = Vec::with_capacity(result.output.len());
         let mut cands = Vec::with_capacity(result.output.len());
@@ -138,7 +138,7 @@ pub fn plus_plus_mr(
         };
         medoids.push(next);
     }
-    (medoids, cluster.now().0 - t0)
+    Ok((medoids, cluster.now().0 - t0))
 }
 
 /// Dispatch on [`Init`] for the MR drivers.
@@ -150,14 +150,14 @@ pub fn init_mr(
     backend: &Arc<dyn ComputeBackend>,
     k: usize,
     seed: u64,
-) -> (Vec<Point>, f64) {
+) -> anyhow::Result<(Vec<Point>, f64)> {
     match init {
         Init::PlusPlus => plus_plus_mr(cluster, input, all_points, backend, k, seed),
         Init::Random => {
             // The paper's traditional init is a driver-side draw (no MR
             // pass needed — medoids file written directly).
             let mut rng = Rng::new(seed ^ 0x7A2D);
-            (random_init(all_points, k, &mut rng), 0.0)
+            Ok((random_init(all_points, k, &mut rng), 0.0))
         }
     }
 }
@@ -225,7 +225,7 @@ mod tests {
         let input = make_input(&points, 6);
         let be = backend();
         let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 5);
-        let (med, sim_s) = plus_plus_mr(&mut cluster, &input, &points, &be, 5, 77);
+        let (med, sim_s) = plus_plus_mr(&mut cluster, &input, &points, &be, 5, 77).unwrap();
         assert_eq!(med.len(), 5);
         assert!(sim_s > 0.0, "seeding consumed simulated time");
         // Quality: cost within 2x of a serial ++ run (same structure).
@@ -244,7 +244,7 @@ mod tests {
         let run = || {
             let input = make_input(&points, 5);
             let mut cluster = Cluster::new(ClusterConfig::test_cluster(3), 5);
-            plus_plus_mr(&mut cluster, &input, &points, &be, 4, 99).0
+            plus_plus_mr(&mut cluster, &input, &points, &be, 4, 99).unwrap().0
         };
         assert_eq!(run(), run());
     }

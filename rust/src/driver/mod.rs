@@ -1,24 +1,31 @@
-//! Experiment driver: end-to-end orchestration shared by the CLI, the
-//! examples, and every bench.
+//! Experiment driver: the paper's evaluation grid on top of the session
+//! API.
 //!
-//! One [`Experiment`] = one (dataset, cluster size, algorithm) cell of the
-//! paper's evaluation. [`run_experiment`] builds the simulated cluster,
-//! ingests the dataset into HBase (regions) + HDFS metadata, runs the
-//! requested algorithm, and returns the paper-comparable numbers
-//! (execution time in ms, iterations, cost, quality).
+//! One [`Experiment`] = one (dataset, cluster size, algorithm) cell of
+//! the paper's evaluation. Cells run against a
+//! [`crate::session::ClusterSession`]: [`run_cell`] fits the cell's
+//! algorithm (via [`Experiment::clusterer`] and the
+//! [`SpatialClusterer`] trait) on a dataset already ingested into the
+//! session, so suites build each cluster once, ingest each dataset once,
+//! and pay only the algorithm per cell. [`run_experiment`] remains as
+//! the one-call compatibility shim: it wraps a fresh single-use session
+//! per cell (generate → ingest → fit) and returns the same
+//! paper-comparable numbers as before the session redesign.
+//!
+//! Cells are JSON-serializable through [`spec`] (`kmedoids-mr run --spec
+//! cells.json` drives any grid from a file); the canonical grids behind
+//! each table/figure live in [`suites`].
 
+pub mod spec;
 pub mod suites;
 
-use crate::clustering::clarans::{clarans, ClaransParams};
-use crate::clustering::kmeans::ParallelKMeans;
-use crate::clustering::pam::alternating_kmedoids;
-use crate::clustering::parallel::ParallelKMedoids;
-use crate::clustering::{metrics, ClusterOutcome, Init, IterParams, UpdateStrategy};
+use crate::clustering::api::{Clarans, KMeans, KMedoids, SpatialClusterer};
+use crate::clustering::{metrics, UpdateStrategy};
 use crate::config::ClusterConfig;
-use crate::geo::datasets::{self, SpatialDataset, SpatialSpec};
-use crate::mapreduce::{input_from_table, Cluster};
+use crate::geo::datasets::SpatialSpec;
 use crate::runtime::ComputeBackend;
-use crate::sim::CostModel;
+use crate::session::{ClusterSession, DatasetHandle};
+use anyhow::Result;
 use std::sync::Arc;
 
 /// Algorithm selector (the rows of Fig. 5 plus ablations).
@@ -37,6 +44,14 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    pub const ALL: [Algorithm; 5] = [
+        Algorithm::KMedoidsPlusPlusMR,
+        Algorithm::KMedoidsRandomMR,
+        Algorithm::KMedoidsSerial,
+        Algorithm::Clarans,
+        Algorithm::KMeansMR,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::KMedoidsPlusPlusMR => "kmedoids++-mr",
@@ -59,7 +74,7 @@ impl Algorithm {
 }
 
 /// One experiment cell.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Experiment {
     pub algorithm: Algorithm,
     pub n_nodes: usize,
@@ -74,7 +89,12 @@ pub struct Experiment {
 }
 
 impl Experiment {
-    pub fn paper_cell(algorithm: Algorithm, n_nodes: usize, dataset: usize, seed: u64) -> Experiment {
+    pub fn paper_cell(
+        algorithm: Algorithm,
+        n_nodes: usize,
+        dataset: usize,
+        seed: u64,
+    ) -> Experiment {
         Experiment {
             algorithm,
             n_nodes,
@@ -92,12 +112,48 @@ impl Experiment {
         self.spec.n_points = (self.spec.n_points / scale_div).max(1000);
         self
     }
+
+    /// Build this cell's solver through the fluent builders — the single
+    /// mapping from the [`Algorithm`] grid axis onto [`SpatialClusterer`]
+    /// implementations.
+    pub fn clusterer(&self) -> Box<dyn SpatialClusterer> {
+        match self.algorithm {
+            Algorithm::KMedoidsPlusPlusMR | Algorithm::KMedoidsRandomMR => {
+                let mut b = KMedoids::mapreduce()
+                    .k(self.k)
+                    .seed(self.seed)
+                    .update(self.update)
+                    .label_pass(self.with_quality);
+                b = if self.algorithm == Algorithm::KMedoidsPlusPlusMR {
+                    b.plus_plus()
+                } else {
+                    b.random_init()
+                };
+                if let Some(n) = self.fixed_iters {
+                    b = b.fixed_iters(n);
+                }
+                Box::new(b.build())
+            }
+            Algorithm::KMedoidsSerial => Box::new(
+                KMedoids::serial()
+                    .k(self.k)
+                    .seed(self.seed)
+                    .update(self.update)
+                    .label_pass(self.with_quality)
+                    .build(),
+            ),
+            Algorithm::Clarans => Box::new(Clarans::serial().k(self.k).seed(self.seed).build()),
+            Algorithm::KMeansMR => {
+                Box::new(KMeans::mapreduce().plus_plus().k(self.k).seed(self.seed).build())
+            }
+        }
+    }
 }
 
 /// Result row: everything the paper's tables/figures report.
 #[derive(Debug, Clone)]
 pub struct ExperimentResult {
-    pub algorithm: &'static str,
+    pub algorithm: String,
     pub n_nodes: usize,
     pub n_points: usize,
     pub dataset_mb: f64,
@@ -112,105 +168,75 @@ pub struct ExperimentResult {
     pub wall_s: f64,
 }
 
-/// Build a simulated cluster with the dataset ingested into HBase + HDFS.
-pub fn setup_cluster(
-    cfg: &ClusterConfig,
-    dataset: &SpatialDataset,
-    seed: u64,
-) -> (Cluster, crate::mapreduce::Input, Arc<Vec<crate::geo::Point>>) {
-    let mut cluster = Cluster::new(cfg.clone(), seed);
-    let points = Arc::new(dataset.points.clone());
-    let row_bytes = datasets::paper_row_bytes();
-    let total_bytes = points.len() as u64 * row_bytes;
-    // HDFS file backing the HBase table's HFiles.
-    cluster.namenode.create_file("hbase/points", points.len() as u64, total_bytes);
-    // HBase regions sized like DFS blocks (one split per region).
-    cluster.hmaster.create_points_table("points", points.clone(), row_bytes, cfg.dfs_block_bytes);
-    let input = input_from_table(&cluster.hmaster, "points");
-    (cluster, input, points)
-}
-
-/// Run one experiment cell end to end.
-pub fn run_experiment(exp: &Experiment, backend: &Arc<dyn ComputeBackend>) -> ExperimentResult {
+/// Run one cell against a dataset already ingested into `session`. The
+/// session's registered observers stream the fit's iteration events; the
+/// session clock and counters keep accruing across cells.
+pub fn run_cell(
+    session: &mut ClusterSession,
+    exp: &Experiment,
+    data: &DatasetHandle,
+) -> Result<ExperimentResult> {
+    // The session's cluster is what actually runs; refuse a cell whose
+    // nodes axis disagrees instead of silently collapsing a scaling grid
+    // onto one cluster size.
+    anyhow::ensure!(
+        exp.n_nodes == session.config().nodes.len(),
+        "experiment wants {} nodes but the session cluster has {}",
+        exp.n_nodes,
+        session.config().nodes.len()
+    );
     let wall0 = std::time::Instant::now();
-    let dataset = datasets::generate(&exp.spec);
-    let cfg = ClusterConfig::paper_cluster().cluster_subset(exp.n_nodes);
-    let cost_model = CostModel::default();
-    let row_bytes = datasets::paper_row_bytes();
-    let dataset_bytes = dataset.points.len() as u64 * row_bytes;
-
-    let outcome: ClusterOutcome = match exp.algorithm {
-        Algorithm::KMedoidsPlusPlusMR | Algorithm::KMedoidsRandomMR => {
-            let (mut cluster, input, points) = setup_cluster(&cfg, &dataset, exp.seed);
-            cluster.cost = cost_model;
-            let mut params = IterParams::new(exp.k, exp.seed);
-            params.fixed_iters = exp.fixed_iters;
-            let mut drv = ParallelKMedoids::new(backend.clone(), params);
-            drv.init = if exp.algorithm == Algorithm::KMedoidsPlusPlusMR {
-                Init::PlusPlus
-            } else {
-                Init::Random
-            };
-            drv.update = exp.update;
-            drv.label_pass = exp.with_quality;
-            drv.run(&mut cluster, &input, &points)
-        }
-        Algorithm::KMeansMR => {
-            let (mut cluster, input, points) = setup_cluster(&cfg, &dataset, exp.seed);
-            cluster.cost = cost_model;
-            let km = ParallelKMeans {
-                backend: backend.clone(),
-                init: Init::PlusPlus,
-                params: IterParams::new(exp.k, exp.seed),
-            };
-            km.run(&mut cluster, &input, &points)
-        }
-        Algorithm::KMedoidsSerial => alternating_kmedoids(// "traditional K-Medoids" (Fig. 5)
-            backend.as_ref(),
-            &dataset.points,
-            &IterParams::new(exp.k, exp.seed),
-            Init::Random,
-            exp.update,
-            &cfg,
-            &cost_model,
-            dataset_bytes,
-        ),
-        Algorithm::Clarans => {
-            // Sampled cost evaluation above 100k points (see DESIGN.md).
-            // The sample grows with n so CLARANS' time keeps its paper
-            // scaling with dataset size.
-            let n = dataset.points.len();
-            let mut p = ClaransParams::recommended(exp.k, n, exp.seed);
-            if n > 100_000 {
-                p.cost_sample = (16_000 + n / 100).min(n);
-                p.max_neighbor = p.max_neighbor.min(1_500);
-            }
-            clarans(&dataset.points, &p, &cfg, &cost_model, dataset_bytes)
-        }
-    };
+    let outcome = exp.clusterer().fit(session, data)?;
 
     let ari = if exp.with_quality {
+        let truth = session.dataset_truth(data).ok_or_else(|| {
+            anyhow::anyhow!(
+                "with_quality requires generator ground truth, but dataset {:?} was ingested \
+                 without it (use ingest/ingest_spec instead of ingest_points)",
+                data.name()
+            )
+        })?;
+        let points = session.dataset_points(data);
         let labels = match &outcome.labels {
             Some(l) => l.clone(),
-            None => metrics::brute_labels(&dataset.points, &outcome.medoids),
+            None => metrics::brute_labels(&points, &outcome.medoids),
         };
-        Some(metrics::adjusted_rand_index(&labels, &dataset.truth))
+        Some(metrics::adjusted_rand_index(&labels, truth))
     } else {
         None
     };
 
-    ExperimentResult {
-        algorithm: exp.algorithm.name(),
-        n_nodes: exp.n_nodes,
-        n_points: dataset.points.len(),
-        dataset_mb: dataset_bytes as f64 / (1u64 << 20) as f64,
+    Ok(ExperimentResult {
+        algorithm: exp.algorithm.name().to_string(),
+        n_nodes: session.config().nodes.len(),
+        n_points: session.dataset_n_points(data),
+        dataset_mb: session.dataset_bytes(data) as f64 / (1u64 << 20) as f64,
         time_ms: (outcome.sim_seconds * 1e3).round() as u64,
         iterations: outcome.iterations,
         cost: outcome.cost,
         dist_evals: outcome.dist_evals,
         ari,
         wall_s: wall0.elapsed().as_secs_f64(),
-    }
+    })
+}
+
+/// Compatibility shim: run one cell end to end on a fresh single-use
+/// session (generate → ingest → fit), exactly like the pre-session API.
+/// Suites that run many cells should build a [`ClusterSession`] and use
+/// [`run_cell`] instead, paying cluster construction and ingest once.
+pub fn run_experiment(exp: &Experiment, backend: &Arc<dyn ComputeBackend>) -> ExperimentResult {
+    let wall0 = std::time::Instant::now();
+    let mut session = ClusterSession::builder()
+        .cluster(ClusterConfig::paper_cluster().cluster_subset(exp.n_nodes))
+        .backend(backend.clone())
+        .seed(exp.seed)
+        .build()
+        .expect("session build cannot fail with an explicit backend");
+    let data = session.ingest_spec("points", &exp.spec);
+    let mut r = run_cell(&mut session, exp, &data)
+        .unwrap_or_else(|e| panic!("experiment {} failed: {e:#}", exp.algorithm.name()));
+    r.wall_s = wall0.elapsed().as_secs_f64();
+    r
 }
 
 #[cfg(test)]
@@ -268,13 +294,7 @@ mod tests {
 
     #[test]
     fn algorithm_names_roundtrip() {
-        for a in [
-            Algorithm::KMedoidsPlusPlusMR,
-            Algorithm::KMedoidsRandomMR,
-            Algorithm::KMedoidsSerial,
-            Algorithm::Clarans,
-            Algorithm::KMeansMR,
-        ] {
+        for a in Algorithm::ALL {
             assert_eq!(Algorithm::parse(a.name()), Some(a));
         }
         assert_eq!(Algorithm::parse("nope"), None);
@@ -287,5 +307,48 @@ mod tests {
         assert_eq!(e.k, 9);
         let scaled = e.scaled(100);
         assert_eq!(scaled.spec.n_points, 13_167);
+    }
+
+    #[test]
+    fn every_algorithm_is_runnable_through_the_trait() {
+        // All five grid algorithms fit on ONE shared session + one
+        // ingested dataset, through `SpatialClusterer` only.
+        let mut session = ClusterSession::builder().test(4).seed(71).build().unwrap();
+        let mut spec = SpatialSpec::new(3000, 4, 71);
+        spec.outlier_frac = 0.0;
+        let data = session.ingest_spec("grid", &spec);
+        for algorithm in Algorithm::ALL {
+            let mut exp = quick_exp(algorithm, 4);
+            exp.k = 4;
+            exp.with_quality = false;
+            let r = run_cell(&mut session, &exp, &data)
+                .unwrap_or_else(|e| panic!("{} failed: {e:#}", algorithm.name()));
+            assert_eq!(r.algorithm, algorithm.name());
+            assert!(r.time_ms > 0, "{}", algorithm.name());
+            assert!(r.cost > 0.0, "{}", algorithm.name());
+            assert_eq!(r.n_points, 3000);
+        }
+    }
+
+    #[test]
+    fn shim_matches_session_path_on_sim_time() {
+        // The compatibility shim and an explicitly-built fresh session
+        // must produce identical simulated results.
+        let exp = quick_exp(Algorithm::KMedoidsPlusPlusMR, 4);
+        let shim = run_experiment(&exp, &be());
+
+        let mut session = ClusterSession::builder()
+            .cluster(ClusterConfig::paper_cluster().cluster_subset(exp.n_nodes))
+            .backend(be())
+            .seed(exp.seed)
+            .build()
+            .unwrap();
+        let data = session.ingest_spec("points", &exp.spec);
+        let direct = run_cell(&mut session, &exp, &data).unwrap();
+
+        assert_eq!(shim.time_ms, direct.time_ms);
+        assert_eq!(shim.cost, direct.cost);
+        assert_eq!(shim.dist_evals, direct.dist_evals);
+        assert_eq!(shim.ari, direct.ari);
     }
 }

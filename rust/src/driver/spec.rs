@@ -1,0 +1,495 @@
+//! Run-spec JSON: (de)serialize [`Experiment`] cells so any grid cell —
+//! or a whole grid — can be driven from a file:
+//!
+//! ```text
+//! kmedoids-mr run --spec cells.json
+//! ```
+//!
+//! A spec file is either one cell object or an array of them. Every
+//! field except the dataset has a default (`algorithm` defaults to the
+//! paper's `kmedoids++-mr`, `nodes` to 7, `k` to 9, `seed` to 42,
+//! `update` to the paper-scale sampled-adaptive strategy):
+//!
+//! ```text
+//! {
+//!   "algorithm": "kmedoids++-mr",
+//!   "nodes": 7,
+//!   "k": 9,
+//!   "seed": 42,
+//!   "with_quality": false,
+//!   "fixed_iters": 6,
+//!   "update": {"kind": "sampled_adaptive",
+//!              "candidates": 256, "frac_div": 4, "min_sample": 16384},
+//!   "dataset": {"n_points": 100000, "n_hotspots": 9, "seed": 42}
+//! }
+//! ```
+//!
+//! The dataset block also accepts the paper's Table 5 shorthand:
+//! `{"paper_dataset": 0, "scale_div": 100}`.
+
+use super::{Algorithm, Experiment};
+use crate::clustering::UpdateStrategy;
+use crate::geo::datasets::SpatialSpec;
+use crate::util::json::{obj, Json};
+use anyhow::{bail, Context, Result};
+
+// ---- numeric decoding -------------------------------------------------------
+// `Json::as_usize`/`as_u64` are saturating f64 casts (-5 → 0), which would
+// silently accept nonsense; spec fields go through checked decoders instead.
+
+/// A strictly positive integer (counts: points, k, nodes, samples, ...).
+fn as_pos_usize(v: &Json, what: &str) -> Result<usize> {
+    let f = v.as_f64().with_context(|| format!("{what} must be a number"))?;
+    if !(f >= 1.0) || f.fract() != 0.0 || f > 9e15 {
+        bail!("{what} must be a positive integer, got {f}");
+    }
+    Ok(f as usize)
+}
+
+/// A non-negative integer (indices, seeds).
+fn as_nonneg_u64(v: &Json, what: &str) -> Result<u64> {
+    let f = v.as_f64().with_context(|| format!("{what} must be a number"))?;
+    if !(f >= 0.0) || f.fract() != 0.0 || f > 9e15 {
+        bail!("{what} must be a non-negative integer, got {f}");
+    }
+    Ok(f as u64)
+}
+
+/// Reject unknown keys so a typo'd field (`"node"` for `"nodes"`) errors
+/// instead of silently running with the default — the same rule the CLI
+/// flag parser enforces.
+fn check_known_keys(j: &Json, what: &str, allowed: &[&str]) -> Result<()> {
+    let obj = j.as_obj().with_context(|| format!("{what} must be a JSON object"))?;
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            bail!("unknown key {key:?} in {what} (allowed: {})", allowed.join(", "));
+        }
+    }
+    Ok(())
+}
+
+// ---- UpdateStrategy ---------------------------------------------------------
+
+pub fn update_to_json(u: &UpdateStrategy) -> Json {
+    match u {
+        UpdateStrategy::Exact => obj(vec![("kind", Json::Str("exact".into()))]),
+        UpdateStrategy::Sampled { candidates, member_sample } => obj(vec![
+            ("kind", Json::Str("sampled".into())),
+            ("candidates", Json::Num(*candidates as f64)),
+            ("member_sample", Json::Num(*member_sample as f64)),
+        ]),
+        UpdateStrategy::SampledAdaptive { candidates, frac_div, min_sample } => obj(vec![
+            ("kind", Json::Str("sampled_adaptive".into())),
+            ("candidates", Json::Num(*candidates as f64)),
+            ("frac_div", Json::Num(*frac_div as f64)),
+            ("min_sample", Json::Num(*min_sample as f64)),
+        ]),
+        UpdateStrategy::CentroidNearest => {
+            obj(vec![("kind", Json::Str("centroid_nearest".into()))])
+        }
+    }
+}
+
+pub fn update_from_json(j: &Json) -> Result<UpdateStrategy> {
+    let kind = j.get("kind").and_then(|k| k.as_str()).context("update.kind missing")?;
+    // Per-kind key sets: a knob the kind ignores is an error, not noise.
+    let allowed: &[&str] = match kind {
+        "exact" | "centroid_nearest" => &["kind"],
+        "sampled" => &["kind", "candidates", "member_sample"],
+        "sampled_adaptive" => &["kind", "candidates", "frac_div", "min_sample"],
+        other => bail!(
+            "unknown update.kind {other:?} (exact|sampled|sampled_adaptive|centroid_nearest)"
+        ),
+    };
+    check_known_keys(j, &format!("update (kind {kind:?})"), allowed)?;
+    let num = |key: &str| {
+        let v = j.get(key).with_context(|| format!("update.{key} missing"))?;
+        as_pos_usize(v, &format!("update.{key}"))
+    };
+    Ok(match kind {
+        "exact" => UpdateStrategy::Exact,
+        "sampled" => UpdateStrategy::Sampled {
+            candidates: num("candidates")?,
+            member_sample: num("member_sample")?,
+        },
+        "sampled_adaptive" => UpdateStrategy::SampledAdaptive {
+            candidates: num("candidates")?,
+            frac_div: num("frac_div")?,
+            min_sample: num("min_sample")?,
+        },
+        _ => UpdateStrategy::CentroidNearest,
+    })
+}
+
+// ---- SpatialSpec ------------------------------------------------------------
+
+pub fn spatial_spec_to_json(s: &SpatialSpec) -> Json {
+    obj(vec![
+        ("n_points", Json::Num(s.n_points as f64)),
+        ("n_hotspots", Json::Num(s.n_hotspots as f64)),
+        ("extent", Json::Num(s.extent as f64)),
+        ("sigma_frac", Json::Num(s.sigma_frac as f64)),
+        ("noise_frac", Json::Num(s.noise_frac as f64)),
+        ("outlier_frac", Json::Num(s.outlier_frac as f64)),
+        ("seed", Json::Num(s.seed as f64)),
+    ])
+}
+
+pub fn spatial_spec_from_json(j: &Json, default_seed: u64) -> Result<SpatialSpec> {
+    let seed = match j.get("seed") {
+        Some(v) => as_nonneg_u64(v, "dataset.seed")?,
+        None => default_seed,
+    };
+    if let Some(v) = j.get("paper_dataset") {
+        check_known_keys(j, "dataset", &["paper_dataset", "scale_div", "seed"])?;
+        let i = as_nonneg_u64(v, "dataset.paper_dataset")? as usize;
+        if i > 2 {
+            bail!("dataset.paper_dataset must be 0, 1 or 2 (Table 5)");
+        }
+        let scale = match j.get("scale_div") {
+            Some(v) => as_pos_usize(v, "dataset.scale_div")?,
+            None => 1,
+        };
+        return Ok(SpatialSpec::paper_dataset_scaled(i, scale, seed));
+    }
+    check_known_keys(
+        j,
+        "dataset",
+        &["n_points", "n_hotspots", "seed", "extent", "sigma_frac", "noise_frac", "outlier_frac"],
+    )?;
+    let n_points = as_pos_usize(
+        j.get("n_points").context(
+            "dataset.n_points missing (or use {\"paper_dataset\": 0, \"scale_div\": N})",
+        )?,
+        "dataset.n_points",
+    )?;
+    let n_hotspots = match j.get("n_hotspots") {
+        Some(v) => as_pos_usize(v, "dataset.n_hotspots")?,
+        None => 9,
+    };
+    let mut s = SpatialSpec::new(n_points, n_hotspots, seed);
+    let mut float_field = |key: &str, slot: &mut f32, min: f64, max: f64| -> Result<()> {
+        if let Some(v) = j.get(key) {
+            let f = v.as_f64().with_context(|| format!("dataset.{key} must be a number"))?;
+            if !(f >= min && f <= max) {
+                bail!("dataset.{key} must be in [{min}, {max}], got {f}");
+            }
+            *slot = f as f32;
+        }
+        Ok(())
+    };
+    float_field("extent", &mut s.extent, 1e-6, 1e12)?;
+    float_field("sigma_frac", &mut s.sigma_frac, 1e-9, 1.0)?;
+    float_field("noise_frac", &mut s.noise_frac, 0.0, 1.0)?;
+    float_field("outlier_frac", &mut s.outlier_frac, 0.0, 1.0)?;
+    Ok(s)
+}
+
+// ---- Experiment -------------------------------------------------------------
+
+/// Does this algorithm honor the `update` strategy knob?
+fn algorithm_uses_update(a: Algorithm) -> bool {
+    matches!(
+        a,
+        Algorithm::KMedoidsPlusPlusMR | Algorithm::KMedoidsRandomMR | Algorithm::KMedoidsSerial
+    )
+}
+
+/// Does this algorithm honor `fixed_iters` (controlled iterations)?
+fn algorithm_uses_fixed_iters(a: Algorithm) -> bool {
+    matches!(a, Algorithm::KMedoidsPlusPlusMR | Algorithm::KMedoidsRandomMR)
+}
+
+pub fn experiment_to_json(e: &Experiment) -> Json {
+    let mut pairs = vec![
+        ("algorithm", Json::Str(e.algorithm.name().to_string())),
+        ("nodes", Json::Num(e.n_nodes as f64)),
+        ("k", Json::Num(e.k as f64)),
+        ("seed", Json::Num(e.seed as f64)),
+        ("with_quality", Json::Bool(e.with_quality)),
+        ("dataset", spatial_spec_to_json(&e.spec)),
+    ];
+    // Only emit knobs the algorithm honors, mirroring the parse-side
+    // validation (a cell never claims settings its solver would ignore).
+    if algorithm_uses_update(e.algorithm) {
+        pairs.push(("update", update_to_json(&e.update)));
+    }
+    if algorithm_uses_fixed_iters(e.algorithm) {
+        pairs.push((
+            "fixed_iters",
+            match e.fixed_iters {
+                Some(n) => Json::Num(n as f64),
+                None => Json::Null,
+            },
+        ));
+    }
+    obj(pairs)
+}
+
+pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
+    check_known_keys(
+        j,
+        "spec cell",
+        &["algorithm", "nodes", "k", "seed", "with_quality", "update", "fixed_iters", "dataset"],
+    )?;
+    let algorithm = match j.get("algorithm").and_then(|a| a.as_str()) {
+        Some(s) => Algorithm::parse(s)
+            .with_context(|| format!("unknown algorithm {s:?} in run spec"))?,
+        None => Algorithm::KMedoidsPlusPlusMR,
+    };
+    let seed = match j.get("seed") {
+        Some(v) => as_nonneg_u64(v, "seed")?,
+        None => 42,
+    };
+    let spec = spatial_spec_from_json(j.get("dataset").context("dataset block missing")?, seed)?;
+    let update = match j.get("update") {
+        Some(u) => {
+            // Reject rather than silently ignore: clarans/kmeans-mr run
+            // with their own update rules.
+            if !algorithm_uses_update(algorithm) {
+                bail!(
+                    "algorithm {:?} ignores \"update\" — remove it from the spec cell",
+                    algorithm.name()
+                );
+            }
+            update_from_json(u)?
+        }
+        None => UpdateStrategy::paper_scale_default(),
+    };
+    let fixed_iters = match j.get("fixed_iters") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            if !algorithm_uses_fixed_iters(algorithm) {
+                bail!(
+                    "algorithm {:?} ignores \"fixed_iters\" (only the MR k-medoids drivers \
+                     support controlled iterations) — remove it from the spec cell",
+                    algorithm.name()
+                );
+            }
+            Some(as_pos_usize(v, "fixed_iters")?)
+        }
+    };
+    let n_nodes = match j.get("nodes") {
+        Some(v) => as_pos_usize(v, "nodes")?,
+        None => 7,
+    };
+    let k = match j.get("k") {
+        Some(v) => as_pos_usize(v, "k")?,
+        None => 9,
+    };
+    let with_quality = match j.get("with_quality") {
+        Some(v) => v.as_bool().context("with_quality must be true or false")?,
+        None => false,
+    };
+    Ok(Experiment { algorithm, n_nodes, spec, k, update, seed, with_quality, fixed_iters })
+}
+
+/// Serialize a grid of cells (array form).
+pub fn experiments_to_json(cells: &[Experiment]) -> Json {
+    Json::Arr(cells.iter().map(experiment_to_json).collect())
+}
+
+/// Parse a spec source: one cell object or an array of cells.
+pub fn experiments_from_str(src: &str) -> Result<Vec<Experiment>> {
+    let j = Json::parse(src).context("run spec is not valid JSON")?;
+    match &j {
+        Json::Arr(cells) => {
+            if cells.is_empty() {
+                bail!("run spec array is empty");
+            }
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| experiment_from_json(c).with_context(|| format!("spec cell {i}")))
+                .collect()
+        }
+        Json::Obj(_) => Ok(vec![experiment_from_json(&j)?]),
+        _ => bail!("run spec must be a JSON object or array of objects"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_cells() -> Vec<Experiment> {
+        let updates = [
+            UpdateStrategy::Exact,
+            UpdateStrategy::Sampled { candidates: 64, member_sample: 1024 },
+            UpdateStrategy::SampledAdaptive { candidates: 256, frac_div: 4, min_sample: 16_384 },
+            UpdateStrategy::CentroidNearest,
+        ];
+        Algorithm::ALL
+            .iter()
+            .zip(updates.iter().cycle())
+            .enumerate()
+            .map(|(i, (&algorithm, &update))| {
+                let mut e = Experiment::paper_cell(algorithm, 4 + (i % 4), i % 3, 7 + i as u64)
+                    .scaled(100);
+                // Only give a cell knobs its algorithm honors — the spec
+                // format refuses settings the solver would ignore.
+                if algorithm_uses_update(algorithm) {
+                    e.update = update;
+                }
+                e.k = 3 + i;
+                e.with_quality = i % 2 == 0;
+                e.fixed_iters = if algorithm_uses_fixed_iters(algorithm) && i % 2 == 1 {
+                    Some(6)
+                } else {
+                    None
+                };
+                e
+            })
+            .collect()
+    }
+
+    #[test]
+    fn experiment_json_roundtrip_all_algorithms_and_updates() {
+        for cell in sample_cells() {
+            let text = experiment_to_json(&cell).to_string();
+            let parsed = Json::parse(&text).unwrap();
+            let back = experiment_from_json(&parsed).unwrap();
+            assert_eq!(back, cell, "roundtrip mismatch for {}", cell.algorithm.name());
+        }
+    }
+
+    #[test]
+    fn grid_roundtrips_as_array() {
+        let cells = sample_cells();
+        let text = experiments_to_json(&cells).to_string();
+        let back = experiments_from_str(&text).unwrap();
+        assert_eq!(back, cells);
+    }
+
+    #[test]
+    fn single_object_spec_parses() {
+        let cells = experiments_from_str(
+            r#"{"dataset": {"n_points": 5000, "n_hotspots": 4}, "k": 4, "nodes": 5}"#,
+        )
+        .unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].algorithm, Algorithm::KMedoidsPlusPlusMR, "default algorithm");
+        assert_eq!(cells[0].k, 4);
+        assert_eq!(cells[0].n_nodes, 5);
+        assert_eq!(cells[0].spec.n_points, 5000);
+        assert_eq!(cells[0].seed, 42, "default seed");
+        assert_eq!(cells[0].update, UpdateStrategy::paper_scale_default());
+    }
+
+    #[test]
+    fn paper_dataset_shorthand() {
+        let cells = experiments_from_str(
+            r#"{"algorithm": "clarans", "dataset": {"paper_dataset": 1, "scale_div": 200}}"#,
+        )
+        .unwrap();
+        let expect = SpatialSpec::paper_dataset_scaled(1, 200, 42);
+        assert_eq!(cells[0].spec, expect);
+        assert_eq!(cells[0].algorithm, Algorithm::Clarans);
+    }
+
+    #[test]
+    fn bad_specs_have_helpful_errors() {
+        let e = experiments_from_str("not json").unwrap_err();
+        assert!(format!("{e:#}").contains("valid JSON"), "{e:#}");
+
+        let e = experiments_from_str(r#"{"algorithm": "nope", "dataset": {"n_points": 10}}"#)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("nope"), "{e:#}");
+
+        let e = experiments_from_str(r#"{"algorithm": "clarans"}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("dataset"), "{e:#}");
+
+        let e = experiments_from_str(
+            r#"{"dataset": {"n_points": 10}, "update": {"kind": "bogus"}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("bogus"), "{e:#}");
+
+        assert!(experiments_from_str("[]").is_err());
+        assert!(experiments_from_str("3").is_err());
+    }
+
+    #[test]
+    fn negative_zero_and_fractional_numbers_are_rejected() {
+        // The raw f64→usize cast would saturate -5 to 0; the spec layer
+        // must refuse instead of ingesting an empty dataset.
+        for bad in ["-5", "0", "2.5"] {
+            let src = format!(r#"{{"dataset": {{"n_points": {bad}}}}}"#);
+            let e = experiments_from_str(&src).unwrap_err();
+            assert!(format!("{e:#}").contains("n_points"), "{bad}: {e:#}");
+        }
+        let e = experiments_from_str(
+            r#"{"dataset": {"n_points": 100}, "fixed_iters": -1}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("fixed_iters"), "{e:#}");
+        let e = experiments_from_str(r#"{"dataset": {"n_points": 100}, "nodes": 0}"#)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("nodes"), "{e:#}");
+        let e = experiments_from_str(r#"{"dataset": {"paper_dataset": -1}}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("paper_dataset"), "{e:#}");
+    }
+
+    #[test]
+    fn typoed_and_mistyped_fields_are_rejected_not_defaulted() {
+        // "node" (typo for "nodes") must error, not run with 7 nodes.
+        let e = experiments_from_str(r#"{"node": 4, "dataset": {"n_points": 1000}}"#)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("node"), "{e:#}");
+
+        let e = experiments_from_str(
+            r#"{"dataset": {"n_points": 1000, "outliers": 0.5}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("outliers"), "{e:#}");
+
+        // Wrong types on optional fields error instead of silently
+        // falling back to the default.
+        let e = experiments_from_str(
+            r#"{"with_quality": "yes", "dataset": {"n_points": 1000}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("with_quality"), "{e:#}");
+        let e = experiments_from_str(
+            r#"{"dataset": {"n_points": 1000, "outlier_frac": "0.5"}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("outlier_frac"), "{e:#}");
+
+        // A knob a specific update kind ignores is rejected too.
+        let e = experiments_from_str(
+            r#"{"dataset": {"n_points": 1000},
+                "update": {"kind": "exact", "candidates": 8}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("candidates"), "{e:#}");
+    }
+
+    #[test]
+    fn knobs_unsupported_by_the_algorithm_are_rejected_not_dropped() {
+        // clarans ignores `update`: refusing beats silently running
+        // something other than what the spec says.
+        let e = experiments_from_str(
+            r#"{"algorithm": "clarans", "dataset": {"n_points": 10},
+                "update": {"kind": "exact"}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("update"), "{e:#}");
+
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmeans-mr", "dataset": {"n_points": 10}, "fixed_iters": 6}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("fixed_iters"), "{e:#}");
+
+        // A null fixed_iters is the explicit "not set" spelling — fine
+        // anywhere, as is `update` on any k-medoids variant.
+        let cells = experiments_from_str(
+            r#"{"algorithm": "kmedoids-serial", "dataset": {"n_points": 10},
+                "fixed_iters": null, "update": {"kind": "exact"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].update, UpdateStrategy::Exact);
+        assert_eq!(cells[0].fixed_iters, None);
+    }
+}

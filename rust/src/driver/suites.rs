@@ -2,28 +2,98 @@
 //!
 //! Used by the CLI (`kmedoids-mr bench ...`), the cargo benches, and the
 //! end-to-end example, so every entry point reproduces the same numbers.
+//!
+//! Session economics: each suite builds one [`ClusterSession`] per
+//! cluster size, generates each dataset **once**, and ingests the shared
+//! point set into every session ([`ClusterSession::ingest_points`] shares
+//! the `Arc`, no copy) — cells then pay only the algorithm, not cluster
+//! construction + generation + ingest as the old per-cell driver did.
+//! With [`SuiteOpts::trace`] the sessions stream live per-iteration
+//! progress to stderr through a [`StderrProgress`] observer.
 
-use super::{run_experiment, Algorithm, Experiment, ExperimentResult};
+use super::{run_cell, Algorithm, Experiment, ExperimentResult};
+use crate::clustering::observe::StderrProgress;
 use crate::clustering::{Init, UpdateStrategy};
+use crate::config::ClusterConfig;
+use crate::geo::datasets::{generate, SpatialSpec};
+use crate::geo::Point;
 use crate::runtime::ComputeBackend;
+use crate::session::{ClusterSession, DatasetHandle};
 use std::sync::Arc;
 
-/// Table 6 / Fig. 3 / Fig. 4: K-Medoids++ MR over 4–7 nodes × 3 datasets.
-/// `scale_div` divides the dataset sizes (1 = the paper's full Table 5).
-pub fn table6_suite(
+/// Shared suite knobs.
+#[derive(Debug, Clone)]
+pub struct SuiteOpts {
+    /// Divide the Table 5 dataset sizes (1 = the paper's full scale).
+    pub scale_div: usize,
+    pub seed: u64,
+    /// Stream per-iteration events to stderr while cells run.
+    pub trace: bool,
+}
+
+impl SuiteOpts {
+    pub fn new(scale_div: usize, seed: u64) -> SuiteOpts {
+        SuiteOpts { scale_div: scale_div.max(1), seed, trace: false }
+    }
+    pub fn with_trace(mut self, trace: bool) -> SuiteOpts {
+        self.trace = trace;
+        self
+    }
+}
+
+/// Generate the three Table 5 datasets once (shared across sessions).
+/// `scale_div` is re-clamped here because `SuiteOpts` fields are public.
+fn paper_datasets(opts: &SuiteOpts) -> Vec<Arc<Vec<Point>>> {
+    (0..3)
+        .map(|i| {
+            let spec = SpatialSpec::paper_dataset_scaled(i, opts.scale_div.max(1), opts.seed);
+            Arc::new(generate(&spec).points)
+        })
+        .collect()
+}
+
+fn suite_session(
     backend: &Arc<dyn ComputeBackend>,
-    scale_div: usize,
-    seed: u64,
-) -> Vec<ExperimentResult> {
+    nodes: usize,
+    opts: &SuiteOpts,
+    datasets: &[Arc<Vec<Point>>],
+) -> (ClusterSession, Vec<DatasetHandle>) {
+    let mut session = ClusterSession::builder()
+        .cluster(ClusterConfig::paper_cluster())
+        .nodes(nodes)
+        .backend(backend.clone())
+        .seed(opts.seed)
+        .build()
+        .expect("session build cannot fail with an explicit backend");
+    if opts.trace {
+        session.add_observer(Box::new(StderrProgress::new()));
+    }
+    let handles = datasets
+        .iter()
+        .enumerate()
+        .map(|(i, pts)| session.ingest_points(&format!("dataset{}", i + 1), pts.clone()))
+        .collect();
+    (session, handles)
+}
+
+/// Table 6 / Fig. 3 / Fig. 4: K-Medoids++ MR over 4–7 nodes × 3 datasets.
+pub fn table6_suite(backend: &Arc<dyn ComputeBackend>, opts: &SuiteOpts) -> Vec<ExperimentResult> {
+    let datasets = paper_datasets(opts);
+    // One session per cluster size, each with all three datasets ingested.
+    let mut sessions: Vec<(ClusterSession, Vec<DatasetHandle>)> =
+        (4..=7).map(|nodes| suite_session(backend, nodes, opts, &datasets)).collect();
+
     let mut out = Vec::new();
     for dataset in 0..3 {
-        for nodes in 4..=7 {
-            let mut exp = Experiment::paper_cell(Algorithm::KMedoidsPlusPlusMR, nodes, dataset, seed)
-                .scaled(scale_div.max(1));
+        for (si, nodes) in (4..=7).enumerate() {
+            let mut exp =
+                Experiment::paper_cell(Algorithm::KMedoidsPlusPlusMR, nodes, dataset, opts.seed)
+                    .scaled(opts.scale_div.max(1));
             // Controlled iteration count: isolates the scaling behaviour
             // from per-dataset convergence luck (EXPERIMENTS.md §Method).
             exp.fixed_iters = Some(6);
-            let r = run_experiment(&exp, backend);
+            let (session, handles) = &mut sessions[si];
+            let r = run_cell(session, &exp, &handles[dataset]).expect("table6 cell failed");
             eprintln!(
                 "  [table6] dataset {} x {} nodes -> {} ms ({} iters, wall {:.1}s)",
                 dataset + 1,
@@ -42,11 +112,10 @@ pub fn table6_suite(
 /// "classic clustering algorithms for comparison are traditional
 /// K-Medoids algorithm and CLARANS algorithm": the proposed parallel
 /// K-Medoids++ (7 nodes) against the serial comparators on the master.
-pub fn fig5_suite(
-    backend: &Arc<dyn ComputeBackend>,
-    scale_div: usize,
-    seed: u64,
-) -> Vec<ExperimentResult> {
+/// One shared 7-node session hosts all nine cells.
+pub fn fig5_suite(backend: &Arc<dyn ComputeBackend>, opts: &SuiteOpts) -> Vec<ExperimentResult> {
+    let datasets = paper_datasets(opts);
+    let (mut session, handles) = suite_session(backend, 7, opts, &datasets);
     let algos = [
         Algorithm::KMedoidsPlusPlusMR,
         Algorithm::KMedoidsSerial,
@@ -55,14 +124,15 @@ pub fn fig5_suite(
     let mut out = Vec::new();
     for algo in algos {
         for dataset in 0..3 {
-            let mut exp = Experiment::paper_cell(algo, 7, dataset, seed).scaled(scale_div.max(1));
+            let mut exp =
+                Experiment::paper_cell(algo, 7, dataset, opts.seed).scaled(opts.scale_div.max(1));
             if algo == Algorithm::KMedoidsPlusPlusMR {
                 // Controlled iterations for the MR entry (as in Table 6);
                 // the serial comparators keep natural convergence, which
                 // only widens their gap.
                 exp.fixed_iters = Some(6);
             }
-            let r = run_experiment(&exp, backend);
+            let r = run_cell(&mut session, &exp, &handles[dataset]).expect("fig5 cell failed");
             eprintln!(
                 "  [fig5] {} dataset {} -> {} ms (wall {:.1}s)",
                 algo.name(),
@@ -77,12 +147,17 @@ pub fn fig5_suite(
 }
 
 /// §3.1 ablation: ++ seeding vs random init (iterations to converge and
-/// total time), plus update-strategy variants. Dataset 1, 7 nodes.
+/// total time), plus update-strategy variants. Dataset 1, 7 nodes, one
+/// shared session.
 pub fn ablation_suite(
     backend: &Arc<dyn ComputeBackend>,
-    scale_div: usize,
-    seed: u64,
+    opts: &SuiteOpts,
 ) -> Vec<ExperimentResult> {
+    let spec = SpatialSpec::paper_dataset_scaled(0, opts.scale_div.max(1), opts.seed);
+    let points = Arc::new(generate(&spec).points);
+    let (mut session, handles) = suite_session(backend, 7, opts, std::slice::from_ref(&points));
+    let data = &handles[0];
+
     let mut out = Vec::new();
     let variants: Vec<(&str, Init, UpdateStrategy)> = vec![
         ("++/sampled", Init::PlusPlus, UpdateStrategy::paper_scale_default()),
@@ -96,11 +171,10 @@ pub fn ablation_suite(
         } else {
             Algorithm::KMedoidsRandomMR
         };
-        let mut exp = Experiment::paper_cell(algo, 7, 0, seed).scaled(scale_div.max(1));
+        let mut exp = Experiment::paper_cell(algo, 7, 0, opts.seed).scaled(opts.scale_div.max(1));
         exp.update = update;
-        let mut r = run_experiment(&exp, backend);
-        // Relabel with the ablation variant name (leak: 4 static strings).
-        r.algorithm = Box::leak(name.to_string().into_boxed_str());
+        let mut r = run_cell(&mut session, &exp, data).expect("ablation cell failed");
+        r.algorithm = name.to_string(); // relabel with the variant name
         eprintln!("  [ablation] {name} -> {} ms, {} iters", r.time_ms, r.iterations);
         out.push(r);
     }
@@ -123,7 +197,7 @@ mod tests {
         // nodes only re-shapes the reduce waves — allow 2% wobble from
         // slow-node placement; the strict monotonicity check runs at full
         // scale in the table6_scaling bench.
-        let rs = table6_suite(&be(), 200, 5);
+        let rs = table6_suite(&be(), &SuiteOpts::new(200, 5));
         assert_eq!(rs.len(), 12);
         assert!(rs.iter().all(|r| r.iterations == 6), "controlled iterations");
         for ds in [rs[0].n_points, rs[4].n_points, rs[8].n_points] {
@@ -144,12 +218,18 @@ mod tests {
 
     #[test]
     fn fig5_suite_ordering() {
-        let rs = fig5_suite(&be(), 200, 5);
+        let rs = fig5_suite(&be(), &SuiteOpts::new(200, 5));
         assert_eq!(rs.len(), 9);
         // The proposed algorithm beats CLARANS at every size.
         for ds in 0..3 {
-            let pp = rs.iter().find(|r| r.algorithm == "kmedoids++-mr" && r.n_points == rs[ds].n_points).unwrap();
-            let cl = rs.iter().find(|r| r.algorithm == "clarans" && r.n_points == rs[ds].n_points).unwrap();
+            let pp = rs
+                .iter()
+                .find(|r| r.algorithm == "kmedoids++-mr" && r.n_points == rs[ds].n_points)
+                .unwrap();
+            let cl = rs
+                .iter()
+                .find(|r| r.algorithm == "clarans" && r.n_points == rs[ds].n_points)
+                .unwrap();
             assert!(
                 pp.time_ms <= cl.time_ms,
                 "kmedoids++ ({}) should beat clarans ({}) on dataset {}",

@@ -25,7 +25,7 @@ pub fn paper_row_bytes() -> u64 {
 }
 
 /// Generation spec for a synthetic spatial dataset.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SpatialSpec {
     pub n_points: usize,
     /// Number of Gaussian hotspots (true clusters).

@@ -13,6 +13,31 @@
 //!   path as JAX graphs wrapping Pallas kernels, AOT-lowered to HLO text
 //!   artifacts executed from Rust through PJRT ([`runtime`]).
 //!
+//! ## Public API: sessions, solvers, observers
+//!
+//! The API is organized around three layers (import everything from
+//! [`prelude`]):
+//!
+//! 1. **[`session::ClusterSession`]** owns the simulated cluster, the
+//!    compute backend, and the ingested datasets as reusable
+//!    [`session::DatasetHandle`]s — build and ingest once, then run many
+//!    algorithms against the same data, with per-session counters and
+//!    sim-clock accounting.
+//! 2. **[`clustering::api::SpatialClusterer`]** is the trait all five
+//!    algorithms implement, each constructed through a fluent builder:
+//!    `KMedoids::mapreduce().plus_plus().k(9).build()`,
+//!    `KMedoids::serial()`, `KMeans::mapreduce()`, `Clarans::serial()`.
+//! 3. **[`clustering::observe::IterationObserver`]** hooks registered on
+//!    the session stream one [`clustering::observe::IterationEvent`] per
+//!    outer iteration (cost, medoid drift, sim seconds, distance evals)
+//!    to the CLI, report module, and benches while a fit runs.
+//!
+//! The experiment grid of the paper sits on top in [`driver`]
+//! ([`driver::Experiment`] cells, JSON run-specs in [`driver::spec`], and
+//! the Table 6 / Fig. 4 / Fig. 5 suites in [`driver::suites`]);
+//! [`driver::run_experiment`] remains as a one-call compatibility shim
+//! that wraps a fresh single-use session.
+//!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
 //! measured reproduction of every table/figure.
 
@@ -23,7 +48,9 @@ pub mod driver;
 pub mod geo;
 pub mod hbase;
 pub mod mapreduce;
+pub mod prelude;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod util;

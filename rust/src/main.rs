@@ -6,14 +6,24 @@
 //! ```text
 //! kmedoids-mr generate --points N --hotspots K --seed S --out file.csv
 //! kmedoids-mr run      --algo kmedoids++-mr --nodes 7 --dataset 0 [--scale 10]
-//! kmedoids-mr bench    table6|fig4|fig5|ablation [--scale 10]
+//! kmedoids-mr run      --spec cells.json
+//! kmedoids-mr bench    table6|fig4|fig5|ablation [--scale 10] [--trace]
 //! kmedoids-mr inspect-artifacts
 //! ```
+//!
+//! `run` drives a [`kmedoids_mr::session::ClusterSession`] directly:
+//! build cluster → ingest → fit through the `SpatialClusterer` trait,
+//! streaming live per-iteration progress (`--trace`) and printing the
+//! recorded iteration trace. `--spec FILE.json` drives any cell grid
+//! from a JSON run-spec (see `kmedoids_mr::driver::spec`).
 
 use anyhow::{bail, Context, Result};
-use kmedoids_mr::driver::{run_experiment, Algorithm, Experiment};
+use kmedoids_mr::config::ClusterConfig;
+use kmedoids_mr::driver::suites::SuiteOpts;
+use kmedoids_mr::driver::{run_cell, spec, Algorithm, Experiment, ExperimentResult};
 use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
 use kmedoids_mr::geo::io::write_csv;
+use kmedoids_mr::prelude::{ClusterSession, IterationLog, StderrProgress};
 use kmedoids_mr::report;
 use kmedoids_mr::runtime::{self, BackendKind};
 use std::collections::HashMap;
@@ -25,7 +35,13 @@ fn main() {
     }
 }
 
-/// Tiny flag parser: `--key value` pairs after the subcommand.
+/// Flags that never take a value; they must not swallow a following
+/// positional (`bench --trace fig5` keeps `fig5` as the suite name).
+const BOOL_FLAGS: &[&str] = &["quality", "trace"];
+
+/// Tiny flag parser: `--key value` pairs after the subcommand. Unknown
+/// flags are rejected (with a did-you-mean suggestion) by
+/// [`Args::check_known`].
 struct Args {
     flags: HashMap<String, String>,
     positional: Vec<String>,
@@ -38,7 +54,10 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                let takes_value = !BOOL_FLAGS.contains(&key)
+                    && i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--");
+                if takes_value {
                     flags.insert(key.to_string(), argv[i + 1].clone());
                     i += 2;
                 } else {
@@ -53,21 +72,76 @@ impl Args {
         Args { flags, positional }
     }
 
+    /// Reject flags the subcommand does not accept — a typo like
+    /// `--node 7` must error, not be silently ignored.
+    fn check_known(&self, cmd: &str, allowed: &[&str]) -> Result<()> {
+        for key in self.flags.keys() {
+            if !allowed.contains(&key.as_str()) {
+                let hint = allowed
+                    .iter()
+                    .map(|a| (levenshtein(key, a), a))
+                    .min()
+                    .filter(|(d, _)| *d <= 2)
+                    .map(|(_, a)| format!(" (did you mean --{a}?)"))
+                    .unwrap_or_default();
+                bail!(
+                    "unknown flag --{key} for `{cmd}`{hint}; accepted flags: {}",
+                    allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(" ")
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Reject stray positional operands (`run table6` is a typo for
+    /// `bench table6`, not a request to run the default cell).
+    fn check_positionals(&self, cmd: &str, max: usize) -> Result<()> {
+        if self.positional.len() > max {
+            bail!(
+                "unexpected argument{} {:?} for `{cmd}`{}",
+                if self.positional.len() - max > 1 { "s" } else { "" },
+                self.positional[max..].join(" "),
+                if max == 0 { "" } else { " (it takes one operand)" }
+            );
+        }
+        Ok(())
+    }
+
     fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
     fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
-            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer, got {v:?}")),
             None => Ok(default),
         }
     }
     fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
-            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer, got {v:?}")),
             None => Ok(default),
         }
     }
+}
+
+/// Edit distance for the did-you-mean hint.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 fn real_main() -> Result<()> {
@@ -81,7 +155,7 @@ fn real_main() -> Result<()> {
         "generate" => cmd_generate(&args),
         "run" => cmd_run(&args),
         "bench" => cmd_bench(&args),
-        "inspect-artifacts" => cmd_inspect(),
+        "inspect-artifacts" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -98,16 +172,24 @@ USAGE:
   kmedoids-mr generate --points N [--hotspots H] [--seed S] --out FILE.csv
   kmedoids-mr run   [--algo ALGO] [--nodes N] [--dataset 0|1|2] [--k K]
                     [--scale DIV] [--seed S] [--backend auto|pjrt|native]
-                    [--quality]
-  kmedoids-mr bench table6|fig4|fig5|ablation [--scale DIV] [--seed S]
+                    [--quality] [--trace]
+  kmedoids-mr run   --spec CELLS.json [--backend auto|pjrt|native] [--trace]
+  kmedoids-mr bench table6|fig4|fig5|ablation [--scale DIV] [--seed S] [--trace]
   kmedoids-mr inspect-artifacts
 
 ALGO: kmedoids++-mr | kmedoids-mr | kmedoids-serial | clarans | kmeans-mr
+
+Run-spec JSON (one cell object or an array; see driver::spec docs):
+  {{\"algorithm\": \"kmedoids++-mr\", \"nodes\": 7, \"k\": 9,
+   \"dataset\": {{\"paper_dataset\": 0, \"scale_div\": 100}}}}
 "
     );
 }
 
-fn backend_from(args: &Args, min_block: usize) -> Result<std::sync::Arc<dyn runtime::ComputeBackend>> {
+fn backend_from(
+    args: &Args,
+    min_block: usize,
+) -> Result<std::sync::Arc<dyn runtime::ComputeBackend>> {
     let kind = match args.get("backend") {
         Some(s) => BackendKind::parse(s).with_context(|| format!("bad --backend {s:?}"))?,
         None => BackendKind::Auto,
@@ -116,6 +198,8 @@ fn backend_from(args: &Args, min_block: usize) -> Result<std::sync::Arc<dyn runt
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
+    args.check_known("generate", &["points", "hotspots", "seed", "out"])?;
+    args.check_positionals("generate", 0)?;
     let n = args.get_usize("points", 100_000)?;
     let hotspots = args.get_usize("hotspots", 9)?;
     let seed = args.get_u64("seed", 42)?;
@@ -126,7 +210,77 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run one experiment cell on its own session, streaming progress.
+fn run_one_cell(
+    exp: &Experiment,
+    backend: &std::sync::Arc<dyn runtime::ComputeBackend>,
+    trace: bool,
+) -> Result<ExperimentResult> {
+    let paper = ClusterConfig::paper_cluster();
+    if exp.n_nodes < 1 || exp.n_nodes > paper.nodes.len() {
+        bail!("nodes must be between 1 and {} (Table 3 cluster)", paper.nodes.len());
+    }
+    let mut session = ClusterSession::builder()
+        .cluster(paper)
+        .nodes(exp.n_nodes)
+        .backend(backend.clone())
+        .seed(exp.seed)
+        .build()?;
+    let log = IterationLog::new();
+    session.add_observer(Box::new(log.clone()));
+    if trace {
+        session.add_observer(Box::new(StderrProgress::new()));
+    }
+    println!(
+        "running {} on {} points with {} nodes (backend: {})",
+        exp.algorithm.name(),
+        exp.spec.n_points,
+        exp.n_nodes,
+        backend.name()
+    );
+    let data = session.ingest_spec("points", &exp.spec);
+    let r = run_cell(&mut session, exp, &data)?;
+    print!("\niterations:\n{}", report::iteration_trace(&log.events()));
+    println!("\n  simulated time : {} ms", r.time_ms);
+    println!("  iterations     : {}", r.iterations);
+    println!("  final cost E   : {:.4e}", r.cost);
+    println!("  dist evals     : {}", r.dist_evals);
+    if let Some(ari) = r.ari {
+        println!("  ARI vs truth   : {ari:.4}");
+    }
+    println!("  MR jobs run    : {}", session.jobs_run());
+    println!("  wallclock      : {:.2} s", r.wall_s);
+    Ok(r)
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
+    args.check_known(
+        "run",
+        &["spec", "algo", "nodes", "dataset", "k", "scale", "seed", "backend", "quality", "trace"],
+    )?;
+    args.check_positionals("run", 0)?;
+    let trace = args.has("trace");
+
+    // Spec-file mode: drive any cell grid from JSON.
+    if let Some(path) = args.get("spec") {
+        for flag in ["algo", "nodes", "dataset", "k", "scale", "seed", "quality"] {
+            if args.has(flag) {
+                bail!("--{flag} conflicts with --spec (put it in the spec file)");
+            }
+        }
+        let src = std::fs::read_to_string(path).with_context(|| format!("read spec {path:?}"))?;
+        let cells = spec::experiments_from_str(&src)?;
+        let backend = backend_from(args, 2048)?;
+        println!("{} cell(s) from {path}", cells.len());
+        let mut results = Vec::new();
+        for (i, exp) in cells.iter().enumerate() {
+            println!("\n== cell {} / {} ==", i + 1, cells.len());
+            results.push(run_one_cell(exp, &backend, trace)?);
+        }
+        println!("\nCSV (all cells):\n{}", report::to_csv(&results));
+        return Ok(());
+    }
+
     let algo = match args.get("algo") {
         Some(s) => Algorithm::parse(s).with_context(|| format!("unknown --algo {s:?}"))?,
         None => Algorithm::KMedoidsPlusPlusMR,
@@ -143,35 +297,21 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     let mut exp = Experiment::paper_cell(algo, nodes, dataset, seed).scaled(scale.max(1));
     exp.k = k;
-    exp.with_quality = args.get("quality").is_some();
-    println!(
-        "running {} on dataset {} ({} points) with {} nodes (backend: {})",
-        algo.name(),
-        dataset + 1,
-        exp.spec.n_points,
-        nodes,
-        backend.name()
-    );
-    let r = run_experiment(&exp, &backend);
-    println!("  simulated time : {} ms", r.time_ms);
-    println!("  iterations     : {}", r.iterations);
-    println!("  final cost E   : {:.4e}", r.cost);
-    println!("  dist evals     : {}", r.dist_evals);
-    if let Some(ari) = r.ari {
-        println!("  ARI vs truth   : {ari:.4}");
-    }
-    println!("  wallclock      : {:.2} s", r.wall_s);
+    exp.with_quality = args.has("quality");
+    run_one_cell(&exp, &backend, trace)?;
     Ok(())
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
+    args.check_known("bench", &["scale", "seed", "backend", "trace"])?;
+    args.check_positionals("bench", 1)?;
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table6");
-    let scale = args.get_usize("scale", 1)?;
-    let seed = args.get_u64("seed", 42)?;
+    let opts = SuiteOpts::new(args.get_usize("scale", 1)?, args.get_u64("seed", 42)?)
+        .with_trace(args.has("trace"));
     let backend = backend_from(args, 2048)?;
     match which {
         "table6" | "fig3" => {
-            let results = kmedoids_mr::driver::suites::table6_suite(&backend, scale, seed);
+            let results = kmedoids_mr::driver::suites::table6_suite(&backend, &opts);
             println!("\nTable 6 — execution time (ms), K-Medoids++ MR:\n");
             print!("{}", report::table6(&results));
             println!("\nFig. 4 — speedup vs 4-node cluster:\n");
@@ -179,18 +319,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
             println!("\nCSV:\n{}", report::to_csv(&results));
         }
         "fig4" => {
-            let results = kmedoids_mr::driver::suites::table6_suite(&backend, scale, seed);
+            let results = kmedoids_mr::driver::suites::table6_suite(&backend, &opts);
             println!("\nFig. 4 — speedup vs 4-node cluster:\n");
             print!("{}", report::fig4_speedup(&results));
         }
         "fig5" => {
-            let results = kmedoids_mr::driver::suites::fig5_suite(&backend, scale, seed);
+            let results = kmedoids_mr::driver::suites::fig5_suite(&backend, &opts);
             println!("\nFig. 5 — comparative execution time (ms), 7 nodes:\n");
             print!("{}", report::fig5_comparative(&results));
             println!("\nCSV:\n{}", report::to_csv(&results));
         }
         "ablation" => {
-            let results = kmedoids_mr::driver::suites::ablation_suite(&backend, scale, seed);
+            let results = kmedoids_mr::driver::suites::ablation_suite(&backend, &opts);
             println!("\nAblation — init strategy & iterations (dataset 1):\n");
             println!(
                 "{:<18}{:>8}{:>12}{:>16}",
@@ -208,7 +348,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_inspect() -> Result<()> {
+fn cmd_inspect(args: &Args) -> Result<()> {
+    args.check_known("inspect-artifacts", &[])?;
+    args.check_positionals("inspect-artifacts", 0)?;
     let dir = runtime::default_artifacts_dir();
     let m = runtime::Manifest::load(&dir)?;
     println!("artifacts at {:?}:", m.dir);
@@ -224,4 +366,89 @@ fn cmd_inspect() -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_flags_and_positionals() {
+        let a = Args::parse(&argv(&["table6", "--scale", "10", "--seed", "7"]));
+        assert_eq!(a.positional, vec!["table6"]);
+        assert_eq!(a.get("scale"), Some("10"));
+        assert_eq!(a.get_usize("scale", 1).unwrap(), 10);
+        assert_eq!(a.get_u64("seed", 42).unwrap(), 7);
+        assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn bare_flags_are_boolean() {
+        let a = Args::parse(&argv(&["--quality", "--trace", "--nodes", "5"]));
+        assert!(a.has("quality"));
+        assert!(a.has("trace"));
+        assert_eq!(a.get("quality"), Some("true"));
+        assert_eq!(a.get_usize("nodes", 7).unwrap(), 5);
+        // A bare flag directly before another flag stays boolean.
+        let b = Args::parse(&argv(&["--quality", "--seed", "3"]));
+        assert_eq!(b.get("quality"), Some("true"));
+        assert_eq!(b.get_u64("seed", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn boolean_flags_do_not_swallow_positionals() {
+        // `bench --trace fig5` must keep fig5 as the suite name.
+        let a = Args::parse(&argv(&["--trace", "fig5"]));
+        assert_eq!(a.get("trace"), Some("true"));
+        assert_eq!(a.positional, vec!["fig5"]);
+        let b = Args::parse(&argv(&["fig5", "--quality", "--scale", "10"]));
+        assert_eq!(b.positional, vec!["fig5"]);
+        assert_eq!(b.get_usize("scale", 1).unwrap(), 10);
+    }
+
+    #[test]
+    fn non_numeric_values_error_with_flag_name() {
+        let a = Args::parse(&argv(&["--scale", "ten"]));
+        let e = a.get_usize("scale", 1).unwrap_err();
+        assert!(format!("{e:#}").contains("--scale"), "{e:#}");
+        assert!(format!("{e:#}").contains("ten"), "{e:#}");
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_with_suggestion() {
+        // The motivating typo: `--node 7` used to be silently ignored.
+        let a = Args::parse(&argv(&["--node", "7"]));
+        let e = a.check_known("run", &["nodes", "seed", "scale"]).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("--node"), "{msg}");
+        assert!(msg.contains("did you mean --nodes?"), "{msg}");
+        assert!(msg.contains("run"), "{msg}");
+
+        // Far-off flags list what is accepted, without a bogus suggestion.
+        let b = Args::parse(&argv(&["--frobnicate", "1"]));
+        let e = b.check_known("run", &["nodes", "seed"]).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(!msg.contains("did you mean"), "{msg}");
+        assert!(msg.contains("--nodes") && msg.contains("--seed"), "{msg}");
+    }
+
+    #[test]
+    fn known_flags_pass_the_check() {
+        let a = Args::parse(&argv(&["--nodes", "5", "--seed", "1"]));
+        assert!(a.check_known("run", &["nodes", "seed"]).is_ok());
+        let none = Args::parse(&argv(&[]));
+        assert!(none.check_known("inspect-artifacts", &[]).is_ok());
+    }
+
+    #[test]
+    fn levenshtein_distances() {
+        assert_eq!(levenshtein("node", "nodes"), 1);
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("same", "same"), 0);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+    }
 }

@@ -5,9 +5,35 @@
 use crate::geo::Point;
 use crate::sim::TaskWork;
 use std::collections::BTreeMap;
+use std::fmt;
 
 pub type Key = Vec<u8>;
 pub type Val = Vec<u8>;
+
+/// A mapper was fed an input representation it does not consume (e.g. a
+/// kv-only mapper wired to a columnar points table). Recorded on the
+/// [`MapCtx`] by the [`Mapper`] default methods and surfaced by the
+/// engine as a job-level failure with the job name attached — a
+/// mis-wired job is diagnosable instead of a task panic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputShapeError {
+    /// Input representation the mapper consumes.
+    pub supported: &'static str,
+    /// Input representation the job actually fed it.
+    pub got: &'static str,
+}
+
+impl fmt::Display for InputShapeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "mapper only consumes {} but the job input is {}; check the JobSpec input wiring",
+            self.supported, self.got
+        )
+    }
+}
+
+impl std::error::Error for InputShapeError {}
 
 /// Counters (Hadoop-style), merged across all tasks of a job.
 #[derive(Debug, Clone, Default)]
@@ -38,12 +64,23 @@ pub struct MapCtx {
     pub(crate) emits: Vec<(Key, Val)>,
     pub work: TaskWork,
     pub counters: Counters,
+    /// Set by the [`Mapper`] input-shape defaults when the task was fed a
+    /// representation the mapper does not consume; the engine turns this
+    /// into a job failure.
+    pub(crate) input_error: Option<InputShapeError>,
 }
 
 impl MapCtx {
     pub fn emit(&mut self, k: Key, v: Val) {
         self.work.write_bytes += (k.len() + v.len()) as u64;
         self.emits.push((k, v));
+    }
+    /// Record that this task's input representation is unsupported.
+    pub fn reject_input(&mut self, supported: &'static str, got: &'static str) {
+        self.input_error = Some(InputShapeError { supported, got });
+    }
+    pub fn input_error(&self) -> Option<&InputShapeError> {
+        self.input_error.as_ref()
     }
     pub fn charge_dist_evals(&mut self, n: u64) {
         self.work.dist_evals += n;
@@ -87,11 +124,11 @@ impl ReduceCtx {
 /// block-vectorizable through the PJRT kernel) and generic KV lists
 /// (chained-job inputs, small side files).
 pub trait Mapper: Send + Sync {
-    fn map_points(&self, _ctx: &mut MapCtx, _row_start: u64, _points: &[Point]) {
-        unimplemented!("mapper does not accept columnar point input")
+    fn map_points(&self, ctx: &mut MapCtx, _row_start: u64, _points: &[Point]) {
+        ctx.reject_input("kv input", "columnar point input");
     }
-    fn map_kvs(&self, _ctx: &mut MapCtx, _kvs: &[(Key, Val)]) {
-        unimplemented!("mapper does not accept kv input")
+    fn map_kvs(&self, ctx: &mut MapCtx, _kvs: &[(Key, Val)]) {
+        ctx.reject_input("columnar point input", "kv input");
     }
 }
 
@@ -128,6 +165,25 @@ mod tests {
         assert_eq!(a.get("x"), 5);
         assert_eq!(a.get("y"), 1);
         assert_eq!(a.get("z"), 0);
+    }
+
+    #[test]
+    fn default_mapper_records_input_shape_error_instead_of_panicking() {
+        struct KvOnly;
+        impl Mapper for KvOnly {
+            fn map_kvs(&self, _ctx: &mut MapCtx, _kvs: &[(Key, Val)]) {}
+        }
+        let mut ctx = MapCtx::default();
+        KvOnly.map_points(&mut ctx, 0, &[]);
+        let err = ctx.input_error().expect("input-shape error recorded");
+        assert_eq!(err.got, "columnar point input");
+        let msg = err.to_string();
+        assert!(msg.contains("kv input") && msg.contains("JobSpec"), "{msg}");
+
+        // The supported path does not set the error.
+        let mut ok_ctx = MapCtx::default();
+        KvOnly.map_kvs(&mut ok_ctx, &[]);
+        assert!(ok_ctx.input_error().is_none());
     }
 
     #[test]

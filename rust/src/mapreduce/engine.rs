@@ -8,7 +8,7 @@
 //! cached per task, so a speculative duplicate attempt reuses the same
 //! deterministic result with different timing.
 
-use super::api::{Counters, Key, MapCtx, ReduceCtx, Val};
+use super::api::{Counters, InputShapeError, Key, MapCtx, ReduceCtx, Val};
 use super::job::{Input, JobSpec, SplitMeta};
 use crate::config::ClusterConfig;
 use crate::dfs::NameNode;
@@ -16,6 +16,23 @@ use crate::hbase::HMaster;
 use crate::sim::{CostModel, Event, EventQueue, SimTime, TaskWork};
 use crate::util::rng::Rng;
 use std::sync::Arc;
+
+/// A job failed before producing output (e.g. a mapper rejected the
+/// input representation it was wired to). Carries the job name so a
+/// mis-wired driver is diagnosable from the error alone.
+#[derive(Debug, Clone)]
+pub struct JobError {
+    pub job: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job {:?} failed: {}", self.job, self.message)
+    }
+}
+
+impl std::error::Error for JobError {}
 
 /// Outcome of one job.
 pub struct JobResult {
@@ -90,6 +107,11 @@ pub struct Cluster {
     failure_plan: Vec<(f64, usize)>,
     recover_plan: Vec<(f64, usize)>,
     pub history: Vec<JobStats>,
+    /// Hadoop-style counters merged across every job this cluster ran
+    /// (the session-level accounting view).
+    pub counters: Counters,
+    /// Number of jobs completed on this cluster.
+    pub jobs_run: usize,
     #[allow(dead_code)]
     rng: Rng,
     /// Real-compute thread pool width for map/reduce user code (wallclock
@@ -113,6 +135,8 @@ impl Cluster {
             failure_plan: Vec::new(),
             recover_plan: Vec::new(),
             history: Vec::new(),
+            counters: Counters::default(),
+            jobs_run: 0,
             rng: Rng::new(seed),
             compute_threads: 1,
         }
@@ -143,8 +167,30 @@ impl Cluster {
         self.alive.iter().filter(|a| **a).count()
     }
 
-    /// Run one MapReduce job to completion. Advances the cluster clock.
+    /// Advance the cluster clock by `s` simulated seconds. Used by the
+    /// session layer to account serial (off-cluster) work on the same
+    /// timeline as MR jobs.
+    pub fn advance_secs(&mut self, s: f64) {
+        self.now = self.now + s;
+    }
+
+    /// Run one MapReduce job to completion, panicking with the job-level
+    /// diagnosis on failure. Well-formed drivers never hit the panic;
+    /// fallible callers should use [`Cluster::try_run_job`].
     pub fn run_job(&mut self, spec: &JobSpec) -> JobResult {
+        match self.try_run_job(spec) {
+            Ok(r) => r,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Run one MapReduce job to completion. Advances the cluster clock on
+    /// success; a failed job (mis-wired input shape) returns a
+    /// [`JobError`] naming the job and leaves the clock, history, job
+    /// count, and counters untouched. (Planned node failures/recoveries
+    /// that are already due still apply on the error path — they are
+    /// cluster lifecycle, not job state.)
+    pub fn try_run_job(&mut self, spec: &JobSpec) -> Result<JobResult, JobError> {
         let t0 = self.now;
         let splits = spec.input.splits();
         let n_maps = splits.len();
@@ -201,7 +247,26 @@ impl Cluster {
             counters: Counters::default(),
             stats: JobStats { name: spec.name.clone(), n_map_tasks: n_maps, n_reduce_tasks: n_reduces, ..Default::default() },
             speculation: self.speculation,
+            input_error: None,
         };
+
+        // Run the (cached, deterministic) map computations up front so a
+        // mapper fed the wrong input representation surfaces as a job
+        // failure before any scheduling happens.
+        for t in 0..n_maps {
+            st.compute_map(t);
+            if let Some(shape_err) = st.input_error.take() {
+                // Put unfired failure/recovery events back on the plan.
+                while let Some((at, ev)) = q.next() {
+                    match ev {
+                        Event::NodeFail { node } => self.failure_plan.push((t0.0 + at.0, node)),
+                        Event::NodeRecover { node } => self.recover_plan.push((t0.0 + at.0, node)),
+                        _ => {}
+                    }
+                }
+                return Err(JobError { job: spec.name.clone(), message: shape_err.to_string() });
+            }
+        }
 
         st.assign_maps(&mut q, &self.alive);
 
@@ -266,8 +331,10 @@ impl Cluster {
         let mut counters = st.counters;
         counters.inc("job.maps", n_maps as u64);
         counters.inc("job.reduces", n_reduces as u64);
+        self.counters.merge(&counters);
+        self.jobs_run += 1;
 
-        JobResult { output, duration_s: duration, counters, stats }
+        Ok(JobResult { output, duration_s: duration, counters, stats })
     }
 
     fn apply_node_failure(&mut self, node: usize) {
@@ -307,6 +374,8 @@ struct JobRun<'a> {
     counters: Counters,
     stats: JobStats,
     speculation: bool,
+    /// First input-shape rejection recorded by a mapper, if any.
+    input_error: Option<InputShapeError>,
 }
 
 impl<'a> JobRun<'a> {
@@ -409,6 +478,11 @@ impl<'a> JobRun<'a> {
                 let slice = &data[split.row_start as usize..split.row_end as usize];
                 ctx.work.rows_parsed += slice.len() as u64;
                 self.spec.mapper.map_kvs(&mut ctx, slice);
+            }
+        }
+        if let Some(e) = ctx.input_error.take() {
+            if self.input_error.is_none() {
+                self.input_error = Some(e);
             }
         }
         let n_parts = self.spec.n_reduces.max(1);

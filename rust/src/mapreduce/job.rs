@@ -119,9 +119,10 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn mapper_without_points_entry_panics() {
+    fn mapper_without_points_entry_records_shape_error() {
         let mut ctx = MapCtx::default();
         Nop.map_points(&mut ctx, 0, &[]);
+        assert!(ctx.input_error().is_some(), "default mapper must record InputShapeError");
+        assert_eq!(ctx.n_emits(), 0);
     }
 }

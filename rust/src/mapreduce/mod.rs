@@ -8,8 +8,10 @@ pub mod api;
 pub mod engine;
 pub mod job;
 
-pub use api::{hash_partition, Counters, Key, MapCtx, Mapper, ReduceCtx, Reducer, Val};
-pub use engine::{group_sorted, Cluster, JobResult, JobStats};
+pub use api::{
+    hash_partition, Counters, InputShapeError, Key, MapCtx, Mapper, ReduceCtx, Reducer, Val,
+};
+pub use engine::{group_sorted, Cluster, JobError, JobResult, JobStats};
 pub use job::{Input, JobSpec, SplitMeta};
 
 use crate::dfs::NameNode;

@@ -281,3 +281,46 @@ fn property_counts_preserved_any_topology() {
         assert!(counts.iter().all(|&(_, c)| c == n as u64));
     });
 }
+
+#[test]
+fn mis_wired_input_is_a_job_failure_not_a_task_panic() {
+    /// A mapper that only consumes kv records.
+    struct KvOnlyMapper;
+    impl Mapper for KvOnlyMapper {
+        fn map_kvs(&self, ctx: &mut MapCtx, kvs: &[(Key, Val)]) {
+            for (k, v) in kvs {
+                ctx.emit(k.clone(), v.clone());
+            }
+        }
+    }
+
+    let mut cluster = Cluster::new(ClusterConfig::test_cluster(3), 1);
+    let t_before = cluster.now().0;
+    // Wire it to a columnar points input: mis-wired on purpose.
+    let job = JobSpec::new("miswired", kv_input(grid_points(10), 2), Arc::new(KvOnlyMapper));
+    let err = cluster.try_run_job(&job).err().expect("mis-wired job must fail");
+    assert!(err.to_string().contains("miswired"), "{err}");
+    assert!(err.to_string().contains("kv input"), "{err}");
+    // A failed job leaves the cluster untouched.
+    assert_eq!(cluster.now().0, t_before);
+    assert_eq!(cluster.jobs_run, 0);
+    assert!(cluster.history.is_empty());
+}
+
+#[test]
+fn cluster_accumulates_counters_and_job_count() {
+    let mut cluster = Cluster::new(ClusterConfig::test_cluster(3), 1);
+    cluster.run_job(&quadrant_job(grid_points(50), 2, 1));
+    cluster.run_job(&quadrant_job(grid_points(50), 2, 1));
+    assert_eq!(cluster.jobs_run, 2);
+    assert_eq!(cluster.counters.get("job.maps"), 4);
+    assert!(cluster.counters.get("map.output.records") > 0);
+}
+
+#[test]
+fn advance_secs_moves_the_clock() {
+    let mut cluster = Cluster::new(ClusterConfig::test_cluster(2), 1);
+    let t0 = cluster.now().0;
+    cluster.advance_secs(12.5);
+    assert!((cluster.now().0 - t0 - 12.5).abs() < 1e-12);
+}

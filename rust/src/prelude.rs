@@ -1,0 +1,16 @@
+//! One-stop re-exports for the session-oriented API:
+//! `use kmedoids_mr::prelude::*;`
+
+pub use crate::clustering::api::{
+    Clarans, ClaransBuilder, KMeans, KMeansBuilder, KMedoids, KMedoidsBuilder, SpatialClusterer,
+};
+pub use crate::clustering::observe::{
+    IterationEvent, IterationLog, IterationObserver, ObserverHub, StderrProgress,
+};
+pub use crate::clustering::{ClusterOutcome, Init, IterParams, UpdateStrategy};
+pub use crate::config::ClusterConfig;
+pub use crate::driver::{run_experiment, Algorithm, Experiment, ExperimentResult};
+pub use crate::geo::datasets::{generate, SpatialDataset, SpatialSpec};
+pub use crate::geo::Point;
+pub use crate::runtime::{load_backend, BackendKind, ComputeBackend, NativeBackend};
+pub use crate::session::{ClusterSession, DatasetHandle, SessionBuilder};

@@ -1,7 +1,30 @@
-//! Report emitters: the paper's tables/figures as aligned text + CSV.
+//! Report emitters: the paper's tables/figures as aligned text + CSV,
+//! plus the per-iteration trace view fed by the streaming observers.
 
+use crate::clustering::observe::IterationEvent;
 use crate::driver::ExperimentResult;
 use std::fmt::Write as _;
+
+/// Render a fit's recorded iteration stream (from an
+/// [`crate::clustering::observe::IterationLog`]) as an aligned table.
+pub fn iteration_trace(events: &[IterationEvent]) -> String {
+    let mut s = String::new();
+    writeln!(
+        s,
+        "{:<6}{:>14}{:>14}{:>12}{:>16}",
+        "iter", "cost", "drift", "sim(s)", "dist-evals"
+    )
+    .unwrap();
+    for e in events {
+        writeln!(
+            s,
+            "{:<6}{:>14.4e}{:>14.2}{:>12.1}{:>16}",
+            e.iteration, e.cost, e.medoid_drift, e.sim_seconds, e.dist_evals
+        )
+        .unwrap();
+    }
+    s
+}
 
 /// Table 6: execution time (ms) per (cluster size, dataset).
 pub fn table6(results: &[ExperimentResult]) -> String {
@@ -73,7 +96,7 @@ pub fn fig5_comparative(results: &[ExperimentResult]) -> String {
     let mut datasets: Vec<usize> = results.iter().map(|r| r.n_points).collect();
     datasets.sort_unstable();
     datasets.dedup();
-    let mut algos: Vec<&str> = results.iter().map(|r| r.algorithm).collect();
+    let mut algos: Vec<&str> = results.iter().map(|r| r.algorithm.as_str()).collect();
     algos.dedup();
     let mut uniq: Vec<&str> = Vec::new();
     for a in algos {
@@ -132,7 +155,7 @@ mod tests {
 
     fn fake(algorithm: &'static str, n_nodes: usize, n_points: usize, time_ms: u64) -> ExperimentResult {
         ExperimentResult {
-            algorithm,
+            algorithm: algorithm.to_string(),
             n_nodes,
             n_points,
             dataset_mb: 10.0,
@@ -182,5 +205,23 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 2);
         assert_eq!(lines[1].split(',').count(), 10);
+    }
+
+    #[test]
+    fn iteration_trace_renders_every_event() {
+        let events: Vec<IterationEvent> = (1..=3)
+            .map(|i| IterationEvent {
+                algorithm: "kmedoids++-mr",
+                iteration: i,
+                cost: 1e9 / i as f64,
+                medoid_drift: 5.0 * i as f64,
+                sim_seconds: 10.0 * i as f64,
+                dist_evals: 1000 * i as u64,
+            })
+            .collect();
+        let t = iteration_trace(&events);
+        assert_eq!(t.lines().count(), 4, "header + 3 rows:\n{t}");
+        assert!(t.contains("dist-evals"));
+        assert!(t.contains("3000"));
     }
 }

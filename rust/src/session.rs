@@ -1,0 +1,464 @@
+//! [`ClusterSession`]: the owning context every solver runs against.
+//!
+//! A session bundles what the old flat driver rebuilt for every
+//! experiment cell: the simulated cluster (HDFS-lite + HBase-lite +
+//! JobTracker), the compute backend, and the ingested datasets. Build and
+//! ingest **once**, then run any number of [`SpatialClusterer`] fits
+//! against the same [`DatasetHandle`]s — the paper's (algorithm ×
+//! dataset) grid without paying cluster construction and HBase ingest per
+//! cell.
+//!
+//! ```text
+//! let mut session = ClusterSession::builder()
+//!     .cluster(ClusterConfig::paper_cluster())
+//!     .nodes(7)
+//!     .seed(42)
+//!     .build()?;
+//! let city = session.ingest_spec("city", &SpatialSpec::new(200_000, 9, 7));
+//! session.add_observer(Box::new(StderrProgress::new()));
+//! let a = KMedoids::mapreduce().plus_plus().k(9).build().fit(&mut session, &city)?;
+//! let b = KMeans::mapreduce().k(9).build().fit(&mut session, &city)?;
+//! ```
+//!
+//! The session also carries the cross-fit accounting: the simulated
+//! clock ([`ClusterSession::now_s`]), merged Hadoop-style counters
+//! ([`ClusterSession::counters`]), the per-job history, and the
+//! registered [`IterationObserver`]s that stream per-iteration events
+//! from every fit.
+//!
+//! [`SpatialClusterer`]: crate::clustering::api::SpatialClusterer
+//! [`IterationObserver`]: crate::clustering::observe::IterationObserver
+
+use crate::clustering::observe::{IterationObserver, ObserverHub};
+use crate::clustering::ClusterOutcome;
+use crate::config::ClusterConfig;
+use crate::geo::datasets::{self, SpatialDataset, SpatialSpec};
+use crate::geo::Point;
+use crate::mapreduce::{input_from_table, Cluster, Counters, Input, JobResult, JobSpec, JobStats};
+use crate::runtime::{load_backend, BackendKind, ComputeBackend, NativeBackend};
+use crate::sim::CostModel;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+static NEXT_SESSION_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Opaque reference to a dataset ingested into one [`ClusterSession`].
+/// Cheap to clone; using it against a different session panics with a
+/// descriptive message (a handle is not portable across sessions).
+#[derive(Debug, Clone)]
+pub struct DatasetHandle {
+    session_id: u64,
+    index: usize,
+    name: String,
+}
+
+impl DatasetHandle {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+struct DatasetEntry {
+    name: String,
+    points: Arc<Vec<Point>>,
+    input: Input,
+    bytes: u64,
+    truth: Option<Vec<Option<u32>>>,
+}
+
+/// Fluent builder for [`ClusterSession`].
+pub struct SessionBuilder {
+    cfg: ClusterConfig,
+    nodes: Option<usize>,
+    backend: Option<Arc<dyn ComputeBackend>>,
+    backend_kind: BackendKind,
+    min_block: usize,
+    seed: u64,
+    cost: CostModel,
+    speculation: bool,
+}
+
+impl SessionBuilder {
+    /// Cluster topology (defaults to the paper's Table 3 cluster).
+    pub fn cluster(mut self, cfg: ClusterConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+    /// Restrict to the first `n` nodes (the paper's Table 4 groups).
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.nodes = Some(n);
+        self
+    }
+    /// Use an already-loaded compute backend.
+    pub fn backend(mut self, backend: Arc<dyn ComputeBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+    /// Load the backend at build time (`Auto` picks PJRT artifacts when
+    /// present, native Rust otherwise).
+    pub fn backend_kind(mut self, kind: BackendKind) -> Self {
+        self.backend_kind = kind;
+        self
+    }
+    /// Kernel block-size floor for backend loading (2048 for production
+    /// workloads, 256 for tests).
+    pub fn min_block(mut self, b: usize) -> Self {
+        self.min_block = b;
+        self
+    }
+    /// Seed for block placement and driver-side draws.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+    /// Override the simulated cost model.
+    pub fn cost_model(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
+    }
+    /// Toggle speculative execution (on by default, as in Hadoop).
+    pub fn speculation(mut self, on: bool) -> Self {
+        self.speculation = on;
+        self
+    }
+    /// Small homogeneous test cluster + small-block native backend — the
+    /// unit-test convenience.
+    pub fn test(mut self, n_nodes: usize) -> Self {
+        self.cfg = ClusterConfig::test_cluster(n_nodes);
+        self.nodes = None;
+        self.backend = Some(Arc::new(NativeBackend::new(256, 16)));
+        self
+    }
+
+    pub fn build(self) -> Result<ClusterSession> {
+        let cfg = match self.nodes {
+            Some(n) => self.cfg.cluster_subset(n),
+            None => self.cfg,
+        };
+        let backend = match self.backend {
+            Some(b) => b,
+            None => load_backend(self.backend_kind, self.min_block)?,
+        };
+        let mut cluster = Cluster::new(cfg, self.seed);
+        cluster.cost = self.cost;
+        cluster.speculation = self.speculation;
+        Ok(ClusterSession {
+            id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
+            cluster,
+            backend,
+            seed: self.seed,
+            datasets: Vec::new(),
+            observers: ObserverHub::default(),
+        })
+    }
+}
+
+/// The owning context for clustering runs: simulated cluster + compute
+/// backend + ingested datasets + observers. See the module docs.
+pub struct ClusterSession {
+    id: u64,
+    cluster: Cluster,
+    backend: Arc<dyn ComputeBackend>,
+    seed: u64,
+    datasets: Vec<DatasetEntry>,
+    observers: ObserverHub,
+}
+
+impl ClusterSession {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder {
+            cfg: ClusterConfig::paper_cluster(),
+            nodes: None,
+            backend: None,
+            backend_kind: BackendKind::Auto,
+            min_block: 2048,
+            seed: 42,
+            cost: CostModel::default(),
+            speculation: true,
+        }
+    }
+
+    // ---- ingest ----------------------------------------------------------
+
+    /// Ingest a generated dataset (clones the points; keeps ground truth
+    /// for quality metrics).
+    pub fn ingest(&mut self, name: &str, dataset: &SpatialDataset) -> DatasetHandle {
+        self.ingest_inner(name, Arc::new(dataset.points.clone()), Some(dataset.truth.clone()))
+    }
+
+    /// Generate from a spec and ingest (ground truth retained).
+    pub fn ingest_spec(&mut self, name: &str, spec: &SpatialSpec) -> DatasetHandle {
+        let d = datasets::generate(spec);
+        self.ingest_inner(name, Arc::new(d.points), Some(d.truth))
+    }
+
+    /// Ingest an existing shared point set without copying it (no ground
+    /// truth). This is how suites reuse one generated dataset across many
+    /// sessions.
+    pub fn ingest_points(&mut self, name: &str, points: Arc<Vec<Point>>) -> DatasetHandle {
+        self.ingest_inner(name, points, None)
+    }
+
+    fn ingest_inner(
+        &mut self,
+        name: &str,
+        points: Arc<Vec<Point>>,
+        truth: Option<Vec<Option<u32>>>,
+    ) -> DatasetHandle {
+        assert!(
+            self.cluster.hmaster.table(name).is_none(),
+            "dataset {name:?} already ingested into this session"
+        );
+        assert!(!points.is_empty(), "cannot ingest an empty dataset");
+        let row_bytes = datasets::paper_row_bytes();
+        let total_bytes = points.len() as u64 * row_bytes;
+        // HDFS file backing the HBase table's HFiles.
+        self.cluster.namenode.create_file(
+            &format!("hbase/{name}"),
+            points.len() as u64,
+            total_bytes,
+        );
+        // HBase regions sized like DFS blocks (one split per region).
+        self.cluster.hmaster.create_points_table(
+            name,
+            points.clone(),
+            row_bytes,
+            self.cluster.config.dfs_block_bytes,
+        );
+        let input = input_from_table(&self.cluster.hmaster, name);
+        let index = self.datasets.len();
+        self.datasets.push(DatasetEntry {
+            name: name.to_string(),
+            points,
+            input,
+            bytes: total_bytes,
+            truth,
+        });
+        DatasetHandle { session_id: self.id, index, name: name.to_string() }
+    }
+
+    fn entry(&self, h: &DatasetHandle) -> &DatasetEntry {
+        assert!(
+            h.session_id == self.id,
+            "DatasetHandle {:?} belongs to another session (handles are not portable)",
+            h.name
+        );
+        &self.datasets[h.index]
+    }
+
+    // ---- dataset accessors ----------------------------------------------
+
+    pub fn dataset_points(&self, h: &DatasetHandle) -> Arc<Vec<Point>> {
+        self.entry(h).points.clone()
+    }
+    pub fn dataset_input(&self, h: &DatasetHandle) -> Input {
+        self.entry(h).input.clone()
+    }
+    /// Encoded dataset size in bytes (Table 5 row-size model).
+    pub fn dataset_bytes(&self, h: &DatasetHandle) -> u64 {
+        self.entry(h).bytes
+    }
+    pub fn dataset_n_points(&self, h: &DatasetHandle) -> usize {
+        self.entry(h).points.len()
+    }
+    /// Generator ground truth, when the dataset was ingested from a spec.
+    pub fn dataset_truth(&self, h: &DatasetHandle) -> Option<&[Option<u32>]> {
+        self.entry(h).truth.as_deref()
+    }
+    pub fn dataset_names(&self) -> Vec<&str> {
+        self.datasets.iter().map(|d| d.name.as_str()).collect()
+    }
+
+    // ---- cluster / accounting -------------------------------------------
+
+    pub fn backend(&self) -> Arc<dyn ComputeBackend> {
+        self.backend.clone()
+    }
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cluster.config
+    }
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cluster.cost
+    }
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+    /// Simulated seconds elapsed on the session clock.
+    pub fn now_s(&self) -> f64 {
+        self.cluster.now().0
+    }
+    /// Jobs completed on this session's cluster.
+    pub fn jobs_run(&self) -> usize {
+        self.cluster.jobs_run
+    }
+    /// Hadoop-style counters merged across every job this session ran.
+    pub fn counters(&self) -> &Counters {
+        &self.cluster.counters
+    }
+    /// Per-job scheduling history.
+    pub fn history(&self) -> &[JobStats] {
+        &self.cluster.history
+    }
+    pub fn n_alive(&self) -> usize {
+        self.cluster.n_alive()
+    }
+    /// Schedule a fail-stop node failure at absolute sim time `at_s`.
+    pub fn plan_failure(&mut self, at_s: f64, node: usize) {
+        self.cluster.plan_failure(at_s, node);
+    }
+    pub fn plan_recovery(&mut self, at_s: f64, node: usize) {
+        self.cluster.plan_recovery(at_s, node);
+    }
+    /// Borrow the underlying cluster (storage layers, history, clock).
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+    /// Escape hatch for custom MR drivers over the session's cluster.
+    pub fn cluster_mut(&mut self) -> &mut Cluster {
+        &mut self.cluster
+    }
+    /// Simultaneous borrows for solver engines that run jobs while
+    /// streaming events.
+    pub fn cluster_and_observers(&mut self) -> (&mut Cluster, &mut ObserverHub) {
+        (&mut self.cluster, &mut self.observers)
+    }
+
+    /// Run a raw MapReduce job on the session cluster (counters and job
+    /// count accrue to the session).
+    pub fn run_job(&mut self, spec: &JobSpec) -> Result<JobResult> {
+        Ok(self.cluster.try_run_job(spec)?)
+    }
+
+    /// Account a serial (off-cluster) fit on the session timeline and
+    /// notify observers the fit ended.
+    pub fn account_serial_fit(&mut self, outcome: &ClusterOutcome) {
+        self.cluster.advance_secs(outcome.sim_seconds);
+        self.observers.fit_end(outcome);
+    }
+
+    // ---- observers --------------------------------------------------------
+
+    /// Register an observer; it receives events from every subsequent fit
+    /// on this session.
+    pub fn add_observer(&mut self, observer: Box<dyn IterationObserver>) {
+        self.observers.add(observer);
+    }
+    pub fn clear_observers(&mut self) {
+        self.observers.clear();
+    }
+    pub fn observers_mut(&mut self) -> &mut ObserverHub {
+        &mut self.observers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::api::{KMeans, KMedoids, SpatialClusterer};
+    use crate::clustering::observe::IterationLog;
+    use crate::clustering::UpdateStrategy;
+
+    fn small_session() -> ClusterSession {
+        ClusterSession::builder().test(4).seed(7).build().unwrap()
+    }
+
+    #[test]
+    fn ingest_once_fit_many() {
+        let mut s = small_session();
+        let mut spec = SpatialSpec::new(3000, 4, 7);
+        spec.outlier_frac = 0.0;
+        let data = s.ingest_spec("pts", &spec);
+        assert_eq!(s.dataset_n_points(&data), 3000);
+        assert!(s.dataset_truth(&data).is_some());
+        assert_eq!(s.dataset_names(), vec!["pts"]);
+
+        let kmed = KMedoids::mapreduce().plus_plus().k(4).seed(7).build();
+        let a = kmed.fit(&mut s, &data).unwrap();
+        let jobs_after_first = s.jobs_run();
+        assert!(jobs_after_first > 0, "MR fits run jobs on the session cluster");
+        assert!(s.now_s() > 0.0);
+        assert!(s.counters().get("work.dist.evals") > 0);
+
+        // Second solver on the same session + same ingested data.
+        let km = KMeans::mapreduce().k(4).seed(7).build();
+        let b = km.fit(&mut s, &data).unwrap();
+        assert!(s.jobs_run() > jobs_after_first);
+        assert!(a.cost > 0.0 && b.cost > 0.0);
+        assert_eq!(a.medoids.len(), 4);
+    }
+
+    #[test]
+    fn serial_fits_advance_session_clock() {
+        let mut s = small_session();
+        let mut spec = SpatialSpec::new(1500, 3, 9);
+        spec.outlier_frac = 0.0;
+        let data = s.ingest_spec("pts", &spec);
+        let t0 = s.now_s();
+        let out = KMedoids::serial().k(3).seed(9).build().fit(&mut s, &data).unwrap();
+        assert!(out.sim_seconds > 0.0);
+        assert!((s.now_s() - t0 - out.sim_seconds).abs() < 1e-9);
+        assert_eq!(s.jobs_run(), 0, "serial fit runs no MR jobs");
+    }
+
+    #[test]
+    #[should_panic(expected = "another session")]
+    fn foreign_handle_rejected() {
+        let mut a = small_session();
+        let mut b = small_session();
+        let spec = SpatialSpec::new(1000, 3, 5);
+        let _ha = a.ingest_spec("pts", &spec);
+        let hb = b.ingest_spec("pts", &spec);
+        let _ = a.dataset_points(&hb);
+    }
+
+    #[test]
+    #[should_panic(expected = "already ingested")]
+    fn duplicate_dataset_name_rejected() {
+        let mut s = small_session();
+        let spec = SpatialSpec::new(1000, 3, 5);
+        s.ingest_spec("pts", &spec);
+        s.ingest_spec("pts", &spec);
+    }
+
+    #[test]
+    fn observer_stream_matches_outcome_totals() {
+        let mut s = small_session();
+        let mut spec = SpatialSpec::new(2500, 4, 11);
+        spec.outlier_frac = 0.0;
+        let data = s.ingest_spec("pts", &spec);
+        let log = IterationLog::new();
+        s.add_observer(Box::new(log.clone()));
+        let out = KMedoids::mapreduce()
+            .plus_plus()
+            .k(4)
+            .seed(11)
+            .update(UpdateStrategy::Exact)
+            .build()
+            .fit(&mut s, &data)
+            .unwrap();
+
+        let events = log.events();
+        assert_eq!(events.len(), out.iterations, "one event per outer iteration");
+        let last = events.last().unwrap();
+        assert_eq!(last.iteration, out.iterations);
+        assert_eq!(last.cost, out.cost);
+        assert_eq!(last.dist_evals, out.dist_evals);
+        assert_eq!(last.sim_seconds, out.sim_seconds, "no label pass: clocks agree");
+        assert!(events.iter().all(|e| e.algorithm == "kmedoids++-mr"));
+        // Iteration indices are 1..=n in order.
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(e.iteration, i + 1);
+        }
+    }
+
+    #[test]
+    fn ingest_points_shares_the_arc() {
+        let mut s = small_session();
+        let pts = Arc::new(crate::geo::datasets::generate(&SpatialSpec::new(1000, 3, 5)).points);
+        let h = s.ingest_points("shared", pts.clone());
+        assert!(Arc::ptr_eq(&pts, &s.dataset_points(&h)), "no copy on ingest_points");
+        assert!(s.dataset_truth(&h).is_none());
+        assert_eq!(s.dataset_bytes(&h), 1000 * crate::geo::datasets::paper_row_bytes());
+    }
+}

@@ -1,17 +1,12 @@
 //! Integration tests over the public API: the full pipeline from dataset
-//! generation through HBase ingest, MapReduce execution, and clustering —
-//! including the PJRT artifact path when artifacts are built.
+//! generation through session ingest (HBase + HDFS), MapReduce execution
+//! via the `SpatialClusterer` trait, and streaming observers — including
+//! the PJRT artifact path when artifacts are built.
 
 use kmedoids_mr::clustering::metrics::{adjusted_rand_index, total_cost};
-use kmedoids_mr::clustering::parallel::ParallelKMedoids;
-use kmedoids_mr::clustering::{Init, IterParams, UpdateStrategy};
-use kmedoids_mr::config::ClusterConfig;
-use kmedoids_mr::driver::{run_experiment, setup_cluster, Algorithm, Experiment};
-use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
-use kmedoids_mr::runtime::{
-    default_artifacts_dir, load_backend, BackendKind, ComputeBackend, Manifest, NativeBackend,
-    PjrtBackend,
-};
+use kmedoids_mr::driver::{run_experiment, Algorithm, Experiment};
+use kmedoids_mr::prelude::*;
+use kmedoids_mr::runtime::{default_artifacts_dir, Manifest, PjrtBackend};
 use std::sync::Arc;
 
 fn clean_spec(n: usize, k: usize, seed: u64) -> SpatialSpec {
@@ -20,32 +15,59 @@ fn clean_spec(n: usize, k: usize, seed: u64) -> SpatialSpec {
     s
 }
 
+fn session_with(
+    n_nodes: usize,
+    backend: Arc<dyn ComputeBackend>,
+    seed: u64,
+) -> ClusterSession {
+    ClusterSession::builder()
+        .cluster(ClusterConfig::paper_cluster())
+        .nodes(n_nodes)
+        .backend(backend)
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
 #[test]
 fn full_pipeline_native_backend() {
     // Seed 10 converges to the global basin (alternating K-Medoids is a
     // local-optimum method; see the seed sweep note in EXPERIMENTS.md).
-    let dataset = generate(&clean_spec(20_000, 6, 10));
-    let cfg = ClusterConfig::paper_cluster().cluster_subset(5);
-    let (mut cluster, input, points) = setup_cluster(&cfg, &dataset, 10);
+    let be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(512, 16));
+    let mut session = session_with(5, be, 10);
+    let data = session.ingest_spec("points", &clean_spec(20_000, 6, 10));
 
     // The ingest actually landed in both storage layers.
-    assert!(cluster.hmaster.table("points").is_some());
-    assert!(cluster.namenode.file("hbase/points").is_some());
+    assert!(session.cluster().hmaster.table("points").is_some());
+    assert!(session.cluster().namenode.file("hbase/points").is_some());
 
-    let be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(512, 16));
-    let mut drv = ParallelKMedoids::new(be, IterParams::new(6, 10));
-    drv.init = Init::PlusPlus;
-    drv.update = UpdateStrategy::Exact;
-    drv.label_pass = true;
-    let out = drv.run(&mut cluster, &input, &points);
+    let log = IterationLog::new();
+    session.add_observer(Box::new(log.clone()));
+    let solver = KMedoids::mapreduce()
+        .plus_plus()
+        .k(6)
+        .seed(10)
+        .update(UpdateStrategy::Exact)
+        .with_labels()
+        .build();
+    let out = solver.fit(&mut session, &data).unwrap();
 
-    let ari = adjusted_rand_index(out.labels.as_ref().unwrap(), &dataset.truth);
+    let truth = session.dataset_truth(&data).unwrap();
+    let ari = adjusted_rand_index(out.labels.as_ref().unwrap(), truth);
     assert!(ari > 0.85, "ARI {ari}");
     // Counter-reported cost equals brute-force Eq. 1 cost.
+    let points = session.dataset_points(&data);
     let brute = total_cost(&points, &out.medoids);
     assert!((out.cost - brute).abs() / brute < 0.01);
     // MR machinery really ran: one job per seeding round + iteration + labels.
-    assert!(cluster.history.len() >= out.iterations + 5);
+    assert!(session.history().len() >= out.iterations + 5);
+    assert_eq!(session.jobs_run(), session.history().len());
+    // Observer stream is one event per iteration with matching totals.
+    assert_eq!(log.len(), out.iterations);
+    let last = log.last().unwrap();
+    assert_eq!(last.cost, out.cost);
+    assert_eq!(last.dist_evals, out.dist_evals);
+    assert!(last.sim_seconds <= out.sim_seconds, "label pass runs after the last iteration");
 }
 
 #[test]
@@ -58,26 +80,30 @@ fn full_pipeline_pjrt_backend_if_built() {
     let manifest = Manifest::load(&dir).unwrap();
     let be: Arc<dyn ComputeBackend> = Arc::new(PjrtBackend::load(&manifest, 256).unwrap());
 
-    let dataset = generate(&clean_spec(8_000, 5, 9));
-    let cfg = ClusterConfig::paper_cluster().cluster_subset(4);
-    let (mut cluster, input, points) = setup_cluster(&cfg, &dataset, 9);
-    let mut drv = ParallelKMedoids::new(be.clone(), IterParams::new(5, 9));
-    drv.update = UpdateStrategy::Exact;
-    drv.label_pass = true;
-    let out = drv.run(&mut cluster, &input, &points);
-    let ari = adjusted_rand_index(out.labels.as_ref().unwrap(), &dataset.truth);
+    let spec = clean_spec(8_000, 5, 9);
+    let fit = |backend: Arc<dyn ComputeBackend>| {
+        let mut session = session_with(4, backend, 9);
+        let data = session.ingest_spec("points", &spec);
+        KMedoids::mapreduce()
+            .plus_plus()
+            .k(5)
+            .seed(9)
+            .update(UpdateStrategy::Exact)
+            .with_labels()
+            .build()
+            .fit(&mut session, &data)
+            .unwrap()
+    };
+
+    let out = fit(be);
+    let truth = generate(&spec).truth;
+    let ari = adjusted_rand_index(out.labels.as_ref().unwrap(), &truth);
     assert!(ari > 0.85, "ARI {ari} (pjrt backend)");
 
-    // PJRT and native agree bit-for-bit on labels (same argmin over the
-    // same f32 expression).
-    let nat: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(256, 16));
-    let (mut c2, input2, points2) = setup_cluster(&cfg, &dataset, 9);
-    let mut drv2 = ParallelKMedoids::new(nat, IterParams::new(5, 9));
-    drv2.update = UpdateStrategy::Exact;
-    drv2.label_pass = true;
-    let out2 = drv2.run(&mut c2, &input2, &points2);
+    // PJRT and native agree bit-for-bit on the trajectory (same argmin
+    // over the same f32 expression).
+    let out2 = fit(Arc::new(NativeBackend::new(256, 16)));
     assert_eq!(out.medoids, out2.medoids, "backends must agree on the trajectory");
-    let _ = (input2, points2);
 }
 
 #[test]
@@ -111,17 +137,23 @@ fn experiment_grid_cell_serial_vs_parallel_speedup() {
 #[test]
 fn failure_mid_clustering_preserves_result() {
     let dataset = generate(&clean_spec(15_000, 5, 13));
-    let cfg = ClusterConfig::paper_cluster().cluster_subset(5);
     let be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(512, 16));
 
     let run = |fail: bool| {
-        let (mut cluster, input, points) = setup_cluster(&cfg, &dataset, 13);
+        let mut session = session_with(5, be.clone(), 13);
+        let data = session.ingest("points", &dataset);
         if fail {
-            cluster.plan_failure(30.0, 3);
+            session.plan_failure(30.0, 3);
         }
-        let mut drv = ParallelKMedoids::new(be.clone(), IterParams::new(5, 13));
-        drv.update = UpdateStrategy::Exact;
-        (drv.run(&mut cluster, &input, &points), cluster.n_alive())
+        let out = KMedoids::mapreduce()
+            .plus_plus()
+            .k(5)
+            .seed(13)
+            .update(UpdateStrategy::Exact)
+            .build()
+            .fit(&mut session, &data)
+            .unwrap();
+        (out, session.n_alive())
     };
     let (healthy, alive_h) = run(false);
     let (faulty, alive_f) = run(true);
@@ -141,4 +173,68 @@ fn determinism_across_full_pipeline() {
     assert_eq!(a.time_ms, b.time_ms);
     assert_eq!(a.cost, b.cost);
     assert_eq!(a.dist_evals, b.dist_evals);
+}
+
+#[test]
+fn session_reuse_matches_fresh_sessions() {
+    // Running two MR fits back-to-back on one session must produce the
+    // same simulated results as two single-use sessions: per-fit sim
+    // time is relative, table placement is per-table deterministic.
+    let be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(512, 16));
+    let spec = clean_spec(12_000, 5, 21);
+
+    let mut shared = session_with(5, be.clone(), 21);
+    let data = shared.ingest_spec("points", &spec);
+    let solver = KMedoids::mapreduce().plus_plus().k(5).seed(21).build();
+    let first = solver.fit(&mut shared, &data).unwrap();
+    let second = solver.fit(&mut shared, &data).unwrap();
+    assert_eq!(first.medoids, second.medoids, "same solver, same data, same result");
+    // Clock-relative sim time; the nonzero start only leaves float dust.
+    assert!(
+        (first.sim_seconds - second.sim_seconds).abs() < 1e-6,
+        "per-fit sim time is clock-relative: {} vs {}",
+        first.sim_seconds,
+        second.sim_seconds
+    );
+
+    let mut fresh = session_with(5, be, 21);
+    let fresh_data = fresh.ingest_spec("points", &spec);
+    let fresh_out = solver.fit(&mut fresh, &fresh_data).unwrap();
+    assert_eq!(fresh_out.medoids, first.medoids);
+    assert_eq!(fresh_out.sim_seconds, first.sim_seconds);
+    // The shared session's clock accumulated both fits.
+    assert!(shared.now_s() > fresh.now_s());
+}
+
+#[test]
+fn all_algorithms_share_one_session_with_observers() {
+    let be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(256, 16));
+    let mut session = session_with(4, be, 33);
+    let data = session.ingest_spec("points", &clean_spec(5_000, 4, 33));
+    let log = IterationLog::new();
+    session.add_observer(Box::new(log.clone()));
+
+    let solvers: Vec<Box<dyn SpatialClusterer>> = vec![
+        Box::new(KMedoids::mapreduce().plus_plus().k(4).seed(33).build()),
+        Box::new(KMedoids::mapreduce().random_init().k(4).seed(33).build()),
+        Box::new(KMedoids::serial().k(4).seed(33).build()),
+        Box::new(Clarans::serial().k(4).seed(33).build()),
+        Box::new(KMeans::mapreduce().k(4).seed(33).build()),
+    ];
+    let mut total_events = 0usize;
+    for solver in &solvers {
+        let before = log.len();
+        let out = solver.fit(&mut session, &data).unwrap();
+        let events = log.len() - before;
+        assert_eq!(events, out.iterations, "{}: one event per iteration", solver.name());
+        assert!(out.cost > 0.0, "{}", solver.name());
+        assert_eq!(out.medoids.len(), 4, "{}", solver.name());
+        total_events += events;
+    }
+    assert_eq!(log.len(), total_events);
+    // The stream carries each solver's name.
+    let names: Vec<&str> = log.events().iter().map(|e| e.algorithm).collect();
+    for expect in ["kmedoids++-mr", "kmedoids-mr", "kmedoids-serial", "clarans", "kmeans-mr"] {
+        assert!(names.contains(&expect), "missing events for {expect}");
+    }
 }

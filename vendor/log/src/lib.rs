@@ -1,0 +1,40 @@
+//! Offline stand-in for the `log` facade (no crates.io in the build
+//! image). The five level macros format straight to stderr with a level
+//! prefix — no registration, no filtering.
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { eprintln!("[ERROR] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { eprintln!("[WARN] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { eprintln!("[INFO] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { eprintln!("[DEBUG] {}", format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { eprintln!("[TRACE] {}", format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand() {
+        crate::warn!("w {}", 1);
+        crate::info!("i {}", 2);
+        crate::error!("e");
+        crate::debug!("d");
+        crate::trace!("t");
+    }
+}

@@ -1,0 +1,146 @@
+//! API-compatible **stub** of the `xla` PJRT bindings used by
+//! `kmedoids_mr::runtime::pjrt`.
+//!
+//! The build image has no crates.io registry and no `xla_extension`
+//! shared library, so this crate provides just enough surface for the
+//! PJRT backend to compile. [`PjRtClient::cpu`] always returns an error,
+//! which makes `runtime::load_backend` fall back to the native Rust
+//! kernels; the PJRT unit/integration tests already self-skip when no AOT
+//! artifacts are present. To run the real PJRT path, point the `xla` path
+//! dependency in the workspace `Cargo.toml` at a checkout of the actual
+//! bindings — the types and signatures here mirror theirs.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error type matching the bindings' `Error` (a displayable status).
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+impl StdError for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn stub_unavailable<T>() -> Result<T> {
+    Err(XlaError(
+        "xla_extension bindings not present in this build (offline stub); \
+         use the native backend or vendor the real `xla` crate"
+            .to_string(),
+    ))
+}
+
+/// A host literal (dense array) — stub carries f32 storage only.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+    pub fn reshape(mut self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(XlaError(format!(
+                "reshape {:?} incompatible with {} elements",
+                dims,
+                self.data.len()
+            )));
+        }
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub_unavailable()
+    }
+    pub fn to_tuple1(self) -> Result<Literal> {
+        stub_unavailable()
+    }
+    pub fn to_vec<T: FromLiteralElem>(&self) -> Result<Vec<T>> {
+        stub_unavailable()
+    }
+}
+
+/// Element types extractable from a [`Literal`] (sealed in the stub).
+pub trait FromLiteralElem: Sized {}
+impl FromLiteralElem for f32 {}
+impl FromLiteralElem for i32 {}
+impl FromLiteralElem for i64 {}
+
+/// Parsed HLO module (stub holds nothing).
+#[derive(Debug, Clone, Default)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub_unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone, Default)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by execution.
+#[derive(Debug, Clone, Default)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_unavailable()
+    }
+}
+
+/// Loaded executable handle.
+#[derive(Debug, Default)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_unavailable()
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the stub.
+#[derive(Debug, Default)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_unavailable()
+    }
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline stub"));
+    }
+
+    #[test]
+    fn literal_reshape_checks_shape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(l.clone().reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+}
