@@ -2,6 +2,7 @@
 //! generator ground truth, and a sampled silhouette coefficient.
 
 use crate::geo::Point;
+use crate::util::nearest::nearest_point;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 
@@ -15,19 +16,14 @@ pub fn total_cost(points: &[Point], medoids: &[Point]) -> f64 {
         .sum()
 }
 
-/// Nearest-medoid labels, brute force.
+/// Nearest-medoid labels, brute force (shared first-min-wins scan from
+/// [`crate::util::nearest`]).
 pub fn brute_labels(points: &[Point], medoids: &[Point]) -> Vec<u32> {
+    assert!(!medoids.is_empty());
     points
         .iter()
         .map(|p| {
-            let mut best = (0u32, f64::INFINITY);
-            for (j, m) in medoids.iter().enumerate() {
-                let d = p.dist2(m);
-                if d < best.1 {
-                    best = (j as u32, d);
-                }
-            }
-            best.0
+            nearest_point(*p, medoids.iter().copied()).expect("non-empty medoids").0 as u32
         })
         .collect()
 }

@@ -108,7 +108,7 @@ pub fn alternating_kmedoids_observed(
             }
             new_medoids[j] = super::parallel::choose_medoid(
                 backend,
-                &members[j],
+                members[j].as_slice(),
                 medoids[j],
                 update,
                 params.seed ^ (iter as u64) << 20 ^ j as u64,

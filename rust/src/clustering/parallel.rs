@@ -18,12 +18,13 @@
 use super::observe::{IterationEvent, ObserverHub};
 use super::seeding::init_mr;
 use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
-use crate::geo::Point;
+use crate::geo::{Point, PointSource};
 use crate::mapreduce::{
     Cluster, Input, JobSpec, MapCtx, Mapper, ReduceCtx, Reducer,
 };
 use crate::runtime::{assign_points, ops, pairwise_costs, ComputeBackend};
-use crate::util::codec::{decode_cluster_key, encode_cluster_key, Dec, Enc};
+use crate::util::codec::{decode_cluster_key, encode_cluster_key, Dec, Enc, PackedPoints};
+use crate::util::nearest::{argmin_f64, nearest_point};
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -103,15 +104,22 @@ impl ParallelKMedoids {
         let iter_cap = self.params.fixed_iters.unwrap_or(self.params.max_iters);
         for iter in 0..iter_cap {
             iterations = iter + 1;
+            // One shared, immutable medoid slab per iteration: the mapper
+            // and reducer hold `Arc` clones instead of deep-copied
+            // `Vec<Point>`s (§Perf: no per-job medoid duplication).
+            let shared_medoids: Arc<[Point]> = Arc::from(medoids.as_slice());
             let job = JobSpec::new(
                 &format!("kmedoids-iter{iter}"),
                 input.clone(),
-                Arc::new(AssignMapper { backend: self.backend.clone(), medoids: medoids.clone() }),
+                Arc::new(AssignMapper {
+                    backend: self.backend.clone(),
+                    medoids: shared_medoids.clone(),
+                }),
             )
             .with_reducer(
                 Arc::new(UpdateReducer {
                     backend: self.backend.clone(),
-                    medoids: medoids.clone(),
+                    medoids: shared_medoids,
                     update: self.update,
                     // Seed fixed across iterations: the sampled update's
                     // candidate draw must be a deterministic function of
@@ -163,9 +171,15 @@ impl ParallelKMedoids {
             }
         }
 
-        // Optional final labeling pass (map-only).
+        // Optional final labeling pass (map-only). Its distance
+        // evaluations count toward the outcome and the session counters
+        // exactly like every iteration's (they are charged to the
+        // simulated clock either way — the accounting must agree).
         let labels = if self.label_pass {
-            Some(run_label_pass(cluster, input, points, &self.backend, &medoids)?)
+            let (labels, label_evals) =
+                run_label_pass(cluster, input, points, &self.backend, &medoids)?;
+            dist_evals += label_evals;
+            Some(labels)
         } else {
             None
         };
@@ -201,7 +215,8 @@ fn write_medoids_file(cluster: &mut Cluster, medoids: &[Point]) {
 /// Table 1: nearest-medoid assignment for one split.
 struct AssignMapper {
     backend: Arc<dyn ComputeBackend>,
-    medoids: Vec<Point>,
+    /// Shared with the reducer and the driver — no per-job deep copy.
+    medoids: Arc<[Point]>,
 }
 
 impl Mapper for AssignMapper {
@@ -211,17 +226,19 @@ impl Mapper for AssignMapper {
         ctx.charge_dist_evals(ops::assign_dist_evals(pts.len(), self.medoids.len()));
         ctx.counters.inc("work.dist.evals", ops::assign_dist_evals(pts.len(), self.medoids.len()));
 
-        // Pack members per cluster (same shuffle bytes as per-point emits).
+        // Pack members per cluster straight into the emit byte buffers
+        // (same shuffle bytes as per-point emits, no intermediate
+        // `Vec<f32>` staging — the wire format is written in one pass).
         let k = self.medoids.len();
-        let mut buf: Vec<Vec<f32>> = vec![Vec::new(); k];
+        let mut bufs: Vec<Vec<u8>> = vec![Vec::new(); k];
         for (p, &l) in pts.iter().zip(&res.labels) {
-            let b = &mut buf[l as usize];
-            b.push(p.x);
-            b.push(p.y);
+            let b = &mut bufs[l as usize];
+            b.extend_from_slice(&p.x.to_le_bytes());
+            b.extend_from_slice(&p.y.to_le_bytes());
         }
-        for (j, coords) in buf.into_iter().enumerate() {
-            if !coords.is_empty() {
-                ctx.emit(encode_cluster_key(j as u32), Enc::new().f32s(&coords).done());
+        for (j, bytes) in bufs.into_iter().enumerate() {
+            if !bytes.is_empty() {
+                ctx.emit(encode_cluster_key(j as u32), bytes);
             }
         }
         // Iteration cost E (Eq. 1) via counters (integral map units²).
@@ -235,7 +252,8 @@ impl Mapper for AssignMapper {
 /// Table 2: choose the least-cost candidate as the cluster's new medoid.
 struct UpdateReducer {
     backend: Arc<dyn ComputeBackend>,
-    medoids: Vec<Point>,
+    /// Shared with the mapper and the driver — no per-job deep copy.
+    medoids: Arc<[Point]>,
     update: UpdateStrategy,
     seed: u64,
 }
@@ -244,13 +262,10 @@ impl Reducer for UpdateReducer {
     fn reduce(&self, ctx: &mut ReduceCtx, key: &[u8], values: &[Vec<u8>]) {
         let j = decode_cluster_key(key) as usize;
         let current = self.medoids[j];
-        let mut members: Vec<Point> = Vec::new();
-        for v in values {
-            let mut d = Dec::new(v);
-            while !d.is_empty() {
-                members.push(Point::new(d.f32(), d.f32()));
-            }
-        }
+        // Zero-copy member view: the shuffle values are packed (x, y)
+        // coordinate runs, read as `&[f32]` views in place (decode only
+        // on the misaligned/big-endian fallback) — no `Vec<Point>`.
+        let members = PackedPoints::new(values.iter().map(|v| v.as_slice()));
         if members.is_empty() {
             ctx.emit(key.to_vec(), Enc::new().f32(current.x).f32(current.y).done());
             return;
@@ -267,100 +282,93 @@ impl Reducer for UpdateReducer {
     }
 }
 
-/// The medoid-update step, shared with the serial baselines.
-pub fn choose_medoid(
+/// The medoid-update step, shared with the serial baselines. Generic over
+/// [`PointSource`] so the MR reducer can pass zero-copy shuffle-byte
+/// views while the serial engines pass plain `&[Point]` slices.
+pub fn choose_medoid<M: PointSource + ?Sized>(
     backend: &dyn ComputeBackend,
-    members: &[Point],
+    members: &M,
     current: Point,
     update: UpdateStrategy,
     seed: u64,
     ctx: &mut ReduceCtx,
 ) -> Point {
+    let m = members.len();
     match update {
         UpdateStrategy::Exact => {
-            let costs = pairwise_costs(backend, members, members).expect("pairwise kernel");
-            let evals = ops::pairwise_dist_evals(members.len(), members.len());
+            let costs =
+                ops::pairwise_costs_src(backend, members, members).expect("pairwise kernel");
+            let evals = ops::pairwise_dist_evals(m, m);
             ctx.charge_dist_evals(evals);
             ctx.counters.inc("work.dist.evals", evals);
-            let best = argmin(&costs);
-            members[best]
+            members.get(argmin_f64(&costs))
         }
         UpdateStrategy::SampledAdaptive { candidates, frac_div, min_sample } => {
-            let member_sample = (members.len() / frac_div.max(1)).max(min_sample);
-            return choose_medoid(
+            let member_sample = (m / frac_div.max(1)).max(min_sample);
+            choose_medoid(
                 backend,
                 members,
                 current,
                 UpdateStrategy::Sampled { candidates, member_sample },
                 seed,
                 ctx,
-            );
+            )
         }
         UpdateStrategy::Sampled { candidates, member_sample } => {
             let mut rng = Rng::new(seed);
-            let cand_idx = rng.sample_indices(members.len(), candidates.min(members.len()));
+            let cand_idx = rng.sample_indices(m, candidates.min(m));
             // Candidate 0 is always the current medoid so "keep" is always
             // on the table (prevents thrash near convergence).
             let mut cands: Vec<Point> = vec![current];
-            cands.extend(cand_idx.iter().map(|&i| members[i]));
-            let sample: Vec<Point> = if members.len() <= member_sample {
-                members.to_vec()
+            cands.extend(cand_idx.iter().map(|&i| members.get(i)));
+            let sample: Vec<Point> = if m <= member_sample {
+                (0..m).map(|i| members.get(i)).collect()
             } else {
-                rng.sample_indices(members.len(), member_sample)
+                rng.sample_indices(m, member_sample)
                     .into_iter()
-                    .map(|i| members[i])
+                    .map(|i| members.get(i))
                     .collect()
             };
             let costs = pairwise_costs(backend, &cands, &sample).expect("pairwise kernel");
             let evals = ops::pairwise_dist_evals(cands.len(), sample.len());
             ctx.charge_dist_evals(evals);
             ctx.counters.inc("work.dist.evals", evals);
-            cands[argmin(&costs)]
+            cands[argmin_f64(&costs)]
         }
         UpdateStrategy::CentroidNearest => {
             let (mut sx, mut sy) = (0f64, 0f64);
-            for p in members {
+            for i in 0..m {
+                let p = members.get(i);
                 sx += p.x as f64;
                 sy += p.y as f64;
             }
-            let c = Point::new((sx / members.len() as f64) as f32, (sy / members.len() as f64) as f32);
-            let mut best = (0usize, f64::INFINITY);
-            for (i, p) in members.iter().enumerate() {
-                let d = p.dist2(&c);
-                if d < best.1 {
-                    best = (i, d);
-                }
-            }
-            let evals = 2 * members.len() as u64;
+            let c = Point::new((sx / m as f64) as f32, (sy / m as f64) as f32);
+            let (best, _) = nearest_point(c, (0..m).map(|i| members.get(i)))
+                .expect("non-empty member set");
+            let evals = 2 * m as u64;
             ctx.charge_dist_evals(evals);
             ctx.counters.inc("work.dist.evals", evals);
-            members[best.0]
+            members.get(best)
         }
     }
-}
-
-fn argmin(xs: &[f64]) -> usize {
-    let mut best = 0usize;
-    for i in 1..xs.len() {
-        if xs[i] < xs[best] {
-            best = i;
-        }
-    }
-    best
 }
 
 // ---- final labeling pass ----------------------------------------------------
 
 struct LabelMapper {
     backend: Arc<dyn ComputeBackend>,
-    medoids: Vec<Point>,
+    medoids: Arc<[Point]>,
 }
 
 impl Mapper for LabelMapper {
     fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
         let res = assign_points(self.backend.as_ref(), pts, &self.medoids)
             .expect("assign kernel failed");
-        ctx.charge_dist_evals(ops::assign_dist_evals(pts.len(), self.medoids.len()));
+        // Charge the sim *and* the work counter — the label pass's evals
+        // must reach `ClusterOutcome::dist_evals` like every other pass.
+        let evals = ops::assign_dist_evals(pts.len(), self.medoids.len());
+        ctx.charge_dist_evals(evals);
+        ctx.counters.inc("work.dist.evals", evals);
         let mut enc = Enc::with_capacity(4 * pts.len());
         for &l in &res.labels {
             enc = enc.u32(l);
@@ -369,17 +377,20 @@ impl Mapper for LabelMapper {
     }
 }
 
+/// Run the final map-only labeling job. Returns the labels plus the
+/// pass's distance evaluations (from the job's `work.dist.evals`
+/// counter) so the driver can fold them into the outcome total.
 fn run_label_pass(
     cluster: &mut Cluster,
     input: &Input,
     points: &Arc<Vec<Point>>,
     backend: &Arc<dyn ComputeBackend>,
     medoids: &[Point],
-) -> anyhow::Result<Vec<u32>> {
+) -> anyhow::Result<(Vec<u32>, u64)> {
     let job = JobSpec::new(
         "kmedoids-labels",
         input.clone(),
-        Arc::new(LabelMapper { backend: backend.clone(), medoids: medoids.to_vec() }),
+        Arc::new(LabelMapper { backend: backend.clone(), medoids: Arc::from(medoids) }),
     );
     let result = cluster.try_run_job(&job)?;
     let mut labels = vec![0u32; points.len()];
@@ -392,7 +403,7 @@ fn run_label_pass(
             i += 1;
         }
     }
-    Ok(labels)
+    Ok((labels, result.counters.get("work.dist.evals")))
 }
 
 #[cfg(test)]
@@ -532,6 +543,54 @@ mod tests {
         // driver must not panic and must keep k medoids.
         let (out, _, _) = run_once(300, 8, Init::Random, UpdateStrategy::Exact, 17);
         assert_eq!(out.medoids.len(), 8);
+    }
+
+    #[test]
+    fn compute_threads_produce_identical_fits() {
+        // The whole point of the worker pool: threads ∈ {1, 2, 8} change
+        // only the wall clock. Medoids, cost, simulated time, distance
+        // evals, and labels must be byte-identical.
+        for &seed in &[3u64, 41] {
+            let mut spec = SpatialSpec::new(3000, 4, seed);
+            spec.outlier_frac = 0.0;
+            let d = generate(&spec);
+            let points = Arc::new(d.points);
+            let run = |threads: usize| {
+                let input = make_input(&points, 6);
+                let mut cluster =
+                    Cluster::new(ClusterConfig::test_cluster(4), seed).with_threads(threads);
+                let mut driver = ParallelKMedoids::new(backend(), IterParams::new(4, seed));
+                driver.label_pass = true;
+                let out = driver.run(&mut cluster, &input, &points);
+                (out.medoids, out.cost, out.sim_seconds, out.dist_evals, out.labels)
+            };
+            let base = run(1);
+            assert_eq!(base, run(2), "seed {seed}: 2 threads diverged");
+            assert_eq!(base, run(8), "seed {seed}: 8 threads diverged");
+        }
+    }
+
+    #[test]
+    fn label_pass_evals_are_accounted() {
+        let run = |label_pass: bool| {
+            let mut spec = SpatialSpec::new(2000, 4, 13);
+            spec.outlier_frac = 0.0;
+            let d = generate(&spec);
+            let points = Arc::new(d.points);
+            let input = make_input(&points, 5);
+            let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 13);
+            let mut driver = ParallelKMedoids::new(backend(), IterParams::new(4, 13));
+            driver.label_pass = label_pass;
+            let out = driver.run(&mut cluster, &input, &points);
+            (out, cluster.counters.get("work.dist.evals"))
+        };
+        let (without, _) = run(false);
+        let (with, session_evals) = run(true);
+        // Same fit, plus exactly one n×k labeling scan on top.
+        let label_evals = 2000u64 * 4;
+        assert_eq!(with.dist_evals, without.dist_evals + label_evals);
+        // And the session-level counter agrees with the outcome total.
+        assert_eq!(session_evals, with.dist_evals);
     }
 
     #[test]

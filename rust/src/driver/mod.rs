@@ -86,6 +86,11 @@ pub struct Experiment {
     pub with_quality: bool,
     /// Controlled iteration count (see `IterParams::fixed_iters`).
     pub fixed_iters: Option<usize>,
+    /// Real-compute worker threads (wallclock only; results and simulated
+    /// time are identical at any value). Applied when a session is built
+    /// *for* this cell ([`run_experiment`], the CLI, spec files); cells
+    /// run through [`run_cell`] inherit the session's setting.
+    pub threads: usize,
 }
 
 impl Experiment {
@@ -104,6 +109,7 @@ impl Experiment {
             seed,
             with_quality: false,
             fixed_iters: None,
+            threads: 1,
         }
     }
 
@@ -230,6 +236,7 @@ pub fn run_experiment(exp: &Experiment, backend: &Arc<dyn ComputeBackend>) -> Ex
         .cluster(ClusterConfig::paper_cluster().cluster_subset(exp.n_nodes))
         .backend(backend.clone())
         .seed(exp.seed)
+        .threads(exp.threads)
         .build()
         .expect("session build cannot fail with an explicit backend");
     let data = session.ingest_spec("points", &exp.spec);
@@ -260,6 +267,7 @@ mod tests {
             update: UpdateStrategy::Sampled { candidates: 64, member_sample: 1024 },
             seed: 71,
             with_quality: true,
+            threads: 1,
         }
     }
 

@@ -207,6 +207,7 @@ pub fn experiment_to_json(e: &Experiment) -> Json {
         ("k", Json::Num(e.k as f64)),
         ("seed", Json::Num(e.seed as f64)),
         ("with_quality", Json::Bool(e.with_quality)),
+        ("threads", Json::Num(e.threads as f64)),
         ("dataset", spatial_spec_to_json(&e.spec)),
     ];
     // Only emit knobs the algorithm honors, mirroring the parse-side
@@ -230,7 +231,17 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
     check_known_keys(
         j,
         "spec cell",
-        &["algorithm", "nodes", "k", "seed", "with_quality", "update", "fixed_iters", "dataset"],
+        &[
+            "algorithm",
+            "nodes",
+            "k",
+            "seed",
+            "with_quality",
+            "update",
+            "fixed_iters",
+            "dataset",
+            "threads",
+        ],
     )?;
     let algorithm = match j.get("algorithm").and_then(|a| a.as_str()) {
         Some(s) => Algorithm::parse(s)
@@ -281,7 +292,11 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         Some(v) => v.as_bool().context("with_quality must be true or false")?,
         None => false,
     };
-    Ok(Experiment { algorithm, n_nodes, spec, k, update, seed, with_quality, fixed_iters })
+    let threads = match j.get("threads") {
+        Some(v) => as_pos_usize(v, "threads")?,
+        None => 1,
+    };
+    Ok(Experiment { algorithm, n_nodes, spec, k, update, seed, with_quality, fixed_iters, threads })
 }
 
 /// Serialize a grid of cells (array form).
@@ -333,6 +348,7 @@ mod tests {
                 }
                 e.k = 3 + i;
                 e.with_quality = i % 2 == 0;
+                e.threads = 1 + (i % 3);
                 e.fixed_iters = if algorithm_uses_fixed_iters(algorithm) && i % 2 == 1 {
                     Some(6)
                 } else {
@@ -426,6 +442,9 @@ mod tests {
         let e = experiments_from_str(r#"{"dataset": {"n_points": 100}, "nodes": 0}"#)
             .unwrap_err();
         assert!(format!("{e:#}").contains("nodes"), "{e:#}");
+        let e = experiments_from_str(r#"{"dataset": {"n_points": 100}, "threads": 0}"#)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("threads"), "{e:#}");
         let e = experiments_from_str(r#"{"dataset": {"paper_dataset": -1}}"#).unwrap_err();
         assert!(format!("{e:#}").contains("paper_dataset"), "{e:#}");
     }

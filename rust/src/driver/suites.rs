@@ -12,14 +12,19 @@
 //! progress to stderr through a [`StderrProgress`] observer.
 
 use super::{run_cell, Algorithm, Experiment, ExperimentResult};
+use crate::clustering::api::SpatialClusterer as _;
 use crate::clustering::observe::StderrProgress;
 use crate::clustering::{Init, UpdateStrategy};
 use crate::config::ClusterConfig;
 use crate::geo::datasets::{generate, SpatialSpec};
 use crate::geo::Point;
-use crate::runtime::ComputeBackend;
+use crate::runtime::{assign_points, pairwise_costs, ComputeBackend};
 use crate::session::{ClusterSession, DatasetHandle};
+use crate::util::bench::{bench, header, BenchOpts};
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Shared suite knobs.
 #[derive(Debug, Clone)]
@@ -29,14 +34,21 @@ pub struct SuiteOpts {
     pub seed: u64,
     /// Stream per-iteration events to stderr while cells run.
     pub trace: bool,
+    /// Real-compute worker threads for every suite session (wallclock
+    /// only; the reported simulated numbers are identical at any value).
+    pub threads: usize,
 }
 
 impl SuiteOpts {
     pub fn new(scale_div: usize, seed: u64) -> SuiteOpts {
-        SuiteOpts { scale_div: scale_div.max(1), seed, trace: false }
+        SuiteOpts { scale_div: scale_div.max(1), seed, trace: false, threads: 1 }
     }
     pub fn with_trace(mut self, trace: bool) -> SuiteOpts {
         self.trace = trace;
+        self
+    }
+    pub fn with_threads(mut self, threads: usize) -> SuiteOpts {
+        self.threads = threads.max(1);
         self
     }
 }
@@ -63,6 +75,7 @@ fn suite_session(
         .nodes(nodes)
         .backend(backend.clone())
         .seed(opts.seed)
+        .threads(opts.threads)
         .build()
         .expect("session build cannot fail with an explicit backend");
     if opts.trace {
@@ -181,6 +194,181 @@ pub fn ablation_suite(
     out
 }
 
+// ---- perf bench -------------------------------------------------------------
+
+/// Knobs for the `bench perf` suite.
+#[derive(Debug, Clone)]
+pub struct PerfOpts {
+    /// Divide the paper e2e dataset (dataset 1 of Table 5).
+    pub scale_div: usize,
+    pub seed: u64,
+    /// Thread counts to sweep (1 must be included for the speedup base;
+    /// it is added automatically if missing).
+    pub threads: Vec<usize>,
+    /// Tiny-n CI mode: one repeat, small kernels, fast by construction.
+    pub smoke: bool,
+}
+
+impl Default for PerfOpts {
+    fn default() -> Self {
+        PerfOpts { scale_div: 10, seed: 42, threads: vec![1, 2, 4], smoke: false }
+    }
+}
+
+/// One e2e row of the perf bench.
+struct PerfRow {
+    threads: usize,
+    wall_s: f64,
+    sim_seconds: f64,
+    cost: f64,
+    iterations: usize,
+    dist_evals: u64,
+    identical: bool,
+}
+
+/// Wall-clock perf trajectory: kernel throughput plus the paper e2e
+/// workload (K-Medoids++ MR, 7 nodes, dataset 1) swept over real-compute
+/// thread counts. Returns the `BENCH_perf.json` document; simulated
+/// results are asserted identical across thread counts (the engine's
+/// determinism contract), so the sweep measures *only* wall clock.
+pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
+    let mut threads = opts.threads.clone();
+    if !threads.contains(&1) {
+        threads.insert(0, 1);
+    }
+    threads.sort_unstable();
+    threads.dedup();
+
+    // ---- kernel micro-benches (per-call, single-threaded) ----------------
+    header("perf: kernel hot path");
+    let bench_opts =
+        if opts.smoke { BenchOpts { warmup_iters: 1, iters: 2 } } else { BenchOpts::default() };
+    let kn = if opts.smoke { 8_192 } else { 1 << 17 };
+    let kdata = generate(&SpatialSpec::new(kn, 9, opts.seed));
+    let medoids: Vec<Point> = kdata.points[..9].to_vec();
+    let assign_stats = bench(&format!("assign {kn} pts x 9 medoids"), &bench_opts, || {
+        assign_points(backend.as_ref(), &kdata.points, &medoids).unwrap().labels.len()
+    });
+    let pm = if opts.smoke { 4_096 } else { 1 << 14 };
+    let cands: Vec<Point> = kdata.points[..256.min(kn)].to_vec();
+    let pair_stats = bench(&format!("pairwise {} cands x {pm} members", cands.len()), &bench_opts, || {
+        pairwise_costs(backend.as_ref(), &cands, &kdata.points[..pm]).unwrap().len()
+    });
+    let kernels = Json::Arr(vec![
+        kernel_json(&assign_stats, (kn * 9) as f64),
+        kernel_json(&pair_stats, (cands.len() * pm) as f64),
+    ]);
+
+    // ---- e2e thread sweep ------------------------------------------------
+    let mut exp = Experiment::paper_cell(Algorithm::KMedoidsPlusPlusMR, 7, 0, opts.seed)
+        .scaled(opts.scale_div.max(1));
+    exp.fixed_iters = Some(6); // controlled iterations: same work per run
+    let points = Arc::new(generate(&exp.spec).points);
+    let repeats = if opts.smoke { 1 } else { 2 };
+
+    header("perf: e2e wall clock vs threads (paper workload)");
+    let mut rows: Vec<PerfRow> = Vec::new();
+    let mut baseline: Option<(Vec<Point>, f64, f64, u64, usize)> = None;
+    for &t in &threads {
+        let mut session = ClusterSession::builder()
+            .cluster(ClusterConfig::paper_cluster())
+            .nodes(7)
+            .backend(backend.clone())
+            .seed(opts.seed)
+            .threads(t)
+            .build()
+            .expect("session build cannot fail with an explicit backend");
+        let data = session.ingest_points("points", points.clone());
+        let solver = exp.clusterer();
+        let mut wall_s = f64::INFINITY;
+        let mut outcome = None;
+        for _ in 0..repeats {
+            let t0 = Instant::now();
+            let out = solver.fit(&mut session, &data).expect("perf e2e fit failed");
+            wall_s = wall_s.min(t0.elapsed().as_secs_f64());
+            outcome = Some(out);
+        }
+        let out = outcome.expect("at least one repeat ran");
+        let summary =
+            (out.medoids.clone(), out.cost, out.sim_seconds, out.dist_evals, out.iterations);
+        // Record (rather than panic on) a mismatch: the caller inspects
+        // `identical_outputs` / `identical_to_1_thread` and fails with the
+        // full report, so a determinism regression still produces the
+        // BENCH_perf.json diagnostic instead of a bare backtrace.
+        let identical = match &baseline {
+            None => {
+                baseline = Some(summary);
+                true
+            }
+            Some(base) => *base == summary,
+        };
+        eprintln!(
+            "  [perf] threads={t:<3} wall {wall_s:>8.3}s  sim {:.1}s  cost {:.4e}{}",
+            out.sim_seconds,
+            out.cost,
+            if identical { "" } else { "  MISMATCH" }
+        );
+        rows.push(PerfRow {
+            threads: t,
+            wall_s,
+            sim_seconds: out.sim_seconds,
+            cost: out.cost,
+            iterations: out.iterations,
+            dist_evals: out.dist_evals,
+            identical,
+        });
+    }
+
+    let base_wall = rows.iter().find(|r| r.threads == 1).map(|r| r.wall_s).unwrap_or(0.0);
+    let mut speedup = BTreeMap::new();
+    for r in &rows {
+        let ratio = base_wall / r.wall_s;
+        // Sub-resolution walls could yield inf/NaN, which are not JSON.
+        let ratio = if ratio.is_finite() { ratio } else { 0.0 };
+        speedup.insert(format!("{}", r.threads), Json::Num(ratio));
+        if r.threads > 1 {
+            eprintln!("  [perf] speedup @{} threads: {ratio:.2}x", r.threads);
+        }
+    }
+
+    let e2e = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("threads", Json::Num(r.threads as f64)),
+                    ("wall_s", Json::Num(r.wall_s)),
+                    ("sim_seconds", Json::Num(r.sim_seconds)),
+                    ("cost", Json::Num(r.cost)),
+                    ("iterations", Json::Num(r.iterations as f64)),
+                    ("dist_evals", Json::Num(r.dist_evals as f64)),
+                    ("identical_to_1_thread", Json::Bool(r.identical)),
+                ])
+            })
+            .collect(),
+    );
+
+    obj(vec![
+        ("bench", Json::Str("perf".into())),
+        ("smoke", Json::Bool(opts.smoke)),
+        ("backend", Json::Str(backend.name().to_string())),
+        ("scale_div", Json::Num(opts.scale_div as f64)),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("n_points", Json::Num(points.len() as f64)),
+        ("kernels", kernels),
+        ("e2e", e2e),
+        ("speedup_vs_1_thread", Json::Obj(speedup)),
+        ("identical_outputs", Json::Bool(rows.iter().all(|r| r.identical))),
+    ])
+}
+
+fn kernel_json(stats: &crate::util::bench::Stats, evals_per_iter: f64) -> Json {
+    let mut j = stats.to_json();
+    if let Json::Obj(map) = &mut j {
+        map.insert("dist_evals_per_s".into(), Json::Num(evals_per_iter / stats.median_s));
+    }
+    j
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +402,23 @@ mod tests {
         }
         // Larger dataset takes longer at fixed cluster size.
         assert!(rs[0].time_ms <= rs[8].time_ms);
+    }
+
+    #[test]
+    fn perf_suite_smoke_is_consistent() {
+        let opts = PerfOpts { scale_div: 2000, seed: 5, threads: vec![2], smoke: true };
+        let j = perf_suite(&be(), &opts);
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("perf"));
+        // 1 thread is added automatically as the speedup base.
+        let e2e = j.get("e2e").unwrap().as_arr().unwrap();
+        assert_eq!(e2e.len(), 2);
+        assert_eq!(e2e[0].get("threads").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("identical_outputs").unwrap().as_bool(), Some(true));
+        let s1 = j.get("speedup_vs_1_thread").unwrap().get("1").unwrap().as_f64().unwrap();
+        assert!((s1 - 1.0).abs() < 1e-9);
+        assert_eq!(j.get("kernels").unwrap().as_arr().unwrap().len(), 2);
+        // The document is valid, re-parseable JSON.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 
     #[test]

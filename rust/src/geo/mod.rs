@@ -24,6 +24,39 @@ impl Point {
     }
 }
 
+/// A readable sequence of 2-D points, abstracting over the storage
+/// layout: an owned/borrowed `[Point]` slice, or zero-copy `&[f32]`
+/// views over MapReduce shuffle bytes
+/// ([`crate::util::codec::PackedPoints`]). The kernel block-packing ops
+/// ([`crate::runtime::ops`]) and the medoid-update step consume this
+/// trait so the reduce side never has to materialize a `Vec<Point>`.
+pub trait PointSource {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Point at index `i` (`i < len()`).
+    fn get(&self, i: usize) -> Point;
+    /// Write points `start..start + n` as interleaved `x, y` f32 pairs
+    /// into `dst[..2 * n]`. Implementations may override with bulk copies.
+    fn fill_coords(&self, start: usize, n: usize, dst: &mut [f32]) {
+        for i in 0..n {
+            let p = self.get(start + i);
+            dst[2 * i] = p.x;
+            dst[2 * i + 1] = p.y;
+        }
+    }
+}
+
+impl PointSource for [Point] {
+    fn len(&self) -> usize {
+        <[Point]>::len(self)
+    }
+    fn get(&self, i: usize) -> Point {
+        self[i]
+    }
+}
+
 /// Axis-aligned bounding box.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BBox {
@@ -68,6 +101,18 @@ mod tests {
         let b = Point::new(3.0, 4.0);
         assert_eq!(a.dist2(&b), 25.0);
         assert_eq!(a.dist2(&a), 0.0);
+    }
+
+    #[test]
+    fn point_source_slice_impl() {
+        let pts = vec![Point::new(1.0, 2.0), Point::new(3.0, 4.0), Point::new(5.0, 6.0)];
+        let src: &[Point] = &pts;
+        assert_eq!(PointSource::len(src), 3);
+        assert!(!PointSource::is_empty(src));
+        assert_eq!(PointSource::get(src, 1), Point::new(3.0, 4.0));
+        let mut buf = [0f32; 4];
+        src.fill_coords(1, 2, &mut buf);
+        assert_eq!(buf, [3.0, 4.0, 5.0, 6.0]);
     }
 
     #[test]

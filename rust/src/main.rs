@@ -37,7 +37,7 @@ fn main() {
 
 /// Flags that never take a value; they must not swallow a following
 /// positional (`bench --trace fig5` keeps `fig5` as the suite name).
-const BOOL_FLAGS: &[&str] = &["quality", "trace"];
+const BOOL_FLAGS: &[&str] = &["quality", "trace", "smoke"];
 
 /// Tiny flag parser: `--key value` pairs after the subcommand. Unknown
 /// flags are rejected (with a did-you-mean suggestion) by
@@ -172,12 +172,21 @@ USAGE:
   kmedoids-mr generate --points N [--hotspots H] [--seed S] --out FILE.csv
   kmedoids-mr run   [--algo ALGO] [--nodes N] [--dataset 0|1|2] [--k K]
                     [--scale DIV] [--seed S] [--backend auto|pjrt|native]
-                    [--quality] [--trace]
+                    [--threads N] [--quality] [--trace]
   kmedoids-mr run   --spec CELLS.json [--backend auto|pjrt|native] [--trace]
-  kmedoids-mr bench table6|fig4|fig5|ablation [--scale DIV] [--seed S] [--trace]
+  kmedoids-mr bench table6|fig4|fig5|ablation [--scale DIV] [--seed S]
+                    [--threads N] [--trace]
+  kmedoids-mr bench perf [--scale DIV] [--seed S] [--threads 1,2,4]
+                    [--out BENCH_perf.json] [--smoke]
   kmedoids-mr inspect-artifacts
 
 ALGO: kmedoids++-mr | kmedoids-mr | kmedoids-serial | clarans | kmeans-mr
+
+--threads N runs the map/reduce real compute on N worker threads
+(wallclock only — results and simulated time are identical at any N).
+`bench perf` sweeps a comma-separated thread list, verifies the outputs
+are identical at every width, and writes the wall-clock trajectory to
+BENCH_perf.json.
 
 Run-spec JSON (one cell object or an array; see driver::spec docs):
   {{\"algorithm\": \"kmedoids++-mr\", \"nodes\": 7, \"k\": 9,
@@ -225,6 +234,7 @@ fn run_one_cell(
         .nodes(exp.n_nodes)
         .backend(backend.clone())
         .seed(exp.seed)
+        .threads(exp.threads)
         .build()?;
     let log = IterationLog::new();
     session.add_observer(Box::new(log.clone()));
@@ -232,11 +242,13 @@ fn run_one_cell(
         session.add_observer(Box::new(StderrProgress::new()));
     }
     println!(
-        "running {} on {} points with {} nodes (backend: {})",
+        "running {} on {} points with {} nodes (backend: {}, {} compute thread{})",
         exp.algorithm.name(),
         exp.spec.n_points,
         exp.n_nodes,
-        backend.name()
+        backend.name(),
+        session.compute_threads(),
+        if session.compute_threads() == 1 { "" } else { "s" }
     );
     let data = session.ingest_spec("points", &exp.spec);
     let r = run_cell(&mut session, exp, &data)?;
@@ -256,14 +268,17 @@ fn run_one_cell(
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(
         "run",
-        &["spec", "algo", "nodes", "dataset", "k", "scale", "seed", "backend", "quality", "trace"],
+        &[
+            "spec", "algo", "nodes", "dataset", "k", "scale", "seed", "backend", "threads",
+            "quality", "trace",
+        ],
     )?;
     args.check_positionals("run", 0)?;
     let trace = args.has("trace");
 
     // Spec-file mode: drive any cell grid from JSON.
     if let Some(path) = args.get("spec") {
-        for flag in ["algo", "nodes", "dataset", "k", "scale", "seed", "quality"] {
+        for flag in ["algo", "nodes", "dataset", "k", "scale", "seed", "quality", "threads"] {
             if args.has(flag) {
                 bail!("--{flag} conflicts with --spec (put it in the spec file)");
             }
@@ -298,16 +313,51 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut exp = Experiment::paper_cell(algo, nodes, dataset, seed).scaled(scale.max(1));
     exp.k = k;
     exp.with_quality = args.has("quality");
+    exp.threads = args.get_usize("threads", 1)?;
+    if exp.threads == 0 {
+        bail!("--threads must be >= 1");
+    }
     run_one_cell(&exp, &backend, trace)?;
     Ok(())
 }
 
+/// Parse `--threads` for `bench perf`: a comma-separated positive list
+/// ("1,2,4"), or a single integer.
+fn parse_threads_list(s: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let n: usize = part
+            .trim()
+            .parse()
+            .with_context(|| format!("--threads must be integers like 1,2,4 (got {part:?})"))?;
+        if n == 0 {
+            bail!("--threads entries must be >= 1");
+        }
+        out.push(n);
+    }
+    Ok(out)
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
-    args.check_known("bench", &["scale", "seed", "backend", "trace"])?;
+    args.check_known("bench", &["scale", "seed", "backend", "trace", "threads", "out", "smoke"])?;
     args.check_positionals("bench", 1)?;
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table6");
+
+    if which == "perf" {
+        return cmd_bench_perf(args);
+    }
+    for flag in ["out", "smoke"] {
+        if args.has(flag) {
+            bail!("--{flag} only applies to `bench perf`");
+        }
+    }
+    let suite_threads = args.get_usize("threads", 1)?;
+    if suite_threads == 0 {
+        bail!("--threads must be >= 1");
+    }
     let opts = SuiteOpts::new(args.get_usize("scale", 1)?, args.get_u64("seed", 42)?)
-        .with_trace(args.has("trace"));
+        .with_trace(args.has("trace"))
+        .with_threads(suite_threads);
     let backend = backend_from(args, 2048)?;
     match which {
         "table6" | "fig3" => {
@@ -343,7 +393,53 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 );
             }
         }
-        other => bail!("unknown bench {other:?} (table6|fig4|fig5|ablation)"),
+        other => bail!("unknown bench {other:?} (table6|fig4|fig5|ablation|perf)"),
+    }
+    Ok(())
+}
+
+/// `bench perf`: kernel + e2e wall-clock trajectory, written to
+/// `BENCH_perf.json` (see `driver::suites::perf_suite`).
+fn cmd_bench_perf(args: &Args) -> Result<()> {
+    if args.has("trace") {
+        bail!("--trace does not apply to `bench perf` (it prints its own progress)");
+    }
+    let smoke = args.has("smoke");
+    let threads = match args.get("threads") {
+        Some(s) => parse_threads_list(s)?,
+        None if smoke => vec![1, 2],
+        None => vec![1, 2, 4],
+    };
+    let opts = kmedoids_mr::driver::suites::PerfOpts {
+        scale_div: args.get_usize("scale", if smoke { 2000 } else { 10 })?.max(1),
+        seed: args.get_u64("seed", 42)?,
+        threads,
+        smoke,
+    };
+    // Kernel staging buffers dominate below the block floor; keep the
+    // production block size so the bench reflects the mapper's hot path.
+    let backend = backend_from(args, 2048)?;
+    let report = kmedoids_mr::driver::suites::perf_suite(&backend, &opts);
+    let out = args.get("out").unwrap_or("BENCH_perf.json");
+    std::fs::write(out, format!("{report}\n")).with_context(|| format!("write {out:?}"))?;
+
+    println!("\nperf summary (full report: {out}):");
+    if let Some(rows) = report.get("e2e").and_then(|e| e.as_arr()) {
+        println!("{:>8} {:>12} {:>12}", "threads", "wall(s)", "speedup");
+        for row in rows {
+            let t = row.get("threads").and_then(|v| v.as_u64()).unwrap_or(0);
+            let w = row.get("wall_s").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+            let s = report
+                .get("speedup_vs_1_thread")
+                .and_then(|m| m.get(&t.to_string()))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(f64::NAN);
+            println!("{t:>8} {w:>12.3} {s:>11.2}x");
+        }
+    }
+    match report.get("identical_outputs").and_then(|v| v.as_bool()) {
+        Some(true) => println!("outputs identical at every thread count: yes"),
+        _ => bail!("outputs diverged across thread counts (determinism bug)"),
     }
     Ok(())
 }
@@ -442,6 +538,15 @@ mod tests {
         assert!(a.check_known("run", &["nodes", "seed"]).is_ok());
         let none = Args::parse(&argv(&[]));
         assert!(none.check_known("inspect-artifacts", &[]).is_ok());
+    }
+
+    #[test]
+    fn threads_lists_parse_and_reject_zero() {
+        assert_eq!(parse_threads_list("1,2,4").unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_threads_list(" 8 ").unwrap(), vec![8]);
+        assert!(parse_threads_list("0,2").is_err());
+        assert!(parse_threads_list("two").is_err());
+        assert!(parse_threads_list("").is_err());
     }
 
     #[test]

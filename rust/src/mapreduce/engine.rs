@@ -7,6 +7,16 @@
 //! is produced by [`CostModel`] from the measured work. Task outputs are
 //! cached per task, so a speculative duplicate attempt reuses the same
 //! deterministic result with different timing.
+//!
+//! **Parallel real compute.** Each task's real computation is a pure
+//! function of the job spec and its input split, so the engine runs all
+//! map-task computations — and, once those are in, all reduce-task
+//! computations — across [`Cluster::compute_threads`] workers on the
+//! scoped-thread pool in [`crate::util::pool`] before any simulated
+//! scheduling happens. Results are cached **by task index** and counters
+//! are merged in task order, so job output, counters, and simulated
+//! timing are byte-identical at any thread count; only the wall clock
+//! changes.
 
 use super::api::{Counters, InputShapeError, Key, MapCtx, ReduceCtx, Val};
 use super::job::{Input, JobSpec, SplitMeta};
@@ -14,6 +24,7 @@ use crate::config::ClusterConfig;
 use crate::dfs::NameNode;
 use crate::hbase::HMaster;
 use crate::sim::{CostModel, Event, EventQueue, SimTime, TaskWork};
+use crate::util::pool::parallel_map_indexed;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -114,8 +125,10 @@ pub struct Cluster {
     pub jobs_run: usize,
     #[allow(dead_code)]
     rng: Rng,
-    /// Real-compute thread pool width for map/reduce user code (wallclock
-    /// only; simulated timing is unaffected). Set >1 by the perf pass.
+    /// Worker-pool width for map/reduce *real* compute (wallclock only;
+    /// job output, counters, and simulated timing are identical at any
+    /// value). Plumbed from `SessionBuilder::threads` / the CLI
+    /// `--threads` flag; 1 = serial.
     pub compute_threads: usize,
 }
 
@@ -144,6 +157,13 @@ impl Cluster {
 
     pub fn with_cost(mut self, cost: CostModel) -> Cluster {
         self.cost = cost;
+        self
+    }
+
+    /// Set the real-compute worker-pool width (see
+    /// [`Cluster::compute_threads`]).
+    pub fn with_threads(mut self, threads: usize) -> Cluster {
+        self.compute_threads = threads.max(1);
         self
     }
 
@@ -217,16 +237,60 @@ impl Cluster {
             }
         }
 
+        // Run every (cached, deterministic) task computation up front,
+        // fanned out over the compute_threads worker pool. A mapper fed
+        // the wrong input representation surfaces as a job failure before
+        // any scheduling happens; the first error in task order wins, as
+        // in the old serial loop.
+        let threads = self.compute_threads.max(1);
+        let computed = parallel_map_indexed(threads, n_maps, |t| run_map_task(spec, &splits[t]));
+        let mut map_out: Vec<Arc<MapOut>> = Vec::with_capacity(n_maps);
+        let mut shape_err: Option<InputShapeError> = None;
+        for (out, err) in computed {
+            if shape_err.is_none() {
+                shape_err = err;
+            }
+            map_out.push(Arc::new(out));
+        }
+        if let Some(e) = shape_err {
+            // Put unfired failure/recovery events back on the plan.
+            while let Some((at, ev)) = q.next() {
+                match ev {
+                    Event::NodeFail { node } => self.failure_plan.push((t0.0 + at.0, node)),
+                    Event::NodeRecover { node } => self.recover_plan.push((t0.0 + at.0, node)),
+                    _ => {}
+                }
+            }
+            return Err(JobError { job: spec.name.clone(), message: e.to_string() });
+        }
+
+        // Map outputs are final (re-runs after node failures reuse the
+        // cache), so all reduce computations are data-ready now: fan them
+        // out too, then merge their counters in partition order so the
+        // totals are independent of the thread count.
+        let mut reduce_out: Vec<(Vec<(Key, Val)>, TaskWork)> = Vec::with_capacity(n_reduces);
+        let mut counters = Counters::default();
+        if n_reduces > 0 {
+            let reduced =
+                parallel_map_indexed(threads, n_reduces, |r| run_reduce_task(spec, &map_out, r));
+            for ro in reduced {
+                counters.merge(&ro.counters);
+                counters.inc("reduce.input.records", ro.n_input as u64);
+                counters.inc("reduce.output.records", ro.emits.len() as u64);
+                reduce_out.push((ro.emits, ro.work));
+            }
+        }
+
         let mut st = JobRun {
             spec,
             splits,
             cluster_cfg: self.config.clone(),
             cost: self.cost.clone(),
             map_state: vec![TaskState::Pending; n_maps],
-            map_out: (0..n_maps).map(|_| None).collect(),
+            map_out,
             map_done_node: vec![usize::MAX; n_maps],
             reduce_state: vec![TaskState::Pending; n_reduces],
-            reduce_out: (0..n_reduces).map(|_| None).collect(),
+            reduce_out,
             attempts: Vec::new(),
             free_map_slots: self
                 .config
@@ -244,29 +308,10 @@ impl Cluster {
                 .collect(),
             maps_done: 0,
             reduces_done: 0,
-            counters: Counters::default(),
+            counters,
             stats: JobStats { name: spec.name.clone(), n_map_tasks: n_maps, n_reduce_tasks: n_reduces, ..Default::default() },
             speculation: self.speculation,
-            input_error: None,
         };
-
-        // Run the (cached, deterministic) map computations up front so a
-        // mapper fed the wrong input representation surfaces as a job
-        // failure before any scheduling happens.
-        for t in 0..n_maps {
-            st.compute_map(t);
-            if let Some(shape_err) = st.input_error.take() {
-                // Put unfired failure/recovery events back on the plan.
-                while let Some((at, ev)) = q.next() {
-                    match ev {
-                        Event::NodeFail { node } => self.failure_plan.push((t0.0 + at.0, node)),
-                        Event::NodeRecover { node } => self.recover_plan.push((t0.0 + at.0, node)),
-                        _ => {}
-                    }
-                }
-                return Err(JobError { job: spec.name.clone(), message: shape_err.to_string() });
-            }
-        }
 
         st.assign_maps(&mut q, &self.alive);
 
@@ -310,14 +355,14 @@ impl Cluster {
         // Assemble output.
         let mut output = Vec::new();
         if n_reduces == 0 {
-            for mo in st.map_out.iter().flatten() {
+            for mo in &st.map_out {
                 for part in &mo.partitions {
                     output.extend(part.iter().cloned());
                 }
             }
         } else {
-            for ro in st.reduce_out.iter_mut() {
-                output.append(&mut ro.take().expect("reduce output missing").0);
+            for (emits, _) in st.reduce_out.iter_mut() {
+                output.append(emits);
             }
         }
 
@@ -354,6 +399,86 @@ impl Cluster {
     }
 }
 
+/// One map task's real computation: a pure function of (spec, split), so
+/// the worker pool can run any subset of tasks on any thread and the
+/// cached result is identical. Returns the task output plus the mapper's
+/// input-shape rejection, if any.
+fn run_map_task(spec: &JobSpec, split: &SplitMeta) -> (MapOut, Option<InputShapeError>) {
+    let mut ctx = MapCtx::default();
+    match &spec.input {
+        Input::Points { points, .. } => {
+            let slice = &points[split.row_start as usize..split.row_end as usize];
+            ctx.work.rows_parsed += slice.len() as u64;
+            spec.mapper.map_points(&mut ctx, split.row_start, slice);
+        }
+        Input::Kvs { data, .. } => {
+            let slice = &data[split.row_start as usize..split.row_end as usize];
+            ctx.work.rows_parsed += slice.len() as u64;
+            spec.mapper.map_kvs(&mut ctx, slice);
+        }
+    }
+    let input_error = ctx.input_error.take();
+    let n_parts = spec.n_reduces.max(1);
+    let mut partitions: Vec<Vec<(Key, Val)>> = vec![Vec::new(); n_parts];
+    let has_reduce = spec.reducer.is_some();
+    for (k, v) in std::mem::take(&mut ctx.emits) {
+        let p = if has_reduce { (spec.partitioner)(&k, n_parts) } else { 0 };
+        partitions[p].push((k, v));
+    }
+    let mut work = ctx.work;
+    let mut counters = ctx.counters;
+    counters.inc("map.output.records", partitions.iter().map(|p| p.len() as u64).sum());
+
+    // Map-side sort (per partition) then optional combiner.
+    for part in partitions.iter_mut() {
+        part.sort_by(|a, b| a.0.cmp(&b.0));
+        if let Some(comb) = &spec.combiner {
+            let mut rctx = ReduceCtx { is_combine: true, ..Default::default() };
+            for (key, vals) in group_sorted(part) {
+                comb.reduce(&mut rctx, key, &vals);
+            }
+            work.add(&rctx.work);
+            counters.merge(&rctx.counters);
+            counters.inc("combine.output.records", rctx.emits.len() as u64);
+            *part = rctx.emits;
+            part.sort_by(|a, b| a.0.cmp(&b.0));
+        }
+    }
+    let part_bytes: Vec<u64> = partitions
+        .iter()
+        .map(|p| p.iter().map(|(k, v)| (k.len() + v.len()) as u64).sum())
+        .collect();
+    // Spill: map output written once to local disk.
+    work.write_bytes = part_bytes.iter().sum();
+    (MapOut { partitions, part_bytes, work, counters }, input_error)
+}
+
+/// One reduce task's real computation over the finalized map outputs
+/// (pure in (spec, map_out, r) — pool-safe like [`run_map_task`]).
+struct ReduceTaskOut {
+    emits: Vec<(Key, Val)>,
+    work: TaskWork,
+    counters: Counters,
+    n_input: usize,
+}
+
+fn run_reduce_task(spec: &JobSpec, map_out: &[Arc<MapOut>], r: usize) -> ReduceTaskOut {
+    // Merge all maps' partition r, sorted by key (stable across maps).
+    let mut recs: Vec<(Key, Val)> = Vec::new();
+    for mo in map_out {
+        recs.extend(mo.partitions[r].iter().cloned());
+    }
+    recs.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut ctx = ReduceCtx::default();
+    ctx.work.rows_parsed += recs.len() as u64; // deserialization cost
+    let red = spec.reducer.as_ref().expect("reduce without reducer");
+    for (key, vals) in group_sorted(&recs) {
+        red.reduce(&mut ctx, key, &vals);
+    }
+    let ReduceCtx { emits, work, counters, .. } = ctx;
+    ReduceTaskOut { emits, work, counters, n_input: recs.len() }
+}
+
 /// Per-job mutable scheduling state.
 struct JobRun<'a> {
     spec: &'a JobSpec,
@@ -361,11 +486,14 @@ struct JobRun<'a> {
     cluster_cfg: ClusterConfig,
     cost: CostModel,
     map_state: Vec<TaskState>,
-    map_out: Vec<Option<Arc<MapOut>>>,
+    /// Precomputed real output of every map task (filled before
+    /// scheduling starts; attempts and re-runs reuse the cache).
+    map_out: Vec<Arc<MapOut>>,
     /// Node holding each completed map task's output.
     map_done_node: Vec<usize>,
     reduce_state: Vec<TaskState>,
-    reduce_out: Vec<Option<(Vec<(Key, Val)>, TaskWork)>>,
+    /// Precomputed reduce outputs (emits, work), by partition.
+    reduce_out: Vec<(Vec<(Key, Val)>, TaskWork)>,
     attempts: Vec<Attempt>,
     free_map_slots: Vec<usize>,
     free_reduce_slots: Vec<usize>,
@@ -374,8 +502,6 @@ struct JobRun<'a> {
     counters: Counters,
     stats: JobStats,
     speculation: bool,
-    /// First input-shape rejection recorded by a mapper, if any.
-    input_error: Option<InputShapeError>,
 }
 
 impl<'a> JobRun<'a> {
@@ -431,7 +557,7 @@ impl<'a> JobRun<'a> {
         if !speculative {
             self.map_state[task] = TaskState::Running;
         }
-        let out = self.compute_map(task);
+        let out = self.map_output(task);
         // Work: task's own + input read (local or remote).
         let mut work = out.work;
         let split = &self.splits[task];
@@ -461,65 +587,11 @@ impl<'a> JobRun<'a> {
         q.schedule_in(dur, Event::TaskDone { attempt_id: id });
     }
 
-    /// Run (or reuse) the real map computation for a task.
-    fn compute_map(&mut self, task: usize) -> Arc<MapOut> {
-        if let Some(o) = &self.map_out[task] {
-            return o.clone();
-        }
-        let split = &self.splits[task];
-        let mut ctx = MapCtx::default();
-        match &self.spec.input {
-            Input::Points { points, .. } => {
-                let slice = &points[split.row_start as usize..split.row_end as usize];
-                ctx.work.rows_parsed += slice.len() as u64;
-                self.spec.mapper.map_points(&mut ctx, split.row_start, slice);
-            }
-            Input::Kvs { data, .. } => {
-                let slice = &data[split.row_start as usize..split.row_end as usize];
-                ctx.work.rows_parsed += slice.len() as u64;
-                self.spec.mapper.map_kvs(&mut ctx, slice);
-            }
-        }
-        if let Some(e) = ctx.input_error.take() {
-            if self.input_error.is_none() {
-                self.input_error = Some(e);
-            }
-        }
-        let n_parts = self.spec.n_reduces.max(1);
-        let mut partitions: Vec<Vec<(Key, Val)>> = vec![Vec::new(); n_parts];
-        let has_reduce = self.spec.reducer.is_some();
-        for (k, v) in std::mem::take(&mut ctx.emits) {
-            let p = if has_reduce { (self.spec.partitioner)(&k, n_parts) } else { 0 };
-            partitions[p].push((k, v));
-        }
-        let mut work = ctx.work;
-        let mut counters = ctx.counters;
-        counters.inc("map.output.records", partitions.iter().map(|p| p.len() as u64).sum());
-
-        // Map-side sort (per partition) then optional combiner.
-        for part in partitions.iter_mut() {
-            part.sort_by(|a, b| a.0.cmp(&b.0));
-            if let Some(comb) = &self.spec.combiner {
-                let mut rctx = ReduceCtx { is_combine: true, ..Default::default() };
-                for (key, vals) in group_sorted(part) {
-                    comb.reduce(&mut rctx, key, &vals);
-                }
-                work.add(&rctx.work);
-                counters.merge(&rctx.counters);
-                counters.inc("combine.output.records", rctx.emits.len() as u64);
-                *part = rctx.emits;
-                part.sort_by(|a, b| a.0.cmp(&b.0));
-            }
-        }
-        let part_bytes: Vec<u64> = partitions
-            .iter()
-            .map(|p| p.iter().map(|(k, v)| (k.len() + v.len()) as u64).sum())
-            .collect();
-        // Spill: map output written once to local disk.
-        work.write_bytes = part_bytes.iter().sum();
-        let out = Arc::new(MapOut { partitions, part_bytes, work, counters });
-        self.map_out[task] = Some(out.clone());
-        out
+    /// Cached real output of a map task (precomputed by the worker pool
+    /// before scheduling; attempts, speculative twins, and post-failure
+    /// re-runs all reuse the same deterministic result).
+    fn map_output(&self, task: usize) -> Arc<MapOut> {
+        self.map_out[task].clone()
     }
 
     // ---- reduce phase ----------------------------------------------------
@@ -549,7 +621,7 @@ impl<'a> JobRun<'a> {
         let mut shuffle_s = 0.0;
         let mut shuffle_bytes = 0u64;
         for t in 0..self.splits.len() {
-            let bytes = self.map_out[t].as_ref().map(|m| m.part_bytes[r]).unwrap_or(0);
+            let bytes = self.map_out[t].part_bytes[r];
             if bytes > 0 {
                 let src = self.map_done_node[t];
                 shuffle_s += self.cost.shuffle_seconds(&self.cluster_cfg, src, node, bytes);
@@ -560,8 +632,9 @@ impl<'a> JobRun<'a> {
         self.stats.shuffle_bytes += shuffle_bytes;
         self.counters.inc("reduce.shuffle.bytes", shuffle_bytes);
 
-        let (_, work) = self.compute_reduce(r);
-        let mut work = work;
+        // Precomputed by the worker pool; only the work meter is needed
+        // here (the emits are collected at job assembly).
+        let mut work = self.reduce_out[r].1;
         // Merge-read of shuffled data from local disk + network already
         // accounted; charge the merge read:
         work.local_read_bytes += shuffle_bytes;
@@ -578,33 +651,6 @@ impl<'a> JobRun<'a> {
             speculative: false,
         });
         q.schedule_in(dur, Event::TaskDone { attempt_id: id });
-    }
-
-    /// Real reduce computation (cached in reduce_out).
-    fn compute_reduce(&mut self, r: usize) -> (usize, TaskWork) {
-        if let Some((out, work)) = &self.reduce_out[r] {
-            return (out.len(), *work);
-        }
-        // Merge all maps' partition r, sorted by key (stable across maps).
-        let mut recs: Vec<(Key, Val)> = Vec::new();
-        for t in 0..self.splits.len() {
-            if let Some(mo) = &self.map_out[t] {
-                recs.extend(mo.partitions[r].iter().cloned());
-            }
-        }
-        recs.sort_by(|a, b| a.0.cmp(&b.0));
-        let mut ctx = ReduceCtx::default();
-        ctx.work.rows_parsed += recs.len() as u64; // deserialization cost
-        let red = self.spec.reducer.as_ref().expect("reduce without reducer").clone();
-        for (key, vals) in group_sorted(&recs) {
-            red.reduce(&mut ctx, key, &vals);
-        }
-        self.counters.merge(&ctx.counters);
-        self.counters.inc("reduce.input.records", recs.len() as u64);
-        self.counters.inc("reduce.output.records", ctx.emits.len() as u64);
-        let work = ctx.work;
-        self.reduce_out[r] = Some((ctx.emits, work));
-        (recs.len(), work)
     }
 
     // ---- events ----------------------------------------------------------
@@ -628,9 +674,7 @@ impl<'a> JobRun<'a> {
                 self.map_done_node[t] = node;
                 self.maps_done += 1;
                 self.stats.map_durations_s.push(dur);
-                if let Some(mo) = &self.map_out[t] {
-                    self.counters.merge(&mo.counters);
-                }
+                self.counters.merge(&self.map_out[t].counters);
                 // Kill the slower twin attempts.
                 for i in 0..self.attempts.len() {
                     if self.attempts[i].live && self.attempts[i].task == TaskRef::Map(t) {

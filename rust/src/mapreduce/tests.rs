@@ -283,6 +283,55 @@ fn property_counts_preserved_any_topology() {
 }
 
 #[test]
+fn compute_threads_do_not_change_any_observable() {
+    // The worker pool only changes wall clock: job output bytes, merged
+    // counters, per-job stats, and the simulated duration must be
+    // byte-identical for 1, 2, and 8 compute threads.
+    let run = |threads: usize| {
+        let mut cluster = Cluster::new(ClusterConfig::paper_cluster(), 9).with_threads(threads);
+        let r = cluster.run_job(
+            &quadrant_job(grid_points(400), 9, 3).with_combiner(Arc::new(SumReducer)),
+        );
+        let counters: Vec<(String, u64)> =
+            r.counters.iter().map(|(k, v)| (k.to_string(), v)).collect();
+        (r.output, r.duration_s, counters, r.stats.shuffle_bytes, r.stats.n_attempts)
+    };
+    let base = run(1);
+    for threads in [2usize, 8] {
+        let got = run(threads);
+        assert_eq!(got.0, base.0, "output must be byte-identical at {threads} threads");
+        assert_eq!(got.1, base.1, "sim duration must be identical at {threads} threads");
+        assert_eq!(got.2, base.2, "counters must be identical at {threads} threads");
+        assert_eq!(got.3, base.3);
+        assert_eq!(got.4, base.4);
+    }
+}
+
+#[test]
+fn property_threads_identical_any_topology() {
+    // Randomized topologies, split counts, reduce counts, speculation:
+    // threads ∈ {1, 2, 8} never change job output or simulated time.
+    for_all(6, 0x7EAD, |rng| {
+        let n_nodes = 2 + rng.below(5);
+        let n_splits = 1 + rng.below(16);
+        let n_reduces = 1 + rng.below(4);
+        let n = 50 + rng.below(300);
+        let seed = rng.next_u64();
+        let speculation = rng.below(2) == 0;
+        let run = |threads: usize| {
+            let mut cluster =
+                Cluster::new(ClusterConfig::test_cluster(n_nodes), seed).with_threads(threads);
+            cluster.speculation = speculation;
+            let r = cluster.run_job(&quadrant_job(grid_points(n), n_splits, n_reduces));
+            (r.output, r.duration_s)
+        };
+        let base = run(1);
+        assert_eq!(base, run(2));
+        assert_eq!(base, run(8));
+    });
+}
+
+#[test]
 fn mis_wired_input_is_a_job_failure_not_a_task_panic() {
     /// A mapper that only consumes kv records.
     struct KvOnlyMapper;

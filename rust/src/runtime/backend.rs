@@ -9,6 +9,23 @@
 //!   baseline in the kernel benchmark.
 
 use anyhow::Result;
+use std::cell::RefCell;
+
+/// Thread-local SoA staging for the native pairwise kernel: member
+/// coordinates deinterleaved into `xs`/`ys` plus their precomputed
+/// squared norms `p2`, shared across all candidates of one block call
+/// (§Perf: the old loop recomputed `px² + py²` once per candidate per
+/// member). Fully overwritten on every call, so reuse is state-free.
+#[derive(Default)]
+struct PwScratch {
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    p2: Vec<f32>,
+}
+
+thread_local! {
+    static PW_SCRATCH: RefCell<PwScratch> = RefCell::new(PwScratch::default());
+}
 
 /// Result of one assign block call (matches `ref.assign` in python).
 #[derive(Debug, Clone)]
@@ -141,21 +158,53 @@ impl ComputeBackend for NativeBackend {
         assert_eq!(members.len(), 2 * b);
         assert_eq!(mask.len(), b);
         let mut out = vec![0f32; b];
-        for i in 0..n_cand.min(b) {
-            let (cx, cy) = (cand[2 * i], cand[2 * i + 1]);
-            let c2 = cx * cx + cy * cy;
-            let mut acc = 0f32;
+        PW_SCRATCH.with(|scratch| {
+            let mut guard = scratch.borrow_mut();
+            let PwScratch { xs, ys, p2 } = &mut *guard;
+            // SoA staging pass, shared by every candidate: deinterleave
+            // member coordinates and precompute the squared norms once.
+            xs.clear();
+            ys.clear();
+            p2.clear();
+            xs.reserve(b);
+            ys.reserve(b);
+            p2.reserve(b);
             for j in 0..b {
-                if mask[j] == 0.0 {
-                    continue;
-                }
                 let (px, py) = (members[2 * j], members[2 * j + 1]);
-                let p2 = px * px + py * py;
-                let cross = cx * px + cy * py;
-                acc += (c2 - 2.0 * cross + p2).max(0.0);
+                xs.push(px);
+                ys.push(py);
+                p2.push(px * px + py * py);
             }
-            out[i] = acc;
-        }
+            // Same expanded form as the Pallas kernel:
+            // ||c-p||² = ||c||² - 2 c·p + ||p||², clamped at 0, masked.
+            // Masked-multiply instead of a branch + 4-wide unrolled
+            // accumulators keep the inner loop branch-free and
+            // vectorizable; the reduction order is fixed, so results are
+            // deterministic across runs and thread counts.
+            let tail_start = b - b % 4;
+            for i in 0..n_cand.min(b) {
+                let (cx, cy) = (cand[2 * i], cand[2 * i + 1]);
+                let c2 = cx * cx + cy * cy;
+                let term = |j: usize| -> f32 {
+                    mask[j] * (c2 - 2.0 * (cx * xs[j] + cy * ys[j]) + p2[j]).max(0.0)
+                };
+                let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+                let mut j = 0usize;
+                while j < tail_start {
+                    a0 += term(j);
+                    a1 += term(j + 1);
+                    a2 += term(j + 2);
+                    a3 += term(j + 3);
+                    j += 4;
+                }
+                let mut rem = 0f32;
+                while j < b {
+                    rem += term(j);
+                    j += 1;
+                }
+                out[i] = ((a0 + a1) + (a2 + a3)) + rem;
+            }
+        });
         Ok(out)
     }
 }

@@ -1,9 +1,45 @@
 //! Backend-agnostic high-level ops: padding/chunking of arbitrary-size
 //! point sets onto the fixed-shape block executables.
+//!
+//! §Perf: block staging buffers (padded point/mask/medoid slabs) are
+//! **thread-local scratch**, reused across calls instead of freshly
+//! allocated per call — the assignment mapper runs once per split per
+//! iteration, and the old per-call `vec![0f32; 2 * b]` churn showed up as
+//! allocator time at paper scale. Every scratch byte in the used range is
+//! overwritten on every call, so reuse cannot leak state between calls
+//! (or between the worker threads of the task pool, which each get their
+//! own scratch).
 
 use super::backend::{AssignOut, ComputeBackend};
-use crate::geo::Point;
+use crate::geo::{Point, PointSource};
 use anyhow::Result;
+use std::cell::RefCell;
+
+#[derive(Default)]
+struct AssignScratch {
+    pbuf: Vec<f32>,
+    mask: Vec<f32>,
+    med: Vec<f32>,
+}
+
+#[derive(Default)]
+struct PairScratch {
+    cbuf: Vec<f32>,
+    mbuf: Vec<f32>,
+    mmask: Vec<f32>,
+}
+
+thread_local! {
+    static ASSIGN_SCRATCH: RefCell<AssignScratch> = RefCell::new(AssignScratch::default());
+    static PAIR_SCRATCH: RefCell<PairScratch> = RefCell::new(PairScratch::default());
+}
+
+/// Grow (never shrink) a scratch vector so `buf[..len]` is addressable.
+fn grow(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+}
 
 /// Full assignment of `points` to `medoids` (k <= kpad-1).
 ///
@@ -30,12 +66,6 @@ pub fn assign_points(
         medoids.len()
     );
     assert!(!medoids.is_empty());
-    // Pad the medoid slab once.
-    let mut med = vec![be.pad_coord(); 2 * k];
-    for (j, m) in medoids.iter().enumerate() {
-        med[2 * j] = m.x;
-        med[2 * j + 1] = m.y;
-    }
 
     let n = points.len();
     let mut labels = Vec::with_capacity(n);
@@ -43,84 +73,125 @@ pub fn assign_points(
     let mut cost = vec![0f64; medoids.len()];
     let mut count = vec![0u64; medoids.len()];
 
-    let mut pbuf = vec![0f32; 2 * b];
-    let mut mask = vec![0f32; b];
-    let mut start = 0usize;
-    while start < n {
-        let len = (n - start).min(b);
-        for i in 0..len {
-            pbuf[2 * i] = points[start + i].x;
-            pbuf[2 * i + 1] = points[start + i].y;
-            mask[i] = 1.0;
+    ASSIGN_SCRATCH.with(|scratch| -> Result<()> {
+        let mut guard = scratch.borrow_mut();
+        let AssignScratch { pbuf, mask, med } = &mut *guard;
+        grow(pbuf, 2 * b);
+        grow(mask, b);
+        grow(med, 2 * k);
+        let pbuf = &mut pbuf[..2 * b];
+        let mask = &mut mask[..b];
+        let med = &mut med[..2 * k];
+
+        // Stage the medoid slab once per call: real medoids, then padding.
+        for (j, m) in medoids.iter().enumerate() {
+            med[2 * j] = m.x;
+            med[2 * j + 1] = m.y;
         }
-        for i in len..b {
-            pbuf[2 * i] = 0.0;
-            pbuf[2 * i + 1] = 0.0;
-            mask[i] = 0.0;
+        let pad = be.pad_coord();
+        for v in med[2 * medoids.len()..].iter_mut() {
+            *v = pad;
         }
-        let out: AssignOut = be.assign_block(&pbuf, &mask, &med)?;
-        for i in 0..len {
-            labels.push(out.labels[i] as u32);
-            mindists.push(out.mindists[i]);
+
+        let mut start = 0usize;
+        while start < n {
+            let len = (n - start).min(b);
+            for i in 0..len {
+                pbuf[2 * i] = points[start + i].x;
+                pbuf[2 * i + 1] = points[start + i].y;
+                mask[i] = 1.0;
+            }
+            for i in len..b {
+                pbuf[2 * i] = 0.0;
+                pbuf[2 * i + 1] = 0.0;
+                mask[i] = 0.0;
+            }
+            let out: AssignOut = be.assign_block(pbuf, mask, med)?;
+            for i in 0..len {
+                labels.push(out.labels[i] as u32);
+                mindists.push(out.mindists[i]);
+            }
+            for j in 0..medoids.len() {
+                cost[j] += out.cluster_cost[j] as f64;
+                count[j] += out.cluster_count[j] as u64;
+            }
+            start += len;
         }
-        for j in 0..medoids.len() {
-            cost[j] += out.cluster_cost[j] as f64;
-            count[j] += out.cluster_count[j] as u64;
-        }
-        start += len;
-    }
+        Ok(())
+    })?;
     Ok(AssignResult { labels, mindists, cluster_cost: cost, cluster_count: count })
 }
 
 /// Exact PAM-update candidate costs: for every candidate, the summed
 /// squared distance to all members, composed over fixed-size blocks.
+/// Thin `&[Point]` wrapper over [`pairwise_costs_src`].
 pub fn pairwise_costs(
     be: &dyn ComputeBackend,
     candidates: &[Point],
     members: &[Point],
 ) -> Result<Vec<f64>> {
+    pairwise_costs_src(be, candidates, members)
+}
+
+/// [`pairwise_costs`] over any two [`PointSource`]s — block staging goes
+/// through `fill_coords`, so packed shuffle-byte views feed the kernel
+/// directly without materializing `Vec<Point>`s.
+pub fn pairwise_costs_src<C, M>(
+    be: &dyn ComputeBackend,
+    candidates: &C,
+    members: &M,
+) -> Result<Vec<f64>>
+where
+    C: PointSource + ?Sized,
+    M: PointSource + ?Sized,
+{
     let b = be.block();
     let nc = candidates.len();
+    let nm = members.len();
     let mut out = vec![0f64; nc];
 
-    let mut cbuf = vec![0f32; 2 * b];
-    let mut mbuf = vec![0f32; 2 * b];
-    let mut mmask = vec![0f32; b];
+    PAIR_SCRATCH.with(|scratch| -> Result<()> {
+        let mut guard = scratch.borrow_mut();
+        let PairScratch { cbuf, mbuf, mmask } = &mut *guard;
+        grow(cbuf, 2 * b);
+        grow(mbuf, 2 * b);
+        grow(mmask, b);
+        let cbuf = &mut cbuf[..2 * b];
+        let mbuf = &mut mbuf[..2 * b];
+        let mmask = &mut mmask[..b];
 
-    let mut cs = 0usize;
-    while cs < nc {
-        let clen = (nc - cs).min(b);
-        for i in 0..clen {
-            cbuf[2 * i] = candidates[cs + i].x;
-            cbuf[2 * i + 1] = candidates[cs + i].y;
-        }
-        // Padding candidates is harmless (their outputs are discarded);
-        // zero them for reproducibility.
-        for i in clen..b {
-            cbuf[2 * i] = 0.0;
-            cbuf[2 * i + 1] = 0.0;
-        }
-        let mut ms = 0usize;
-        while ms < members.len() {
-            let mlen = (members.len() - ms).min(b);
-            for j in 0..mlen {
-                mbuf[2 * j] = members[ms + j].x;
-                mbuf[2 * j + 1] = members[ms + j].y;
-                mmask[j] = 1.0;
+        let mut cs = 0usize;
+        while cs < nc {
+            let clen = (nc - cs).min(b);
+            candidates.fill_coords(cs, clen, &mut cbuf[..2 * clen]);
+            // Padding candidates is harmless (their outputs are discarded);
+            // zero them for reproducibility.
+            for i in clen..b {
+                cbuf[2 * i] = 0.0;
+                cbuf[2 * i + 1] = 0.0;
             }
-            for j in mlen..b {
-                mbuf[2 * j] = 0.0;
-                mbuf[2 * j + 1] = 0.0;
-                mmask[j] = 0.0;
+            let mut ms = 0usize;
+            while ms < nm {
+                let mlen = (nm - ms).min(b);
+                members.fill_coords(ms, mlen, &mut mbuf[..2 * mlen]);
+                for j in 0..mlen {
+                    mmask[j] = 1.0;
+                }
+                for j in mlen..b {
+                    mbuf[2 * j] = 0.0;
+                    mbuf[2 * j + 1] = 0.0;
+                    mmask[j] = 0.0;
+                }
+                let partial = be.pairwise_block_partial(cbuf, mbuf, mmask, clen)?;
+                for i in 0..clen {
+                    out[cs + i] += partial[i] as f64;
+                }
+                ms += mlen;
             }
-            let partial = be.pairwise_block_partial(&cbuf, &mbuf, &mmask, clen)?;
-            for i in 0..clen {
-                out[cs + i] += partial[i] as f64;
-            }
-            ms += mlen;
+            cs += clen;
         }
-        cs += clen;
-    }
+        Ok(())
+    })?;
     Ok(out)
 }
 
@@ -220,6 +291,33 @@ mod tests {
     fn empty_members_zero_cost() {
         let got = pairwise_costs(&be(), &[Point::new(1.0, 1.0)], &[]).unwrap();
         assert_eq!(got, vec![0.0]);
+    }
+
+    #[test]
+    fn packed_members_match_slice_members() {
+        use crate::util::codec::{Enc, PackedPoints};
+        for_all(10, 0xC0DE, |rng| {
+            let nc = 1 + rng.below(40);
+            let nm = 1 + rng.below(180);
+            let cands = rand_points(rng, nc, 50.0);
+            let membs = rand_points(rng, nm, 50.0);
+            // Split members into a few packed byte runs, as the shuffle
+            // delivers them (one run per map task).
+            let n_runs = 1 + rng.below(4);
+            let mut runs: Vec<Vec<u8>> = Vec::new();
+            for c in membs.chunks((nm + n_runs - 1) / n_runs) {
+                let mut enc = Enc::with_capacity(8 * c.len());
+                for p in c {
+                    enc = enc.f32(p.x).f32(p.y);
+                }
+                runs.push(enc.done());
+            }
+            let packed = PackedPoints::new(runs.iter().map(|r| r.as_slice()));
+            assert_eq!(packed.len(), nm);
+            let via_slice = pairwise_costs(&be(), &cands, &membs).unwrap();
+            let via_packed = pairwise_costs_src(&be(), cands.as_slice(), &packed).unwrap();
+            assert_eq!(via_slice, via_packed, "packed view must be byte-identical");
+        });
     }
 
     #[test]

@@ -77,6 +77,7 @@ pub struct SessionBuilder {
     seed: u64,
     cost: CostModel,
     speculation: bool,
+    threads: usize,
 }
 
 impl SessionBuilder {
@@ -122,6 +123,14 @@ impl SessionBuilder {
         self.speculation = on;
         self
     }
+    /// Worker threads for map/reduce *real* compute (wallclock only —
+    /// results, counters, and simulated timing are identical at any
+    /// value). Default 1; pass
+    /// [`crate::util::pool::available_threads`]`()` to use every core.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
     /// Small homogeneous test cluster + small-block native backend — the
     /// unit-test convenience.
     pub fn test(mut self, n_nodes: usize) -> Self {
@@ -140,7 +149,7 @@ impl SessionBuilder {
             Some(b) => b,
             None => load_backend(self.backend_kind, self.min_block)?,
         };
-        let mut cluster = Cluster::new(cfg, self.seed);
+        let mut cluster = Cluster::new(cfg, self.seed).with_threads(self.threads);
         cluster.cost = self.cost;
         cluster.speculation = self.speculation;
         Ok(ClusterSession {
@@ -176,6 +185,7 @@ impl ClusterSession {
             seed: 42,
             cost: CostModel::default(),
             speculation: true,
+            threads: 1,
         }
     }
 
@@ -291,6 +301,10 @@ impl ClusterSession {
     /// Jobs completed on this session's cluster.
     pub fn jobs_run(&self) -> usize {
         self.cluster.jobs_run
+    }
+    /// Real-compute worker-pool width (see [`SessionBuilder::threads`]).
+    pub fn compute_threads(&self) -> usize {
+        self.cluster.compute_threads
     }
     /// Hadoop-style counters merged across every job this session ran.
     pub fn counters(&self) -> &Counters {
@@ -450,6 +464,22 @@ mod tests {
         for (i, e) in events.iter().enumerate() {
             assert_eq!(e.iteration, i + 1);
         }
+    }
+
+    #[test]
+    fn threads_plumb_through_and_do_not_change_results() {
+        let fit = |threads: usize| {
+            let mut s = ClusterSession::builder().test(4).seed(21).threads(threads).build().unwrap();
+            assert_eq!(s.compute_threads(), threads.max(1));
+            let mut spec = SpatialSpec::new(2000, 4, 21);
+            spec.outlier_frac = 0.0;
+            let data = s.ingest_spec("pts", &spec);
+            let out =
+                KMedoids::mapreduce().plus_plus().k(4).seed(21).build().fit(&mut s, &data).unwrap();
+            (out.medoids, out.cost, out.sim_seconds, out.dist_evals)
+        };
+        let base = fit(1);
+        assert_eq!(base, fit(4));
     }
 
     #[test]

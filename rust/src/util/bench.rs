@@ -6,6 +6,7 @@
 //! warmup phase, and supports "simulated-time" benches where the measured
 //! quantity is the discrete-event clock rather than wallclock.
 
+use super::json::{obj, Json};
 use std::time::Instant;
 
 pub struct BenchOpts {
@@ -38,6 +39,18 @@ impl Stats {
         let mean = xs.iter().sum::<f64>() / n as f64;
         let p95 = xs[((n as f64 * 0.95) as usize).min(n - 1)];
         Stats { name: name.to_string(), iters: n, min_s: xs[0], median_s: median, mean_s: mean, p95_s: p95 }
+    }
+
+    /// JSON row for machine-readable bench reports (`BENCH_*.json`).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("min_s", Json::Num(self.min_s)),
+            ("median_s", Json::Num(self.median_s)),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("p95_s", Json::Num(self.p95_s)),
+        ])
     }
 }
 
@@ -123,6 +136,15 @@ mod tests {
         });
         assert_eq!(s.iters, 3);
         assert_eq!(count, 4); // warmup + 3
+    }
+
+    #[test]
+    fn stats_to_json() {
+        let s = Stats::from_samples("kernel", vec![1.0, 2.0]);
+        let j = s.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("kernel"));
+        assert_eq!(j.get("median_s").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.get("iters").unwrap().as_usize(), Some(2));
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! through these little-endian helpers — a fixed, documented wire format
 //! so tests can assert on byte layouts.
 
+use crate::geo::{Point, PointSource};
+
 /// Append-style writer.
 #[derive(Default)]
 pub struct Enc {
@@ -98,6 +100,102 @@ impl<'a> Dec<'a> {
     }
 }
 
+/// Reinterpret a little-endian packed f32 buffer as an `&[f32]` view
+/// without copying. Returns `None` when the platform is big-endian or the
+/// buffer is not 4-byte aligned / a multiple of 4 bytes — callers fall
+/// back to decoding. This is the zero-copy half of the reduce-side hot
+/// path: shuffle values are `f32s`-encoded coordinate runs, and on
+/// little-endian targets the wire format *is* the in-memory format.
+pub fn f32s_view(bytes: &[u8]) -> Option<&[f32]> {
+    if !cfg!(target_endian = "little") || bytes.len() % 4 != 0 {
+        return None;
+    }
+    // SAFETY: every f32 bit pattern is a valid value; `align_to`
+    // guarantees `mid` is correctly aligned, and requiring `pre`/`post`
+    // to be empty guarantees `mid` covers exactly the input bytes.
+    let (pre, mid, post) = unsafe { bytes.align_to::<f32>() };
+    if pre.is_empty() && post.is_empty() {
+        Some(mid)
+    } else {
+        None
+    }
+}
+
+/// A [`PointSource`] over packed coordinate runs (the reducer's shuffle
+/// values): each block is a run of `x, y` f32 pairs. Blocks borrow the
+/// wire bytes directly via [`f32s_view`] when possible and decode into an
+/// owned buffer only on the (misaligned / big-endian) fallback path, so
+/// the exact-update reducer iterates members without materializing a
+/// `Vec<Point>`.
+pub struct PackedPoints<'a> {
+    blocks: Vec<std::borrow::Cow<'a, [f32]>>,
+    /// Cumulative start index (in points) of each block.
+    starts: Vec<usize>,
+    total: usize,
+}
+
+impl<'a> PackedPoints<'a> {
+    /// Build from coordinate-run byte blocks. Each block's length must be
+    /// a whole number of `(x, y)` f32 pairs (8 bytes).
+    pub fn new(blocks: impl IntoIterator<Item = &'a [u8]>) -> PackedPoints<'a> {
+        let mut out = PackedPoints { blocks: Vec::new(), starts: Vec::new(), total: 0 };
+        for bytes in blocks {
+            assert!(bytes.len() % 8 == 0, "coordinate run must be whole (x, y) f32 pairs");
+            let floats: std::borrow::Cow<'a, [f32]> = match f32s_view(bytes) {
+                Some(view) => std::borrow::Cow::Borrowed(view),
+                None => std::borrow::Cow::Owned(Dec::new(bytes).rest_f32s()),
+            };
+            let n = floats.len() / 2;
+            if n == 0 {
+                continue;
+            }
+            out.starts.push(out.total);
+            out.total += n;
+            out.blocks.push(floats);
+        }
+        out
+    }
+
+    /// Locate point `i`: (block index, float offset within the block).
+    fn locate(&self, i: usize) -> (usize, usize) {
+        debug_assert!(i < self.total);
+        let b = match self.starts.binary_search(&i) {
+            Ok(b) => b,
+            Err(b) => b - 1,
+        };
+        (b, 2 * (i - self.starts[b]))
+    }
+}
+
+impl PointSource for PackedPoints<'_> {
+    fn len(&self) -> usize {
+        self.total
+    }
+    fn get(&self, i: usize) -> Point {
+        let (b, off) = self.locate(i);
+        let fl = &self.blocks[b];
+        Point::new(fl[off], fl[off + 1])
+    }
+    /// Bulk copy: contiguous runs within each block go through
+    /// `copy_from_slice` instead of per-point loads.
+    fn fill_coords(&self, start: usize, n: usize, dst: &mut [f32]) {
+        if n == 0 {
+            return;
+        }
+        let (mut b, mut off) = self.locate(start);
+        let mut written = 0usize;
+        let want = 2 * n;
+        while written < want {
+            let block = &self.blocks[b];
+            let take = (block.len() - off).min(want - written);
+            dst[written..written + take].copy_from_slice(&block[off..off + take]);
+            written += take;
+            b += 1;
+            off = 0;
+        }
+    }
+}
+
 /// Encode a 2-D point value (the (clusterId, point) pair payload of the
 /// paper's mapper output).
 pub fn encode_point(x: f32, y: f32) -> Vec<u8> {
@@ -154,5 +252,61 @@ mod tests {
         let b = Enc::new().f32s(&[1.0, 2.0, 3.0]).done();
         let mut d = Dec::new(&b);
         assert_eq!(d.rest_f32s(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn f32s_view_roundtrips_or_falls_back() {
+        let b = Enc::new().f32s(&[1.5, -2.0, 3.25]).done();
+        match f32s_view(&b) {
+            Some(v) => assert_eq!(v, &[1.5, -2.0, 3.25]),
+            None => {
+                // Misaligned Vec or big-endian target: the decode fallback
+                // must still produce the same floats.
+                assert_eq!(Dec::new(&b).rest_f32s(), vec![1.5, -2.0, 3.25]);
+            }
+        }
+        // Non-multiple-of-4 buffers never get a view.
+        assert!(f32s_view(&[0u8; 7]).is_none());
+    }
+
+    #[test]
+    fn packed_points_indexing_spans_blocks() {
+        let b1 = Enc::new().f32s(&[1.0, 2.0, 3.0, 4.0]).done(); // 2 points
+        let b2 = Enc::new().done(); // empty run is skipped
+        let b3 = Enc::new().f32s(&[5.0, 6.0]).done(); // 1 point
+        let packed = PackedPoints::new(vec![b1.as_slice(), b2.as_slice(), b3.as_slice()]);
+        assert_eq!(packed.len(), 3);
+        assert!(!packed.is_empty());
+        assert_eq!(packed.get(0), Point::new(1.0, 2.0));
+        assert_eq!(packed.get(1), Point::new(3.0, 4.0));
+        assert_eq!(packed.get(2), Point::new(5.0, 6.0));
+
+        // fill_coords crossing the block boundary.
+        let mut buf = [0f32; 4];
+        packed.fill_coords(1, 2, &mut buf);
+        assert_eq!(buf, [3.0, 4.0, 5.0, 6.0]);
+        let mut all = [0f32; 6];
+        packed.fill_coords(0, 3, &mut all);
+        assert_eq!(all, [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn packed_points_misaligned_fallback_decodes_identically() {
+        // Force a misaligned view: prepend one byte and slice past it, so
+        // the f32 run starts at an odd address (on virtually all
+        // allocators) and `f32s_view` must fall back to owned decoding.
+        let mut shifted = vec![0u8];
+        shifted.extend(Enc::new().f32s(&[7.0, 8.0, 9.0, 10.0]).done());
+        let packed = PackedPoints::new(vec![&shifted[1..]]);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(packed.get(0), Point::new(7.0, 8.0));
+        assert_eq!(packed.get(1), Point::new(9.0, 10.0));
+    }
+
+    #[test]
+    fn packed_points_empty() {
+        let packed = PackedPoints::new(std::iter::empty::<&[u8]>());
+        assert_eq!(packed.len(), 0);
+        assert!(packed.is_empty());
     }
 }

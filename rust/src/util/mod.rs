@@ -5,5 +5,7 @@
 pub mod bench;
 pub mod codec;
 pub mod json;
+pub mod nearest;
+pub mod pool;
 pub mod proptest;
 pub mod rng;

@@ -1,0 +1,81 @@
+//! Shared argmin / nearest-point helpers.
+//!
+//! Three call sites used to hand-roll the same first-minimum scan (the
+//! exact-update reducer's cost argmin, `metrics::brute_labels`, and the
+//! centroid-nearest update arm); they now share these two functions so
+//! the tie-breaking rule — **first index wins on exact ties** — is
+//! defined in one place and tested once.
+
+use crate::geo::Point;
+
+/// Index of the smallest value, first index on ties (strict `<` scan).
+/// NaN entries never win (any comparison with NaN is false).
+///
+/// Panics on an empty slice — an empty argmin is a caller bug everywhere
+/// this is used (cost vectors are built from non-empty member sets).
+pub fn argmin_f64(xs: &[f64]) -> usize {
+    assert!(!xs.is_empty(), "argmin of an empty slice");
+    let mut best = 0usize;
+    for i in 1..xs.len() {
+        if xs[i] < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Nearest candidate to `target` by squared Euclidean distance, as
+/// `(index, dist2)`. First index wins on ties; `None` for an empty
+/// iterator.
+pub fn nearest_point(
+    target: Point,
+    candidates: impl IntoIterator<Item = Point>,
+) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, p) in candidates.into_iter().enumerate() {
+        let d = p.dist2(&target);
+        if best.map(|(_, bd)| d < bd).unwrap_or(true) {
+            best = Some((i, d));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmin_basic_and_ties() {
+        assert_eq!(argmin_f64(&[3.0, 1.0, 2.0]), 1);
+        assert_eq!(argmin_f64(&[5.0]), 0);
+        // First index wins on exact ties.
+        assert_eq!(argmin_f64(&[2.0, 1.0, 1.0, 4.0]), 1);
+    }
+
+    #[test]
+    fn argmin_ignores_nan() {
+        assert_eq!(argmin_f64(&[f64::NAN, 2.0, 1.0]), 2);
+        // All-NaN degenerates to the first index (never compares true).
+        assert_eq!(argmin_f64(&[f64::NAN, f64::NAN]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn argmin_empty_panics() {
+        argmin_f64(&[]);
+    }
+
+    #[test]
+    fn nearest_point_picks_closest_first_on_tie() {
+        let cands = [
+            Point::new(10.0, 0.0),
+            Point::new(1.0, 0.0),
+            Point::new(-1.0, 0.0), // same distance as index 1
+        ];
+        let (i, d) = nearest_point(Point::new(0.0, 0.0), cands.iter().copied()).unwrap();
+        assert_eq!(i, 1);
+        assert_eq!(d, 1.0);
+        assert_eq!(nearest_point(Point::new(0.0, 0.0), std::iter::empty()), None);
+    }
+}

@@ -1,0 +1,132 @@
+//! Dependency-free data-parallel worker pool on scoped threads.
+//!
+//! The MapReduce engine computes every task's *real* work up front (the
+//! simulated schedule reuses cached outputs), which makes the real
+//! compute embarrassingly parallel: each task is a pure function of the
+//! job spec and its input split. [`parallel_map_indexed`] fans those
+//! computations out over `threads` scoped workers pulling indices from a
+//! shared atomic counter (dynamic load balancing — split sizes are
+//! uneven), then reassembles results **by index**, so the output is
+//! byte-identical to the serial order at any thread count.
+//!
+//! No channels, no queues, no vendored crates: `std::thread::scope` lets
+//! workers borrow the caller's data directly, and the scope guarantees
+//! every worker has finished before results are read.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Compute `f(0), f(1), …, f(n-1)` on up to `threads` worker threads and
+/// return the results in index order.
+///
+/// - `threads <= 1` (or `n <= 1`) runs inline on the caller's thread with
+///   zero overhead — the serial path is the parallel path.
+/// - Work is distributed dynamically (atomic fetch-add), so a straggler
+///   item does not idle the other workers.
+/// - Results are placed by index: output order (and therefore anything
+///   derived from it) is independent of the thread count.
+/// - A panicking worker propagates its panic to the caller after the
+///   scope joins (no silently lost items).
+pub fn parallel_map_indexed<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads.max(1).min(n);
+    if workers <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(local) => {
+                    for (i, v) in local {
+                        slots[i] = Some(v);
+                    }
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("worker pool covered every index"))
+        .collect()
+}
+
+/// Hardware parallelism available to this process (>= 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_are_in_index_order_at_any_thread_count() {
+        let want: Vec<usize> = (0..97).map(|i| i * i).collect();
+        for threads in [0, 1, 2, 3, 8, 200] {
+            let got = parallel_map_indexed(threads, 97, |i| i * i);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item_inputs() {
+        assert_eq!(parallel_map_indexed(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map_indexed(4, 1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn every_item_computed_exactly_once() {
+        let calls = AtomicU64::new(0);
+        let out = parallel_map_indexed(8, 1000, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out.len(), 1000);
+        assert_eq!(calls.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_matches_serial_for_stateless_work() {
+        let f = |i: usize| (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17);
+        let serial = parallel_map_indexed(1, 333, f);
+        let parallel = parallel_map_indexed(7, 333, f);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom at 13")]
+    fn worker_panics_propagate() {
+        let _ = parallel_map_indexed(4, 64, |i| {
+            if i == 13 {
+                panic!("boom at 13");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn available_threads_is_positive() {
+        assert!(available_threads() >= 1);
+    }
+}
