@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
     let points = session.dataset_points(&city);
     for m in &kmed_out.medoids {
         anyhow::ensure!(
-            points.iter().any(|p| p.x == m.x && p.y == m.y),
+            points.iter().any(|p| p == m),
             "every medoid must be an actual observed location"
         );
     }

@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     println!("  distance evals  : {}", out.dist_evals);
     println!("  MR jobs run     : {}", session.jobs_run());
     for (i, m) in out.medoids.iter().enumerate() {
-        println!("  medoid {i}: ({:.1}, {:.1})", m.x, m.y);
+        println!("  medoid {i}: ({:.1}, {:.1})", m.x(), m.y());
     }
 
     let points = session.dataset_points(&data);

@@ -5,7 +5,7 @@
 //! This is the §Perf microbenchmark: distance-evaluations per second per
 //! backend, block-size sensitivity, and executor lock overhead.
 
-use kmedoids_mr::geo::Point;
+use kmedoids_mr::geo::{Metric, Point};
 use kmedoids_mr::runtime::{
     assign_points, default_artifacts_dir, pairwise_costs, ComputeBackend, Manifest, NativeBackend,
     PjrtBackend,
@@ -25,7 +25,7 @@ fn bench_backend(name: &str, be: &dyn ComputeBackend, n: usize, k: usize) {
     let medoids = mk_points(k, 2);
     let opts = BenchOpts { warmup_iters: 1, iters: 5 };
     let s = bench(&format!("{name}: assign {n} pts x {k} medoids"), &opts, || {
-        assign_points(be, &points, &medoids).unwrap().labels.len()
+        assign_points(be, &points, &medoids, Metric::SqEuclidean).unwrap().labels.len()
     });
     println!(
         "    -> {} dist-evals/s (block={})",
@@ -36,7 +36,7 @@ fn bench_backend(name: &str, be: &dyn ComputeBackend, n: usize, k: usize) {
     let cands = mk_points(1024, 3);
     let members = mk_points(16 * 1024, 4);
     let s = bench(&format!("{name}: pairwise 1024 cands x 16k members"), &opts, || {
-        pairwise_costs(be, &cands, &members).unwrap().len()
+        pairwise_costs(be, &cands, &members, Metric::SqEuclidean).unwrap().len()
     });
     println!("    -> {} dist-evals/s", fmt_rate((1024 * 16 * 1024) as f64, s.median_s));
 }
@@ -71,8 +71,31 @@ fn main() {
         let s = bench(
             &format!("native/b{b}: assign {n} pts"),
             &BenchOpts { warmup_iters: 1, iters: 3 },
-            || assign_points(&be, &points, &medoids).unwrap().labels.len(),
+            || assign_points(&be, &points, &medoids, Metric::SqEuclidean).unwrap().labels.len(),
         );
         println!("    -> {}", fmt_rate((n * k) as f64, s.median_s));
     }
+
+    // Generic metric path: d-dim Manhattan through the unrolled kernel
+    // (no norm-trick SoA staging — tracks the non-Euclidean throughput).
+    header("generic kernel path (d=3, manhattan)");
+    let be = NativeBackend::new(2048, 64);
+    let points3 = mk_points_d(n, 1, 3);
+    let medoids3 = mk_points_d(k, 2, 3);
+    let s = bench(
+        &format!("native/b2048: assign {n} pts [d=3 manhattan]"),
+        &BenchOpts { warmup_iters: 1, iters: 3 },
+        || assign_points(&be, &points3, &medoids3, Metric::Manhattan).unwrap().labels.len(),
+    );
+    println!("    -> {}", fmt_rate((n * k) as f64, s.median_s));
+}
+
+fn mk_points_d(n: usize, seed: u64, dims: usize) -> Vec<Point> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let coords: Vec<f32> = (0..dims).map(|_| (rng.f64() * 2e4 - 1e4) as f32).collect();
+            Point::from_slice(&coords)
+        })
+        .collect()
 }

@@ -22,10 +22,16 @@
 //! let outcome2 = km.fit(&mut session, &data)?;
 //! ```
 //!
+//! Every builder takes `.metric(Metric)` — squared Euclidean (default),
+//! Manhattan, or haversine over `(lat, lon)` clouds — and the solvers are
+//! dimension-generic (the dataset's dimensionality threads through
+//! automatically; the metric must support it or `fit` refuses).
+//!
 //! | Builder | Algorithm name | Engine |
 //! |---|---|---|
 //! | `KMedoids::mapreduce().plus_plus()` | `kmedoids++-mr` | [`super::parallel`] |
 //! | `KMedoids::mapreduce().random_init()` | `kmedoids-mr` | [`super::parallel`] |
+//! | `KMedoids::mapreduce().oversample(l, r)` | `kmedoids-scalable-mr` | [`super::parallel`] |
 //! | `KMedoids::serial()` | `kmedoids-serial` | [`super::pam`] |
 //! | `Clarans::serial()` | `clarans` | [`super::clarans`] |
 //! | `KMeans::mapreduce()` | `kmeans-mr` | [`super::kmeans`] |
@@ -37,6 +43,7 @@ use super::pam::alternating_kmedoids_observed;
 use super::parallel::ParallelKMedoids;
 use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
 use crate::config::ClusterConfig;
+use crate::geo::Metric;
 use crate::mapreduce::Cluster;
 use crate::session::{ClusterSession, DatasetHandle};
 use crate::sim::CostModel;
@@ -84,6 +91,61 @@ fn run_serial_fit(
     outcome
 }
 
+/// Check the solver's metric against the dataset — refusing up front
+/// beats a kernel assert deep inside a map task. Haversine additionally
+/// requires (lat, lon) data: a planar map-unit cloud would be silently
+/// misread as degrees, so spec-generated planar datasets are refused
+/// outright and raw ingests are validated by coordinate range.
+fn ensure_metric_ok(
+    session: &ClusterSession,
+    data: &crate::session::DatasetHandle,
+    metric: Metric,
+) -> Result<()> {
+    let dims = session.dataset_dims(data);
+    ensure!(
+        metric.supports_dims(dims),
+        "metric {} does not support {dims}-dimensional data \
+         (haversine needs (lat, lon) pairs, dims <= {})",
+        metric.name(),
+        crate::geo::MAX_DIMS
+    );
+    if metric == Metric::Haversine {
+        match session.dataset_latlon(data) {
+            Some(true) => {}
+            Some(false) => anyhow::bail!(
+                "haversine needs (lat, lon) data, but dataset {:?} was generated as a \
+                 planar map-unit cloud (use SpatialSpec::latlon)",
+                data.name()
+            ),
+            None => {
+                let points = session.dataset_points(data);
+                ensure!(
+                    points.iter().all(|p| {
+                        (-90.0..=90.0).contains(&p.x()) && (-180.0..=180.0).contains(&p.y())
+                    }),
+                    "haversine needs (lat, lon) degree pairs, but dataset {:?} has \
+                     coordinates outside [-90, 90] x [-180, 180]",
+                    data.name()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Guard [`Init`] parameters the fluent builders cannot reject: fail
+/// through the `Result` path like every other invalid parameter instead
+/// of a seeding-time assertion panic.
+fn ensure_init_ok(init: Init) -> Result<()> {
+    if let Init::OverSample { l, rounds } = init {
+        ensure!(
+            l >= 1 && rounds >= 1,
+            "oversample seeding needs l >= 1 and rounds >= 1 (got l={l}, rounds={rounds})"
+        );
+    }
+    Ok(())
+}
+
 /// A clustering algorithm runnable against a [`ClusterSession`]'s
 /// ingested data. Implementations stream [`super::IterationEvent`]s
 /// through the session's observers while fitting.
@@ -108,9 +170,9 @@ enum Exec {
 
 // ---- K-Medoids (the paper's family) ----------------------------------------
 
-/// K-Medoids solver: the paper's parallel MR driver (++ or random init)
-/// or the serial alternating baseline. Build via [`KMedoids::mapreduce`]
-/// / [`KMedoids::serial`].
+/// K-Medoids solver: the paper's parallel MR driver (++, random, or
+/// k-means||-style oversampled init) or the serial alternating baseline.
+/// Build via [`KMedoids::mapreduce`] / [`KMedoids::serial`].
 #[derive(Debug, Clone)]
 pub struct KMedoids {
     exec: Exec,
@@ -118,6 +180,7 @@ pub struct KMedoids {
     k: usize,
     seed: u64,
     update: UpdateStrategy,
+    metric: Metric,
     max_iters: usize,
     rel_tol: f64,
     fixed_iters: Option<usize>,
@@ -132,7 +195,8 @@ pub struct KMedoidsBuilder {
 
 impl KMedoids {
     /// The paper's §3 driver: one MR job per iteration on the session's
-    /// simulated cluster. Defaults: ++ seeding, k=9, exact update.
+    /// simulated cluster. Defaults: ++ seeding, k=9, exact update,
+    /// squared Euclidean.
     pub fn mapreduce() -> KMedoidsBuilder {
         KMedoidsBuilder {
             inner: KMedoids {
@@ -141,6 +205,7 @@ impl KMedoids {
                 k: 9,
                 seed: 42,
                 update: UpdateStrategy::Exact,
+                metric: Metric::SqEuclidean,
                 max_iters: 30,
                 rel_tol: 1e-3,
                 fixed_iters: None,
@@ -170,6 +235,13 @@ impl KMedoidsBuilder {
         self.inner.init = Init::Random;
         self
     }
+    /// k-means||-style oversampled seeding (Bahmani et al.): ℓ expected
+    /// candidates per round for `rounds` rounds, then a weighted
+    /// recluster to k. O(rounds) seeding jobs instead of k−1.
+    pub fn oversample(mut self, l: usize, rounds: usize) -> Self {
+        self.inner.init = Init::OverSample { l, rounds };
+        self
+    }
     pub fn init(mut self, init: Init) -> Self {
         self.inner.init = init;
         self
@@ -185,6 +257,11 @@ impl KMedoidsBuilder {
     /// Reducer medoid-update strategy (Table 2 flavor).
     pub fn update(mut self, update: UpdateStrategy) -> Self {
         self.inner.update = update;
+        self
+    }
+    /// Dissimilarity to minimize (default: squared Euclidean).
+    pub fn metric(mut self, metric: Metric) -> Self {
+        self.inner.metric = metric;
         self
     }
     pub fn max_iters(mut self, n: usize) -> Self {
@@ -230,6 +307,7 @@ impl SpatialClusterer for KMedoids {
         match (self.exec, self.init) {
             (Exec::MapReduce, Init::PlusPlus) => "kmedoids++-mr",
             (Exec::MapReduce, Init::Random) => "kmedoids-mr",
+            (Exec::MapReduce, Init::OverSample { .. }) => "kmedoids-scalable-mr",
             (Exec::Serial, _) => "kmedoids-serial",
         }
     }
@@ -240,11 +318,13 @@ impl SpatialClusterer for KMedoids {
     fn fit(&self, session: &mut ClusterSession, data: &DatasetHandle) -> Result<ClusterOutcome> {
         let points = session.dataset_points(data);
         ensure!(
-            self.k >= 1 && self.k <= points.len(),
+            (1..=points.len()).contains(&self.k),
             "k={} must be in 1..={} (dataset size)",
             self.k,
             points.len()
         );
+        ensure_metric_ok(session, data, self.metric)?;
+        ensure_init_ok(self.init)?;
         let name = self.name();
         match self.exec {
             Exec::MapReduce => {
@@ -254,7 +334,9 @@ impl SpatialClusterer for KMedoids {
                     init: self.init,
                     update: self.update,
                     params: self.iter_params(),
+                    metric: self.metric,
                     label_pass: self.label_pass,
+                    event_label: None,
                 };
                 run_mr_fit(session, name, points.len(), self.k, |cluster, hub| {
                     drv.run_observed(cluster, &input, &points, hub)
@@ -279,6 +361,7 @@ impl SpatialClusterer for KMedoids {
                             &self.iter_params(),
                             self.init,
                             self.update,
+                            self.metric,
                             cfg,
                             cost,
                             bytes,
@@ -299,12 +382,15 @@ impl SpatialClusterer for KMedoids {
 // ---- Parallel k-means (robustness ablation) --------------------------------
 
 /// MR k-means (Zhao/Ma/He), the outlier-sensitivity comparator. Build via
-/// [`KMeans::mapreduce`].
+/// [`KMeans::mapreduce`]. Under a non-Euclidean metric the mean update is
+/// invalid, so the engine falls back to a medoid update (see
+/// [`super::kmeans`] module docs).
 #[derive(Debug, Clone)]
 pub struct KMeans {
     init: Init,
     k: usize,
     seed: u64,
+    metric: Metric,
     max_iters: usize,
     rel_tol: f64,
 }
@@ -318,7 +404,14 @@ pub struct KMeansBuilder {
 impl KMeans {
     pub fn mapreduce() -> KMeansBuilder {
         KMeansBuilder {
-            inner: KMeans { init: Init::PlusPlus, k: 9, seed: 42, max_iters: 30, rel_tol: 1e-3 },
+            inner: KMeans {
+                init: Init::PlusPlus,
+                k: 9,
+                seed: 42,
+                metric: Metric::SqEuclidean,
+                max_iters: 30,
+                rel_tol: 1e-3,
+            },
         }
     }
 }
@@ -342,6 +435,12 @@ impl KMeansBuilder {
     }
     pub fn seed(mut self, seed: u64) -> Self {
         self.inner.seed = seed;
+        self
+    }
+    /// Dissimilarity of the fit (non-Euclidean metrics run the medoid
+    /// fallback — see [`super::kmeans`]).
+    pub fn metric(mut self, metric: Metric) -> Self {
+        self.inner.metric = metric;
         self
     }
     pub fn max_iters(mut self, n: usize) -> Self {
@@ -368,16 +467,23 @@ impl SpatialClusterer for KMeans {
     fn fit(&self, session: &mut ClusterSession, data: &DatasetHandle) -> Result<ClusterOutcome> {
         let points = session.dataset_points(data);
         ensure!(
-            self.k >= 1 && self.k <= points.len(),
+            (1..=points.len()).contains(&self.k),
             "k={} must be in 1..={} (dataset size)",
             self.k,
             points.len()
         );
+        ensure_metric_ok(session, data, self.metric)?;
+        ensure_init_ok(self.init)?;
         let input = session.dataset_input(data);
         let mut params = IterParams::new(self.k, self.seed);
         params.max_iters = self.max_iters;
         params.rel_tol = self.rel_tol;
-        let km = ParallelKMeans { backend: session.backend(), init: self.init, params };
+        let km = ParallelKMeans {
+            backend: session.backend(),
+            init: self.init,
+            params,
+            metric: self.metric,
+        };
         run_mr_fit(session, self.name(), points.len(), self.k, |cluster, hub| {
             km.run_observed(cluster, &input, &points, hub)
         })
@@ -394,6 +500,7 @@ impl SpatialClusterer for KMeans {
 pub struct Clarans {
     k: usize,
     seed: u64,
+    metric: Metric,
     num_local: Option<usize>,
     max_neighbor: Option<usize>,
     cost_sample: Option<usize>,
@@ -412,6 +519,7 @@ impl Clarans {
             inner: Clarans {
                 k: 9,
                 seed: 42,
+                metric: Metric::SqEuclidean,
                 num_local: None,
                 max_neighbor: None,
                 cost_sample: None,
@@ -423,6 +531,7 @@ impl Clarans {
     /// Resolve the effective parameters for a dataset of `n` points.
     fn params_for(&self, n: usize) -> ClaransParams {
         let mut p = ClaransParams::recommended(self.k, n, self.seed);
+        p.metric = self.metric;
         if self.paper_scale_sampling && n > 100_000 {
             // Sampled cost evaluation at paper scale; the sample grows
             // with n so CLARANS keeps its Fig. 5 scaling (DESIGN.md).
@@ -449,6 +558,11 @@ impl ClaransBuilder {
     }
     pub fn seed(mut self, seed: u64) -> Self {
         self.inner.seed = seed;
+        self
+    }
+    /// Dissimilarity the search minimizes (default: squared Euclidean).
+    pub fn metric(mut self, metric: Metric) -> Self {
+        self.inner.metric = metric;
         self
     }
     /// Override the number of restarts (Ng & Han recommend 2).
@@ -489,11 +603,12 @@ impl SpatialClusterer for Clarans {
         // Strictly k < n (not <= as for the other solvers): CLARANS swaps
         // a medoid for a *non-medoid*, which cannot exist when k == n.
         ensure!(
-            self.k >= 1 && self.k < points.len(),
+            (1..points.len()).contains(&self.k),
             "k={} must be in 1..{} (dataset size)",
             self.k,
             points.len()
         );
+        ensure_metric_ok(session, data, self.metric)?;
         let params = self.params_for(points.len());
         let bytes = session.dataset_bytes(data);
         let outcome = run_serial_fit(session, self.name(), points.len(), self.k, |cfg, cost, hub| {
@@ -520,6 +635,10 @@ mod tests {
         let r = KMedoids::mapreduce().random_init().k(4).build();
         assert_eq!(r.name(), "kmedoids-mr");
 
+        let o = KMedoids::mapreduce().oversample(18, 5).k(9).build();
+        assert_eq!(o.name(), "kmedoids-scalable-mr");
+        assert_eq!(o.init, Init::OverSample { l: 18, rounds: 5 });
+
         let s = KMedoids::serial().k(5).seed(7).build();
         assert_eq!(s.name(), "kmedoids-serial");
 
@@ -529,6 +648,16 @@ mod tests {
         let cl = Clarans::serial().k(4).num_local(1).max_neighbor(60).build();
         assert_eq!(cl.name(), "clarans");
         assert_eq!(cl.k(), 4);
+    }
+
+    #[test]
+    fn metric_threads_through_builders() {
+        let m = KMedoids::mapreduce().metric(Metric::Haversine).build();
+        assert_eq!(m.metric, Metric::Haversine);
+        let km = KMeans::mapreduce().metric(Metric::Manhattan).build();
+        assert_eq!(km.metric, Metric::Manhattan);
+        let cl = Clarans::serial().metric(Metric::Manhattan).build();
+        assert_eq!(cl.params_for(1000).metric, Metric::Manhattan);
     }
 
     #[test]
@@ -555,5 +684,65 @@ mod tests {
         assert_eq!((p.k, p.seed, p.max_iters), (5, 11, 12));
         assert_eq!(p.fixed_iters, Some(6));
         assert_eq!(p.rel_tol, 1e-4);
+    }
+
+    #[test]
+    fn haversine_on_planar_dims_is_refused() {
+        use crate::geo::datasets::SpatialSpec;
+        let mut session = ClusterSession::builder().test(3).seed(1).build().unwrap();
+        let data = session.ingest_spec("d3", &SpatialSpec::new(500, 3, 1).with_dims(3));
+        let e = KMedoids::mapreduce()
+            .k(3)
+            .metric(Metric::Haversine)
+            .build()
+            .fit(&mut session, &data)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("haversine"), "{e:#}");
+    }
+
+    #[test]
+    fn zero_oversample_parameters_are_refused_not_panicked() {
+        use crate::geo::datasets::SpatialSpec;
+        let mut session = ClusterSession::builder().test(3).seed(1).build().unwrap();
+        let data = session.ingest_spec("pts", &SpatialSpec::new(500, 3, 1));
+        for (l, rounds) in [(0usize, 4usize), (8, 0)] {
+            let e = KMedoids::mapreduce()
+                .k(3)
+                .oversample(l, rounds)
+                .build()
+                .fit(&mut session, &data)
+                .unwrap_err();
+            assert!(format!("{e:#}").contains("oversample"), "(l={l}, rounds={rounds}): {e:#}");
+        }
+    }
+
+    #[test]
+    fn haversine_on_non_latlon_data_is_refused() {
+        use crate::geo::datasets::SpatialSpec;
+        use crate::geo::Point;
+        use std::sync::Arc;
+        let mut session = ClusterSession::builder().test(3).seed(1).build().unwrap();
+        let hav = KMedoids::mapreduce().k(2).metric(Metric::Haversine).build();
+
+        // A spec-generated planar cloud is refused outright (map units,
+        // not degrees — the generator knows).
+        let planar = session.ingest_spec("planar", &SpatialSpec::new(500, 3, 1));
+        let e = hav.fit(&mut session, &planar).unwrap_err();
+        assert!(format!("{e:#}").contains("planar map-unit"), "{e:#}");
+
+        // Raw ingests are range-checked: out-of-range coordinates refuse...
+        let bad = Arc::new(vec![Point::new(1000.0, 0.0), Point::new(0.0, 0.0)]);
+        let bad = session.ingest_points("bad", bad);
+        let e = hav.fit(&mut session, &bad).unwrap_err();
+        assert!(format!("{e:#}").contains("[-90, 90]"), "{e:#}");
+
+        // ...while plausible (lat, lon) pairs are accepted.
+        let ok = Arc::new(vec![
+            Point::new(48.85, 2.35),
+            Point::new(51.51, -0.13),
+            Point::new(40.71, -74.01),
+        ]);
+        let ok = session.ingest_points("ok", ok);
+        assert!(hav.fit(&mut session, &ok).is_ok());
     }
 }

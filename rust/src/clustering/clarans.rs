@@ -7,13 +7,15 @@
 //! neighbor is cheaper, and restarts `num_local` times, keeping the best
 //! minimum found. Cost evaluation is over all points (exact) or a
 //! deterministic sample (`cost_sample`) at paper scale — the sampling knob
-//! is documented in DESIGN.md's substitutions.
+//! is documented in DESIGN.md's substitutions. Cost evaluation is
+//! metric-generic; the 2-D squared-Euclidean case keeps its hand-inlined
+//! f32 fast loop (CLARANS cost evaluation dominates its runtime).
 
-use super::metrics::total_cost;
+use super::metrics::total_cost_metric;
 use super::observe::{IterationEvent, ObserverHub};
 use super::ClusterOutcome;
 use crate::config::ClusterConfig;
-use crate::geo::Point;
+use crate::geo::{Metric, Point};
 use crate::sim::{CostModel, TaskWork};
 use crate::util::rng::Rng;
 
@@ -26,13 +28,22 @@ pub struct ClaransParams {
     pub max_neighbor: usize,
     /// Points used per cost evaluation (usize::MAX = exact).
     pub cost_sample: usize,
+    /// Dissimilarity the search minimizes.
+    pub metric: Metric,
     pub seed: u64,
 }
 
 impl ClaransParams {
     pub fn recommended(k: usize, n: usize, seed: u64) -> ClaransParams {
         let max_neighbor = ((0.0125 * (k * (n - k)) as f64) as usize).max(250);
-        ClaransParams { k, num_local: 2, max_neighbor, cost_sample: usize::MAX, seed }
+        ClaransParams {
+            k,
+            num_local: 2,
+            max_neighbor,
+            cost_sample: usize::MAX,
+            metric: Metric::SqEuclidean,
+            seed,
+        }
     }
 }
 
@@ -61,7 +72,14 @@ pub fn clarans_observed(
 ) -> ClusterOutcome {
     let n = points.len();
     let k = params.k;
-    assert!(k >= 1 && k < n);
+    assert!((1..n).contains(&k));
+    let metric = params.metric;
+    let dims = points.first().map(|p| p.dims()).unwrap_or(2);
+    assert!(
+        metric.supports_dims(dims),
+        "{} does not support dims={dims}",
+        metric.name()
+    );
     let mut rng = Rng::new(params.seed);
     let mut dist_evals = 0u64;
 
@@ -76,22 +94,38 @@ pub fn clarans_observed(
     // Gather the evaluation sample once; evaluate in f32 with the medoid
     // coordinates materialized per call (§Perf: ~3x over the naive
     // indexed f64 loop — CLARANS cost evaluation dominates its runtime).
+    // The 2-D squared-Euclidean combination keeps the hand-inlined loop;
+    // other (dims, metric) pairs go through the generic f32 kernel form.
     let eval_pts: Vec<Point> = eval_idx.iter().map(|&i| points[i]).collect();
+    let fast_2d = dims == 2 && metric == Metric::SqEuclidean;
     let eval_cost = |set: &[usize], evals: &mut u64| -> f64 {
         *evals += (eval_pts.len() * set.len()) as u64;
-        let meds: Vec<(f32, f32)> = set.iter().map(|&m| (points[m].x, points[m].y)).collect();
+        let meds: Vec<Point> = set.iter().map(|&m| points[m]).collect();
         let mut total = 0f64;
-        for p in &eval_pts {
-            let mut best = f32::INFINITY;
-            for &(mx, my) in &meds {
-                let dx = p.x - mx;
-                let dy = p.y - my;
-                let d = dx * dx + dy * dy;
-                if d < best {
-                    best = d;
+        if fast_2d {
+            for p in &eval_pts {
+                let mut best = f32::INFINITY;
+                for m in &meds {
+                    let dx = p.x() - m.x();
+                    let dy = p.y() - m.y();
+                    let d = dx * dx + dy * dy;
+                    if d < best {
+                        best = d;
+                    }
                 }
+                total += best as f64;
             }
-            total += best as f64;
+        } else {
+            for p in &eval_pts {
+                let mut best = f32::INFINITY;
+                for m in &meds {
+                    let d = metric.distance_f32(dims, p.coords(), m.coords());
+                    if d < best {
+                        best = d;
+                    }
+                }
+                total += best as f64;
+            }
         }
         total
     };
@@ -116,7 +150,7 @@ pub fn clarans_observed(
             neighbor[mi] = cand;
             let c = eval_cost(&neighbor, &mut dist_evals);
             if c < current_cost {
-                let drift = points[current[mi]].dist2(&points[cand]).sqrt();
+                let drift = metric.displacement(&points[current[mi]], &points[cand]);
                 current = neighbor;
                 current_cost = c;
                 moves_total += 1;
@@ -150,7 +184,7 @@ pub fn clarans_observed(
     let medoids: Vec<Point> = best_set.iter().map(|&i| points[i]).collect();
     // Report the exact Eq. 1 cost for comparability even when evaluation
     // was sampled.
-    let exact_cost = total_cost(points, &medoids);
+    let exact_cost = total_cost_metric(points, &medoids, metric);
     dist_evals += (n * k) as u64;
 
     let work = TaskWork {
@@ -179,24 +213,29 @@ pub fn clarans_observed(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::clustering::metrics::{adjusted_rand_index, brute_labels};
+    use crate::clustering::metrics::{adjusted_rand_index, brute_labels, brute_labels_metric};
     use crate::geo::datasets::{generate, SpatialSpec};
 
     fn env() -> (ClusterConfig, CostModel) {
         (ClusterConfig::paper_cluster(), CostModel::default())
     }
 
+    fn params(k: usize, num_local: usize, max_neighbor: usize, seed: u64) -> ClaransParams {
+        ClaransParams {
+            k,
+            num_local,
+            max_neighbor,
+            cost_sample: usize::MAX,
+            metric: Metric::SqEuclidean,
+            seed,
+        }
+    }
+
     #[test]
     fn finds_planted_clusters() {
         let d = generate(&SpatialSpec::new(1500, 4, 43));
         let (cfg, cm) = env();
-        let out = clarans(
-            &d.points,
-            &ClaransParams { k: 4, num_local: 2, max_neighbor: 150, cost_sample: usize::MAX, seed: 43 },
-            &cfg,
-            &cm,
-            1 << 20,
-        );
+        let out = clarans(&d.points, &params(4, 2, 150, 43), &cfg, &cm, 1 << 20);
         let labels = brute_labels(&d.points, &out.medoids);
         let ari = adjusted_rand_index(&labels, &d.truth);
         assert!(ari > 0.75, "ARI {ari}");
@@ -206,20 +245,10 @@ mod tests {
     fn sampled_cost_close_to_exact() {
         let d = generate(&SpatialSpec::new(4000, 4, 47));
         let (cfg, cm) = env();
-        let exact = clarans(
-            &d.points,
-            &ClaransParams { k: 4, num_local: 1, max_neighbor: 80, cost_sample: usize::MAX, seed: 5 },
-            &cfg,
-            &cm,
-            1 << 20,
-        );
-        let sampled = clarans(
-            &d.points,
-            &ClaransParams { k: 4, num_local: 1, max_neighbor: 80, cost_sample: 800, seed: 5 },
-            &cfg,
-            &cm,
-            1 << 20,
-        );
+        let exact = clarans(&d.points, &params(4, 1, 80, 5), &cfg, &cm, 1 << 20);
+        let mut p = params(4, 1, 80, 5);
+        p.cost_sample = 800;
+        let sampled = clarans(&d.points, &p, &cfg, &cm, 1 << 20);
         assert!(
             sampled.cost < exact.cost * 1.5,
             "sampled {} vs exact {}",
@@ -233,17 +262,40 @@ mod tests {
     fn deterministic() {
         let d = generate(&SpatialSpec::new(800, 3, 53));
         let (cfg, cm) = env();
-        let p = || ClaransParams { k: 3, num_local: 1, max_neighbor: 60, cost_sample: usize::MAX, seed: 9 };
-        let a = clarans(&d.points, &p(), &cfg, &cm, 1 << 20);
-        let b = clarans(&d.points, &p(), &cfg, &cm, 1 << 20);
+        let a = clarans(&d.points, &params(3, 1, 60, 9), &cfg, &cm, 1 << 20);
+        let b = clarans(&d.points, &params(3, 1, 60, 9), &cfg, &cm, 1 << 20);
         assert_eq!(a.medoids, b.medoids);
         assert_eq!(a.dist_evals, b.dist_evals);
+    }
+
+    #[test]
+    fn manhattan_metric_search_works() {
+        let mut spec = SpatialSpec::new(1200, 3, 57).with_dims(3);
+        spec.outlier_frac = 0.0;
+        let d = generate(&spec);
+        let (cfg, cm) = env();
+        let mut p = params(3, 1, 120, 57);
+        p.metric = Metric::Manhattan;
+        let out = clarans(&d.points, &p, &cfg, &cm, 1 << 20);
+        assert_eq!(out.medoids.len(), 3);
+        assert!(out.medoids.iter().all(|m| m.dims() == 3));
+        // Reported cost is the exact L1 objective of the final node.
+        let brute = crate::clustering::metrics::total_cost_metric(
+            &d.points,
+            &out.medoids,
+            Metric::Manhattan,
+        );
+        assert!((out.cost - brute).abs() < 1e-6 * brute.max(1.0));
+        let labels = brute_labels_metric(&d.points, &out.medoids, Metric::Manhattan);
+        let ari = adjusted_rand_index(&labels, &d.truth);
+        assert!(ari > 0.7, "ARI {ari} (L1 clarans)");
     }
 
     #[test]
     fn recommended_params_scale() {
         let p = ClaransParams::recommended(9, 1_000_000, 1);
         assert!(p.max_neighbor > 250);
+        assert_eq!(p.metric, Metric::SqEuclidean);
         let p2 = ClaransParams::recommended(3, 1000, 1);
         assert_eq!(p2.max_neighbor, 250);
     }

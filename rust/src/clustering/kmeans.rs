@@ -5,14 +5,23 @@
 //! why the paper builds K-Medoids. The MR structure mirrors the K-Medoids
 //! driver: map = assign + partial (sum, count) per cluster (combiner-style
 //! pre-aggregation in the mapper), reduce = new mean.
+//!
+//! The mean-update is only valid when the arithmetic mean minimizes the
+//! within-cluster cost — i.e. under squared Euclidean distance
+//! ([`Metric::mean_is_minimizer`]). For every other metric the driver
+//! falls back to a medoid update (centroid-nearest, through the
+//! K-Medoids MR engine), still reported under the `kmeans-mr` event name:
+//! the "centers" are then data points, which is exactly the correct
+//! generalization (there is no closed-form mean under L1/haversine).
 
 use super::observe::{IterationEvent, ObserverHub};
-use super::seeding::{plus_plus_serial, random_init};
-use super::{ClusterOutcome, Init, IterParams};
-use crate::geo::Point;
+use super::parallel::ParallelKMedoids;
+use super::seeding::{oversample_serial, plus_plus_serial, random_init};
+use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
+use crate::geo::{Metric, Point};
 use crate::mapreduce::{Cluster, Input, JobSpec, MapCtx, Mapper, ReduceCtx, Reducer, Val};
 use crate::runtime::{assign_points, ops, ComputeBackend};
-use crate::util::codec::{decode_cluster_key, encode_cluster_key, Dec, Enc};
+use crate::util::codec::{decode_cluster_key, decode_point_coords, encode_cluster_key, Dec, Enc};
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -23,26 +32,31 @@ struct KMeansMapper {
 
 impl Mapper for KMeansMapper {
     fn map_points(&self, ctx: &mut MapCtx, _row_start: u64, pts: &[Point]) {
-        let res = assign_points(self.backend.as_ref(), pts, &self.centers)
+        let res = assign_points(self.backend.as_ref(), pts, &self.centers, Metric::SqEuclidean)
             .expect("assign kernel failed");
         let evals = ops::assign_dist_evals(pts.len(), self.centers.len());
         ctx.charge_dist_evals(evals);
         ctx.counters.inc("work.dist.evals", evals);
         let k = self.centers.len();
-        let mut sx = vec![0f64; k];
-        let mut sy = vec![0f64; k];
+        let dims = self.centers[0].dims();
+        // Per-cluster per-dimension partial sums + counts (combiner-style
+        // pre-aggregation; wire format: dims f64 sums then the count).
+        let mut sums = vec![0f64; k * dims];
         let mut cnt = vec![0u64; k];
         for (p, &l) in pts.iter().zip(&res.labels) {
-            sx[l as usize] += p.x as f64;
-            sy[l as usize] += p.y as f64;
+            let row = &mut sums[l as usize * dims..(l as usize + 1) * dims];
+            for (s, c) in row.iter_mut().zip(p.coords()) {
+                *s += *c as f64;
+            }
             cnt[l as usize] += 1;
         }
         for j in 0..k {
             if cnt[j] > 0 {
-                ctx.emit(
-                    encode_cluster_key(j as u32),
-                    Enc::new().f64(sx[j]).f64(sy[j]).u64(cnt[j]).done(),
-                );
+                let mut enc = Enc::with_capacity(8 * (dims + 1));
+                for s in &sums[j * dims..(j + 1) * dims] {
+                    enc = enc.f64(*s);
+                }
+                ctx.emit(encode_cluster_key(j as u32), enc.u64(cnt[j]).done());
             }
         }
         let split_cost: f64 = res.cluster_cost.iter().sum();
@@ -50,14 +64,19 @@ impl Mapper for KMeansMapper {
     }
 }
 
-struct MeanReducer;
+struct MeanReducer {
+    dims: usize,
+}
+
 impl Reducer for MeanReducer {
     fn reduce(&self, ctx: &mut ReduceCtx, key: &[u8], values: &[Val]) {
-        let (mut sx, mut sy, mut n) = (0f64, 0f64, 0u64);
+        let mut sums = vec![0f64; self.dims];
+        let mut n = 0u64;
         for v in values {
             let mut d = Dec::new(v);
-            sx += d.f64();
-            sy += d.f64();
+            for s in sums.iter_mut() {
+                *s += d.f64();
+            }
             n += d.u64();
         }
         if n == 0 {
@@ -65,12 +84,14 @@ impl Reducer for MeanReducer {
         }
         if ctx.is_combine {
             // Combiner must preserve the partial-sum wire format.
-            ctx.emit(key.to_vec(), Enc::new().f64(sx).f64(sy).u64(n).done());
+            let mut enc = Enc::with_capacity(8 * (self.dims + 1));
+            for s in &sums {
+                enc = enc.f64(*s);
+            }
+            ctx.emit(key.to_vec(), enc.u64(n).done());
         } else {
-            ctx.emit(
-                key.to_vec(),
-                Enc::new().f32((sx / n as f64) as f32).f32((sy / n as f64) as f32).done(),
-            );
+            let mean: Vec<f32> = sums.iter().map(|s| (*s / n as f64) as f32).collect();
+            ctx.emit(key.to_vec(), Enc::new().f32s(&mean).done());
         }
     }
 }
@@ -79,6 +100,9 @@ pub struct ParallelKMeans {
     pub backend: Arc<dyn ComputeBackend>,
     pub init: Init,
     pub params: IterParams,
+    /// Dissimilarity of the fit. Mean updates only under `SqEuclidean`;
+    /// anything else falls back to the medoid update (see module docs).
+    pub metric: Metric,
 }
 
 impl ParallelKMeans {
@@ -103,13 +127,33 @@ impl ParallelKMeans {
         points: &Arc<Vec<Point>>,
         hub: &mut ObserverHub,
     ) -> anyhow::Result<ClusterOutcome> {
+        if !self.metric.mean_is_minimizer() {
+            // Non-Euclidean metric: the arithmetic mean is not the
+            // within-cluster cost minimizer, so run the medoid-update
+            // engine (centroid-nearest: one O(m) pass per cluster, the
+            // closest analogue of a mean step) under the k-means label.
+            let drv = ParallelKMedoids {
+                backend: self.backend.clone(),
+                init: self.init,
+                update: UpdateStrategy::CentroidNearest,
+                params: self.params.clone(),
+                metric: self.metric,
+                label_pass: false,
+                event_label: Some("kmeans-mr"),
+            };
+            return drv.run_observed(cluster, input, points, hub);
+        }
         let k = self.params.k;
         let t0 = cluster.now().0;
         let mut rng = Rng::new(self.params.seed);
         let mut centers = match self.init {
-            Init::PlusPlus => plus_plus_serial(points, k, &mut rng).0,
+            Init::PlusPlus => plus_plus_serial(points, k, &mut rng, self.metric).0,
             Init::Random => random_init(points, k, &mut rng),
+            Init::OverSample { l, rounds } => {
+                oversample_serial(points, k, l, rounds, &mut rng, self.metric).0
+            }
         };
+        let dims = centers[0].dims();
         let mut cost = f64::INFINITY;
         let mut iterations = 0;
         let mut dist_evals = 0u64;
@@ -120,16 +164,15 @@ impl ParallelKMeans {
                 input.clone(),
                 Arc::new(KMeansMapper { backend: self.backend.clone(), centers: centers.clone() }),
             )
-            .with_combiner(Arc::new(MeanReducer))
-            .with_reducer(Arc::new(MeanReducer), k.min(4).max(1));
+            .with_combiner(Arc::new(MeanReducer { dims }))
+            .with_reducer(Arc::new(MeanReducer { dims }), k.min(4).max(1));
             let result = cluster.try_run_job(&job)?;
             dist_evals += result.counters.get("work.dist.evals");
             let new_cost = result.counters.get("assign.cost.units") as f64;
             let mut new_centers = centers.clone();
             for (key, val) in &result.output {
                 let j = decode_cluster_key(key) as usize;
-                let mut d = Dec::new(val);
-                new_centers[j] = Point::new(d.f32(), d.f32());
+                new_centers[j] = decode_point_coords(val, dims);
             }
             let moved: f64 =
                 new_centers.iter().zip(&centers).map(|(a, b)| a.dist2(b)).sum::<f64>();
@@ -166,7 +209,7 @@ impl ParallelKMeans {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::clustering::metrics::{adjusted_rand_index, brute_labels};
+    use crate::clustering::metrics::{adjusted_rand_index, brute_labels, brute_labels_metric};
     use crate::config::ClusterConfig;
     use crate::geo::datasets::{generate, SpatialSpec};
     use crate::mapreduce::SplitMeta;
@@ -199,12 +242,70 @@ mod tests {
             backend: Arc::new(NativeBackend::new(256, 16)),
             init: Init::PlusPlus,
             params: IterParams::new(4, 62),
+            metric: Metric::SqEuclidean,
         };
         let out = km.run(&mut cluster, &input, &points);
         let labels = brute_labels(&points, &out.medoids);
         let ari = adjusted_rand_index(&labels, &d.truth);
         assert!(ari > 0.9, "ARI {ari}");
         assert!(out.iterations >= 2);
+    }
+
+    #[test]
+    fn kmeans_mean_update_generalizes_to_3d() {
+        let mut spec = SpatialSpec::new(3000, 3, 64).with_dims(3);
+        spec.outlier_frac = 0.0;
+        let d = generate(&spec);
+        let points = Arc::new(d.points);
+        let input = make_input(&points, 4);
+        let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 64);
+        let km = ParallelKMeans {
+            backend: Arc::new(NativeBackend::new(256, 16)),
+            init: Init::PlusPlus,
+            params: IterParams::new(3, 64),
+            metric: Metric::SqEuclidean,
+        };
+        let out = km.run(&mut cluster, &input, &points);
+        assert!(out.medoids.iter().all(|c| c.dims() == 3));
+        let labels = brute_labels(&points, &out.medoids);
+        let ari = adjusted_rand_index(&labels, &d.truth);
+        assert!(ari > 0.85, "ARI {ari} (3-D mean update)");
+    }
+
+    #[test]
+    fn non_euclidean_kmeans_falls_back_to_medoid_update() {
+        // Under Manhattan the mean is not the minimizer: the driver must
+        // run the medoid fallback, whose "centers" are data points —
+        // the observable contract of the fallback.
+        let mut spec = SpatialSpec::new(2500, 4, 66);
+        spec.outlier_frac = 0.0;
+        let d = generate(&spec);
+        let points = Arc::new(d.points);
+        let input = make_input(&points, 4);
+        let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 66);
+        let km = ParallelKMeans {
+            backend: Arc::new(NativeBackend::new(256, 16)),
+            init: Init::PlusPlus,
+            params: IterParams::new(4, 66),
+            metric: Metric::Manhattan,
+        };
+        let mut hub = ObserverHub::default();
+        let log = crate::clustering::observe::IterationLog::new();
+        hub.add(Box::new(log.clone()));
+        let out = km.run_observed(&mut cluster, &input, &points, &mut hub).unwrap();
+        for c in &out.medoids {
+            assert!(
+                points.iter().any(|p| p == c),
+                "non-Euclidean k-means center {c:?} must be a data point"
+            );
+        }
+        // Events still stream under the k-means name.
+        assert!(!log.events().is_empty());
+        assert!(log.events().iter().all(|e| e.algorithm == "kmeans-mr"));
+        // And the fit still recovers the planted structure.
+        let labels = brute_labels_metric(&points, &out.medoids, Metric::Manhattan);
+        let ari = adjusted_rand_index(&labels, &d.truth);
+        assert!(ari > 0.8, "ARI {ari} (Manhattan medoid fallback)");
     }
 
     #[test]
@@ -231,6 +332,7 @@ mod tests {
                 backend: be.clone(),
                 init: Init::Random,
                 params: IterParams::new(3, seed),
+                metric: Metric::SqEuclidean,
             };
             let km_out = km.run(&mut c1, &input, &points);
 

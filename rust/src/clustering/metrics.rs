@@ -1,7 +1,7 @@
 //! Cluster-quality metrics: Eq. 1 total cost, adjusted Rand index against
 //! generator ground truth, and a sampled silhouette coefficient.
 
-use crate::geo::Point;
+use crate::geo::{Metric, Point};
 use crate::util::nearest::nearest_point;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
@@ -9,21 +9,32 @@ use std::collections::HashMap;
 /// Total cost E (paper Eq. 1): Σ over points of squared distance to the
 /// nearest medoid. Brute force — used as the verification oracle.
 pub fn total_cost(points: &[Point], medoids: &[Point]) -> f64 {
+    total_cost_metric(points, medoids, Metric::SqEuclidean)
+}
+
+/// [`total_cost`] under any [`Metric`]: Σ over points of the metric's
+/// dissimilarity to the nearest medoid (the general K-Medoids objective).
+pub fn total_cost_metric(points: &[Point], medoids: &[Point], metric: Metric) -> f64 {
     assert!(!medoids.is_empty());
     points
         .iter()
-        .map(|p| medoids.iter().map(|m| p.dist2(m)).fold(f64::INFINITY, f64::min))
+        .map(|p| medoids.iter().map(|m| metric.distance(p, m)).fold(f64::INFINITY, f64::min))
         .sum()
 }
 
 /// Nearest-medoid labels, brute force (shared first-min-wins scan from
 /// [`crate::util::nearest`]).
 pub fn brute_labels(points: &[Point], medoids: &[Point]) -> Vec<u32> {
+    brute_labels_metric(points, medoids, Metric::SqEuclidean)
+}
+
+/// [`brute_labels`] under any [`Metric`].
+pub fn brute_labels_metric(points: &[Point], medoids: &[Point], metric: Metric) -> Vec<u32> {
     assert!(!medoids.is_empty());
     points
         .iter()
         .map(|p| {
-            nearest_point(*p, medoids.iter().copied()).expect("non-empty medoids").0 as u32
+            nearest_point(*p, medoids.iter().copied(), metric).expect("non-empty medoids").0 as u32
         })
         .collect()
 }
@@ -188,5 +199,20 @@ mod tests {
         let pts = vec![Point::new(0.0, 0.0), Point::new(10.0, 0.0)];
         let med = vec![Point::new(1.0, 0.0), Point::new(9.0, 0.0)];
         assert_eq!(brute_labels(&pts, &med), vec![0, 1]);
+    }
+
+    #[test]
+    fn metric_variants_of_cost_and_labels() {
+        // From (0, 0): squared L2 prefers (2, 2) (8 < 9), L1 prefers
+        // (0, 3) (3 < 4) — the metrics disagree on the nearest medoid.
+        let pts = vec![Point::new(0.0, 0.0)];
+        let med = vec![Point::new(2.0, 2.0), Point::new(0.0, 3.0)];
+        // Default wrappers are the squared-Euclidean oracles.
+        assert_eq!(total_cost(&pts, &med), total_cost_metric(&pts, &med, Metric::SqEuclidean));
+        assert_eq!(brute_labels(&pts, &med), brute_labels_metric(&pts, &med, Metric::SqEuclidean));
+        assert_eq!(brute_labels(&pts, &med), vec![0]);
+        assert_eq!(total_cost(&pts, &med), 8.0);
+        assert_eq!(brute_labels_metric(&pts, &med, Metric::Manhattan), vec![1]);
+        assert_eq!(total_cost_metric(&pts, &med, Metric::Manhattan), 3.0);
     }
 }

@@ -96,11 +96,28 @@ impl IterParams {
     }
 }
 
-/// Initialization flavor (the paper's §3.1 ablation axis).
+/// Initialization flavor (the paper's §3.1 ablation axis, plus the
+/// k-means||-style oversampled seeding of Bahmani et al., *Scalable
+/// K-Means++*).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Init {
     /// K-Medoids++ weighted seeding (Arthur & Vassilvitskii).
     PlusPlus,
     /// Uniform random distinct points ("traditional").
     Random,
+    /// k-means||-style oversampled seeding (Bahmani et al.): each of
+    /// `rounds` rounds samples every point independently with probability
+    /// `min(1, l·d(p)/ψ)` (≈ `l` candidates per round, O(log ψ) rounds in
+    /// the paper), then the weighted candidate set is reclustered to k
+    /// medoids. One MR pass per round instead of one per medoid, so
+    /// seeding needs O(rounds) jobs rather than k−1.
+    OverSample { l: usize, rounds: usize },
+}
+
+impl Init {
+    /// Bahmani et al.'s recommended defaults for k clusters: oversampling
+    /// factor ℓ = 2k per round, 5 rounds.
+    pub fn oversample_default(k: usize) -> Init {
+        Init::OverSample { l: (2 * k).max(2), rounds: 5 }
+    }
 }

@@ -8,12 +8,16 @@
 //! - [`pam_swap`] — the classic PAM build+swap of Kaufman & Rousseeuw
 //!   (§2.3's "earliest K-Medoids algorithm"): exact but O(k(n−k)²) per
 //!   pass; used as the quality reference on small inputs.
+//!
+//! Both are metric-generic: the run's [`Metric`] drives assignment,
+//! update, and cost exactly as in the MR drivers, so serial-vs-parallel
+//! comparisons stay apples-to-apples for every `(dims, metric)` pair.
 
 use super::observe::{IterationEvent, ObserverHub};
-use super::seeding::{plus_plus_serial, random_init};
+use super::seeding::{oversample_serial, plus_plus_serial, random_init};
 use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
 use crate::config::ClusterConfig;
-use crate::geo::Point;
+use crate::geo::{Metric, Point};
 use crate::mapreduce::ReduceCtx;
 use crate::runtime::ComputeBackend;
 use crate::sim::{CostModel, TaskWork};
@@ -36,12 +40,14 @@ pub fn serial_seconds(
 /// Traditional serial K-Medoids (alternating assignment / least-cost
 /// medoid update). `update` controls the per-cluster update exactly like
 /// the MR reducer, so serial-vs-parallel comparisons are apples-to-apples.
+#[allow(clippy::too_many_arguments)]
 pub fn alternating_kmedoids(
     backend: &dyn ComputeBackend,
     points: &[Point],
     params: &IterParams,
     init: Init,
     update: UpdateStrategy,
+    metric: Metric,
     cfg: &ClusterConfig,
     cost_model: &CostModel,
     dataset_bytes: u64,
@@ -52,6 +58,7 @@ pub fn alternating_kmedoids(
         params,
         init,
         update,
+        metric,
         cfg,
         cost_model,
         dataset_bytes,
@@ -70,6 +77,7 @@ pub fn alternating_kmedoids_observed(
     params: &IterParams,
     init: Init,
     update: UpdateStrategy,
+    metric: Metric,
     cfg: &ClusterConfig,
     cost_model: &CostModel,
     dataset_bytes: u64,
@@ -78,8 +86,11 @@ pub fn alternating_kmedoids_observed(
     let k = params.k;
     let mut rng = Rng::new(params.seed);
     let (mut medoids, seed_evals) = match init {
-        Init::PlusPlus => plus_plus_serial(points, k, &mut rng),
+        Init::PlusPlus => plus_plus_serial(points, k, &mut rng, metric),
         Init::Random => (random_init(points, k, &mut rng), 0),
+        Init::OverSample { l, rounds } => {
+            oversample_serial(points, k, l, rounds, &mut rng, metric)
+        }
     };
     let mut dist_evals = seed_evals;
     let mut iterations = 0usize;
@@ -89,7 +100,7 @@ pub fn alternating_kmedoids_observed(
     for iter in 0..params.max_iters {
         iterations = iter + 1;
         // Assignment pass.
-        let res = crate::runtime::assign_points(backend, points, &medoids)
+        let res = crate::runtime::assign_points(backend, points, &medoids, metric)
             .expect("assign kernel failed");
         dist_evals += crate::runtime::ops::assign_dist_evals(points.len(), k);
         labels.copy_from_slice(&res.labels);
@@ -111,17 +122,18 @@ pub fn alternating_kmedoids_observed(
                 members[j].as_slice(),
                 medoids[j],
                 update,
+                metric,
                 params.seed ^ (iter as u64) << 20 ^ j as u64,
                 &mut rctx,
             );
         }
         dist_evals += rctx.work.dist_evals;
 
-        let unchanged =
-            new_medoids.iter().zip(&medoids).all(|(a, b)| a.x == b.x && a.y == b.y);
+        let unchanged = new_medoids.iter().zip(&medoids).all(|(a, b)| a == b);
         let cost_flat = cost.is_finite()
             && (cost - new_cost).abs() <= params.rel_tol * cost.abs().max(1.0);
-        let drift: f64 = new_medoids.iter().zip(&medoids).map(|(a, b)| a.dist2(b).sqrt()).sum();
+        let drift: f64 =
+            new_medoids.iter().zip(&medoids).map(|(a, b)| metric.displacement(a, b)).sum();
         medoids = new_medoids;
         cost = new_cost;
         // Running sim time with the same formula as the final outcome.
@@ -158,15 +170,22 @@ pub fn alternating_kmedoids_observed(
     ClusterOutcome { medoids, labels: Some(labels), cost, iterations, sim_seconds, dist_evals }
 }
 
-/// Classic PAM: greedy BUILD then steepest-descent SWAP. Exact; only for
-/// small n (cost O(k(n−k)²) per sweep).
+/// Classic PAM: greedy BUILD then steepest-descent SWAP under `metric`.
+/// Exact; only for small n (cost O(k(n−k)²) per sweep).
 pub fn pam_swap(
     points: &[Point],
     k: usize,
     seed: u64,
     max_sweeps: usize,
+    metric: Metric,
 ) -> (Vec<Point>, f64, u64) {
-    assert!(k >= 1 && k <= points.len());
+    assert!((1..=points.len()).contains(&k));
+    let dims = points.first().map(|p| p.dims()).unwrap_or(2);
+    assert!(
+        metric.supports_dims(dims),
+        "{} does not support dims={dims}",
+        metric.name()
+    );
     let n = points.len();
     let mut dist_evals = 0u64;
 
@@ -177,7 +196,7 @@ pub fn pam_swap(
     {
         let mut best = (0usize, f64::INFINITY);
         for i in 0..n {
-            let c: f64 = points.iter().map(|p| points[i].dist2(p)).sum();
+            let c: f64 = points.iter().map(|p| metric.distance(&points[i], p)).sum();
             dist_evals += n as u64;
             if c < best.1 {
                 best = (i, c);
@@ -186,7 +205,8 @@ pub fn pam_swap(
         medoid_idx.push(best.0);
         in_set[best.0] = true;
     }
-    let mut nearest: Vec<f64> = points.iter().map(|p| p.dist2(&points[medoid_idx[0]])).collect();
+    let mut nearest: Vec<f64> =
+        points.iter().map(|p| metric.distance(p, &points[medoid_idx[0]])).collect();
     dist_evals += n as u64;
     while medoid_idx.len() < k {
         let mut best = (usize::MAX, 0.0f64);
@@ -196,7 +216,7 @@ pub fn pam_swap(
             }
             let mut gain = 0.0;
             for (j, p) in points.iter().enumerate() {
-                let d = p.dist2(&points[cand]);
+                let d = metric.distance(p, &points[cand]);
                 if d < nearest[j] {
                     gain += nearest[j] - d;
                 }
@@ -210,7 +230,7 @@ pub fn pam_swap(
         in_set[c] = true;
         medoid_idx.push(c);
         for (j, p) in points.iter().enumerate() {
-            nearest[j] = nearest[j].min(p.dist2(&points[c]));
+            nearest[j] = nearest[j].min(metric.distance(p, &points[c]));
         }
         dist_evals += n as u64;
     }
@@ -220,7 +240,9 @@ pub fn pam_swap(
         *evals += (set.len() * n) as u64;
         points
             .iter()
-            .map(|p| set.iter().map(|&m| p.dist2(&points[m])).fold(f64::INFINITY, f64::min))
+            .map(|p| {
+                set.iter().map(|&m| metric.distance(p, &points[m])).fold(f64::INFINITY, f64::min)
+            })
             .sum()
     };
     let mut cur_cost = cost_of(&medoid_idx, &mut dist_evals);
@@ -256,7 +278,7 @@ pub fn pam_swap(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::clustering::metrics::{adjusted_rand_index, total_cost};
+    use crate::clustering::metrics::{adjusted_rand_index, total_cost, total_cost_metric};
     use crate::geo::datasets::{generate, SpatialSpec};
     use crate::runtime::NativeBackend;
 
@@ -278,6 +300,7 @@ mod tests {
             &IterParams::new(5, 23),
             Init::PlusPlus,
             UpdateStrategy::Exact,
+            Metric::SqEuclidean,
             &cfg,
             &cm,
             1 << 20,
@@ -285,6 +308,34 @@ mod tests {
         let ari = adjusted_rand_index(out.labels.as_ref().unwrap(), &d.truth);
         assert!(ari > 0.9, "ARI {ari}");
         assert!(out.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn alternating_manhattan_3d() {
+        // The serial baseline runs the full generic path: 3-D data under
+        // the L1 metric, medoids stay data points, counter cost matches
+        // the brute-force L1 objective.
+        let mut spec = SpatialSpec::new(1500, 4, 27).with_dims(3);
+        spec.outlier_frac = 0.0;
+        let d = generate(&spec);
+        let (cfg, cm) = env();
+        let out = alternating_kmedoids(
+            &be(),
+            &d.points,
+            &IterParams::new(4, 27),
+            Init::PlusPlus,
+            UpdateStrategy::Exact,
+            Metric::Manhattan,
+            &cfg,
+            &cm,
+            1 << 20,
+        );
+        assert!(out.medoids.iter().all(|m| m.dims() == 3));
+        for m in &out.medoids {
+            assert!(d.points.iter().any(|p| p == m), "medoid must be a data point");
+        }
+        let brute = total_cost_metric(&d.points, &out.medoids, Metric::Manhattan);
+        assert!((out.cost - brute).abs() / brute.max(1.0) < 0.01, "{} vs {brute}", out.cost);
     }
 
     #[test]
@@ -308,11 +359,12 @@ mod tests {
             &IterParams::new(4, 29),
             Init::Random,
             UpdateStrategy::Exact,
+            Metric::SqEuclidean,
             &cfg,
             &cm,
             1 << 20,
         );
-        let (_, pam_cost, _) = pam_swap(&d.points, 4, 29, 10);
+        let (_, pam_cost, _) = pam_swap(&d.points, 4, 29, 10, Metric::SqEuclidean);
         assert!(
             pam_cost <= alt.cost * 1.001,
             "PAM {pam_cost} should be at least as good as alternating {}",
@@ -323,10 +375,10 @@ mod tests {
     #[test]
     fn pam_medoids_are_data_points_and_distinct() {
         let d = generate(&SpatialSpec::new(200, 3, 31));
-        let (med, _, _) = pam_swap(&d.points, 3, 31, 5);
+        let (med, _, _) = pam_swap(&d.points, 3, 31, 5, Metric::SqEuclidean);
         assert_eq!(med.len(), 3);
         for i in 0..3 {
-            assert!(d.points.iter().any(|p| p.x == med[i].x && p.y == med[i].y));
+            assert!(d.points.iter().any(|p| p == &med[i]));
             for j in 0..i {
                 assert!(med[i].dist2(&med[j]) > 0.0);
             }
@@ -343,6 +395,7 @@ mod tests {
             &IterParams::new(3, 37),
             Init::PlusPlus,
             UpdateStrategy::Exact,
+            Metric::SqEuclidean,
             &cfg,
             &cm,
             1 << 20,

@@ -2,10 +2,11 @@
 //!
 //! Each outer iteration is one MR job:
 //! - **Map** (Table 1): assign every point of the split to its nearest
-//!   medoid (through the AOT Pallas/JAX assign kernel) and emit
-//!   `(clusterID, member coordinates)`. Member coordinates are packed per
-//!   (cluster, split) block — byte-identical shuffle volume to the paper's
-//!   per-point emits, without per-record allocation overhead.
+//!   medoid (through the AOT Pallas/JAX assign kernel for the 2-D
+//!   squared-Euclidean fast path, the generic metric kernels otherwise)
+//!   and emit `(clusterID, member coordinates)`. Member coordinates are
+//!   packed per (cluster, split) block — byte-identical shuffle volume to
+//!   the paper's per-point emits, without per-record allocation overhead.
 //! - **Reduce** (Table 2): gather the cluster's members and choose the
 //!   candidate with the least total cost as the new medoid (exact PAM
 //!   update, sampled update, or centroid-nearest — [`UpdateStrategy`]).
@@ -14,16 +15,25 @@
 //!
 //! The medoids file lives in an HBase cell table (`__medoids__`), matching
 //! the paper's "file of medoids" that mappers load each iteration.
+//!
+//! The whole driver is metric- and dimension-generic: the run's
+//! [`Metric`] and the dataset's dimensionality thread through the wire
+//! format (coordinate runs are `dims` f32s per point), the kernels, and
+//! the update step, and outputs stay byte-identical across compute
+//! thread counts for every `(dims, metric)` pair (enforced by tests).
 
 use super::observe::{IterationEvent, ObserverHub};
 use super::seeding::init_mr;
 use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
-use crate::geo::{Point, PointSource};
+use crate::geo::{Metric, Point, PointSource};
 use crate::mapreduce::{
     Cluster, Input, JobSpec, MapCtx, Mapper, ReduceCtx, Reducer,
 };
 use crate::runtime::{assign_points, ops, pairwise_costs, ComputeBackend};
-use crate::util::codec::{decode_cluster_key, encode_cluster_key, Dec, Enc, PackedPoints};
+use crate::util::codec::{
+    decode_cluster_key, decode_point_coords, encode_cluster_key, encode_point_coords, Dec, Enc,
+    PackedPoints,
+};
 use crate::util::nearest::{argmin_f64, nearest_point};
 use crate::util::rng::Rng;
 use std::sync::Arc;
@@ -34,9 +44,15 @@ pub struct ParallelKMedoids {
     pub init: Init,
     pub update: UpdateStrategy,
     pub params: IterParams,
+    /// Dissimilarity the fit minimizes (kernel-dispatched).
+    pub metric: Metric,
     /// Run a final map-only labeling job (the paper's "output the
     /// clustering result" step). Costs one more pass of simulated time.
     pub label_pass: bool,
+    /// Override the algorithm name events are tagged with (used by the
+    /// k-means driver when it falls back to medoid updates for
+    /// non-Euclidean metrics).
+    pub event_label: Option<&'static str>,
 }
 
 impl ParallelKMedoids {
@@ -46,7 +62,9 @@ impl ParallelKMedoids {
             init: Init::PlusPlus,
             update: UpdateStrategy::Exact,
             params,
+            metric: Metric::SqEuclidean,
             label_pass: false,
+            event_label: None,
         }
     }
 
@@ -65,9 +83,13 @@ impl ParallelKMedoids {
 
     /// The algorithm name events are tagged with (`Algorithm` vocabulary).
     fn event_name(&self) -> &'static str {
+        if let Some(label) = self.event_label {
+            return label;
+        }
         match self.init {
             Init::PlusPlus => "kmedoids++-mr",
             Init::Random => "kmedoids-mr",
+            Init::OverSample { .. } => "kmedoids-scalable-mr",
         }
     }
 
@@ -85,10 +107,24 @@ impl ParallelKMedoids {
     ) -> anyhow::Result<ClusterOutcome> {
         let k = self.params.k;
         let t_start = cluster.now().0;
+        let dims = points.first().map(|p| p.dims()).unwrap_or(2);
+        anyhow::ensure!(
+            self.metric.supports_dims(dims),
+            "metric {} does not support {dims}-dimensional data",
+            self.metric.name()
+        );
 
         // §3.2 step (1): initial medoids.
-        let (mut medoids, _seed_s) =
-            init_mr(self.init, cluster, input, points, &self.backend, k, self.params.seed)?;
+        let (mut medoids, _seed_s) = init_mr(
+            self.init,
+            cluster,
+            input,
+            points,
+            &self.backend,
+            k,
+            self.params.seed,
+            self.metric,
+        )?;
 
         // The paper's medoids file (HBase cell table).
         if cluster.hmaster.table("__medoids__").is_none() {
@@ -114,6 +150,7 @@ impl ParallelKMedoids {
                 Arc::new(AssignMapper {
                     backend: self.backend.clone(),
                     medoids: shared_medoids.clone(),
+                    metric: self.metric,
                 }),
             )
             .with_reducer(
@@ -121,6 +158,7 @@ impl ParallelKMedoids {
                     backend: self.backend.clone(),
                     medoids: shared_medoids,
                     update: self.update,
+                    metric: self.metric,
                     // Seed fixed across iterations: the sampled update's
                     // candidate draw must be a deterministic function of
                     // the (stable) member set so the medoid-equality
@@ -142,20 +180,19 @@ impl ParallelKMedoids {
             let mut new_medoids = medoids.clone();
             for (key, val) in &result.output {
                 let j = decode_cluster_key(key) as usize;
-                let mut d = Dec::new(val);
-                new_medoids[j] = Point::new(d.f32(), d.f32());
+                new_medoids[j] = decode_point_coords(val, dims);
             }
             write_medoids_file(cluster, &new_medoids);
 
             // §3.3 step (3): stop when the medoids file is unchanged.
-            let unchanged = new_medoids
-                .iter()
-                .zip(&medoids)
-                .all(|(a, b)| a.x == b.x && a.y == b.y);
+            let unchanged = new_medoids.iter().zip(&medoids).all(|(a, b)| a == b);
             let cost_flat = cost.is_finite()
                 && (cost - new_cost).abs() <= self.params.rel_tol * cost.abs().max(1.0);
-            let drift: f64 =
-                new_medoids.iter().zip(&medoids).map(|(a, b)| a.dist2(b).sqrt()).sum();
+            let drift: f64 = new_medoids
+                .iter()
+                .zip(&medoids)
+                .map(|(a, b)| self.metric.displacement(a, b))
+                .sum();
             medoids = new_medoids;
             cost = new_cost;
             hub.iteration(&IterationEvent {
@@ -177,7 +214,7 @@ impl ParallelKMedoids {
         // simulated clock either way — the accounting must agree).
         let labels = if self.label_pass {
             let (labels, label_evals) =
-                run_label_pass(cluster, input, points, &self.backend, &medoids)?;
+                run_label_pass(cluster, input, points, &self.backend, &medoids, self.metric)?;
             dist_evals += label_evals;
             Some(labels)
         } else {
@@ -201,12 +238,7 @@ fn total_reduce_slots(cluster: &Cluster) -> usize {
 
 fn write_medoids_file(cluster: &mut Cluster, medoids: &[Point]) {
     for (j, m) in medoids.iter().enumerate() {
-        cluster.hmaster.put(
-            "__medoids__",
-            j as u64,
-            "m:xy",
-            Enc::new().f32(m.x).f32(m.y).done(),
-        );
+        cluster.hmaster.put("__medoids__", j as u64, "m:xy", encode_point_coords(m));
     }
 }
 
@@ -217,24 +249,27 @@ struct AssignMapper {
     backend: Arc<dyn ComputeBackend>,
     /// Shared with the reducer and the driver — no per-job deep copy.
     medoids: Arc<[Point]>,
+    metric: Metric,
 }
 
 impl Mapper for AssignMapper {
     fn map_points(&self, ctx: &mut MapCtx, _row_start: u64, pts: &[Point]) {
-        let res = assign_points(self.backend.as_ref(), pts, &self.medoids)
+        let res = assign_points(self.backend.as_ref(), pts, &self.medoids, self.metric)
             .expect("assign kernel failed");
         ctx.charge_dist_evals(ops::assign_dist_evals(pts.len(), self.medoids.len()));
         ctx.counters.inc("work.dist.evals", ops::assign_dist_evals(pts.len(), self.medoids.len()));
 
         // Pack members per cluster straight into the emit byte buffers
         // (same shuffle bytes as per-point emits, no intermediate
-        // `Vec<f32>` staging — the wire format is written in one pass).
+        // `Vec<f32>` staging — the wire format is written in one pass;
+        // dims f32s per point).
         let k = self.medoids.len();
         let mut bufs: Vec<Vec<u8>> = vec![Vec::new(); k];
         for (p, &l) in pts.iter().zip(&res.labels) {
             let b = &mut bufs[l as usize];
-            b.extend_from_slice(&p.x.to_le_bytes());
-            b.extend_from_slice(&p.y.to_le_bytes());
+            for c in p.coords() {
+                b.extend_from_slice(&c.to_le_bytes());
+            }
         }
         for (j, bytes) in bufs.into_iter().enumerate() {
             if !bytes.is_empty() {
@@ -255,6 +290,7 @@ struct UpdateReducer {
     /// Shared with the mapper and the driver — no per-job deep copy.
     medoids: Arc<[Point]>,
     update: UpdateStrategy,
+    metric: Metric,
     seed: u64,
 }
 
@@ -262,12 +298,13 @@ impl Reducer for UpdateReducer {
     fn reduce(&self, ctx: &mut ReduceCtx, key: &[u8], values: &[Vec<u8>]) {
         let j = decode_cluster_key(key) as usize;
         let current = self.medoids[j];
-        // Zero-copy member view: the shuffle values are packed (x, y)
-        // coordinate runs, read as `&[f32]` views in place (decode only
-        // on the misaligned/big-endian fallback) — no `Vec<Point>`.
-        let members = PackedPoints::new(values.iter().map(|v| v.as_slice()));
+        // Zero-copy member view: the shuffle values are packed coordinate
+        // runs (dims f32s per point), read as `&[f32]` views in place
+        // (decode only on the misaligned/big-endian fallback) — no
+        // `Vec<Point>`.
+        let members = PackedPoints::new(current.dims(), values.iter().map(|v| v.as_slice()));
         if members.is_empty() {
-            ctx.emit(key.to_vec(), Enc::new().f32(current.x).f32(current.y).done());
+            ctx.emit(key.to_vec(), encode_point_coords(&current));
             return;
         }
         let new_medoid = choose_medoid(
@@ -275,10 +312,11 @@ impl Reducer for UpdateReducer {
             &members,
             current,
             self.update,
+            self.metric,
             self.seed ^ j as u64,
             ctx,
         );
-        ctx.emit(key.to_vec(), Enc::new().f32(new_medoid.x).f32(new_medoid.y).done());
+        ctx.emit(key.to_vec(), encode_point_coords(&new_medoid));
     }
 }
 
@@ -290,14 +328,15 @@ pub fn choose_medoid<M: PointSource + ?Sized>(
     members: &M,
     current: Point,
     update: UpdateStrategy,
+    metric: Metric,
     seed: u64,
     ctx: &mut ReduceCtx,
 ) -> Point {
     let m = members.len();
     match update {
         UpdateStrategy::Exact => {
-            let costs =
-                ops::pairwise_costs_src(backend, members, members).expect("pairwise kernel");
+            let costs = ops::pairwise_costs_src(backend, members, members, metric)
+                .expect("pairwise kernel");
             let evals = ops::pairwise_dist_evals(m, m);
             ctx.charge_dist_evals(evals);
             ctx.counters.inc("work.dist.evals", evals);
@@ -310,6 +349,7 @@ pub fn choose_medoid<M: PointSource + ?Sized>(
                 members,
                 current,
                 UpdateStrategy::Sampled { candidates, member_sample },
+                metric,
                 seed,
                 ctx,
             )
@@ -329,21 +369,49 @@ pub fn choose_medoid<M: PointSource + ?Sized>(
                     .map(|i| members.get(i))
                     .collect()
             };
-            let costs = pairwise_costs(backend, &cands, &sample).expect("pairwise kernel");
+            let costs =
+                pairwise_costs(backend, &cands, &sample, metric).expect("pairwise kernel");
             let evals = ops::pairwise_dist_evals(cands.len(), sample.len());
             ctx.charge_dist_evals(evals);
             ctx.counters.inc("work.dist.evals", evals);
             cands[argmin_f64(&costs)]
         }
         UpdateStrategy::CentroidNearest => {
-            let (mut sx, mut sy) = (0f64, 0f64);
-            for i in 0..m {
-                let p = members.get(i);
-                sx += p.x as f64;
-                sy += p.y as f64;
-            }
-            let c = Point::new((sx / m as f64) as f32, (sy / m as f64) as f32);
-            let (best, _) = nearest_point(c, (0..m).map(|i| members.get(i)))
+            // Mean anchor, then the member nearest the anchor under the
+            // run's metric (Zhang & Couloigner style fast update; for
+            // non-Euclidean metrics the mean is only a search anchor,
+            // the result is still a data point). O(m).
+            let c = if metric == Metric::Haversine {
+                // Spherical mean: average the members' unit vectors and
+                // convert back to (lat, lon) — a raw degree-space mean
+                // breaks for clusters straddling the antimeridian
+                // (members at +179° and −179° would average to ~0°,
+                // the opposite side of the planet).
+                let (mut sx, mut sy, mut sz) = (0f64, 0f64, 0f64);
+                for i in 0..m {
+                    let p = members.get(i);
+                    let lat = (p.x() as f64).to_radians();
+                    let lon = (p.y() as f64).to_radians();
+                    sx += lat.cos() * lon.cos();
+                    sy += lat.cos() * lon.sin();
+                    sz += lat.sin();
+                }
+                let lat = sz.atan2((sx * sx + sy * sy).sqrt()).to_degrees();
+                let lon = sy.atan2(sx).to_degrees();
+                Point::new(lat as f32, lon as f32)
+            } else {
+                let dims = members.dims();
+                let mut sums = vec![0f64; dims];
+                for i in 0..m {
+                    let p = members.get(i);
+                    for (t, s) in sums.iter_mut().enumerate() {
+                        *s += p.coord(t) as f64;
+                    }
+                }
+                let mean: Vec<f32> = sums.iter().map(|s| (*s / m as f64) as f32).collect();
+                Point::from_slice(&mean)
+            };
+            let (best, _) = nearest_point(c, (0..m).map(|i| members.get(i)), metric)
                 .expect("non-empty member set");
             let evals = 2 * m as u64;
             ctx.charge_dist_evals(evals);
@@ -358,11 +426,12 @@ pub fn choose_medoid<M: PointSource + ?Sized>(
 struct LabelMapper {
     backend: Arc<dyn ComputeBackend>,
     medoids: Arc<[Point]>,
+    metric: Metric,
 }
 
 impl Mapper for LabelMapper {
     fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
-        let res = assign_points(self.backend.as_ref(), pts, &self.medoids)
+        let res = assign_points(self.backend.as_ref(), pts, &self.medoids, self.metric)
             .expect("assign kernel failed");
         // Charge the sim *and* the work counter — the label pass's evals
         // must reach `ClusterOutcome::dist_evals` like every other pass.
@@ -386,11 +455,12 @@ fn run_label_pass(
     points: &Arc<Vec<Point>>,
     backend: &Arc<dyn ComputeBackend>,
     medoids: &[Point],
+    metric: Metric,
 ) -> anyhow::Result<(Vec<u32>, u64)> {
     let job = JobSpec::new(
         "kmedoids-labels",
         input.clone(),
-        Arc::new(LabelMapper { backend: backend.clone(), medoids: Arc::from(medoids) }),
+        Arc::new(LabelMapper { backend: backend.clone(), medoids: Arc::from(medoids), metric }),
     );
     let result = cluster.try_run_job(&job)?;
     let mut labels = vec![0u32; points.len()];
@@ -409,7 +479,7 @@ fn run_label_pass(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::clustering::metrics::{adjusted_rand_index, total_cost};
+    use crate::clustering::metrics::{adjusted_rand_index, total_cost, total_cost_metric};
     use crate::config::ClusterConfig;
     use crate::geo::datasets::{generate, SpatialSpec};
     use crate::mapreduce::SplitMeta;
@@ -460,7 +530,7 @@ mod tests {
     fn recovers_planted_clusters() {
         let (out, points, truth) = run_once(4000, 5, Init::PlusPlus, UpdateStrategy::Exact, 3);
         assert_eq!(out.medoids.len(), 5);
-        assert!(out.iterations >= 1 && out.iterations < 30);
+        assert!((1..30).contains(&out.iterations));
         let labels = out.labels.as_ref().unwrap();
         let ari = adjusted_rand_index(labels, &truth);
         assert!(ari > 0.9, "ARI {ari} too low — clusters not recovered");
@@ -478,7 +548,7 @@ mod tests {
         let (out, points, _) = run_once(2000, 4, Init::PlusPlus, UpdateStrategy::Exact, 5);
         for m in &out.medoids {
             assert!(
-                points.iter().any(|p| p.x == m.x && p.y == m.y),
+                points.iter().any(|p| p == m),
                 "medoid {m:?} must be an input point (K-Medoids, not K-Means)"
             );
         }
@@ -519,6 +589,15 @@ mod tests {
         let (out, _, truth) = run_once(4000, 4, Init::PlusPlus, UpdateStrategy::CentroidNearest, 62);
         let ari = adjusted_rand_index(out.labels.as_ref().unwrap(), &truth);
         assert!(ari > 0.8, "ARI {ari}");
+    }
+
+    #[test]
+    fn oversample_init_recovers_clusters() {
+        let (out, _, truth) =
+            run_once(4000, 5, Init::oversample_default(5), UpdateStrategy::Exact, 3);
+        assert_eq!(out.medoids.len(), 5);
+        let ari = adjusted_rand_index(out.labels.as_ref().unwrap(), &truth);
+        assert!(ari > 0.9, "ARI {ari} (|| seeding)");
     }
 
     #[test]
@@ -568,6 +647,125 @@ mod tests {
             assert_eq!(base, run(2), "seed {seed}: 2 threads diverged");
             assert_eq!(base, run(8), "seed {seed}: 8 threads diverged");
         }
+    }
+
+    #[test]
+    fn compute_threads_identical_for_every_dims_metric_pair() {
+        // The byte-identical-across-thread-counts invariant (PR 2) must
+        // hold for every supported (dims, metric) combination, at
+        // d ∈ {2, 3, 8}: medoids, cost, sim clock, evals, and labels.
+        let combos: [(usize, bool, Metric); 7] = [
+            (2, false, Metric::SqEuclidean),
+            (2, false, Metric::Manhattan),
+            (2, true, Metric::Haversine),
+            (3, false, Metric::SqEuclidean),
+            (3, false, Metric::Manhattan),
+            (8, false, Metric::SqEuclidean),
+            (8, false, Metric::Manhattan),
+        ];
+        for (dims, latlon, metric) in combos {
+            let spec = if latlon {
+                SpatialSpec::latlon(1000, 3, 29)
+            } else {
+                let mut s = SpatialSpec::new(1000, 3, 29);
+                s.outlier_frac = 0.0;
+                s.with_dims(dims)
+            };
+            let d = generate(&spec);
+            let points = Arc::new(d.points);
+            let run = |threads: usize| {
+                let input = make_input(&points, 5);
+                let mut cluster =
+                    Cluster::new(ClusterConfig::test_cluster(4), 29).with_threads(threads);
+                let mut driver = ParallelKMedoids::new(backend(), IterParams::new(3, 29));
+                driver.metric = metric;
+                driver.label_pass = true;
+                let out = driver.run(&mut cluster, &input, &points);
+                (out.medoids, out.cost, out.sim_seconds, out.dist_evals, out.labels)
+            };
+            let base = run(1);
+            assert_eq!(base, run(4), "d={dims} {metric:?}: 4 threads diverged");
+            // Medoids keep the dataset's dimensionality.
+            assert!(base.0.iter().all(|m| m.dims() == dims), "d={dims} {metric:?}");
+        }
+    }
+
+    #[test]
+    fn manhattan_fit_minimizes_manhattan_cost() {
+        let mut spec = SpatialSpec::new(3000, 4, 47);
+        spec.outlier_frac = 0.0;
+        let d = generate(&spec);
+        let points = Arc::new(d.points);
+        let input = make_input(&points, 5);
+        let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 47);
+        let mut driver = ParallelKMedoids::new(backend(), IterParams::new(4, 47));
+        driver.metric = Metric::Manhattan;
+        let out = driver.run(&mut cluster, &input, &points);
+        // Counter cost equals the brute-force L1 objective.
+        let brute = total_cost_metric(&points, &out.medoids, Metric::Manhattan);
+        assert!(
+            (out.cost - brute).abs() / brute.max(1.0) < 0.01,
+            "counter {} vs brute {brute}",
+            out.cost
+        );
+        // Medoids are data points (K-Medoids invariant, any metric).
+        for m in &out.medoids {
+            assert!(points.iter().any(|p| p == m));
+        }
+    }
+
+    #[test]
+    fn haversine_fit_on_latlon_clouds() {
+        let d = generate(&SpatialSpec::latlon(3000, 4, 59));
+        let points = Arc::new(d.points);
+        let input = make_input(&points, 5);
+        let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 59);
+        let mut driver = ParallelKMedoids::new(backend(), IterParams::new(4, 59));
+        driver.metric = Metric::Haversine;
+        driver.label_pass = true;
+        let out = driver.run(&mut cluster, &input, &points);
+        let ari = adjusted_rand_index(out.labels.as_ref().unwrap(), &d.truth);
+        assert!(ari > 0.8, "ARI {ari} (haversine city recovery)");
+        // Every fitted medoid sits within a few hundred km of a true city.
+        let sigma_km = 90.0 * 0.03 * 111.2;
+        for m in &out.medoids {
+            let nearest = d
+                .centers
+                .iter()
+                .map(|c| Metric::Haversine.distance(m, c))
+                .fold(f64::INFINITY, f64::min);
+            assert!(nearest < 6.0 * sigma_km, "medoid {nearest} km from any city");
+        }
+    }
+
+    #[test]
+    fn centroid_nearest_haversine_survives_the_antimeridian() {
+        // A city straddling lon ±180: members at +179.x and −179.x
+        // degrees. A raw degree-space mean anchor would land near lon 0
+        // (the far side of the planet); the spherical mean must keep the
+        // chosen medoid inside the cluster. One far member near lon 0
+        // makes the failure observable: the degree-mean anchor would
+        // select it.
+        let mut members: Vec<Point> = Vec::new();
+        for i in 0..10 {
+            let lon = if i % 2 == 0 { 179.2 + 0.05 * i as f32 } else { -179.2 - 0.05 * i as f32 };
+            members.push(Point::new(10.0 + 0.1 * i as f32, lon));
+        }
+        members.push(Point::new(10.0, 1.0)); // lone point near lon 0
+        let mut ctx = ReduceCtx::default();
+        let chosen = choose_medoid(
+            backend().as_ref(),
+            members.as_slice(),
+            members[0],
+            UpdateStrategy::CentroidNearest,
+            Metric::Haversine,
+            1,
+            &mut ctx,
+        );
+        assert!(
+            chosen.y().abs() > 170.0,
+            "medoid {chosen:?} must stay in the straddling cluster, not jump to lon ~0"
+        );
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Medoid initialization (paper §3.1): the K-Medoids++ weighted seeding
 //! of Arthur & Vassilvitskii, both serial and as MapReduce rounds, plus
-//! uniform random init for the "traditional" baseline.
+//! uniform random init for the "traditional" baseline and the
+//! k-means||-style oversampled seeding of Bahmani et al. (*Scalable
+//! K-Means++*, VLDB 2012) generalized to arbitrary [`Metric`]s.
 //!
-//! MR version (one map-only job per round, k−1 rounds):
+//! MR ++ version (one map-only job per round, k−1 rounds):
 //! the mapper computes `D(p) = min over current medoids` for its split
 //! (through the same assign kernel as the clustering mapper) and emits a
 //! single record: the split's total weight `S_i` and one candidate drawn
@@ -10,22 +12,59 @@
 //! with a deterministic per-split stream). The driver then picks a split
 //! with probability `S_i/ΣS` and takes its candidate — exactly the global
 //! `D(p)/ΣD` draw of §3.1 steps (2)–(3), in one distributed pass.
+//!
+//! MR || version (one map-only job per oversampling round + one weighting
+//! job): each round every point is drawn independently with probability
+//! `min(1, ℓ·D(p)/ψ)` where `ψ` is the previous round's total cost, so a
+//! round lands ≈ ℓ candidates; after `rounds` rounds the candidate set is
+//! weighted by cluster population and reclustered to k medoids on the
+//! driver. O(rounds) jobs instead of k−1 — the seeding to use when k is
+//! large relative to the cluster's job overhead.
+//!
+//! Every drawn candidate is deduplicated against the already-chosen
+//! medoids ([`dedupe_candidate`]): a duplicated medoid coordinate would
+//! create a degenerate empty cluster downstream (ties assign to the
+//! lower index). Duplicates are kept only when the dataset has fewer
+//! distinct coordinates than k.
 
 use super::Init;
-use crate::geo::Point;
+use crate::geo::{Metric, Point};
 use crate::mapreduce::{Cluster, Input, JobSpec, MapCtx, Mapper};
 use crate::runtime::{assign_points, ops::assign_dist_evals, ComputeBackend};
+use crate::sim::TaskWork;
 use crate::util::codec::{Dec, Enc};
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
+/// If `next` coincides with an already-chosen medoid, return the first
+/// point (in index order) whose coordinates differ from every chosen
+/// medoid; keep `next` only when no such point exists (fewer distinct
+/// coordinates than medoids — fully degenerate input). Deterministic.
+pub fn dedupe_candidate(points: &[Point], medoids: &[Point], next: Point) -> Point {
+    if !medoids.contains(&next) {
+        return next;
+    }
+    for p in points {
+        if !medoids.contains(p) {
+            return *p;
+        }
+    }
+    next
+}
+
 /// Serial ++ seeding (used by the serial baselines and as the oracle for
-/// the MR version's distribution tests).
-pub fn plus_plus_serial(points: &[Point], k: usize, rng: &mut Rng) -> (Vec<Point>, u64) {
-    assert!(k >= 1 && k <= points.len());
+/// the MR version's distribution tests). Weights are the metric's own
+/// dissimilarity (squared distance for `SqEuclidean`, as in §3.1).
+pub fn plus_plus_serial(
+    points: &[Point],
+    k: usize,
+    rng: &mut Rng,
+    metric: Metric,
+) -> (Vec<Point>, u64) {
+    assert!((1..=points.len()).contains(&k));
     let mut medoids = Vec::with_capacity(k);
     medoids.push(points[rng.below(points.len())]);
-    let mut d2: Vec<f64> = points.iter().map(|p| p.dist2(&medoids[0])).collect();
+    let mut d2: Vec<f64> = points.iter().map(|p| metric.distance(p, &medoids[0])).collect();
     let mut dist_evals = points.len() as u64;
     while medoids.len() < k {
         let total: f64 = d2.iter().sum();
@@ -44,9 +83,14 @@ pub fn plus_plus_serial(points: &[Point], k: usize, rng: &mut Rng) -> (Vec<Point
             }
             points[pick]
         };
+        // Both fallbacks above (uniform draw; float-dust landing on the
+        // last index) can hand back a point that coincides with a chosen
+        // medoid — dedupe so k distinct coordinates yield k distinct
+        // medoids.
+        let next = dedupe_candidate(points, &medoids, next);
         medoids.push(next);
         for (i, p) in points.iter().enumerate() {
-            d2[i] = d2[i].min(p.dist2(&next));
+            d2[i] = d2[i].min(metric.distance(p, &next));
         }
         dist_evals += points.len() as u64;
     }
@@ -58,12 +102,113 @@ pub fn random_init(points: &[Point], k: usize, rng: &mut Rng) -> Vec<Point> {
     rng.sample_indices(points.len(), k).into_iter().map(|i| points[i]).collect()
 }
 
+// ---- k-means||-style oversampled seeding (serial) ---------------------------
+
+/// Serial k-means||-style seeding (Bahmani et al.): `rounds` oversampling
+/// rounds at factor `l`, then population-weighted reclustering of the
+/// candidate set to k medoids. Returns (medoids, distance evaluations).
+pub fn oversample_serial(
+    points: &[Point],
+    k: usize,
+    l: usize,
+    rounds: usize,
+    rng: &mut Rng,
+    metric: Metric,
+) -> (Vec<Point>, u64) {
+    assert!((1..=points.len()).contains(&k));
+    assert!(l >= 1);
+    let n = points.len();
+    let mut evals = 0u64;
+    let mut cands = vec![points[rng.below(n)]];
+    let mut d: Vec<f64> = points.iter().map(|p| metric.distance(p, &cands[0])).collect();
+    // Nearest-candidate labels, maintained for free inside the distance
+    // update (strict `<` keeps the first-index-wins tie rule): the
+    // weighting pass below then needs no extra distance work.
+    let mut labels = vec![0u32; n];
+    evals += n as u64;
+    for _ in 0..rounds {
+        let psi: f64 = d.iter().sum();
+        if psi <= 0.0 {
+            break;
+        }
+        // Independent draws: ≈ l candidates land per round.
+        let mut drawn: Vec<Point> = Vec::new();
+        for (i, p) in points.iter().enumerate() {
+            if d[i] > 0.0 && rng.f64() < (l as f64 * d[i] / psi).min(1.0) {
+                drawn.push(*p);
+            }
+        }
+        for c in drawn {
+            cands.push(c);
+            let ci = (cands.len() - 1) as u32;
+            for (i, p) in points.iter().enumerate() {
+                let dist = metric.distance(p, &c);
+                if dist < d[i] {
+                    d[i] = dist;
+                    labels[i] = ci;
+                }
+            }
+            evals += n as u64;
+        }
+    }
+    // Weight candidates by the population they capture, then recluster.
+    let mut weights = vec![0f64; cands.len()];
+    for &lab in &labels {
+        weights[lab as usize] += 1.0;
+    }
+    let medoids = recluster_candidates(&cands, &weights, k, points, rng, metric);
+    // Recluster work: one |C|-length distance vector for the first pick
+    // plus one update pass per remaining medoid — k · |C| evaluations.
+    evals += (k as u64) * cands.len() as u64;
+    (medoids, evals)
+}
+
+/// Recluster a weighted candidate set to k medoids via weighted ++
+/// seeding (draw probability ∝ weight · distance-to-chosen), deduping
+/// every draw against the chosen set; tops up from `fallback` (the full
+/// dataset) when the candidate pool runs out of distinct coordinates.
+fn recluster_candidates(
+    cands: &[Point],
+    weights: &[f64],
+    k: usize,
+    fallback: &[Point],
+    rng: &mut Rng,
+    metric: Metric,
+) -> Vec<Point> {
+    assert!(!cands.is_empty());
+    assert_eq!(cands.len(), weights.len());
+    let mut medoids = Vec::with_capacity(k);
+    let total_w: f64 = weights.iter().filter(|w| **w > 0.0).sum();
+    let first = if total_w > 0.0 { cands[rng.weighted(weights)] } else { cands[0] };
+    medoids.push(first);
+    let mut d: Vec<f64> = cands.iter().map(|c| metric.distance(c, &first)).collect();
+    while medoids.len() < k {
+        let draw: Vec<f64> = d.iter().zip(weights).map(|(dd, w)| dd * w).collect();
+        let next = if draw.iter().any(|v| *v > 0.0) {
+            cands[rng.weighted(&draw)]
+        } else {
+            // Candidate pool exhausted (all coincide with chosen
+            // medoids): dedupe_candidate scans the dataset for a fresh
+            // coordinate.
+            medoids[0]
+        };
+        let next = dedupe_candidate(fallback, &medoids, next);
+        medoids.push(next);
+        for (i, c) in cands.iter().enumerate() {
+            d[i] = d[i].min(metric.distance(c, &next));
+        }
+    }
+    medoids
+}
+
 // ---- MapReduce ++ seeding -------------------------------------------------
 
-/// Mapper for one seeding round: emits (split_id, [S_i, cand_x, cand_y]).
+/// Mapper for one ++ seeding round: emits
+/// (split_id, [S_i, cand coords...]).
 struct SeedRoundMapper {
     backend: Arc<dyn ComputeBackend>,
     medoids: Vec<Point>,
+    metric: Metric,
     /// Deterministic stream: candidate draw depends only on (seed, round,
     /// split start row), not on scheduling.
     seed: u64,
@@ -72,7 +217,7 @@ struct SeedRoundMapper {
 
 impl Mapper for SeedRoundMapper {
     fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
-        let res = assign_points(self.backend.as_ref(), pts, &self.medoids)
+        let res = assign_points(self.backend.as_ref(), pts, &self.medoids, self.metric)
             .expect("assign kernel failed in seeding mapper");
         ctx.charge_dist_evals(assign_dist_evals(pts.len(), self.medoids.len()));
         // Weighted reservoir (one draw ~ D(p)/S within the split).
@@ -90,7 +235,7 @@ impl Mapper for SeedRoundMapper {
             }
         }
         if let Some(c) = cand {
-            let v = Enc::new().f64(total).f32(c.x).f32(c.y).done();
+            let v = Enc::new().f64(total).f32s(c.coords()).done();
             ctx.emit(Enc::new().u64(row_start).done(), v);
         }
         ctx.counters.inc("seed.splits", 1);
@@ -99,6 +244,7 @@ impl Mapper for SeedRoundMapper {
 
 /// Run K-Medoids++ seeding as k−1 MapReduce rounds over `input`.
 /// Returns (medoids, simulated seconds spent seeding).
+#[allow(clippy::too_many_arguments)]
 pub fn plus_plus_mr(
     cluster: &mut Cluster,
     input: &Input,
@@ -106,8 +252,9 @@ pub fn plus_plus_mr(
     backend: &Arc<dyn ComputeBackend>,
     k: usize,
     seed: u64,
+    metric: Metric,
 ) -> anyhow::Result<(Vec<Point>, f64)> {
-    assert!(k >= 1 && (k as usize) <= all_points.len());
+    assert!((1..=all_points.len()).contains(&k));
     let mut rng = Rng::new(seed ^ 0x5EED);
     let mut medoids = vec![all_points[rng.below(all_points.len())]];
     let t0 = cluster.now().0;
@@ -118,6 +265,7 @@ pub fn plus_plus_mr(
             Arc::new(SeedRoundMapper {
                 backend: backend.clone(),
                 medoids: medoids.clone(),
+                metric,
                 seed,
                 round: round as u32,
             }),
@@ -129,19 +277,199 @@ pub fn plus_plus_mr(
         for (_, v) in &result.output {
             let mut d = Dec::new(v);
             weights.push(d.f64());
-            cands.push(Point::new(d.f32(), d.f32()));
+            cands.push(Point::from_slice(&d.rest_f32s()));
         }
         let next = if weights.is_empty() || weights.iter().sum::<f64>() <= 0.0 {
             all_points[rng.below(all_points.len())]
         } else {
             cands[rng.weighted(&weights)]
         };
+        // The zero-weight fallback draws uniformly and can coincide with
+        // a chosen medoid — dedupe (degenerate empty cluster otherwise).
+        let next = dedupe_candidate(all_points, &medoids, next);
         medoids.push(next);
     }
     Ok((medoids, cluster.now().0 - t0))
 }
 
+// ---- MapReduce || seeding ---------------------------------------------------
+
+/// Min-distance of every point to a candidate set that may exceed the
+/// backend's padded-k capacity: chunked assign calls, elementwise
+/// first-wins merge (labels are global candidate indices).
+pub(crate) fn min_dists_chunked(
+    be: &dyn ComputeBackend,
+    pts: &[Point],
+    cands: &[Point],
+    metric: Metric,
+) -> (Vec<u32>, Vec<f32>) {
+    assert!(!cands.is_empty());
+    let chunk = be.kpad().max(1);
+    let mut labels = vec![0u32; pts.len()];
+    let mut best = vec![f32::INFINITY; pts.len()];
+    let mut off = 0u32;
+    for ch in cands.chunks(chunk) {
+        let res = assign_points(be, pts, ch, metric).expect("assign kernel failed");
+        for i in 0..pts.len() {
+            if res.mindists[i] < best[i] {
+                best[i] = res.mindists[i];
+                labels[i] = off + res.labels[i];
+            }
+        }
+        off += ch.len() as u32;
+    }
+    (labels, best)
+}
+
+/// Mapper for one || oversampling round: emits
+/// (split_id, [S_i, count, cand coords...]). With `sample == false` it
+/// only reports the split cost (the ψ bootstrap pass).
+struct OverSampleRoundMapper {
+    backend: Arc<dyn ComputeBackend>,
+    cands: Arc<Vec<Point>>,
+    metric: Metric,
+    seed: u64,
+    round: u32,
+    l: usize,
+    /// Previous round's total cost ψ (the sampling denominator).
+    psi: f64,
+    sample: bool,
+}
+
+impl Mapper for OverSampleRoundMapper {
+    fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
+        let (_, mindists) = min_dists_chunked(self.backend.as_ref(), pts, &self.cands, self.metric);
+        ctx.charge_dist_evals(assign_dist_evals(pts.len(), self.cands.len()));
+        let total: f64 = mindists.iter().map(|&d| d as f64).sum();
+        let mut drawn: Vec<Point> = Vec::new();
+        if self.sample && self.psi > 0.0 {
+            let mut rng =
+                Rng::new(self.seed ^ 0x05A3 ^ ((self.round as u64) << 32) ^ row_start);
+            for (p, &d) in pts.iter().zip(&mindists) {
+                let w = d as f64;
+                if w > 0.0 && rng.f64() < (self.l as f64 * w / self.psi).min(1.0) {
+                    drawn.push(*p);
+                }
+            }
+        }
+        let mut enc = Enc::new().f64(total).u32(drawn.len() as u32);
+        for p in &drawn {
+            enc = enc.f32s(p.coords());
+        }
+        ctx.emit(Enc::new().u64(row_start).done(), enc.done());
+        ctx.counters.inc("seed.splits", 1);
+    }
+}
+
+/// Mapper for the || weighting pass: assigns the split's points to their
+/// nearest candidate and emits the per-candidate population counts.
+struct CandWeightMapper {
+    backend: Arc<dyn ComputeBackend>,
+    cands: Arc<Vec<Point>>,
+    metric: Metric,
+}
+
+impl Mapper for CandWeightMapper {
+    fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
+        let (labels, _) = min_dists_chunked(self.backend.as_ref(), pts, &self.cands, self.metric);
+        ctx.charge_dist_evals(assign_dist_evals(pts.len(), self.cands.len()));
+        let mut counts = vec![0u64; self.cands.len()];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        let mut enc = Enc::with_capacity(8 * counts.len());
+        for c in counts {
+            enc = enc.u64(c);
+        }
+        ctx.emit(Enc::new().u64(row_start).done(), enc.done());
+    }
+}
+
+/// Run k-means||-style oversampled seeding over `input`: one ψ bootstrap
+/// job, `rounds` sampling jobs, one weighting job, then a driver-side
+/// weighted recluster to k medoids. Returns (medoids, simulated seconds).
+#[allow(clippy::too_many_arguments)]
+pub fn oversample_mr(
+    cluster: &mut Cluster,
+    input: &Input,
+    all_points: &Arc<Vec<Point>>,
+    backend: &Arc<dyn ComputeBackend>,
+    k: usize,
+    l: usize,
+    rounds: usize,
+    seed: u64,
+    metric: Metric,
+) -> anyhow::Result<(Vec<Point>, f64)> {
+    assert!((1..=all_points.len()).contains(&k));
+    assert!(l >= 1);
+    let dims = all_points[0].dims();
+    let mut rng = Rng::new(seed ^ 0x0B5A);
+    let mut cands = vec![all_points[rng.below(all_points.len())]];
+    let t0 = cluster.now().0;
+    let mut psi = 0.0f64;
+    // Round 0 bootstraps ψ; rounds 1..=rounds sample with the previous
+    // round's ψ as the denominator (Bahmani et al.'s per-round cost).
+    for round in 0..=rounds {
+        let sample = round > 0;
+        let job = JobSpec::new(
+            &format!("kmedoids||-seed-r{round}"),
+            input.clone(),
+            Arc::new(OverSampleRoundMapper {
+                backend: backend.clone(),
+                cands: Arc::new(cands.clone()),
+                metric,
+                seed,
+                round: round as u32,
+                l,
+                psi,
+                sample,
+            }),
+        );
+        let result = cluster.try_run_job(&job)?;
+        let mut new_psi = 0.0f64;
+        for (_, v) in &result.output {
+            let mut d = Dec::new(v);
+            new_psi += d.f64();
+            let cnt = d.u32() as usize;
+            let drawn = d.rest_points(dims);
+            assert_eq!(drawn.len(), cnt, "|| seeding wire mismatch");
+            cands.extend(drawn);
+        }
+        psi = new_psi;
+        if psi <= 0.0 {
+            break;
+        }
+    }
+    // Weighting pass: candidate population counts across all splits.
+    let wjob = JobSpec::new(
+        "kmedoids||-seed-weights",
+        input.clone(),
+        Arc::new(CandWeightMapper {
+            backend: backend.clone(),
+            cands: Arc::new(cands.clone()),
+            metric,
+        }),
+    );
+    let result = cluster.try_run_job(&wjob)?;
+    let mut weights = vec![0f64; cands.len()];
+    for (_, v) in &result.output {
+        let mut d = Dec::new(v);
+        for w in weights.iter_mut() {
+            *w += d.u64() as f64;
+        }
+    }
+    let medoids = recluster_candidates(&cands, &weights, k, all_points, &mut rng, metric);
+    // Driver-side recluster work (k · |C| distance evaluations on the
+    // master) charged to the simulated clock like every other compute —
+    // same accounting rule the serial twin applies to its eval count.
+    let work = TaskWork { dist_evals: (k as u64) * cands.len() as u64, ..Default::default() };
+    let secs = cluster.cost.cpu_seconds(&cluster.config.nodes[cluster.config.master], &work);
+    cluster.advance_secs(secs);
+    Ok((medoids, cluster.now().0 - t0))
+}
+
 /// Dispatch on [`Init`] for the MR drivers.
+#[allow(clippy::too_many_arguments)]
 pub fn init_mr(
     init: Init,
     cluster: &mut Cluster,
@@ -150,9 +478,13 @@ pub fn init_mr(
     backend: &Arc<dyn ComputeBackend>,
     k: usize,
     seed: u64,
+    metric: Metric,
 ) -> anyhow::Result<(Vec<Point>, f64)> {
     match init {
-        Init::PlusPlus => plus_plus_mr(cluster, input, all_points, backend, k, seed),
+        Init::PlusPlus => plus_plus_mr(cluster, input, all_points, backend, k, seed, metric),
+        Init::OverSample { l, rounds } => {
+            oversample_mr(cluster, input, all_points, backend, k, l, rounds, seed, metric)
+        }
         Init::Random => {
             // The paper's traditional init is a driver-side draw (no MR
             // pass needed — medoids file written directly).
@@ -165,7 +497,7 @@ pub fn init_mr(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::clustering::metrics::total_cost;
+    use crate::clustering::metrics::{total_cost, total_cost_metric};
     use crate::config::ClusterConfig;
     use crate::geo::datasets::{generate, SpatialSpec};
     use crate::mapreduce::SplitMeta;
@@ -193,7 +525,7 @@ mod tests {
     fn serial_seeding_selects_k_distinct_spread_points() {
         let d = generate(&SpatialSpec::new(5000, 6, 11));
         let mut rng = Rng::new(1);
-        let (med, evals) = plus_plus_serial(&d.points, 6, &mut rng);
+        let (med, evals) = plus_plus_serial(&d.points, 6, &mut rng, Metric::SqEuclidean);
         assert_eq!(med.len(), 6);
         assert_eq!(evals, 5 * 5000 + 5000);
         for i in 0..6 {
@@ -211,7 +543,7 @@ mod tests {
         let (mut pp, mut rand) = (0.0, 0.0);
         for t in 0..trials {
             let mut rng = Rng::new(100 + t);
-            pp += total_cost(&d.points, &plus_plus_serial(&d.points, 8, &mut rng).0);
+            pp += total_cost(&d.points, &plus_plus_serial(&d.points, 8, &mut rng, Metric::SqEuclidean).0);
             let mut rng = Rng::new(200 + t);
             rand += total_cost(&d.points, &random_init(&d.points, 8, &mut rng));
         }
@@ -225,12 +557,13 @@ mod tests {
         let input = make_input(&points, 6);
         let be = backend();
         let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 5);
-        let (med, sim_s) = plus_plus_mr(&mut cluster, &input, &points, &be, 5, 77).unwrap();
+        let (med, sim_s) =
+            plus_plus_mr(&mut cluster, &input, &points, &be, 5, 77, Metric::SqEuclidean).unwrap();
         assert_eq!(med.len(), 5);
         assert!(sim_s > 0.0, "seeding consumed simulated time");
         // Quality: cost within 2x of a serial ++ run (same structure).
         let mut rng = Rng::new(77);
-        let serial = plus_plus_serial(&points, 5, &mut rng).0;
+        let serial = plus_plus_serial(&points, 5, &mut rng, Metric::SqEuclidean).0;
         let c_mr = total_cost(&points, &med);
         let c_serial = total_cost(&points, &serial);
         assert!(c_mr < c_serial * 2.5, "mr {c_mr} vs serial {c_serial}");
@@ -244,7 +577,9 @@ mod tests {
         let run = || {
             let input = make_input(&points, 5);
             let mut cluster = Cluster::new(ClusterConfig::test_cluster(3), 5);
-            plus_plus_mr(&mut cluster, &input, &points, &be, 4, 99).unwrap().0
+            plus_plus_mr(&mut cluster, &input, &points, &be, 4, 99, Metric::SqEuclidean)
+                .unwrap()
+                .0
         };
         assert_eq!(run(), run());
     }
@@ -263,7 +598,169 @@ mod tests {
     fn degenerate_all_identical_points() {
         let points = vec![Point::new(1.0, 1.0); 50];
         let mut rng = Rng::new(3);
-        let (med, _) = plus_plus_serial(&points, 3, &mut rng);
+        let (med, _) = plus_plus_serial(&points, 3, &mut rng, Metric::SqEuclidean);
         assert_eq!(med.len(), 3); // falls back to uniform draws
+    }
+
+    #[test]
+    fn dedupe_candidate_regression() {
+        // The bug: the uniform/float-dust fallbacks in ++ seeding could
+        // hand back a point coinciding with a chosen medoid, producing a
+        // degenerate empty cluster downstream. The dedupe must swap in
+        // the first coordinate-distinct point — and only give up when
+        // none exists.
+        let a = Point::new(1.0, 1.0);
+        let b = Point::new(2.0, 2.0);
+        let c = Point::new(3.0, 3.0);
+        let points = vec![a, a, a, b, c];
+        // A drawn duplicate is replaced by the first non-medoid point.
+        assert_eq!(dedupe_candidate(&points, &[a], a), b);
+        assert_eq!(dedupe_candidate(&points, &[a, b], a), c);
+        assert_eq!(dedupe_candidate(&points, &[a, b], b), c);
+        // Non-duplicates pass through untouched.
+        assert_eq!(dedupe_candidate(&points, &[a], c), c);
+        // Fully degenerate: every point is a medoid — duplicate kept.
+        assert_eq!(dedupe_candidate(&points, &[a, b, c], a), a);
+    }
+
+    #[test]
+    fn seeding_never_duplicates_medoids_on_duplicate_heavy_data() {
+        // End-to-end regression guard for the dedupe: datasets whose
+        // points are heavily duplicated must still yield k distinct
+        // medoids (the data always has ≥ k distinct coordinates here).
+        for_all(30, 0xDED0, |rng| {
+            let k = 2 + rng.below(4);
+            let distinct = k + rng.below(4);
+            let mut points = Vec::new();
+            for i in 0..distinct {
+                let p = Point::new(i as f32 * 10.0, -(i as f32));
+                for _ in 0..1 + rng.below(8) {
+                    points.push(p);
+                }
+            }
+            let (med, _) = plus_plus_serial(&points, k, rng, Metric::SqEuclidean);
+            for i in 0..med.len() {
+                for j in 0..i {
+                    assert_ne!(med[i], med[j], "duplicate medoid at k={k}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn plus_plus_serial_works_under_every_metric() {
+        let d = generate(&SpatialSpec::new(3000, 4, 51));
+        for metric in [Metric::SqEuclidean, Metric::Manhattan] {
+            let mut rng = Rng::new(5);
+            let (med, _) = plus_plus_serial(&d.points, 4, &mut rng, metric);
+            assert_eq!(med.len(), 4);
+            // Seeded cost beats random init on average under the same metric.
+            let mut rng = Rng::new(6);
+            let rand_cost =
+                total_cost_metric(&d.points, &random_init(&d.points, 4, &mut rng), metric);
+            let pp_cost = total_cost_metric(&d.points, &med, metric);
+            assert!(pp_cost < rand_cost * 1.5, "{metric:?}: {pp_cost} vs {rand_cost}");
+        }
+        let g = generate(&SpatialSpec::latlon(2000, 4, 53));
+        let mut rng = Rng::new(7);
+        let (med, _) = plus_plus_serial(&g.points, 4, &mut rng, Metric::Haversine);
+        assert_eq!(med.len(), 4);
+    }
+
+    #[test]
+    fn oversample_serial_quality_and_shape() {
+        let mut spec = SpatialSpec::new(6000, 5, 61);
+        spec.outlier_frac = 0.0;
+        let d = generate(&spec);
+        let mut rng = Rng::new(9);
+        let (med, evals) = oversample_serial(&d.points, 5, 10, 5, &mut rng, Metric::SqEuclidean);
+        assert_eq!(med.len(), 5);
+        assert!(evals > 0);
+        for i in 0..5 {
+            for j in 0..i {
+                assert_ne!(med[i], med[j], "|| medoids must be distinct");
+            }
+        }
+        // Costs in the same ballpark as serial ++ (both are seedings of
+        // the same objective; || averages a touch better per Bahmani).
+        let mut rng = Rng::new(9);
+        let pp = plus_plus_serial(&d.points, 5, &mut rng, Metric::SqEuclidean).0;
+        let c_os = total_cost(&d.points, &med);
+        let c_pp = total_cost(&d.points, &pp);
+        assert!(c_os < c_pp * 2.0, "|| {c_os} vs ++ {c_pp}");
+    }
+
+    #[test]
+    fn min_dists_chunked_matches_unchunked() {
+        // Candidate sets larger than kpad must merge chunk argmins into
+        // the same labels/distances a single scan would produce.
+        let d = generate(&SpatialSpec::new(800, 4, 71));
+        let be_small = NativeBackend::new(64, 4); // kpad 4 forces chunking
+        let cands: Vec<Point> = d.points[..11].to_vec();
+        let (labels, dists) =
+            min_dists_chunked(&be_small, &d.points, &cands, Metric::SqEuclidean);
+        for (i, p) in d.points.iter().enumerate() {
+            let (bj, bd) = cands
+                .iter()
+                .enumerate()
+                .map(|(j, c)| (j, p.dist2(c)))
+                .fold((0usize, f64::INFINITY), |acc, (j, dd)| if dd < acc.1 { (j, dd) } else { acc });
+            assert!(
+                (dists[i] as f64 - bd).abs() < 1e-2 * bd.max(1.0),
+                "point {i}: {} vs {bd}",
+                dists[i]
+            );
+            // Labels may differ only on f32 near-ties; check via distance.
+            let got_d = p.dist2(&cands[labels[i] as usize]);
+            assert!((got_d - bd).abs() < 1e-2 * bd.max(1.0), "label {} vs {bj}", labels[i]);
+        }
+    }
+
+    #[test]
+    fn oversample_mr_deterministic_and_reasonable() {
+        let mut spec = SpatialSpec::new(4000, 4, 81);
+        spec.outlier_frac = 0.0;
+        let d = generate(&spec);
+        let points = Arc::new(d.points);
+        let be = backend();
+        let run = || {
+            let input = make_input(&points, 5);
+            let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 7);
+            oversample_mr(&mut cluster, &input, &points, &be, 4, 8, 4, 123, Metric::SqEuclidean)
+                .unwrap()
+        };
+        let (med, sim_s) = run();
+        assert_eq!(med.len(), 4);
+        assert!(sim_s > 0.0, "|| seeding consumed simulated time");
+        assert_eq!(med, run().0, "deterministic in the seed");
+        // Quality: within 2.5x of serial ++ cost.
+        let mut rng = Rng::new(123);
+        let pp = plus_plus_serial(&points, 4, &mut rng, Metric::SqEuclidean).0;
+        let c_mr = total_cost(&points, &med);
+        let c_pp = total_cost(&points, &pp);
+        assert!(c_mr < c_pp * 2.5, "|| mr {c_mr} vs ++ serial {c_pp}");
+    }
+
+    #[test]
+    fn oversample_mr_uses_fewer_jobs_than_plus_plus_for_large_k() {
+        let d = generate(&SpatialSpec::new(3000, 9, 91));
+        let points = Arc::new(d.points);
+        let be = backend();
+        let k = 12;
+        let jobs_pp = {
+            let input = make_input(&points, 4);
+            let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 7);
+            plus_plus_mr(&mut cluster, &input, &points, &be, k, 3, Metric::SqEuclidean).unwrap();
+            cluster.jobs_run
+        };
+        let jobs_os = {
+            let input = make_input(&points, 4);
+            let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 7);
+            oversample_mr(&mut cluster, &input, &points, &be, k, 2 * k, 4, 3, Metric::SqEuclidean)
+                .unwrap();
+            cluster.jobs_run
+        };
+        assert_eq!(jobs_pp, k - 1);
+        assert!(jobs_os < jobs_pp, "|| ran {jobs_os} jobs vs ++ {jobs_pp}");
     }
 }

@@ -112,7 +112,7 @@ impl ClusterConfig {
     /// Table 4: the n-node experiment groups are prefixes of the member
     /// list (Master, Slave01, Slave02, ...).
     pub fn cluster_subset(&self, n_nodes: usize) -> ClusterConfig {
-        assert!(n_nodes >= 1 && n_nodes <= self.nodes.len());
+        assert!((1..=self.nodes.len()).contains(&n_nodes));
         let mut c = self.clone();
         c.nodes.truncate(n_nodes);
         c.dfs_replication = c.dfs_replication.min(n_nodes);

@@ -20,9 +20,10 @@ pub mod spec;
 pub mod suites;
 
 use crate::clustering::api::{Clarans, KMeans, KMedoids, SpatialClusterer};
-use crate::clustering::{metrics, UpdateStrategy};
+use crate::clustering::{metrics, Init, UpdateStrategy};
 use crate::config::ClusterConfig;
 use crate::geo::datasets::SpatialSpec;
+use crate::geo::Metric;
 use crate::runtime::ComputeBackend;
 use crate::session::{ClusterSession, DatasetHandle};
 use anyhow::Result;
@@ -35,6 +36,9 @@ pub enum Algorithm {
     KMedoidsPlusPlusMR,
     /// "Traditional K-Medoids" parallelized: MR with random init.
     KMedoidsRandomMR,
+    /// MR K-Medoids with k-means||-style oversampled seeding (Bahmani
+    /// et al.): O(rounds) seeding jobs instead of k−1.
+    KMedoidsScalableMR,
     /// Serial traditional K-Medoids (single node).
     KMedoidsSerial,
     /// CLARANS (serial, Ng & Han).
@@ -44,9 +48,10 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
-    pub const ALL: [Algorithm; 5] = [
+    pub const ALL: [Algorithm; 6] = [
         Algorithm::KMedoidsPlusPlusMR,
         Algorithm::KMedoidsRandomMR,
+        Algorithm::KMedoidsScalableMR,
         Algorithm::KMedoidsSerial,
         Algorithm::Clarans,
         Algorithm::KMeansMR,
@@ -56,6 +61,7 @@ impl Algorithm {
         match self {
             Algorithm::KMedoidsPlusPlusMR => "kmedoids++-mr",
             Algorithm::KMedoidsRandomMR => "kmedoids-mr",
+            Algorithm::KMedoidsScalableMR => "kmedoids-scalable-mr",
             Algorithm::KMedoidsSerial => "kmedoids-serial",
             Algorithm::Clarans => "clarans",
             Algorithm::KMeansMR => "kmeans-mr",
@@ -65,6 +71,9 @@ impl Algorithm {
         Some(match s {
             "kmedoids++-mr" | "kmedoids++" => Algorithm::KMedoidsPlusPlusMR,
             "kmedoids-mr" => Algorithm::KMedoidsRandomMR,
+            "kmedoids-scalable-mr" | "kmedoids||-mr" | "kmedoids-scalable" => {
+                Algorithm::KMedoidsScalableMR
+            }
             "kmedoids-serial" => Algorithm::KMedoidsSerial,
             "clarans" => Algorithm::Clarans,
             "kmeans-mr" | "kmeans" => Algorithm::KMeansMR,
@@ -81,6 +90,12 @@ pub struct Experiment {
     pub spec: SpatialSpec,
     pub k: usize,
     pub update: UpdateStrategy,
+    /// Dissimilarity of the fit (the dataset's dims must be supported).
+    pub metric: Metric,
+    /// `(l, rounds)` for the scalable (k-means||-style) seeding; `None`
+    /// uses Bahmani et al.'s defaults (ℓ = 2k, 5 rounds). Only honored
+    /// by [`Algorithm::KMedoidsScalableMR`].
+    pub oversample: Option<(usize, usize)>,
     pub seed: u64,
     /// Run the final labeling pass and quality metrics (slower).
     pub with_quality: bool,
@@ -106,6 +121,8 @@ impl Experiment {
             spec: SpatialSpec::paper_dataset(dataset, seed),
             k: 9,
             update: UpdateStrategy::paper_scale_default(),
+            metric: Metric::SqEuclidean,
+            oversample: None,
             seed,
             with_quality: false,
             fixed_iters: None,
@@ -124,16 +141,22 @@ impl Experiment {
     /// implementations.
     pub fn clusterer(&self) -> Box<dyn SpatialClusterer> {
         match self.algorithm {
-            Algorithm::KMedoidsPlusPlusMR | Algorithm::KMedoidsRandomMR => {
+            Algorithm::KMedoidsPlusPlusMR
+            | Algorithm::KMedoidsRandomMR
+            | Algorithm::KMedoidsScalableMR => {
                 let mut b = KMedoids::mapreduce()
                     .k(self.k)
                     .seed(self.seed)
                     .update(self.update)
+                    .metric(self.metric)
                     .label_pass(self.with_quality);
-                b = if self.algorithm == Algorithm::KMedoidsPlusPlusMR {
-                    b.plus_plus()
-                } else {
-                    b.random_init()
+                b = match self.algorithm {
+                    Algorithm::KMedoidsPlusPlusMR => b.plus_plus(),
+                    Algorithm::KMedoidsRandomMR => b.random_init(),
+                    _ => match self.oversample {
+                        Some((l, rounds)) => b.oversample(l, rounds),
+                        None => b.init(Init::oversample_default(self.k)),
+                    },
                 };
                 if let Some(n) = self.fixed_iters {
                     b = b.fixed_iters(n);
@@ -145,13 +168,21 @@ impl Experiment {
                     .k(self.k)
                     .seed(self.seed)
                     .update(self.update)
+                    .metric(self.metric)
                     .label_pass(self.with_quality)
                     .build(),
             ),
-            Algorithm::Clarans => Box::new(Clarans::serial().k(self.k).seed(self.seed).build()),
-            Algorithm::KMeansMR => {
-                Box::new(KMeans::mapreduce().plus_plus().k(self.k).seed(self.seed).build())
-            }
+            Algorithm::Clarans => Box::new(
+                Clarans::serial().k(self.k).seed(self.seed).metric(self.metric).build(),
+            ),
+            Algorithm::KMeansMR => Box::new(
+                KMeans::mapreduce()
+                    .plus_plus()
+                    .k(self.k)
+                    .seed(self.seed)
+                    .metric(self.metric)
+                    .build(),
+            ),
         }
     }
 }
@@ -205,7 +236,7 @@ pub fn run_cell(
         let points = session.dataset_points(data);
         let labels = match &outcome.labels {
             Some(l) => l.clone(),
-            None => metrics::brute_labels(&points, &outcome.medoids),
+            None => metrics::brute_labels_metric(&points, &outcome.medoids, exp.metric),
         };
         Some(metrics::adjusted_rand_index(&labels, truth))
     } else {
@@ -265,6 +296,8 @@ mod tests {
             fixed_iters: None,
             k: 5,
             update: UpdateStrategy::Sampled { candidates: 64, member_sample: 1024 },
+            metric: Metric::SqEuclidean,
+            oversample: None,
             seed: 71,
             with_quality: true,
             threads: 1,
@@ -305,7 +338,20 @@ mod tests {
         for a in Algorithm::ALL {
             assert_eq!(Algorithm::parse(a.name()), Some(a));
         }
+        assert_eq!(Algorithm::parse("kmedoids||-mr"), Some(Algorithm::KMedoidsScalableMR));
         assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn metric_dims_cell_runs_end_to_end() {
+        // One non-Euclidean, d>2 cell through the full driver path.
+        let mut exp = quick_exp(Algorithm::KMedoidsPlusPlusMR, 4);
+        exp.spec = exp.spec.clone().with_dims(3);
+        exp.metric = Metric::Manhattan;
+        let r = run_experiment(&exp, &be());
+        assert_eq!(r.algorithm, "kmedoids++-mr");
+        assert!(r.time_ms > 0);
+        assert!(r.ari.unwrap() > 0.7, "ari {:?} (3-D Manhattan cell)", r.ari);
     }
 
     #[test]

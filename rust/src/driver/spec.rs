@@ -30,6 +30,7 @@
 use super::{Algorithm, Experiment};
 use crate::clustering::UpdateStrategy;
 use crate::geo::datasets::SpatialSpec;
+use crate::geo::{Metric, MAX_DIMS};
 use crate::util::json::{obj, Json};
 use anyhow::{bail, Context, Result};
 
@@ -131,6 +132,8 @@ pub fn spatial_spec_to_json(s: &SpatialSpec) -> Json {
         ("sigma_frac", Json::Num(s.sigma_frac as f64)),
         ("noise_frac", Json::Num(s.noise_frac as f64)),
         ("outlier_frac", Json::Num(s.outlier_frac as f64)),
+        ("dims", Json::Num(s.dims as f64)),
+        ("latlon", Json::Bool(s.latlon)),
         ("seed", Json::Num(s.seed as f64)),
     ])
 }
@@ -155,7 +158,17 @@ pub fn spatial_spec_from_json(j: &Json, default_seed: u64) -> Result<SpatialSpec
     check_known_keys(
         j,
         "dataset",
-        &["n_points", "n_hotspots", "seed", "extent", "sigma_frac", "noise_frac", "outlier_frac"],
+        &[
+            "n_points",
+            "n_hotspots",
+            "seed",
+            "extent",
+            "sigma_frac",
+            "noise_frac",
+            "outlier_frac",
+            "dims",
+            "latlon",
+        ],
     )?;
     let n_points = as_pos_usize(
         j.get("n_points").context(
@@ -182,6 +195,19 @@ pub fn spatial_spec_from_json(j: &Json, default_seed: u64) -> Result<SpatialSpec
     float_field("sigma_frac", &mut s.sigma_frac, 1e-9, 1.0)?;
     float_field("noise_frac", &mut s.noise_frac, 0.0, 1.0)?;
     float_field("outlier_frac", &mut s.outlier_frac, 0.0, 1.0)?;
+    if let Some(v) = j.get("dims") {
+        let d = as_pos_usize(v, "dataset.dims")?;
+        if !(2..=MAX_DIMS).contains(&d) {
+            bail!("dataset.dims must be in 2..={MAX_DIMS}, got {d}");
+        }
+        s.dims = d;
+    }
+    if let Some(v) = j.get("latlon") {
+        s.latlon = v.as_bool().context("dataset.latlon must be true or false")?;
+    }
+    if s.latlon && s.dims != 2 {
+        bail!("dataset.latlon requires dims = 2 ((lat, lon) pairs)");
+    }
     Ok(s)
 }
 
@@ -191,13 +217,26 @@ pub fn spatial_spec_from_json(j: &Json, default_seed: u64) -> Result<SpatialSpec
 fn algorithm_uses_update(a: Algorithm) -> bool {
     matches!(
         a,
-        Algorithm::KMedoidsPlusPlusMR | Algorithm::KMedoidsRandomMR | Algorithm::KMedoidsSerial
+        Algorithm::KMedoidsPlusPlusMR
+            | Algorithm::KMedoidsRandomMR
+            | Algorithm::KMedoidsScalableMR
+            | Algorithm::KMedoidsSerial
     )
 }
 
 /// Does this algorithm honor `fixed_iters` (controlled iterations)?
 fn algorithm_uses_fixed_iters(a: Algorithm) -> bool {
-    matches!(a, Algorithm::KMedoidsPlusPlusMR | Algorithm::KMedoidsRandomMR)
+    matches!(
+        a,
+        Algorithm::KMedoidsPlusPlusMR
+            | Algorithm::KMedoidsRandomMR
+            | Algorithm::KMedoidsScalableMR
+    )
+}
+
+/// Does this algorithm honor the `oversample` (ℓ, rounds) knob?
+fn algorithm_uses_oversample(a: Algorithm) -> bool {
+    matches!(a, Algorithm::KMedoidsScalableMR)
 }
 
 pub fn experiment_to_json(e: &Experiment) -> Json {
@@ -206,6 +245,7 @@ pub fn experiment_to_json(e: &Experiment) -> Json {
         ("nodes", Json::Num(e.n_nodes as f64)),
         ("k", Json::Num(e.k as f64)),
         ("seed", Json::Num(e.seed as f64)),
+        ("metric", Json::Str(e.metric.name().to_string())),
         ("with_quality", Json::Bool(e.with_quality)),
         ("threads", Json::Num(e.threads as f64)),
         ("dataset", spatial_spec_to_json(&e.spec)),
@@ -224,6 +264,18 @@ pub fn experiment_to_json(e: &Experiment) -> Json {
             },
         ));
     }
+    if algorithm_uses_oversample(e.algorithm) {
+        pairs.push((
+            "oversample",
+            match e.oversample {
+                Some((l, rounds)) => obj(vec![
+                    ("l", Json::Num(l as f64)),
+                    ("rounds", Json::Num(rounds as f64)),
+                ]),
+                None => Json::Null,
+            },
+        ));
+    }
     obj(pairs)
 }
 
@@ -236,9 +288,11 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
             "nodes",
             "k",
             "seed",
+            "metric",
             "with_quality",
             "update",
             "fixed_iters",
+            "oversample",
             "dataset",
             "threads",
         ],
@@ -253,6 +307,21 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         None => 42,
     };
     let spec = spatial_spec_from_json(j.get("dataset").context("dataset block missing")?, seed)?;
+    let metric = match j.get("metric").and_then(|m| m.as_str()) {
+        Some(s) => Metric::parse(s)
+            .with_context(|| format!("unknown metric {s:?} (sq_euclidean|manhattan|haversine)"))?,
+        None => Metric::SqEuclidean,
+    };
+    if !metric.supports_dims(spec.dims) {
+        bail!("metric {:?} does not support dataset.dims = {}", metric.name(), spec.dims);
+    }
+    // Reject rather than silently misread: haversine interprets
+    // coordinates as (lat, lon) degrees, so a planar map-unit dataset
+    // would produce finite but meaningless great-circle costs (the CLI
+    // path force-enables latlon for --metric haversine).
+    if metric == Metric::Haversine && !spec.latlon {
+        bail!("metric \"haversine\" needs (lat, lon) data — set dataset.latlon = true");
+    }
     let update = match j.get("update") {
         Some(u) => {
             // Reject rather than silently ignore: clarans/kmeans-mr run
@@ -280,6 +349,25 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
             Some(as_pos_usize(v, "fixed_iters")?)
         }
     };
+    let oversample = match j.get("oversample") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            if !algorithm_uses_oversample(algorithm) {
+                bail!(
+                    "algorithm {:?} ignores \"oversample\" (only kmedoids-scalable-mr uses \
+                     oversampled seeding) — remove it from the spec cell",
+                    algorithm.name()
+                );
+            }
+            check_known_keys(v, "oversample", &["l", "rounds"])?;
+            let l = as_pos_usize(v.get("l").context("oversample.l missing")?, "oversample.l")?;
+            let rounds = as_pos_usize(
+                v.get("rounds").context("oversample.rounds missing")?,
+                "oversample.rounds",
+            )?;
+            Some((l, rounds))
+        }
+    };
     let n_nodes = match j.get("nodes") {
         Some(v) => as_pos_usize(v, "nodes")?,
         None => 7,
@@ -296,7 +384,19 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         Some(v) => as_pos_usize(v, "threads")?,
         None => 1,
     };
-    Ok(Experiment { algorithm, n_nodes, spec, k, update, seed, with_quality, fixed_iters, threads })
+    Ok(Experiment {
+        algorithm,
+        n_nodes,
+        spec,
+        k,
+        update,
+        metric,
+        oversample,
+        seed,
+        with_quality,
+        fixed_iters,
+        threads,
+    })
 }
 
 /// Serialize a grid of cells (array form).
@@ -349,8 +449,17 @@ mod tests {
                 e.k = 3 + i;
                 e.with_quality = i % 2 == 0;
                 e.threads = 1 + (i % 3);
+                e.metric = if i % 2 == 0 { Metric::SqEuclidean } else { Metric::Manhattan };
+                if i % 3 == 0 {
+                    e.spec.dims = 3;
+                }
                 e.fixed_iters = if algorithm_uses_fixed_iters(algorithm) && i % 2 == 1 {
                     Some(6)
+                } else {
+                    None
+                };
+                e.oversample = if algorithm_uses_oversample(algorithm) {
+                    Some((16, 4))
                 } else {
                     None
                 };
@@ -482,6 +591,88 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{e:#}").contains("candidates"), "{e:#}");
+    }
+
+    #[test]
+    fn metric_and_dims_fields_parse_and_validate() {
+        let cells = experiments_from_str(
+            r#"{"metric": "manhattan", "dataset": {"n_points": 500, "dims": 3}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].metric, Metric::Manhattan);
+        assert_eq!(cells[0].spec.dims, 3);
+
+        let cells = experiments_from_str(
+            r#"{"metric": "haversine", "dataset": {"n_points": 500, "latlon": true}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].metric, Metric::Haversine);
+        assert!(cells[0].spec.latlon);
+
+        // haversine + d>2 is refused at parse time.
+        let e = experiments_from_str(
+            r#"{"metric": "haversine", "dataset": {"n_points": 500, "dims": 3}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("haversine"), "{e:#}");
+
+        // haversine over a planar (non-latlon) dataset is refused too:
+        // it would silently misread map units as degrees.
+        let e = experiments_from_str(
+            r#"{"metric": "haversine", "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("latlon"), "{e:#}");
+
+        // latlon requires dims 2; dims must be in range; unknown metrics error.
+        let e = experiments_from_str(
+            r#"{"dataset": {"n_points": 500, "dims": 4, "latlon": true}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("latlon"), "{e:#}");
+        let e = experiments_from_str(r#"{"dataset": {"n_points": 500, "dims": 99}}"#)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("dims"), "{e:#}");
+        let e = experiments_from_str(
+            r#"{"metric": "cosine", "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("cosine"), "{e:#}");
+    }
+
+    #[test]
+    fn oversample_knob_parses_for_scalable_only() {
+        let cells = experiments_from_str(
+            r#"{"algorithm": "kmedoids-scalable-mr",
+                "oversample": {"l": 12, "rounds": 3},
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].algorithm, Algorithm::KMedoidsScalableMR);
+        assert_eq!(cells[0].oversample, Some((12, 3)));
+
+        // Default (absent) oversample: engine falls back to ℓ=2k, 5 rounds.
+        let cells = experiments_from_str(
+            r#"{"algorithm": "kmedoids||-mr", "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].oversample, None);
+
+        // Other algorithms refuse the knob.
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids++-mr", "oversample": {"l": 8, "rounds": 2},
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("oversample"), "{e:#}");
+
+        // Malformed oversample blocks error with the bad key.
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids-scalable-mr", "oversample": {"l": 8},
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("rounds"), "{e:#}");
     }
 
     #[test]

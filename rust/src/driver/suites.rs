@@ -17,7 +17,7 @@ use crate::clustering::observe::StderrProgress;
 use crate::clustering::{Init, UpdateStrategy};
 use crate::config::ClusterConfig;
 use crate::geo::datasets::{generate, SpatialSpec};
-use crate::geo::Point;
+use crate::geo::{Metric, Point};
 use crate::runtime::{assign_points, pairwise_costs, ComputeBackend};
 use crate::session::{ClusterSession, DatasetHandle};
 use crate::util::bench::{bench, header, BenchOpts};
@@ -247,16 +247,36 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
     let kdata = generate(&SpatialSpec::new(kn, 9, opts.seed));
     let medoids: Vec<Point> = kdata.points[..9].to_vec();
     let assign_stats = bench(&format!("assign {kn} pts x 9 medoids"), &bench_opts, || {
-        assign_points(backend.as_ref(), &kdata.points, &medoids).unwrap().labels.len()
+        assign_points(backend.as_ref(), &kdata.points, &medoids, Metric::SqEuclidean)
+            .unwrap()
+            .labels
+            .len()
     });
     let pm = if opts.smoke { 4_096 } else { 1 << 14 };
     let cands: Vec<Point> = kdata.points[..256.min(kn)].to_vec();
     let pair_stats = bench(&format!("pairwise {} cands x {pm} members", cands.len()), &bench_opts, || {
-        pairwise_costs(backend.as_ref(), &cands, &kdata.points[..pm]).unwrap().len()
+        pairwise_costs(backend.as_ref(), &cands, &kdata.points[..pm], Metric::SqEuclidean)
+            .unwrap()
+            .len()
     });
+    // One non-Euclidean, d>2 cell so the artifact tracks the generic
+    // kernel path alongside the 2-D squared-Euclidean fast path.
+    let gdata = generate(&SpatialSpec::new(kn, 9, opts.seed ^ 0xD3).with_dims(3));
+    let gmedoids: Vec<Point> = gdata.points[..9].to_vec();
+    let generic_stats = bench(
+        &format!("assign {kn} pts x 9 medoids [d=3 manhattan]"),
+        &bench_opts,
+        || {
+            assign_points(backend.as_ref(), &gdata.points, &gmedoids, Metric::Manhattan)
+                .unwrap()
+                .labels
+                .len()
+        },
+    );
     let kernels = Json::Arr(vec![
         kernel_json(&assign_stats, (kn * 9) as f64),
         kernel_json(&pair_stats, (cands.len() * pm) as f64),
+        kernel_json(&generic_stats, (kn * 9) as f64),
     ]);
 
     // ---- e2e thread sweep ------------------------------------------------
@@ -416,7 +436,7 @@ mod tests {
         assert_eq!(j.get("identical_outputs").unwrap().as_bool(), Some(true));
         let s1 = j.get("speedup_vs_1_thread").unwrap().get("1").unwrap().as_f64().unwrap();
         assert!((s1 - 1.0).abs() < 1e-9);
-        assert_eq!(j.get("kernels").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("kernels").unwrap().as_arr().unwrap().len(), 3);
         // The document is valid, re-parseable JSON.
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }

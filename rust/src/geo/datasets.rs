@@ -6,8 +6,20 @@
 //! clusterable structure: Gaussian "hotspots" (cities) of varying density
 //! + uniform background noise + far outliers (the outliers are the whole
 //! point of K-Medoids over K-Means, §1–2 of the paper).
+//!
+//! Three generator families share one [`SpatialSpec`]:
+//!
+//! - **Planar 2-D** (`dims == 2`, the default): the paper's workload.
+//!   This path reproduces the historical RNG draw sequence exactly, so
+//!   2-D datasets are byte-identical across releases.
+//! - **d-dim Gaussian mixtures** (`dims > 2`): hotspot centers in the
+//!   d-cube, isotropic Gaussian clouds, uniform noise, and radial far
+//!   outliers — the feature-vector workload for the metric-generic core.
+//! - **Lat/lon GIS clouds** (`latlon == true`, `dims == 2`): city-like
+//!   clusters on the sphere, coordinates in `(lat, lon)` degrees, built
+//!   for [`crate::geo::Metric::Haversine`] runs.
 
-use super::Point;
+use super::{Metric, Point};
 use crate::util::rng::Rng;
 
 /// Paper Table 5 cardinalities.
@@ -30,14 +42,21 @@ pub struct SpatialSpec {
     pub n_points: usize,
     /// Number of Gaussian hotspots (true clusters).
     pub n_hotspots: usize,
-    /// Coordinate domain half-width (map units).
+    /// Coordinate domain half-width (map units; planar/d-dim families).
     pub extent: f32,
-    /// Hotspot standard deviation as a fraction of the extent.
+    /// Hotspot standard deviation as a fraction of the extent (for the
+    /// lat/lon family: as a fraction of 90°).
     pub sigma_frac: f32,
     /// Fraction of points drawn uniformly over the domain (background).
     pub noise_frac: f32,
-    /// Fraction of extreme outliers (far outside the domain).
+    /// Fraction of extreme outliers (far outside the domain; for the
+    /// lat/lon family these are globally-uniform mislocated points).
     pub outlier_frac: f32,
+    /// Point dimensionality (2 = the paper's planar GIS case).
+    pub dims: usize,
+    /// Generate city-like `(lat, lon)` degree clouds on the sphere
+    /// (requires `dims == 2`); built for haversine runs.
+    pub latlon: bool,
     pub seed: u64,
 }
 
@@ -50,8 +69,25 @@ impl SpatialSpec {
             sigma_frac: 0.03,
             noise_frac: 0.05,
             outlier_frac: 0.002,
+            dims: 2,
+            latlon: false,
             seed,
         }
+    }
+
+    /// Same spec at dimensionality `dims` (a d-dim Gaussian mixture).
+    pub fn with_dims(mut self, dims: usize) -> SpatialSpec {
+        self.dims = dims;
+        self
+    }
+
+    /// A lat/lon GIS cloud spec: `n_cities` clusters on the sphere,
+    /// coordinates in `(lat, lon)` degrees — pair with
+    /// [`Metric::Haversine`].
+    pub fn latlon(n_points: usize, n_cities: usize, seed: u64) -> SpatialSpec {
+        let mut s = SpatialSpec::new(n_points, n_cities, seed);
+        s.latlon = true;
+        s
     }
 
     /// The paper's dataset `i` (0..3) with k=9 hotspots (the paper does
@@ -74,11 +110,36 @@ pub struct SpatialDataset {
     /// Ground-truth hotspot id per point; `None` for noise/outliers.
     pub truth: Vec<Option<u32>>,
     pub centers: Vec<Point>,
+    /// Whether the coordinates are `(lat, lon)` degree pairs (the
+    /// generator knows; carried so ingest keeps the provenance for the
+    /// haversine misuse guard).
+    pub latlon: bool,
 }
 
-/// Generate a dataset from a spec. Deterministic in the seed.
+/// Generate a dataset from a spec. Deterministic in the seed; the 2-D
+/// planar family reproduces the historical draw sequence exactly.
 pub fn generate(spec: &SpatialSpec) -> SpatialDataset {
     assert!(spec.n_hotspots > 0);
+    assert!(
+        spec.dims >= 2 && spec.dims <= super::MAX_DIMS,
+        "dims must be in 2..={}, got {}",
+        super::MAX_DIMS,
+        spec.dims
+    );
+    if spec.latlon {
+        assert!(spec.dims == 2, "lat/lon clouds are (lat, lon) pairs: dims must be 2");
+        return generate_latlon(spec);
+    }
+    if spec.dims == 2 {
+        generate_planar_2d(spec)
+    } else {
+        generate_ndim(spec)
+    }
+}
+
+/// The historical planar 2-D generator, draw-for-draw identical to the
+/// pre-metric-generic releases (2-D datasets are byte-stable in the seed).
+fn generate_planar_2d(spec: &SpatialSpec) -> SpatialDataset {
     let mut rng = Rng::new(spec.seed);
     let e = spec.extent as f64;
     let sigma = (spec.extent * spec.sigma_frac) as f64;
@@ -119,13 +180,121 @@ pub fn generate(spec: &SpatialSpec) -> SpatialDataset {
             let h = rng.weighted(&weights);
             let c = centers[h];
             points.push(Point::new(
-                (c.x as f64 + rng.normal() * sigma) as f32,
-                (c.y as f64 + rng.normal() * sigma) as f32,
+                (c.x() as f64 + rng.normal() * sigma) as f32,
+                (c.y() as f64 + rng.normal() * sigma) as f32,
             ));
             truth.push(Some(h as u32));
         }
     }
-    SpatialDataset { points, truth, centers }
+    SpatialDataset { points, truth, centers, latlon: spec.latlon }
+}
+
+/// d-dimensional Gaussian mixture (dims > 2): same structure as the
+/// planar family — hotspot clouds + cube noise + radial far outliers.
+fn generate_ndim(spec: &SpatialSpec) -> SpatialDataset {
+    let d = spec.dims;
+    let mut rng = Rng::new(spec.seed);
+    let e = spec.extent as f64;
+    let sigma = (spec.extent * spec.sigma_frac) as f64;
+
+    let mut centers: Vec<Point> = Vec::with_capacity(spec.n_hotspots);
+    let min_sep = 8.0 * sigma;
+    let mut guard = 0;
+    let mut coords = vec![0f32; d];
+    while centers.len() < spec.n_hotspots {
+        for slot in coords.iter_mut() {
+            *slot = rng.range_f64(-e, e) as f32;
+        }
+        let c = Point::from_slice(&coords);
+        if centers.iter().all(|o| o.dist2(&c).sqrt() > min_sep) || guard > 10_000 {
+            centers.push(c);
+        }
+        guard += 1;
+    }
+
+    let weights: Vec<f64> = (0..spec.n_hotspots).map(|_| 0.3 + rng.f64()).collect();
+
+    let mut points = Vec::with_capacity(spec.n_points);
+    let mut truth = Vec::with_capacity(spec.n_points);
+    for _ in 0..spec.n_points {
+        let u = rng.f64();
+        if u < spec.outlier_frac as f64 {
+            // Radial far outlier: random direction, 1.5–3 extents out.
+            let r = e * rng.range_f64(1.5, 3.0);
+            let dir: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let norm = dir.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+            for (slot, v) in coords.iter_mut().zip(&dir) {
+                *slot = (r * v / norm) as f32;
+            }
+            points.push(Point::from_slice(&coords));
+            truth.push(None);
+        } else if u < (spec.outlier_frac + spec.noise_frac) as f64 {
+            for slot in coords.iter_mut() {
+                *slot = rng.range_f64(-e, e) as f32;
+            }
+            points.push(Point::from_slice(&coords));
+            truth.push(None);
+        } else {
+            let h = rng.weighted(&weights);
+            let c = centers[h];
+            for (i, slot) in coords.iter_mut().enumerate() {
+                *slot = (c.coord(i) as f64 + rng.normal() * sigma) as f32;
+            }
+            points.push(Point::from_slice(&coords));
+            truth.push(Some(h as u32));
+        }
+    }
+    SpatialDataset { points, truth, centers, latlon: spec.latlon }
+}
+
+/// City-like clusters on the sphere: `(lat, lon)` degree pairs, built
+/// for [`Metric::Haversine`] runs. Cluster spread is `sigma_frac · 90°`
+/// of latitude (longitude widened by `1 / cos(lat)` so clouds are
+/// roughly isotropic on the ground).
+fn generate_latlon(spec: &SpatialSpec) -> SpatialDataset {
+    let mut rng = Rng::new(spec.seed);
+    let sigma_deg = (90.0 * spec.sigma_frac) as f64;
+    // Degrees → km at the equator; separation is measured properly via
+    // haversine so polar longitude compression cannot merge cities.
+    let min_sep_km = 8.0 * sigma_deg * 111.2;
+
+    let mut centers: Vec<Point> = Vec::with_capacity(spec.n_hotspots);
+    let mut guard = 0;
+    while centers.len() < spec.n_hotspots {
+        let c = Point::new(rng.range_f64(-60.0, 60.0) as f32, rng.range_f64(-175.0, 175.0) as f32);
+        if centers.iter().all(|o| Metric::Haversine.distance(o, &c) > min_sep_km) || guard > 10_000
+        {
+            centers.push(c);
+        }
+        guard += 1;
+    }
+
+    let weights: Vec<f64> = (0..spec.n_hotspots).map(|_| 0.3 + rng.f64()).collect();
+
+    let mut points = Vec::with_capacity(spec.n_points);
+    let mut truth = Vec::with_capacity(spec.n_points);
+    for _ in 0..spec.n_points {
+        let u = rng.f64();
+        if u < (spec.outlier_frac + spec.noise_frac) as f64 {
+            // Background + mislocated points: uniform over the globe.
+            points.push(Point::new(
+                rng.range_f64(-85.0, 85.0) as f32,
+                rng.range_f64(-180.0, 180.0) as f32,
+            ));
+            truth.push(None);
+        } else {
+            let h = rng.weighted(&weights);
+            let c = centers[h];
+            let lat = (c.x() as f64 + rng.normal() * sigma_deg).clamp(-89.9, 89.9);
+            let lon_spread = sigma_deg / (c.x() as f64).to_radians().cos().max(0.2);
+            let mut lon = c.y() as f64 + rng.normal() * lon_spread;
+            // Wrap into [-180, 180).
+            lon = (lon + 180.0).rem_euclid(360.0) - 180.0;
+            points.push(Point::new(lat as f32, lon as f32));
+            truth.push(Some(h as u32));
+        }
+    }
+    SpatialDataset { points, truth, centers, latlon: spec.latlon }
 }
 
 #[cfg(test)]
@@ -213,5 +382,85 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn ndim_mixture_has_dims_and_structure() {
+        for dims in [3usize, 5, 8] {
+            let s = SpatialSpec::new(8000, 4, 17).with_dims(dims);
+            let d = generate(&s);
+            assert_eq!(d.points.len(), 8000);
+            assert!(d.points.iter().all(|p| p.dims() == dims));
+            assert!(d.centers.iter().all(|c| c.dims() == dims));
+            // Hotspot members stay near their center (isotropic Gaussian:
+            // the radius concentrates around sigma·sqrt(d)).
+            let sigma = (s.extent * s.sigma_frac) as f64;
+            let bound = (6.0 + 2.0 * (dims as f64).sqrt()) * sigma;
+            for (p, t) in d.points.iter().zip(&d.truth) {
+                if let Some(h) = t {
+                    let dist = p.dist2(&d.centers[*h as usize]).sqrt();
+                    assert!(dist < bound, "dist {dist} bound {bound} (d={dims})");
+                }
+            }
+            // Deterministic in the seed.
+            assert_eq!(generate(&s).points, d.points);
+        }
+    }
+
+    #[test]
+    fn latlon_clouds_are_valid_coordinates() {
+        let s = SpatialSpec::latlon(10_000, 5, 23);
+        let d = generate(&s);
+        assert_eq!(d.points.len(), 10_000);
+        for p in &d.points {
+            assert!((-90.0..=90.0).contains(&p.x()), "lat {}", p.x());
+            assert!((-180.0..=180.0).contains(&p.y()), "lon {}", p.y());
+        }
+        // City members are within a few hundred km of their city.
+        let sigma_km = 90.0 * s.sigma_frac as f64 * 111.2;
+        for (p, t) in d.points.iter().zip(&d.truth) {
+            if let Some(h) = t {
+                let dist = Metric::Haversine.distance(p, &d.centers[*h as usize]);
+                assert!(dist < 8.0 * sigma_km, "{dist} km from city (σ {sigma_km} km)");
+            }
+        }
+        // Cities resolvable under haversine.
+        for i in 0..d.centers.len() {
+            for j in 0..i {
+                assert!(Metric::Haversine.distance(&d.centers[i], &d.centers[j]) > 4.0 * sigma_km);
+            }
+        }
+        assert_eq!(generate(&s).points, d.points, "deterministic in seed");
+    }
+
+    #[test]
+    fn two_d_path_is_draw_stable() {
+        // The 2-D planar family must keep its historical draw sequence:
+        // replicate the exact draw order inline (one center, one weight,
+        // then per point: branch draw + the outlier's r/θ pair) and
+        // assert the generator matches. Routing 2-D through the generic
+        // d-dim path — whose outliers consume direction *normals* instead
+        // of a single θ — would change the stream and fail here loudly
+        // instead of silently altering every historical 2-D dataset.
+        let mut spec = SpatialSpec::new(3, 1, 7);
+        spec.outlier_frac = 1.0; // every point takes the outlier branch
+        spec.noise_frac = 0.0;
+        let d = generate(&spec);
+
+        let mut rng = Rng::new(7);
+        let e = spec.extent as f64;
+        // Center draw (first candidate is always accepted) + its weight.
+        let _cx = rng.range_f64(-e, e);
+        let _cy = rng.range_f64(-e, e);
+        let _w = 0.3 + rng.f64();
+        let want: Vec<Point> = (0..3)
+            .map(|_| {
+                let _u = rng.f64(); // branch selector (< outlier_frac)
+                let r = e * rng.range_f64(1.5, 3.0);
+                let th = rng.range_f64(0.0, std::f64::consts::TAU);
+                Point::new((r * th.cos()) as f32, (r * th.sin()) as f32)
+            })
+            .collect();
+        assert_eq!(d.points, want, "2-D draw sequence must stay byte-stable");
     }
 }

@@ -1,18 +1,27 @@
 //! CSV import/export for spatial points (the interchange format the
-//! paper's HDFS ingest would use: one `x,y` coordinate row per line).
+//! paper's HDFS ingest would use: one coordinate row per line —
+//! `x,y` for the planar GIS case, `c0,c1,...,cd-1` for d-dim data).
 
-use super::Point;
+use super::{Point, MAX_DIMS};
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-/// Write points as `x,y` lines. Returns bytes written.
+/// Write points as comma-separated coordinate lines. Returns bytes written.
 pub fn write_csv(path: &Path, points: &[Point]) -> Result<u64> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
     let mut bytes = 0u64;
+    let mut line = String::new();
     for p in points {
-        let line = format!("{},{}\n", p.x, p.y);
+        line.clear();
+        for (i, c) in p.coords().iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&c.to_string());
+        }
+        line.push('\n');
         bytes += line.len() as u64;
         w.write_all(line.as_bytes())?;
     }
@@ -20,30 +29,49 @@ pub fn write_csv(path: &Path, points: &[Point]) -> Result<u64> {
     Ok(bytes)
 }
 
-/// Read `x,y` lines; blank lines and `#` comments are skipped.
+/// Read coordinate lines; blank lines and `#` comments are skipped.
+/// All rows must share one dimensionality.
 pub fn read_csv(path: &Path) -> Result<Vec<Point>> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let r = std::io::BufReader::new(f);
-    let mut out = Vec::new();
+    let mut out: Vec<Point> = Vec::new();
     for (i, line) in r.lines().enumerate() {
         let line = line?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') {
             continue;
         }
-        out.push(parse_line(t).with_context(|| format!("{path:?}:{}", i + 1))?);
+        let p = parse_line(t).with_context(|| format!("{path:?}:{}", i + 1))?;
+        if let Some(first) = out.first() {
+            if first.dims() != p.dims() {
+                bail!(
+                    "{path:?}:{}: row has {} coordinates but earlier rows have {}",
+                    i + 1,
+                    p.dims(),
+                    first.dims()
+                );
+            }
+        }
+        out.push(p);
     }
     Ok(out)
 }
 
+/// Parse one coordinate row: 2 to [`MAX_DIMS`] comma/tab/space-separated
+/// floats.
 pub fn parse_line(t: &str) -> Result<Point> {
-    let mut it = t.split(&[',', '\t', ' '][..]).filter(|s| !s.is_empty());
-    let (Some(xs), Some(ys)) = (it.next(), it.next()) else {
-        bail!("expected 'x,y', got {t:?}");
-    };
-    let x: f32 = xs.trim().parse().with_context(|| format!("bad x {xs:?}"))?;
-    let y: f32 = ys.trim().parse().with_context(|| format!("bad y {ys:?}"))?;
-    Ok(Point::new(x, y))
+    let mut coords: Vec<f32> = Vec::with_capacity(2);
+    for s in t.split(&[',', '\t', ' '][..]).filter(|s| !s.is_empty()) {
+        if coords.len() == MAX_DIMS {
+            bail!("more than {MAX_DIMS} coordinates in {t:?}");
+        }
+        let v: f32 = s.trim().parse().with_context(|| format!("bad coordinate {s:?}"))?;
+        coords.push(v);
+    }
+    if coords.len() < 2 {
+        bail!("expected at least 'x,y', got {t:?}");
+    }
+    Ok(Point::from_slice(&coords))
 }
 
 #[cfg(test)]
@@ -63,11 +91,40 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_ndim() {
+        let dir = std::env::temp_dir().join("kmr_io_test_nd");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pts3.csv");
+        let pts = vec![
+            Point::from_slice(&[1.0, 2.0, 3.0]),
+            Point::from_slice(&[-4.5, 5.25, 6.0]),
+        ];
+        write_csv(&path, &pts).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back, pts);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mixed_dims_rejected() {
+        let dir = std::env::temp_dir().join("kmr_io_test_mixed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mixed.csv");
+        std::fs::write(&path, "1,2\n1,2,3\n").unwrap();
+        let e = read_csv(&path).unwrap_err();
+        assert!(format!("{e:#}").contains("coordinates"), "{e:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn parse_variants() {
         assert_eq!(parse_line("1,2").unwrap(), Point::new(1.0, 2.0));
         assert_eq!(parse_line("1.5\t-2").unwrap(), Point::new(1.5, -2.0));
         assert_eq!(parse_line("3 4").unwrap(), Point::new(3.0, 4.0));
+        assert_eq!(parse_line("1,2,3,4").unwrap(), Point::from_slice(&[1.0, 2.0, 3.0, 4.0]));
         assert!(parse_line("nope").is_err());
         assert!(parse_line("1,abc").is_err());
+        assert!(parse_line("1").is_err(), "single coordinate rejected");
+        assert!(parse_line("1,2,3,4,5,6,7,8,9").is_err(), "more than MAX_DIMS rejected");
     }
 }

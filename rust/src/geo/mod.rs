@@ -1,49 +1,303 @@
 //! Spatial primitives, synthetic dataset generation, and CSV I/O.
+//!
+//! ## Points, dimensions, metrics
+//!
+//! [`Point`] is a small-vector of up to [`MAX_DIMS`] `f32` coordinates
+//! stored inline (no heap indirection), so a point stays `Copy` and the
+//! paper's 2-D GIS workload keeps its dense, allocation-free layout.
+//! 2-D construction goes through [`Point::new`]; higher-dimensional
+//! points through [`Point::from_slice`].
+//!
+//! [`Metric`] is the pluggable dissimilarity every layer dispatches on:
+//! squared Euclidean (the paper's Eq. 1 cost term), Manhattan, and
+//! haversine great-circle distance over `(lat, lon)` degree pairs. The
+//! kernel layer ([`crate::runtime`]) keeps a precomputed-norm SoA fast
+//! path for the 2-D squared-Euclidean case and routes every other
+//! `(dims, metric)` combination through a generic unrolled path, so the
+//! paper's workload does not regress while general-metric K-Medoids
+//! (Mazzetto et al.; Bahmani et al.) becomes expressible.
 
 pub mod datasets;
 pub mod io;
 
-/// A 2-D spatial point (the paper clusters two-dimensional GIS points).
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
+/// Maximum inline dimensionality of a [`Point`].
+pub const MAX_DIMS: usize = 8;
+
+/// A spatial point: up to [`MAX_DIMS`] coordinates stored inline.
+///
+/// The paper clusters two-dimensional GIS points; [`Point::new`] builds
+/// that fast common case. Trailing unused slots are always zero so the
+/// derived `PartialEq` compares logical coordinates only.
+///
+/// Deliberate trade-off: the inline array makes every `Point` 36 bytes
+/// regardless of `dims` (vs 8 for the old `{x, y}` struct), buying
+/// `Copy`, heap-free N-dim points, and zero API churn per dimension.
+/// The kernel hot loops are unaffected (they run on staged flat `f32`
+/// slabs, and the `PackedPoints` shuffle views stay `dims · 4` bytes
+/// per point on the wire); the cost lands on `Vec<Point>` residency and
+/// sequential staging scans, which `bench perf` tracks.
+#[derive(Clone, Copy, PartialEq)]
 pub struct Point {
-    pub x: f32,
-    pub y: f32,
+    dims: u8,
+    c: [f32; MAX_DIMS],
 }
 
 impl Point {
+    /// 2-D constructor (the paper's GIS case).
     pub fn new(x: f32, y: f32) -> Point {
-        Point { x, y }
+        let mut c = [0f32; MAX_DIMS];
+        c[0] = x;
+        c[1] = y;
+        Point { dims: 2, c }
     }
 
-    /// Squared Euclidean distance (the paper's Eq. 1 cost term).
+    /// N-D constructor from a coordinate slice (1 ..= [`MAX_DIMS`] dims).
+    pub fn from_slice(coords: &[f32]) -> Point {
+        assert!(
+            !coords.is_empty() && coords.len() <= MAX_DIMS,
+            "point dims must be in 1..={MAX_DIMS}, got {}",
+            coords.len()
+        );
+        let mut c = [0f32; MAX_DIMS];
+        c[..coords.len()].copy_from_slice(coords);
+        Point { dims: coords.len() as u8, c }
+    }
+
+    /// Origin of the given dimensionality.
+    pub fn zero(dims: usize) -> Point {
+        assert!((1..=MAX_DIMS).contains(&dims));
+        Point { dims: dims as u8, c: [0f32; MAX_DIMS] }
+    }
+
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.dims as usize
+    }
+
+    /// The logical coordinates (`dims()` values).
+    #[inline]
+    pub fn coords(&self) -> &[f32] {
+        &self.c[..self.dims as usize]
+    }
+
+    /// Coordinate `i` (`i < dims()`).
+    #[inline]
+    pub fn coord(&self, i: usize) -> f32 {
+        self.c[i]
+    }
+
+    /// First coordinate (x, or latitude for lat/lon points).
+    #[inline]
+    pub fn x(&self) -> f32 {
+        self.c[0]
+    }
+
+    /// Second coordinate (y, or longitude for lat/lon points).
+    #[inline]
+    pub fn y(&self) -> f32 {
+        self.c[1]
+    }
+
+    /// Squared Euclidean distance (the paper's Eq. 1 cost term). The 2-D
+    /// case keeps the exact historical expression (and therefore exact
+    /// historical rounding); higher dims accumulate per-coordinate in
+    /// fixed order, so results are deterministic everywhere.
     #[inline]
     pub fn dist2(&self, other: &Point) -> f64 {
-        let dx = (self.x - other.x) as f64;
-        let dy = (self.y - other.y) as f64;
-        dx * dx + dy * dy
+        debug_assert_eq!(self.dims, other.dims, "dims mismatch in dist2");
+        if self.dims == 2 {
+            let dx = (self.c[0] - other.c[0]) as f64;
+            let dy = (self.c[1] - other.c[1]) as f64;
+            return dx * dx + dy * dy;
+        }
+        let mut acc = 0f64;
+        for i in 0..self.dims as usize {
+            let d = (self.c[i] - other.c[i]) as f64;
+            acc += d * d;
+        }
+        acc
     }
 }
 
-/// A readable sequence of 2-D points, abstracting over the storage
-/// layout: an owned/borrowed `[Point]` slice, or zero-copy `&[f32]`
-/// views over MapReduce shuffle bytes
-/// ([`crate::util::codec::PackedPoints`]). The kernel block-packing ops
-/// ([`crate::runtime::ops`]) and the medoid-update step consume this
-/// trait so the reduce side never has to materialize a `Vec<Point>`.
+impl Default for Point {
+    /// 2-D origin (the historical `Point::default()`).
+    fn default() -> Point {
+        Point::new(0.0, 0.0)
+    }
+}
+
+impl std::fmt::Debug for Point {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Point(")?;
+        for (i, v) in self.coords().iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// Mean Earth radius in kilometers (IUGG R1), used by [`Metric::Haversine`].
+pub const EARTH_RADIUS_KM: f64 = 6371.0088;
+
+/// Pluggable point-to-point dissimilarity, dispatched through every
+/// layer: kernels ([`crate::runtime`]), MapReduce mappers/reducers, and
+/// all five solvers.
+///
+/// | Metric | Coordinates | Value |
+/// |---|---|---|
+/// | `SqEuclidean` | any dims | squared L2 (paper Eq. 1; *not* a metric — no triangle inequality) |
+/// | `Manhattan` | any dims | L1 distance (a true metric) |
+/// | `Haversine` | `(lat, lon)` degrees, dims = 2 | great-circle distance in km (a true metric) |
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Metric {
+    /// Squared Euclidean — the paper's cost term; kernels keep the
+    /// precomputed-norm fast path for the 2-D case.
+    #[default]
+    SqEuclidean,
+    /// L1 / city-block distance.
+    Manhattan,
+    /// Great-circle distance over `(lat, lon)` degree pairs, in
+    /// kilometers. Requires `dims == 2`.
+    Haversine,
+}
+
+impl Metric {
+    pub const ALL: [Metric; 3] = [Metric::SqEuclidean, Metric::Manhattan, Metric::Haversine];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::SqEuclidean => "sq_euclidean",
+            Metric::Manhattan => "manhattan",
+            Metric::Haversine => "haversine",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s {
+            "sq_euclidean" | "sqeuclidean" | "euclidean" | "l2sq" => Some(Metric::SqEuclidean),
+            "manhattan" | "l1" | "cityblock" => Some(Metric::Manhattan),
+            "haversine" | "greatcircle" => Some(Metric::Haversine),
+            _ => None,
+        }
+    }
+
+    /// Does this metric accept `dims`-dimensional points?
+    pub fn supports_dims(&self, dims: usize) -> bool {
+        match self {
+            Metric::Haversine => dims == 2,
+            _ => (1..=MAX_DIMS).contains(&dims),
+        }
+    }
+
+    /// True when the arithmetic mean minimizes the within-cluster cost —
+    /// i.e. when the k-means mean-update is valid. Only squared Euclidean
+    /// qualifies; for every other metric k-means must fall back to a
+    /// medoid update.
+    pub fn mean_is_minimizer(&self) -> bool {
+        matches!(self, Metric::SqEuclidean)
+    }
+
+    /// Dissimilarity in `f64` — the serial/oracle path. For
+    /// `SqEuclidean` this is exactly [`Point::dist2`] (same rounding).
+    pub fn distance(&self, a: &Point, b: &Point) -> f64 {
+        match self {
+            Metric::SqEuclidean => a.dist2(b),
+            Metric::Manhattan => {
+                debug_assert_eq!(a.dims(), b.dims());
+                let mut acc = 0f64;
+                for i in 0..a.dims() {
+                    acc += ((a.coord(i) - b.coord(i)) as f64).abs();
+                }
+                acc
+            }
+            Metric::Haversine => haversine_f64(
+                a.coord(0) as f64,
+                a.coord(1) as f64,
+                b.coord(0) as f64,
+                b.coord(1) as f64,
+            ),
+        }
+    }
+
+    /// Dissimilarity in `f32` over raw coordinate slices — the kernel
+    /// form used by the generic block paths in [`crate::runtime`].
+    /// Deterministic fixed-order accumulation; never NaN for finite
+    /// inputs (the haversine argument is clamped to `[0, 1]`).
+    #[inline]
+    pub fn distance_f32(&self, dims: usize, a: &[f32], b: &[f32]) -> f32 {
+        match self {
+            Metric::SqEuclidean => {
+                let mut acc = 0f32;
+                for i in 0..dims {
+                    let d = a[i] - b[i];
+                    acc += d * d;
+                }
+                acc
+            }
+            Metric::Manhattan => {
+                let mut acc = 0f32;
+                for i in 0..dims {
+                    acc += (a[i] - b[i]).abs();
+                }
+                acc
+            }
+            Metric::Haversine => {
+                haversine_f64(a[0] as f64, a[1] as f64, b[0] as f64, b[1] as f64) as f32
+            }
+        }
+    }
+
+    /// How far a medoid "moved" between iterations, for observer
+    /// telemetry: the metric's own distance, except squared Euclidean
+    /// reports the (historical) plain Euclidean displacement.
+    pub fn displacement(&self, a: &Point, b: &Point) -> f64 {
+        match self {
+            Metric::SqEuclidean => a.dist2(b).sqrt(),
+            _ => self.distance(a, b),
+        }
+    }
+}
+
+/// Great-circle distance between `(lat1, lon1)` and `(lat2, lon2)` in
+/// degrees, in kilometers. The half-angle argument is clamped to `[0, 1]`
+/// so padded/garbage coordinates can never produce NaN.
+fn haversine_f64(lat1: f64, lon1: f64, lat2: f64, lon2: f64) -> f64 {
+    let p1 = lat1.to_radians();
+    let p2 = lat2.to_radians();
+    let dp = (lat2 - lat1).to_radians();
+    let dl = (lon2 - lon1).to_radians();
+    let sp = (dp / 2.0).sin();
+    let sl = (dl / 2.0).sin();
+    let h = (sp * sp + p1.cos() * p2.cos() * sl * sl).clamp(0.0, 1.0);
+    2.0 * EARTH_RADIUS_KM * h.sqrt().asin()
+}
+
+/// A readable sequence of points, abstracting over the storage layout:
+/// an owned/borrowed `[Point]` slice, or zero-copy `&[f32]` views over
+/// MapReduce shuffle bytes ([`crate::util::codec::PackedPoints`]). The
+/// kernel block-packing ops ([`crate::runtime::ops`]) and the
+/// medoid-update step consume this trait so the reduce side never has to
+/// materialize a `Vec<Point>`.
 pub trait PointSource {
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// Dimensionality of the stored points (0 for an empty source).
+    fn dims(&self) -> usize;
     /// Point at index `i` (`i < len()`).
     fn get(&self, i: usize) -> Point;
-    /// Write points `start..start + n` as interleaved `x, y` f32 pairs
-    /// into `dst[..2 * n]`. Implementations may override with bulk copies.
+    /// Write points `start..start + n` as interleaved coordinate runs
+    /// (`dims()` f32s per point) into `dst[..dims() * n]`.
+    /// Implementations may override with bulk copies.
     fn fill_coords(&self, start: usize, n: usize, dst: &mut [f32]) {
+        let d = self.dims();
         for i in 0..n {
             let p = self.get(start + i);
-            dst[2 * i] = p.x;
-            dst[2 * i + 1] = p.y;
+            dst[d * i..d * (i + 1)].copy_from_slice(p.coords());
         }
     }
 }
@@ -52,12 +306,16 @@ impl PointSource for [Point] {
     fn len(&self) -> usize {
         <[Point]>::len(self)
     }
+    fn dims(&self) -> usize {
+        self.first().map(|p| p.dims()).unwrap_or(0)
+    }
     fn get(&self, i: usize) -> Point {
         self[i]
     }
 }
 
-/// Axis-aligned bounding box.
+/// Axis-aligned 2-D bounding box (diagnostics over the paper's planar
+/// GIS datasets; not used by the N-dimensional solver paths).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BBox {
     pub min_x: f32,
@@ -69,18 +327,19 @@ pub struct BBox {
 impl BBox {
     pub fn of(points: &[Point]) -> Option<BBox> {
         let first = points.first()?;
-        let mut b = BBox { min_x: first.x, min_y: first.y, max_x: first.x, max_y: first.y };
+        let mut b =
+            BBox { min_x: first.x(), min_y: first.y(), max_x: first.x(), max_y: first.y() };
         for p in points {
-            b.min_x = b.min_x.min(p.x);
-            b.min_y = b.min_y.min(p.y);
-            b.max_x = b.max_x.max(p.x);
-            b.max_y = b.max_y.max(p.y);
+            b.min_x = b.min_x.min(p.x());
+            b.min_y = b.min_y.min(p.y());
+            b.max_x = b.max_x.max(p.x());
+            b.max_y = b.max_y.max(p.y());
         }
         Some(b)
     }
 
     pub fn contains(&self, p: &Point) -> bool {
-        p.x >= self.min_x && p.x <= self.max_x && p.y >= self.min_y && p.y <= self.max_y
+        p.x() >= self.min_x && p.x() <= self.max_x && p.y() >= self.min_y && p.y() <= self.max_y
     }
 
     pub fn width(&self) -> f32 {
@@ -94,6 +353,8 @@ impl BBox {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
 
     #[test]
     fn dist2_basic() {
@@ -104,15 +365,162 @@ mod tests {
     }
 
     #[test]
+    fn ndim_point_construction_and_accessors() {
+        let p = Point::from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(p.dims(), 3);
+        assert_eq!(p.coords(), &[1.0, 2.0, 3.0]);
+        assert_eq!((p.x(), p.y(), p.coord(2)), (1.0, 2.0, 3.0));
+        // 2-D constructor and from_slice agree (incl. equality).
+        assert_eq!(Point::new(5.0, -1.0), Point::from_slice(&[5.0, -1.0]));
+        assert_eq!(Point::zero(4).coords(), &[0.0; 4]);
+        // dist2 generalizes: 1² x 8 = 8.
+        let a = Point::zero(8);
+        let b = Point::from_slice(&[1.0; 8]);
+        assert_eq!(a.dist2(&b), 8.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims must be")]
+    fn oversized_point_rejected() {
+        let _ = Point::from_slice(&[0.0; MAX_DIMS + 1]);
+    }
+
+    #[test]
+    fn metric_parse_roundtrip_and_support() {
+        for m in Metric::ALL {
+            assert_eq!(Metric::parse(m.name()), Some(m));
+        }
+        assert_eq!(Metric::parse("nope"), None);
+        assert!(Metric::SqEuclidean.supports_dims(8));
+        assert!(Metric::Manhattan.supports_dims(3));
+        assert!(Metric::Haversine.supports_dims(2));
+        assert!(!Metric::Haversine.supports_dims(3));
+        assert!(!Metric::SqEuclidean.supports_dims(MAX_DIMS + 1));
+        assert!(Metric::SqEuclidean.mean_is_minimizer());
+        assert!(!Metric::Manhattan.mean_is_minimizer());
+        assert!(!Metric::Haversine.mean_is_minimizer());
+    }
+
+    #[test]
+    fn sq_euclidean_distance_is_dist2() {
+        for_all(30, 0xD157, |rng| {
+            let a = Point::new(rng.f64() as f32 * 10.0, rng.f64() as f32 * 10.0);
+            let b = Point::new(rng.f64() as f32 * 10.0, rng.f64() as f32 * 10.0);
+            assert_eq!(Metric::SqEuclidean.distance(&a, &b), a.dist2(&b));
+        });
+    }
+
+    #[test]
+    fn manhattan_known_values() {
+        let a = Point::from_slice(&[0.0, 0.0, 0.0]);
+        let b = Point::from_slice(&[1.0, -2.0, 3.0]);
+        assert_eq!(Metric::Manhattan.distance(&a, &b), 6.0);
+        assert_eq!(Metric::Manhattan.distance_f32(3, a.coords(), b.coords()), 6.0);
+    }
+
+    #[test]
+    fn haversine_city_spot_checks() {
+        // Known great-circle distances (km), ±1% tolerance: the classic
+        // sanity anchors for a haversine implementation.
+        let cases: [((f32, f32), (f32, f32), f64); 3] = [
+            // Paris (48.8566, 2.3522) — London (51.5074, -0.1278): ~344 km
+            ((48.8566, 2.3522), (51.5074, -0.1278), 343.5),
+            // New York (40.7128, -74.0060) — Los Angeles (34.0522, -118.2437): ~3936 km
+            ((40.7128, -74.0060), (34.0522, -118.2437), 3935.7),
+            // Sydney (-33.8688, 151.2093) — Melbourne (-37.8136, 144.9631): ~713 km
+            ((-33.8688, 151.2093), (-37.8136, 144.9631), 713.4),
+        ];
+        for ((la1, lo1), (la2, lo2), want) in cases {
+            let a = Point::new(la1, lo1);
+            let b = Point::new(la2, lo2);
+            let got = Metric::Haversine.distance(&a, &b);
+            assert!((got - want).abs() < 0.01 * want, "{got} vs {want}");
+            // f32 kernel form agrees to f32 precision.
+            let got32 = Metric::Haversine.distance_f32(2, a.coords(), b.coords()) as f64;
+            assert!((got32 - want).abs() < 0.02 * want, "{got32} vs {want}");
+        }
+        // Antipodal clamp: no NaN, ~half the circumference.
+        let d = Metric::Haversine.distance(&Point::new(0.0, 0.0), &Point::new(0.0, 180.0));
+        assert!((d - std::f64::consts::PI * EARTH_RADIUS_KM).abs() < 1.0, "{d}");
+    }
+
+    /// Random point with coordinates suited to the metric.
+    fn rand_point(rng: &mut Rng, dims: usize, metric: Metric) -> Point {
+        let coords: Vec<f32> = (0..dims)
+            .map(|i| match metric {
+                Metric::Haversine if i == 0 => rng.range_f64(-89.0, 89.0) as f32,
+                Metric::Haversine => rng.range_f64(-179.0, 179.0) as f32,
+                _ => rng.range_f64(-100.0, 100.0) as f32,
+            })
+            .collect();
+        Point::from_slice(&coords)
+    }
+
+    #[test]
+    fn metric_axioms_identity_symmetry_nonnegativity() {
+        for metric in Metric::ALL {
+            for dims in [2usize, 3, 8] {
+                if !metric.supports_dims(dims) {
+                    continue;
+                }
+                for_all(40, 0xA10 ^ dims as u64, |rng| {
+                    let a = rand_point(rng, dims, metric);
+                    let b = rand_point(rng, dims, metric);
+                    let dab = metric.distance(&a, &b);
+                    assert!(dab >= 0.0, "{metric:?} nonnegativity");
+                    assert!(metric.distance(&a, &a) == 0.0, "{metric:?} identity");
+                    let dba = metric.distance(&b, &a);
+                    assert!(
+                        (dab - dba).abs() <= 1e-9 * dab.max(1.0),
+                        "{metric:?} symmetry: {dab} vs {dba}"
+                    );
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn metric_axiom_triangle_inequality_for_true_metrics() {
+        // SqEuclidean is deliberately excluded: squared distances violate
+        // the triangle inequality (that is why it is "sq_", not a metric).
+        for (metric, dims_list) in
+            [(Metric::Manhattan, &[2usize, 3, 8][..]), (Metric::Haversine, &[2][..])]
+        {
+            for &dims in dims_list {
+                for_all(60, 0x7121 ^ dims as u64, |rng| {
+                    let a = rand_point(rng, dims, metric);
+                    let b = rand_point(rng, dims, metric);
+                    let c = rand_point(rng, dims, metric);
+                    let ab = metric.distance(&a, &b);
+                    let bc = metric.distance(&b, &c);
+                    let ac = metric.distance(&a, &c);
+                    assert!(
+                        ac <= ab + bc + 1e-6 * (ab + bc).max(1.0),
+                        "{metric:?} d={dims}: {ac} > {ab} + {bc}"
+                    );
+                });
+            }
+        }
+    }
+
+    #[test]
     fn point_source_slice_impl() {
         let pts = vec![Point::new(1.0, 2.0), Point::new(3.0, 4.0), Point::new(5.0, 6.0)];
         let src: &[Point] = &pts;
         assert_eq!(PointSource::len(src), 3);
+        assert_eq!(PointSource::dims(src), 2);
         assert!(!PointSource::is_empty(src));
         assert_eq!(PointSource::get(src, 1), Point::new(3.0, 4.0));
         let mut buf = [0f32; 4];
         src.fill_coords(1, 2, &mut buf);
         assert_eq!(buf, [3.0, 4.0, 5.0, 6.0]);
+        // 3-D fill interleaves dims-wide.
+        let pts3 = vec![Point::from_slice(&[1.0, 2.0, 3.0]), Point::from_slice(&[4.0, 5.0, 6.0])];
+        let src3: &[Point] = &pts3;
+        assert_eq!(PointSource::dims(src3), 3);
+        let mut buf3 = [0f32; 6];
+        src3.fill_coords(0, 2, &mut buf3);
+        assert_eq!(buf3, [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
     }
 
     #[test]

@@ -241,7 +241,7 @@ mod tests {
         let r = &t.regions[1];
         let s = t.scan_region_points(r);
         assert_eq!(s.len(), (r.row_end - r.row_start) as usize);
-        assert_eq!(s[0].x, r.row_start as f32);
+        assert_eq!(s[0].x(), r.row_start as f32);
     }
 
     #[test]

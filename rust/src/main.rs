@@ -23,6 +23,7 @@ use kmedoids_mr::driver::suites::SuiteOpts;
 use kmedoids_mr::driver::{run_cell, spec, Algorithm, Experiment, ExperimentResult};
 use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
 use kmedoids_mr::geo::io::write_csv;
+use kmedoids_mr::geo::{Metric, MAX_DIMS};
 use kmedoids_mr::prelude::{ClusterSession, IterationLog, StderrProgress};
 use kmedoids_mr::report;
 use kmedoids_mr::runtime::{self, BackendKind};
@@ -37,7 +38,7 @@ fn main() {
 
 /// Flags that never take a value; they must not swallow a following
 /// positional (`bench --trace fig5` keeps `fig5` as the suite name).
-const BOOL_FLAGS: &[&str] = &["quality", "trace", "smoke"];
+const BOOL_FLAGS: &[&str] = &["quality", "trace", "smoke", "latlon"];
 
 /// Tiny flag parser: `--key value` pairs after the subcommand. Unknown
 /// flags are rejected (with a did-you-mean suggestion) by
@@ -169,8 +170,10 @@ fn print_help() {
         "kmedoids-mr — Parallel K-Medoids++ spatial clustering on MapReduce
 
 USAGE:
-  kmedoids-mr generate --points N [--hotspots H] [--seed S] --out FILE.csv
+  kmedoids-mr generate --points N [--hotspots H] [--dims D] [--latlon]
+                    [--seed S] --out FILE.csv
   kmedoids-mr run   [--algo ALGO] [--nodes N] [--dataset 0|1|2] [--k K]
+                    [--metric METRIC] [--dims D] [--oversample L] [--rounds R]
                     [--scale DIV] [--seed S] [--backend auto|pjrt|native]
                     [--threads N] [--quality] [--trace]
   kmedoids-mr run   --spec CELLS.json [--backend auto|pjrt|native] [--trace]
@@ -180,7 +183,15 @@ USAGE:
                     [--out BENCH_perf.json] [--smoke]
   kmedoids-mr inspect-artifacts
 
-ALGO: kmedoids++-mr | kmedoids-mr | kmedoids-serial | clarans | kmeans-mr
+ALGO:   kmedoids++-mr | kmedoids-mr | kmedoids-scalable-mr | kmedoids-serial
+        | clarans | kmeans-mr
+METRIC: sq_euclidean (default) | manhattan | haversine
+
+--metric haversine clusters (lat, lon) degree pairs by great-circle
+distance (the synthetic dataset becomes city clouds on the sphere);
+--dims D > 2 generates a D-dimensional Gaussian mixture and runs the
+generic metric kernels. --oversample/--rounds tune the k-means||-style
+seeding of kmedoids-scalable-mr (defaults: l = 2k, 5 rounds).
 
 --threads N runs the map/reduce real compute on N worker threads
 (wallclock only — results and simulated time are identical at any N).
@@ -207,13 +218,24 @@ fn backend_from(
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    args.check_known("generate", &["points", "hotspots", "seed", "out"])?;
+    args.check_known("generate", &["points", "hotspots", "dims", "latlon", "seed", "out"])?;
     args.check_positionals("generate", 0)?;
     let n = args.get_usize("points", 100_000)?;
     let hotspots = args.get_usize("hotspots", 9)?;
+    let dims = args.get_usize("dims", 2)?;
+    if !(2..=MAX_DIMS).contains(&dims) {
+        bail!("--dims must be in 2..={MAX_DIMS}");
+    }
     let seed = args.get_u64("seed", 42)?;
     let out = args.get("out").context("--out FILE.csv is required")?;
-    let d = generate(&SpatialSpec::new(n, hotspots, seed));
+    let mut spec = SpatialSpec::new(n, hotspots, seed).with_dims(dims);
+    if args.has("latlon") {
+        if dims != 2 {
+            bail!("--latlon generates (lat, lon) pairs: drop --dims or use --dims 2");
+        }
+        spec.latlon = true;
+    }
+    let d = generate(&spec);
     let bytes = write_csv(std::path::Path::new(out), &d.points)?;
     println!("wrote {n} points ({bytes} bytes) to {out}");
     Ok(())
@@ -242,9 +264,11 @@ fn run_one_cell(
         session.add_observer(Box::new(StderrProgress::new()));
     }
     println!(
-        "running {} on {} points with {} nodes (backend: {}, {} compute thread{})",
+        "running {} on {} points (d={}, metric {}) with {} nodes (backend: {}, {} compute thread{})",
         exp.algorithm.name(),
         exp.spec.n_points,
+        exp.spec.dims,
+        exp.metric.name(),
         exp.n_nodes,
         backend.name(),
         session.compute_threads(),
@@ -269,8 +293,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(
         "run",
         &[
-            "spec", "algo", "nodes", "dataset", "k", "scale", "seed", "backend", "threads",
-            "quality", "trace",
+            "spec", "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds",
+            "scale", "seed", "backend", "threads", "quality", "trace",
         ],
     )?;
     args.check_positionals("run", 0)?;
@@ -278,7 +302,10 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     // Spec-file mode: drive any cell grid from JSON.
     if let Some(path) = args.get("spec") {
-        for flag in ["algo", "nodes", "dataset", "k", "scale", "seed", "quality", "threads"] {
+        for flag in [
+            "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds", "scale",
+            "seed", "quality", "threads",
+        ] {
             if args.has(flag) {
                 bail!("--{flag} conflicts with --spec (put it in the spec file)");
             }
@@ -308,10 +335,40 @@ fn cmd_run(args: &Args) -> Result<()> {
     let scale = args.get_usize("scale", 1)?;
     let seed = args.get_u64("seed", 42)?;
     let k = args.get_usize("k", 9)?;
+    let metric = match args.get("metric") {
+        Some(s) => Metric::parse(s).with_context(|| {
+            format!("unknown --metric {s:?} (sq_euclidean|manhattan|haversine)")
+        })?,
+        None => Metric::SqEuclidean,
+    };
+    let dims = args.get_usize("dims", 2)?;
+    if !(2..=MAX_DIMS).contains(&dims) {
+        bail!("--dims must be in 2..={MAX_DIMS}");
+    }
+    if !metric.supports_dims(dims) {
+        bail!("--metric {} does not support --dims {dims}", metric.name());
+    }
     let backend = backend_from(args, 2048)?;
 
     let mut exp = Experiment::paper_cell(algo, nodes, dataset, seed).scaled(scale.max(1));
     exp.k = k;
+    exp.metric = metric;
+    exp.spec.dims = dims;
+    if metric == Metric::Haversine {
+        // Haversine runs cluster city clouds on the sphere.
+        exp.spec.latlon = true;
+    }
+    if args.has("oversample") || args.has("rounds") {
+        if algo != Algorithm::KMedoidsScalableMR {
+            bail!("--oversample/--rounds only apply to --algo kmedoids-scalable-mr");
+        }
+        let l = args.get_usize("oversample", 2 * k.max(1))?;
+        let rounds = args.get_usize("rounds", 5)?;
+        if l == 0 || rounds == 0 {
+            bail!("--oversample and --rounds must be >= 1");
+        }
+        exp.oversample = Some((l, rounds));
+    }
     exp.with_quality = args.has("quality");
     exp.threads = args.get_usize("threads", 1)?;
     if exp.threads == 0 {

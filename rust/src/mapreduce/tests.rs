@@ -17,7 +17,7 @@ struct QuadrantMapper;
 impl Mapper for QuadrantMapper {
     fn map_points(&self, ctx: &mut MapCtx, _row0: u64, pts: &[Point]) {
         for p in pts {
-            let q = match (p.x >= 0.0, p.y >= 0.0) {
+            let q = match (p.x() >= 0.0, p.y() >= 0.0) {
                 (true, true) => 0u32,
                 (false, true) => 1,
                 (false, false) => 2,

@@ -11,6 +11,6 @@ pub use crate::clustering::{ClusterOutcome, Init, IterParams, UpdateStrategy};
 pub use crate::config::ClusterConfig;
 pub use crate::driver::{run_experiment, Algorithm, Experiment, ExperimentResult};
 pub use crate::geo::datasets::{generate, SpatialDataset, SpatialSpec};
-pub use crate::geo::Point;
+pub use crate::geo::{Metric, Point};
 pub use crate::runtime::{load_backend, BackendKind, ComputeBackend, NativeBackend};
 pub use crate::session::{ClusterSession, DatasetHandle, SessionBuilder};

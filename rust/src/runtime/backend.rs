@@ -7,7 +7,22 @@
 //! - [`NativeBackend`] — a pure-Rust oracle used for cross-checking the
 //!   artifacts at startup, for tests without artifacts, and as the
 //!   baseline in the kernel benchmark.
+//!
+//! ## Metric dispatch
+//!
+//! The fixed-shape `assign_block` / `pairwise_block*` methods are the
+//! 2-D squared-Euclidean **fast path** (the paper's workload): SoA
+//! staging, precomputed `‖p‖²` norms, and the expanded
+//! `‖p−m‖² = ‖p‖² − 2p·m + ‖m‖²` form that matches the Pallas kernel
+//! bit-for-bit. Every other `(dims, metric)` combination goes through
+//! the `*_metric` trait methods, whose default implementations run the
+//! generic unrolled native kernels below — fixed accumulation order, so
+//! results stay byte-identical across runs and thread counts. Backends
+//! with metric-specialized hardware kernels can override them; the PJRT
+//! backend inherits the native generic path (its AOT artifacts only
+//! cover the 2-D squared-Euclidean blocks).
 
+use crate::geo::Metric;
 use anyhow::Result;
 use std::cell::RefCell;
 
@@ -37,7 +52,9 @@ pub struct AssignOut {
 }
 
 /// Fixed-shape block compute. Inputs are flat row-major f32 slices:
-/// points `(B,2)`, mask `(B,)`, medoids `(K,2)` padded with `pad_coord`.
+/// points `(B,2)`, mask `(B,)`, medoids `(K,2)` padded with `pad_coord`
+/// for the 2-D fast-path methods; the `*_metric` methods take the same
+/// layout at `dims` coordinates per row.
 pub trait ComputeBackend: Send + Sync {
     /// Block size B (points per call).
     fn block(&self) -> usize;
@@ -47,11 +64,12 @@ pub trait ComputeBackend: Send + Sync {
     fn pad_coord(&self) -> f32;
     fn name(&self) -> &str;
 
-    /// Nearest-medoid assignment for one block.
+    /// Nearest-medoid assignment for one block (2-D squared Euclidean).
     fn assign_block(&self, points: &[f32], mask: &[f32], medoids: &[f32]) -> Result<AssignOut>;
 
     /// Partial PAM-update costs: for each candidate i,
-    /// `sum_j mask[j] * ||c_i - p_j||^2` over the member block.
+    /// `sum_j mask[j] * ||c_i - p_j||^2` over the member block
+    /// (2-D squared Euclidean).
     fn pairwise_block(&self, cand: &[f32], members: &[f32], mask: &[f32]) -> Result<Vec<f32>>;
 
     /// Like [`Self::pairwise_block`] but only the first `n_cand`
@@ -69,6 +87,125 @@ pub trait ComputeBackend: Send + Sync {
         let _ = n_cand;
         self.pairwise_block(cand, members, mask)
     }
+
+    /// Metric-generic nearest-medoid assignment: points `(B, dims)`,
+    /// mask `(B,)`, medoids `(K, dims)` padded with `pad_coord` rows.
+    /// Default: the generic unrolled native kernel (deterministic fixed
+    /// accumulation order).
+    fn assign_block_metric(
+        &self,
+        dims: usize,
+        metric: Metric,
+        points: &[f32],
+        mask: &[f32],
+        medoids: &[f32],
+    ) -> Result<AssignOut> {
+        native_assign_metric(self.block(), self.kpad(), self.pad_coord(), dims, metric, points, mask, medoids)
+    }
+
+    /// Metric-generic partial pairwise costs: candidates `(B, dims)`,
+    /// members `(B, dims)`, mask `(B,)`; only the first `n_cand`
+    /// candidate outputs are meaningful. Default: the generic unrolled
+    /// native kernel.
+    fn pairwise_block_partial_metric(
+        &self,
+        dims: usize,
+        metric: Metric,
+        cand: &[f32],
+        members: &[f32],
+        mask: &[f32],
+        n_cand: usize,
+    ) -> Result<Vec<f32>> {
+        native_pairwise_metric(self.block(), dims, metric, cand, members, mask, n_cand)
+    }
+}
+
+/// Generic-path assign kernel over any `(dims, metric)`: plain
+/// per-coordinate distance, fixed evaluation order. Shared as the
+/// default for every [`ComputeBackend`].
+#[allow(clippy::too_many_arguments)]
+pub fn native_assign_metric(
+    b: usize,
+    k: usize,
+    pad: f32,
+    dims: usize,
+    metric: Metric,
+    points: &[f32],
+    mask: &[f32],
+    medoids: &[f32],
+) -> Result<AssignOut> {
+    assert_eq!(points.len(), dims * b);
+    assert_eq!(mask.len(), b);
+    assert_eq!(medoids.len(), dims * k);
+    let mut labels = vec![0i32; b];
+    let mut mindists = vec![0f32; b];
+    let mut cost = vec![0f32; k];
+    let mut count = vec![0f32; k];
+    // Skip trailing pad rows, as the fast path does.
+    let k_eff = (0..k)
+        .rposition(|j| medoids[dims * j..dims * (j + 1)].iter().any(|&v| v != pad))
+        .map(|j| j + 1)
+        .unwrap_or(k);
+    for i in 0..b {
+        let p = &points[dims * i..dims * (i + 1)];
+        let mut best = f32::INFINITY;
+        let mut best_j = 0usize;
+        for j in 0..k_eff {
+            let m = &medoids[dims * j..dims * (j + 1)];
+            let d = metric.distance_f32(dims, p, m);
+            if d < best {
+                best = d;
+                best_j = j;
+            }
+        }
+        labels[i] = best_j as i32;
+        let md = best * mask[i];
+        mindists[i] = md;
+        cost[best_j] += md;
+        count[best_j] += mask[i];
+    }
+    Ok(AssignOut { labels, mindists, cluster_cost: cost, cluster_count: count })
+}
+
+/// Generic-path pairwise kernel over any `(dims, metric)`: 4-wide
+/// unrolled masked accumulation in a fixed order (deterministic across
+/// runs and thread counts), matching the fast path's reduction shape.
+pub fn native_pairwise_metric(
+    b: usize,
+    dims: usize,
+    metric: Metric,
+    cand: &[f32],
+    members: &[f32],
+    mask: &[f32],
+    n_cand: usize,
+) -> Result<Vec<f32>> {
+    assert_eq!(cand.len(), dims * b);
+    assert_eq!(members.len(), dims * b);
+    assert_eq!(mask.len(), b);
+    let mut out = vec![0f32; b];
+    let tail_start = b - b % 4;
+    for i in 0..n_cand.min(b) {
+        let c = &cand[dims * i..dims * (i + 1)];
+        let term = |j: usize| -> f32 {
+            mask[j] * metric.distance_f32(dims, c, &members[dims * j..dims * (j + 1)])
+        };
+        let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+        let mut j = 0usize;
+        while j < tail_start {
+            a0 += term(j);
+            a1 += term(j + 1);
+            a2 += term(j + 2);
+            a3 += term(j + 3);
+            j += 4;
+        }
+        let mut rem = 0f32;
+        while j < b {
+            rem += term(j);
+            j += 1;
+        }
+        out[i] = ((a0 + a1) + (a2 + a3)) + rem;
+    }
+    Ok(out)
 }
 
 /// Pure-Rust reference backend (no artifacts needed).
@@ -256,5 +393,69 @@ mod tests {
         let (be, points, mask, medoids) = simple_setup();
         let out = be.assign_block(&points, &mask, &medoids).unwrap();
         assert!(out.labels.iter().all(|&l| l < 2));
+    }
+
+    #[test]
+    fn generic_sq_euclidean_2d_agrees_with_fast_path_labels() {
+        // Same argmin (labels/counts) as the norm-trick fast path; the
+        // distances themselves may differ only in last-bit rounding.
+        let (be, points, mask, medoids) = simple_setup();
+        let fast = be.assign_block(&points, &mask, &medoids).unwrap();
+        let generic = be
+            .assign_block_metric(2, Metric::SqEuclidean, &points, &mask, &medoids)
+            .unwrap();
+        assert_eq!(fast.labels, generic.labels);
+        assert_eq!(fast.cluster_count, generic.cluster_count);
+        for (f, g) in fast.mindists.iter().zip(&generic.mindists) {
+            assert!((f - g).abs() < 1e-4, "{f} vs {g}");
+        }
+    }
+
+    #[test]
+    fn generic_assign_manhattan_3d() {
+        let be = NativeBackend::new(2, 2);
+        // points: (0,0,0), (1,2,3); medoids: (0,0,0), (1,1,1)
+        let points = vec![0.0, 0.0, 0.0, 1.0, 2.0, 3.0];
+        let mask = vec![1.0, 1.0];
+        let medoids = vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let out = be.assign_block_metric(3, Metric::Manhattan, &points, &mask, &medoids).unwrap();
+        assert_eq!(out.labels, vec![0, 1]); // |1-1|+|2-1|+|3-1| = 3 < 6
+        assert_eq!(out.mindists, vec![0.0, 3.0]);
+        assert_eq!(out.cluster_count, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn generic_pairwise_manhattan() {
+        let cand = vec![0.0, 0.0, 1.0, 0.0];
+        let members = vec![0.0, 0.0, 2.0, 0.0];
+        let mask = vec![1.0, 1.0];
+        let out = native_pairwise_metric(2, 2, Metric::Manhattan, &cand, &members, &mask, 2).unwrap();
+        assert_eq!(out, vec![2.0, 2.0]); // c0: 0+2 ; c1: 1+1
+    }
+
+    #[test]
+    fn generic_pad_rows_skipped() {
+        let be = NativeBackend::new(2, 3);
+        let points = vec![0.0, 0.0, 0.0, 5.0, 5.0, 5.0];
+        let mask = vec![1.0, 1.0];
+        let medoids = vec![0.0, 0.0, 0.0, 5.0, 5.0, 5.0, 1e9, 1e9, 1e9];
+        let out = be.assign_block_metric(3, Metric::Manhattan, &points, &mask, &medoids).unwrap();
+        assert!(out.labels.iter().all(|&l| l < 2));
+        assert_eq!(out.cluster_count, vec![1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn generic_haversine_masked_padding_never_nan() {
+        let be = NativeBackend::new(4, 2);
+        // Two real member rows + two zeroed padding rows (mask 0).
+        let cand = vec![48.85, 2.35, 51.5, -0.13, 0.0, 0.0, 0.0, 0.0];
+        let members = vec![48.85, 2.35, 51.5, -0.13, 0.0, 0.0, 0.0, 0.0];
+        let mask = vec![1.0, 1.0, 0.0, 0.0];
+        let out =
+            native_pairwise_metric(4, 2, Metric::Haversine, &cand, &members, &mask, 2).unwrap();
+        assert!(out.iter().all(|v| v.is_finite()));
+        // Self-distance is 0; cross distance ~343 km.
+        assert!((out[0] - out[1]).abs() < 1.0);
+        assert!(out[0] > 300.0 && out[0] < 400.0);
     }
 }

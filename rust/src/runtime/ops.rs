@@ -9,9 +9,18 @@
 //! overwritten on every call, so reuse cannot leak state between calls
 //! (or between the worker threads of the task pool, which each get their
 //! own scratch).
+//!
+//! §Metric dispatch: every op takes the run's [`Metric`]. The 2-D
+//! squared-Euclidean combination — the paper's workload — routes through
+//! the backend's fixed-shape fast-path methods (`assign_block`,
+//! `pairwise_block_partial`: SoA staging + precomputed norms, PJRT-able);
+//! every other `(dims, metric)` combination routes through the
+//! `*_metric` methods (generic unrolled native kernels by default). Both
+//! paths use fixed accumulation orders, so outputs are byte-identical
+//! across runs and thread counts for every `(dims, metric)` pair.
 
 use super::backend::{AssignOut, ComputeBackend};
-use crate::geo::{Point, PointSource};
+use crate::geo::{Metric, Point, PointSource};
 use anyhow::Result;
 use std::cell::RefCell;
 
@@ -41,11 +50,13 @@ fn grow(buf: &mut Vec<f32>, len: usize) {
     }
 }
 
-/// Full assignment of `points` to `medoids` (k <= kpad-1).
+/// Full assignment of `points` to `medoids` (k <= kpad-1) under `metric`.
 ///
-/// Returns per-point labels and squared distances plus per-cluster
+/// Returns per-point labels and dissimilarities plus per-cluster
 /// (cost, count) aggregates. Exactly what the paper's mapper + combiner
-/// produce for one split.
+/// produce for one split. For `SqEuclidean` the reported dissimilarity is
+/// the squared distance (Eq. 1); for other metrics it is the metric's
+/// own distance.
 pub struct AssignResult {
     pub labels: Vec<u32>,
     pub mindists: Vec<f32>,
@@ -57,6 +68,7 @@ pub fn assign_points(
     be: &dyn ComputeBackend,
     points: &[Point],
     medoids: &[Point],
+    metric: Metric,
 ) -> Result<AssignResult> {
     let b = be.block();
     let k = be.kpad();
@@ -66,6 +78,11 @@ pub fn assign_points(
         medoids.len()
     );
     assert!(!medoids.is_empty());
+    let dims = medoids[0].dims();
+    debug_assert!(medoids.iter().all(|m| m.dims() == dims), "mixed-dims medoids");
+    debug_assert!(points.iter().all(|p| p.dims() == dims), "points/medoids dims mismatch");
+    assert!(metric.supports_dims(dims), "{} does not support dims={dims}", metric.name());
+    let fast_2d = dims == 2 && metric == Metric::SqEuclidean;
 
     let n = points.len();
     let mut labels = Vec::with_capacity(n);
@@ -76,20 +93,19 @@ pub fn assign_points(
     ASSIGN_SCRATCH.with(|scratch| -> Result<()> {
         let mut guard = scratch.borrow_mut();
         let AssignScratch { pbuf, mask, med } = &mut *guard;
-        grow(pbuf, 2 * b);
+        grow(pbuf, dims * b);
         grow(mask, b);
-        grow(med, 2 * k);
-        let pbuf = &mut pbuf[..2 * b];
+        grow(med, dims * k);
+        let pbuf = &mut pbuf[..dims * b];
         let mask = &mut mask[..b];
-        let med = &mut med[..2 * k];
+        let med = &mut med[..dims * k];
 
         // Stage the medoid slab once per call: real medoids, then padding.
         for (j, m) in medoids.iter().enumerate() {
-            med[2 * j] = m.x;
-            med[2 * j + 1] = m.y;
+            med[dims * j..dims * (j + 1)].copy_from_slice(m.coords());
         }
         let pad = be.pad_coord();
-        for v in med[2 * medoids.len()..].iter_mut() {
+        for v in med[dims * medoids.len()..].iter_mut() {
             *v = pad;
         }
 
@@ -97,16 +113,18 @@ pub fn assign_points(
         while start < n {
             let len = (n - start).min(b);
             for i in 0..len {
-                pbuf[2 * i] = points[start + i].x;
-                pbuf[2 * i + 1] = points[start + i].y;
+                pbuf[dims * i..dims * (i + 1)].copy_from_slice(points[start + i].coords());
                 mask[i] = 1.0;
             }
             for i in len..b {
-                pbuf[2 * i] = 0.0;
-                pbuf[2 * i + 1] = 0.0;
+                pbuf[dims * i..dims * (i + 1)].fill(0.0);
                 mask[i] = 0.0;
             }
-            let out: AssignOut = be.assign_block(pbuf, mask, med)?;
+            let out: AssignOut = if fast_2d {
+                be.assign_block(pbuf, mask, med)?
+            } else {
+                be.assign_block_metric(dims, metric, pbuf, mask, med)?
+            };
             for i in 0..len {
                 labels.push(out.labels[i] as u32);
                 mindists.push(out.mindists[i]);
@@ -123,14 +141,15 @@ pub fn assign_points(
 }
 
 /// Exact PAM-update candidate costs: for every candidate, the summed
-/// squared distance to all members, composed over fixed-size blocks.
-/// Thin `&[Point]` wrapper over [`pairwise_costs_src`].
+/// dissimilarity to all members under `metric`, composed over fixed-size
+/// blocks. Thin `&[Point]` wrapper over [`pairwise_costs_src`].
 pub fn pairwise_costs(
     be: &dyn ComputeBackend,
     candidates: &[Point],
     members: &[Point],
+    metric: Metric,
 ) -> Result<Vec<f64>> {
-    pairwise_costs_src(be, candidates, members)
+    pairwise_costs_src(be, candidates, members, metric)
 }
 
 /// [`pairwise_costs`] over any two [`PointSource`]s — block staging goes
@@ -140,6 +159,7 @@ pub fn pairwise_costs_src<C, M>(
     be: &dyn ComputeBackend,
     candidates: &C,
     members: &M,
+    metric: Metric,
 ) -> Result<Vec<f64>>
 where
     C: PointSource + ?Sized,
@@ -149,40 +169,47 @@ where
     let nc = candidates.len();
     let nm = members.len();
     let mut out = vec![0f64; nc];
+    if nc == 0 || nm == 0 {
+        return Ok(out);
+    }
+    let dims = candidates.dims();
+    assert_eq!(dims, members.dims(), "candidates/members dims mismatch");
+    assert!(metric.supports_dims(dims), "{} does not support dims={dims}", metric.name());
+    let fast_2d = dims == 2 && metric == Metric::SqEuclidean;
 
     PAIR_SCRATCH.with(|scratch| -> Result<()> {
         let mut guard = scratch.borrow_mut();
         let PairScratch { cbuf, mbuf, mmask } = &mut *guard;
-        grow(cbuf, 2 * b);
-        grow(mbuf, 2 * b);
+        grow(cbuf, dims * b);
+        grow(mbuf, dims * b);
         grow(mmask, b);
-        let cbuf = &mut cbuf[..2 * b];
-        let mbuf = &mut mbuf[..2 * b];
+        let cbuf = &mut cbuf[..dims * b];
+        let mbuf = &mut mbuf[..dims * b];
         let mmask = &mut mmask[..b];
 
         let mut cs = 0usize;
         while cs < nc {
             let clen = (nc - cs).min(b);
-            candidates.fill_coords(cs, clen, &mut cbuf[..2 * clen]);
+            candidates.fill_coords(cs, clen, &mut cbuf[..dims * clen]);
             // Padding candidates is harmless (their outputs are discarded);
             // zero them for reproducibility.
-            for i in clen..b {
-                cbuf[2 * i] = 0.0;
-                cbuf[2 * i + 1] = 0.0;
-            }
+            cbuf[dims * clen..].fill(0.0);
             let mut ms = 0usize;
             while ms < nm {
                 let mlen = (nm - ms).min(b);
-                members.fill_coords(ms, mlen, &mut mbuf[..2 * mlen]);
+                members.fill_coords(ms, mlen, &mut mbuf[..dims * mlen]);
                 for j in 0..mlen {
                     mmask[j] = 1.0;
                 }
+                mbuf[dims * mlen..].fill(0.0);
                 for j in mlen..b {
-                    mbuf[2 * j] = 0.0;
-                    mbuf[2 * j + 1] = 0.0;
                     mmask[j] = 0.0;
                 }
-                let partial = be.pairwise_block_partial(cbuf, mbuf, mmask, clen)?;
+                let partial = if fast_2d {
+                    be.pairwise_block_partial(cbuf, mbuf, mmask, clen)?
+                } else {
+                    be.pairwise_block_partial_metric(dims, metric, cbuf, mbuf, mmask, clen)?
+                };
                 for i in 0..clen {
                     out[cs + i] += partial[i] as f64;
                 }
@@ -216,23 +243,26 @@ mod tests {
     }
 
     fn rand_points(rng: &mut Rng, n: usize, spread: f64) -> Vec<Point> {
+        rand_points_d(rng, n, spread, 2)
+    }
+
+    fn rand_points_d(rng: &mut Rng, n: usize, spread: f64, dims: usize) -> Vec<Point> {
         (0..n)
             .map(|_| {
-                Point::new(
-                    (rng.f64() * spread - spread / 2.0) as f32,
-                    (rng.f64() * spread - spread / 2.0) as f32,
-                )
+                let coords: Vec<f32> =
+                    (0..dims).map(|_| (rng.f64() * spread - spread / 2.0) as f32).collect();
+                Point::from_slice(&coords)
             })
             .collect()
     }
 
-    fn brute_assign(points: &[Point], medoids: &[Point]) -> (Vec<u32>, Vec<f64>) {
+    fn brute_assign(points: &[Point], medoids: &[Point], metric: Metric) -> (Vec<u32>, Vec<f64>) {
         points
             .iter()
             .map(|p| {
                 let (mut bj, mut bd) = (0u32, f64::INFINITY);
                 for (j, m) in medoids.iter().enumerate() {
-                    let d = p.dist2(m);
+                    let d = metric.distance(p, m);
                     if d < bd {
                         bd = d;
                         bj = j as u32;
@@ -250,8 +280,8 @@ mod tests {
             let k = 1 + rng.below(7);
             let pts = rand_points(rng, n, 100.0);
             let med = rand_points(rng, k, 100.0);
-            let got = assign_points(&be(), &pts, &med).unwrap();
-            let (bl, bd) = brute_assign(&pts, &med);
+            let got = assign_points(&be(), &pts, &med, Metric::SqEuclidean).unwrap();
+            let (bl, bd) = brute_assign(&pts, &med, Metric::SqEuclidean);
             assert_eq!(got.labels, bl);
             for (g, w) in got.mindists.iter().zip(&bd) {
                 assert!((*g as f64 - w).abs() < 1e-2, "{g} vs {w}");
@@ -269,13 +299,76 @@ mod tests {
     }
 
     #[test]
+    fn assign_points_generic_matches_brute_force() {
+        // The generic kernel path: every (dims, metric) beyond 2-D
+        // squared Euclidean, against the f64 oracle.
+        let combos: [(usize, Metric); 5] = [
+            (3, Metric::SqEuclidean),
+            (8, Metric::SqEuclidean),
+            (2, Metric::Manhattan),
+            (3, Metric::Manhattan),
+            (8, Metric::Manhattan),
+        ];
+        for (dims, metric) in combos {
+            for_all(8, 0xD0 ^ dims as u64, |rng| {
+                let n = 1 + rng.below(200);
+                let k = 1 + rng.below(7);
+                let pts = rand_points_d(rng, n, 100.0, dims);
+                let med = rand_points_d(rng, k, 100.0, dims);
+                let got = assign_points(&be(), &pts, &med, metric).unwrap();
+                let (bl, bd) = brute_assign(&pts, &med, metric);
+                assert_eq!(got.labels, bl, "labels d={dims} {metric:?}");
+                for (g, w) in got.mindists.iter().zip(&bd) {
+                    assert!((*g as f64 - w).abs() < 1e-2 * w.max(1.0), "{g} vs {w}");
+                }
+                let mut cnt = vec![0u64; k];
+                for &l in &got.labels {
+                    cnt[l as usize] += 1;
+                }
+                assert_eq!(got.cluster_count, cnt);
+            });
+        }
+    }
+
+    #[test]
+    fn assign_points_haversine_matches_brute_force() {
+        for_all(10, 0x6E0, |rng| {
+            let n = 1 + rng.below(150);
+            let k = 1 + rng.below(5);
+            let mk = |rng: &mut Rng, n: usize| -> Vec<Point> {
+                (0..n)
+                    .map(|_| {
+                        Point::new(
+                            rng.range_f64(-80.0, 80.0) as f32,
+                            rng.range_f64(-179.0, 179.0) as f32,
+                        )
+                    })
+                    .collect()
+            };
+            let pts = mk(rng, n);
+            let med = mk(rng, k);
+            let got = assign_points(&be(), &pts, &med, Metric::Haversine).unwrap();
+            let (bl, bd) = brute_assign(&pts, &med, Metric::Haversine);
+            // f32 trig can flip near-ties; check distances, not labels.
+            for (i, (g, w)) in got.mindists.iter().zip(&bd).enumerate() {
+                assert!(
+                    (*g as f64 - w).abs() < 1e-3 * w.max(1.0) + 0.5,
+                    "point {i}: {g} vs {w} (label {} vs {})",
+                    got.labels[i],
+                    bl[i]
+                );
+            }
+        });
+    }
+
+    #[test]
     fn pairwise_costs_match_brute_force_any_sizes() {
         for_all(15, 0xBEEF, |rng| {
             let nc = 1 + rng.below(150);
             let nm = 1 + rng.below(200);
             let cands = rand_points(rng, nc, 50.0);
             let membs = rand_points(rng, nm, 50.0);
-            let got = pairwise_costs(&be(), &cands, &membs).unwrap();
+            let got = pairwise_costs(&be(), &cands, &membs, Metric::SqEuclidean).unwrap();
             for (i, c) in cands.iter().enumerate() {
                 let want: f64 = membs.iter().map(|m| c.dist2(m)).sum();
                 assert!(
@@ -288,36 +381,62 @@ mod tests {
     }
 
     #[test]
+    fn pairwise_costs_generic_match_brute_force() {
+        for (dims, metric) in [(3usize, Metric::Manhattan), (8, Metric::SqEuclidean)] {
+            for_all(8, 0xFACE ^ dims as u64, |rng| {
+                let nc = 1 + rng.below(90);
+                let nm = 1 + rng.below(150);
+                let cands = rand_points_d(rng, nc, 50.0, dims);
+                let membs = rand_points_d(rng, nm, 50.0, dims);
+                let got = pairwise_costs(&be(), &cands, &membs, metric).unwrap();
+                for (i, c) in cands.iter().enumerate() {
+                    let want: f64 = membs.iter().map(|m| metric.distance(c, m)).sum();
+                    assert!(
+                        (got[i] - want).abs() < 1e-3 * want.max(1.0),
+                        "d={dims} {metric:?} cand {i}: {} vs {want}",
+                        got[i]
+                    );
+                }
+            });
+        }
+    }
+
+    #[test]
     fn empty_members_zero_cost() {
-        let got = pairwise_costs(&be(), &[Point::new(1.0, 1.0)], &[]).unwrap();
+        let got =
+            pairwise_costs(&be(), &[Point::new(1.0, 1.0)], &[], Metric::SqEuclidean).unwrap();
         assert_eq!(got, vec![0.0]);
     }
 
     #[test]
     fn packed_members_match_slice_members() {
         use crate::util::codec::{Enc, PackedPoints};
-        for_all(10, 0xC0DE, |rng| {
-            let nc = 1 + rng.below(40);
-            let nm = 1 + rng.below(180);
-            let cands = rand_points(rng, nc, 50.0);
-            let membs = rand_points(rng, nm, 50.0);
-            // Split members into a few packed byte runs, as the shuffle
-            // delivers them (one run per map task).
-            let n_runs = 1 + rng.below(4);
-            let mut runs: Vec<Vec<u8>> = Vec::new();
-            for c in membs.chunks((nm + n_runs - 1) / n_runs) {
-                let mut enc = Enc::with_capacity(8 * c.len());
-                for p in c {
-                    enc = enc.f32(p.x).f32(p.y);
+        for dims in [2usize, 3] {
+            for_all(8, 0xC0DE ^ dims as u64, |rng| {
+                let nc = 1 + rng.below(40);
+                let nm = 1 + rng.below(180);
+                let cands = rand_points_d(rng, nc, 50.0, dims);
+                let membs = rand_points_d(rng, nm, 50.0, dims);
+                // Split members into a few packed byte runs, as the shuffle
+                // delivers them (one run per map task).
+                let n_runs = 1 + rng.below(4);
+                let mut runs: Vec<Vec<u8>> = Vec::new();
+                for c in membs.chunks(nm.div_ceil(n_runs)) {
+                    let mut enc = Enc::with_capacity(4 * dims * c.len());
+                    for p in c {
+                        enc = enc.f32s(p.coords());
+                    }
+                    runs.push(enc.done());
                 }
-                runs.push(enc.done());
-            }
-            let packed = PackedPoints::new(runs.iter().map(|r| r.as_slice()));
-            assert_eq!(packed.len(), nm);
-            let via_slice = pairwise_costs(&be(), &cands, &membs).unwrap();
-            let via_packed = pairwise_costs_src(&be(), cands.as_slice(), &packed).unwrap();
-            assert_eq!(via_slice, via_packed, "packed view must be byte-identical");
-        });
+                let packed = PackedPoints::new(dims, runs.iter().map(|r| r.as_slice()));
+                assert_eq!(packed.len(), nm);
+                let metric = if dims == 2 { Metric::SqEuclidean } else { Metric::Manhattan };
+                let via_slice = pairwise_costs(&be(), &cands, &membs, metric).unwrap();
+                let via_packed =
+                    pairwise_costs_src(&be(), cands.as_slice(), &packed, metric).unwrap();
+                assert_eq!(via_slice, via_packed, "packed view must be byte-identical");
+            });
+        }
     }
 
     #[test]
@@ -325,6 +444,6 @@ mod tests {
     fn too_many_medoids_panics() {
         let pts = vec![Point::new(0.0, 0.0)];
         let med = vec![Point::new(0.0, 0.0); 9];
-        let _ = assign_points(&be(), &pts, &med);
+        let _ = assign_points(&be(), &pts, &med, Metric::SqEuclidean);
     }
 }

@@ -64,6 +64,11 @@ struct DatasetEntry {
     points: Arc<Vec<Point>>,
     input: Input,
     bytes: u64,
+    dims: usize,
+    /// Whether the coordinates are (lat, lon) degree pairs: `Some` when
+    /// the dataset was generated from a spec (the generator knows),
+    /// `None` for raw ingested point sets.
+    latlon: Option<bool>,
     truth: Option<Vec<Option<u32>>>,
 }
 
@@ -194,26 +199,32 @@ impl ClusterSession {
     /// Ingest a generated dataset (clones the points; keeps ground truth
     /// for quality metrics).
     pub fn ingest(&mut self, name: &str, dataset: &SpatialDataset) -> DatasetHandle {
-        self.ingest_inner(name, Arc::new(dataset.points.clone()), Some(dataset.truth.clone()))
+        self.ingest_inner(
+            name,
+            Arc::new(dataset.points.clone()),
+            Some(dataset.latlon),
+            Some(dataset.truth.clone()),
+        )
     }
 
     /// Generate from a spec and ingest (ground truth retained).
     pub fn ingest_spec(&mut self, name: &str, spec: &SpatialSpec) -> DatasetHandle {
         let d = datasets::generate(spec);
-        self.ingest_inner(name, Arc::new(d.points), Some(d.truth))
+        self.ingest_inner(name, Arc::new(d.points), Some(spec.latlon), Some(d.truth))
     }
 
     /// Ingest an existing shared point set without copying it (no ground
     /// truth). This is how suites reuse one generated dataset across many
     /// sessions.
     pub fn ingest_points(&mut self, name: &str, points: Arc<Vec<Point>>) -> DatasetHandle {
-        self.ingest_inner(name, points, None)
+        self.ingest_inner(name, points, None, None)
     }
 
     fn ingest_inner(
         &mut self,
         name: &str,
         points: Arc<Vec<Point>>,
+        latlon: Option<bool>,
         truth: Option<Vec<Option<u32>>>,
     ) -> DatasetHandle {
         assert!(
@@ -221,6 +232,14 @@ impl ClusterSession {
             "dataset {name:?} already ingested into this session"
         );
         assert!(!points.is_empty(), "cannot ingest an empty dataset");
+        // Hard check (one O(n) scan, negligible next to ingest): a
+        // mixed-dims dataset would otherwise surface much later as an
+        // opaque slice-length panic inside a map task's staging loop.
+        let dims = points[0].dims();
+        assert!(
+            points.iter().all(|p| p.dims() == dims),
+            "dataset {name:?} mixes dimensionalities (first point has {dims})"
+        );
         let row_bytes = datasets::paper_row_bytes();
         let total_bytes = points.len() as u64 * row_bytes;
         // HDFS file backing the HBase table's HFiles.
@@ -243,6 +262,8 @@ impl ClusterSession {
             points,
             input,
             bytes: total_bytes,
+            dims,
+            latlon,
             truth,
         });
         DatasetHandle { session_id: self.id, index, name: name.to_string() }
@@ -271,6 +292,17 @@ impl ClusterSession {
     }
     pub fn dataset_n_points(&self, h: &DatasetHandle) -> usize {
         self.entry(h).points.len()
+    }
+    /// Dimensionality of the ingested points (2 for the paper's GIS case).
+    pub fn dataset_dims(&self, h: &DatasetHandle) -> usize {
+        self.entry(h).dims
+    }
+    /// Whether the dataset's coordinates are (lat, lon) degree pairs —
+    /// `Some` when it was generated from a spec, `None` for raw ingests
+    /// (the solvers then fall back to a coordinate-range check for
+    /// haversine runs).
+    pub fn dataset_latlon(&self, h: &DatasetHandle) -> Option<bool> {
+        self.entry(h).latlon
     }
     /// Generator ground truth, when the dataset was ingested from a spec.
     pub fn dataset_truth(&self, h: &DatasetHandle) -> Option<&[Option<u32>]> {
@@ -480,6 +512,36 @@ mod tests {
         };
         let base = fit(1);
         assert_eq!(base, fit(4));
+    }
+
+    #[test]
+    fn dataset_dims_tracked_and_metric_fits_share_a_session() {
+        use crate::geo::Metric;
+        let mut s = small_session();
+        let planar = s.ingest_spec("planar", &SpatialSpec::new(1200, 3, 31));
+        let d3 = s.ingest_spec("d3", &SpatialSpec::new(1200, 3, 31).with_dims(3));
+        let geo = s.ingest_spec("geo", &SpatialSpec::latlon(1200, 3, 31));
+        assert_eq!(s.dataset_dims(&planar), 2);
+        assert_eq!(s.dataset_dims(&d3), 3);
+        assert_eq!(s.dataset_dims(&geo), 2);
+        // One session hosts fits across dims and metrics back to back.
+        let a = KMedoids::mapreduce().k(3).seed(31).build().fit(&mut s, &planar).unwrap();
+        let b = KMedoids::mapreduce()
+            .k(3)
+            .seed(31)
+            .metric(Metric::Manhattan)
+            .build()
+            .fit(&mut s, &d3)
+            .unwrap();
+        let c = KMedoids::mapreduce()
+            .k(3)
+            .seed(31)
+            .metric(Metric::Haversine)
+            .build()
+            .fit(&mut s, &geo)
+            .unwrap();
+        assert!(a.cost > 0.0 && b.cost > 0.0 && c.cost > 0.0);
+        assert!(b.medoids.iter().all(|m| m.dims() == 3));
     }
 
     #[test]

@@ -4,6 +4,15 @@
 //! shuffle sorting need bytes anyway). Application types encode/decode
 //! through these little-endian helpers — a fixed, documented wire format
 //! so tests can assert on byte layouts.
+//!
+//! ## Coordinate wire format (dims-aware)
+//!
+//! Point payloads are packed little-endian `f32` coordinate runs, `dims`
+//! floats per point (`x, y` for the paper's 2-D case). The run carries no
+//! dimension header: both ends of every job already agree on `dims`
+//! through the medoid set / dataset they were constructed with, and a
+//! headerless run is what lets [`f32s_view`] reinterpret the wire bytes
+//! as `&[f32]` in place.
 
 use crate::geo::{Point, PointSource};
 
@@ -98,6 +107,17 @@ impl<'a> Dec<'a> {
         }
         out
     }
+    /// Read all remaining bytes as one packed coordinate run of
+    /// `dims`-dimensional points.
+    pub fn rest_points(&mut self, dims: usize) -> Vec<Point> {
+        let floats = self.rest_f32s();
+        assert!(
+            dims >= 1 && floats.len() % dims == 0,
+            "coordinate run of {} floats is not whole {dims}-dim points",
+            floats.len()
+        );
+        floats.chunks_exact(dims).map(Point::from_slice).collect()
+    }
 }
 
 /// Reinterpret a little-endian packed f32 buffer as an `&[f32]` view
@@ -122,12 +142,13 @@ pub fn f32s_view(bytes: &[u8]) -> Option<&[f32]> {
 }
 
 /// A [`PointSource`] over packed coordinate runs (the reducer's shuffle
-/// values): each block is a run of `x, y` f32 pairs. Blocks borrow the
-/// wire bytes directly via [`f32s_view`] when possible and decode into an
-/// owned buffer only on the (misaligned / big-endian) fallback path, so
-/// the exact-update reducer iterates members without materializing a
-/// `Vec<Point>`.
+/// values): each block is a run of `dims`-float coordinate groups.
+/// Blocks borrow the wire bytes directly via [`f32s_view`] when possible
+/// and decode into an owned buffer only on the (misaligned / big-endian)
+/// fallback path, so the exact-update reducer iterates members without
+/// materializing a `Vec<Point>`.
 pub struct PackedPoints<'a> {
+    dims: usize,
     blocks: Vec<std::borrow::Cow<'a, [f32]>>,
     /// Cumulative start index (in points) of each block.
     starts: Vec<usize>,
@@ -135,17 +156,22 @@ pub struct PackedPoints<'a> {
 }
 
 impl<'a> PackedPoints<'a> {
-    /// Build from coordinate-run byte blocks. Each block's length must be
-    /// a whole number of `(x, y)` f32 pairs (8 bytes).
-    pub fn new(blocks: impl IntoIterator<Item = &'a [u8]>) -> PackedPoints<'a> {
-        let mut out = PackedPoints { blocks: Vec::new(), starts: Vec::new(), total: 0 };
+    /// Build from coordinate-run byte blocks of `dims`-dimensional
+    /// points. Each block's length must be a whole number of points
+    /// (`4 * dims` bytes each).
+    pub fn new(dims: usize, blocks: impl IntoIterator<Item = &'a [u8]>) -> PackedPoints<'a> {
+        assert!(dims >= 1, "PackedPoints needs dims >= 1");
+        let mut out = PackedPoints { dims, blocks: Vec::new(), starts: Vec::new(), total: 0 };
         for bytes in blocks {
-            assert!(bytes.len() % 8 == 0, "coordinate run must be whole (x, y) f32 pairs");
+            assert!(
+                bytes.len() % (4 * dims) == 0,
+                "coordinate run must be whole {dims}-dim points"
+            );
             let floats: std::borrow::Cow<'a, [f32]> = match f32s_view(bytes) {
                 Some(view) => std::borrow::Cow::Borrowed(view),
                 None => std::borrow::Cow::Owned(Dec::new(bytes).rest_f32s()),
             };
-            let n = floats.len() / 2;
+            let n = floats.len() / dims;
             if n == 0 {
                 continue;
             }
@@ -163,7 +189,7 @@ impl<'a> PackedPoints<'a> {
             Ok(b) => b,
             Err(b) => b - 1,
         };
-        (b, 2 * (i - self.starts[b]))
+        (b, self.dims * (i - self.starts[b]))
     }
 }
 
@@ -171,10 +197,13 @@ impl PointSource for PackedPoints<'_> {
     fn len(&self) -> usize {
         self.total
     }
+    fn dims(&self) -> usize {
+        self.dims
+    }
     fn get(&self, i: usize) -> Point {
         let (b, off) = self.locate(i);
         let fl = &self.blocks[b];
-        Point::new(fl[off], fl[off + 1])
+        Point::from_slice(&fl[off..off + self.dims])
     }
     /// Bulk copy: contiguous runs within each block go through
     /// `copy_from_slice` instead of per-point loads.
@@ -184,7 +213,7 @@ impl PointSource for PackedPoints<'_> {
         }
         let (mut b, mut off) = self.locate(start);
         let mut written = 0usize;
-        let want = 2 * n;
+        let want = self.dims * n;
         while written < want {
             let block = &self.blocks[b];
             let take = (block.len() - off).min(want - written);
@@ -196,8 +225,24 @@ impl PointSource for PackedPoints<'_> {
     }
 }
 
-/// Encode a 2-D point value (the (clusterId, point) pair payload of the
-/// paper's mapper output).
+/// Encode a point value as its packed coordinate run (the point payload
+/// of the paper's mapper output, generalized to d dims).
+pub fn encode_point_coords(p: &Point) -> Vec<u8> {
+    Enc::with_capacity(4 * p.dims()).f32s(p.coords()).done()
+}
+
+/// Decode one `dims`-dimensional point from a packed coordinate value.
+pub fn decode_point_coords(b: &[u8], dims: usize) -> Point {
+    assert_eq!(b.len(), 4 * dims, "point value must be exactly {dims} f32s");
+    let mut d = Dec::new(b);
+    let mut coords = [0f32; crate::geo::MAX_DIMS];
+    for slot in coords.iter_mut().take(dims) {
+        *slot = d.f32();
+    }
+    Point::from_slice(&coords[..dims])
+}
+
+/// Encode a 2-D point value (legacy helper for the planar GIS case).
 pub fn encode_point(x: f32, y: f32) -> Vec<u8> {
     Enc::with_capacity(8).f32(x).f32(y).done()
 }
@@ -240,6 +285,27 @@ mod tests {
     }
 
     #[test]
+    fn point_coords_roundtrip_any_dims() {
+        for dims in [2usize, 3, 8] {
+            let coords: Vec<f32> = (0..dims).map(|i| i as f32 * 1.5 - 2.0).collect();
+            let p = Point::from_slice(&coords);
+            let b = encode_point_coords(&p);
+            assert_eq!(b.len(), 4 * dims);
+            assert_eq!(decode_point_coords(&b, dims), p);
+        }
+    }
+
+    #[test]
+    fn rest_points_decodes_runs() {
+        let b = Enc::new().f32s(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).done();
+        let pts = Dec::new(&b).rest_points(3);
+        assert_eq!(
+            pts,
+            vec![Point::from_slice(&[1.0, 2.0, 3.0]), Point::from_slice(&[4.0, 5.0, 6.0])]
+        );
+    }
+
+    #[test]
     fn cluster_keys_sort_numerically() {
         let mut keys: Vec<Vec<u8>> = [300u32, 2, 10, 255, 256].iter().map(|&i| encode_cluster_key(i)).collect();
         keys.sort();
@@ -274,8 +340,9 @@ mod tests {
         let b1 = Enc::new().f32s(&[1.0, 2.0, 3.0, 4.0]).done(); // 2 points
         let b2 = Enc::new().done(); // empty run is skipped
         let b3 = Enc::new().f32s(&[5.0, 6.0]).done(); // 1 point
-        let packed = PackedPoints::new(vec![b1.as_slice(), b2.as_slice(), b3.as_slice()]);
+        let packed = PackedPoints::new(2, vec![b1.as_slice(), b2.as_slice(), b3.as_slice()]);
         assert_eq!(packed.len(), 3);
+        assert_eq!(PointSource::dims(&packed), 2);
         assert!(!packed.is_empty());
         assert_eq!(packed.get(0), Point::new(1.0, 2.0));
         assert_eq!(packed.get(1), Point::new(3.0, 4.0));
@@ -291,13 +358,34 @@ mod tests {
     }
 
     #[test]
+    fn packed_points_three_dim_runs() {
+        let b1 = Enc::new().f32s(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).done(); // 2 points
+        let b2 = Enc::new().f32s(&[7.0, 8.0, 9.0]).done(); // 1 point
+        let packed = PackedPoints::new(3, vec![b1.as_slice(), b2.as_slice()]);
+        assert_eq!(packed.len(), 3);
+        assert_eq!(PointSource::dims(&packed), 3);
+        assert_eq!(packed.get(1), Point::from_slice(&[4.0, 5.0, 6.0]));
+        assert_eq!(packed.get(2), Point::from_slice(&[7.0, 8.0, 9.0]));
+        let mut buf = [0f32; 6];
+        packed.fill_coords(1, 2, &mut buf);
+        assert_eq!(buf, [4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole 3-dim points")]
+    fn packed_points_ragged_run_rejected() {
+        let b = Enc::new().f32s(&[1.0, 2.0, 3.0, 4.0]).done(); // 4 floats, not 3-dim
+        let _ = PackedPoints::new(3, vec![b.as_slice()]);
+    }
+
+    #[test]
     fn packed_points_misaligned_fallback_decodes_identically() {
         // Force a misaligned view: prepend one byte and slice past it, so
         // the f32 run starts at an odd address (on virtually all
         // allocators) and `f32s_view` must fall back to owned decoding.
         let mut shifted = vec![0u8];
         shifted.extend(Enc::new().f32s(&[7.0, 8.0, 9.0, 10.0]).done());
-        let packed = PackedPoints::new(vec![&shifted[1..]]);
+        let packed = PackedPoints::new(2, vec![&shifted[1..]]);
         assert_eq!(packed.len(), 2);
         assert_eq!(packed.get(0), Point::new(7.0, 8.0));
         assert_eq!(packed.get(1), Point::new(9.0, 10.0));
@@ -305,7 +393,7 @@ mod tests {
 
     #[test]
     fn packed_points_empty() {
-        let packed = PackedPoints::new(std::iter::empty::<&[u8]>());
+        let packed = PackedPoints::new(2, std::iter::empty::<&[u8]>());
         assert_eq!(packed.len(), 0);
         assert!(packed.is_empty());
     }

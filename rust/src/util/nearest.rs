@@ -6,7 +6,7 @@
 //! the tie-breaking rule — **first index wins on exact ties** — is
 //! defined in one place and tested once.
 
-use crate::geo::Point;
+use crate::geo::{Metric, Point};
 
 /// Index of the smallest value, first index on ties (strict `<` scan).
 /// NaN entries never win (any comparison with NaN is false).
@@ -24,16 +24,16 @@ pub fn argmin_f64(xs: &[f64]) -> usize {
     best
 }
 
-/// Nearest candidate to `target` by squared Euclidean distance, as
-/// `(index, dist2)`. First index wins on ties; `None` for an empty
-/// iterator.
+/// Nearest candidate to `target` under `metric`, as `(index, distance)`.
+/// First index wins on ties; `None` for an empty iterator.
 pub fn nearest_point(
     target: Point,
     candidates: impl IntoIterator<Item = Point>,
+    metric: Metric,
 ) -> Option<(usize, f64)> {
     let mut best: Option<(usize, f64)> = None;
     for (i, p) in candidates.into_iter().enumerate() {
-        let d = p.dist2(&target);
+        let d = metric.distance(&p, &target);
         if best.map(|(_, bd)| d < bd).unwrap_or(true) {
             best = Some((i, d));
         }
@@ -73,9 +73,27 @@ mod tests {
             Point::new(1.0, 0.0),
             Point::new(-1.0, 0.0), // same distance as index 1
         ];
-        let (i, d) = nearest_point(Point::new(0.0, 0.0), cands.iter().copied()).unwrap();
+        let (i, d) =
+            nearest_point(Point::new(0.0, 0.0), cands.iter().copied(), Metric::SqEuclidean)
+                .unwrap();
         assert_eq!(i, 1);
         assert_eq!(d, 1.0);
-        assert_eq!(nearest_point(Point::new(0.0, 0.0), std::iter::empty()), None);
+        assert_eq!(
+            nearest_point(Point::new(0.0, 0.0), std::iter::empty(), Metric::SqEuclidean),
+            None
+        );
+    }
+
+    #[test]
+    fn nearest_point_respects_metric() {
+        // Under Manhattan, (2, 2) is farther (4) than (0, 3) (3); under
+        // squared Euclidean (2, 2) is nearer (8 < 9).
+        let cands = [Point::new(2.0, 2.0), Point::new(0.0, 3.0)];
+        let target = Point::new(0.0, 0.0);
+        let (e, _) = nearest_point(target, cands.iter().copied(), Metric::SqEuclidean).unwrap();
+        assert_eq!(e, 0);
+        let (m, d) = nearest_point(target, cands.iter().copied(), Metric::Manhattan).unwrap();
+        assert_eq!(m, 1);
+        assert_eq!(d, 3.0);
     }
 }

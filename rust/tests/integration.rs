@@ -207,6 +207,94 @@ fn session_reuse_matches_fresh_sessions() {
 }
 
 #[test]
+fn metric_generic_pipeline_end_to_end() {
+    // The metric/dims matrix through the full public API: ingest once per
+    // dataset shape, fit through the trait, verify costs against the
+    // brute-force oracle under the same metric, and check byte-identity
+    // across compute thread counts.
+    use kmedoids_mr::clustering::metrics::total_cost_metric;
+    let be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(256, 16));
+    let cells: [(SpatialSpec, Metric); 3] = [
+        (clean_spec(4_000, 4, 15).with_dims(3), Metric::Manhattan),
+        (clean_spec(4_000, 4, 15).with_dims(8), Metric::SqEuclidean),
+        (SpatialSpec::latlon(4_000, 4, 15), Metric::Haversine),
+    ];
+    for (spec, metric) in cells {
+        let fit = |threads: usize| {
+            let mut session = ClusterSession::builder()
+                .cluster(ClusterConfig::paper_cluster())
+                .nodes(5)
+                .backend(be.clone())
+                .seed(15)
+                .threads(threads)
+                .build()
+                .unwrap();
+            let data = session.ingest_spec("points", &spec);
+            assert_eq!(session.dataset_dims(&data), spec.dims);
+            let out = KMedoids::mapreduce()
+                .plus_plus()
+                .k(4)
+                .seed(15)
+                .metric(metric)
+                .update(UpdateStrategy::Exact)
+                .with_labels()
+                .build()
+                .fit(&mut session, &data)
+                .unwrap();
+            (out, session.dataset_points(&data))
+        };
+        let (out, points) = fit(1);
+        // Counter-reported cost equals the brute-force objective under
+        // the fit's own metric.
+        let brute = total_cost_metric(&points, &out.medoids, metric);
+        assert!(
+            (out.cost - brute).abs() / brute.max(1.0) < 0.01,
+            "{metric:?} d={}: counter {} vs brute {brute}",
+            spec.dims,
+            out.cost
+        );
+        // Medoids are data points of the right dimensionality.
+        assert!(out.medoids.iter().all(|m| m.dims() == spec.dims));
+        for m in &out.medoids {
+            assert!(points.iter().any(|p| p == m), "{metric:?}: medoid not a data point");
+        }
+        // Thread counts change only the wall clock.
+        let (out4, _) = fit(4);
+        assert_eq!(out.medoids, out4.medoids, "{metric:?}: threads diverged");
+        assert_eq!(out.cost, out4.cost);
+        assert_eq!(out.sim_seconds, out4.sim_seconds);
+        assert_eq!(out.dist_evals, out4.dist_evals);
+        assert_eq!(out.labels, out4.labels);
+    }
+}
+
+#[test]
+fn scalable_seeding_end_to_end() {
+    // kmedoids-scalable-mr (k-means||-style seeding) through the public
+    // API: converges, recovers structure, and is deterministic.
+    let be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(256, 16));
+    let spec = clean_spec(8_000, 5, 77);
+    let fit = || {
+        let mut session = session_with(5, be.clone(), 77);
+        let data = session.ingest_spec("points", &spec);
+        KMedoids::mapreduce()
+            .oversample(10, 4)
+            .k(5)
+            .seed(77)
+            .update(UpdateStrategy::Exact)
+            .with_labels()
+            .build()
+            .fit(&mut session, &data)
+            .unwrap()
+    };
+    let out = fit();
+    let truth = generate(&spec).truth;
+    let ari = adjusted_rand_index(out.labels.as_ref().unwrap(), &truth);
+    assert!(ari > 0.85, "ARI {ari} (scalable seeding)");
+    assert_eq!(out.medoids, fit().medoids, "deterministic");
+}
+
+#[test]
 fn all_algorithms_share_one_session_with_observers() {
     let be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(256, 16));
     let mut session = session_with(4, be, 33);
