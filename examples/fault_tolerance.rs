@@ -1,11 +1,13 @@
-//! Fault-tolerance demo: kill a slave node mid-job and watch the
-//! MapReduce runtime recover — task retry, map-output re-execution, DFS
-//! re-replication, HBase region failover — with the clustering result
-//! bit-identical to the healthy run (the Hadoop property the paper's
-//! §2.1–2.2 leans on: "automatically handle the hardware failure").
+//! Fault-tolerance demo: kill a slave node mid-job — plus a transient
+//! per-attempt task failure rate — and watch the MapReduce runtime
+//! recover: task retry up to `max_attempts`, map-output re-execution,
+//! DFS re-replication, HBase region failover — with the clustering
+//! result bit-identical to the healthy run (the Hadoop property the
+//! paper's §2.1–2.2 leans on: "automatically handle the hardware
+//! failure").
 //!
-//! Failures are planned on the session (`ClusterSession::plan_failure`);
-//! the per-job history exposes how many attempts the failure killed.
+//! Faults are injected as a [`FaultPlan`] on the session builder; the
+//! per-job history exposes how many attempts the faults killed.
 
 use kmedoids_mr::prelude::*;
 
@@ -16,19 +18,24 @@ fn main() -> anyhow::Result<()> {
     let backend = load_backend(BackendKind::Auto, 2048)?;
 
     let run = |fail: bool| -> anyhow::Result<(ClusterOutcome, usize, usize)> {
-        let mut session = ClusterSession::builder()
+        let mut builder = ClusterSession::builder()
             .cluster(ClusterConfig::paper_cluster())
             .nodes(5)
             .backend(backend.clone())
-            .seed(11)
-            .build()?;
-        let data = session.ingest("points", &dataset);
+            .seed(11);
         if fail {
             // Kill slave01 (node index 1) mid-iteration — it runs map
-            // tasks and reducers — and bring it back two jobs later.
-            session.plan_failure(85.0, 1);
-            session.plan_recovery(150.0, 1);
+            // tasks and reducers — bring it back two jobs later, and make
+            // 5% of all task attempts die partway through.
+            builder = builder.faults(FaultPlan {
+                node_failures: vec![(85.0, 1)],
+                node_recoveries: vec![(150.0, 1)],
+                task_fail_rate: 0.05,
+                seed: 11,
+            });
         }
+        let mut session = builder.build()?;
+        let data = session.ingest("points", &dataset);
         let solver = KMedoids::mapreduce()
             .plus_plus()
             .k(6)

@@ -24,7 +24,8 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| BackendKind::parse(&s))
         .unwrap_or(BackendKind::Auto);
     let seed: u64 = std::env::var("KMR_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
-    let trace = std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false"));
+    let trace =
+        std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false"));
     let backend = load_backend(backend_kind, 2048)?;
     let opts = SuiteOpts::new(scale, seed).with_trace(trace);
     println!(

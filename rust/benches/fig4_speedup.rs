@@ -17,7 +17,9 @@ fn main() {
         .unwrap_or(BackendKind::Native);
     let backend = load_backend(kind, 2048).expect("backend");
     println!("== Fig 4: speedup (scale 1/{scale}, backend {}) ==", backend.name());
-    let opts = SuiteOpts::new(scale, 42).with_trace(std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false")));
+    let trace =
+        std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false"));
+    let opts = SuiteOpts::new(scale, 42).with_trace(trace);
     let results = table6_suite(&backend, &opts);
     println!("\n{}", report::fig4_speedup(&results));
 
@@ -47,7 +49,11 @@ fn main() {
         "7-node speedup: smallest dataset {:.3}x, largest {:.3}x ({})",
         s_small,
         s_big,
-        if s_big >= s_small * 0.95 { "larger scales at least as well — Fig 4 shape" } else { "UNEXPECTED" }
+        if s_big >= s_small * 0.95 {
+            "larger scales at least as well — Fig 4 shape"
+        } else {
+            "UNEXPECTED"
+        }
     );
     if s_big < s_small * 0.95 {
         ok = false;

@@ -15,7 +15,9 @@ fn main() {
         .unwrap_or(BackendKind::Native);
     let backend = load_backend(kind, 2048).expect("backend");
     println!("== Fig 5: comparative algorithms (scale 1/{scale}, backend {}) ==", backend.name());
-    let opts = SuiteOpts::new(scale, 42).with_trace(std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false")));
+    let trace =
+        std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false"));
+    let opts = SuiteOpts::new(scale, 42).with_trace(trace);
     let results = fig5_suite(&backend, &opts);
     println!("\n{}", report::fig5_comparative(&results));
     println!("CSV:\n{}", report::to_csv(&results));

@@ -20,9 +20,14 @@ fn main() {
         .and_then(|s| BackendKind::parse(&s))
         .unwrap_or(BackendKind::Native);
     let backend = load_backend(kind, 2048).expect("backend");
-    println!("== Table 6 / Fig 3: K-Medoids++ MR execution time (scale 1/{scale}, backend {}) ==", backend.name());
+    println!(
+        "== Table 6 / Fig 3: K-Medoids++ MR execution time (scale 1/{scale}, backend {}) ==",
+        backend.name()
+    );
     // KMR_TRACE=1 streams live per-iteration events from every cell.
-    let opts = SuiteOpts::new(scale, 42).with_trace(std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false")));
+    let trace =
+        std::env::var("KMR_TRACE").map_or(false, |v| !matches!(v.as_str(), "" | "0" | "false"));
+    let opts = SuiteOpts::new(scale, 42).with_trace(trace);
     let results = table6_suite(&backend, &opts);
     println!("\nTable 6 — execution time (ms):\n\n{}", report::table6(&results));
     println!("Fig. 4 — speedup vs 4-node cluster:\n\n{}", report::fig4_speedup(&results));

@@ -212,7 +212,7 @@ mod tests {
     use crate::clustering::metrics::{adjusted_rand_index, brute_labels, brute_labels_metric};
     use crate::config::ClusterConfig;
     use crate::geo::datasets::{generate, SpatialSpec};
-    use crate::mapreduce::SplitMeta;
+    use crate::mapreduce::{SplitMeta, SplitOrigin};
     use crate::runtime::NativeBackend;
 
     fn make_input(points: &Arc<Vec<Point>>, n_splits: usize) -> Input {
@@ -223,6 +223,7 @@ mod tests {
                 row_end: total * (i + 1) / n_splits as u64,
                 bytes: 1 << 20,
                 preferred: vec![],
+                origin: SplitOrigin::Adhoc,
             })
             .collect();
         Input::Points { points: points.clone(), splits }

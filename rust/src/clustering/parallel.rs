@@ -482,7 +482,7 @@ mod tests {
     use crate::clustering::metrics::{adjusted_rand_index, total_cost, total_cost_metric};
     use crate::config::ClusterConfig;
     use crate::geo::datasets::{generate, SpatialSpec};
-    use crate::mapreduce::SplitMeta;
+    use crate::mapreduce::{SplitMeta, SplitOrigin};
     use crate::runtime::NativeBackend;
 
     fn backend() -> Arc<dyn ComputeBackend> {
@@ -497,6 +497,7 @@ mod tests {
                 row_end: total * (i + 1) / n_splits as u64,
                 bytes: 4 << 20,
                 preferred: vec![],
+                origin: SplitOrigin::Adhoc,
             })
             .collect();
         Input::Points { points: points.clone(), splits }
@@ -586,7 +587,8 @@ mod tests {
     fn centroid_nearest_converges() {
         // Seed chosen to land in the global basin (alternating k-medoids
         // is a local-optimum method like Lloyd's).
-        let (out, _, truth) = run_once(4000, 4, Init::PlusPlus, UpdateStrategy::CentroidNearest, 62);
+        let (out, _, truth) =
+            run_once(4000, 4, Init::PlusPlus, UpdateStrategy::CentroidNearest, 62);
         let ari = adjusted_rand_index(out.labels.as_ref().unwrap(), &truth);
         assert!(ari > 0.8, "ARI {ari}");
     }

@@ -500,7 +500,7 @@ mod tests {
     use crate::clustering::metrics::{total_cost, total_cost_metric};
     use crate::config::ClusterConfig;
     use crate::geo::datasets::{generate, SpatialSpec};
-    use crate::mapreduce::SplitMeta;
+    use crate::mapreduce::{SplitMeta, SplitOrigin};
     use crate::runtime::NativeBackend;
     use crate::util::proptest::for_all;
 
@@ -516,6 +516,7 @@ mod tests {
                 row_end: total * (i + 1) / n_splits as u64,
                 bytes: 1 << 20,
                 preferred: vec![],
+                origin: SplitOrigin::Adhoc,
             })
             .collect();
         Input::Points { points: points.clone(), splits }
@@ -543,7 +544,8 @@ mod tests {
         let (mut pp, mut rand) = (0.0, 0.0);
         for t in 0..trials {
             let mut rng = Rng::new(100 + t);
-            pp += total_cost(&d.points, &plus_plus_serial(&d.points, 8, &mut rng, Metric::SqEuclidean).0);
+            let seeds = plus_plus_serial(&d.points, 8, &mut rng, Metric::SqEuclidean).0;
+            pp += total_cost(&d.points, &seeds);
             let mut rng = Rng::new(200 + t);
             rand += total_cost(&d.points, &random_init(&d.points, 8, &mut rng));
         }
@@ -704,7 +706,10 @@ mod tests {
                 .iter()
                 .enumerate()
                 .map(|(j, c)| (j, p.dist2(c)))
-                .fold((0usize, f64::INFINITY), |acc, (j, dd)| if dd < acc.1 { (j, dd) } else { acc });
+                .fold(
+                    (0usize, f64::INFINITY),
+                    |acc, (j, dd)| if dd < acc.1 { (j, dd) } else { acc },
+                );
             assert!(
                 (dists[i] as f64 - bd).abs() < 1e-2 * bd.max(1.0),
                 "point {i}: {} vs {bd}",

@@ -13,6 +13,28 @@ use std::collections::HashMap;
 
 pub type BlockId = u64;
 
+/// Failing a node would leave the DFS with no live DataNodes: nothing can
+/// be re-replicated and every block is unreadable. Surfaced as a typed
+/// error (rather than an assert) so the MapReduce scheduler can report a
+/// cluster-dead job failure instead of panicking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NoLiveDataNodes {
+    /// The node whose loss emptied the cluster.
+    pub failed: usize,
+}
+
+impl std::fmt::Display for NoLiveDataNodes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "DataNode {} was the last live node: the DFS has no replicas left to serve or re-replicate",
+            self.failed
+        )
+    }
+}
+
+impl std::error::Error for NoLiveDataNodes {}
+
 #[derive(Debug, Clone)]
 pub struct Block {
     pub id: BlockId,
@@ -157,10 +179,16 @@ impl NameNode {
     }
 
     /// Fail-stop a DataNode; re-replicate every block it held (if enough
-    /// alive nodes exist). Returns the number of blocks re-replicated.
-    pub fn fail_node(&mut self, node: usize) -> usize {
+    /// alive nodes exist). Returns the number of blocks re-replicated, or
+    /// a typed [`NoLiveDataNodes`] error when this was the last live node
+    /// (the node is still marked dead — fail-stop is a fact — but nothing
+    /// can be re-replicated and reads will fail).
+    pub fn fail_node(&mut self, node: usize) -> Result<usize, NoLiveDataNodes> {
         self.alive[node] = false;
         self.node_usage[node] = 0;
+        if !self.alive.iter().any(|&a| a) {
+            return Err(NoLiveDataNodes { failed: node });
+        }
         let ids: Vec<BlockId> = self
             .blocks
             .values()
@@ -185,7 +213,7 @@ impl NameNode {
             }
             self.blocks.get_mut(&id).unwrap().replicas = reps;
         }
-        fixed
+        Ok(fixed)
     }
 
     pub fn recover_node(&mut self, node: usize) {
@@ -257,7 +285,8 @@ mod tests {
         let held: Vec<BlockId> =
             n.blocks.values().filter(|b| b.replicas.contains(&victim)).map(|b| b.id).collect();
         assert!(!held.is_empty());
-        n.fail_node(victim);
+        let fixed = n.fail_node(victim).expect("3 nodes survive");
+        assert!(fixed > 0, "every held block should be re-replicated");
         for id in held {
             let b = n.block(id);
             assert!(!b.replicas.contains(&victim));
@@ -272,9 +301,26 @@ mod tests {
         let meta = n.create_file("pts", 10, 1 << 20);
         let b = meta.blocks[0];
         assert_eq!(n.locations(b).len(), 2);
-        n.fail_node(1);
+        n.fail_node(1).unwrap();
         let locs = n.locations(b);
         assert_eq!(locs, vec![0]);
+    }
+
+    #[test]
+    fn last_node_failure_is_a_typed_error_not_a_panic() {
+        let mut n = nn(2);
+        n.create_file("pts", 100, 4 << 20);
+        n.fail_node(1).expect("one node still alive");
+        let err = n.fail_node(0).expect_err("no live DataNodes remain");
+        assert_eq!(err, NoLiveDataNodes { failed: 0 });
+        assert!(err.to_string().contains("last live node"), "{err}");
+        // Fail-stop is still a fact: the node is down and reads fail.
+        assert!(!n.is_alive(0));
+        let b = n.file("pts").unwrap().blocks[0];
+        assert!(n.locations(b).is_empty());
+        // Recovery brings the cluster back to a usable state.
+        n.recover_node(0);
+        assert!(!n.locations(b).is_empty());
     }
 
     #[test]

@@ -27,6 +27,7 @@
 //! The dataset block also accepts the paper's Table 5 shorthand:
 //! `{"paper_dataset": 0, "scale_div": 100}`.
 
+use super::suites::ScaleOpts;
 use super::{Algorithm, Experiment};
 use crate::clustering::UpdateStrategy;
 use crate::geo::datasets::SpatialSpec;
@@ -399,6 +400,72 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
     })
 }
 
+// ---- bench scale spec -------------------------------------------------------
+
+/// Overlay a `bench scale` JSON spec onto `base` options. Keys:
+///
+/// ```text
+/// {
+///   "nodes_sweep": [1, 2, 4, 8, 16],
+///   "speculation": true,
+///   "faults": {"n_failures": 1, "task_fail_rate": 0.02},   // or false
+///   "scale_div": 8,
+///   "seed": 42
+/// }
+/// ```
+pub fn scale_opts_from_json(j: &Json, mut base: ScaleOpts) -> Result<ScaleOpts> {
+    check_known_keys(
+        j,
+        "scale spec",
+        &["nodes_sweep", "speculation", "faults", "scale_div", "seed"],
+    )?;
+    if let Some(v) = j.get("nodes_sweep") {
+        let arr = v.as_arr().context("nodes_sweep must be an array of node counts")?;
+        if arr.is_empty() {
+            bail!("nodes_sweep must not be empty");
+        }
+        base.nodes_sweep = arr
+            .iter()
+            .map(|x| as_pos_usize(x, "nodes_sweep entry"))
+            .collect::<Result<Vec<usize>>>()?;
+    }
+    if let Some(v) = j.get("speculation") {
+        base.speculation = v.as_bool().context("speculation must be true or false")?;
+    }
+    if let Some(v) = j.get("scale_div") {
+        base.scale_div = as_pos_usize(v, "scale_div")?;
+    }
+    if let Some(v) = j.get("seed") {
+        base.seed = as_nonneg_u64(v, "seed")?;
+    }
+    match j.get("faults") {
+        None => {}
+        Some(Json::Bool(b)) => base.faults = *b,
+        Some(f @ Json::Obj(_)) => {
+            check_known_keys(f, "faults", &["n_failures", "task_fail_rate"])?;
+            base.faults = true;
+            if let Some(v) = f.get("n_failures") {
+                base.n_failures = as_pos_usize(v, "faults.n_failures")?;
+            }
+            if let Some(v) = f.get("task_fail_rate") {
+                let r = v.as_f64().context("faults.task_fail_rate must be a number")?;
+                if !(0.0..=0.9).contains(&r) {
+                    bail!("faults.task_fail_rate must be in [0, 0.9], got {r}");
+                }
+                base.task_fail_rate = r;
+            }
+        }
+        Some(_) => bail!("faults must be a boolean or an object"),
+    }
+    Ok(base)
+}
+
+/// Parse a `bench scale` spec source over the given defaults.
+pub fn scale_opts_from_str(src: &str, base: ScaleOpts) -> Result<ScaleOpts> {
+    let j = Json::parse(src).context("scale spec is not valid JSON")?;
+    scale_opts_from_json(&j, base)
+}
+
 /// Serialize a grid of cells (array form).
 pub fn experiments_to_json(cells: &[Experiment]) -> Json {
     Json::Arr(cells.iter().map(experiment_to_json).collect())
@@ -673,6 +740,46 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{e:#}").contains("rounds"), "{e:#}");
+    }
+
+    #[test]
+    fn scale_spec_keys_overlay_defaults() {
+        let opts = scale_opts_from_str(
+            r#"{"nodes_sweep": [1, 2, 4], "speculation": false,
+                "faults": {"n_failures": 2, "task_fail_rate": 0.1},
+                "scale_div": 20, "seed": 7}"#,
+            ScaleOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(opts.nodes_sweep, vec![1, 2, 4]);
+        assert!(!opts.speculation);
+        assert!(opts.faults);
+        assert_eq!(opts.n_failures, 2);
+        assert_eq!(opts.task_fail_rate, 0.1);
+        assert_eq!(opts.scale_div, 20);
+        assert_eq!(opts.seed, 7);
+
+        // faults: false disables the identity twin; absent keys keep
+        // the defaults.
+        let opts = scale_opts_from_str(r#"{"faults": false}"#, ScaleOpts::default()).unwrap();
+        assert!(!opts.faults);
+        assert_eq!(opts.nodes_sweep, ScaleOpts::default().nodes_sweep);
+
+        // Typos, bad shapes, and out-of-range knobs are rejected.
+        for bad in [
+            r#"{"node_sweep": [1]}"#,
+            r#"{"nodes_sweep": []}"#,
+            r#"{"nodes_sweep": [0]}"#,
+            r#"{"faults": 3}"#,
+            r#"{"faults": {"task_fail_rate": 2.0}}"#,
+            r#"{"faults": {"rate": 0.1}}"#,
+            r#"{"speculation": "yes"}"#,
+        ] {
+            assert!(
+                scale_opts_from_str(bad, ScaleOpts::default()).is_err(),
+                "should reject {bad}"
+            );
+        }
     }
 
     #[test]

@@ -14,12 +14,14 @@
 use super::{run_cell, Algorithm, Experiment, ExperimentResult};
 use crate::clustering::api::SpatialClusterer as _;
 use crate::clustering::observe::StderrProgress;
-use crate::clustering::{Init, UpdateStrategy};
+use crate::clustering::{ClusterOutcome, Init, UpdateStrategy};
 use crate::config::ClusterConfig;
 use crate::geo::datasets::{generate, SpatialSpec};
 use crate::geo::{Metric, Point};
+use crate::mapreduce::locality_fraction;
 use crate::runtime::{assign_points, pairwise_costs, ComputeBackend};
 use crate::session::{ClusterSession, DatasetHandle};
+use crate::sim::FaultPlan;
 use crate::util::bench::{bench, header, BenchOpts};
 use crate::util::json::{obj, Json};
 use std::collections::BTreeMap;
@@ -254,7 +256,8 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
     });
     let pm = if opts.smoke { 4_096 } else { 1 << 14 };
     let cands: Vec<Point> = kdata.points[..256.min(kn)].to_vec();
-    let pair_stats = bench(&format!("pairwise {} cands x {pm} members", cands.len()), &bench_opts, || {
+    let pair_label = format!("pairwise {} cands x {pm} members", cands.len());
+    let pair_stats = bench(&pair_label, &bench_opts, || {
         pairwise_costs(backend.as_ref(), &cands, &kdata.points[..pm], Metric::SqEuclidean)
             .unwrap()
             .len()
@@ -389,6 +392,417 @@ fn kernel_json(stats: &crate::util::bench::Stats, evals_per_iter: f64) -> Json {
     j
 }
 
+// ---- scale bench ------------------------------------------------------------
+
+/// Knobs for the `bench scale` suite (the paper's speedup / sizeup /
+/// scaleup experiments under a fault-tolerant scheduler).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleOpts {
+    /// Divide the base dataset (Table 5 dataset 1) for the fixed-n
+    /// speedup sweep; sizeup/scaleup grow multiples of that base.
+    pub scale_div: usize,
+    pub seed: u64,
+    /// Cluster sizes of the speedup sweep; the same values serve as the
+    /// growth multipliers of sizeup (fixed nodes = the sweep max) and
+    /// scaleup (nodes and data grown together).
+    pub nodes_sweep: Vec<usize>,
+    /// Speculative execution on every suite session.
+    pub speculation: bool,
+    /// Run the faults-on twin of every cell and check the clustering
+    /// output is byte-identical (the identity gate CI enforces).
+    pub faults: bool,
+    /// Fail-stop node losses injected per faulty cell (non-master).
+    pub n_failures: usize,
+    /// Transient per-attempt task failure rate in faulty cells.
+    pub task_fail_rate: f64,
+    /// Tiny-n CI mode.
+    pub smoke: bool,
+    /// Real-compute worker threads (wallclock only).
+    pub threads: usize,
+}
+
+impl Default for ScaleOpts {
+    fn default() -> Self {
+        ScaleOpts {
+            scale_div: 8,
+            seed: 42,
+            nodes_sweep: vec![1, 2, 4, 8, 16],
+            speculation: true,
+            faults: true,
+            n_failures: 1,
+            task_fail_rate: 0.02,
+            smoke: false,
+            threads: 1,
+        }
+    }
+}
+
+impl ScaleOpts {
+    /// CI smoke defaults: tiny base n, short sweep, one fault per cell.
+    pub fn smoke() -> ScaleOpts {
+        ScaleOpts {
+            scale_div: 400,
+            nodes_sweep: vec![1, 2, 4],
+            smoke: true,
+            ..ScaleOpts::default()
+        }
+    }
+}
+
+/// Controlled iteration count for every scale cell: isolates the scaling
+/// curves from per-dataset convergence luck, as in Table 6.
+const SCALE_ITERS: usize = 4;
+
+/// One (experiment, algorithm, nodes, n) cell of the scale bench.
+#[derive(Clone)]
+struct ScaleCell {
+    experiment: &'static str,
+    algorithm: &'static str,
+    nodes: usize,
+    n_points: usize,
+    time_ms: u64,
+    iterations: usize,
+    cost: f64,
+    dist_evals: u64,
+    jobs: usize,
+    attempts: usize,
+    speculative: usize,
+    failed_attempts: usize,
+    node_local: usize,
+    host_local: usize,
+    remote: usize,
+    wall_s: f64,
+    fault: Option<FaultCell>,
+}
+
+/// The faults-on twin of a cell: same clustering work under a seeded
+/// fault plan, plus the byte-identity verdict.
+#[derive(Clone)]
+struct FaultCell {
+    time_ms: u64,
+    failed_attempts: usize,
+    n_node_failures: usize,
+    task_fail_rate: f64,
+    identical: bool,
+}
+
+impl ScaleCell {
+    fn locality_ratio(&self) -> f64 {
+        locality_fraction(self.node_local, self.host_local, self.remote)
+    }
+
+    fn to_json(&self) -> Json {
+        let fault = match &self.fault {
+            None => Json::Null,
+            Some(f) => obj(vec![
+                ("time_ms", Json::Num(f.time_ms as f64)),
+                ("failed_attempts", Json::Num(f.failed_attempts as f64)),
+                ("n_node_failures", Json::Num(f.n_node_failures as f64)),
+                ("task_fail_rate", Json::Num(f.task_fail_rate)),
+                ("identical", Json::Bool(f.identical)),
+            ]),
+        };
+        obj(vec![
+            ("experiment", Json::Str(self.experiment.to_string())),
+            ("algorithm", Json::Str(self.algorithm.to_string())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("n_points", Json::Num(self.n_points as f64)),
+            ("time_ms", Json::Num(self.time_ms as f64)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("cost", Json::Num(self.cost)),
+            ("dist_evals", Json::Num(self.dist_evals as f64)),
+            ("jobs", Json::Num(self.jobs as f64)),
+            (
+                "attempts",
+                obj(vec![
+                    ("total", Json::Num(self.attempts as f64)),
+                    ("speculative", Json::Num(self.speculative as f64)),
+                    ("failed", Json::Num(self.failed_attempts as f64)),
+                ]),
+            ),
+            (
+                "locality",
+                obj(vec![
+                    ("node_local", Json::Num(self.node_local as f64)),
+                    ("host_local", Json::Num(self.host_local as f64)),
+                    ("remote", Json::Num(self.remote as f64)),
+                    ("node_local_ratio", Json::Num(self.locality_ratio())),
+                ]),
+            ),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("fault", fault),
+        ])
+    }
+}
+
+/// Everything one fit contributes to a cell row.
+struct ScaleFit {
+    out: ClusterOutcome,
+    jobs: usize,
+    attempts: usize,
+    speculative: usize,
+    failed: usize,
+    node_local: usize,
+    host_local: usize,
+    remote: usize,
+    wall_s: f64,
+}
+
+fn scale_fit(
+    backend: &Arc<dyn ComputeBackend>,
+    opts: &ScaleOpts,
+    algo: Algorithm,
+    nodes: usize,
+    points: &Arc<Vec<Point>>,
+    plan: Option<FaultPlan>,
+) -> ScaleFit {
+    let mut builder = ClusterSession::builder()
+        .cluster(ClusterConfig::commodity_cluster(nodes))
+        .backend(backend.clone())
+        .seed(opts.seed)
+        .threads(opts.threads)
+        .speculation(opts.speculation);
+    if let Some(p) = plan {
+        // Transient failures must stay transient: size the retry budget
+        // so that the chance of any task exhausting it is ~1e-12 even at
+        // the highest accepted fail rate (an identity cell must never
+        // abort on a retryable fault).
+        let rate = p.task_fail_rate;
+        let budget = if rate > 0.0 && rate < 1.0 {
+            ((1e-12f64).ln() / rate.ln()).ceil() as usize
+        } else {
+            0
+        };
+        builder = builder.faults(p).max_attempts(budget.clamp(16, 512));
+    }
+    let mut session = builder.build().expect("session build cannot fail with an explicit backend");
+    let data = session.ingest_points("points", points.clone());
+    let mut exp = Experiment::paper_cell(algo, nodes, 0, opts.seed);
+    exp.spec = SpatialSpec::new(points.len(), 9, opts.seed);
+    exp.fixed_iters = Some(SCALE_ITERS);
+    let wall0 = Instant::now();
+    let out = exp.clusterer().fit(&mut session, &data).expect("scale cell failed");
+    let wall_s = wall0.elapsed().as_secs_f64();
+    let h = session.history();
+    ScaleFit {
+        jobs: session.jobs_run(),
+        attempts: h.iter().map(|j| j.n_attempts).sum(),
+        speculative: h.iter().map(|j| j.n_speculative).sum(),
+        failed: h.iter().map(|j| j.n_failed_attempts).sum(),
+        node_local: h.iter().map(|j| j.n_node_local_maps).sum(),
+        host_local: h.iter().map(|j| j.n_host_local_maps).sum(),
+        remote: h.iter().map(|j| j.n_remote_maps).sum(),
+        out,
+        wall_s,
+    }
+}
+
+fn scale_cell(
+    backend: &Arc<dyn ComputeBackend>,
+    opts: &ScaleOpts,
+    experiment: &'static str,
+    algo: Algorithm,
+    nodes: usize,
+    points: &Arc<Vec<Point>>,
+) -> ScaleCell {
+    let healthy = scale_fit(backend, opts, algo, nodes, points, None);
+    let fault = if opts.faults {
+        // Kill nodes inside the healthy run's window so the loss always
+        // lands mid-computation; the plan is pure function of the cell.
+        let plan = FaultPlan::seeded(
+            opts.seed ^ ((nodes as u64) << 8) ^ points.len() as u64,
+            nodes,
+            opts.n_failures,
+            healthy.out.sim_seconds,
+            opts.task_fail_rate,
+        );
+        let n_node_failures = plan.node_failures.len();
+        let task_fail_rate = plan.task_fail_rate;
+        let faulty = scale_fit(backend, opts, algo, nodes, points, Some(plan));
+        let identical = faulty.out.medoids == healthy.out.medoids
+            && faulty.out.cost == healthy.out.cost
+            && faulty.out.dist_evals == healthy.out.dist_evals
+            && faulty.out.iterations == healthy.out.iterations;
+        Some(FaultCell {
+            time_ms: (faulty.out.sim_seconds * 1e3).round() as u64,
+            failed_attempts: faulty.failed,
+            n_node_failures,
+            task_fail_rate,
+            identical,
+        })
+    } else {
+        None
+    };
+    ScaleCell {
+        experiment,
+        algorithm: algo.name(),
+        nodes,
+        n_points: points.len(),
+        time_ms: (healthy.out.sim_seconds * 1e3).round() as u64,
+        iterations: healthy.out.iterations,
+        cost: healthy.out.cost,
+        dist_evals: healthy.out.dist_evals,
+        jobs: healthy.jobs,
+        attempts: healthy.attempts,
+        speculative: healthy.speculative,
+        failed_attempts: healthy.failed,
+        node_local: healthy.node_local,
+        host_local: healthy.host_local,
+        remote: healthy.remote,
+        wall_s: healthy.wall_s,
+        fault,
+    }
+}
+
+/// Per-algorithm ratio curves for one experiment, as `[x, ratio]` pairs
+/// in ascending-x order (object keys would sort lexicographically —
+/// "16" before "2"). `invert` selects base/t (speedup: bigger is
+/// better) vs t/base (sizeup/scaleup growth).
+fn ratio_curves(cells: &[ScaleCell], experiment: &str, invert: bool) -> Json {
+    let mut by_algo: BTreeMap<String, Vec<(usize, u64)>> = BTreeMap::new();
+    for c in cells.iter().filter(|c| c.experiment == experiment) {
+        let x = if experiment == "sizeup" { c.n_points } else { c.nodes };
+        by_algo.entry(c.algorithm.to_string()).or_default().push((x, c.time_ms));
+    }
+    let mut out = BTreeMap::new();
+    for (algo, mut pts) in by_algo {
+        pts.sort_unstable();
+        let base = pts.first().map(|&(_, t)| t).unwrap_or(1).max(1);
+        let curve: Vec<Json> = pts
+            .iter()
+            .map(|&(x, t)| {
+                let t = t.max(1);
+                let r = if invert { base as f64 / t as f64 } else { t as f64 / base as f64 };
+                Json::Arr(vec![Json::Num(x as f64), Json::Num(r)])
+            })
+            .collect();
+        out.insert(algo, Json::Arr(curve));
+    }
+    Json::Obj(out)
+}
+
+/// The paper's three scaling experiments — speedup (fixed n, growing
+/// cluster), sizeup (fixed cluster, growing n), scaleup (both grown
+/// together) — for the three MR algorithms, on the commodity cluster
+/// with the fault-tolerant scheduler. Every cell reports sim time, job
+/// and iteration counts, locality ratios, and attempt statistics; with
+/// [`ScaleOpts::faults`] each cell also runs a fault-injected twin and
+/// verifies the clustering output is byte-identical. Returns the
+/// `BENCH_scale.json` document.
+pub fn scale_suite(backend: &Arc<dyn ComputeBackend>, opts: &ScaleOpts) -> Json {
+    let mut sweep = opts.nodes_sweep.clone();
+    sweep.retain(|&n| n >= 1);
+    sweep.sort_unstable();
+    sweep.dedup();
+    if sweep.is_empty() {
+        sweep = ScaleOpts::default().nodes_sweep;
+    }
+    let max_nodes = *sweep.last().unwrap();
+    let algos = [
+        Algorithm::KMedoidsPlusPlusMR,
+        Algorithm::KMedoidsRandomMR,
+        Algorithm::KMedoidsScalableMR,
+    ];
+    let n_base = SpatialSpec::paper_dataset_scaled(0, opts.scale_div.max(1), opts.seed).n_points;
+
+    // One generation per distinct size, shared across every session.
+    let mut cache: BTreeMap<usize, Arc<Vec<Point>>> = BTreeMap::new();
+    fn dataset(
+        cache: &mut BTreeMap<usize, Arc<Vec<Point>>>,
+        n: usize,
+        seed: u64,
+    ) -> Arc<Vec<Point>> {
+        cache
+            .entry(n)
+            .or_insert_with(|| Arc::new(generate(&SpatialSpec::new(n, 9, seed)).points))
+            .clone()
+    }
+
+    let mut cells: Vec<ScaleCell> = Vec::new();
+    // The three experiments overlap at their corners (e.g. scaleup m=1
+    // is the same cell as speedup nodes=1): memoize by (algo, nodes, n)
+    // so each distinct cell — and its fault twin — is computed once.
+    let mut memo: BTreeMap<(&'static str, usize, usize), ScaleCell> = BTreeMap::new();
+    let run = |cells: &mut Vec<ScaleCell>,
+               cache: &mut BTreeMap<usize, Arc<Vec<Point>>>,
+               memo: &mut BTreeMap<(&'static str, usize, usize), ScaleCell>,
+               experiment: &'static str,
+               nodes: usize,
+               n: usize| {
+        let pts = dataset(cache, n, opts.seed);
+        for algo in algos {
+            let mut c = match memo.get(&(algo.name(), nodes, n)) {
+                Some(cached) => cached.clone(),
+                None => {
+                    let fresh = scale_cell(backend, opts, experiment, algo, nodes, &pts);
+                    memo.insert((algo.name(), nodes, n), fresh.clone());
+                    fresh
+                }
+            };
+            c.experiment = experiment;
+            let verdict = match &c.fault {
+                Some(f) if !f.identical => "  IDENTITY MISMATCH",
+                Some(_) => "  faults: identical",
+                None => "",
+            };
+            eprintln!(
+                "  [scale/{experiment}] {:<22} nodes={:<3} n={:<8} -> {:>8} ms  ({} jobs, \
+                 locality {:.2}){verdict}",
+                c.algorithm,
+                nodes,
+                n,
+                c.time_ms,
+                c.jobs,
+                c.locality_ratio(),
+            );
+            cells.push(c);
+        }
+    };
+
+    header("scale: speedup (fixed n, growing cluster)");
+    for &nodes in &sweep {
+        run(&mut cells, &mut cache, &mut memo, "speedup", nodes, n_base);
+    }
+    header("scale: sizeup (fixed cluster, growing n)");
+    for &m in &sweep {
+        run(&mut cells, &mut cache, &mut memo, "sizeup", max_nodes, n_base * m);
+    }
+    header("scale: scaleup (cluster and n grown together)");
+    for &m in &sweep {
+        run(&mut cells, &mut cache, &mut memo, "scaleup", m, n_base * m);
+    }
+
+    let identity_ok =
+        cells.iter().all(|c| c.fault.as_ref().map(|f| f.identical).unwrap_or(true));
+    let faults = if opts.faults {
+        obj(vec![
+            ("n_failures", Json::Num(opts.n_failures as f64)),
+            ("task_fail_rate", Json::Num(opts.task_fail_rate)),
+        ])
+    } else {
+        Json::Bool(false)
+    };
+    obj(vec![
+        ("bench", Json::Str("scale".into())),
+        ("smoke", Json::Bool(opts.smoke)),
+        ("backend", Json::Str(backend.name().to_string())),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("scale_div", Json::Num(opts.scale_div as f64)),
+        ("n_base", Json::Num(n_base as f64)),
+        (
+            "nodes_sweep",
+            Json::Arr(sweep.iter().map(|&n| Json::Num(n as f64)).collect()),
+        ),
+        ("speculation", Json::Bool(opts.speculation)),
+        ("faults", faults),
+        ("cells", Json::Arr(cells.iter().map(ScaleCell::to_json).collect())),
+        ("speedup", ratio_curves(&cells, "speedup", true)),
+        ("sizeup", ratio_curves(&cells, "sizeup", false)),
+        ("scaleup", ratio_curves(&cells, "scaleup", false)),
+        ("identity_ok", Json::Bool(identity_ok)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -437,6 +851,37 @@ mod tests {
         let s1 = j.get("speedup_vs_1_thread").unwrap().get("1").unwrap().as_f64().unwrap();
         assert!((s1 - 1.0).abs() < 1e-9);
         assert_eq!(j.get("kernels").unwrap().as_arr().unwrap().len(), 3);
+        // The document is valid, re-parseable JSON.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn scale_suite_smoke_structure_and_identity() {
+        let mut opts = ScaleOpts::smoke();
+        opts.scale_div = 1300; // ~1000 points per base cell
+        opts.nodes_sweep = vec![1, 2];
+        opts.task_fail_rate = 0.1;
+        let j = scale_suite(&be(), &opts);
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("scale"));
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        // 3 algorithms x (speedup + sizeup + scaleup) x 2 sweep points.
+        assert_eq!(cells.len(), 3 * 3 * 2);
+        // Every cell ran its faults-on twin and stayed byte-identical —
+        // the determinism contract the CI gate enforces.
+        assert_eq!(j.get("identity_ok").unwrap().as_bool(), Some(true));
+        for c in cells {
+            let f = c.get("fault").unwrap();
+            assert_eq!(f.get("identical").and_then(|b| b.as_bool()), Some(true), "{c}");
+            assert!(c.get("jobs").unwrap().as_usize().unwrap() > 0);
+            let loc = c.get("locality").unwrap();
+            let ratio = loc.get("node_local_ratio").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&ratio));
+        }
+        // Ratio curves exist for the three MR algorithms.
+        for key in ["speedup", "sizeup", "scaleup"] {
+            let curves = j.get(key).unwrap().as_obj().unwrap();
+            assert_eq!(curves.len(), 3, "{key}");
+        }
         // The document is valid, re-parseable JSON.
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }

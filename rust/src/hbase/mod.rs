@@ -268,6 +268,31 @@ mod tests {
     }
 
     #[test]
+    fn recovered_node_serves_new_regions() {
+        let mut hm = HMaster::new(3);
+        hm.create_points_table("a", pts(60_000), 25, 100_000);
+        assert!(hm.fail_node(1) > 0);
+        assert!(hm.regions_per_node()[1] == 0);
+        hm.recover_node(1);
+        hm.create_points_table("b", pts(60_000), 25, 100_000);
+        assert!(hm.regions_per_node()[1] > 0, "recovered node serves new regions");
+    }
+
+    #[test]
+    fn failover_balances_over_survivors() {
+        let mut hm = HMaster::new(4);
+        hm.create_points_table("pts", pts(160_000), 25, 100_000); // 40 regions
+        hm.fail_node(2);
+        let counts = hm.regions_per_node();
+        assert_eq!(counts[2], 0);
+        let survivors: Vec<usize> =
+            counts.iter().enumerate().filter(|&(n, _)| n != 2).map(|(_, &c)| c).collect();
+        let max = survivors.iter().max().unwrap();
+        let min = survivors.iter().min().unwrap();
+        assert!(max - min <= 2, "failover keeps regions balanced: {counts:?}");
+    }
+
+    #[test]
     fn cell_table_put_get() {
         let mut hm = HMaster::new(2);
         hm.create_cell_table("medoids", &["m"]);

@@ -19,7 +19,7 @@
 
 use anyhow::{bail, Context, Result};
 use kmedoids_mr::config::ClusterConfig;
-use kmedoids_mr::driver::suites::SuiteOpts;
+use kmedoids_mr::driver::suites::{ScaleOpts, SuiteOpts};
 use kmedoids_mr::driver::{run_cell, spec, Algorithm, Experiment, ExperimentResult};
 use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
 use kmedoids_mr::geo::io::write_csv;
@@ -27,6 +27,7 @@ use kmedoids_mr::geo::{Metric, MAX_DIMS};
 use kmedoids_mr::prelude::{ClusterSession, IterationLog, StderrProgress};
 use kmedoids_mr::report;
 use kmedoids_mr::runtime::{self, BackendKind};
+use kmedoids_mr::util::json::Json;
 use std::collections::HashMap;
 
 fn main() {
@@ -38,7 +39,7 @@ fn main() {
 
 /// Flags that never take a value; they must not swallow a following
 /// positional (`bench --trace fig5` keeps `fig5` as the suite name).
-const BOOL_FLAGS: &[&str] = &["quality", "trace", "smoke", "latlon"];
+const BOOL_FLAGS: &[&str] = &["quality", "trace", "smoke", "latlon", "no-faults", "no-speculation"];
 
 /// Tiny flag parser: `--key value` pairs after the subcommand. Unknown
 /// flags are rejected (with a did-you-mean suggestion) by
@@ -181,6 +182,12 @@ USAGE:
                     [--threads N] [--trace]
   kmedoids-mr bench perf [--scale DIV] [--seed S] [--threads 1,2,4]
                     [--out BENCH_perf.json] [--smoke]
+  kmedoids-mr bench scale [--nodes 1,2,4,8,16] [--scale DIV] [--seed S]
+                    [--faults N] [--fail-rate X] [--no-faults]
+                    [--no-speculation] [--threads N] [--smoke]
+                    [--out BENCH_scale.json]
+  kmedoids-mr bench scale --spec SCALE.json [--smoke] [--threads N]
+                    [--out BENCH_scale.json]
   kmedoids-mr inspect-artifacts
 
 ALGO:   kmedoids++-mr | kmedoids-mr | kmedoids-scalable-mr | kmedoids-serial
@@ -198,6 +205,14 @@ seeding of kmedoids-scalable-mr (defaults: l = 2k, 5 rounds).
 `bench perf` sweeps a comma-separated thread list, verifies the outputs
 are identical at every width, and writes the wall-clock trajectory to
 BENCH_perf.json.
+
+`bench scale` reproduces the paper's speedup/sizeup/scaleup experiments
+for the three MR algorithms on a commodity cluster with the
+fault-tolerant scheduler (task retries, speculative twins, node loss +
+DFS re-replication). Every cell also runs a fault-injected twin and the
+command exits non-zero unless the clustering output is byte-identical
+with faults on vs off. A --spec file accepts keys nodes_sweep /
+speculation / faults / scale_div / seed.
 
 Run-spec JSON (one cell object or an array; see driver::spec docs):
   {{\"algorithm\": \"kmedoids++-mr\", \"nodes\": 7, \"k\": 9,
@@ -378,34 +393,56 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Parse `--threads` for `bench perf`: a comma-separated positive list
-/// ("1,2,4"), or a single integer.
-fn parse_threads_list(s: &str) -> Result<Vec<usize>> {
+/// Parse a comma-separated positive integer list ("1,2,4") for `--flag`.
+fn parse_usize_list(flag: &str, s: &str) -> Result<Vec<usize>> {
     let mut out = Vec::new();
     for part in s.split(',') {
         let n: usize = part
             .trim()
             .parse()
-            .with_context(|| format!("--threads must be integers like 1,2,4 (got {part:?})"))?;
+            .with_context(|| format!("--{flag} must be integers like 1,2,4 (got {part:?})"))?;
         if n == 0 {
-            bail!("--threads entries must be >= 1");
+            bail!("--{flag} entries must be >= 1");
         }
         out.push(n);
     }
     Ok(out)
 }
 
+/// Flags that only `bench scale` understands.
+const SCALE_ONLY_FLAGS: &[&str] =
+    &["nodes", "faults", "fail-rate", "no-faults", "no-speculation", "spec"];
+
 fn cmd_bench(args: &Args) -> Result<()> {
-    args.check_known("bench", &["scale", "seed", "backend", "trace", "threads", "out", "smoke"])?;
+    args.check_known(
+        "bench",
+        &[
+            "scale", "seed", "backend", "trace", "threads", "out", "smoke", "nodes", "faults",
+            "fail-rate", "no-faults", "no-speculation", "spec",
+        ],
+    )?;
     args.check_positionals("bench", 1)?;
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table6");
 
     if which == "perf" {
+        for flag in SCALE_ONLY_FLAGS {
+            if args.has(flag) {
+                bail!("--{flag} only applies to `bench scale`");
+            }
+        }
         return cmd_bench_perf(args);
+    }
+    if which == "scale" {
+        return cmd_bench_scale(args);
     }
     for flag in ["out", "smoke"] {
         if args.has(flag) {
-            bail!("--{flag} only applies to `bench perf`");
+            bail!("--{flag} only applies to `bench perf` or `bench scale`");
+        }
+    }
+    for flag in SCALE_ONLY_FLAGS {
+        if args.has(flag) {
+            bail!("--{flag} only applies to `bench scale`");
         }
     }
     let suite_threads = args.get_usize("threads", 1)?;
@@ -450,9 +487,95 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 );
             }
         }
-        other => bail!("unknown bench {other:?} (table6|fig4|fig5|ablation|perf)"),
+        other => bail!("unknown bench {other:?} (table6|fig4|fig5|ablation|perf|scale)"),
     }
     Ok(())
+}
+
+/// `bench scale`: the paper's speedup/sizeup/scaleup experiments for the
+/// three MR algorithms under the fault-tolerant scheduler, written to
+/// `BENCH_scale.json` (see `driver::suites::scale_suite`). Exits non-zero
+/// when the faults-on vs faults-off identity check reports a mismatch —
+/// the blocking CI quality gate.
+fn cmd_bench_scale(args: &Args) -> Result<()> {
+    if args.has("trace") {
+        bail!("--trace does not apply to `bench scale` (it prints its own progress)");
+    }
+    let smoke = args.has("smoke");
+    let mut opts = if smoke { ScaleOpts::smoke() } else { ScaleOpts::default() };
+    if let Some(path) = args.get("spec") {
+        const SPEC_CONFLICTS: &[&str] =
+            &["nodes", "faults", "fail-rate", "no-faults", "no-speculation", "scale", "seed"];
+        for flag in SPEC_CONFLICTS {
+            if args.has(flag) {
+                bail!("--{flag} conflicts with --spec (put it in the spec file)");
+            }
+        }
+        let src = std::fs::read_to_string(path).with_context(|| format!("read spec {path:?}"))?;
+        opts = spec::scale_opts_from_str(&src, opts)?;
+    } else {
+        if let Some(s) = args.get("nodes") {
+            opts.nodes_sweep = parse_usize_list("nodes", s)?;
+        }
+        opts.scale_div = args.get_usize("scale", opts.scale_div)?.max(1);
+        opts.seed = args.get_u64("seed", opts.seed)?;
+        opts.n_failures = args.get_usize("faults", opts.n_failures)?;
+        if let Some(r) = args.get("fail-rate") {
+            let r: f64 = r
+                .parse()
+                .with_context(|| format!("--fail-rate must be a number, got {r:?}"))?;
+            if !(0.0..=0.9).contains(&r) {
+                bail!("--fail-rate must be in [0, 0.9], got {r}");
+            }
+            opts.task_fail_rate = r;
+        }
+        if args.has("no-faults") {
+            opts.faults = false;
+        }
+        if args.has("no-speculation") {
+            opts.speculation = false;
+        }
+    }
+    opts.smoke = smoke;
+    opts.threads = args.get_usize("threads", 1)?.max(1);
+    let backend = backend_from(args, 2048)?;
+    let report = kmedoids_mr::driver::suites::scale_suite(&backend, &opts);
+    let out = args.get("out").unwrap_or("BENCH_scale.json");
+    std::fs::write(out, format!("{report}\n")).with_context(|| format!("write {out:?}"))?;
+
+    println!("\nscale summary (full report: {out}):");
+    for key in ["speedup", "sizeup", "scaleup"] {
+        if let Some(curves) = report.get(key).and_then(|c| c.as_obj()) {
+            println!("  {key}:");
+            for (algo, curve) in curves {
+                // Curves are ascending-x arrays of [x, ratio] pairs.
+                let line: Vec<String> = curve
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|pair| {
+                        let p = pair.as_arr()?;
+                        let x = p.first()?.as_u64()?;
+                        let r = p.get(1)?.as_f64()?;
+                        Some(format!("{x}:{r:.2}"))
+                    })
+                    .collect();
+                println!("    {algo:<22} {}", line.join("  "));
+            }
+        }
+    }
+    let faults_enabled = !matches!(report.get("faults"), Some(Json::Bool(false)));
+    if !faults_enabled {
+        println!("faults disabled (--no-faults): identity not checked");
+        return Ok(());
+    }
+    match report.get("identity_ok").and_then(|v| v.as_bool()) {
+        Some(true) => {
+            println!("faults-on vs faults-off clustering output identical: yes");
+            Ok(())
+        }
+        _ => bail!("faults-on vs faults-off clustering output MISMATCH (determinism bug)"),
+    }
 }
 
 /// `bench perf`: kernel + e2e wall-clock trajectory, written to
@@ -463,7 +586,7 @@ fn cmd_bench_perf(args: &Args) -> Result<()> {
     }
     let smoke = args.has("smoke");
     let threads = match args.get("threads") {
-        Some(s) => parse_threads_list(s)?,
+        Some(s) => parse_usize_list("threads", s)?,
         None if smoke => vec![1, 2],
         None => vec![1, 2, 4],
     };
@@ -598,12 +721,13 @@ mod tests {
     }
 
     #[test]
-    fn threads_lists_parse_and_reject_zero() {
-        assert_eq!(parse_threads_list("1,2,4").unwrap(), vec![1, 2, 4]);
-        assert_eq!(parse_threads_list(" 8 ").unwrap(), vec![8]);
-        assert!(parse_threads_list("0,2").is_err());
-        assert!(parse_threads_list("two").is_err());
-        assert!(parse_threads_list("").is_err());
+    fn usize_lists_parse_and_reject_zero() {
+        assert_eq!(parse_usize_list("threads", "1,2,4").unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_usize_list("nodes", " 8 ").unwrap(), vec![8]);
+        assert!(parse_usize_list("threads", "0,2").is_err());
+        let e = parse_usize_list("nodes", "two").unwrap_err();
+        assert!(format!("{e:#}").contains("--nodes"), "{e:#}");
+        assert!(parse_usize_list("threads", "").is_err());
     }
 
     #[test]

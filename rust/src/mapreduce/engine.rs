@@ -1,6 +1,13 @@
 //! The MapReduce execution engine: a JobTracker scheduling task attempts
-//! onto simulated TaskTrackers, with data-local placement, combiners,
-//! shuffle cost, speculative execution, and fail-stop node failures.
+//! onto simulated TaskTrackers, with tiered data-local placement
+//! (node-local > host-local > remote, charged through the net model),
+//! combiners, shuffle cost, straggler speculation for maps *and* reduces
+//! (first finisher wins, the loser's sim time stays charged), transient
+//! task failures with retry up to [`Cluster::max_attempts`], and
+//! fail-stop node failures driven by a seeded
+//! [`crate::sim::FaultPlan`] — node loss re-replicates DFS blocks, fails
+//! HBase regions over, and makes pending map tasks re-resolve their
+//! split locations (losing locality realistically).
 //!
 //! **Real compute, simulated time.** Every map/reduce task's user code
 //! actually runs (including PJRT kernel calls); the *simulated* duration
@@ -19,14 +26,18 @@
 //! changes.
 
 use super::api::{Counters, InputShapeError, Key, MapCtx, ReduceCtx, Val};
-use super::job::{Input, JobSpec, SplitMeta};
+use super::job::{Input, JobSpec, SplitMeta, SplitOrigin};
 use crate::config::ClusterConfig;
-use crate::dfs::NameNode;
+use crate::dfs::{NameNode, NoLiveDataNodes};
 use crate::hbase::HMaster;
-use crate::sim::{CostModel, Event, EventQueue, SimTime, TaskWork};
+use crate::sim::{CostModel, Event, EventQueue, FaultPlan, SimTime, TaskWork};
 use crate::util::pool::parallel_map_indexed;
 use crate::util::rng::Rng;
 use std::sync::Arc;
+
+/// Hadoop's `mapred.map.max.attempts` default: a task whose attempts fail
+/// this many times fails the whole job.
+pub const DEFAULT_MAX_ATTEMPTS: usize = 4;
 
 /// A job failed before producing output (e.g. a mapper rejected the
 /// input representation it was wired to). Carries the job name so a
@@ -62,14 +73,43 @@ pub struct JobStats {
     pub n_map_tasks: usize,
     pub n_reduce_tasks: usize,
     pub n_attempts: usize,
+    /// Speculative duplicate attempts launched (map + reduce twins).
     pub n_speculative: usize,
+    /// Attempts that died: killed by a node failure or by a transient
+    /// task failure from the fault plan.
     pub n_failed_attempts: usize,
+    /// Winning map attempts that ran on a node holding the split's data.
+    pub n_node_local_maps: usize,
+    /// Winning map attempts on a different node sharing the data's host.
+    pub n_host_local_maps: usize,
+    /// Winning map attempts that read their input across hosts.
+    pub n_remote_maps: usize,
     pub map_durations_s: Vec<f64>,
     pub reduce_durations_s: Vec<f64>,
     pub shuffle_bytes: u64,
     pub duration_s: f64,
     pub t_start: f64,
     pub t_end: f64,
+}
+
+impl JobStats {
+    /// Fraction of winning map attempts that were node-local (1.0 when
+    /// the job ran no maps — nothing was misplaced).
+    pub fn node_locality_ratio(&self) -> f64 {
+        locality_fraction(self.n_node_local_maps, self.n_host_local_maps, self.n_remote_maps)
+    }
+}
+
+/// Node-local fraction of `(node_local, host_local, remote)` map counts;
+/// 1.0 when no maps ran (nothing was misplaced). Shared by [`JobStats`]
+/// and the scale bench's per-cell aggregation.
+pub fn locality_fraction(node_local: usize, host_local: usize, remote: usize) -> f64 {
+    let total = node_local + host_local + remote;
+    if total == 0 {
+        1.0
+    } else {
+        node_local as f64 / total as f64
+    }
 }
 
 /// Cached result of one map task's real computation.
@@ -94,6 +134,15 @@ enum TaskState {
     Done,
 }
 
+/// How close a map attempt ran to its input data (Hadoop's scheduling
+/// tiers: node-local > host-local ("rack"-local) > remote).
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Locality {
+    NodeLocal,
+    HostLocal,
+    Remote,
+}
+
 struct Attempt {
     task: TaskRef,
     node: usize,
@@ -101,6 +150,7 @@ struct Attempt {
     duration: f64,
     live: bool,
     speculative: bool,
+    locality: Locality,
 }
 
 /// The persistent simulated cluster: storage layers + global sim clock.
@@ -123,6 +173,16 @@ pub struct Cluster {
     pub counters: Counters,
     /// Number of jobs completed on this cluster.
     pub jobs_run: usize,
+    /// A task whose attempts *fail* this many times (transient fault-plan
+    /// failures — node-loss kills do not count, as in Hadoop) fails the
+    /// job with a [`JobError`]. Default [`DEFAULT_MAX_ATTEMPTS`].
+    pub max_attempts: usize,
+    /// Per-attempt transient failure probability (from the fault plan).
+    task_fail_rate: f64,
+    /// Seed for the per-attempt failure draws; combined with the (job,
+    /// task, attempt) identity so draws replay identically regardless of
+    /// scheduling order or thread count.
+    fault_seed: u64,
     #[allow(dead_code)]
     rng: Rng,
     /// Worker-pool width for map/reduce *real* compute (wallclock only;
@@ -150,6 +210,9 @@ impl Cluster {
             history: Vec::new(),
             counters: Counters::default(),
             jobs_run: 0,
+            max_attempts: DEFAULT_MAX_ATTEMPTS,
+            task_fail_rate: 0.0,
+            fault_seed: seed,
             rng: Rng::new(seed),
             compute_threads: 1,
         }
@@ -176,6 +239,26 @@ impl Cluster {
         assert!(node != self.config.master, "master failure is out of scope (as in the paper)");
         self.failure_plan.push((at_s, node));
         self.failure_plan.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+
+    /// Register a whole [`FaultPlan`]: its node failures/recoveries join
+    /// the schedule and its transient task-failure rate + seed arm the
+    /// per-attempt failure draws.
+    pub fn apply_fault_plan(&mut self, plan: &FaultPlan) {
+        for &(at, node) in &plan.node_failures {
+            self.plan_failure(at, node);
+        }
+        for &(at, node) in &plan.node_recoveries {
+            self.plan_recovery(at, node);
+        }
+        self.task_fail_rate = plan.task_fail_rate;
+        self.fault_seed = plan.seed;
+    }
+
+    /// Builder-style [`Cluster::apply_fault_plan`].
+    pub fn with_faults(mut self, plan: &FaultPlan) -> Cluster {
+        self.apply_fault_plan(plan);
+        self
     }
 
     pub fn plan_recovery(&mut self, at_s: f64, node: usize) {
@@ -222,9 +305,15 @@ impl Cluster {
         // Inject failures/recoveries that fall inside this job's window
         // as events relative to t0; earlier ones apply immediately. Events
         // still unfired when the job finishes are put back on the plan.
-        for (at, node) in std::mem::take(&mut self.failure_plan) {
+        let due = std::mem::take(&mut self.failure_plan);
+        for (i, &(at, node)) in due.iter().enumerate() {
             if at <= t0.0 {
-                self.apply_node_failure(node);
+                if let Err(e) = self.apply_node_failure(node) {
+                    // Keep the not-yet-applied tail of the plan.
+                    self.failure_plan.extend(due.iter().skip(i + 1).copied());
+                    self.restore_plans(t0, &mut q);
+                    return Err(JobError { job: spec.name.clone(), message: e.to_string() });
+                }
             } else {
                 q.schedule(SimTime::secs(at - t0.0), Event::NodeFail { node });
             }
@@ -235,6 +324,17 @@ impl Cluster {
             } else {
                 q.schedule(SimTime::secs(at - t0.0), Event::NodeRecover { node });
             }
+        }
+        // A cluster with zero live nodes cannot schedule anything: report
+        // the typed condition instead of deadlocking the event loop (this
+        // is where a job lands after an earlier NoLiveDataNodes abort).
+        if self.n_alive() == 0 {
+            self.restore_plans(t0, &mut q);
+            return Err(JobError {
+                job: spec.name.clone(),
+                message: "cluster has no live nodes (recover a node before submitting jobs)"
+                    .to_string(),
+            });
         }
 
         // Run every (cached, deterministic) task computation up front,
@@ -253,14 +353,7 @@ impl Cluster {
             map_out.push(Arc::new(out));
         }
         if let Some(e) = shape_err {
-            // Put unfired failure/recovery events back on the plan.
-            while let Some((at, ev)) = q.next() {
-                match ev {
-                    Event::NodeFail { node } => self.failure_plan.push((t0.0 + at.0, node)),
-                    Event::NodeRecover { node } => self.recover_plan.push((t0.0 + at.0, node)),
-                    _ => {}
-                }
-            }
+            self.restore_plans(t0, &mut q);
             return Err(JobError { job: spec.name.clone(), message: e.to_string() });
         }
 
@@ -289,8 +382,13 @@ impl Cluster {
             map_state: vec![TaskState::Pending; n_maps],
             map_out,
             map_done_node: vec![usize::MAX; n_maps],
+            map_counters_merged: vec![false; n_maps],
+            map_seq: vec![0; n_maps],
+            map_failed: vec![0; n_maps],
             reduce_state: vec![TaskState::Pending; n_reduces],
             reduce_out,
+            reduce_seq: vec![0; n_reduces],
+            reduce_failed: vec![0; n_reduces],
             attempts: Vec::new(),
             free_map_slots: self
                 .config
@@ -309,12 +407,22 @@ impl Cluster {
             maps_done: 0,
             reduces_done: 0,
             counters,
-            stats: JobStats { name: spec.name.clone(), n_map_tasks: n_maps, n_reduce_tasks: n_reduces, ..Default::default() },
+            stats: JobStats {
+                name: spec.name.clone(),
+                n_map_tasks: n_maps,
+                n_reduce_tasks: n_reduces,
+                ..Default::default()
+            },
             speculation: self.speculation,
+            max_attempts: self.max_attempts.max(1),
+            task_fail_rate: self.task_fail_rate,
+            fault_seed: self.fault_seed,
+            job_index: self.jobs_run as u64,
         };
 
         st.assign_maps(&mut q, &self.alive);
 
+        let mut fatal: Option<JobError> = None;
         while !(st.maps_done == n_maps && st.reduces_done == n_reduces) {
             let Some((now, ev)) = q.next() else {
                 panic!(
@@ -326,9 +434,18 @@ impl Cluster {
                 Event::TaskDone { attempt_id } => {
                     st.on_attempt_done(attempt_id, now, &mut q, &self.alive);
                 }
+                Event::TaskFail { attempt_id } => {
+                    if let Err(e) = st.on_attempt_fail(attempt_id, now, &mut q, &self.alive) {
+                        fatal = Some(e);
+                        break;
+                    }
+                }
                 Event::NodeFail { node } => {
-                    self.apply_node_failure(node);
-                    st.on_node_fail(node, now, &mut q, &self.alive);
+                    if let Err(e) = self.apply_node_failure(node) {
+                        fatal = Some(JobError { job: spec.name.clone(), message: e.to_string() });
+                        break;
+                    }
+                    st.on_node_fail(node, now, &mut q, &self.alive, &self.namenode, &self.hmaster);
                 }
                 Event::NodeRecover { node } => {
                     self.apply_node_recovery(node);
@@ -339,18 +456,17 @@ impl Cluster {
         }
 
         let busy_end = q.now();
-        let duration = busy_end.0 + self.cost.job_overhead_s;
-        self.now = t0 + duration;
-
         // Return unfired failure/recovery events to the plan (they belong
         // to a later job's window).
-        while let Some((at, ev)) = q.next() {
-            match ev {
-                Event::NodeFail { node } => self.failure_plan.push((t0.0 + at.0, node)),
-                Event::NodeRecover { node } => self.recover_plan.push((t0.0 + at.0, node)),
-                _ => {}
-            }
+        self.restore_plans(t0, &mut q);
+        if let Some(e) = fatal {
+            // An aborted job leaves the clock, history, job count, and
+            // counters untouched (node failures already applied remain —
+            // they are cluster lifecycle, not job state).
+            return Err(e);
         }
+        let duration = busy_end.0 + self.cost.job_overhead_s;
+        self.now = t0 + duration;
 
         // Assemble output.
         let mut output = Vec::new();
@@ -382,11 +498,27 @@ impl Cluster {
         Ok(JobResult { output, duration_s: duration, counters, stats })
     }
 
-    fn apply_node_failure(&mut self, node: usize) {
+    /// Fail-stop `node` across every layer. The typed [`NoLiveDataNodes`]
+    /// error surfaces when this was the last live DataNode (the HMaster is
+    /// then left untouched — there is no survivor to fail regions over to).
+    fn apply_node_failure(&mut self, node: usize) -> Result<(), NoLiveDataNodes> {
         if self.alive[node] {
             self.alive[node] = false;
-            self.namenode.fail_node(node);
+            self.namenode.fail_node(node)?;
             self.hmaster.fail_node(node);
+        }
+        Ok(())
+    }
+
+    /// Move unfired failure/recovery events back onto the cluster-level
+    /// plan (they belong to a later job's window); drains `q`.
+    fn restore_plans(&mut self, t0: SimTime, q: &mut EventQueue) {
+        while let Some((at, ev)) = q.next() {
+            match ev {
+                Event::NodeFail { node } => self.failure_plan.push((t0.0 + at.0, node)),
+                Event::NodeRecover { node } => self.recover_plan.push((t0.0 + at.0, node)),
+                _ => {}
+            }
         }
     }
 
@@ -491,9 +623,23 @@ struct JobRun<'a> {
     map_out: Vec<Arc<MapOut>>,
     /// Node holding each completed map task's output.
     map_done_node: Vec<usize>,
+    /// Whether each map task's counters were already merged. Real compute
+    /// runs once per task (cached), so a map re-executed after losing its
+    /// output to a node failure must NOT re-merge — counters would then
+    /// differ between faults-on and faults-off runs, breaking the
+    /// byte-identity contract.
+    map_counters_merged: Vec<bool>,
+    /// Attempts launched so far per map task (keys the per-attempt
+    /// transient-failure draw).
+    map_seq: Vec<usize>,
+    /// Transient failures suffered per map task (bounded by
+    /// `max_attempts`).
+    map_failed: Vec<usize>,
     reduce_state: Vec<TaskState>,
     /// Precomputed reduce outputs (emits, work), by partition.
     reduce_out: Vec<(Vec<(Key, Val)>, TaskWork)>,
+    reduce_seq: Vec<usize>,
+    reduce_failed: Vec<usize>,
     attempts: Vec<Attempt>,
     free_map_slots: Vec<usize>,
     free_reduce_slots: Vec<usize>,
@@ -502,6 +648,24 @@ struct JobRun<'a> {
     counters: Counters,
     stats: JobStats,
     speculation: bool,
+    max_attempts: usize,
+    task_fail_rate: f64,
+    fault_seed: u64,
+    job_index: u64,
+}
+
+/// Stable per-attempt hash for the transient-failure draw: a pure
+/// function of (fault seed, job, task kind, task, attempt ordinal), so
+/// the same fault plan replays identically at any thread count and under
+/// any event interleaving.
+fn attempt_fault_key(seed: u64, job: u64, kind: u64, task: u64, attempt: u64) -> u64 {
+    let mut h = seed ^ 0x9E37_79B9_7F4A_7C15;
+    for v in [job, kind, task, attempt] {
+        h ^= v.wrapping_add(0x9E37_79B9_7F4A_7C15).wrapping_add(h << 6).wrapping_add(h >> 2);
+        h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h ^= h >> 27;
+    }
+    h
 }
 
 impl<'a> JobRun<'a> {
@@ -517,15 +681,25 @@ impl<'a> JobRun<'a> {
             self.launch_map(task, node, false, q);
         }
         if self.speculation {
-            self.maybe_speculate(q, alive);
+            self.maybe_speculate(TaskKind::Map, q, alive);
         }
     }
 
     fn next_free_slot(&self, slots: &[usize], alive: &[bool]) -> Option<usize> {
-        // Fastest node with a free slot first (deterministic tie-break by
-        // index). Matches TaskTrackers heartbeating with open slots.
+        self.next_free_slot_excluding(slots, alive, usize::MAX)
+    }
+
+    /// Fastest node with a free slot first (deterministic tie-break by
+    /// index), skipping `exclude`. Matches TaskTrackers heartbeating with
+    /// open slots; speculation passes exclude the straggler's own node.
+    fn next_free_slot_excluding(
+        &self,
+        slots: &[usize],
+        alive: &[bool],
+        exclude: usize,
+    ) -> Option<usize> {
         (0..slots.len())
-            .filter(|&n| alive[n] && slots[n] > 0)
+            .filter(|&n| alive[n] && slots[n] > 0 && n != exclude)
             .max_by(|&a, &b| {
                 self.cluster_cfg.nodes[a]
                     .speed
@@ -558,21 +732,39 @@ impl<'a> JobRun<'a> {
             self.map_state[task] = TaskState::Running;
         }
         let out = self.map_output(task);
-        // Work: task's own + input read (local or remote).
+        // Work: task's own + input read, charged by locality tier. A
+        // host-local read pulls from the same-host replica (virtio-speed),
+        // a remote read crosses hosts — both through the net model.
         let mut work = out.work;
         let split = &self.splits[task];
-        let (src, local) = if split.preferred.contains(&node) {
-            (None, true)
+        let host = self.cluster_cfg.nodes[node].host;
+        let (src, locality) = if split.preferred.contains(&node) {
+            (None, Locality::NodeLocal)
+        } else if let Some(&p) =
+            split.preferred.iter().find(|&&p| self.cluster_cfg.nodes[p].host == host)
+        {
+            (Some(p), Locality::HostLocal)
         } else {
-            (split.preferred.first().copied(), false)
+            (split.preferred.first().copied(), Locality::Remote)
         };
-        if local {
+        if locality == Locality::NodeLocal {
             work.local_read_bytes += split.bytes;
         } else {
             work.remote_read_bytes += split.bytes;
         }
-        let dur = self.cost.sched_delay_s + self.cost.task_seconds(&self.cluster_cfg, node, src, &work);
+        let dur =
+            self.cost.sched_delay_s + self.cost.task_seconds(&self.cluster_cfg, node, src, &work);
+        let attempt_no = self.map_seq[task];
+        self.map_seq[task] += 1;
         let id = self.attempts.len();
+        if speculative {
+            self.stats.n_speculative += 1;
+        }
+        let fail_frac = self.attempt_failure(0, task as u64, attempt_no as u64);
+        let dur = match fail_frac {
+            Some(frac) => dur * frac,
+            None => dur,
+        };
         self.attempts.push(Attempt {
             task: TaskRef::Map(task),
             node,
@@ -580,11 +772,28 @@ impl<'a> JobRun<'a> {
             duration: dur,
             live: true,
             speculative,
+            locality,
         });
-        if speculative {
-            self.stats.n_speculative += 1;
+        match fail_frac {
+            Some(_) => q.schedule_in(dur, Event::TaskFail { attempt_id: id }),
+            None => q.schedule_in(dur, Event::TaskDone { attempt_id: id }),
         }
-        q.schedule_in(dur, Event::TaskDone { attempt_id: id });
+    }
+
+    /// Transient-failure draw for one attempt: `Some(fraction)` when the
+    /// attempt dies after `fraction` of its duration, `None` when it runs
+    /// to completion. `kind` is 0 for maps, 1 for reduces.
+    fn attempt_failure(&self, kind: u64, task: u64, attempt: u64) -> Option<f64> {
+        if self.task_fail_rate <= 0.0 {
+            return None;
+        }
+        let key = attempt_fault_key(self.fault_seed, self.job_index, kind, task, attempt);
+        let mut rng = Rng::new(key);
+        if rng.f64() < self.task_fail_rate {
+            Some(0.25 + 0.5 * rng.f64())
+        } else {
+            None
+        }
     }
 
     /// Cached real output of a map task (precomputed by the worker pool
@@ -608,12 +817,17 @@ impl<'a> JobRun<'a> {
                 break;
             };
             self.free_reduce_slots[node] -= 1;
-            self.reduce_state[task] = TaskState::Running;
-            self.launch_reduce(task, node, q);
+            self.launch_reduce(task, node, false, q);
+        }
+        if self.speculation {
+            self.maybe_speculate(TaskKind::Reduce, q, alive);
         }
     }
 
-    fn launch_reduce(&mut self, r: usize, node: usize, q: &mut EventQueue) {
+    fn launch_reduce(&mut self, r: usize, node: usize, speculative: bool, q: &mut EventQueue) {
+        if !speculative {
+            self.reduce_state[r] = TaskState::Running;
+        }
         // Shuffle: fetch partition r from every completed map's node.
         // Hadoop overlaps copies with ~5 parallel fetchers; we charge the
         // serialized sum divided by a fetcher-parallelism factor.
@@ -641,24 +855,38 @@ impl<'a> JobRun<'a> {
         let dur = self.cost.sched_delay_s
             + shuffle_s
             + self.cost.task_seconds(&self.cluster_cfg, node, None, &work);
+        let attempt_no = self.reduce_seq[r];
+        self.reduce_seq[r] += 1;
         let id = self.attempts.len();
+        if speculative {
+            self.stats.n_speculative += 1;
+        }
+        let fail_frac = self.attempt_failure(1, r as u64, attempt_no as u64);
+        let dur = match fail_frac {
+            Some(frac) => dur * frac,
+            None => dur,
+        };
         self.attempts.push(Attempt {
             task: TaskRef::Reduce(r),
             node,
             started: q.now(),
             duration: dur,
             live: true,
-            speculative: false,
+            speculative,
+            locality: Locality::NodeLocal, // reduces pull from everywhere
         });
-        q.schedule_in(dur, Event::TaskDone { attempt_id: id });
+        match fail_frac {
+            Some(_) => q.schedule_in(dur, Event::TaskFail { attempt_id: id }),
+            None => q.schedule_in(dur, Event::TaskDone { attempt_id: id }),
+        }
     }
 
     // ---- events ----------------------------------------------------------
 
     fn on_attempt_done(&mut self, id: usize, now: SimTime, q: &mut EventQueue, alive: &[bool]) {
-        let (task, node, live, dur) = {
+        let (task, node, live, dur, locality) = {
             let a = &self.attempts[id];
-            (a.task, a.node, a.live, a.duration)
+            (a.task, a.node, a.live, a.duration, a.locality)
         };
         if !live {
             return; // killed (lost speculation race or node failure)
@@ -674,7 +902,25 @@ impl<'a> JobRun<'a> {
                 self.map_done_node[t] = node;
                 self.maps_done += 1;
                 self.stats.map_durations_s.push(dur);
-                self.counters.merge(&self.map_out[t].counters);
+                if !self.map_counters_merged[t] {
+                    self.map_counters_merged[t] = true;
+                    self.counters.merge(&self.map_out[t].counters);
+                }
+                // The winning attempt defines the task's locality tier.
+                match locality {
+                    Locality::NodeLocal => {
+                        self.stats.n_node_local_maps += 1;
+                        self.counters.inc("map.locality.node_local", 1);
+                    }
+                    Locality::HostLocal => {
+                        self.stats.n_host_local_maps += 1;
+                        self.counters.inc("map.locality.host_local", 1);
+                    }
+                    Locality::Remote => {
+                        self.stats.n_remote_maps += 1;
+                        self.counters.inc("map.locality.remote", 1);
+                    }
+                }
                 // Kill the slower twin attempts.
                 for i in 0..self.attempts.len() {
                     if self.attempts[i].live && self.attempts[i].task == TaskRef::Map(t) {
@@ -686,11 +932,18 @@ impl<'a> JobRun<'a> {
             TaskRef::Reduce(r) => {
                 self.free_reduce_slots[node] += 1;
                 if self.reduce_state[r] == TaskState::Done {
-                    return;
+                    return; // speculative twin already won
                 }
                 self.reduce_state[r] = TaskState::Done;
                 self.reduces_done += 1;
                 self.stats.reduce_durations_s.push(dur);
+                // First finisher wins; the loser's sim time stays charged.
+                for i in 0..self.attempts.len() {
+                    if self.attempts[i].live && self.attempts[i].task == TaskRef::Reduce(r) {
+                        self.attempts[i].live = false;
+                        self.free_reduce_slots[self.attempts[i].node] += 1;
+                    }
+                }
             }
         }
         let _ = now;
@@ -698,20 +951,94 @@ impl<'a> JobRun<'a> {
         self.assign_reduces(q, alive);
     }
 
-    fn on_node_fail(&mut self, node: usize, now: SimTime, q: &mut EventQueue, alive: &[bool]) {
-        // Kill running attempts on the node; re-queue their tasks.
+    /// A transient attempt failure (from the fault plan): charge the
+    /// partial time, free the slot, and retry — unless the task has now
+    /// failed `max_attempts` times, which fails the job (Hadoop's
+    /// `mapred.map.max.attempts` semantics; node-loss *kills* do not
+    /// count toward the limit).
+    fn on_attempt_fail(
+        &mut self,
+        id: usize,
+        now: SimTime,
+        q: &mut EventQueue,
+        alive: &[bool],
+    ) -> Result<(), JobError> {
+        let (task, node, live) = {
+            let a = &self.attempts[id];
+            (a.task, a.node, a.live)
+        };
+        if !live {
+            return Ok(()); // already killed by a node failure or a twin win
+        }
+        self.attempts[id].live = false;
+        self.stats.n_failed_attempts += 1;
+        self.counters.inc("task.attempts.failed", 1);
+        let still_running =
+            |attempts: &[Attempt]| attempts.iter().any(|a| a.live && a.task == task);
+        let (failures, kind_name, task_idx) = match task {
+            TaskRef::Map(t) => {
+                self.free_map_slots[node] += 1;
+                self.map_failed[t] += 1;
+                if self.map_state[t] == TaskState::Running && !still_running(&self.attempts) {
+                    self.map_state[t] = TaskState::Pending;
+                }
+                (self.map_failed[t], "map", t)
+            }
+            TaskRef::Reduce(r) => {
+                self.free_reduce_slots[node] += 1;
+                self.reduce_failed[r] += 1;
+                if self.reduce_state[r] == TaskState::Running && !still_running(&self.attempts) {
+                    self.reduce_state[r] = TaskState::Pending;
+                }
+                (self.reduce_failed[r], "reduce", r)
+            }
+        };
+        if failures >= self.max_attempts {
+            return Err(JobError {
+                job: self.spec.name.clone(),
+                message: format!(
+                    "{kind_name} task {task_idx} failed {failures} attempts \
+                     (max_attempts = {})",
+                    self.max_attempts
+                ),
+            });
+        }
+        let _ = now;
+        self.assign_maps(q, alive);
+        self.assign_reduces(q, alive);
+        Ok(())
+    }
+
+    fn on_node_fail(
+        &mut self,
+        node: usize,
+        now: SimTime,
+        q: &mut EventQueue,
+        alive: &[bool],
+        namenode: &NameNode,
+        hmaster: &HMaster,
+    ) {
+        // Kill running attempts on the node; re-queue their tasks. Kills
+        // count in `n_failed_attempts` (and the task.attempts.killed
+        // counter) but, as in Hadoop, not toward `max_attempts` — that
+        // budget is for *transient* failures (task.attempts.failed).
         for i in 0..self.attempts.len() {
             if self.attempts[i].live && self.attempts[i].node == node {
                 self.attempts[i].live = false;
                 self.stats.n_failed_attempts += 1;
-                match self.attempts[i].task {
+                self.counters.inc("task.attempts.killed", 1);
+                let task = self.attempts[i].task;
+                // Re-pend only when no twin survives on another node —
+                // otherwise the live twin is still racing for the task.
+                let still_running = self.attempts.iter().any(|a| a.live && a.task == task);
+                match task {
                     TaskRef::Map(t) => {
-                        if self.map_state[t] == TaskState::Running {
+                        if self.map_state[t] == TaskState::Running && !still_running {
                             self.map_state[t] = TaskState::Pending;
                         }
                     }
                     TaskRef::Reduce(r) => {
-                        if self.reduce_state[r] == TaskState::Running {
+                        if self.reduce_state[r] == TaskState::Running && !still_running {
                             self.reduce_state[r] = TaskState::Pending;
                         }
                     }
@@ -735,6 +1062,10 @@ impl<'a> JobRun<'a> {
                 }
             }
         }
+        // Re-replication / region failover moved data: every not-yet-done
+        // map task (including the ones just re-pended above) re-resolves
+        // its preferred locations before anything is rescheduled.
+        self.refresh_split_locality(namenode, hmaster, node);
         let _ = now;
         self.assign_maps(q, alive);
         self.assign_reduces(q, alive);
@@ -754,26 +1085,44 @@ impl<'a> JobRun<'a> {
         self.assign_reduces(q, alive);
     }
 
-    /// Speculative execution: when the pending queue is empty but slots
-    /// are free, duplicate the running map attempt with the latest
-    /// projected finish (if meaningfully behind the median).
-    fn maybe_speculate(&mut self, q: &mut EventQueue, alive: &[bool]) {
-        if self.maps_done == 0 {
+    /// Straggler detection + speculative execution (maps and reduces):
+    /// when the pending queue is empty but slots are free, duplicate the
+    /// running attempt with the latest projected finish (if meaningfully
+    /// behind the median of completed tasks of the same kind). The first
+    /// finisher wins; the loser is killed with its sim time charged.
+    fn maybe_speculate(&mut self, kind: TaskKind, q: &mut EventQueue, alive: &[bool]) {
+        let (done, durations) = match kind {
+            TaskKind::Map => (self.maps_done, &self.stats.map_durations_s),
+            TaskKind::Reduce => (self.reduces_done, &self.stats.reduce_durations_s),
+        };
+        if done == 0 {
             return; // need a baseline
         }
-        let mut med: Vec<f64> = self.stats.map_durations_s.clone();
+        let mut med: Vec<f64> = durations.clone();
         med.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = med[med.len() / 2];
         loop {
-            let Some(node) = self.next_free_slot(&self.free_map_slots, alive) else { return };
-            // Latest-finishing live, non-duplicated map attempt.
+            let any_free = match kind {
+                TaskKind::Map => self.next_free_slot(&self.free_map_slots, alive),
+                TaskKind::Reduce => self.next_free_slot(&self.free_reduce_slots, alive),
+            };
+            if any_free.is_none() {
+                return;
+            }
+            // Latest-finishing live, non-duplicated attempt of this kind.
             let mut worst: Option<(usize, f64)> = None;
             for (i, a) in self.attempts.iter().enumerate() {
                 if !a.live || a.speculative {
                     continue;
                 }
-                let TaskRef::Map(t) = a.task else { continue };
-                if self.map_state[t] != TaskState::Running {
+                let running = match (kind, a.task) {
+                    (TaskKind::Map, TaskRef::Map(t)) => self.map_state[t] == TaskState::Running,
+                    (TaskKind::Reduce, TaskRef::Reduce(r)) => {
+                        self.reduce_state[r] == TaskState::Running
+                    }
+                    _ => false,
+                };
+                if !running {
                     continue;
                 }
                 let dups = self
@@ -792,11 +1141,61 @@ impl<'a> JobRun<'a> {
                 }
             }
             let Some((slow_idx, _)) = worst else { return };
-            let TaskRef::Map(t) = self.attempts[slow_idx].task else { unreachable!() };
-            self.free_map_slots[node] -= 1;
-            self.launch_map(t, node, true, q);
+            // A twin on the straggler's own node runs at the same speed
+            // and cannot win the race — place it somewhere else.
+            let slow_node = self.attempts[slow_idx].node;
+            let node = match kind {
+                TaskKind::Map => {
+                    self.next_free_slot_excluding(&self.free_map_slots, alive, slow_node)
+                }
+                TaskKind::Reduce => {
+                    self.next_free_slot_excluding(&self.free_reduce_slots, alive, slow_node)
+                }
+            };
+            let Some(node) = node else { return };
+            match self.attempts[slow_idx].task {
+                TaskRef::Map(t) => {
+                    self.free_map_slots[node] -= 1;
+                    self.launch_map(t, node, true, q);
+                }
+                TaskRef::Reduce(r) => {
+                    self.free_reduce_slots[node] -= 1;
+                    self.launch_reduce(r, node, true, q);
+                }
+            }
         }
     }
+
+    /// After a node failure, pending map tasks re-resolve where their
+    /// input actually lives now: re-replicated DFS blocks and failed-over
+    /// HBase regions moved, so the stale locality hints would otherwise
+    /// keep steering the scheduler at a dead (or wrong) node.
+    fn refresh_split_locality(&mut self, namenode: &NameNode, hmaster: &HMaster, dead: usize) {
+        for t in 0..self.splits.len() {
+            if self.map_state[t] == TaskState::Done {
+                continue;
+            }
+            let split = &mut self.splits[t];
+            match &split.origin {
+                SplitOrigin::DfsBlock(id) => split.preferred = namenode.locations(*id),
+                SplitOrigin::Region { table, region } => {
+                    split.preferred = hmaster
+                        .table(table)
+                        .and_then(|t| t.regions.get(*region))
+                        .map(|r| vec![r.server])
+                        .unwrap_or_default();
+                }
+                SplitOrigin::Adhoc => split.preferred.retain(|&n| n != dead),
+            }
+        }
+    }
+}
+
+/// Which scheduling pool a speculation pass scans.
+#[derive(Clone, Copy, PartialEq)]
+enum TaskKind {
+    Map,
+    Reduce,
 }
 
 /// Iterate groups of equal keys in a sorted (key, value) slice, yielding

@@ -4,6 +4,24 @@ use super::api::{Mapper, PartitionFn, Reducer};
 use crate::geo::Point;
 use std::sync::Arc;
 
+/// The storage object behind a split. The engine uses it to *re-resolve*
+/// the split's preferred locations after a node failure: re-replicated
+/// DFS blocks and failed-over HBase regions land on new nodes, so pending
+/// map tasks lose locality realistically instead of keeping stale hints.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum SplitOrigin {
+    /// No backing storage object (driver-side shuffle inputs); a failure
+    /// just strips the dead node from the hints.
+    #[default]
+    Adhoc,
+    /// A DFS block; locations re-resolve via
+    /// [`crate::dfs::NameNode::locations`].
+    DfsBlock(crate::dfs::BlockId),
+    /// An HBase region; the location re-resolves to whichever node the
+    /// HMaster reassigned the region to.
+    Region { table: String, region: usize },
+}
+
 /// One input split with locality hints (from DFS block replicas or the
 /// HBase region server).
 #[derive(Debug, Clone)]
@@ -13,6 +31,8 @@ pub struct SplitMeta {
     pub bytes: u64,
     /// Nodes that hold the data locally (replicas / region server).
     pub preferred: Vec<usize>,
+    /// Backing storage object, for post-failure location re-resolution.
+    pub origin: SplitOrigin,
 }
 
 /// Input data for a job.
@@ -37,6 +57,7 @@ impl Input {
                         row_end: total * (i + 1) / n as u64,
                         bytes: (total / n as u64).max(1) * bytes_per_record,
                         preferred: vec![],
+                        origin: SplitOrigin::Adhoc,
                     })
                     .filter(|s| s.row_end > s.row_start)
                     .collect()

@@ -11,8 +11,10 @@ pub mod job;
 pub use api::{
     hash_partition, Counters, InputShapeError, Key, MapCtx, Mapper, ReduceCtx, Reducer, Val,
 };
-pub use engine::{group_sorted, Cluster, JobError, JobResult, JobStats};
-pub use job::{Input, JobSpec, SplitMeta};
+pub use engine::{
+    group_sorted, locality_fraction, Cluster, JobError, JobResult, JobStats, DEFAULT_MAX_ATTEMPTS,
+};
+pub use job::{Input, JobSpec, SplitMeta, SplitOrigin};
 
 use crate::dfs::NameNode;
 use crate::hbase::HMaster;
@@ -30,6 +32,7 @@ pub fn input_from_table(hmaster: &HMaster, table: &str) -> Input {
             row_end: r.row_end,
             bytes: r.bytes,
             preferred: vec![r.server],
+            origin: SplitOrigin::Region { table: table.to_string(), region: r.id },
         })
         .collect();
     Input::Points { points: t.points(), splits }
@@ -54,6 +57,7 @@ pub fn input_from_dfs(
                 row_end: blk.row_end,
                 bytes: blk.bytes,
                 preferred: namenode.locations(b),
+                origin: SplitOrigin::DfsBlock(b),
             }
         })
         .collect();

@@ -7,7 +7,7 @@ use super::job::*;
 use super::{input_from_dfs, input_from_table};
 use crate::config::ClusterConfig;
 use crate::geo::Point;
-use crate::sim::CostModel;
+use crate::sim::{CostModel, FaultPlan};
 use crate::util::codec::*;
 use crate::util::proptest::for_all;
 use std::sync::Arc;
@@ -60,6 +60,7 @@ fn kv_input(points: Arc<Vec<Point>>, n_splits: usize) -> Input {
                 row_end: total * (i + 1) / n_splits as u64,
                 bytes: 4 << 20,
                 preferred: vec![],
+                origin: SplitOrigin::Adhoc,
             })
             .collect()
     };
@@ -156,6 +157,7 @@ fn locality_preferred_when_available() {
             row_end: total * (i + 1) / 2,
             bytes: 1 << 20,
             preferred: vec![2],
+            origin: SplitOrigin::Adhoc,
         })
         .collect();
     let job = JobSpec::new("local", Input::Points { points, splits }, Arc::new(QuadrantMapper))
@@ -372,4 +374,192 @@ fn advance_secs_moves_the_clock() {
     let t0 = cluster.now().0;
     cluster.advance_secs(12.5);
     assert!((cluster.now().0 - t0 - 12.5).abs() < 1e-12);
+}
+
+// ---- fault tolerance: attempts, retries, locality, re-replication ----------
+
+#[test]
+fn flaky_attempts_retry_until_success() {
+    let pts = grid_points(500);
+    let mk = |rate: f64| {
+        let mut c = Cluster::new(ClusterConfig::test_cluster(4), 21);
+        c.max_attempts = 50; // bound is not the subject here
+        c.apply_fault_plan(&FaultPlan { task_fail_rate: rate, seed: 21, ..FaultPlan::none() });
+        c
+    };
+    let ok = mk(0.0).run_job(&quadrant_job(pts.clone(), 10, 3));
+    let r = mk(0.7).run_job(&quadrant_job(pts, 10, 3));
+    assert_eq!(decode_counts(&ok.output), decode_counts(&r.output));
+    assert!(r.stats.n_failed_attempts > 0, "a 0.7 fail rate must kill some attempts");
+    assert!(r.counters.get("task.attempts.failed") > 0);
+    assert!(r.duration_s > ok.duration_s, "failed attempts cost sim time");
+}
+
+#[test]
+fn exhausted_attempts_fail_the_job_with_a_typed_error() {
+    let mut c = Cluster::new(ClusterConfig::test_cluster(3), 1);
+    c.max_attempts = 3;
+    c.apply_fault_plan(&FaultPlan { task_fail_rate: 1.0, seed: 1, ..FaultPlan::none() });
+    let t0 = c.now().0;
+    let err = c.try_run_job(&quadrant_job(grid_points(30), 2, 1)).err().expect("must fail");
+    assert!(err.to_string().contains("failed 3 attempts"), "{err}");
+    assert!(err.to_string().contains("max_attempts"), "{err}");
+    // An aborted job leaves the cluster accounting untouched.
+    assert_eq!(c.now().0, t0);
+    assert_eq!(c.jobs_run, 0);
+    assert!(c.history.is_empty());
+}
+
+#[test]
+fn locality_tiers_are_tracked() {
+    // test_cluster(4): nodes 0,1 on host 0; nodes 2,3 on host 1. All 8
+    // splits prefer node 2, whose 2 slots run node-local; node 3 reads
+    // host-locally; nodes 0 and 1 read across hosts.
+    let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 3);
+    cluster.speculation = false;
+    let points = grid_points(400);
+    let total = points.len() as u64;
+    let splits: Vec<SplitMeta> = (0..8u64)
+        .map(|i| SplitMeta {
+            row_start: total * i / 8,
+            row_end: total * (i + 1) / 8,
+            bytes: 1 << 20,
+            preferred: vec![2],
+            origin: SplitOrigin::Adhoc,
+        })
+        .collect();
+    let job = JobSpec::new("tiers", Input::Points { points, splits }, Arc::new(QuadrantMapper))
+        .with_reducer(Arc::new(SumReducer), 2);
+    let r = cluster.run_job(&job);
+    assert_eq!(r.stats.n_node_local_maps, 2);
+    assert_eq!(r.stats.n_host_local_maps, 2);
+    assert_eq!(r.stats.n_remote_maps, 4);
+    assert!((r.stats.node_locality_ratio() - 0.25).abs() < 1e-12);
+    assert_eq!(r.counters.get("map.locality.node_local"), 2);
+    assert_eq!(r.counters.get("map.locality.host_local"), 2);
+    assert_eq!(r.counters.get("map.locality.remote"), 4);
+}
+
+#[test]
+fn reduce_stragglers_get_speculative_twins() {
+    // Skewed partitioner: three quadrants land in partition 0, one in
+    // partition 1, partition 2 stays empty. With a bare cost model the
+    // empty reduce finishes instantly, making the loaded ones stragglers
+    // that earn speculative twins; first finisher wins and the output is
+    // unchanged vs speculation off.
+    let pts = grid_points(1500);
+    let skew: Arc<PartitionFn> =
+        Arc::new(|k: &[u8], _n: usize| usize::from(decode_cluster_key(k) == 0));
+    let job = || quadrant_job(pts.clone(), 6, 3).with_partitioner(skew.clone());
+    let run = |speculation: bool| {
+        let mut c = Cluster::new(ClusterConfig::test_cluster(4), 17).with_cost(CostModel::bare());
+        c.speculation = speculation;
+        let r = c.run_job(&job());
+        (decode_counts(&r.output), r.stats.n_speculative, r.duration_s)
+    };
+    let (with_spec, n_spec, d_spec) = run(true);
+    let (without, _, d_plain) = run(false);
+    assert_eq!(with_spec, without);
+    assert!(n_spec > 0, "stragglers should have been duplicated");
+    assert!(d_spec <= d_plain * 1.001, "speculation should not hurt");
+}
+
+#[test]
+fn node_loss_rereplicates_and_job_completes_identically() {
+    // DFS-backed input; a node dies mid-job. The NameNode re-replicates
+    // its blocks, pending maps re-resolve their locations, and the job
+    // completes with output identical to the healthy run.
+    let run = |fail: bool| {
+        let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 5);
+        cluster.cost = CostModel { task_overhead_s: 5.0, ..CostModel::default() };
+        let points = grid_points(2000);
+        let bytes = points.len() as u64 * 4096; // 32 MB -> 4 blocks of 8 MB
+        cluster.namenode.create_file("pts", points.len() as u64, bytes);
+        let input = input_from_dfs(&cluster.namenode, "pts", points);
+        if fail {
+            cluster.plan_failure(7.0, 1);
+        }
+        let job = JobSpec::new("dfs-fault", input, Arc::new(QuadrantMapper))
+            .with_reducer(Arc::new(SumReducer), 2);
+        let r = cluster.run_job(&job);
+        (decode_counts(&r.output), r.duration_s, cluster)
+    };
+    let (healthy, d_ok, _) = run(false);
+    let (faulty, d_fail, cluster) = run(true);
+    assert_eq!(healthy, faulty, "output must be identical despite the node loss");
+    assert!(d_fail >= d_ok, "recovery cannot make the job faster");
+    assert_eq!(cluster.n_alive(), 3);
+    let meta = cluster.namenode.file("pts").unwrap().clone();
+    for &b in &meta.blocks {
+        let locs = cluster.namenode.locations(b);
+        assert!(!locs.contains(&1), "dead node still listed for block {b}");
+        assert_eq!(locs.len(), 2, "replication restored for block {b}");
+    }
+}
+
+#[test]
+fn region_failover_mid_job_keeps_output_identical() {
+    // HBase-backed input; the serving region server dies mid-job. The
+    // HMaster fails its regions over and the engine re-resolves split
+    // locations to the new servers.
+    let run = |fail: bool| {
+        let mut cluster = Cluster::new(ClusterConfig::test_cluster(3), 13);
+        cluster.cost = CostModel { task_overhead_s: 5.0, ..CostModel::default() };
+        let points = grid_points(4000);
+        cluster.hmaster.create_points_table("pts", points, 25, 100_000);
+        let input = input_from_table(&cluster.hmaster, "pts");
+        if fail {
+            cluster.plan_failure(6.0, 1);
+        }
+        let job = JobSpec::new("hbase-fault", input, Arc::new(QuadrantMapper))
+            .with_reducer(Arc::new(SumReducer), 2);
+        let r = cluster.run_job(&job);
+        let off_dead_node =
+            cluster.hmaster.table("pts").unwrap().regions.iter().all(|rg| rg.server != 1);
+        (decode_counts(&r.output), off_dead_node)
+    };
+    let (healthy, _) = run(false);
+    let (faulty, off_dead_node) = run(true);
+    assert_eq!(healthy, faulty);
+    assert!(off_dead_node, "regions must have failed over off the dead node");
+}
+
+#[test]
+fn property_faults_do_not_change_output_at_any_thread_count() {
+    // Random topologies x (faults on/off) x (speculation on/off) x
+    // threads {1, 4, 8}: job output and merged record counters are
+    // byte-identical; the same fault plan replays the same sim duration
+    // and attempt statistics at every thread count.
+    for_all(6, 0xFA177, |rng| {
+        let n_nodes = 2 + rng.below(5);
+        let n_splits = 2 + rng.below(12);
+        let n_reduces = 1 + rng.below(3);
+        let n = 50 + rng.below(300);
+        let seed = rng.next_u64();
+        let run = |faults: bool, speculation: bool, threads: usize| {
+            let mut c =
+                Cluster::new(ClusterConfig::test_cluster(n_nodes), seed).with_threads(threads);
+            c.speculation = speculation;
+            c.cost = CostModel { task_overhead_s: 3.0, ..CostModel::default() };
+            c.max_attempts = 12; // flakiness must never exhaust a task here
+            if faults {
+                c.apply_fault_plan(&FaultPlan::seeded(seed, n_nodes, 1, 20.0, 0.15));
+            }
+            let r = c.run_job(&quadrant_job(grid_points(n), n_splits, n_reduces));
+            (
+                r.output,
+                r.duration_s,
+                r.stats.n_failed_attempts,
+                r.counters.get("map.output.records"),
+            )
+        };
+        let healthy = run(false, true, 1);
+        let faulty = run(true, true, 1);
+        assert_eq!(healthy.0, faulty.0, "faults must not change job output");
+        assert_eq!(healthy.3, faulty.3);
+        assert_eq!(faulty, run(true, true, 4), "fault replay must be thread-independent");
+        assert_eq!(faulty, run(true, true, 8));
+        let nospec = run(true, false, 2);
+        assert_eq!(faulty.0, nospec.0, "speculation must not change job output");
+    });
 }

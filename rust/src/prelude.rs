@@ -14,3 +14,4 @@ pub use crate::geo::datasets::{generate, SpatialDataset, SpatialSpec};
 pub use crate::geo::{Metric, Point};
 pub use crate::runtime::{load_backend, BackendKind, ComputeBackend, NativeBackend};
 pub use crate::session::{ClusterSession, DatasetHandle, SessionBuilder};
+pub use crate::sim::FaultPlan;

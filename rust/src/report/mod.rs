@@ -153,7 +153,12 @@ pub fn to_csv(results: &[ExperimentResult]) -> String {
 mod tests {
     use super::*;
 
-    fn fake(algorithm: &'static str, n_nodes: usize, n_points: usize, time_ms: u64) -> ExperimentResult {
+    fn fake(
+        algorithm: &'static str,
+        n_nodes: usize,
+        n_points: usize,
+        time_ms: u64,
+    ) -> ExperimentResult {
         ExperimentResult {
             algorithm: algorithm.to_string(),
             n_nodes,

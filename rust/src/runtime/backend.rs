@@ -100,7 +100,16 @@ pub trait ComputeBackend: Send + Sync {
         mask: &[f32],
         medoids: &[f32],
     ) -> Result<AssignOut> {
-        native_assign_metric(self.block(), self.kpad(), self.pad_coord(), dims, metric, points, mask, medoids)
+        native_assign_metric(
+            self.block(),
+            self.kpad(),
+            self.pad_coord(),
+            dims,
+            metric,
+            points,
+            mask,
+            medoids,
+        )
     }
 
     /// Metric-generic partial pairwise costs: candidates `(B, dims)`,
@@ -429,7 +438,8 @@ mod tests {
         let cand = vec![0.0, 0.0, 1.0, 0.0];
         let members = vec![0.0, 0.0, 2.0, 0.0];
         let mask = vec![1.0, 1.0];
-        let out = native_pairwise_metric(2, 2, Metric::Manhattan, &cand, &members, &mask, 2).unwrap();
+        let out =
+            native_pairwise_metric(2, 2, Metric::Manhattan, &cand, &members, &mask, 2).unwrap();
         assert_eq!(out, vec![2.0, 2.0]); // c0: 0+2 ; c1: 1+1
     }
 

@@ -40,7 +40,10 @@ impl BackendKind {
 
 /// Load a compute backend. `min_block` picks the artifact variant (use
 /// 2048 for production workloads, 256 for tests/examples).
-pub fn load_backend(kind: BackendKind, min_block: usize) -> anyhow::Result<Arc<dyn ComputeBackend>> {
+pub fn load_backend(
+    kind: BackendKind,
+    min_block: usize,
+) -> anyhow::Result<Arc<dyn ComputeBackend>> {
     match kind {
         BackendKind::Native => Ok(Arc::new(NativeBackend::new(min_block, 64.min(min_block)))),
         BackendKind::Pjrt => {

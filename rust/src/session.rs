@@ -36,7 +36,7 @@ use crate::geo::datasets::{self, SpatialDataset, SpatialSpec};
 use crate::geo::Point;
 use crate::mapreduce::{input_from_table, Cluster, Counters, Input, JobResult, JobSpec, JobStats};
 use crate::runtime::{load_backend, BackendKind, ComputeBackend, NativeBackend};
-use crate::sim::CostModel;
+use crate::sim::{CostModel, FaultPlan};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -83,6 +83,8 @@ pub struct SessionBuilder {
     cost: CostModel,
     speculation: bool,
     threads: usize,
+    faults: Option<FaultPlan>,
+    max_attempts: usize,
 }
 
 impl SessionBuilder {
@@ -128,6 +130,20 @@ impl SessionBuilder {
         self.speculation = on;
         self
     }
+    /// Inject a [`FaultPlan`]: planned node failures/recoveries plus a
+    /// transient per-attempt task failure rate. Clustering results are
+    /// byte-identical with and without faults — only the simulated time
+    /// and attempt statistics change (the engine's recovery contract).
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+    /// Per-task transient-failure budget before the job is failed
+    /// (Hadoop's `mapred.map.max.attempts`; default 4).
+    pub fn max_attempts(mut self, n: usize) -> Self {
+        self.max_attempts = n.max(1);
+        self
+    }
     /// Worker threads for map/reduce *real* compute (wallclock only —
     /// results, counters, and simulated timing are identical at any
     /// value). Default 1; pass
@@ -157,6 +173,10 @@ impl SessionBuilder {
         let mut cluster = Cluster::new(cfg, self.seed).with_threads(self.threads);
         cluster.cost = self.cost;
         cluster.speculation = self.speculation;
+        cluster.max_attempts = self.max_attempts;
+        if let Some(plan) = &self.faults {
+            cluster.apply_fault_plan(plan);
+        }
         Ok(ClusterSession {
             id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
             cluster,
@@ -191,6 +211,8 @@ impl ClusterSession {
             cost: CostModel::default(),
             speculation: true,
             threads: 1,
+            faults: None,
+            max_attempts: crate::mapreduce::DEFAULT_MAX_ATTEMPTS,
         }
     }
 
@@ -501,7 +523,8 @@ mod tests {
     #[test]
     fn threads_plumb_through_and_do_not_change_results() {
         let fit = |threads: usize| {
-            let mut s = ClusterSession::builder().test(4).seed(21).threads(threads).build().unwrap();
+            let mut s =
+                ClusterSession::builder().test(4).seed(21).threads(threads).build().unwrap();
             assert_eq!(s.compute_threads(), threads.max(1));
             let mut spec = SpatialSpec::new(2000, 4, 21);
             spec.outlier_frac = 0.0;
@@ -542,6 +565,48 @@ mod tests {
             .unwrap();
         assert!(a.cost > 0.0 && b.cost > 0.0 && c.cost > 0.0);
         assert!(b.medoids.iter().all(|m| m.dims() == 3));
+    }
+
+    #[test]
+    fn faulty_fit_is_byte_identical_to_healthy_fit() {
+        // The fault-tolerance contract end to end: node loss + recovery +
+        // transient task failures change only the simulated time and the
+        // attempt statistics — never the clustering result — at any
+        // thread count.
+        let run = |faults: bool, threads: usize| {
+            let mut b = ClusterSession::builder().test(4).seed(33).threads(threads);
+            if faults {
+                b = b
+                    .faults(FaultPlan {
+                        node_failures: vec![(5.0, 1)],
+                        node_recoveries: vec![(60.0, 1)],
+                        task_fail_rate: 0.25,
+                        seed: 33,
+                    })
+                    .max_attempts(16);
+            }
+            let mut s = b.build().unwrap();
+            let mut spec = SpatialSpec::new(2500, 4, 33);
+            spec.outlier_frac = 0.0;
+            let data = s.ingest_spec("pts", &spec);
+            let out =
+                KMedoids::mapreduce().plus_plus().k(4).seed(33).build().fit(&mut s, &data).unwrap();
+            let failed: usize = s.history().iter().map(|j| j.n_failed_attempts).sum();
+            (out.medoids, out.cost, out.dist_evals, out.iterations, out.sim_seconds, failed)
+        };
+        let (medoids, cost, evals, iters, sim_ok, _) = run(false, 1);
+        let (m2, c2, e2, i2, sim_fail, failed) = run(true, 1);
+        assert_eq!(medoids, m2, "medoids must be byte-identical despite faults");
+        assert_eq!(cost, c2);
+        assert_eq!(evals, e2);
+        assert_eq!(iters, i2);
+        assert!(failed > 0, "a 0.25 fail rate over a whole fit must kill attempts");
+        assert!(sim_fail > sim_ok, "recovery must cost simulated time");
+        // And the faulty run itself replays identically on 4 threads.
+        let again = run(true, 4);
+        assert_eq!(again.0, m2);
+        assert_eq!(again.4, sim_fail);
+        assert_eq!(again.5, failed);
     }
 
     #[test]

@@ -137,7 +137,13 @@ impl CostModel {
 
     /// Shuffle fetch time for one reducer pulling `bytes` from `src` to
     /// `dst`, after overlap with the map phase is credited.
-    pub fn shuffle_seconds(&self, cluster: &ClusterConfig, src: usize, dst: usize, bytes: u64) -> f64 {
+    pub fn shuffle_seconds(
+        &self,
+        cluster: &ClusterConfig,
+        src: usize,
+        dst: usize,
+        bytes: u64,
+    ) -> f64 {
         if bytes == 0 {
             return 0.0;
         }

@@ -44,6 +44,10 @@ impl std::ops::Sub<SimTime> for SimTime {
 pub enum Event {
     /// A task attempt finished on a node.
     TaskDone { attempt_id: usize },
+    /// A task attempt died partway through (transient failure from a
+    /// [`crate::sim::FaultPlan`]); its partial sim time is charged and the
+    /// task is retried up to the cluster's `max_attempts`.
+    TaskFail { attempt_id: usize },
     /// A node fails (fail-stop); all attempts there die, its completed map
     /// outputs become unreadable (Hadoop semantics: re-execute those maps).
     NodeFail { node: usize },

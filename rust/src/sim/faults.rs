@@ -1,0 +1,120 @@
+//! Fault plans: seeded, reproducible failure schedules for the simulated
+//! cluster.
+//!
+//! A [`FaultPlan`] bundles everything the engine's fault machinery can
+//! inject — fail-stop node losses (wired through
+//! [`crate::dfs::NameNode::fail_node`] re-replication and HMaster region
+//! failover), node recoveries, and a per-attempt transient task failure
+//! rate (flaky TaskTracker JVMs, the paper-era commodity failure mode
+//! that `mapred.map.max.attempts` exists to absorb). Every draw is a pure
+//! function of the plan's `seed` plus the (job, task, attempt) identity,
+//! so a plan replays identically across runs, thread counts, and
+//! scheduling orders — the determinism contract the scale bench's
+//! faults-on/faults-off identity check relies on.
+
+use crate::util::rng::Rng;
+
+/// A reproducible schedule of cluster faults. Apply with
+/// [`crate::mapreduce::Cluster::apply_fault_plan`] or
+/// [`crate::session::SessionBuilder::faults`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Fail-stop node losses: (absolute sim seconds, node index). The
+    /// master cannot be listed (as in the paper, master failure is out of
+    /// scope).
+    pub node_failures: Vec<(f64, usize)>,
+    /// Node rejoins: (absolute sim seconds, node index). A recovered node
+    /// comes back empty (its DFS replicas were re-replicated away).
+    pub node_recoveries: Vec<(f64, usize)>,
+    /// Probability that any single task attempt fails partway through
+    /// (charged its partial sim time, then retried up to the cluster's
+    /// `max_attempts`). 0 disables transient task failures.
+    pub task_fail_rate: f64,
+    /// Seed for the per-attempt failure draws.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// The empty plan (no faults).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_empty(&self) -> bool {
+        self.node_failures.is_empty()
+            && self.node_recoveries.is_empty()
+            && self.task_fail_rate <= 0.0
+    }
+
+    /// A seeded random plan over an `n_nodes` cluster: `n_failures`
+    /// distinct non-master victims fail at times spread over
+    /// `(0.2..0.8) * window_s`, each rejoining a quarter-window later,
+    /// plus a transient `task_fail_rate`. With one node (master only) no
+    /// node losses are planned — only task flakiness applies.
+    pub fn seeded(
+        seed: u64,
+        n_nodes: usize,
+        n_failures: usize,
+        window_s: f64,
+        task_fail_rate: f64,
+    ) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA_17);
+        let mut node_failures = Vec::new();
+        let mut node_recoveries = Vec::new();
+        if n_nodes > 1 && n_failures > 0 && window_s > 0.0 {
+            let victims = rng.sample_indices(n_nodes - 1, n_failures.min(n_nodes - 1));
+            for v in victims {
+                let node = v + 1; // skip the master at index 0
+                let at = window_s * (0.2 + 0.6 * rng.f64());
+                node_failures.push((at, node));
+                node_recoveries.push((at + 0.25 * window_s, node));
+            }
+            node_failures.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            node_recoveries.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        }
+        FaultPlan { node_failures, node_recoveries, task_fail_rate, seed }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_is_deterministic_and_spares_the_master() {
+        let a = FaultPlan::seeded(7, 8, 3, 100.0, 0.05);
+        let b = FaultPlan::seeded(7, 8, 3, 100.0, 0.05);
+        assert_eq!(a, b);
+        assert_eq!(a.node_failures.len(), 3);
+        assert_eq!(a.node_recoveries.len(), 3);
+        assert!(a.node_failures.iter().all(|&(_, n)| n >= 1 && n < 8));
+        assert!(a.node_failures.iter().all(|&(t, _)| t >= 20.0 && t <= 80.0));
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn seeded_single_node_plans_no_node_loss() {
+        let p = FaultPlan::seeded(3, 1, 2, 50.0, 0.1);
+        assert!(p.node_failures.is_empty());
+        assert!(p.node_recoveries.is_empty());
+        assert_eq!(p.task_fail_rate, 0.1);
+        assert!(!p.is_empty(), "task flakiness still applies");
+    }
+
+    #[test]
+    fn victims_are_distinct_and_capped() {
+        let p = FaultPlan::seeded(11, 4, 10, 60.0, 0.0);
+        assert_eq!(p.node_failures.len(), 3, "capped at the non-master count");
+        let mut nodes: Vec<usize> = p.node_failures.iter().map(|&(_, n)| n).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 3);
+    }
+
+    #[test]
+    fn none_is_empty() {
+        assert!(FaultPlan::none().is_empty());
+        assert!(!FaultPlan { task_fail_rate: 0.5, ..FaultPlan::none() }.is_empty());
+    }
+}

@@ -8,9 +8,11 @@
 
 pub mod costmodel;
 pub mod events;
+pub mod faults;
 
 pub use costmodel::{CostModel, TaskWork};
 pub use events::{Event, EventQueue, SimTime};
+pub use faults::FaultPlan;
 
 /// Convert a simulated time (seconds, f64) to the millisecond integer the
 /// paper's Table 6 reports.

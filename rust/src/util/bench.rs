@@ -38,7 +38,14 @@ impl Stats {
         let median = if n % 2 == 1 { xs[n / 2] } else { 0.5 * (xs[n / 2 - 1] + xs[n / 2]) };
         let mean = xs.iter().sum::<f64>() / n as f64;
         let p95 = xs[((n as f64 * 0.95) as usize).min(n - 1)];
-        Stats { name: name.to_string(), iters: n, min_s: xs[0], median_s: median, mean_s: mean, p95_s: p95 }
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            min_s: xs[0],
+            median_s: median,
+            mean_s: mean,
+            p95_s: p95,
+        }
     }
 
     /// JSON row for machine-readable bench reports (`BENCH_*.json`).

@@ -307,7 +307,8 @@ mod tests {
 
     #[test]
     fn cluster_keys_sort_numerically() {
-        let mut keys: Vec<Vec<u8>> = [300u32, 2, 10, 255, 256].iter().map(|&i| encode_cluster_key(i)).collect();
+        let mut keys: Vec<Vec<u8>> =
+            [300u32, 2, 10, 255, 256].iter().map(|&i| encode_cluster_key(i)).collect();
         keys.sort();
         let ids: Vec<u32> = keys.iter().map(|k| decode_cluster_key(k)).collect();
         assert_eq!(ids, vec![2, 10, 255, 256, 300]);

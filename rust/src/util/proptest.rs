@@ -29,7 +29,12 @@ pub fn for_all(cases: usize, seed: u64, mut prop: impl FnMut(&mut Rng)) {
 
 /// Like `for_all` but passes a size that grows with the case index, and on
 /// failure retries progressively smaller sizes to report a minimal size.
-pub fn for_all_sized(cases: usize, seed: u64, max_size: usize, mut prop: impl FnMut(&mut Rng, usize)) {
+pub fn for_all_sized(
+    cases: usize,
+    seed: u64,
+    max_size: usize,
+    mut prop: impl FnMut(&mut Rng, usize),
+) {
     for case in 0..cases {
         let cs = case_seed(seed, case);
         let size = 1 + (max_size - 1) * case / cases.max(1);
@@ -44,8 +49,10 @@ pub fn for_all_sized(cases: usize, seed: u64, max_size: usize, mut prop: impl Fn
             while lo < hi {
                 let mid = (lo + hi) / 2;
                 let mut rng = Rng::new(cs);
-                let f =
-                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng, mid))).is_err();
+                let f = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    prop(&mut rng, mid)
+                }))
+                .is_err();
                 if f {
                     hi = mid;
                 } else {
@@ -53,7 +60,8 @@ pub fn for_all_sized(cases: usize, seed: u64, max_size: usize, mut prop: impl Fn
                 }
             }
             let mut rng = Rng::new(cs);
-            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng, hi)));
+            let result =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng, hi)));
             match result {
                 Err(e) => {
                     let msg = e
