@@ -32,11 +32,13 @@
 //! | `KMedoids::mapreduce().plus_plus()` | `kmedoids++-mr` | [`super::parallel`] |
 //! | `KMedoids::mapreduce().random_init()` | `kmedoids-mr` | [`super::parallel`] |
 //! | `KMedoids::mapreduce().oversample(l, r)` | `kmedoids-scalable-mr` | [`super::parallel`] |
+//! | `KMedoids::coreset()` | `kmedoids-coreset-mr` | [`super::coreset`] |
 //! | `KMedoids::serial()` | `kmedoids-serial` | [`super::pam`] |
 //! | `Clarans::serial()` | `clarans` | [`super::clarans`] |
 //! | `KMeans::mapreduce()` | `kmeans-mr` | [`super::kmeans`] |
 
 use super::clarans::{clarans_observed, ClaransParams};
+use super::coreset::CoresetKMedoids;
 use super::kmeans::ParallelKMeans;
 use super::observe::ObserverHub;
 use super::pam::alternating_kmedoids_observed;
@@ -165,6 +167,8 @@ pub trait SpatialClusterer {
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum Exec {
     MapReduce,
+    /// Constant-round weighted-coreset pipeline ([`super::coreset`]).
+    Coreset,
     Serial,
 }
 
@@ -185,6 +189,9 @@ pub struct KMedoids {
     rel_tol: f64,
     fixed_iters: Option<usize>,
     label_pass: bool,
+    /// Weighted-representative budget for the coreset exec mode; `None`
+    /// uses the O(k·log n) default.
+    coreset_size: Option<usize>,
 }
 
 /// Fluent builder for [`KMedoids`].
@@ -210,6 +217,7 @@ impl KMedoids {
                 rel_tol: 1e-3,
                 fixed_iters: None,
                 label_pass: false,
+                coreset_size: None,
             },
         }
     }
@@ -220,6 +228,18 @@ impl KMedoids {
         let mut b = KMedoids::mapreduce();
         b.inner.exec = Exec::Serial;
         b.inner.init = Init::Random;
+        b
+    }
+
+    /// The constant-round weighted-coreset pipeline
+    /// (`kmedoids-coreset-mr`, [`super::coreset`]): two MR jobs total —
+    /// per-split weighted coresets merged by one reducer, then a
+    /// driver-side weighted recluster and one exact cost/label pass —
+    /// instead of one job pair per iteration. Tune the representative
+    /// budget with [`KMedoidsBuilder::coreset_size`].
+    pub fn coreset() -> KMedoidsBuilder {
+        let mut b = KMedoids::mapreduce();
+        b.inner.exec = Exec::Coreset;
         b
     }
 }
@@ -287,6 +307,12 @@ impl KMedoidsBuilder {
         self.inner.label_pass = on;
         self
     }
+    /// Total weighted-representative budget of the coreset pipeline
+    /// (only honored by [`KMedoids::coreset`]; default O(k·log n)).
+    pub fn coreset_size(mut self, n: usize) -> Self {
+        self.inner.coreset_size = Some(n);
+        self
+    }
     pub fn build(self) -> KMedoids {
         self.inner
     }
@@ -308,6 +334,7 @@ impl SpatialClusterer for KMedoids {
             (Exec::MapReduce, Init::PlusPlus) => "kmedoids++-mr",
             (Exec::MapReduce, Init::Random) => "kmedoids-mr",
             (Exec::MapReduce, Init::OverSample { .. }) => "kmedoids-scalable-mr",
+            (Exec::Coreset, _) => "kmedoids-coreset-mr",
             (Exec::Serial, _) => "kmedoids-serial",
         }
     }
@@ -337,6 +364,25 @@ impl SpatialClusterer for KMedoids {
                     metric: self.metric,
                     label_pass: self.label_pass,
                     event_label: None,
+                };
+                run_mr_fit(session, name, points.len(), self.k, |cluster, hub| {
+                    drv.run_observed(cluster, &input, &points, hub)
+                })
+            }
+            Exec::Coreset => {
+                if let Some(size) = self.coreset_size {
+                    ensure!(
+                        size >= 1,
+                        "coreset_size must be >= 1 (it is clamped into [k, n] at fit time)"
+                    );
+                }
+                let input = session.dataset_input(data);
+                let drv = CoresetKMedoids {
+                    backend: session.backend(),
+                    params: self.iter_params(),
+                    metric: self.metric,
+                    coreset_size: self.coreset_size,
+                    label_pass: self.label_pass,
                 };
                 run_mr_fit(session, name, points.len(), self.k, |cluster, hub| {
                     drv.run_observed(cluster, &input, &points, hub)
@@ -641,6 +687,11 @@ mod tests {
 
         let s = KMedoids::serial().k(5).seed(7).build();
         assert_eq!(s.name(), "kmedoids-serial");
+
+        let c = KMedoids::coreset().k(6).coreset_size(96).build();
+        assert_eq!(c.name(), "kmedoids-coreset-mr");
+        assert_eq!(c.k(), 6);
+        assert_eq!(c.coreset_size, Some(96));
 
         let km = KMeans::mapreduce().k(3).build();
         assert_eq!(km.name(), "kmeans-mr");

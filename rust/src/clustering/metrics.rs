@@ -22,6 +22,30 @@ pub fn total_cost_metric(points: &[Point], medoids: &[Point], metric: Metric) ->
         .sum()
 }
 
+/// Weighted total cost: `Σ w_i · d(p_i, nearest medoid)` — the objective
+/// a weighted coreset stands in for. Brute force, the verification oracle
+/// for the weighted pipeline ([`crate::clustering::coreset`]). With every
+/// weight 1.0 this is exactly [`total_cost_metric`], and duplicating a
+/// point is equivalent to doubling its weight (both invariants are
+/// property-tested).
+pub fn weighted_total_cost_metric(
+    points: &[Point],
+    weights: &[f32],
+    medoids: &[Point],
+    metric: Metric,
+) -> f64 {
+    assert!(!medoids.is_empty());
+    assert_eq!(points.len(), weights.len(), "one weight per point");
+    points
+        .iter()
+        .zip(weights)
+        .map(|(p, &w)| {
+            w as f64
+                * medoids.iter().map(|m| metric.distance(p, m)).fold(f64::INFINITY, f64::min)
+        })
+        .sum()
+}
+
 /// Nearest-medoid labels, brute force (shared first-min-wins scan from
 /// [`crate::util::nearest`]).
 pub fn brute_labels(points: &[Point], medoids: &[Point]) -> Vec<u32> {
@@ -199,6 +223,62 @@ mod tests {
         let pts = vec![Point::new(0.0, 0.0), Point::new(10.0, 0.0)];
         let med = vec![Point::new(1.0, 0.0), Point::new(9.0, 0.0)];
         assert_eq!(brute_labels(&pts, &med), vec![0, 1]);
+    }
+
+    #[test]
+    fn weighted_cost_with_unit_weights_is_unweighted_cost() {
+        use crate::util::proptest::for_all;
+        for metric in [Metric::SqEuclidean, Metric::Manhattan] {
+            for_all(20, 0x3E16, |rng| {
+                let n = 3 + rng.below(60);
+                let k = 1 + rng.below(4);
+                let mk = |rng: &mut Rng, n: usize| -> Vec<Point> {
+                    (0..n)
+                        .map(|_| {
+                            Point::new(
+                                rng.range_f64(-50.0, 50.0) as f32,
+                                rng.range_f64(-50.0, 50.0) as f32,
+                            )
+                        })
+                        .collect()
+                };
+                let pts = mk(rng, n);
+                let med = mk(rng, k);
+                let ones = vec![1.0f32; n];
+                let w = weighted_total_cost_metric(&pts, &ones, &med, metric);
+                let u = total_cost_metric(&pts, &med, metric);
+                assert!((w - u).abs() <= 1e-9 * u.max(1.0), "{metric:?}: {w} vs {u}");
+            });
+        }
+    }
+
+    #[test]
+    fn duplicating_a_point_equals_doubling_its_weight() {
+        use crate::util::proptest::for_all;
+        for_all(30, 0x3E17, |rng| {
+            let n = 2 + rng.below(40);
+            let pts: Vec<Point> = (0..n)
+                .map(|_| {
+                    Point::new(
+                        rng.range_f64(-50.0, 50.0) as f32,
+                        rng.range_f64(-50.0, 50.0) as f32,
+                    )
+                })
+                .collect();
+            let med = vec![pts[0], pts[n / 2]];
+            let mut weights: Vec<f32> = (0..n).map(|_| 1.0 + rng.below(4) as f32).collect();
+            let dup = rng.below(n);
+            // Version A: point `dup` appears twice at its own weight.
+            let mut pts_a = pts.clone();
+            pts_a.push(pts[dup]);
+            let mut w_a = weights.clone();
+            w_a.push(weights[dup]);
+            let a = weighted_total_cost_metric(&pts_a, &w_a, &med, Metric::SqEuclidean);
+            // Version B: point `dup` appears once at double weight.
+            weights[dup] *= 2.0;
+            let b = weighted_total_cost_metric(&pts, &weights, &med, Metric::SqEuclidean);
+            assert!((a - b).abs() <= 1e-9 * a.max(1.0), "{a} vs {b}");
+        });
     }
 
     #[test]

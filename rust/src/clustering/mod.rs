@@ -5,6 +5,7 @@
 //! |---|---|---|
 //! | Parallel K-Medoids++ (MR) | [`parallel`] | the paper's contribution (§3) |
 //! | Parallel K-Medoids, random init (MR) | [`parallel`] | "traditional K-Medoids" in Fig. 5 |
+//! | Weighted-coreset K-Medoids (MR) | [`coreset`] | constant-round pipeline (Ene et al.) |
 //! | Serial alternating K-Medoids | [`pam`] | §2.3 baseline |
 //! | PAM (build + swap) | [`pam`] | exact small-n reference |
 //! | CLARANS | [`clarans`] | Fig. 5 comparator |
@@ -12,6 +13,7 @@
 
 pub mod api;
 pub mod clarans;
+pub mod coreset;
 pub mod kmeans;
 pub mod metrics;
 pub mod observe;

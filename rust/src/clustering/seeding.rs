@@ -167,7 +167,9 @@ pub fn oversample_serial(
 /// seeding (draw probability ∝ weight · distance-to-chosen), deduping
 /// every draw against the chosen set; tops up from `fallback` (the full
 /// dataset) when the candidate pool runs out of distinct coordinates.
-fn recluster_candidates(
+/// Shared with the coreset pipeline ([`super::coreset`]), whose
+/// driver-side recluster is the same weighted draw.
+pub(crate) fn recluster_candidates(
     cands: &[Point],
     weights: &[f64],
     k: usize,

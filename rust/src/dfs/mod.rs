@@ -35,6 +35,19 @@ impl std::fmt::Display for NoLiveDataNodes {
 
 impl std::error::Error for NoLiveDataNodes {}
 
+/// What re-replication after a DataNode loss actually moved: the NameNode
+/// copies every under-replicated block from a surviving replica to a
+/// fresh node, so `bytes` is real cross-node network traffic — the
+/// MapReduce engine charges it to the simulated clock through
+/// [`crate::sim::CostModel::rereplication_seconds`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ReplicationRepair {
+    /// Blocks that got a fresh replica.
+    pub blocks: usize,
+    /// Bytes copied across the network to create those replicas.
+    pub bytes: u64,
+}
+
 #[derive(Debug, Clone)]
 pub struct Block {
     pub id: BlockId,
@@ -179,11 +192,11 @@ impl NameNode {
     }
 
     /// Fail-stop a DataNode; re-replicate every block it held (if enough
-    /// alive nodes exist). Returns the number of blocks re-replicated, or
-    /// a typed [`NoLiveDataNodes`] error when this was the last live node
-    /// (the node is still marked dead — fail-stop is a fact — but nothing
-    /// can be re-replicated and reads will fail).
-    pub fn fail_node(&mut self, node: usize) -> Result<usize, NoLiveDataNodes> {
+    /// alive nodes exist). Returns the [`ReplicationRepair`] traffic
+    /// summary, or a typed [`NoLiveDataNodes`] error when this was the
+    /// last live node (the node is still marked dead — fail-stop is a
+    /// fact — but nothing can be re-replicated and reads will fail).
+    pub fn fail_node(&mut self, node: usize) -> Result<ReplicationRepair, NoLiveDataNodes> {
         self.alive[node] = false;
         self.node_usage[node] = 0;
         if !self.alive.iter().any(|&a| a) {
@@ -195,7 +208,7 @@ impl NameNode {
             .filter(|b| b.replicas.contains(&node))
             .map(|b| b.id)
             .collect();
-        let mut fixed = 0;
+        let mut repair = ReplicationRepair::default();
         for id in ids {
             // Remove the dead replica, then add a fresh one elsewhere.
             let (bytes, mut reps) = {
@@ -209,11 +222,12 @@ impl NameNode {
             if let Some(&new) = alive.iter().min_by_key(|&&n| (self.node_usage[n], n)) {
                 reps.push(new);
                 self.node_usage[new] += bytes;
-                fixed += 1;
+                repair.blocks += 1;
+                repair.bytes += bytes;
             }
             self.blocks.get_mut(&id).unwrap().replicas = reps;
         }
-        Ok(fixed)
+        Ok(repair)
     }
 
     pub fn recover_node(&mut self, node: usize) {
@@ -285,8 +299,10 @@ mod tests {
         let held: Vec<BlockId> =
             n.blocks.values().filter(|b| b.replicas.contains(&victim)).map(|b| b.id).collect();
         assert!(!held.is_empty());
-        let fixed = n.fail_node(victim).expect("3 nodes survive");
-        assert!(fixed > 0, "every held block should be re-replicated");
+        let repair = n.fail_node(victim).expect("3 nodes survive");
+        assert_eq!(repair.blocks, held.len(), "every held block should be re-replicated");
+        let held_bytes: u64 = held.iter().map(|&id| n.block(id).bytes).sum();
+        assert_eq!(repair.bytes, held_bytes, "repair traffic is the held bytes");
         for id in held {
             let b = n.block(id);
             assert!(!b.replicas.contains(&victim));

@@ -39,6 +39,9 @@ pub enum Algorithm {
     /// MR K-Medoids with k-means||-style oversampled seeding (Bahmani
     /// et al.): O(rounds) seeding jobs instead of k−1.
     KMedoidsScalableMR,
+    /// Constant-round weighted-coreset pipeline (Ene et al.): two MR
+    /// jobs total regardless of iteration count.
+    KMedoidsCoresetMR,
     /// Serial traditional K-Medoids (single node).
     KMedoidsSerial,
     /// CLARANS (serial, Ng & Han).
@@ -48,10 +51,11 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
-    pub const ALL: [Algorithm; 6] = [
+    pub const ALL: [Algorithm; 7] = [
         Algorithm::KMedoidsPlusPlusMR,
         Algorithm::KMedoidsRandomMR,
         Algorithm::KMedoidsScalableMR,
+        Algorithm::KMedoidsCoresetMR,
         Algorithm::KMedoidsSerial,
         Algorithm::Clarans,
         Algorithm::KMeansMR,
@@ -62,6 +66,7 @@ impl Algorithm {
             Algorithm::KMedoidsPlusPlusMR => "kmedoids++-mr",
             Algorithm::KMedoidsRandomMR => "kmedoids-mr",
             Algorithm::KMedoidsScalableMR => "kmedoids-scalable-mr",
+            Algorithm::KMedoidsCoresetMR => "kmedoids-coreset-mr",
             Algorithm::KMedoidsSerial => "kmedoids-serial",
             Algorithm::Clarans => "clarans",
             Algorithm::KMeansMR => "kmeans-mr",
@@ -74,6 +79,7 @@ impl Algorithm {
             "kmedoids-scalable-mr" | "kmedoids||-mr" | "kmedoids-scalable" => {
                 Algorithm::KMedoidsScalableMR
             }
+            "kmedoids-coreset-mr" | "kmedoids-coreset" => Algorithm::KMedoidsCoresetMR,
             "kmedoids-serial" => Algorithm::KMedoidsSerial,
             "clarans" => Algorithm::Clarans,
             "kmeans-mr" | "kmeans" => Algorithm::KMeansMR,
@@ -96,6 +102,10 @@ pub struct Experiment {
     /// uses Bahmani et al.'s defaults (ℓ = 2k, 5 rounds). Only honored
     /// by [`Algorithm::KMedoidsScalableMR`].
     pub oversample: Option<(usize, usize)>,
+    /// Weighted-representative budget of the coreset pipeline; `None`
+    /// uses the O(k·log n) default. Only honored by
+    /// [`Algorithm::KMedoidsCoresetMR`].
+    pub coreset_size: Option<usize>,
     pub seed: u64,
     /// Run the final labeling pass and quality metrics (slower).
     pub with_quality: bool,
@@ -123,6 +133,7 @@ impl Experiment {
             update: UpdateStrategy::paper_scale_default(),
             metric: Metric::SqEuclidean,
             oversample: None,
+            coreset_size: None,
             seed,
             with_quality: false,
             fixed_iters: None,
@@ -159,6 +170,23 @@ impl Experiment {
                     },
                 };
                 if let Some(n) = self.fixed_iters {
+                    b = b.fixed_iters(n);
+                }
+                Box::new(b.build())
+            }
+            Algorithm::KMedoidsCoresetMR => {
+                let mut b = KMedoids::coreset()
+                    .k(self.k)
+                    .seed(self.seed)
+                    .metric(self.metric)
+                    .label_pass(self.with_quality);
+                if let Some(size) = self.coreset_size {
+                    b = b.coreset_size(size);
+                }
+                if let Some(n) = self.fixed_iters {
+                    // For the coreset pipeline fixed_iters pins the
+                    // driver-side refinement count — the job count stays
+                    // constant either way.
                     b = b.fixed_iters(n);
                 }
                 Box::new(b.build())
@@ -298,6 +326,7 @@ mod tests {
             update: UpdateStrategy::Sampled { candidates: 64, member_sample: 1024 },
             metric: Metric::SqEuclidean,
             oversample: None,
+            coreset_size: None,
             seed: 71,
             with_quality: true,
             threads: 1,
@@ -339,7 +368,44 @@ mod tests {
             assert_eq!(Algorithm::parse(a.name()), Some(a));
         }
         assert_eq!(Algorithm::parse("kmedoids||-mr"), Some(Algorithm::KMedoidsScalableMR));
+        assert_eq!(Algorithm::parse("kmedoids-coreset"), Some(Algorithm::KMedoidsCoresetMR));
         assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn coreset_cell_runs_with_fewer_jobs_than_iterative_mr() {
+        // The acceptance bar: at equal k the coreset pipeline runs fewer
+        // MR jobs than the random-init iterative driver, with comparable
+        // recovery quality.
+        let mut session = ClusterSession::builder().test(4).seed(71).build().unwrap();
+        let mut spec = SpatialSpec::new(5000, 5, 71);
+        spec.outlier_frac = 0.0;
+        let data = session.ingest_spec("pts", &spec);
+
+        let mut coreset = quick_exp(Algorithm::KMedoidsCoresetMR, 4);
+        coreset.spec = spec.clone();
+        // Pin iterations on both cells (as `bench scale` does) so the
+        // job-count comparison cannot hinge on convergence luck.
+        coreset.fixed_iters = Some(4);
+        let jobs_before = session.jobs_run();
+        let rc = run_cell(&mut session, &coreset, &data).unwrap();
+        let coreset_jobs = session.jobs_run() - jobs_before;
+        assert_eq!(rc.algorithm, "kmedoids-coreset-mr");
+        assert!(rc.ari.unwrap() > 0.8, "ari {:?}", rc.ari);
+
+        let mut iterative = quick_exp(Algorithm::KMedoidsRandomMR, 4);
+        iterative.spec = spec;
+        iterative.fixed_iters = Some(4);
+        let jobs_before = session.jobs_run();
+        let ri = run_cell(&mut session, &iterative, &data).unwrap();
+        let iterative_jobs = session.jobs_run() - jobs_before;
+        assert!(
+            coreset_jobs < iterative_jobs,
+            "coreset ran {coreset_jobs} jobs vs kmedoids-mr {iterative_jobs}"
+        );
+        assert_eq!(coreset_jobs, 2, "coreset is constant-round: merge job + cost pass");
+        // Quality within a modest factor of the iterative fit.
+        assert!(rc.cost <= ri.cost * 2.5, "coreset {} vs iterative {}", rc.cost, ri.cost);
     }
 
     #[test]

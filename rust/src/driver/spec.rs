@@ -225,19 +225,27 @@ fn algorithm_uses_update(a: Algorithm) -> bool {
     )
 }
 
-/// Does this algorithm honor `fixed_iters` (controlled iterations)?
+/// Does this algorithm honor `fixed_iters` (controlled iterations)? For
+/// the coreset pipeline it pins the driver-side refinement count (the MR
+/// job count is constant either way).
 fn algorithm_uses_fixed_iters(a: Algorithm) -> bool {
     matches!(
         a,
         Algorithm::KMedoidsPlusPlusMR
             | Algorithm::KMedoidsRandomMR
             | Algorithm::KMedoidsScalableMR
+            | Algorithm::KMedoidsCoresetMR
     )
 }
 
 /// Does this algorithm honor the `oversample` (ℓ, rounds) knob?
 fn algorithm_uses_oversample(a: Algorithm) -> bool {
     matches!(a, Algorithm::KMedoidsScalableMR)
+}
+
+/// Does this algorithm honor the `coreset_size` knob?
+fn algorithm_uses_coreset_size(a: Algorithm) -> bool {
+    matches!(a, Algorithm::KMedoidsCoresetMR)
 }
 
 pub fn experiment_to_json(e: &Experiment) -> Json {
@@ -277,6 +285,15 @@ pub fn experiment_to_json(e: &Experiment) -> Json {
             },
         ));
     }
+    if algorithm_uses_coreset_size(e.algorithm) {
+        pairs.push((
+            "coreset_size",
+            match e.coreset_size {
+                Some(n) => Json::Num(n as f64),
+                None => Json::Null,
+            },
+        ));
+    }
     obj(pairs)
 }
 
@@ -294,6 +311,7 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
             "update",
             "fixed_iters",
             "oversample",
+            "coreset_size",
             "dataset",
             "threads",
         ],
@@ -369,6 +387,19 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
             Some((l, rounds))
         }
     };
+    let coreset_size = match j.get("coreset_size") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            if !algorithm_uses_coreset_size(algorithm) {
+                bail!(
+                    "algorithm {:?} ignores \"coreset_size\" (only kmedoids-coreset-mr builds \
+                     a weighted coreset) — remove it from the spec cell",
+                    algorithm.name()
+                );
+            }
+            Some(as_pos_usize(v, "coreset_size")?)
+        }
+    };
     let n_nodes = match j.get("nodes") {
         Some(v) => as_pos_usize(v, "nodes")?,
         None => 7,
@@ -393,6 +424,7 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         update,
         metric,
         oversample,
+        coreset_size,
         seed,
         with_quality,
         fixed_iters,
@@ -527,6 +559,11 @@ mod tests {
                 };
                 e.oversample = if algorithm_uses_oversample(algorithm) {
                     Some((16, 4))
+                } else {
+                    None
+                };
+                e.coreset_size = if algorithm_uses_coreset_size(algorithm) {
+                    Some(128)
                 } else {
                     None
                 };
@@ -740,6 +777,48 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{e:#}").contains("rounds"), "{e:#}");
+    }
+
+    #[test]
+    fn coreset_size_knob_parses_for_coreset_only() {
+        let cells = experiments_from_str(
+            r#"{"algorithm": "kmedoids-coreset-mr", "coreset_size": 256,
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].algorithm, Algorithm::KMedoidsCoresetMR);
+        assert_eq!(cells[0].coreset_size, Some(256));
+
+        // Absent / null means the O(k·log n) default.
+        let cells = experiments_from_str(
+            r#"{"algorithm": "kmedoids-coreset", "coreset_size": null,
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].coreset_size, None);
+
+        // Other algorithms refuse the knob; bad values are rejected.
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids++-mr", "coreset_size": 64,
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("coreset_size"), "{e:#}");
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids-coreset-mr", "coreset_size": 0,
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("coreset_size"), "{e:#}");
+
+        // The coreset pipeline runs with its own update rule: an explicit
+        // "update" block is refused like for clarans/kmeans.
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids-coreset-mr", "dataset": {"n_points": 500},
+                "update": {"kind": "exact"}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("update"), "{e:#}");
     }
 
     #[test]

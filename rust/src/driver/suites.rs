@@ -126,13 +126,15 @@ pub fn table6_suite(backend: &Arc<dyn ComputeBackend>, opts: &SuiteOpts) -> Vec<
 /// Fig. 5: comparative algorithms over the 3 dataset sizes — the paper's
 /// "classic clustering algorithms for comparison are traditional
 /// K-Medoids algorithm and CLARANS algorithm": the proposed parallel
-/// K-Medoids++ (7 nodes) against the serial comparators on the master.
-/// One shared 7-node session hosts all nine cells.
+/// K-Medoids++ (7 nodes) and the constant-round coreset pipeline against
+/// the serial comparators on the master. One shared 7-node session hosts
+/// all twelve cells.
 pub fn fig5_suite(backend: &Arc<dyn ComputeBackend>, opts: &SuiteOpts) -> Vec<ExperimentResult> {
     let datasets = paper_datasets(opts);
     let (mut session, handles) = suite_session(backend, 7, opts, &datasets);
     let algos = [
         Algorithm::KMedoidsPlusPlusMR,
+        Algorithm::KMedoidsCoresetMR,
         Algorithm::KMedoidsSerial,
         Algorithm::Clarans,
     ];
@@ -683,7 +685,8 @@ fn ratio_curves(cells: &[ScaleCell], experiment: &str, invert: bool) -> Json {
 
 /// The paper's three scaling experiments — speedup (fixed n, growing
 /// cluster), sizeup (fixed cluster, growing n), scaleup (both grown
-/// together) — for the three MR algorithms, on the commodity cluster
+/// together) — for the four MR algorithms (the three iterative drivers
+/// plus the constant-round coreset pipeline), on the commodity cluster
 /// with the fault-tolerant scheduler. Every cell reports sim time, job
 /// and iteration counts, locality ratios, and attempt statistics; with
 /// [`ScaleOpts::faults`] each cell also runs a fault-injected twin and
@@ -702,6 +705,7 @@ pub fn scale_suite(backend: &Arc<dyn ComputeBackend>, opts: &ScaleOpts) -> Json 
         Algorithm::KMedoidsPlusPlusMR,
         Algorithm::KMedoidsRandomMR,
         Algorithm::KMedoidsScalableMR,
+        Algorithm::KMedoidsCoresetMR,
     ];
     let n_base = SpatialSpec::paper_dataset_scaled(0, opts.scale_div.max(1), opts.seed).n_points;
 
@@ -864,8 +868,8 @@ mod tests {
         let j = scale_suite(&be(), &opts);
         assert_eq!(j.get("bench").unwrap().as_str(), Some("scale"));
         let cells = j.get("cells").unwrap().as_arr().unwrap();
-        // 3 algorithms x (speedup + sizeup + scaleup) x 2 sweep points.
-        assert_eq!(cells.len(), 3 * 3 * 2);
+        // 4 algorithms x (speedup + sizeup + scaleup) x 2 sweep points.
+        assert_eq!(cells.len(), 4 * 3 * 2);
         // Every cell ran its faults-on twin and stayed byte-identical —
         // the determinism contract the CI gate enforces.
         assert_eq!(j.get("identity_ok").unwrap().as_bool(), Some(true));
@@ -877,19 +881,181 @@ mod tests {
             let ratio = loc.get("node_local_ratio").unwrap().as_f64().unwrap();
             assert!((0.0..=1.0).contains(&ratio));
         }
-        // Ratio curves exist for the three MR algorithms.
+        // Ratio curves exist for the four MR algorithms.
         for key in ["speedup", "sizeup", "scaleup"] {
             let curves = j.get(key).unwrap().as_obj().unwrap();
-            assert_eq!(curves.len(), 3, "{key}");
+            assert_eq!(curves.len(), 4, "{key}");
+        }
+        // The coreset pipeline runs fewer jobs than kmedoids-mr in every
+        // shared cell (constant rounds vs one job pair per iteration) —
+        // the acceptance bar the bench must keep visible.
+        for exp_name in ["speedup", "sizeup", "scaleup"] {
+            for c in cells.iter().filter(|c| {
+                c.get("experiment").and_then(|e| e.as_str()) == Some(exp_name)
+            }) {
+                let algo = c.get("algorithm").and_then(|a| a.as_str()).unwrap();
+                if algo != "kmedoids-coreset-mr" {
+                    continue;
+                }
+                let nodes = c.get("nodes").unwrap().as_usize().unwrap();
+                let n = c.get("n_points").unwrap().as_usize().unwrap();
+                let twin = cells
+                    .iter()
+                    .find(|t| {
+                        t.get("experiment").and_then(|e| e.as_str()) == Some(exp_name)
+                            && t.get("algorithm").and_then(|a| a.as_str())
+                                == Some("kmedoids-mr")
+                            && t.get("nodes").unwrap().as_usize() == Some(nodes)
+                            && t.get("n_points").unwrap().as_usize() == Some(n)
+                    })
+                    .expect("kmedoids-mr twin cell");
+                let jc = c.get("jobs").unwrap().as_usize().unwrap();
+                let jm = twin.get("jobs").unwrap().as_usize().unwrap();
+                assert!(jc < jm, "{exp_name} nodes={nodes}: coreset {jc} jobs vs mr {jm}");
+            }
         }
         // The document is valid, re-parseable JSON.
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 
+    /// Exact-key-set assertion: a bench refactor that drops or renames a
+    /// field CI artifacts depend on must fail here, not silently ship.
+    fn assert_exact_keys(j: &Json, what: &str, expect: &[&str]) {
+        let obj = j.as_obj().unwrap_or_else(|| panic!("{what} must be a JSON object"));
+        let got: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+        let mut want: Vec<&str> = expect.to_vec();
+        want.sort_unstable(); // BTreeMap iterates sorted
+        assert_eq!(got, want, "{what}: key set drifted");
+    }
+
+    #[test]
+    fn golden_schema_bench_perf_json() {
+        let opts = PerfOpts { scale_div: 2000, seed: 5, threads: vec![2], smoke: true };
+        let j = perf_suite(&be(), &opts);
+        assert_exact_keys(
+            &j,
+            "BENCH_perf.json",
+            &[
+                "bench",
+                "smoke",
+                "backend",
+                "scale_div",
+                "seed",
+                "n_points",
+                "kernels",
+                "e2e",
+                "speedup_vs_1_thread",
+                "identical_outputs",
+            ],
+        );
+        for row in j.get("e2e").unwrap().as_arr().unwrap() {
+            assert_exact_keys(
+                row,
+                "BENCH_perf.json e2e row",
+                &[
+                    "threads",
+                    "wall_s",
+                    "sim_seconds",
+                    "cost",
+                    "iterations",
+                    "dist_evals",
+                    "identical_to_1_thread",
+                ],
+            );
+        }
+        for row in j.get("kernels").unwrap().as_arr().unwrap() {
+            assert_exact_keys(
+                row,
+                "BENCH_perf.json kernel row",
+                &["name", "iters", "min_s", "median_s", "mean_s", "p95_s", "dist_evals_per_s"],
+            );
+        }
+    }
+
+    #[test]
+    fn golden_schema_bench_scale_json() {
+        // Single sweep point: the three experiments collapse onto one
+        // memoized cell per algorithm, so this is the cheapest full-shape
+        // document.
+        let mut opts = ScaleOpts::smoke();
+        opts.scale_div = 1600;
+        opts.nodes_sweep = vec![1];
+        let j = scale_suite(&be(), &opts);
+        assert_exact_keys(
+            &j,
+            "BENCH_scale.json",
+            &[
+                "bench",
+                "smoke",
+                "backend",
+                "seed",
+                "scale_div",
+                "n_base",
+                "nodes_sweep",
+                "speculation",
+                "faults",
+                "cells",
+                "speedup",
+                "sizeup",
+                "scaleup",
+                "identity_ok",
+            ],
+        );
+        assert_exact_keys(
+            j.get("faults").unwrap(),
+            "BENCH_scale.json faults",
+            &["n_failures", "task_fail_rate"],
+        );
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        assert!(!cells.is_empty());
+        for c in cells {
+            assert_exact_keys(
+                c,
+                "BENCH_scale.json cell",
+                &[
+                    "experiment",
+                    "algorithm",
+                    "nodes",
+                    "n_points",
+                    "time_ms",
+                    "iterations",
+                    "cost",
+                    "dist_evals",
+                    "jobs",
+                    "attempts",
+                    "locality",
+                    "wall_s",
+                    "fault",
+                ],
+            );
+            assert_exact_keys(
+                c.get("attempts").unwrap(),
+                "cell attempts",
+                &["total", "speculative", "failed"],
+            );
+            assert_exact_keys(
+                c.get("locality").unwrap(),
+                "cell locality",
+                &["node_local", "host_local", "remote", "node_local_ratio"],
+            );
+            assert_exact_keys(
+                c.get("fault").unwrap(),
+                "cell fault twin",
+                &[
+                    "time_ms",
+                    "failed_attempts",
+                    "n_node_failures",
+                    "task_fail_rate",
+                    "identical",
+                ],
+            );
+        }
+    }
+
     #[test]
     fn fig5_suite_ordering() {
         let rs = fig5_suite(&be(), &SuiteOpts::new(200, 5));
-        assert_eq!(rs.len(), 9);
+        assert_eq!(rs.len(), 12);
         // The proposed algorithm beats CLARANS at every size.
         for ds in 0..3 {
             let pp = rs

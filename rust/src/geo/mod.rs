@@ -314,6 +314,75 @@ impl PointSource for [Point] {
     }
 }
 
+/// A [`PointSource`] whose points carry non-negative f32 weights — the
+/// first-class representation behind the weighted-coreset pipeline
+/// ([`crate::clustering::coreset`]): a coreset point of weight `w` stands
+/// for `w` original points, so every weighted cost is
+/// `Σ w_i · d(p_i, ·)`. A weight of exactly 1.0 for every point reduces
+/// every weighted op to its unweighted twin (asserted by tests).
+pub trait WeightedSource: PointSource {
+    /// Weight of point `i` (`i < len()`).
+    fn weight(&self, i: usize) -> f32;
+    /// Write weights `start..start + n` into `dst[..n]`. Implementations
+    /// with contiguous weight storage override with bulk copies.
+    fn fill_weights(&self, start: usize, n: usize, dst: &mut [f32]) {
+        for (j, slot) in dst.iter_mut().enumerate().take(n) {
+            *slot = self.weight(start + j);
+        }
+    }
+    /// Total weight (`Σ w_i`, the weighted analogue of `len()`).
+    fn total_weight(&self) -> f64 {
+        (0..self.len()).map(|i| self.weight(i) as f64).sum()
+    }
+}
+
+/// Zero-copy weighted view pairing any [`PointSource`] with a parallel
+/// weight slice — `Weighted<[Point]>` is the in-memory `Weighted<Point>`
+/// sequence the coreset driver and the weighted update kernels consume.
+pub struct Weighted<'a, S: PointSource + ?Sized> {
+    source: &'a S,
+    weights: &'a [f32],
+}
+
+impl<'a, S: PointSource + ?Sized> Weighted<'a, S> {
+    /// Pair `source` with per-point `weights` (lengths must match).
+    pub fn new(source: &'a S, weights: &'a [f32]) -> Weighted<'a, S> {
+        assert_eq!(
+            source.len(),
+            weights.len(),
+            "weighted view needs one weight per point"
+        );
+        Weighted { source, weights }
+    }
+    pub fn weights(&self) -> &[f32] {
+        self.weights
+    }
+}
+
+impl<S: PointSource + ?Sized> PointSource for Weighted<'_, S> {
+    fn len(&self) -> usize {
+        self.source.len()
+    }
+    fn dims(&self) -> usize {
+        self.source.dims()
+    }
+    fn get(&self, i: usize) -> Point {
+        self.source.get(i)
+    }
+    fn fill_coords(&self, start: usize, n: usize, dst: &mut [f32]) {
+        self.source.fill_coords(start, n, dst)
+    }
+}
+
+impl<S: PointSource + ?Sized> WeightedSource for Weighted<'_, S> {
+    fn weight(&self, i: usize) -> f32 {
+        self.weights[i]
+    }
+    fn fill_weights(&self, start: usize, n: usize, dst: &mut [f32]) {
+        dst[..n].copy_from_slice(&self.weights[start..start + n]);
+    }
+}
+
 /// Axis-aligned 2-D bounding box (diagnostics over the paper's planar
 /// GIS datasets; not used by the N-dimensional solver paths).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -521,6 +590,31 @@ mod tests {
         let mut buf3 = [0f32; 6];
         src3.fill_coords(0, 2, &mut buf3);
         assert_eq!(buf3, [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn weighted_view_passes_points_through_and_serves_weights() {
+        let pts = vec![Point::new(1.0, 2.0), Point::new(3.0, 4.0), Point::new(5.0, 6.0)];
+        let ws = [2.0f32, 0.5, 1.0];
+        let view = Weighted::new(pts.as_slice(), &ws);
+        assert_eq!(PointSource::len(&view), 3);
+        assert_eq!(PointSource::dims(&view), 2);
+        assert_eq!(view.get(1), Point::new(3.0, 4.0));
+        assert_eq!(view.weight(0), 2.0);
+        assert_eq!(view.total_weight(), 3.5);
+        let mut wbuf = [0f32; 2];
+        view.fill_weights(1, 2, &mut wbuf);
+        assert_eq!(wbuf, [0.5, 1.0]);
+        let mut cbuf = [0f32; 4];
+        view.fill_coords(1, 2, &mut cbuf);
+        assert_eq!(cbuf, [3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "one weight per point")]
+    fn weighted_view_length_mismatch_rejected() {
+        let pts = vec![Point::new(0.0, 0.0)];
+        let _ = Weighted::new(pts.as_slice(), &[1.0, 2.0]);
     }
 
     #[test]

@@ -23,9 +23,10 @@
 //!    [`session::DatasetHandle`]s — build and ingest once, then run many
 //!    algorithms against the same data, with per-session counters and
 //!    sim-clock accounting.
-//! 2. **[`clustering::api::SpatialClusterer`]** is the trait all five
-//!    algorithms implement, each constructed through a fluent builder:
+//! 2. **[`clustering::api::SpatialClusterer`]** is the trait every
+//!    algorithm implements, each constructed through a fluent builder:
 //!    `KMedoids::mapreduce().plus_plus().k(9).build()`,
+//!    `KMedoids::coreset()` (constant-round weighted-coreset pipeline),
 //!    `KMedoids::serial()`, `KMeans::mapreduce()`, `Clarans::serial()`.
 //! 3. **[`clustering::observe::IterationObserver`]** hooks registered on
 //!    the session stream one [`clustering::observe::IterationEvent`] per

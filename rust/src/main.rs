@@ -175,7 +175,8 @@ USAGE:
                     [--seed S] --out FILE.csv
   kmedoids-mr run   [--algo ALGO] [--nodes N] [--dataset 0|1|2] [--k K]
                     [--metric METRIC] [--dims D] [--oversample L] [--rounds R]
-                    [--scale DIV] [--seed S] [--backend auto|pjrt|native]
+                    [--coreset-size C] [--scale DIV] [--seed S]
+                    [--backend auto|pjrt|native]
                     [--threads N] [--quality] [--trace]
   kmedoids-mr run   --spec CELLS.json [--backend auto|pjrt|native] [--trace]
   kmedoids-mr bench table6|fig4|fig5|ablation [--scale DIV] [--seed S]
@@ -190,8 +191,8 @@ USAGE:
                     [--out BENCH_scale.json]
   kmedoids-mr inspect-artifacts
 
-ALGO:   kmedoids++-mr | kmedoids-mr | kmedoids-scalable-mr | kmedoids-serial
-        | clarans | kmeans-mr
+ALGO:   kmedoids++-mr | kmedoids-mr | kmedoids-scalable-mr
+        | kmedoids-coreset-mr | kmedoids-serial | clarans | kmeans-mr
 METRIC: sq_euclidean (default) | manhattan | haversine
 
 --metric haversine clusters (lat, lon) degree pairs by great-circle
@@ -199,6 +200,9 @@ distance (the synthetic dataset becomes city clouds on the sphere);
 --dims D > 2 generates a D-dimensional Gaussian mixture and runs the
 generic metric kernels. --oversample/--rounds tune the k-means||-style
 seeding of kmedoids-scalable-mr (defaults: l = 2k, 5 rounds).
+--coreset-size tunes kmedoids-coreset-mr's weighted-representative
+budget (default O(k log n)); the coreset pipeline runs a constant two
+MR jobs regardless of iteration count.
 
 --threads N runs the map/reduce real compute on N worker threads
 (wallclock only — results and simulated time are identical at any N).
@@ -207,7 +211,8 @@ are identical at every width, and writes the wall-clock trajectory to
 BENCH_perf.json.
 
 `bench scale` reproduces the paper's speedup/sizeup/scaleup experiments
-for the three MR algorithms on a commodity cluster with the
+for the four MR algorithms (including kmedoids-coreset-mr, whose cells
+record constant job counts) on a commodity cluster with the
 fault-tolerant scheduler (task retries, speculative twins, node loss +
 DFS re-replication). Every cell also runs a fault-injected twin and the
 command exits non-zero unless the clustering output is byte-identical
@@ -309,7 +314,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "run",
         &[
             "spec", "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds",
-            "scale", "seed", "backend", "threads", "quality", "trace",
+            "coreset-size", "scale", "seed", "backend", "threads", "quality", "trace",
         ],
     )?;
     args.check_positionals("run", 0)?;
@@ -318,8 +323,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     // Spec-file mode: drive any cell grid from JSON.
     if let Some(path) = args.get("spec") {
         for flag in [
-            "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds", "scale",
-            "seed", "quality", "threads",
+            "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds",
+            "coreset-size", "scale", "seed", "quality", "threads",
         ] {
             if args.has(flag) {
                 bail!("--{flag} conflicts with --spec (put it in the spec file)");
@@ -383,6 +388,16 @@ fn cmd_run(args: &Args) -> Result<()> {
             bail!("--oversample and --rounds must be >= 1");
         }
         exp.oversample = Some((l, rounds));
+    }
+    if args.has("coreset-size") {
+        if algo != Algorithm::KMedoidsCoresetMR {
+            bail!("--coreset-size only applies to --algo kmedoids-coreset-mr");
+        }
+        let size = args.get_usize("coreset-size", 0)?;
+        if size == 0 {
+            bail!("--coreset-size must be >= 1");
+        }
+        exp.coreset_size = Some(size);
     }
     exp.with_quality = args.has("quality");
     exp.threads = args.get_usize("threads", 1)?;

@@ -5,9 +5,11 @@
 //! (first finisher wins, the loser's sim time stays charged), transient
 //! task failures with retry up to [`Cluster::max_attempts`], and
 //! fail-stop node failures driven by a seeded
-//! [`crate::sim::FaultPlan`] — node loss re-replicates DFS blocks, fails
-//! HBase regions over, and makes pending map tasks re-resolve their
-//! split locations (losing locality realistically).
+//! [`crate::sim::FaultPlan`] — node loss re-replicates DFS blocks
+//! (charging the repair traffic's non-overlapped remainder to the
+//! simulated clock), fails HBase regions over, and makes pending map
+//! tasks re-resolve their split locations (losing locality
+//! realistically).
 //!
 //! **Real compute, simulated time.** Every map/reduce task's user code
 //! actually runs (including PJRT kernel calls); the *simulated* duration
@@ -183,6 +185,13 @@ pub struct Cluster {
     /// task, attempt) identity so draws replay identically regardless of
     /// scheduling order or thread count.
     fault_seed: u64,
+    /// Simulated seconds of DFS re-replication traffic not yet charged
+    /// to the timeline: node failures queue their repair cost here
+    /// ([`crate::sim::CostModel::rereplication_seconds`]) and the next
+    /// completed job folds it into its duration — the copies run in the
+    /// background, so their non-overlapped remainder lands on the job
+    /// window they disrupt. Only the clock is affected, never outputs.
+    pending_rereplication_s: f64,
     #[allow(dead_code)]
     rng: Rng,
     /// Worker-pool width for map/reduce *real* compute (wallclock only;
@@ -213,6 +222,7 @@ impl Cluster {
             max_attempts: DEFAULT_MAX_ATTEMPTS,
             task_fail_rate: 0.0,
             fault_seed: seed,
+            pending_rereplication_s: 0.0,
             rng: Rng::new(seed),
             compute_threads: 1,
         }
@@ -462,10 +472,16 @@ impl Cluster {
         if let Some(e) = fatal {
             // An aborted job leaves the clock, history, job count, and
             // counters untouched (node failures already applied remain —
-            // they are cluster lifecycle, not job state).
+            // they are cluster lifecycle, not job state; their queued
+            // re-replication charge lands on the next completed job).
             return Err(e);
         }
-        let duration = busy_end.0 + self.cost.job_overhead_s;
+        // Fold queued DFS re-replication traffic into this job's window:
+        // node losses that re-replicated blocks delay the timeline by the
+        // non-overlapped remainder of the copies.
+        let duration = busy_end.0
+            + self.cost.job_overhead_s
+            + std::mem::take(&mut self.pending_rereplication_s);
         self.now = t0 + duration;
 
         // Assemble output.
@@ -498,13 +514,16 @@ impl Cluster {
         Ok(JobResult { output, duration_s: duration, counters, stats })
     }
 
-    /// Fail-stop `node` across every layer. The typed [`NoLiveDataNodes`]
-    /// error surfaces when this was the last live DataNode (the HMaster is
+    /// Fail-stop `node` across every layer, queueing the DFS repair
+    /// traffic's sim-time charge. The typed [`NoLiveDataNodes`] error
+    /// surfaces when this was the last live DataNode (the HMaster is
     /// then left untouched — there is no survivor to fail regions over to).
     fn apply_node_failure(&mut self, node: usize) -> Result<(), NoLiveDataNodes> {
         if self.alive[node] {
             self.alive[node] = false;
-            self.namenode.fail_node(node)?;
+            let repair = self.namenode.fail_node(node)?;
+            self.pending_rereplication_s +=
+                self.cost.rereplication_seconds(&self.config, repair.bytes);
             self.hmaster.fail_node(node);
         }
         Ok(())

@@ -498,6 +498,71 @@ fn node_loss_rereplicates_and_job_completes_identically() {
 }
 
 #[test]
+fn rereplication_traffic_is_charged_to_the_sim_clock() {
+    // ROADMAP follow-up: DFS re-replication after a node loss is real
+    // network traffic, so a node-loss run must now cost *strictly more*
+    // sim time than its healthy twin while the output stays
+    // byte-identical. The job here has 2 ad-hoc splits on a homogeneous
+    // 6-node cluster, so both runs schedule identically on node 0 and
+    // the victim's slot loss is invisible — the clock delta isolates the
+    // repair charge for the big cold file the victim held replicas of.
+    let run = |fail: bool| {
+        let mut cluster = Cluster::new(ClusterConfig::test_cluster(6), 9);
+        // 96 MB cold data -> 12 blocks x 2 replicas spread over 6 nodes.
+        cluster.namenode.create_file("cold", 10_000, 96 << 20);
+        let victim = 1usize;
+        let held_bytes = cluster.namenode.node_usage[victim];
+        let expected_charge = cluster.cost.rereplication_seconds(&cluster.config, held_bytes);
+        if fail {
+            cluster.plan_failure(0.0, victim);
+        }
+        let r = cluster.run_job(&quadrant_job(grid_points(200), 2, 1));
+        (decode_counts(&r.output), r.duration_s, held_bytes, expected_charge)
+    };
+    let (healthy_out, d_ok, held_bytes, expected_charge) = run(false);
+    let (faulty_out, d_fail, _, _) = run(true);
+    assert_eq!(healthy_out, faulty_out, "re-replication must not change the output");
+    assert!(held_bytes > 0, "victim must actually hold replicas for this test to bite");
+    assert!(expected_charge > 0.0);
+    assert!(
+        d_fail > d_ok,
+        "node-loss run {d_fail}s must cost strictly more than healthy twin {d_ok}s"
+    );
+    // Identical schedules: the delta IS the re-replication charge.
+    assert!(
+        (d_fail - d_ok - expected_charge).abs() < 1e-6,
+        "delta {} must be the re-replication charge {expected_charge}",
+        d_fail - d_ok
+    );
+}
+
+#[test]
+fn rereplication_charge_survives_between_jobs() {
+    // A failure landing between jobs queues its charge; the next
+    // completed job's duration folds it in exactly once.
+    let mut cluster = Cluster::new(ClusterConfig::test_cluster(5), 3);
+    // 80 MB -> 10 blocks x 2 replicas: balanced placement guarantees the
+    // victim holds several.
+    cluster.namenode.create_file("cold", 10_000, 80 << 20);
+    let job = quadrant_job(grid_points(200), 2, 1);
+    let d_first = cluster.run_job(&job).duration_s;
+    // Fail a replica-holding node "now" (between jobs).
+    let victim = 1usize;
+    let held = cluster.namenode.node_usage[victim];
+    assert!(held > 0);
+    let charge = cluster.cost.rereplication_seconds(&cluster.config, held);
+    cluster.plan_failure(cluster.now().0, victim);
+    let d_second = cluster.run_job(&job).duration_s;
+    assert!(
+        d_second >= d_first + charge * 0.999,
+        "second job {d_second}s must absorb the queued charge {charge}s over {d_first}s"
+    );
+    // The charge drains: a third job pays it no longer.
+    let d_third = cluster.run_job(&job).duration_s;
+    assert!(d_third < d_second, "charge must be folded in exactly once");
+}
+
+#[test]
 fn region_failover_mid_job_keeps_output_identical() {
     // HBase-backed input; the serving region server dies mid-job. The
     // HMaster fails its regions over and the engine re-resolves split

@@ -13,7 +13,10 @@ pub mod pjrt;
 
 pub use backend::{AssignOut, ComputeBackend, NativeBackend};
 pub use manifest::{default_artifacts_dir, Manifest, UnitKind};
-pub use ops::{assign_points, pairwise_costs, pairwise_costs_src, AssignResult};
+pub use ops::{
+    assign_points, assign_weighted, pairwise_costs, pairwise_costs_src,
+    weighted_pairwise_costs_src, AssignResult, WeightedAssignResult,
+};
 pub use pjrt::PjrtBackend;
 
 use std::sync::Arc;

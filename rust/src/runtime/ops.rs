@@ -20,7 +20,7 @@
 //! across runs and thread counts for every `(dims, metric)` pair.
 
 use super::backend::{AssignOut, ComputeBackend};
-use crate::geo::{Metric, Point, PointSource};
+use crate::geo::{Metric, Point, PointSource, WeightedSource};
 use anyhow::Result;
 use std::cell::RefCell;
 
@@ -210,6 +210,162 @@ where
                 } else {
                     be.pairwise_block_partial_metric(dims, metric, cbuf, mbuf, mmask, clen)?
                 };
+                for i in 0..clen {
+                    out[cs + i] += partial[i] as f64;
+                }
+                ms += mlen;
+            }
+            cs += clen;
+        }
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Result of a weighted assignment: labels are the plain (unweighted)
+/// argmin; costs and counts are weight-scaled.
+pub struct WeightedAssignResult {
+    pub labels: Vec<u32>,
+    /// Per-point `w_i · d(p_i, nearest medoid)`.
+    pub weighted_mindists: Vec<f32>,
+    /// Per-cluster `Σ w·d` (the weighted Eq. 1 contribution).
+    pub cluster_cost: Vec<f64>,
+    /// Per-cluster `Σ w` (total member weight).
+    pub cluster_weight: Vec<f64>,
+}
+
+/// Weighted assignment of a [`WeightedSource`] to `medoids`
+/// (k <= kpad) under `metric`: the weight slab rides in the mask lane
+/// (padding rows weigh 0), so labels match the unweighted assignment
+/// while costs/counts accumulate `Σ w·d` / `Σ w` — what the coreset
+/// merge and the weighted recluster need from one kernel pass.
+pub fn assign_weighted<S>(
+    be: &dyn ComputeBackend,
+    src: &S,
+    medoids: &[Point],
+    metric: Metric,
+) -> Result<WeightedAssignResult>
+where
+    S: WeightedSource + ?Sized,
+{
+    let b = be.block();
+    let k = be.kpad();
+    assert!(medoids.len() <= k, "k={} exceeds backend capacity {k}", medoids.len());
+    assert!(!medoids.is_empty());
+    let dims = medoids[0].dims();
+    assert!(metric.supports_dims(dims), "{} does not support dims={dims}", metric.name());
+    assert!(src.is_empty() || src.dims() == dims, "points/medoids dims mismatch");
+
+    let n = src.len();
+    let mut labels = Vec::with_capacity(n);
+    let mut mindists = Vec::with_capacity(n);
+    let mut cost = vec![0f64; medoids.len()];
+    let mut weight = vec![0f64; medoids.len()];
+
+    ASSIGN_SCRATCH.with(|scratch| -> Result<()> {
+        let mut guard = scratch.borrow_mut();
+        let AssignScratch { pbuf, mask, med } = &mut *guard;
+        grow(pbuf, dims * b);
+        grow(mask, b);
+        grow(med, dims * k);
+        let pbuf = &mut pbuf[..dims * b];
+        let mask = &mut mask[..b];
+        let med = &mut med[..dims * k];
+
+        for (j, m) in medoids.iter().enumerate() {
+            med[dims * j..dims * (j + 1)].copy_from_slice(m.coords());
+        }
+        let pad = be.pad_coord();
+        for v in med[dims * medoids.len()..].iter_mut() {
+            *v = pad;
+        }
+
+        let mut start = 0usize;
+        while start < n {
+            let len = (n - start).min(b);
+            src.fill_coords(start, len, &mut pbuf[..dims * len]);
+            src.fill_weights(start, len, &mut mask[..len]);
+            pbuf[dims * len..].fill(0.0);
+            mask[len..].fill(0.0);
+            let out: AssignOut = be.assign_block_weighted(dims, metric, pbuf, mask, med)?;
+            for i in 0..len {
+                labels.push(out.labels[i] as u32);
+                mindists.push(out.mindists[i]);
+            }
+            for j in 0..medoids.len() {
+                cost[j] += out.cluster_cost[j] as f64;
+                weight[j] += out.cluster_count[j] as f64;
+            }
+            start += len;
+        }
+        Ok(())
+    })?;
+    Ok(WeightedAssignResult {
+        labels,
+        weighted_mindists: mindists,
+        cluster_cost: cost,
+        cluster_weight: weight,
+    })
+}
+
+/// Weighted PAM-update candidate costs: for every candidate, the
+/// weight-scaled summed dissimilarity `Σ_j w_j · d(c_i, p_j)` over all
+/// members, composed over fixed-size blocks. Same staging/chunking shape
+/// as [`pairwise_costs_src`] with the member weights riding in the mask
+/// lane — the weighted medoid-update step of the coreset pipeline.
+///
+/// Deliberately a twin of [`pairwise_costs_src`]'s blocking loop rather
+/// than a delegation: the unweighted path must keep dispatching through
+/// the *overridable* `pairwise_block_partial{,_metric}` backend methods
+/// (the paper-workload hot path), while this one dispatches through
+/// `pairwise_block_weighted`. Changes to the blocking/padding scheme
+/// must be applied to both loops (the unit-weight-reduction test pins
+/// them byte-identical).
+pub fn weighted_pairwise_costs_src<C, M>(
+    be: &dyn ComputeBackend,
+    candidates: &C,
+    members: &M,
+    metric: Metric,
+) -> Result<Vec<f64>>
+where
+    C: PointSource + ?Sized,
+    M: WeightedSource + ?Sized,
+{
+    let b = be.block();
+    let nc = candidates.len();
+    let nm = members.len();
+    let mut out = vec![0f64; nc];
+    if nc == 0 || nm == 0 {
+        return Ok(out);
+    }
+    let dims = candidates.dims();
+    assert_eq!(dims, members.dims(), "candidates/members dims mismatch");
+    assert!(metric.supports_dims(dims), "{} does not support dims={dims}", metric.name());
+
+    PAIR_SCRATCH.with(|scratch| -> Result<()> {
+        let mut guard = scratch.borrow_mut();
+        let PairScratch { cbuf, mbuf, mmask } = &mut *guard;
+        grow(cbuf, dims * b);
+        grow(mbuf, dims * b);
+        grow(mmask, b);
+        let cbuf = &mut cbuf[..dims * b];
+        let mbuf = &mut mbuf[..dims * b];
+        let mmask = &mut mmask[..b];
+
+        let mut cs = 0usize;
+        while cs < nc {
+            let clen = (nc - cs).min(b);
+            candidates.fill_coords(cs, clen, &mut cbuf[..dims * clen]);
+            cbuf[dims * clen..].fill(0.0);
+            let mut ms = 0usize;
+            while ms < nm {
+                let mlen = (nm - ms).min(b);
+                members.fill_coords(ms, mlen, &mut mbuf[..dims * mlen]);
+                members.fill_weights(ms, mlen, &mut mmask[..mlen]);
+                mbuf[dims * mlen..].fill(0.0);
+                mmask[mlen..].fill(0.0);
+                let partial =
+                    be.pairwise_block_weighted(dims, metric, cbuf, mbuf, mmask, clen)?;
                 for i in 0..clen {
                     out[cs + i] += partial[i] as f64;
                 }
@@ -437,6 +593,79 @@ mod tests {
                 assert_eq!(via_slice, via_packed, "packed view must be byte-identical");
             });
         }
+    }
+
+    #[test]
+    fn weighted_pairwise_matches_oracle_and_unit_weights_reduce() {
+        use crate::geo::Weighted;
+        for (dims, metric) in [(2usize, Metric::SqEuclidean), (3, Metric::Manhattan)] {
+            for_all(10, 0x73D ^ dims as u64, |rng| {
+                let nc = 1 + rng.below(70);
+                let nm = 1 + rng.below(150);
+                let cands = rand_points_d(rng, nc, 50.0, dims);
+                let membs = rand_points_d(rng, nm, 50.0, dims);
+                let ws: Vec<f32> = (0..nm).map(|_| rng.range_f64(0.0, 4.0) as f32).collect();
+                let view = Weighted::new(membs.as_slice(), &ws);
+                let got =
+                    weighted_pairwise_costs_src(&be(), cands.as_slice(), &view, metric).unwrap();
+                for (i, c) in cands.iter().enumerate() {
+                    let want: f64 = membs
+                        .iter()
+                        .zip(&ws)
+                        .map(|(m, &w)| w as f64 * metric.distance(c, m))
+                        .sum();
+                    assert!(
+                        (got[i] - want).abs() < 1e-2 * want.max(1.0),
+                        "d={dims} {metric:?} cand {i}: {} vs {want}",
+                        got[i]
+                    );
+                }
+                // Unit weights are byte-identical to the unweighted op.
+                let ones = vec![1.0f32; nm];
+                let unit = Weighted::new(membs.as_slice(), &ones);
+                let w1 =
+                    weighted_pairwise_costs_src(&be(), cands.as_slice(), &unit, metric).unwrap();
+                let u = pairwise_costs(&be(), &cands, &membs, metric).unwrap();
+                assert_eq!(w1, u, "unit weights must reduce exactly");
+            });
+        }
+    }
+
+    #[test]
+    fn assign_weighted_matches_oracle() {
+        use crate::geo::Weighted;
+        for_all(12, 0xA570, |rng| {
+            let n = 1 + rng.below(200);
+            let k = 1 + rng.below(6);
+            let pts = rand_points(rng, n, 80.0);
+            let med = rand_points(rng, k, 80.0);
+            let ws: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 5.0) as f32).collect();
+            let view = Weighted::new(pts.as_slice(), &ws);
+            let got = assign_weighted(&be(), &view, &med, Metric::SqEuclidean).unwrap();
+            // Labels pick a (near-)nearest medoid: compare by f64
+            // distance, not index (f32 kernels may flip exact ties).
+            let mut cost = vec![0f64; k];
+            let mut weight = vec![0f64; k];
+            for i in 0..n {
+                let got_d = pts[i].dist2(&med[got.labels[i] as usize]);
+                let best = med.iter().map(|m| pts[i].dist2(m)).fold(f64::INFINITY, f64::min);
+                assert!(
+                    got_d <= best * (1.0 + 1e-3) + 1e-3,
+                    "point {i}: labeled distance {got_d} vs best {best}"
+                );
+                cost[got.labels[i] as usize] += ws[i] as f64 * got_d;
+                weight[got.labels[i] as usize] += ws[i] as f64;
+            }
+            for j in 0..k {
+                assert!(
+                    (got.cluster_cost[j] - cost[j]).abs() < 1e-2 * cost[j].max(1.0),
+                    "cluster {j}: {} vs {}",
+                    got.cluster_cost[j],
+                    cost[j]
+                );
+                assert!((got.cluster_weight[j] - weight[j]).abs() < 1e-3, "weight {j}");
+            }
+        });
     }
 
     #[test]

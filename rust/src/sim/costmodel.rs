@@ -61,6 +61,12 @@ pub struct CostModel {
     /// Fraction of shuffle transfer hidden under the map phase
     /// (Hadoop's slow-start copy overlap).
     pub shuffle_overlap: f64,
+    /// Fraction of DFS re-replication traffic hidden under normal
+    /// execution. The NameNode copies every under-replicated block after
+    /// a DataNode loss; the copies run in the background (and Hadoop
+    /// throttles them), so only the non-overlapped remainder lands on
+    /// the job timeline.
+    pub rereplication_overlap: f64,
 }
 
 impl Default for CostModel {
@@ -74,6 +80,7 @@ impl Default for CostModel {
             disk_read_mb_s: 60.0,
             disk_write_mb_s: 50.0,
             shuffle_overlap: 0.65,
+            rereplication_overlap: 0.8,
         }
     }
 }
@@ -133,6 +140,19 @@ impl CostModel {
             t += self.net_seconds(work.remote_read_bytes, mb_s, cluster.net.latency_s);
         }
         t
+    }
+
+    /// Simulated seconds DFS re-replication traffic adds to the cluster
+    /// timeline after a DataNode loss: `bytes` copied cross-host at the
+    /// inter-host bandwidth, with [`CostModel::rereplication_overlap`]
+    /// of the transfer hidden under normal execution. Zero bytes cost
+    /// zero (a node that held no replicas delays nothing).
+    pub fn rereplication_seconds(&self, cluster: &ClusterConfig, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        (1.0 - self.rereplication_overlap)
+            * self.net_seconds(bytes, cluster.net.inter_host_mb_s, cluster.net.latency_s)
     }
 
     /// Shuffle fetch time for one reducer pulling `bytes` from `src` to
@@ -204,6 +224,20 @@ mod tests {
         let c = cluster();
         assert_eq!(m.shuffle_seconds(&c, 0, 1, 0), 0.0);
         assert!(m.shuffle_seconds(&c, 0, 1, 1 << 20) > 0.0);
+    }
+
+    #[test]
+    fn rereplication_charges_scale_with_bytes() {
+        let m = CostModel::default();
+        let c = cluster();
+        assert_eq!(m.rereplication_seconds(&c, 0), 0.0, "no replicas, no delay");
+        let small = m.rereplication_seconds(&c, 64 << 20);
+        let large = m.rereplication_seconds(&c, 512 << 20);
+        assert!(small > 0.0);
+        assert!(large > small, "{large} vs {small}");
+        // Overlap credits most of the transfer.
+        let full = m.net_seconds(512 << 20, c.net.inter_host_mb_s, c.net.latency_s);
+        assert!(large < full, "overlap must hide part of the transfer");
     }
 
     #[test]

@@ -13,8 +13,18 @@
 //! through the medoid set / dataset they were constructed with, and a
 //! headerless run is what lets [`f32s_view`] reinterpret the wire bytes
 //! as `&[f32]` in place.
+//!
+//! ## Weighted runs
+//!
+//! The coreset pipeline ships *weighted* points: a weighted run is the
+//! coordinate run followed by one f32 weight per point
+//! (`[coords: n·dims f32][weights: n f32]`, still headerless — with
+//! `dims` agreed, `n = len / (4·(dims + 1))`). [`PackedPoints::weighted`]
+//! splits the buffer into the two sub-runs and borrows each through
+//! [`f32s_view`], so the weight layer inherits the same zero-copy /
+//! owned-fallback behaviour as the coordinates.
 
-use crate::geo::{Point, PointSource};
+use crate::geo::{Point, PointSource, WeightedSource};
 
 /// Append-style writer.
 #[derive(Default)]
@@ -150,9 +160,21 @@ pub fn f32s_view(bytes: &[u8]) -> Option<&[f32]> {
 pub struct PackedPoints<'a> {
     dims: usize,
     blocks: Vec<std::borrow::Cow<'a, [f32]>>,
+    /// Per-block weight runs, parallel to `blocks`; `None` for
+    /// unweighted runs (every weight reads as 1.0).
+    weights: Option<Vec<std::borrow::Cow<'a, [f32]>>>,
     /// Cumulative start index (in points) of each block.
     starts: Vec<usize>,
     total: usize,
+}
+
+/// Borrow a little-endian f32 run zero-copy when possible, decode
+/// otherwise (the shared coordinate/weight-run ingestion step).
+fn floats_of(bytes: &[u8]) -> std::borrow::Cow<'_, [f32]> {
+    match f32s_view(bytes) {
+        Some(view) => std::borrow::Cow::Borrowed(view),
+        None => std::borrow::Cow::Owned(Dec::new(bytes).rest_f32s()),
+    }
 }
 
 impl<'a> PackedPoints<'a> {
@@ -161,16 +183,19 @@ impl<'a> PackedPoints<'a> {
     /// (`4 * dims` bytes each).
     pub fn new(dims: usize, blocks: impl IntoIterator<Item = &'a [u8]>) -> PackedPoints<'a> {
         assert!(dims >= 1, "PackedPoints needs dims >= 1");
-        let mut out = PackedPoints { dims, blocks: Vec::new(), starts: Vec::new(), total: 0 };
+        let mut out = PackedPoints {
+            dims,
+            blocks: Vec::new(),
+            weights: None,
+            starts: Vec::new(),
+            total: 0,
+        };
         for bytes in blocks {
             assert!(
                 bytes.len() % (4 * dims) == 0,
                 "coordinate run must be whole {dims}-dim points"
             );
-            let floats: std::borrow::Cow<'a, [f32]> = match f32s_view(bytes) {
-                Some(view) => std::borrow::Cow::Borrowed(view),
-                None => std::borrow::Cow::Owned(Dec::new(bytes).rest_f32s()),
-            };
+            let floats = floats_of(bytes);
             let n = floats.len() / dims;
             if n == 0 {
                 continue;
@@ -182,14 +207,59 @@ impl<'a> PackedPoints<'a> {
         out
     }
 
-    /// Locate point `i`: (block index, float offset within the block).
-    fn locate(&self, i: usize) -> (usize, usize) {
+    /// Build from *weighted* runs: each block is a coordinate run of `n`
+    /// `dims`-dim points followed by `n` f32 weights (see the module
+    /// docs). Both sub-runs borrow the wire bytes via [`f32s_view`] when
+    /// aligned and fall back to owned decoding otherwise.
+    pub fn weighted(dims: usize, blocks: impl IntoIterator<Item = &'a [u8]>) -> PackedPoints<'a> {
+        assert!(dims >= 1, "PackedPoints needs dims >= 1");
+        let mut out = PackedPoints {
+            dims,
+            blocks: Vec::new(),
+            weights: Some(Vec::new()),
+            starts: Vec::new(),
+            total: 0,
+        };
+        let stride = 4 * (dims + 1);
+        for bytes in blocks {
+            assert!(
+                bytes.len() % stride == 0,
+                "weighted run must be whole {dims}-dim (point, weight) records"
+            );
+            let n = bytes.len() / stride;
+            if n == 0 {
+                continue;
+            }
+            let coords = floats_of(&bytes[..4 * dims * n]);
+            let ws = floats_of(&bytes[4 * dims * n..]);
+            debug_assert_eq!(ws.len(), n);
+            out.starts.push(out.total);
+            out.total += n;
+            out.blocks.push(coords);
+            out.weights.as_mut().unwrap().push(ws);
+        }
+        out
+    }
+
+    /// Whether this packing carries a weight run.
+    pub fn has_weights(&self) -> bool {
+        self.weights.is_some()
+    }
+
+    /// Locate point `i`: (block index, point offset within the block).
+    fn locate_point(&self, i: usize) -> (usize, usize) {
         debug_assert!(i < self.total);
         let b = match self.starts.binary_search(&i) {
             Ok(b) => b,
             Err(b) => b - 1,
         };
-        (b, self.dims * (i - self.starts[b]))
+        (b, i - self.starts[b])
+    }
+
+    /// Locate point `i`: (block index, float offset within the block).
+    fn locate(&self, i: usize) -> (usize, usize) {
+        let (b, p) = self.locate_point(i);
+        (b, self.dims * p)
     }
 }
 
@@ -223,6 +293,50 @@ impl PointSource for PackedPoints<'_> {
             off = 0;
         }
     }
+}
+
+impl WeightedSource for PackedPoints<'_> {
+    /// Weight of point `i`; unweighted packings read as all-ones.
+    fn weight(&self, i: usize) -> f32 {
+        match &self.weights {
+            None => 1.0,
+            Some(ws) => {
+                let (b, p) = self.locate_point(i);
+                ws[b][p]
+            }
+        }
+    }
+    fn fill_weights(&self, start: usize, n: usize, dst: &mut [f32]) {
+        let Some(ws) = &self.weights else {
+            dst[..n].fill(1.0);
+            return;
+        };
+        if n == 0 {
+            return;
+        }
+        let (mut b, mut off) = self.locate_point(start);
+        let mut written = 0usize;
+        while written < n {
+            let block = &ws[b];
+            let take = (block.len() - off).min(n - written);
+            dst[written..written + take].copy_from_slice(&block[off..off + take]);
+            written += take;
+            b += 1;
+            off = 0;
+        }
+    }
+}
+
+/// Encode points + weights as one weighted run (coordinates first, then
+/// the weight run — the coreset shuffle value format).
+pub fn encode_weighted_run(points: &[Point], weights: &[f32]) -> Vec<u8> {
+    assert_eq!(points.len(), weights.len(), "one weight per point");
+    let dims = points.first().map(|p| p.dims()).unwrap_or(0);
+    let mut enc = Enc::with_capacity(4 * (dims + 1) * points.len());
+    for p in points {
+        enc = enc.f32s(p.coords());
+    }
+    enc.f32s(weights).done()
 }
 
 /// Encode a point value as its packed coordinate run (the point payload
@@ -397,5 +511,81 @@ mod tests {
         let packed = PackedPoints::new(2, std::iter::empty::<&[u8]>());
         assert_eq!(packed.len(), 0);
         assert!(packed.is_empty());
+    }
+
+    #[test]
+    fn unweighted_packing_reads_unit_weights() {
+        let b = Enc::new().f32s(&[1.0, 2.0, 3.0, 4.0]).done();
+        let packed = PackedPoints::new(2, vec![b.as_slice()]);
+        assert!(!packed.has_weights());
+        assert_eq!(packed.weight(0), 1.0);
+        assert_eq!(packed.weight(1), 1.0);
+        assert_eq!(packed.total_weight(), 2.0);
+        let mut ws = [0f32; 2];
+        packed.fill_weights(0, 2, &mut ws);
+        assert_eq!(ws, [1.0, 1.0]);
+    }
+
+    #[test]
+    fn weighted_run_roundtrip_property() {
+        // Property: any (points, weights) set, split into any block
+        // layout, round-trips through the weighted wire format — on both
+        // the aligned zero-copy path and the owned fallback path.
+        crate::util::proptest::for_all(40, 0x77E1, |rng| {
+            let dims = [2usize, 3, 8][rng.below(3)];
+            let n = 1 + rng.below(40);
+            let pts: Vec<Point> = (0..n)
+                .map(|_| {
+                    let coords: Vec<f32> =
+                        (0..dims).map(|_| rng.range_f64(-100.0, 100.0) as f32).collect();
+                    Point::from_slice(&coords)
+                })
+                .collect();
+            let ws: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 50.0) as f32).collect();
+            // Split into 1..=4 runs (one per simulated map task).
+            let n_runs = 1 + rng.below(4);
+            let mut runs: Vec<Vec<u8>> = Vec::new();
+            let per = n.div_ceil(n_runs);
+            for (pc, wc) in pts.chunks(per).zip(ws.chunks(per)) {
+                runs.push(encode_weighted_run(pc, wc));
+            }
+            let check = |packed: &PackedPoints| {
+                assert!(packed.has_weights());
+                assert_eq!(packed.len(), n);
+                assert_eq!(PointSource::dims(packed), dims);
+                for i in 0..n {
+                    assert_eq!(packed.get(i), pts[i], "point {i}");
+                    assert_eq!(packed.weight(i), ws[i], "weight {i}");
+                }
+                let mut all = vec![0f32; n];
+                packed.fill_weights(0, n, &mut all);
+                assert_eq!(all, ws, "bulk weight fill crosses blocks");
+                let want: f64 = ws.iter().map(|&w| w as f64).sum();
+                assert!((packed.total_weight() - want).abs() < 1e-3);
+            };
+            // Aligned view path.
+            let packed = PackedPoints::weighted(dims, runs.iter().map(|r| r.as_slice()));
+            check(&packed);
+            // Forced owned-fallback path: shift every run by one byte so
+            // f32s_view cannot align.
+            let shifted: Vec<Vec<u8>> = runs
+                .iter()
+                .map(|r| {
+                    let mut v = vec![0u8];
+                    v.extend_from_slice(r);
+                    v
+                })
+                .collect();
+            let packed = PackedPoints::weighted(dims, shifted.iter().map(|r| &r[1..]));
+            check(&packed);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "whole 3-dim (point, weight) records")]
+    fn ragged_weighted_run_rejected() {
+        // 7 floats is not a whole number of (3 coords + 1 weight) records.
+        let b = Enc::new().f32s(&[0.0; 7]).done();
+        let _ = PackedPoints::weighted(3, vec![b.as_slice()]);
     }
 }
