@@ -148,36 +148,22 @@ impl CoresetKMedoids {
         let mut local_evals = (k as u64) * cands.len() as u64;
 
         let weights_f32: Vec<f32> = weights.iter().map(|&w| w as f32).collect();
-        let coreset = Weighted::new(cands.as_slice(), &weights_f32);
         let iter_cap = self.params.fixed_iters.unwrap_or(self.params.max_iters).max(1);
         let mut iterations = 0usize;
         let mut cost = f64::INFINITY;
         for _iter in 0..iter_cap {
             iterations += 1;
-            let assign = assign_weighted(self.backend.as_ref(), &coreset, &medoids, self.metric)?;
-            local_evals += ops::assign_dist_evals(cands.len(), medoids.len());
-            let new_cost: f64 = assign.cluster_cost.iter().sum();
-            // Weighted medoid update per cluster: exact weighted PAM step
-            // over the cluster's representatives.
-            let mut new_medoids = medoids.clone();
-            for (j, slot) in new_medoids.iter_mut().enumerate() {
-                let idx: Vec<usize> =
-                    (0..cands.len()).filter(|&i| assign.labels[i] == j as u32).collect();
-                if idx.is_empty() {
-                    continue; // empty cluster keeps its medoid
-                }
-                let member_pts: Vec<Point> = idx.iter().map(|&i| cands[i]).collect();
-                let member_ws: Vec<f32> = idx.iter().map(|&i| weights_f32[i]).collect();
-                let members = Weighted::new(member_pts.as_slice(), &member_ws);
-                let costs = weighted_pairwise_costs_src(
-                    self.backend.as_ref(),
-                    member_pts.as_slice(),
-                    &members,
-                    self.metric,
-                )?;
-                local_evals += ops::pairwise_dist_evals(idx.len(), idx.len());
-                *slot = member_pts[argmin_f64(&costs)];
-            }
+            let step = weighted_refine_step(
+                self.backend.as_ref(),
+                &cands,
+                &weights_f32,
+                &medoids,
+                self.metric,
+                false,
+            )?;
+            local_evals += step.dist_evals;
+            let new_cost = step.cost;
+            let new_medoids = step.medoids;
             let unchanged = new_medoids == medoids;
             let cost_flat = cost.is_finite()
                 && (cost - new_cost).abs() <= self.params.rel_tol * cost.abs().max(1.0);
@@ -248,6 +234,66 @@ impl CoresetKMedoids {
             dist_evals,
         })
     }
+}
+
+/// What one [`weighted_refine_step`] produced.
+pub(crate) struct RefineStep {
+    pub medoids: Vec<Point>,
+    /// Weighted coreset cost of the medoids passed *in*.
+    pub cost: f64,
+    pub dist_evals: u64,
+}
+
+/// One weighted alternating-refinement step on a coreset: a weighted
+/// assignment of the representatives to `medoids`, then an exact
+/// weighted PAM medoid update per cluster. Returns the new medoids, the
+/// weighted coreset cost of the *input* medoids (the assign pass), and
+/// the distance evaluations performed.
+///
+/// With `incumbent_candidates` the current medoid is prepended to each
+/// cluster's candidate list (first-wins ties keep it), which makes the
+/// assign/update chain non-increasing even when the incumbent is not one
+/// of the representatives — the online-serving refinement needs that
+/// guarantee because its incumbents come from a full-data fit. The
+/// coreset driver passes `false`: its medoids are always drawn from the
+/// representative set, so they are already members of their own cluster.
+pub(crate) fn weighted_refine_step(
+    backend: &dyn ComputeBackend,
+    cands: &[Point],
+    weights_f32: &[f32],
+    medoids: &[Point],
+    metric: Metric,
+    incumbent_candidates: bool,
+) -> anyhow::Result<RefineStep> {
+    let coreset = Weighted::new(cands, weights_f32);
+    let assign = assign_weighted(backend, &coreset, medoids, metric)?;
+    let mut dist_evals = ops::assign_dist_evals(cands.len(), medoids.len());
+    let cost: f64 = assign.cluster_cost.iter().sum();
+    let mut new_medoids = medoids.to_vec();
+    for (j, slot) in new_medoids.iter_mut().enumerate() {
+        let idx: Vec<usize> = (0..cands.len()).filter(|&i| assign.labels[i] == j as u32).collect();
+        if idx.is_empty() {
+            continue; // empty cluster keeps its medoid
+        }
+        let member_pts: Vec<Point> = idx.iter().map(|&i| cands[i]).collect();
+        let member_ws: Vec<f32> = idx.iter().map(|&i| weights_f32[i]).collect();
+        let members = Weighted::new(member_pts.as_slice(), &member_ws);
+        if incumbent_candidates {
+            let mut cand_pts = Vec::with_capacity(idx.len() + 1);
+            cand_pts.push(*slot);
+            cand_pts.extend_from_slice(&member_pts);
+            let costs =
+                weighted_pairwise_costs_src(backend, cand_pts.as_slice(), &members, metric)?;
+            dist_evals += ops::pairwise_dist_evals(cand_pts.len(), idx.len());
+            *slot = cand_pts[argmin_f64(&costs)];
+        } else {
+            let costs =
+                weighted_pairwise_costs_src(backend, member_pts.as_slice(), &members, metric)?;
+            dist_evals += ops::pairwise_dist_evals(idx.len(), idx.len());
+            *slot = member_pts[argmin_f64(&costs)];
+        }
+    }
+    Ok(RefineStep { medoids: new_medoids, cost, dist_evals })
 }
 
 /// Per-split representative budget: splits together land ≈ `target`

@@ -27,7 +27,7 @@
 //! The dataset block also accepts the paper's Table 5 shorthand:
 //! `{"paper_dataset": 0, "scale_div": 100}`.
 
-use super::suites::ScaleOpts;
+use super::suites::{ScaleOpts, ServeOpts};
 use super::{Algorithm, Experiment};
 use crate::clustering::UpdateStrategy;
 use crate::geo::datasets::SpatialSpec;
@@ -35,24 +35,70 @@ use crate::geo::{Metric, MAX_DIMS};
 use crate::util::json::{obj, Json};
 use anyhow::{bail, Context, Result};
 
+// ---- typed errors -----------------------------------------------------------
+
+/// Typed spec-parse error: every variant names the offending key (dotted
+/// path, e.g. `"update.candidates"`), so tooling can react to *which*
+/// field broke instead of grepping message text. Carried through
+/// `anyhow` — recover it with `err.downcast_ref::<SpecError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecError {
+    /// A required key is absent. `hint` (may be empty) suggests the fix.
+    MissingKey { key: String, hint: String },
+    /// A key is present that its context does not accept (typo guard).
+    UnknownKey { key: String, context: String },
+    /// A key is present but its value is out of domain.
+    BadValue { key: String, message: String },
+}
+
+impl SpecError {
+    /// The offending spec key.
+    pub fn key(&self) -> &str {
+        match self {
+            SpecError::MissingKey { key, .. }
+            | SpecError::UnknownKey { key, .. }
+            | SpecError::BadValue { key, .. } => key,
+        }
+    }
+    fn missing(key: impl Into<String>) -> SpecError {
+        SpecError::MissingKey { key: key.into(), hint: String::new() }
+    }
+    fn bad(key: impl Into<String>, message: impl Into<String>) -> SpecError {
+        SpecError::BadValue { key: key.into(), message: message.into() }
+    }
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::MissingKey { key, hint } if hint.is_empty() => write!(f, "{key} missing"),
+            SpecError::MissingKey { key, hint } => write!(f, "{key} missing ({hint})"),
+            SpecError::UnknownKey { key, context } => write!(f, "unknown key {key:?} in {context}"),
+            SpecError::BadValue { key, message } => write!(f, "{key} {message}"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
 // ---- numeric decoding -------------------------------------------------------
 // `Json::as_usize`/`as_u64` are saturating f64 casts (-5 → 0), which would
 // silently accept nonsense; spec fields go through checked decoders instead.
 
 /// A strictly positive integer (counts: points, k, nodes, samples, ...).
 fn as_pos_usize(v: &Json, what: &str) -> Result<usize> {
-    let f = v.as_f64().with_context(|| format!("{what} must be a number"))?;
+    let f = v.as_f64().ok_or_else(|| SpecError::bad(what, "must be a number"))?;
     if !(f >= 1.0) || f.fract() != 0.0 || f > 9e15 {
-        bail!("{what} must be a positive integer, got {f}");
+        bail!(SpecError::bad(what, format!("must be a positive integer, got {f}")));
     }
     Ok(f as usize)
 }
 
 /// A non-negative integer (indices, seeds).
 fn as_nonneg_u64(v: &Json, what: &str) -> Result<u64> {
-    let f = v.as_f64().with_context(|| format!("{what} must be a number"))?;
+    let f = v.as_f64().ok_or_else(|| SpecError::bad(what, "must be a number"))?;
     if !(f >= 0.0) || f.fract() != 0.0 || f > 9e15 {
-        bail!("{what} must be a non-negative integer, got {f}");
+        bail!(SpecError::bad(what, format!("must be a non-negative integer, got {f}")));
     }
     Ok(f as u64)
 }
@@ -64,7 +110,10 @@ fn check_known_keys(j: &Json, what: &str, allowed: &[&str]) -> Result<()> {
     let obj = j.as_obj().with_context(|| format!("{what} must be a JSON object"))?;
     for key in obj.keys() {
         if !allowed.contains(&key.as_str()) {
-            bail!("unknown key {key:?} in {what} (allowed: {})", allowed.join(", "));
+            bail!(SpecError::UnknownKey {
+                key: key.clone(),
+                context: format!("{what} (allowed: {})", allowed.join(", ")),
+            });
         }
     }
     Ok(())
@@ -93,19 +142,23 @@ pub fn update_to_json(u: &UpdateStrategy) -> Json {
 }
 
 pub fn update_from_json(j: &Json) -> Result<UpdateStrategy> {
-    let kind = j.get("kind").and_then(|k| k.as_str()).context("update.kind missing")?;
+    let kind = j
+        .get("kind")
+        .and_then(|k| k.as_str())
+        .ok_or_else(|| SpecError::missing("update.kind"))?;
     // Per-kind key sets: a knob the kind ignores is an error, not noise.
     let allowed: &[&str] = match kind {
         "exact" | "centroid_nearest" => &["kind"],
         "sampled" => &["kind", "candidates", "member_sample"],
         "sampled_adaptive" => &["kind", "candidates", "frac_div", "min_sample"],
-        other => bail!(
-            "unknown update.kind {other:?} (exact|sampled|sampled_adaptive|centroid_nearest)"
-        ),
+        other => bail!(SpecError::bad(
+            "update.kind",
+            format!("unknown value {other:?} (exact|sampled|sampled_adaptive|centroid_nearest)"),
+        )),
     };
     check_known_keys(j, &format!("update (kind {kind:?})"), allowed)?;
     let num = |key: &str| {
-        let v = j.get(key).with_context(|| format!("update.{key} missing"))?;
+        let v = j.get(key).ok_or_else(|| SpecError::missing(format!("update.{key}")))?;
         as_pos_usize(v, &format!("update.{key}"))
     };
     Ok(match kind {
@@ -148,7 +201,7 @@ pub fn spatial_spec_from_json(j: &Json, default_seed: u64) -> Result<SpatialSpec
         check_known_keys(j, "dataset", &["paper_dataset", "scale_div", "seed"])?;
         let i = as_nonneg_u64(v, "dataset.paper_dataset")? as usize;
         if i > 2 {
-            bail!("dataset.paper_dataset must be 0, 1 or 2 (Table 5)");
+            bail!(SpecError::bad("dataset.paper_dataset", "must be 0, 1 or 2 (Table 5)"));
         }
         let scale = match j.get("scale_div") {
             Some(v) => as_pos_usize(v, "dataset.scale_div")?,
@@ -172,9 +225,10 @@ pub fn spatial_spec_from_json(j: &Json, default_seed: u64) -> Result<SpatialSpec
         ],
     )?;
     let n_points = as_pos_usize(
-        j.get("n_points").context(
-            "dataset.n_points missing (or use {\"paper_dataset\": 0, \"scale_div\": N})",
-        )?,
+        j.get("n_points").ok_or_else(|| SpecError::MissingKey {
+            key: "dataset.n_points".into(),
+            hint: "or use {\"paper_dataset\": 0, \"scale_div\": N}".into(),
+        })?,
         "dataset.n_points",
     )?;
     let n_hotspots = match j.get("n_hotspots") {
@@ -184,9 +238,14 @@ pub fn spatial_spec_from_json(j: &Json, default_seed: u64) -> Result<SpatialSpec
     let mut s = SpatialSpec::new(n_points, n_hotspots, seed);
     let mut float_field = |key: &str, slot: &mut f32, min: f64, max: f64| -> Result<()> {
         if let Some(v) = j.get(key) {
-            let f = v.as_f64().with_context(|| format!("dataset.{key} must be a number"))?;
+            let f = v
+                .as_f64()
+                .ok_or_else(|| SpecError::bad(format!("dataset.{key}"), "must be a number"))?;
             if !(f >= min && f <= max) {
-                bail!("dataset.{key} must be in [{min}, {max}], got {f}");
+                bail!(SpecError::bad(
+                    format!("dataset.{key}"),
+                    format!("must be in [{min}, {max}], got {f}"),
+                ));
             }
             *slot = f as f32;
         }
@@ -199,15 +258,17 @@ pub fn spatial_spec_from_json(j: &Json, default_seed: u64) -> Result<SpatialSpec
     if let Some(v) = j.get("dims") {
         let d = as_pos_usize(v, "dataset.dims")?;
         if !(2..=MAX_DIMS).contains(&d) {
-            bail!("dataset.dims must be in 2..={MAX_DIMS}, got {d}");
+            bail!(SpecError::bad("dataset.dims", format!("must be in 2..={MAX_DIMS}, got {d}")));
         }
         s.dims = d;
     }
     if let Some(v) = j.get("latlon") {
-        s.latlon = v.as_bool().context("dataset.latlon must be true or false")?;
+        s.latlon = v
+            .as_bool()
+            .ok_or_else(|| SpecError::bad("dataset.latlon", "must be true or false"))?;
     }
     if s.latlon && s.dims != 2 {
-        bail!("dataset.latlon requires dims = 2 ((lat, lon) pairs)");
+        bail!(SpecError::bad("dataset.latlon", "requires dims = 2 ((lat, lon) pairs)"));
     }
     Ok(s)
 }
@@ -318,38 +379,57 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
     )?;
     let algorithm = match j.get("algorithm").and_then(|a| a.as_str()) {
         Some(s) => Algorithm::parse(s)
-            .with_context(|| format!("unknown algorithm {s:?} in run spec"))?,
+            .ok_or_else(|| SpecError::bad("algorithm", format!("unknown value {s:?}")))?,
         None => Algorithm::KMedoidsPlusPlusMR,
     };
     let seed = match j.get("seed") {
         Some(v) => as_nonneg_u64(v, "seed")?,
         None => 42,
     };
-    let spec = spatial_spec_from_json(j.get("dataset").context("dataset block missing")?, seed)?;
+    let spec = spatial_spec_from_json(
+        j.get("dataset").ok_or_else(|| SpecError::MissingKey {
+            key: "dataset".into(),
+            hint: "every spec cell needs a dataset block".into(),
+        })?,
+        seed,
+    )?;
     let metric = match j.get("metric").and_then(|m| m.as_str()) {
-        Some(s) => Metric::parse(s)
-            .with_context(|| format!("unknown metric {s:?} (sq_euclidean|manhattan|haversine)"))?,
+        Some(s) => Metric::parse(s).ok_or_else(|| {
+            SpecError::bad(
+                "metric",
+                format!("unknown value {s:?} (sq_euclidean|manhattan|haversine)"),
+            )
+        })?,
         None => Metric::SqEuclidean,
     };
     if !metric.supports_dims(spec.dims) {
-        bail!("metric {:?} does not support dataset.dims = {}", metric.name(), spec.dims);
+        bail!(SpecError::bad(
+            "metric",
+            format!("{:?} does not support dataset.dims = {}", metric.name(), spec.dims),
+        ));
     }
     // Reject rather than silently misread: haversine interprets
     // coordinates as (lat, lon) degrees, so a planar map-unit dataset
     // would produce finite but meaningless great-circle costs (the CLI
     // path force-enables latlon for --metric haversine).
     if metric == Metric::Haversine && !spec.latlon {
-        bail!("metric \"haversine\" needs (lat, lon) data — set dataset.latlon = true");
+        bail!(SpecError::bad(
+            "metric",
+            "\"haversine\" needs (lat, lon) data — set dataset.latlon = true",
+        ));
     }
     let update = match j.get("update") {
         Some(u) => {
             // Reject rather than silently ignore: clarans/kmeans-mr run
             // with their own update rules.
             if !algorithm_uses_update(algorithm) {
-                bail!(
-                    "algorithm {:?} ignores \"update\" — remove it from the spec cell",
-                    algorithm.name()
-                );
+                bail!(SpecError::bad(
+                    "update",
+                    format!(
+                        "is ignored by algorithm {:?} — remove it from the spec cell",
+                        algorithm.name()
+                    ),
+                ));
             }
             update_from_json(u)?
         }
@@ -359,11 +439,14 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         None | Some(Json::Null) => None,
         Some(v) => {
             if !algorithm_uses_fixed_iters(algorithm) {
-                bail!(
-                    "algorithm {:?} ignores \"fixed_iters\" (only the MR k-medoids drivers \
-                     support controlled iterations) — remove it from the spec cell",
-                    algorithm.name()
-                );
+                bail!(SpecError::bad(
+                    "fixed_iters",
+                    format!(
+                        "is ignored by algorithm {:?} (only the MR k-medoids drivers support \
+                         controlled iterations) — remove it from the spec cell",
+                        algorithm.name()
+                    ),
+                ));
             }
             Some(as_pos_usize(v, "fixed_iters")?)
         }
@@ -372,16 +455,22 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         None | Some(Json::Null) => None,
         Some(v) => {
             if !algorithm_uses_oversample(algorithm) {
-                bail!(
-                    "algorithm {:?} ignores \"oversample\" (only kmedoids-scalable-mr uses \
-                     oversampled seeding) — remove it from the spec cell",
-                    algorithm.name()
-                );
+                bail!(SpecError::bad(
+                    "oversample",
+                    format!(
+                        "is ignored by algorithm {:?} (only kmedoids-scalable-mr uses \
+                         oversampled seeding) — remove it from the spec cell",
+                        algorithm.name()
+                    ),
+                ));
             }
             check_known_keys(v, "oversample", &["l", "rounds"])?;
-            let l = as_pos_usize(v.get("l").context("oversample.l missing")?, "oversample.l")?;
+            let l = as_pos_usize(
+                v.get("l").ok_or_else(|| SpecError::missing("oversample.l"))?,
+                "oversample.l",
+            )?;
             let rounds = as_pos_usize(
-                v.get("rounds").context("oversample.rounds missing")?,
+                v.get("rounds").ok_or_else(|| SpecError::missing("oversample.rounds"))?,
                 "oversample.rounds",
             )?;
             Some((l, rounds))
@@ -391,11 +480,14 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         None | Some(Json::Null) => None,
         Some(v) => {
             if !algorithm_uses_coreset_size(algorithm) {
-                bail!(
-                    "algorithm {:?} ignores \"coreset_size\" (only kmedoids-coreset-mr builds \
-                     a weighted coreset) — remove it from the spec cell",
-                    algorithm.name()
-                );
+                bail!(SpecError::bad(
+                    "coreset_size",
+                    format!(
+                        "is ignored by algorithm {:?} (only kmedoids-coreset-mr builds a \
+                         weighted coreset) — remove it from the spec cell",
+                        algorithm.name()
+                    ),
+                ));
             }
             Some(as_pos_usize(v, "coreset_size")?)
         }
@@ -409,7 +501,9 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         None => 9,
     };
     let with_quality = match j.get("with_quality") {
-        Some(v) => v.as_bool().context("with_quality must be true or false")?,
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| SpecError::bad("with_quality", "must be true or false"))?,
         None => false,
     };
     let threads = match j.get("threads") {
@@ -452,9 +546,11 @@ pub fn scale_opts_from_json(j: &Json, mut base: ScaleOpts) -> Result<ScaleOpts> 
         &["nodes_sweep", "speculation", "faults", "scale_div", "seed"],
     )?;
     if let Some(v) = j.get("nodes_sweep") {
-        let arr = v.as_arr().context("nodes_sweep must be an array of node counts")?;
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| SpecError::bad("nodes_sweep", "must be an array of node counts"))?;
         if arr.is_empty() {
-            bail!("nodes_sweep must not be empty");
+            bail!(SpecError::bad("nodes_sweep", "must not be empty"));
         }
         base.nodes_sweep = arr
             .iter()
@@ -462,7 +558,8 @@ pub fn scale_opts_from_json(j: &Json, mut base: ScaleOpts) -> Result<ScaleOpts> 
             .collect::<Result<Vec<usize>>>()?;
     }
     if let Some(v) = j.get("speculation") {
-        base.speculation = v.as_bool().context("speculation must be true or false")?;
+        base.speculation =
+            v.as_bool().ok_or_else(|| SpecError::bad("speculation", "must be true or false"))?;
     }
     if let Some(v) = j.get("scale_div") {
         base.scale_div = as_pos_usize(v, "scale_div")?;
@@ -480,14 +577,19 @@ pub fn scale_opts_from_json(j: &Json, mut base: ScaleOpts) -> Result<ScaleOpts> 
                 base.n_failures = as_pos_usize(v, "faults.n_failures")?;
             }
             if let Some(v) = f.get("task_fail_rate") {
-                let r = v.as_f64().context("faults.task_fail_rate must be a number")?;
+                let r = v
+                    .as_f64()
+                    .ok_or_else(|| SpecError::bad("faults.task_fail_rate", "must be a number"))?;
                 if !(0.0..=0.9).contains(&r) {
-                    bail!("faults.task_fail_rate must be in [0, 0.9], got {r}");
+                    bail!(SpecError::bad(
+                        "faults.task_fail_rate",
+                        format!("must be in [0, 0.9], got {r}"),
+                    ));
                 }
                 base.task_fail_rate = r;
             }
         }
-        Some(_) => bail!("faults must be a boolean or an object"),
+        Some(_) => bail!(SpecError::bad("faults", "must be a boolean or an object")),
     }
     Ok(base)
 }
@@ -496,6 +598,72 @@ pub fn scale_opts_from_json(j: &Json, mut base: ScaleOpts) -> Result<ScaleOpts> 
 pub fn scale_opts_from_str(src: &str, base: ScaleOpts) -> Result<ScaleOpts> {
     let j = Json::parse(src).context("scale spec is not valid JSON")?;
     scale_opts_from_json(&j, base)
+}
+
+// ---- bench serve spec -------------------------------------------------------
+
+/// Overlay a `bench serve` JSON spec onto `base` options. Keys:
+///
+/// ```text
+/// {
+///   "threads": [1, 4],
+///   "queries": 20000,
+///   "update_frac": 0.2,
+///   "batch": 256,
+///   "coreset_size": 128,           // or null for the k·(log₂n+1) default
+///   "scale_div": 40,
+///   "seed": 42
+/// }
+/// ```
+pub fn serve_opts_from_json(j: &Json, mut base: ServeOpts) -> Result<ServeOpts> {
+    check_known_keys(
+        j,
+        "serve spec",
+        &["threads", "queries", "update_frac", "batch", "coreset_size", "scale_div", "seed"],
+    )?;
+    if let Some(v) = j.get("threads") {
+        let arr = v.as_arr().ok_or_else(|| {
+            SpecError::bad("threads", "must be an array of reader-thread counts")
+        })?;
+        if arr.is_empty() {
+            bail!(SpecError::bad("threads", "must not be empty"));
+        }
+        base.threads = arr
+            .iter()
+            .map(|x| as_pos_usize(x, "threads entry"))
+            .collect::<Result<Vec<usize>>>()?;
+    }
+    if let Some(v) = j.get("queries") {
+        base.queries = as_pos_usize(v, "queries")?;
+    }
+    if let Some(v) = j.get("update_frac") {
+        let r = v.as_f64().ok_or_else(|| SpecError::bad("update_frac", "must be a number"))?;
+        if !(0.0..=10.0).contains(&r) {
+            bail!(SpecError::bad("update_frac", format!("must be in [0, 10], got {r}")));
+        }
+        base.update_frac = r;
+    }
+    if let Some(v) = j.get("batch") {
+        base.batch = as_pos_usize(v, "batch")?;
+    }
+    match j.get("coreset_size") {
+        None => {}
+        Some(Json::Null) => base.coreset_size = None,
+        Some(v) => base.coreset_size = Some(as_pos_usize(v, "coreset_size")?),
+    }
+    if let Some(v) = j.get("scale_div") {
+        base.scale_div = as_pos_usize(v, "scale_div")?;
+    }
+    if let Some(v) = j.get("seed") {
+        base.seed = as_nonneg_u64(v, "seed")?;
+    }
+    Ok(base)
+}
+
+/// Parse a `bench serve` spec source over the given defaults.
+pub fn serve_opts_from_str(src: &str, base: ServeOpts) -> Result<ServeOpts> {
+    let j = Json::parse(src).context("serve spec is not valid JSON")?;
+    serve_opts_from_json(&j, base)
 }
 
 /// Serialize a grid of cells (array form).
@@ -887,5 +1055,89 @@ mod tests {
         .unwrap();
         assert_eq!(cells[0].update, UpdateStrategy::Exact);
         assert_eq!(cells[0].fixed_iters, None);
+    }
+
+    #[test]
+    fn serve_spec_keys_overlay_defaults() {
+        let opts = serve_opts_from_str(
+            r#"{"threads": [1, 2, 8], "queries": 5000, "update_frac": 0.5,
+                "batch": 64, "coreset_size": 200, "scale_div": 100, "seed": 9}"#,
+            ServeOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(opts.threads, vec![1, 2, 8]);
+        assert_eq!(opts.queries, 5000);
+        assert_eq!(opts.update_frac, 0.5);
+        assert_eq!(opts.batch, 64);
+        assert_eq!(opts.coreset_size, Some(200));
+        assert_eq!(opts.scale_div, 100);
+        assert_eq!(opts.seed, 9);
+
+        // Absent keys keep the defaults; null coreset_size is the
+        // explicit "auto" spelling.
+        let opts =
+            serve_opts_from_str(r#"{"coreset_size": null}"#, ServeOpts::default()).unwrap();
+        assert_eq!(opts.coreset_size, None);
+        assert_eq!(opts.queries, ServeOpts::default().queries);
+
+        for bad in [
+            r#"{"thread": [1]}"#,
+            r#"{"threads": []}"#,
+            r#"{"threads": [0]}"#,
+            r#"{"threads": 4}"#,
+            r#"{"queries": -1}"#,
+            r#"{"update_frac": "half"}"#,
+            r#"{"update_frac": -0.1}"#,
+            r#"{"batch": 0}"#,
+            r#"{"coreset_size": 0}"#,
+        ] {
+            assert!(
+                serve_opts_from_str(bad, ServeOpts::default()).is_err(),
+                "should reject {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn spec_errors_are_typed_and_carry_the_offending_key() {
+        // Missing required key.
+        let e = experiments_from_str(r#"{"algorithm": "clarans"}"#).unwrap_err();
+        let s = e.downcast_ref::<SpecError>().expect("typed SpecError");
+        assert_eq!(s.key(), "dataset");
+        assert!(matches!(s, SpecError::MissingKey { .. }), "{s:?}");
+
+        // Unknown key (typo guard) names the typo'd key, not the field
+        // it was probably meant to be.
+        let e = experiments_from_str(
+            r#"{"node": 4, "dataset": {"n_points": 10}}"#,
+        )
+        .unwrap_err();
+        let s = e.downcast_ref::<SpecError>().expect("typed SpecError");
+        assert_eq!(s.key(), "node");
+        assert!(matches!(s, SpecError::UnknownKey { .. }), "{s:?}");
+
+        // Out-of-domain value carries the dotted path to the field.
+        let e = experiments_from_str(
+            r#"{"dataset": {"n_points": 10, "outlier_frac": 3.0}}"#,
+        )
+        .unwrap_err();
+        let s = e.downcast_ref::<SpecError>().expect("typed SpecError");
+        assert_eq!(s.key(), "dataset.outlier_frac");
+        assert!(matches!(s, SpecError::BadValue { .. }), "{s:?}");
+
+        // Nested update knob errors are keyed too.
+        let e = experiments_from_str(
+            r#"{"dataset": {"n_points": 10},
+                "update": {"kind": "sampled", "candidates": 8}}"#,
+        )
+        .unwrap_err();
+        let s = e.downcast_ref::<SpecError>().expect("typed SpecError");
+        assert_eq!(s.key(), "update.member_sample");
+
+        // The scale/serve overlays speak the same error type.
+        let e = serve_opts_from_str(r#"{"queries": 0}"#, ServeOpts::default()).unwrap_err();
+        assert_eq!(e.downcast_ref::<SpecError>().unwrap().key(), "queries");
+        let e = scale_opts_from_str(r#"{"scale_div": 0}"#, ScaleOpts::default()).unwrap_err();
+        assert_eq!(e.downcast_ref::<SpecError>().unwrap().key(), "scale_div");
     }
 }

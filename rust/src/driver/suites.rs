@@ -20,10 +20,12 @@ use crate::geo::datasets::{generate, SpatialSpec};
 use crate::geo::{Metric, Point};
 use crate::mapreduce::locality_fraction;
 use crate::runtime::{assign_points, pairwise_costs, ComputeBackend};
+use crate::serve::{ServeConfig, ServeSession};
 use crate::session::{ClusterSession, DatasetHandle};
 use crate::sim::FaultPlan;
 use crate::util::bench::{bench, header, BenchOpts};
 use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -807,6 +809,251 @@ pub fn scale_suite(backend: &Arc<dyn ComputeBackend>, opts: &ScaleOpts) -> Json 
     ])
 }
 
+// ---------------------------------------------------------------------------
+// Serving bench: mixed nearest-medoid query / mini-batch update workload.
+// ---------------------------------------------------------------------------
+
+/// Knobs for `bench serve` — a mixed online workload over one published
+/// model: reader threads stream nearest-medoid queries through lock-free
+/// [`crate::serve::ModelHandle::load`]s while the driver thread ingests
+/// delta mini-batches that re-weight the coreset, refine the medoids,
+/// and epoch-swap a new snapshot.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Divide the Table 5 dataset-1 size (same axis as the other benches).
+    pub scale_div: usize,
+    pub seed: u64,
+    /// Reader-thread counts to sweep.
+    pub threads: Vec<usize>,
+    /// Total queries per sweep point (split across the readers).
+    pub queries: usize,
+    /// Delta points ingested per sweep point, as a fraction of `queries`.
+    pub update_frac: f64,
+    /// Serving mini-batch size (one epoch swap per full batch).
+    pub batch: usize,
+    /// Coreset budget override (`None` = the k·(log₂n + 1) default).
+    pub coreset_size: Option<usize>,
+    pub smoke: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            scale_div: 40,
+            seed: 42,
+            threads: vec![1, 4],
+            queries: 20_000,
+            update_frac: 0.2,
+            batch: 256,
+            coreset_size: None,
+            smoke: false,
+        }
+    }
+}
+
+impl ServeOpts {
+    /// CI preset: small dataset, short query stream, same JSON schema.
+    pub fn smoke() -> ServeOpts {
+        ServeOpts { scale_div: 400, queries: 5_000, batch: 128, smoke: true, ..Default::default() }
+    }
+}
+
+/// Draw a serving stream by jittering base points. `shift` biases every
+/// draw in +x/+y so delta streams actually move mass (queries use 0).
+fn serve_stream(points: &[Point], n: usize, jitter: f32, shift: f32, rng: &mut Rng) -> Vec<Point> {
+    (0..n)
+        .map(|_| {
+            let p = &points[rng.below(points.len())];
+            let dx = (rng.f64() as f32 - 0.5) * jitter + shift;
+            let dy = (rng.f64() as f32 - 0.5) * jitter + shift;
+            Point::new(p.x() + dx, p.y() + dy)
+        })
+        .collect()
+}
+
+/// Nearest-rank percentile over an already-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).saturating_sub(1);
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Serving bench: fit the coreset pipeline once, publish the model, then
+/// for each reader-thread count replay a mixed workload — readers hammer
+/// [`crate::serve::ClusterModel::assign`] through epoch-swapped handle
+/// loads while the driver ingests delta mini-batches. Emits the
+/// `BENCH_serve.json` document with two blocking gates: `identity_ok`
+/// (serving answers byte-identical to a batch assign pass over the fit's
+/// medoids) and `cost_monotone_ok` (no ingest-then-refine step increased
+/// the weighted coreset cost).
+pub fn serve_suite(backend: &Arc<dyn ComputeBackend>, opts: &ServeOpts) -> Json {
+    let mut threads = opts.threads.clone();
+    threads.retain(|&t| t >= 1);
+    threads.sort_unstable();
+    threads.dedup();
+    if threads.is_empty() {
+        threads = ServeOpts::default().threads;
+    }
+
+    header("serve: base fit + publish");
+    let mut exp = Experiment::paper_cell(Algorithm::KMedoidsCoresetMR, 4, 0, opts.seed)
+        .scaled(opts.scale_div.max(1));
+    exp.with_quality = true; // labels feed the identity gate below
+    exp.coreset_size = opts.coreset_size;
+    let points = Arc::new(generate(&exp.spec).points);
+    let mut session = ClusterSession::builder()
+        .cluster(ClusterConfig::paper_cluster())
+        .nodes(exp.n_nodes)
+        .backend(backend.clone())
+        .seed(opts.seed)
+        .build()
+        .expect("session build cannot fail with an explicit backend");
+    let data = session.ingest_points("serve-base", points.clone());
+    let out = exp.clusterer().fit(&mut session, &data).expect("serve base fit failed");
+    let cfg = ServeConfig {
+        batch_size: opts.batch.max(1),
+        coreset_size: opts.coreset_size,
+        ..ServeConfig::default()
+    };
+    let base =
+        ServeSession::from_fit(&session, &data, &out, exp.metric, cfg).expect("serve stand-up");
+    let model = base.model();
+
+    // Identity gate: the serving path (grid-pruned single-point assign
+    // and the chunked batch walk) must agree bitwise with one flat
+    // kernel pass over the fit's medoids, and with the fit's own labels.
+    let (slabels, sdists) = model.assign_batch(points.as_slice());
+    let fresh = assign_points(backend.as_ref(), &points, &out.medoids, exp.metric)
+        .expect("oracle assign pass failed");
+    let mut identity_ok = slabels == fresh.labels
+        && sdists.len() == fresh.mindists.len()
+        && sdists.iter().zip(&fresh.mindists).all(|(a, b)| a.to_bits() == b.to_bits());
+    if let Some(labels) = &out.labels {
+        identity_ok &= slabels == *labels;
+    }
+    let stride = (points.len() / 64).max(1);
+    for i in (0..points.len()).step_by(stride) {
+        let (l, d) = model.assign(&points[i]);
+        identity_ok &= l == slabels[i] && d.to_bits() == sdists[i].to_bits();
+    }
+    eprintln!(
+        "  [serve] n={} k={} coreset={} grid_index={} identity_ok={}",
+        points.len(),
+        model.k(),
+        base.coreset_len(),
+        model.has_grid_index(),
+        identity_ok,
+    );
+
+    header("serve: mixed query/update sweep");
+    let n_updates = ((opts.queries as f64) * opts.update_frac.max(0.0)).round() as usize;
+    let mut cost_monotone_ok = true;
+    let mut rows: Vec<Json> = Vec::new();
+    for &t in &threads {
+        // Fresh session per sweep point: `from_fit` is deterministic in
+        // the session seed, so every thread count replays the identical
+        // update sequence and only the read-side concurrency varies.
+        let mut serve = ServeSession::from_fit(&session, &data, &out, exp.metric, cfg)
+            .expect("serve stand-up");
+        let reader_queries: Vec<Vec<Point>> = (0..t)
+            .map(|r| {
+                let mut rng = Rng::new(opts.seed ^ 0x0BE5 ^ ((r as u64) << 16));
+                serve_stream(&points, opts.queries.div_ceil(t), 250.0, 0.0, &mut rng)
+            })
+            .collect();
+        let mut rng = Rng::new(opts.seed ^ 0xD17A);
+        let deltas = serve_stream(&points, n_updates, 250.0, 1500.0, &mut rng);
+        let handle = serve.handle();
+        let mut last = None;
+        let wall0 = Instant::now();
+        let lats: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let readers: Vec<_> = reader_queries
+                .iter()
+                .map(|qs| {
+                    let handle = handle.clone();
+                    scope.spawn(move || {
+                        let mut lat = Vec::with_capacity(qs.len());
+                        for q in qs {
+                            let t0 = Instant::now();
+                            let m = handle.load();
+                            std::hint::black_box(m.assign(q));
+                            lat.push(t0.elapsed().as_secs_f64());
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            // The driver thread is the writer: ingest the delta stream
+            // in mini-batches while the readers run.
+            for chunk in deltas.chunks(opts.batch.max(1)) {
+                if serve.ingest(chunk).expect("serve ingest failed") > 0 {
+                    if let Some(rep) = serve.last_update() {
+                        cost_monotone_ok &= rep.cost_after <= rep.cost_before * (1.0 + 1e-6);
+                        last = Some(rep);
+                    }
+                }
+            }
+            if serve.flush().expect("serve flush failed") {
+                if let Some(rep) = serve.last_update() {
+                    cost_monotone_ok &= rep.cost_after <= rep.cost_before * (1.0 + 1e-6);
+                    last = Some(rep);
+                }
+            }
+            readers.into_iter().map(|r| r.join().expect("reader panicked")).collect()
+        });
+        let wall_s = wall0.elapsed().as_secs_f64();
+        let mut all: Vec<f64> = lats.into_iter().flatten().collect();
+        all.sort_by(f64::total_cmp);
+        let throughput = all.len() as f64 / wall_s.max(1e-9);
+        let (p50, p99, p999) =
+            (percentile(&all, 0.50), percentile(&all, 0.99), percentile(&all, 0.999));
+        let final_epoch = handle.epoch();
+        eprintln!(
+            "  [serve] threads={:<3} -> {:>9.0} q/s  p50={:>7.1}us p99={:>7.1}us \
+             p999={:>7.1}us  ({} updates, epoch {})",
+            t,
+            throughput,
+            p50 * 1e6,
+            p99 * 1e6,
+            p999 * 1e6,
+            serve.updates(),
+            final_epoch,
+        );
+        rows.push(obj(vec![
+            ("threads", Json::Num(t as f64)),
+            ("wall_s", Json::Num(wall_s)),
+            ("throughput_qps", Json::Num(throughput)),
+            ("p50_s", Json::Num(p50)),
+            ("p99_s", Json::Num(p99)),
+            ("p999_s", Json::Num(p999)),
+            ("updates", Json::Num(serve.updates() as f64)),
+            ("epochs_published", Json::Num(handle.epochs_published() as f64)),
+            ("final_epoch", Json::Num(final_epoch as f64)),
+            ("cost_before", Json::Num(last.map(|r| r.cost_before).unwrap_or(0.0))),
+            ("cost_after", Json::Num(last.map(|r| r.cost_after).unwrap_or(0.0))),
+        ]));
+    }
+
+    obj(vec![
+        ("bench", Json::Str("serve".into())),
+        ("smoke", Json::Bool(opts.smoke)),
+        ("backend", Json::Str(backend.name().to_string())),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("scale_div", Json::Num(opts.scale_div.max(1) as f64)),
+        ("n_points", Json::Num(points.len() as f64)),
+        ("k", Json::Num(out.medoids.len() as f64)),
+        ("queries", Json::Num(opts.queries as f64)),
+        ("update_frac", Json::Num(opts.update_frac)),
+        ("batch", Json::Num(opts.batch.max(1) as f64)),
+        ("coreset_target", Json::Num(base.coreset_len() as f64)),
+        ("identity_ok", Json::Bool(identity_ok)),
+        ("cost_monotone_ok", Json::Bool(cost_monotone_ok)),
+        ("sweep", Json::Arr(rows)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1047,6 +1294,88 @@ mod tests {
                     "n_node_failures",
                     "task_fail_rate",
                     "identical",
+                ],
+            );
+        }
+    }
+
+    #[test]
+    fn serve_suite_smoke_is_consistent() {
+        let mut opts = ServeOpts::smoke();
+        opts.scale_div = 1300; // ~1000 base points
+        opts.seed = 7;
+        opts.threads = vec![2];
+        opts.queries = 400;
+        opts.batch = 64;
+        let j = serve_suite(&be(), &opts);
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("serve"));
+        // Both blocking gates hold at test scale.
+        assert_eq!(j.get("identity_ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("cost_monotone_ok").unwrap().as_bool(), Some(true));
+        let sweep = j.get("sweep").unwrap().as_arr().unwrap();
+        assert_eq!(sweep.len(), 1);
+        let row = &sweep[0];
+        assert_eq!(row.get("threads").unwrap().as_usize(), Some(2));
+        assert!(row.get("throughput_qps").unwrap().as_f64().unwrap() > 0.0);
+        // 400 queries x 0.2 update_frac = 80 deltas over batch 64: one
+        // full mini-batch plus one forced partial flush -> 2 updates,
+        // each published past the fit's epoch 1.
+        assert_eq!(row.get("updates").unwrap().as_usize(), Some(2));
+        assert!(row.get("final_epoch").unwrap().as_usize().unwrap() >= 3);
+        let p50 = row.get("p50_s").unwrap().as_f64().unwrap();
+        let p99 = row.get("p99_s").unwrap().as_f64().unwrap();
+        let p999 = row.get("p999_s").unwrap().as_f64().unwrap();
+        assert!(p50 <= p99 && p99 <= p999, "percentiles must be ordered");
+        assert!(row.get("cost_after").unwrap().as_f64().unwrap() > 0.0);
+        // The document is valid, re-parseable JSON.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn golden_schema_bench_serve_json() {
+        let mut opts = ServeOpts::smoke();
+        opts.scale_div = 1300;
+        opts.seed = 7;
+        opts.threads = vec![1];
+        opts.queries = 200;
+        opts.batch = 32;
+        let j = serve_suite(&be(), &opts);
+        assert_exact_keys(
+            &j,
+            "BENCH_serve.json",
+            &[
+                "bench",
+                "smoke",
+                "backend",
+                "seed",
+                "scale_div",
+                "n_points",
+                "k",
+                "queries",
+                "update_frac",
+                "batch",
+                "coreset_target",
+                "identity_ok",
+                "cost_monotone_ok",
+                "sweep",
+            ],
+        );
+        for row in j.get("sweep").unwrap().as_arr().unwrap() {
+            assert_exact_keys(
+                row,
+                "BENCH_serve.json sweep row",
+                &[
+                    "threads",
+                    "wall_s",
+                    "throughput_qps",
+                    "p50_s",
+                    "p99_s",
+                    "p999_s",
+                    "updates",
+                    "epochs_published",
+                    "final_epoch",
+                    "cost_before",
+                    "cost_after",
                 ],
             );
         }

@@ -52,6 +52,7 @@ pub mod mapreduce;
 pub mod prelude;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod sim;
 pub mod util;

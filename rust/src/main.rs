@@ -19,7 +19,7 @@
 
 use anyhow::{bail, Context, Result};
 use kmedoids_mr::config::ClusterConfig;
-use kmedoids_mr::driver::suites::{ScaleOpts, SuiteOpts};
+use kmedoids_mr::driver::suites::{ScaleOpts, ServeOpts, SuiteOpts};
 use kmedoids_mr::driver::{run_cell, spec, Algorithm, Experiment, ExperimentResult};
 use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
 use kmedoids_mr::geo::io::write_csv;
@@ -189,6 +189,10 @@ USAGE:
                     [--out BENCH_scale.json]
   kmedoids-mr bench scale --spec SCALE.json [--smoke] [--threads N]
                     [--out BENCH_scale.json]
+  kmedoids-mr bench serve [--threads 1,4] [--queries N] [--update-frac X]
+                    [--batch B] [--coreset-size C] [--scale DIV] [--seed S]
+                    [--smoke] [--out BENCH_serve.json]
+  kmedoids-mr bench serve --spec SERVE.json [--smoke] [--out BENCH_serve.json]
   kmedoids-mr inspect-artifacts
 
 ALGO:   kmedoids++-mr | kmedoids-mr | kmedoids-scalable-mr
@@ -218,6 +222,16 @@ DFS re-replication). Every cell also runs a fault-injected twin and the
 command exits non-zero unless the clustering output is byte-identical
 with faults on vs off. A --spec file accepts keys nodes_sweep /
 speculation / faults / scale_div / seed.
+
+`bench serve` drives the online serving subsystem with a mixed workload:
+per sweep point, reader threads stream nearest-medoid queries through
+lock-free epoch-swapped model snapshots while the driver ingests delta
+mini-batches (fold -> coreset recompress -> weighted refine -> publish).
+BENCH_serve.json records throughput and p50/p99/p999 assign latencies
+per thread count. The command exits non-zero unless serving answers are
+byte-identical to the batch assign pass and every online update kept the
+weighted coreset cost monotone. A --spec file accepts keys threads /
+queries / update_frac / batch / coreset_size / scale_div / seed.
 
 Run-spec JSON (one cell object or an array; see driver::spec docs):
   {{\"algorithm\": \"kmedoids++-mr\", \"nodes\": 7, \"k\": 9,
@@ -424,16 +438,21 @@ fn parse_usize_list(flag: &str, s: &str) -> Result<Vec<usize>> {
     Ok(out)
 }
 
-/// Flags that only `bench scale` understands.
+/// Flags that only `bench scale` understands (`spec` is shared with
+/// `bench serve`).
 const SCALE_ONLY_FLAGS: &[&str] =
     &["nodes", "faults", "fail-rate", "no-faults", "no-speculation", "spec"];
+
+/// Flags that only `bench serve` understands.
+const SERVE_ONLY_FLAGS: &[&str] = &["queries", "update-frac", "batch", "coreset-size"];
 
 fn cmd_bench(args: &Args) -> Result<()> {
     args.check_known(
         "bench",
         &[
             "scale", "seed", "backend", "trace", "threads", "out", "smoke", "nodes", "faults",
-            "fail-rate", "no-faults", "no-speculation", "spec",
+            "fail-rate", "no-faults", "no-speculation", "spec", "queries", "update-frac", "batch",
+            "coreset-size",
         ],
     )?;
     args.check_positionals("bench", 1)?;
@@ -445,19 +464,42 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 bail!("--{flag} only applies to `bench scale`");
             }
         }
+        for flag in SERVE_ONLY_FLAGS {
+            if args.has(flag) {
+                bail!("--{flag} only applies to `bench serve`");
+            }
+        }
         return cmd_bench_perf(args);
     }
     if which == "scale" {
+        for flag in SERVE_ONLY_FLAGS {
+            if args.has(flag) {
+                bail!("--{flag} only applies to `bench serve`");
+            }
+        }
         return cmd_bench_scale(args);
+    }
+    if which == "serve" {
+        for flag in SCALE_ONLY_FLAGS {
+            if *flag != "spec" && args.has(flag) {
+                bail!("--{flag} only applies to `bench scale`");
+            }
+        }
+        return cmd_bench_serve(args);
     }
     for flag in ["out", "smoke"] {
         if args.has(flag) {
-            bail!("--{flag} only applies to `bench perf` or `bench scale`");
+            bail!("--{flag} only applies to `bench perf`, `bench scale` or `bench serve`");
         }
     }
     for flag in SCALE_ONLY_FLAGS {
         if args.has(flag) {
             bail!("--{flag} only applies to `bench scale`");
+        }
+    }
+    for flag in SERVE_ONLY_FLAGS {
+        if args.has(flag) {
+            bail!("--{flag} only applies to `bench serve`");
         }
     }
     let suite_threads = args.get_usize("threads", 1)?;
@@ -502,7 +544,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 );
             }
         }
-        other => bail!("unknown bench {other:?} (table6|fig4|fig5|ablation|perf|scale)"),
+        other => bail!("unknown bench {other:?} (table6|fig4|fig5|ablation|perf|scale|serve)"),
     }
     Ok(())
 }
@@ -590,6 +632,85 @@ fn cmd_bench_scale(args: &Args) -> Result<()> {
             Ok(())
         }
         _ => bail!("faults-on vs faults-off clustering output MISMATCH (determinism bug)"),
+    }
+}
+
+/// `bench serve`: mixed online query/update workload over the serving
+/// subsystem — reader threads stream nearest-medoid queries through
+/// epoch-swapped snapshots while the driver ingests delta mini-batches —
+/// written to `BENCH_serve.json` (see `driver::suites::serve_suite`).
+/// Exits non-zero when serving answers diverge from the batch assign
+/// pass or an update increased the weighted coreset cost — the blocking
+/// CI quality gates.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    if args.has("trace") {
+        bail!("--trace does not apply to `bench serve` (it prints its own progress)");
+    }
+    let smoke = args.has("smoke");
+    let mut opts = if smoke { ServeOpts::smoke() } else { ServeOpts::default() };
+    if let Some(path) = args.get("spec") {
+        const SPEC_CONFLICTS: &[&str] =
+            &["threads", "queries", "update-frac", "batch", "coreset-size", "scale", "seed"];
+        for flag in SPEC_CONFLICTS {
+            if args.has(flag) {
+                bail!("--{flag} conflicts with --spec (put it in the spec file)");
+            }
+        }
+        let src = std::fs::read_to_string(path).with_context(|| format!("read spec {path:?}"))?;
+        opts = spec::serve_opts_from_str(&src, opts)?;
+    } else {
+        if let Some(s) = args.get("threads") {
+            opts.threads = parse_usize_list("threads", s)?;
+        }
+        opts.queries = args.get_usize("queries", opts.queries)?.max(1);
+        opts.scale_div = args.get_usize("scale", opts.scale_div)?.max(1);
+        opts.seed = args.get_u64("seed", opts.seed)?;
+        opts.batch = args.get_usize("batch", opts.batch)?.max(1);
+        if args.has("coreset-size") {
+            opts.coreset_size = Some(args.get_usize("coreset-size", 0)?.max(1));
+        }
+        if let Some(r) = args.get("update-frac") {
+            let r: f64 = r
+                .parse()
+                .with_context(|| format!("--update-frac must be a number, got {r:?}"))?;
+            if !(0.0..=10.0).contains(&r) {
+                bail!("--update-frac must be in [0, 10], got {r}");
+            }
+            opts.update_frac = r;
+        }
+    }
+    opts.smoke = smoke;
+    let backend = backend_from(args, 2048)?;
+    let report = kmedoids_mr::driver::suites::serve_suite(&backend, &opts);
+    let out = args.get("out").unwrap_or("BENCH_serve.json");
+    std::fs::write(out, format!("{report}\n")).with_context(|| format!("write {out:?}"))?;
+
+    println!("\nserve summary (full report: {out}):");
+    if let Some(rows) = report.get("sweep").and_then(|s| s.as_arr()) {
+        println!(
+            "{:>8} {:>14} {:>11} {:>11} {:>11} {:>8}",
+            "threads", "qps", "p50(us)", "p99(us)", "p999(us)", "epochs"
+        );
+        for row in rows {
+            let t = row.get("threads").and_then(|v| v.as_u64()).unwrap_or(0);
+            let q = row.get("throughput_qps").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+            let p50 = row.get("p50_s").and_then(|v| v.as_f64()).unwrap_or(f64::NAN) * 1e6;
+            let p99 = row.get("p99_s").and_then(|v| v.as_f64()).unwrap_or(f64::NAN) * 1e6;
+            let p999 = row.get("p999_s").and_then(|v| v.as_f64()).unwrap_or(f64::NAN) * 1e6;
+            let ep = row.get("final_epoch").and_then(|v| v.as_u64()).unwrap_or(0);
+            println!("{t:>8} {q:>14.0} {p50:>11.1} {p99:>11.1} {p999:>11.1} {ep:>8}");
+        }
+    }
+    match report.get("identity_ok").and_then(|v| v.as_bool()) {
+        Some(true) => println!("serving assign byte-identical to the batch label pass: yes"),
+        _ => bail!("serving assign DIVERGED from the batch label pass (serving bug)"),
+    }
+    match report.get("cost_monotone_ok").and_then(|v| v.as_bool()) {
+        Some(true) => {
+            println!("ingest-then-refine kept the weighted coreset cost monotone: yes");
+            Ok(())
+        }
+        _ => bail!("an online update INCREASED the weighted coreset cost (refinement bug)"),
     }
 }
 

@@ -13,5 +13,6 @@ pub use crate::driver::{run_experiment, Algorithm, Experiment, ExperimentResult}
 pub use crate::geo::datasets::{generate, SpatialDataset, SpatialSpec};
 pub use crate::geo::{Metric, Point};
 pub use crate::runtime::{load_backend, BackendKind, ComputeBackend, NativeBackend};
+pub use crate::serve::{ClusterModel, ModelHandle, ServeConfig, ServeSession, UpdateReport};
 pub use crate::session::{ClusterSession, DatasetHandle, SessionBuilder};
 pub use crate::sim::FaultPlan;

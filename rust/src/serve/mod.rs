@@ -1,0 +1,37 @@
+//! Online serving: epoch-swapped medoid snapshots, a nearest-medoid
+//! query path, and mini-batch coreset updates.
+//!
+//! A finished fit is inert until something answers queries with it. This
+//! subsystem turns a [`crate::clustering::ClusterOutcome`] into a live
+//! model in three layers:
+//!
+//! 1. **Snapshot** — [`ClusterModel`] is an immutable publication of a
+//!    fit (medoids, metric, dims, and an optional grid index for the 2-D
+//!    squared-Euclidean fast path), shared as `Arc` across reader
+//!    threads. [`ModelHandle`] holds the *current* snapshot and swaps it
+//!    atomically on refit: readers never block on a writer and can never
+//!    observe a torn model, because a model is never mutated after
+//!    publication — only replaced. [`crate::session::ClusterSession::publish`]
+//!    produces the snapshot from a fit.
+//! 2. **Query** — [`ClusterModel::assign`] / [`ClusterModel::assign_batch`]
+//!    answer nearest-medoid queries through the same
+//!    [`crate::runtime::ComputeBackend`] assign kernels the batch label
+//!    pass uses, so serving answers are byte-identical to the fit's
+//!    label output (the conformance matrix pins this per algorithm and
+//!    metric).
+//! 3. **Update** — [`ServeSession::ingest`] buffers delta points into
+//!    mini-batches, folds each batch into the weighted coreset carried
+//!    over from the fit (the PR 5 compress-then-recluster substrate),
+//!    runs cheap driver-side weighted refinement, and epoch-swaps the
+//!    refined medoids into the handle, emitting
+//!    [`crate::clustering::observe::IterationObserver`] drift events.
+//!
+//! `bench serve` (see `driver::suites::serve_suite`) drives a mixed
+//! query/update workload over a thread sweep and records throughput and
+//! p50/p99/p999 assign latencies into `BENCH_serve.json`.
+
+mod model;
+mod session;
+
+pub use model::{ClusterModel, ModelHandle};
+pub use session::{ServeConfig, ServeSession, UpdateReport, SERVE_EVENT_NAME};

@@ -1,0 +1,474 @@
+//! Snapshot + query layers: immutable [`ClusterModel`] publications and
+//! the lock-free [`ModelHandle`] epoch swap.
+
+use crate::geo::{BBox, Metric, Point, PointSource};
+use crate::runtime::{assign_points, ComputeBackend};
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// An immutable, index-accelerated publication of a fit: the medoids,
+/// the metric they minimize, and (for the 2-D squared-Euclidean fast
+/// path) a conservative grid index that prunes the medoid slab per
+/// query. Share it as `Arc<ClusterModel>` across any number of reader
+/// threads — there is nothing to lock because nothing ever mutates.
+///
+/// Queries route through the same [`ComputeBackend`] assign kernels as
+/// the batch label pass, so a served `(label, dist)` is byte-identical
+/// to what the fit's label pass emitted for the same point (the
+/// conformance matrix asserts this per algorithm × metric). The grid
+/// index only ever *removes provably-losing medoids* from the staged
+/// slab — its pruning margin dominates the f32 kernel error, so the
+/// argmin (and its f32 distance) are unchanged.
+pub struct ClusterModel {
+    epoch: u64,
+    backend: Arc<dyn ComputeBackend>,
+    medoids: Vec<Point>,
+    metric: Metric,
+    dims: usize,
+    grid: Option<GridIndex>,
+}
+
+impl ClusterModel {
+    /// Wrap fitted medoids as a servable snapshot. Builds the grid index
+    /// automatically for 2-D squared-Euclidean models with more than one
+    /// medoid. The epoch starts at 0 ("unpublished"); [`ModelHandle`]
+    /// stamps 1, 2, … as snapshots are published.
+    pub fn new(
+        backend: Arc<dyn ComputeBackend>,
+        medoids: Vec<Point>,
+        metric: Metric,
+    ) -> ClusterModel {
+        assert!(!medoids.is_empty(), "a model needs at least one medoid");
+        let dims = medoids[0].dims();
+        assert!(
+            medoids.iter().all(|m| m.dims() == dims),
+            "mixed-dims medoids in one model"
+        );
+        assert!(metric.supports_dims(dims), "{} does not support dims={dims}", metric.name());
+        assert!(
+            medoids.len() <= backend.kpad(),
+            "k={} exceeds backend capacity {}",
+            medoids.len(),
+            backend.kpad()
+        );
+        let grid = if dims == 2 && metric == Metric::SqEuclidean && medoids.len() > 1 {
+            GridIndex::build(&medoids)
+        } else {
+            None
+        };
+        ClusterModel { epoch: 0, backend, medoids, metric, dims, grid }
+    }
+
+    /// Monotone publication epoch (0 until a [`ModelHandle`] publishes
+    /// this snapshot).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+    pub fn k(&self) -> usize {
+        self.medoids.len()
+    }
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+    pub fn medoids(&self) -> &[Point] {
+        &self.medoids
+    }
+    /// Whether the 2-D fast-path grid index is active for this model.
+    pub fn has_grid_index(&self) -> bool {
+        self.grid.is_some()
+    }
+
+    /// Nearest-medoid query: `(medoid index, f32 dissimilarity)` exactly
+    /// as the batch label pass would report for this point. When the grid
+    /// index applies, only the cell's candidate medoids are staged into
+    /// the kernel; the answer is provably identical (see [`GridIndex`]).
+    pub fn assign(&self, p: &Point) -> (u32, f32) {
+        assert_eq!(p.dims(), self.dims, "query dims mismatch");
+        if let Some(grid) = &self.grid {
+            if let Some(cands) = grid.candidates(p) {
+                if cands.len() < self.medoids.len() {
+                    let sub: Vec<Point> =
+                        cands.iter().map(|&j| self.medoids[j as usize]).collect();
+                    let (local, dist) = self.kernel_one(p, &sub);
+                    return (cands[local as usize], dist);
+                }
+            }
+        }
+        self.kernel_one(p, &self.medoids)
+    }
+
+    fn kernel_one(&self, p: &Point, medoids: &[Point]) -> (u32, f32) {
+        let res =
+            assign_points(self.backend.as_ref(), std::slice::from_ref(p), medoids, self.metric)
+                .expect("assign kernel failed in serve query");
+        (res.labels[0], res.mindists[0])
+    }
+
+    /// Batch nearest-medoid query over any [`PointSource`]; returns
+    /// `(labels, dissimilarities)` byte-identical to the batch label
+    /// pass over the same points and medoids (per-point results do not
+    /// depend on block boundaries).
+    pub fn assign_batch<S>(&self, src: &S) -> (Vec<u32>, Vec<f32>)
+    where
+        S: PointSource + ?Sized,
+    {
+        let n = src.len();
+        let mut labels = Vec::with_capacity(n);
+        let mut dists = Vec::with_capacity(n);
+        let chunk = self.backend.block().max(1) * 4;
+        let mut buf: Vec<Point> = Vec::with_capacity(chunk.min(n));
+        let mut start = 0usize;
+        while start < n {
+            let len = (n - start).min(chunk);
+            buf.clear();
+            for i in 0..len {
+                buf.push(src.get(start + i));
+            }
+            let res = assign_points(self.backend.as_ref(), &buf, &self.medoids, self.metric)
+                .expect("assign kernel failed in serve batch query");
+            labels.extend_from_slice(&res.labels);
+            dists.extend_from_slice(&res.mindists);
+            start += len;
+        }
+        (labels, dists)
+    }
+}
+
+/// Conservative per-cell candidate lists for 2-D squared-Euclidean
+/// queries: cell `c` keeps medoid `m` iff the *minimum* squared distance
+/// from `c`'s rectangle to `m` is within `slack` of the best medoid's
+/// *maximum* squared distance over the rectangle. `slack` is 1e-3 of the
+/// largest squared coordinate norm in play — more than three orders of
+/// magnitude above the f32 expanded-norm kernel error — so a pruned
+/// medoid can never be the kernel's argmin for any query in the cell,
+/// and pruning cannot change the served answer. Queries outside the
+/// padded bounding box fall back to the full medoid slab.
+struct GridIndex {
+    min_x: f64,
+    min_y: f64,
+    cell_w: f64,
+    cell_h: f64,
+    g: usize,
+    /// Row-major `g × g` candidate lists (ascending medoid indices).
+    cands: Vec<Vec<u32>>,
+}
+
+impl GridIndex {
+    fn build(medoids: &[Point]) -> Option<GridIndex> {
+        let bbox = BBox::of(medoids)?;
+        // Pad so typical queries near (but outside) the medoid hull still
+        // hit a cell; anything farther out takes the full-slab path.
+        let pad = 0.5 * f32::max(bbox.width(), bbox.height()).max(1.0) as f64;
+        let (min_x, min_y) = (bbox.min_x as f64 - pad, bbox.min_y as f64 - pad);
+        let (max_x, max_y) = (bbox.max_x as f64 + pad, bbox.max_y as f64 + pad);
+        if !(min_x.is_finite() && min_y.is_finite() && max_x.is_finite() && max_y.is_finite()) {
+            return None;
+        }
+        let g = (((4 * medoids.len()) as f64).sqrt().ceil() as usize).clamp(4, 32);
+        let cell_w = (max_x - min_x) / g as f64;
+        let cell_h = (max_y - min_y) / g as f64;
+        let mut m2max: f64 = 1.0;
+        for m in medoids {
+            m2max = m2max.max((m.x() as f64).powi(2) + (m.y() as f64).powi(2));
+        }
+        for (cx, cy) in [(min_x, min_y), (min_x, max_y), (max_x, min_y), (max_x, max_y)] {
+            m2max = m2max.max(cx * cx + cy * cy);
+        }
+        let slack = 1e-3 * m2max;
+        let mut cands = Vec::with_capacity(g * g);
+        for row in 0..g {
+            for col in 0..g {
+                let x0 = min_x + col as f64 * cell_w;
+                let y0 = min_y + row as f64 * cell_h;
+                let rect = (x0, y0, x0 + cell_w, y0 + cell_h);
+                let ub = medoids
+                    .iter()
+                    .map(|m| rect_max_d2(rect, m))
+                    .fold(f64::INFINITY, f64::min);
+                let list: Vec<u32> = medoids
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, m)| rect_min_d2(rect, m) <= ub + slack)
+                    .map(|(j, _)| j as u32)
+                    .collect();
+                debug_assert!(!list.is_empty());
+                cands.push(list);
+            }
+        }
+        Some(GridIndex { min_x, min_y, cell_w, cell_h, g, cands })
+    }
+
+    fn candidates(&self, p: &Point) -> Option<&[u32]> {
+        let fx = (p.x() as f64 - self.min_x) / self.cell_w;
+        let fy = (p.y() as f64 - self.min_y) / self.cell_h;
+        if !(0.0..=self.g as f64).contains(&fx) || !(0.0..=self.g as f64).contains(&fy) {
+            return None;
+        }
+        let col = (fx as usize).min(self.g - 1);
+        let row = (fy as usize).min(self.g - 1);
+        Some(&self.cands[row * self.g + col])
+    }
+}
+
+/// Squared distance from the nearest point of `rect` to `m` (0 inside).
+fn rect_min_d2(rect: (f64, f64, f64, f64), m: &Point) -> f64 {
+    let (x0, y0, x1, y1) = rect;
+    let (mx, my) = (m.x() as f64, m.y() as f64);
+    let dx = (x0 - mx).max(0.0).max(mx - x1);
+    let dy = (y0 - my).max(0.0).max(my - y1);
+    dx * dx + dy * dy
+}
+
+/// Squared distance from the farthest corner of `rect` to `m`.
+fn rect_max_d2(rect: (f64, f64, f64, f64), m: &Point) -> f64 {
+    let (x0, y0, x1, y1) = rect;
+    let (mx, my) = (m.x() as f64, m.y() as f64);
+    let dx = (mx - x0).abs().max((mx - x1).abs());
+    let dy = (my - y0).abs().max((my - y1).abs());
+    dx * dx + dy * dy
+}
+
+/// The current-model slot readers share: an atomic pointer to the latest
+/// published [`ClusterModel`], swapped wholesale on refit.
+///
+/// - **Readers never block**: [`ModelHandle::load`] is an atomic pointer
+///   read plus a reference-count increment — no lock, no wait, even
+///   while a writer is mid-publish.
+/// - **No torn models**: a snapshot is fully constructed (and its epoch
+///   stamped) *before* the pointer swap; readers see either the old
+///   snapshot or the new one, never a mix.
+/// - **Monotone epochs**: each publish stamps the next epoch (1, 2, …),
+///   so any reader observing epochs over time sees a non-decreasing
+///   sequence.
+///
+/// Every published snapshot is retained in a small log for the handle's
+/// lifetime (a few `Point`s plus the grid index per epoch). That pin is
+/// what makes the lock-free read sound without a garbage collector: the
+/// raw pointer a reader just loaded can never be freed out from under
+/// its reference-count increment.
+pub struct ModelHandle {
+    current: AtomicPtr<ClusterModel>,
+    /// Every snapshot ever published through this handle (keeps the
+    /// `current` pointee alive for concurrent readers; see above).
+    published: Mutex<Vec<Arc<ClusterModel>>>,
+    next_epoch: AtomicU64,
+}
+
+impl ModelHandle {
+    /// Publish `model` as epoch 1 and return the handle readers share.
+    pub fn new(model: ClusterModel) -> ModelHandle {
+        let handle = ModelHandle {
+            current: AtomicPtr::new(std::ptr::null_mut()),
+            published: Mutex::new(Vec::new()),
+            next_epoch: AtomicU64::new(1),
+        };
+        handle.publish(model);
+        handle
+    }
+
+    /// Atomically swap in a new snapshot; returns its stamped epoch.
+    pub fn publish(&self, model: ClusterModel) -> u64 {
+        let epoch = self.next_epoch.fetch_add(1, Ordering::Relaxed);
+        let arc = Arc::new(ClusterModel { epoch, ..model });
+        self.published.lock().unwrap().push(arc.clone());
+        // The slot owns one strong count (via `into_raw`); the log above
+        // owns another for the handle's lifetime.
+        let ptr = Arc::into_raw(arc).cast_mut();
+        let old = self.current.swap(ptr, Ordering::AcqRel);
+        if !old.is_null() {
+            // SAFETY: `old` came from `Arc::into_raw` in a previous
+            // publish and carried the slot's strong count; the log still
+            // holds its own count, so readers that loaded `old` before
+            // the swap remain safe.
+            unsafe { drop(Arc::from_raw(old)) };
+        }
+        epoch
+    }
+
+    /// Grab the current snapshot without blocking. The returned `Arc`
+    /// stays valid (and immutable) no matter how many refits are
+    /// published after this call.
+    pub fn load(&self) -> Arc<ClusterModel> {
+        let ptr = self.current.load(Ordering::Acquire);
+        debug_assert!(!ptr.is_null(), "handle always holds a model after new()");
+        // SAFETY: `ptr` came from `Arc::into_raw` in `publish`, and the
+        // `published` log holds a strong count on that allocation for
+        // the whole lifetime of `self`, so the count is >= 1 here and
+        // the increment can never race with deallocation.
+        unsafe {
+            Arc::increment_strong_count(ptr);
+            Arc::from_raw(ptr)
+        }
+    }
+
+    /// Epoch of the currently visible snapshot.
+    pub fn epoch(&self) -> u64 {
+        self.load().epoch()
+    }
+
+    /// Number of snapshots published through this handle so far.
+    pub fn epochs_published(&self) -> usize {
+        self.published.lock().unwrap().len()
+    }
+}
+
+impl Drop for ModelHandle {
+    fn drop(&mut self) {
+        let ptr = *self.current.get_mut();
+        if !ptr.is_null() {
+            // SAFETY: releases the slot's own strong count (see publish).
+            unsafe { drop(Arc::from_raw(ptr)) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+
+    fn be() -> Arc<dyn ComputeBackend> {
+        Arc::new(NativeBackend::new(64, 8))
+    }
+
+    fn rand_points(rng: &mut Rng, n: usize, spread: f64) -> Vec<Point> {
+        (0..n)
+            .map(|_| {
+                Point::new(
+                    (rng.f64() * spread - spread / 2.0) as f32,
+                    (rng.f64() * spread - spread / 2.0) as f32,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn grid_pruned_assign_is_byte_identical_to_full_kernel() {
+        for_all(20, 0x5E21, |rng| {
+            let k = 2 + rng.below(6);
+            let medoids = rand_points(rng, k, 2e4);
+            let model = ClusterModel::new(be(), medoids.clone(), Metric::SqEuclidean);
+            assert!(model.has_grid_index());
+            let queries = rand_points(rng, 200, 6e4); // inside + outside the grid
+            let (batch_labels, batch_dists) = model.assign_batch(queries.as_slice());
+            for (i, q) in queries.iter().enumerate() {
+                let (l, d) = model.assign(q);
+                assert_eq!(l, batch_labels[i], "label differs at query {i}");
+                assert_eq!(d.to_bits(), batch_dists[i].to_bits(), "dist differs at query {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn assign_matches_f64_oracle_distances() {
+        for_all(10, 0x5E22, |rng| {
+            let k = 1 + rng.below(7);
+            let medoids = rand_points(rng, k, 100.0);
+            let model = ClusterModel::new(be(), medoids.clone(), Metric::SqEuclidean);
+            for q in rand_points(rng, 100, 150.0) {
+                let (l, d) = model.assign(&q);
+                let best = medoids.iter().map(|m| q.dist2(m)).fold(f64::INFINITY, f64::min);
+                let got = q.dist2(&medoids[l as usize]);
+                assert!(got <= best * 1.001 + 1e-3, "labeled {got} vs best {best}");
+                assert!((d as f64 - got).abs() <= 1e-2 * got.max(1.0));
+            }
+        });
+    }
+
+    #[test]
+    fn non_fast_path_models_have_no_grid_but_still_serve() {
+        let medoids = vec![
+            Point::from_slice(&[0.0, 0.0, 0.0]),
+            Point::from_slice(&[10.0, 10.0, 10.0]),
+        ];
+        let model = ClusterModel::new(be(), medoids, Metric::Manhattan);
+        assert!(!model.has_grid_index());
+        let (l, d) = model.assign(&Point::from_slice(&[9.0, 9.0, 9.0]));
+        assert_eq!(l, 1);
+        assert!((d - 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn handle_swaps_epochs_monotonically() {
+        let m = |x: f32| ClusterModel::new(be(), vec![Point::new(x, 0.0)], Metric::SqEuclidean);
+        let handle = ModelHandle::new(m(0.0));
+        assert_eq!(handle.epoch(), 1);
+        let first = handle.load();
+        assert_eq!(first.epoch(), 1);
+        assert_eq!(handle.publish(m(1.0)), 2);
+        assert_eq!(handle.publish(m(2.0)), 3);
+        assert_eq!(handle.epoch(), 3);
+        assert_eq!(handle.epochs_published(), 3);
+        // A snapshot loaded before the swaps is still intact.
+        assert_eq!(first.epoch(), 1);
+        assert_eq!(first.medoids()[0], Point::new(0.0, 0.0));
+    }
+
+    #[test]
+    fn loaded_snapshot_outlives_the_handle() {
+        let model =
+            ClusterModel::new(be(), vec![Point::new(3.0, 4.0)], Metric::SqEuclidean);
+        let loaded = {
+            let handle = ModelHandle::new(model);
+            handle.load()
+        };
+        assert_eq!(loaded.epoch(), 1);
+        assert_eq!(loaded.assign(&Point::new(3.0, 4.0)).0, 0);
+    }
+
+    #[test]
+    fn concurrent_readers_see_whole_models() {
+        // Smoke version of the epoch-swap property test (the full
+        // concurrent matrix lives in tests/serve_epoch.rs): all medoids
+        // of epoch e sit at x = 100·e, so any mixed snapshot would
+        // mislabel the probe.
+        let mk = |e: f32| {
+            ClusterModel::new(
+                be(),
+                vec![Point::new(100.0 * e, 0.0), Point::new(100.0 * e, 50.0)],
+                Metric::SqEuclidean,
+            )
+        };
+        let handle = Arc::new(ModelHandle::new(mk(1.0)));
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let handle = Arc::clone(&handle);
+                scope.spawn(move || {
+                    let mut last = 0u64;
+                    for _ in 0..500 {
+                        let m = handle.load();
+                        let e = m.epoch();
+                        assert!(e >= last, "epoch went backwards: {last} -> {e}");
+                        last = e;
+                        let probe = Point::new(100.0 * e as f32, 10.0);
+                        let (l, d) = m.assign(&probe);
+                        assert_eq!(l, 0, "epoch {e} mislabeled its own probe");
+                        assert!(d < 101.0, "epoch {e} probe distance {d}");
+                    }
+                });
+            }
+            for e in 2..=6 {
+                handle.publish(mk(e as f32));
+                std::thread::yield_now();
+            }
+        });
+        assert_eq!(handle.epochs_published(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one medoid")]
+    fn empty_model_rejected() {
+        let _ = ClusterModel::new(be(), vec![], Metric::SqEuclidean);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds backend capacity")]
+    fn oversized_k_rejected() {
+        let _ = ClusterModel::new(be(), vec![Point::new(0.0, 0.0); 9], Metric::SqEuclidean);
+    }
+}

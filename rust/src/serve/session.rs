@@ -1,0 +1,496 @@
+//! Update layer: [`ServeSession`] — mini-batch delta ingest over the
+//! weighted coreset, cheap driver-side refinement, epoch-swapped
+//! publication.
+
+use super::{ClusterModel, ModelHandle};
+use crate::clustering::coreset::{default_coreset_size, weighted_refine_step};
+use crate::clustering::observe::{IterationEvent, IterationObserver, ObserverHub};
+use crate::clustering::seeding::{min_dists_chunked, plus_plus_serial, recluster_candidates};
+use crate::clustering::ClusterOutcome;
+use crate::geo::{Metric, Point, Weighted};
+use crate::runtime::ops::{self, assign_weighted};
+use crate::runtime::ComputeBackend;
+use crate::session::{ClusterSession, DatasetHandle};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// `algorithm` tag on the [`IterationEvent`]s a serve session emits —
+/// one event per flushed mini-batch.
+pub const SERVE_EVENT_NAME: &str = "serve-ingest";
+
+/// Knobs for the online update loop.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Deltas buffered before a refit is triggered (mini-batch size).
+    pub batch_size: usize,
+    /// Weighted alternating-refinement iterations per flush.
+    pub refine_iters: usize,
+    /// Weighted-representative budget carried between flushes; `None`
+    /// uses [`default_coreset_size`] of the fit's `k` and `n`.
+    pub coreset_size: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { batch_size: 256, refine_iters: 2, coreset_size: None }
+    }
+}
+
+/// What one flushed mini-batch did to the model.
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateReport {
+    /// Epoch the refined snapshot was published as.
+    pub epoch: u64,
+    /// Delta points folded in by this flush.
+    pub batch: usize,
+    /// Weighted coreset cost of the *previous* medoids on the updated
+    /// coreset (before refinement).
+    pub cost_before: f64,
+    /// Weighted coreset cost of the refined medoids. Never above
+    /// `cost_before` (up to kernel f32 rounding): refinement keeps the
+    /// incumbent medoid as a candidate in every update step.
+    pub cost_after: f64,
+    /// Total medoid displacement old → new under the model metric.
+    pub medoid_drift: f64,
+    /// Representatives in the coreset after fold + recompression.
+    pub coreset_len: usize,
+}
+
+/// The single-writer side of online serving. Owns the evolving weighted
+/// coreset and the [`ModelHandle`] readers share; [`ServeSession::ingest`]
+/// buffers delta points, and every full mini-batch is folded into the
+/// coreset (unit-weight representatives, recompressed by the same
+/// weighted ++ draw as the merge reducer once it exceeds twice the
+/// budget), refined with a few exact weighted PAM steps, and published
+/// as the next epoch — all driver-side, no MapReduce job, readers never
+/// blocked.
+///
+/// Serving runs off the simulated cluster: emitted events carry
+/// `sim_seconds == 0.0`, and work is accounted in `dist_evals` only.
+pub struct ServeSession {
+    backend: Arc<dyn ComputeBackend>,
+    metric: Metric,
+    k: usize,
+    seed: u64,
+    cfg: ServeConfig,
+    handle: Arc<ModelHandle>,
+    reps: Vec<Point>,
+    weights: Vec<f64>,
+    target: usize,
+    buffer: Vec<Point>,
+    observers: ObserverHub,
+    updates: usize,
+    dist_evals: u64,
+    last: Option<UpdateReport>,
+}
+
+impl ServeSession {
+    /// Stand up serving from a finished fit: compress the fitted dataset
+    /// to a weighted coreset (serial ++ representatives weighted by one
+    /// kernel pass — the mapper-side recipe) and publish the fit's
+    /// medoids as epoch 1.
+    pub fn from_fit(
+        session: &ClusterSession,
+        data: &DatasetHandle,
+        outcome: &ClusterOutcome,
+        metric: Metric,
+        cfg: ServeConfig,
+    ) -> anyhow::Result<ServeSession> {
+        let points = session.dataset_points(data);
+        let k = outcome.medoids.len();
+        anyhow::ensure!(k >= 1, "cannot serve a fit with no medoids");
+        let n = points.len();
+        let backend = session.backend();
+        let seed = session.seed();
+        let target = cfg.coreset_size.unwrap_or_else(|| default_coreset_size(k, n)).max(k).min(n);
+        let mut rng = Rng::new(seed ^ 0x5E4E);
+        let (reps, _) = plus_plus_serial(&points, target, &mut rng, metric);
+        let (labels, _) = min_dists_chunked(backend.as_ref(), &points, &reps, metric);
+        let mut weights = vec![0f64; reps.len()];
+        for &l in &labels {
+            weights[l as usize] += 1.0;
+        }
+        ServeSession::from_coreset(
+            backend,
+            metric,
+            seed,
+            cfg,
+            outcome.medoids.clone(),
+            reps,
+            weights,
+        )
+    }
+
+    /// Stand up serving from an explicit weighted coreset (what the fit
+    /// pipeline or a checkpoint already has). `medoids` become epoch 1.
+    pub fn from_coreset(
+        backend: Arc<dyn ComputeBackend>,
+        metric: Metric,
+        seed: u64,
+        cfg: ServeConfig,
+        medoids: Vec<Point>,
+        reps: Vec<Point>,
+        weights: Vec<f64>,
+    ) -> anyhow::Result<ServeSession> {
+        anyhow::ensure!(!reps.is_empty(), "serving needs a non-empty coreset");
+        anyhow::ensure!(reps.len() == weights.len(), "reps/weights length mismatch");
+        let k = medoids.len();
+        let target = cfg.coreset_size.unwrap_or(reps.len()).max(k).max(1);
+        let model = ClusterModel::new(backend.clone(), medoids, metric);
+        let handle = Arc::new(ModelHandle::new(model));
+        Ok(ServeSession {
+            backend,
+            metric,
+            k,
+            seed,
+            cfg: ServeConfig { batch_size: cfg.batch_size.max(1), ..cfg },
+            handle,
+            reps,
+            weights,
+            target,
+            buffer: Vec::new(),
+            observers: ObserverHub::default(),
+            updates: 0,
+            dist_evals: 0,
+            last: None,
+        })
+    }
+
+    /// The shared slot readers load snapshots from (clone freely across
+    /// threads).
+    pub fn handle(&self) -> Arc<ModelHandle> {
+        self.handle.clone()
+    }
+    /// Current snapshot (shorthand for `handle().load()`).
+    pub fn model(&self) -> Arc<ClusterModel> {
+        self.handle.load()
+    }
+    /// Register an observer for subsequent update events.
+    pub fn add_observer(&mut self, observer: Box<dyn IterationObserver>) {
+        self.observers.add(observer);
+    }
+    /// Deltas buffered but not yet flushed into a refit.
+    pub fn pending(&self) -> usize {
+        self.buffer.len()
+    }
+    pub fn coreset_len(&self) -> usize {
+        self.reps.len()
+    }
+    /// Total mass carried by the coreset (original points + deltas).
+    pub fn coreset_weight(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+    /// Mini-batches flushed so far.
+    pub fn updates(&self) -> usize {
+        self.updates
+    }
+    pub fn k(&self) -> usize {
+        self.k
+    }
+    /// Report of the most recent flush, if any.
+    pub fn last_update(&self) -> Option<UpdateReport> {
+        self.last
+    }
+
+    /// Buffer delta points; every full mini-batch triggers fold →
+    /// recompress → refine → epoch swap. Returns how many epochs were
+    /// published by this call.
+    pub fn ingest(&mut self, deltas: &[Point]) -> anyhow::Result<usize> {
+        let dims = self.model().dims();
+        anyhow::ensure!(
+            deltas.iter().all(|p| p.dims() == dims),
+            "delta dims mismatch (model serves {dims}-dimensional points)"
+        );
+        self.buffer.extend_from_slice(deltas);
+        let mut flushed = 0usize;
+        while self.buffer.len() >= self.cfg.batch_size {
+            let batch: Vec<Point> = self.buffer.drain(..self.cfg.batch_size).collect();
+            self.flush_batch(batch)?;
+            flushed += 1;
+        }
+        Ok(flushed)
+    }
+
+    /// Force-flush a partial mini-batch (e.g. at shutdown). Returns
+    /// whether a new epoch was published.
+    pub fn flush(&mut self) -> anyhow::Result<bool> {
+        if self.buffer.is_empty() {
+            return Ok(false);
+        }
+        let batch = std::mem::take(&mut self.buffer);
+        self.flush_batch(batch)?;
+        Ok(true)
+    }
+
+    fn flush_batch(&mut self, batch: Vec<Point>) -> anyhow::Result<()> {
+        self.updates += 1;
+        let batch_len = batch.len();
+
+        // Fold: every delta enters as a unit-weight representative.
+        self.reps.extend_from_slice(&batch);
+        self.weights.resize(self.reps.len(), 1.0);
+
+        // Recompress once the pool exceeds twice the budget — the merge
+        // reducer's recipe: weighted ++ draw of `target` representatives,
+        // then one kernel pass re-weights them by captured mass.
+        if self.reps.len() > 2 * self.target {
+            let mut rng = Rng::new(self.seed ^ 0x5ED ^ self.updates as u64);
+            let new_reps = recluster_candidates(
+                &self.reps,
+                &self.weights,
+                self.target,
+                &self.reps,
+                &mut rng,
+                self.metric,
+            );
+            let (labels, _) =
+                min_dists_chunked(self.backend.as_ref(), &self.reps, &new_reps, self.metric);
+            self.dist_evals += (self.target as u64) * self.reps.len() as u64
+                + ops::assign_dist_evals(self.reps.len(), new_reps.len());
+            let mut new_ws = vec![0f64; new_reps.len()];
+            for (i, &l) in labels.iter().enumerate() {
+                new_ws[l as usize] += self.weights[i];
+            }
+            self.reps = new_reps;
+            self.weights = new_ws;
+        }
+
+        // Refine from the current snapshot's medoids. The incumbent stays
+        // a candidate in every update step, so the assign/update chain —
+        // and therefore cost_after vs cost_before — is non-increasing.
+        let current = self.handle.load();
+        let mut medoids = current.medoids().to_vec();
+        let weights_f32: Vec<f32> = self.weights.iter().map(|&w| w as f32).collect();
+        let mut cost_before = f64::NAN;
+        for it in 0..self.cfg.refine_iters.max(1) {
+            let step = weighted_refine_step(
+                self.backend.as_ref(),
+                &self.reps,
+                &weights_f32,
+                &medoids,
+                self.metric,
+                true,
+            )?;
+            self.dist_evals += step.dist_evals;
+            if it == 0 {
+                cost_before = step.cost;
+            }
+            medoids = step.medoids;
+        }
+        let coreset = Weighted::new(self.reps.as_slice(), &weights_f32);
+        let fin = assign_weighted(self.backend.as_ref(), &coreset, &medoids, self.metric)?;
+        self.dist_evals += ops::assign_dist_evals(self.reps.len(), medoids.len());
+        let cost_after: f64 = fin.cluster_cost.iter().sum();
+        let drift: f64 = medoids
+            .iter()
+            .zip(current.medoids())
+            .map(|(a, b)| self.metric.displacement(a, b))
+            .sum();
+
+        // Epoch swap: readers keep answering from the old snapshot until
+        // the atomic pointer store, then see the refined one.
+        let epoch = self
+            .handle
+            .publish(ClusterModel::new(self.backend.clone(), medoids, self.metric));
+        self.last = Some(UpdateReport {
+            epoch,
+            batch: batch_len,
+            cost_before,
+            cost_after,
+            medoid_drift: drift,
+            coreset_len: self.reps.len(),
+        });
+        self.observers.iteration(&IterationEvent {
+            algorithm: SERVE_EVENT_NAME,
+            iteration: self.updates,
+            cost: cost_after,
+            medoid_drift: drift,
+            sim_seconds: 0.0, // serving runs off the simulated cluster
+            dist_evals: self.dist_evals,
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::observe::IterationLog;
+    use crate::clustering::UpdateStrategy;
+    use crate::driver::{Algorithm, Experiment};
+    use crate::geo::datasets::{generate, SpatialSpec};
+    use crate::session::ClusterSession;
+
+    /// Fit the coreset pipeline (with labels) on a small planted dataset
+    /// and stand up serving from it.
+    fn serve_fixture(
+        seed: u64,
+        cfg: ServeConfig,
+    ) -> (ServeSession, ClusterOutcome, Vec<Point>) {
+        let mut spec = SpatialSpec::new(1500, 3, seed);
+        spec.outlier_frac = 0.0;
+        let dataset = generate(&spec);
+        let mut session = ClusterSession::builder().test(4).seed(seed).build().unwrap();
+        let data = session.ingest("pts", &dataset);
+        let mut exp = Experiment::paper_cell(Algorithm::KMedoidsCoresetMR, 4, 0, seed);
+        exp.spec = spec.clone();
+        exp.k = 3;
+        exp.update = UpdateStrategy::Exact;
+        exp.with_quality = true;
+        let out = exp.clusterer().fit(&mut session, &data).unwrap();
+        let serve =
+            ServeSession::from_fit(&session, &data, &out, Metric::SqEuclidean, cfg).unwrap();
+        (serve, out, dataset.points)
+    }
+
+    fn jittered(points: &[Point], rng: &mut Rng, n: usize, dx: f32, dy: f32) -> Vec<Point> {
+        (0..n)
+            .map(|_| {
+                let p = points[rng.below(points.len())];
+                Point::new(p.x() + dx, p.y() + dy)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serve_assign_is_byte_identical_to_fit_label_pass() {
+        let (serve, out, points) = serve_fixture(41, ServeConfig::default());
+        let model = serve.model();
+        let (labels, _) = model.assign_batch(points.as_slice());
+        assert_eq!(Some(labels), out.labels, "serve labels must match the batch label pass");
+    }
+
+    #[test]
+    fn partial_batches_buffer_without_publishing() {
+        let cfg = ServeConfig { batch_size: 100, ..ServeConfig::default() };
+        let (mut serve, _, points) = serve_fixture(43, cfg);
+        assert_eq!(serve.model().epoch(), 1);
+        let flushed = serve.ingest(&points[..60]).unwrap();
+        assert_eq!(flushed, 0);
+        assert_eq!(serve.pending(), 60);
+        assert_eq!(serve.model().epoch(), 1, "no epoch swap before a full mini-batch");
+        assert!(serve.last_update().is_none());
+        // Force-flush publishes the partial batch.
+        assert!(serve.flush().unwrap());
+        assert_eq!(serve.pending(), 0);
+        assert_eq!(serve.model().epoch(), 2);
+        assert_eq!(serve.last_update().unwrap().batch, 60);
+    }
+
+    #[test]
+    fn ingest_then_refine_never_increases_weighted_coreset_cost() {
+        let cfg = ServeConfig { batch_size: 128, ..ServeConfig::default() };
+        let (mut serve, _, points) = serve_fixture(47, cfg);
+        let mut rng = Rng::new(47);
+        for round in 0..4 {
+            let deltas = jittered(&points, &mut rng, 128, 300.0 * round as f32, 0.0);
+            let flushed = serve.ingest(&deltas).unwrap();
+            assert_eq!(flushed, 1);
+            let rep = serve.last_update().unwrap();
+            assert_eq!(rep.epoch, 2 + round as u64);
+            assert!(
+                rep.cost_after <= rep.cost_before * (1.0 + 1e-6),
+                "round {round}: cost {} -> {}",
+                rep.cost_before,
+                rep.cost_after
+            );
+            assert!(rep.medoid_drift.is_finite());
+            assert_eq!(serve.model().epoch(), rep.epoch);
+        }
+        assert_eq!(serve.updates(), 4);
+    }
+
+    #[test]
+    fn coreset_recompression_bounds_the_pool() {
+        let cfg =
+            ServeConfig { batch_size: 64, coreset_size: Some(40), ..ServeConfig::default() };
+        let (mut serve, _, points) = serve_fixture(53, cfg);
+        let mut rng = Rng::new(53);
+        let mass0 = serve.coreset_weight();
+        for _ in 0..6 {
+            let deltas = jittered(&points, &mut rng, 64, 50.0, -50.0);
+            serve.ingest(&deltas).unwrap();
+            assert!(
+                serve.coreset_len() <= 2 * 40 + 64,
+                "pool {} exceeded fold+budget bound",
+                serve.coreset_len()
+            );
+        }
+        // Recompression preserves total mass: original points + deltas.
+        let mass = serve.coreset_weight();
+        assert!(
+            (mass - (mass0 + 6.0 * 64.0)).abs() < 1e-6 * mass,
+            "coreset mass {mass} vs expected {}",
+            mass0 + 6.0 * 64.0
+        );
+    }
+
+    #[test]
+    fn updates_are_deterministic_in_the_seed() {
+        let run = || {
+            let cfg = ServeConfig { batch_size: 96, ..ServeConfig::default() };
+            let (mut serve, _, points) = serve_fixture(59, cfg);
+            let mut rng = Rng::new(59);
+            let deltas = jittered(&points, &mut rng, 3 * 96, 120.0, 80.0);
+            serve.ingest(&deltas).unwrap();
+            let m = serve.model();
+            (m.epoch(), m.medoids().to_vec(), serve.last_update().unwrap().cost_after)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+    }
+
+    #[test]
+    fn drifted_deltas_pull_medoids_toward_the_new_mass() {
+        // Stream many deltas shifted far from the fitted data; after a
+        // few mini-batches at least one medoid must follow the drift.
+        let cfg = ServeConfig { batch_size: 200, refine_iters: 3, ..ServeConfig::default() };
+        let (mut serve, _, points) = serve_fixture(61, cfg);
+        let shift = 5.0e4f32;
+        let near_shift = |ms: &[Point]| {
+            ms.iter().map(|m| (m.x() - shift).abs()).fold(f32::INFINITY, f32::min)
+        };
+        let before = near_shift(serve.model().medoids());
+        let mut rng = Rng::new(61);
+        for _ in 0..5 {
+            let deltas = jittered(&points, &mut rng, 200, shift, 0.0);
+            serve.ingest(&deltas).unwrap();
+        }
+        let after = near_shift(serve.model().medoids());
+        assert!(
+            after < before / 2.0,
+            "medoids did not follow the drift: nearest |x - shift| {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn events_stream_one_per_flush() {
+        let cfg = ServeConfig { batch_size: 80, ..ServeConfig::default() };
+        let (mut serve, _, points) = serve_fixture(67, cfg);
+        let log = IterationLog::new();
+        serve.add_observer(Box::new(log.clone()));
+        let mut rng = Rng::new(67);
+        let deltas = jittered(&points, &mut rng, 2 * 80 + 10, 10.0, 10.0);
+        let flushed = serve.ingest(&deltas).unwrap();
+        assert_eq!(flushed, 2);
+        let events = log.events();
+        assert_eq!(events.len(), 2);
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(e.algorithm, SERVE_EVENT_NAME);
+            assert_eq!(e.iteration, i + 1);
+            assert!(e.cost > 0.0 && e.medoid_drift.is_finite());
+            assert_eq!(e.sim_seconds, 0.0, "serving is off the simulated clock");
+        }
+        assert!(events[1].dist_evals > events[0].dist_evals, "eval accounting is cumulative");
+    }
+
+    #[test]
+    fn mismatched_delta_dims_rejected() {
+        let (mut serve, _, _) = serve_fixture(71, ServeConfig::default());
+        let err = serve.ingest(&[Point::from_slice(&[1.0, 2.0, 3.0])]).unwrap_err();
+        assert!(err.to_string().contains("dims"), "unexpected error: {err:#}");
+    }
+}

@@ -405,6 +405,18 @@ impl ClusterSession {
         self.observers.fit_end(outcome);
     }
 
+    /// Publish a finished fit as an immutable serving snapshot over this
+    /// session's compute backend. The snapshot's epoch is stamped when a
+    /// [`crate::serve::ModelHandle`] publishes it; see [`crate::serve`]
+    /// for the query and update layers.
+    pub fn publish(
+        &self,
+        outcome: &ClusterOutcome,
+        metric: crate::geo::Metric,
+    ) -> crate::serve::ClusterModel {
+        crate::serve::ClusterModel::new(self.backend.clone(), outcome.medoids.clone(), metric)
+    }
+
     // ---- observers --------------------------------------------------------
 
     /// Register an observer; it receives events from every subsequent fit

@@ -14,6 +14,14 @@
 //! (c) **Labels** — when a fit emits labels, every point's assigned
 //!     medoid is as near as the brute-force label's medoid
 //!     ([`brute_labels_metric`]), up to f32-kernel tie tolerance.
+//! (d) **ARI floor** — the Adjusted Rand Index of the fitted medoids'
+//!     brute-force labels against the generator's ground truth clears
+//!     the row's declared floor. The floors are deliberately loose
+//!     breakage bounds, not quality targets (K < hotspots caps the
+//!     achievable ARI by construction; a broken kernel scores ~0).
+//! (e) **Serving identity** — a [`ClusterModel`] published from the
+//!     fit's medoids answers `assign`/`assign_batch` byte-identically
+//!     to a fresh batch assign pass over the same medoids.
 //!
 //! Adding an algorithm = adding one row to [`MATRIX`] (the coreset
 //! pipeline entered exactly that way). The declared factors document
@@ -27,29 +35,39 @@
 //! (dims 8 included) runs under `CONFORMANCE_FULL=1` via the manual
 //! workflow-dispatch job.
 
-use kmedoids_mr::clustering::metrics::{brute_labels_metric, total_cost_metric};
+use kmedoids_mr::clustering::metrics::{
+    adjusted_rand_index, brute_labels_metric, total_cost_metric,
+};
 use kmedoids_mr::driver::{Algorithm, Experiment};
 use kmedoids_mr::prelude::*;
+use kmedoids_mr::runtime::assign_points;
+use std::sync::Arc;
 
 /// One row of the conformance matrix: an algorithm plus its declared
-/// worst-case factor over the best oracle cost in the cell.
+/// worst-case factor over the best oracle cost in the cell and its
+/// ground-truth ARI floor.
 struct Row {
     algorithm: Algorithm,
     cost_factor: f64,
+    /// Minimum Adjusted Rand Index vs. generator truth. With K=4 over 8
+    /// hotspots the *ceiling* for a clean pairwise merge is ~0.6, so
+    /// these floors are breakage detectors (broken kernels score ~0),
+    /// calibrated loose like `cost_factor`, not quality targets.
+    ari_floor: f64,
 }
 
 /// The declarative matrix — every algorithm must have a row.
 const MATRIX: &[Row] = &[
-    Row { algorithm: Algorithm::KMedoidsPlusPlusMR, cost_factor: 3.0 },
-    Row { algorithm: Algorithm::KMedoidsScalableMR, cost_factor: 3.0 },
-    Row { algorithm: Algorithm::KMedoidsCoresetMR, cost_factor: 3.0 },
-    Row { algorithm: Algorithm::KMeansMR, cost_factor: 3.0 },
-    Row { algorithm: Algorithm::Clarans, cost_factor: 6.0 },
+    Row { algorithm: Algorithm::KMedoidsPlusPlusMR, cost_factor: 3.0, ari_floor: 0.2 },
+    Row { algorithm: Algorithm::KMedoidsScalableMR, cost_factor: 3.0, ari_floor: 0.2 },
+    Row { algorithm: Algorithm::KMedoidsCoresetMR, cost_factor: 3.0, ari_floor: 0.2 },
+    Row { algorithm: Algorithm::KMeansMR, cost_factor: 3.0, ari_floor: 0.2 },
+    Row { algorithm: Algorithm::Clarans, cost_factor: 6.0, ari_floor: 0.15 },
     // Random-init variants: a random draw can land in a worse basin
-    // deterministically; the looser bound still rejects broken kernels
-    // (which miss by orders of magnitude).
-    Row { algorithm: Algorithm::KMedoidsRandomMR, cost_factor: 8.0 },
-    Row { algorithm: Algorithm::KMedoidsSerial, cost_factor: 8.0 },
+    // deterministically; the looser bounds still reject broken kernels
+    // (which miss by orders of magnitude on cost and sit at ~0 ARI).
+    Row { algorithm: Algorithm::KMedoidsRandomMR, cost_factor: 8.0, ari_floor: 0.05 },
+    Row { algorithm: Algorithm::KMedoidsSerial, cost_factor: 8.0, ari_floor: 0.05 },
 ];
 
 /// Full matrix (dims 8) only under `CONFORMANCE_FULL=1` — the PR smoke
@@ -185,6 +203,54 @@ fn run_cell_matrix(metric: Metric, spec: &SpatialSpec) {
                 );
             }
         }
+        // (d) ARI floor vs. generator truth, on the fitted medoids'
+        // brute-force labels (uniform across algorithms whether or not
+        // the fit emitted its own label pass).
+        let brute = brute_labels_metric(points, &base.medoids, metric);
+        let ari = adjusted_rand_index(&brute, &dataset.truth);
+        assert!(
+            ari >= row.ari_floor,
+            "[{cell}] {}: ARI {ari:.3} below declared floor {}",
+            row.algorithm.name(),
+            row.ari_floor
+        );
+
+        // (e) serving identity: a model published from this fit answers
+        // byte-identically to a fresh batch assign pass over the same
+        // medoids — labels AND f32 mindists, single-point and batched.
+        // (Compared against a fresh pass rather than `base.labels`:
+        // iterative PAM exits can leave fit labels one medoid-update
+        // stale, which contract (c) already tolerates by distance.)
+        let be: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(256, 16));
+        let model = ClusterModel::new(be.clone(), base.medoids.clone(), metric);
+        let (mlabels, mdists) = model.assign_batch(points.as_slice());
+        let oracle_assign =
+            assign_points(be.as_ref(), points, &base.medoids, metric).expect("assign pass");
+        assert_eq!(
+            mlabels,
+            oracle_assign.labels,
+            "[{cell}] {}: serve labels diverged from the batch assign pass",
+            row.algorithm.name()
+        );
+        assert_eq!(mdists.len(), oracle_assign.mindists.len());
+        for (i, (a, b)) in mdists.iter().zip(&oracle_assign.mindists).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "[{cell}] {}: serve mindist {i} not bitwise-identical",
+                row.algorithm.name()
+            );
+        }
+        for i in (0..points.len()).step_by(97) {
+            let (l, d) = model.assign(&points[i]);
+            assert_eq!(
+                (l, d.to_bits()),
+                (mlabels[i], mdists[i].to_bits()),
+                "[{cell}] {}: single-point assign diverged from batch at {i}",
+                row.algorithm.name()
+            );
+        }
+
         oracle_costs.push((row.algorithm, oracle, row.cost_factor));
     }
 
@@ -229,8 +295,10 @@ fn matrix_covers_every_algorithm_exactly_once() {
         assert_eq!(rows, 1, "{} must have exactly one matrix row", a.name());
     }
     // Declared factors are sane (>= 1; the harness is a ceiling, not a
-    // target).
+    // target), and ARI floors sit strictly below the ~0.6 construction
+    // ceiling so they stay breakage bounds.
     assert!(MATRIX.iter().all(|r| r.cost_factor >= 1.0));
+    assert!(MATRIX.iter().all(|r| r.ari_floor > 0.0 && r.ari_floor < 0.6));
 }
 
 /// The coreset pipeline's headline property, checked inside the shared

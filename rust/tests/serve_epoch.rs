@@ -1,0 +1,214 @@
+//! Concurrency property tests for the serving epoch swap: readers that
+//! hammer [`ModelHandle::load`] while a writer publishes snapshots must
+//! only ever observe *complete* models (every probe answers exactly as
+//! that epoch's reference model does — never a mix of two epochs) and a
+//! non-decreasing epoch sequence; once the writer is done, the next read
+//! sees the final epoch.
+
+use kmedoids_mr::prelude::*;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const EPOCHS: u64 = 6;
+const K: usize = 3;
+const READERS: usize = 3;
+
+/// Medoids for a given epoch, far enough apart that every epoch gives a
+/// distinct (label, distance) answer on every probe point.
+fn medoids_for(epoch: u64) -> Vec<Point> {
+    let off = (epoch as f32) * 4096.0;
+    (0..K)
+        .map(|i| Point::new(off + (i as f32) * 512.0, off + (i as f32) * 256.0))
+        .collect()
+}
+
+fn probes() -> Vec<Point> {
+    let mut ps = Vec::new();
+    for i in 0..24 {
+        let t = i as f32;
+        ps.push(Point::new(t * 913.0 - 3000.0, t * 377.0 + 150.0));
+    }
+    ps
+}
+
+#[test]
+fn concurrent_readers_see_consistent_monotone_epochs() {
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(256, 16));
+    let probes = probes();
+
+    // Reference answer table: expected[e - 1][p] = (label, dist bits)
+    // from a private model built with epoch e's medoids. A published
+    // snapshot must match one row *exactly* — a torn read that mixed
+    // medoid sets across epochs would straddle rows.
+    let expected: Vec<Vec<(u32, u32)>> = (1..=EPOCHS)
+        .map(|e| {
+            let model = ClusterModel::new(backend.clone(), medoids_for(e), Metric::SqEuclidean);
+            probes.iter().map(|p| model.assign(p)).map(|(l, d)| (l, d.to_bits())).collect()
+        })
+        .collect();
+
+    let first = ClusterModel::new(backend.clone(), medoids_for(1), Metric::SqEuclidean);
+    let handle = Arc::new(ModelHandle::new(first));
+    let done = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for r in 0..READERS {
+            let handle = handle.clone();
+            let done = done.clone();
+            let probes = &probes;
+            let expected = &expected;
+            joins.push(scope.spawn(move || {
+                let mut last_epoch = 0u64;
+                let mut observed = 0usize;
+                loop {
+                    // Read the flag *before* loading: if the writer is
+                    // already done, the Acquire pair guarantees this
+                    // load sees the final publish.
+                    let finished = done.load(Ordering::Acquire);
+                    let model = handle.load();
+                    let e = model.epoch();
+                    assert!(
+                        (1..=EPOCHS).contains(&e),
+                        "reader {r} saw out-of-range epoch {e}"
+                    );
+                    assert!(
+                        e >= last_epoch,
+                        "reader {r} saw epoch regress {last_epoch} -> {e}"
+                    );
+                    last_epoch = e;
+                    let row = &expected[(e - 1) as usize];
+                    for (p, want) in probes.iter().zip(row) {
+                        let (l, d) = model.assign(p);
+                        assert_eq!(
+                            (l, d.to_bits()),
+                            *want,
+                            "reader {r}: torn snapshot at epoch {e}"
+                        );
+                    }
+                    observed += 1;
+                    if finished {
+                        break;
+                    }
+                }
+                (last_epoch, observed)
+            }));
+        }
+
+        for e in 2..=EPOCHS {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            let model = ClusterModel::new(backend.clone(), medoids_for(e), Metric::SqEuclidean);
+            let stamped = handle.publish(model);
+            assert_eq!(stamped, e, "publish must stamp consecutive epochs");
+        }
+        done.store(true, Ordering::Release);
+
+        for join in joins {
+            let (last, observed) = join.join().expect("reader panicked");
+            assert_eq!(
+                last, EPOCHS,
+                "a reader's post-done load must see the final epoch"
+            );
+            assert!(observed > 0);
+        }
+    });
+
+    assert_eq!(handle.epochs_published(), EPOCHS as usize);
+    assert_eq!(handle.epoch(), EPOCHS);
+}
+
+#[test]
+fn serve_session_updates_swap_epochs_under_concurrent_readers() {
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(256, 16));
+
+    // A small explicit weighted coreset: 40 unit-weight representatives
+    // on a deterministic lattice, three of them doubling as medoids.
+    let reps: Vec<Point> = (0..40)
+        .map(|i| {
+            let t = i as f32;
+            Point::new((t % 8.0) * 700.0, (t / 8.0).floor() * 900.0)
+        })
+        .collect();
+    let weights = vec![1.0f64; reps.len()];
+    let medoids = vec![reps[0], reps[17], reps[33]];
+
+    let cfg = ServeConfig { batch_size: 16, refine_iters: 1, coreset_size: Some(40) };
+    let mut serve = ServeSession::from_coreset(
+        backend,
+        Metric::SqEuclidean,
+        99,
+        cfg,
+        medoids,
+        reps,
+        weights,
+    )
+    .expect("from_coreset");
+    assert_eq!(serve.model().epoch(), 1);
+    assert_eq!(serve.k(), 3);
+
+    let handle = serve.handle();
+    let done = Arc::new(AtomicBool::new(false));
+    const BATCHES: usize = 5;
+
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for r in 0..2 {
+            let handle = handle.clone();
+            let done = done.clone();
+            joins.push(scope.spawn(move || {
+                let probe = Point::new(1100.0 + (r as f32) * 53.0, 1900.0);
+                let mut last_epoch = 0u64;
+                loop {
+                    let finished = done.load(Ordering::Acquire);
+                    let model = handle.load();
+                    let e = model.epoch();
+                    assert!((1..=(BATCHES as u64 + 1)).contains(&e));
+                    assert!(e >= last_epoch, "epoch regressed {last_epoch} -> {e}");
+                    last_epoch = e;
+                    assert_eq!(model.k(), 3);
+                    assert_eq!(model.dims(), 2);
+                    let (label, dist) = model.assign(&probe);
+                    assert!((label as usize) < model.k());
+                    assert!(dist.is_finite() && dist >= 0.0);
+                    if finished {
+                        break;
+                    }
+                }
+                last_epoch
+            }));
+        }
+
+        // Single writer: five full mini-batches, one epoch swap each,
+        // while the readers above spin on the shared handle.
+        for b in 0..BATCHES {
+            let deltas: Vec<Point> = (0..16)
+                .map(|i| {
+                    let t = (b * 16 + i) as f32;
+                    Point::new(1000.0 + t * 3.0, 2000.0 - t * 2.0)
+                })
+                .collect();
+            let flushed = serve.ingest(&deltas).expect("ingest");
+            assert_eq!(flushed, 1, "a full batch must flush exactly once");
+            let rep = serve.last_update().expect("flush leaves a report");
+            assert_eq!(rep.batch, 16);
+            assert!(
+                rep.cost_after <= rep.cost_before * (1.0 + 1e-6),
+                "refinement increased weighted cost: {} -> {}",
+                rep.cost_before,
+                rep.cost_after
+            );
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        done.store(true, Ordering::Release);
+
+        for join in joins {
+            let last = join.join().expect("reader panicked");
+            assert_eq!(last, BATCHES as u64 + 1, "post-done read sees final epoch");
+        }
+    });
+
+    assert_eq!(serve.updates(), BATCHES);
+    assert_eq!(serve.pending(), 0);
+    assert_eq!(serve.model().epoch(), BATCHES as u64 + 1);
+    assert_eq!(handle.epochs_published(), BATCHES + 1);
+}

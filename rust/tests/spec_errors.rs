@@ -1,0 +1,49 @@
+//! Regression: run-spec parse failures are typed [`SpecError`]s naming
+//! the offending key. The fixture pins a catalogue of broken specs; a
+//! decoder refactor that loses the type or misattributes the key fails
+//! here, not in a user's tooling.
+
+use kmedoids_mr::driver::spec::{experiments_from_str, SpecError};
+use kmedoids_mr::util::json::Json;
+
+#[test]
+fn bad_spec_fixture_yields_typed_keyed_errors() {
+    let src = include_str!("fixtures/bad_spec.json");
+    let cases = Json::parse(src).expect("fixture must be valid JSON");
+    let cases = cases.as_arr().expect("fixture is an array of cases");
+    assert!(cases.len() >= 20, "the catalogue should stay comprehensive");
+    for case in cases {
+        let expect =
+            case.get("expect_key").and_then(|k| k.as_str()).expect("case needs expect_key");
+        let cell = case.get("cell").expect("case needs cell");
+        let err = experiments_from_str(&cell.to_string())
+            .expect_err(&format!("cell must be rejected: {cell}"));
+        let spec_err = err
+            .downcast_ref::<SpecError>()
+            .unwrap_or_else(|| panic!("not a typed SpecError for {cell}: {err:#}"));
+        assert_eq!(spec_err.key(), expect, "wrong key for {cell}: {spec_err}");
+        // Every rendered message names its key — the greppable contract
+        // the typed form exists to guarantee.
+        assert!(
+            spec_err.to_string().contains(expect),
+            "message must name the key: {spec_err}"
+        );
+    }
+}
+
+#[test]
+fn good_cells_in_the_same_shapes_still_parse() {
+    // The fixture's cases are minimal mutations of valid cells; make
+    // sure the unmutated shapes parse, so the catalogue can't silently
+    // pass by rejecting everything.
+    for good in [
+        r#"{"algorithm": "clarans", "dataset": {"n_points": 10}}"#,
+        r#"{"dataset": {"paper_dataset": 2, "scale_div": 100}}"#,
+        r#"{"update": {"kind": "sampled", "candidates": 8, "member_sample": 64},
+            "dataset": {"n_points": 10}}"#,
+        r#"{"algorithm": "kmedoids-scalable-mr", "oversample": {"l": 18, "rounds": 5},
+            "dataset": {"n_points": 10}}"#,
+    ] {
+        experiments_from_str(good).unwrap_or_else(|e| panic!("should parse {good}: {e:#}"));
+    }
+}

@@ -3,40 +3,53 @@
 //! [`Error`], [`Result`], the [`Context`] extension trait, and the
 //! `anyhow!` / `bail!` / `ensure!` macros. Error state is a flattened
 //! message chain (outermost context first, root cause last) — enough for
-//! `{}` / `{:#}` / `{:?}` to render like the real crate.
+//! `{}` / `{:#}` / `{:?}` to render like the real crate — plus the typed
+//! root cause when one was supplied, so `downcast_ref` works.
 
 use std::error::Error as StdError;
 use std::fmt;
 
-/// A context-carrying error. Unlike the real crate this stores the
-/// rendered message chain, not the live source error; that is all the
-/// callers here need (display + propagation).
+/// A context-carrying error. The rendered message chain drives display;
+/// when the error was built from a typed `std::error::Error` the live
+/// value rides along so callers can recover it with
+/// [`Error::downcast_ref`] (the one piece of real-anyhow behaviour the
+/// typed spec errors depend on).
 pub struct Error {
     /// Outermost context first; the root cause is the last entry.
     chain: Vec<String>,
+    /// The typed root cause, when the error came from one.
+    payload: Option<Box<dyn StdError + Send + Sync + 'static>>,
 }
 
 impl Error {
     /// Create an error from a displayable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
     }
 
-    /// Create an error from a standard error, capturing its source chain.
-    pub fn new<E: StdError>(error: E) -> Error {
+    /// Create an error from a standard error, capturing its source chain
+    /// (for display) and the value itself (for downcasting).
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
         let mut chain = vec![error.to_string()];
         let mut src = error.source();
         while let Some(s) = src {
             chain.push(s.to_string());
             src = s.source();
         }
-        Error { chain }
+        Error { chain, payload: Some(Box::new(error)) }
     }
 
     /// Wrap with an outer context message (like `anyhow::Error::context`).
+    /// The typed root cause, if any, is preserved.
     pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
         self.chain.insert(0, context.to_string());
         self
+    }
+
+    /// The typed root cause, if this error carries one of type `E`.
+    /// Context wrapping does not hide it.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.payload.as_deref().and_then(|p| p.downcast_ref::<E>())
     }
 
     /// The outermost message.
@@ -125,7 +138,48 @@ impl<T> Context<T> for Option<T> {
     }
 }
 
-/// Build an [`Error`] from a message or format string.
+/// Autoref-specialization support for the single-expression `anyhow!` /
+/// `bail!` arm (the real crate's "kind" trick): an expression that is
+/// already convertible to [`Error`] — any typed `std::error::Error` —
+/// converts via `From`, keeping its payload downcastable; anything
+/// merely displayable falls back to a rendered message. Implementation
+/// detail of the macros, not public API.
+#[doc(hidden)]
+pub mod kind {
+    use super::Error;
+    use std::fmt;
+
+    pub struct Trait;
+    pub trait TraitKind: Sized {
+        #[inline]
+        fn anyhow_kind(&self) -> Trait {
+            Trait
+        }
+    }
+    impl<E: Into<Error>> TraitKind for E {}
+    impl Trait {
+        pub fn wrap(self, error: impl Into<Error>) -> Error {
+            error.into()
+        }
+    }
+
+    pub struct Adhoc;
+    pub trait AdhocKind: Sized {
+        #[inline]
+        fn anyhow_kind(&self) -> Adhoc {
+            Adhoc
+        }
+    }
+    impl<T: fmt::Display + Send + Sync + 'static + ?Sized> AdhocKind for &T {}
+    impl Adhoc {
+        pub fn wrap<M: fmt::Display>(self, message: M) -> Error {
+            Error::msg(message)
+        }
+    }
+}
+
+/// Build an [`Error`] from a message, format string, or typed error
+/// value (the latter stays downcastable).
 #[macro_export]
 macro_rules! anyhow {
     ($msg:literal $(,)?) => {
@@ -134,9 +188,11 @@ macro_rules! anyhow {
     ($fmt:expr, $($arg:tt)*) => {
         $crate::Error::msg(format!($fmt, $($arg)*))
     };
-    ($err:expr $(,)?) => {
-        $crate::Error::msg(format!("{}", $err))
-    };
+    ($err:expr $(,)?) => {{
+        use $crate::kind::{AdhocKind as _, TraitKind as _};
+        let error = $err;
+        (&error).anyhow_kind().wrap(error)
+    }};
 }
 
 /// Return early with an error.
@@ -211,5 +267,35 @@ mod tests {
             Ok(())
         }
         assert!(f().is_err());
+    }
+
+    #[test]
+    fn downcast_survives_every_typed_path() {
+        // `?` conversion.
+        fn via_question_mark() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = via_question_mark().unwrap_err();
+        assert_eq!(
+            e.downcast_ref::<std::io::Error>().unwrap().kind(),
+            std::io::ErrorKind::NotFound
+        );
+
+        // Single-expression `bail!` of a typed error.
+        fn via_bail() -> Result<()> {
+            bail!(io_err());
+        }
+        assert!(via_bail().unwrap_err().downcast_ref::<std::io::Error>().is_some());
+
+        // Context wrapping keeps the payload reachable.
+        let e = via_question_mark().context("outer").unwrap_err();
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        assert_eq!(format!("{e}"), "outer");
+
+        // Adhoc messages carry no payload and say so.
+        assert!(anyhow!("just text").downcast_ref::<std::io::Error>().is_none());
+        let s = String::from("dynamic");
+        assert!(anyhow!(s).downcast_ref::<std::io::Error>().is_none());
     }
 }
