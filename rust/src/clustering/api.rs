@@ -43,7 +43,7 @@ use super::kmeans::ParallelKMeans;
 use super::observe::ObserverHub;
 use super::pam::alternating_kmedoids_observed;
 use super::parallel::ParallelKMedoids;
-use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
+use super::{ClusterOutcome, FitResume, Init, IterParams, UpdateStrategy};
 use crate::config::ClusterConfig;
 use crate::geo::Metric;
 use crate::mapreduce::Cluster;
@@ -192,6 +192,9 @@ pub struct KMedoids {
     /// Weighted-representative budget for the coreset exec mode; `None`
     /// uses the O(k·log n) default.
     coreset_size: Option<usize>,
+    /// Checkpointed state to continue from instead of seeding fresh
+    /// (see [`crate::persist`]); MR exec modes only.
+    resume: Option<FitResume>,
 }
 
 /// Fluent builder for [`KMedoids`].
@@ -218,6 +221,7 @@ impl KMedoids {
                 fixed_iters: None,
                 label_pass: false,
                 coreset_size: None,
+                resume: None,
             },
         }
     }
@@ -313,6 +317,15 @@ impl KMedoidsBuilder {
         self.inner.coreset_size = Some(n);
         self
     }
+    /// Continue from a checkpoint ([`crate::persist::Checkpoint::to_resume`])
+    /// instead of seeding fresh. The engine validates that the checkpoint's
+    /// algorithm, metric, seed, and k match this builder's configuration,
+    /// so a resumed fit is byte-identical to the uninterrupted run. MR
+    /// exec modes only; the serial baseline refuses it.
+    pub fn resume(mut self, state: FitResume) -> Self {
+        self.inner.resume = Some(state);
+        self
+    }
     pub fn build(self) -> KMedoids {
         self.inner
     }
@@ -364,6 +377,7 @@ impl SpatialClusterer for KMedoids {
                     metric: self.metric,
                     label_pass: self.label_pass,
                     event_label: None,
+                    resume: self.resume.clone(),
                 };
                 run_mr_fit(session, name, points.len(), self.k, |cluster, hub| {
                     drv.run_observed(cluster, &input, &points, hub)
@@ -383,6 +397,7 @@ impl SpatialClusterer for KMedoids {
                     metric: self.metric,
                     coreset_size: self.coreset_size,
                     label_pass: self.label_pass,
+                    resume: self.resume.clone(),
                 };
                 run_mr_fit(session, name, points.len(), self.k, |cluster, hub| {
                     drv.run_observed(cluster, &input, &points, hub)
@@ -396,6 +411,11 @@ impl SpatialClusterer for KMedoids {
                     self.fixed_iters.is_none(),
                     "kmedoids-serial ignores fixed_iters (only the MR drivers support \
                      controlled iterations)"
+                );
+                ensure!(
+                    self.resume.is_none(),
+                    "kmedoids-serial cannot resume from a checkpoint (only the MR drivers \
+                     emit and restore checkpoints)"
                 );
                 let backend = session.backend();
                 let bytes = session.dataset_bytes(data);

@@ -30,9 +30,9 @@
 //! conformance harness (`rust/tests/conformance.rs`) checks the cost
 //! stays within a declared factor of the brute-force oracle.
 
-use super::observe::{IterationEvent, ObserverHub};
+use super::observe::{FitCheckpoint, IterationEvent, ObserverHub};
 use super::seeding::{min_dists_chunked, recluster_candidates};
-use super::{ClusterOutcome, IterParams};
+use super::{ClusterOutcome, FitResume, IterParams};
 use crate::geo::{Metric, Point, PointSource, Weighted, WeightedSource};
 use crate::mapreduce::{Cluster, Input, JobSpec, MapCtx, Mapper, ReduceCtx, Reducer};
 use crate::runtime::{
@@ -67,6 +67,10 @@ pub struct CoresetKMedoids {
     /// Also emit per-point labels from the final pass (no extra job —
     /// the cost pass carries them).
     pub label_pass: bool,
+    /// Restored mid-fit state: skip the coreset-construction jobs and
+    /// the recluster, continue refining from this checkpoint boundary
+    /// (the checkpoint must carry the weighted coreset pool).
+    pub resume: Option<FitResume>,
 }
 
 pub const CORESET_EVENT_NAME: &str = "kmedoids-coreset-mr";
@@ -79,7 +83,51 @@ impl CoresetKMedoids {
             metric: Metric::SqEuclidean,
             coreset_size: None,
             label_pass: false,
+            resume: None,
         }
+    }
+
+    /// Reject a checkpoint that does not match this fit configuration
+    /// (see `ParallelKMedoids::validate_resume` for the rationale).
+    fn validate_resume(&self, r: &FitResume, dims: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            r.algorithm == CORESET_EVENT_NAME,
+            "resume checkpoint was written by '{}' but this fit is '{CORESET_EVENT_NAME}'",
+            r.algorithm
+        );
+        anyhow::ensure!(
+            r.metric == self.metric,
+            "resume checkpoint metric '{}' does not match fit metric '{}'",
+            r.metric.name(),
+            self.metric.name()
+        );
+        anyhow::ensure!(
+            r.seed == self.params.seed,
+            "resume checkpoint seed {} does not match fit seed {} (rerun with --seed {})",
+            r.seed,
+            self.params.seed,
+            r.seed
+        );
+        anyhow::ensure!(
+            r.medoids.len() == self.params.k,
+            "resume checkpoint has {} medoids but k = {}",
+            r.medoids.len(),
+            self.params.k
+        );
+        anyhow::ensure!(
+            r.medoids.iter().all(|m| m.dims() == dims),
+            "resume checkpoint medoids are not {dims}-dimensional like the data"
+        );
+        let (reps, weights) = r
+            .coreset
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("resume checkpoint carries no coreset pool"))?;
+        anyhow::ensure!(!reps.is_empty(), "resume checkpoint coreset pool is empty");
+        anyhow::ensure!(
+            reps.len() == weights.len() && reps.iter().all(|p| p.dims() == dims),
+            "resume checkpoint coreset pool is malformed"
+        );
+        Ok(())
     }
 
     /// Run the constant-round pipeline. Iteration events cover the
@@ -108,50 +156,89 @@ impl CoresetKMedoids {
         let n_splits = input.splits().len().max(1);
         let per_split = per_split_budget(target, n_splits, k);
 
-        // ---- jobs 1+2: per-split coresets, merged + compressed --------------
-        let job = JobSpec::new(
-            "kmedoids-coreset",
-            input.clone(),
-            Arc::new(CoresetMapper {
-                backend: self.backend.clone(),
-                metric: self.metric,
-                per_split,
-                seed: self.params.seed,
-            }),
-        )
-        .with_reducer(
-            Arc::new(CoresetMergeReducer {
-                backend: self.backend.clone(),
-                metric: self.metric,
-                dims,
-                target,
-                seed: self.params.seed,
-            }),
-            1,
-        );
-        let result = cluster.try_run_job(&job)?;
-        let mut dist_evals = result.counters.get("work.dist.evals");
+        // ---- jobs 1+2 + recluster — or the restored checkpoint state --------
+        // On resume the pool, medoids, and counters come from the
+        // checkpoint; the construction jobs and the recluster are
+        // skipped entirely (their cost is carried in the counters).
+        let cands: Vec<Point>;
+        let weights: Vec<f64>;
+        let mut medoids: Vec<Point>;
+        let start_iter: usize;
+        let start_cost: f64;
+        let mut dist_evals: u64;
+        let sim_offset: f64;
+        let already_converged: bool;
+        let mut local_evals: u64;
+        match &self.resume {
+            Some(r) => {
+                self.validate_resume(r, dims)?;
+                let (reps, ws) = r.coreset.clone().expect("validated above");
+                cands = reps;
+                weights = ws;
+                medoids = r.medoids.clone();
+                start_iter = r.iteration;
+                start_cost = r.cost;
+                dist_evals = r.dist_evals;
+                sim_offset = r.sim_seconds;
+                already_converged = r.converged;
+                local_evals = 0u64;
+            }
+            None => {
+                let job = JobSpec::new(
+                    "kmedoids-coreset",
+                    input.clone(),
+                    Arc::new(CoresetMapper {
+                        backend: self.backend.clone(),
+                        metric: self.metric,
+                        per_split,
+                        seed: self.params.seed,
+                    }),
+                )
+                .with_reducer(
+                    Arc::new(CoresetMergeReducer {
+                        backend: self.backend.clone(),
+                        metric: self.metric,
+                        dims,
+                        target,
+                        seed: self.params.seed,
+                    }),
+                    1,
+                );
+                let result = cluster.try_run_job(&job)?;
+                dist_evals = result.counters.get("work.dist.evals");
 
-        anyhow::ensure!(result.output.len() == 1, "coreset merge must emit one weighted run");
-        let merged = PackedPoints::weighted(dims, [result.output[0].1.as_slice()]);
-        let mut cands: Vec<Point> = Vec::with_capacity(merged.len());
-        let mut weights: Vec<f64> = Vec::with_capacity(merged.len());
-        for i in 0..merged.len() {
-            cands.push(merged.get(i));
-            weights.push(merged.weight(i) as f64);
+                anyhow::ensure!(
+                    result.output.len() == 1,
+                    "coreset merge must emit one weighted run"
+                );
+                let merged = PackedPoints::weighted(dims, [result.output[0].1.as_slice()]);
+                let mut pts: Vec<Point> = Vec::with_capacity(merged.len());
+                let mut ws: Vec<f64> = Vec::with_capacity(merged.len());
+                for i in 0..merged.len() {
+                    pts.push(merged.get(i));
+                    ws.push(merged.weight(i) as f64);
+                }
+                anyhow::ensure!(!pts.is_empty(), "coreset job produced no representatives");
+
+                // Driver-side weighted recluster of the coreset to k medoids.
+                let mut rng = Rng::new(self.params.seed ^ 0xC05E);
+                medoids = recluster_candidates(&pts, &ws, k, points, &mut rng, self.metric);
+                local_evals = (k as u64) * pts.len() as u64;
+                cands = pts;
+                weights = ws;
+                start_iter = 0;
+                start_cost = f64::INFINITY;
+                sim_offset = 0.0;
+                already_converged = false;
+            }
         }
-        anyhow::ensure!(!cands.is_empty(), "coreset job produced no representatives");
-
-        // ---- driver: weighted recluster + refinement on the coreset ---------
-        let mut rng = Rng::new(self.params.seed ^ 0xC05E);
-        let mut medoids = recluster_candidates(&cands, &weights, k, points, &mut rng, self.metric);
-        let mut local_evals = (k as u64) * cands.len() as u64;
 
         let weights_f32: Vec<f32> = weights.iter().map(|&w| w as f32).collect();
         let iter_cap = self.params.fixed_iters.unwrap_or(self.params.max_iters).max(1);
-        let mut iterations = 0usize;
-        let mut cost = f64::INFINITY;
-        for _iter in 0..iter_cap {
+        let mut iterations = start_iter;
+        let mut cost = start_cost;
+        let first_iter = if already_converged { iter_cap } else { start_iter };
+        for _iter in first_iter..iter_cap {
             iterations += 1;
             let step = weighted_refine_step(
                 self.backend.as_ref(),
@@ -184,15 +271,31 @@ impl CoresetKMedoids {
             let secs = cluster.cost.cpu_seconds(master, &work);
             cluster.advance_secs(secs);
             dist_evals += evals_now;
+            let converged_now = self.params.fixed_iters.is_none() && (unchanged || cost_flat);
             hub.iteration(&IterationEvent {
                 algorithm: CORESET_EVENT_NAME,
                 iteration: iterations,
                 cost,
                 medoid_drift: drift,
-                sim_seconds: cluster.now().0 - t_start,
+                sim_seconds: sim_offset + (cluster.now().0 - t_start),
                 dist_evals,
             });
-            if self.params.fixed_iters.is_none() && (unchanged || cost_flat) {
+            // Resumable snapshot: the weighted pool rides along so a
+            // resumed run can skip the construction jobs entirely.
+            hub.checkpoint(&FitCheckpoint {
+                algorithm: CORESET_EVENT_NAME,
+                metric: self.metric,
+                seed: self.params.seed,
+                k,
+                iteration: iterations,
+                cost,
+                sim_seconds: sim_offset + (cluster.now().0 - t_start),
+                dist_evals,
+                converged: converged_now,
+                medoids: &medoids,
+                coreset: Some((&cands, &weights)),
+            });
+            if converged_now {
                 break;
             }
         }
@@ -230,7 +333,7 @@ impl CoresetKMedoids {
             labels,
             cost: total_cost,
             iterations,
-            sim_seconds: cluster.now().0 - t_start,
+            sim_seconds: sim_offset + (cluster.now().0 - t_start),
             dist_evals,
         })
     }

@@ -140,6 +140,7 @@ impl ParallelKMeans {
                 metric: self.metric,
                 label_pass: false,
                 event_label: Some("kmeans-mr"),
+                resume: None,
             };
             return drv.run_observed(cluster, input, points, hub);
         }

@@ -24,9 +24,11 @@ pub mod seeding;
 pub use api::{
     Clarans, ClaransBuilder, KMeans, KMeansBuilder, KMedoids, KMedoidsBuilder, SpatialClusterer,
 };
-pub use observe::{IterationEvent, IterationLog, IterationObserver, ObserverHub, StderrProgress};
+pub use observe::{
+    FitCheckpoint, IterationEvent, IterationLog, IterationObserver, ObserverHub, StderrProgress,
+};
 
-use crate::geo::Point;
+use crate::geo::{Metric, Point};
 
 /// How a reducer picks the next medoid of a cluster.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -96,6 +98,40 @@ impl IterParams {
         // for the Exact strategy).
         IterParams { k, max_iters: 30, rel_tol: 1e-3, fixed_iters: None, seed }
     }
+}
+
+/// Restored mid-fit state a solver continues from instead of seeding —
+/// the engine-facing form of a loaded [`crate::persist::Checkpoint`]
+/// (convert with `Checkpoint::to_resume`). The MR drivers validate it
+/// against their own configuration (algorithm name, metric, seed, k,
+/// dims) and then skip seeding/coreset construction entirely: because
+/// every per-iteration RNG stream is reseeded from the base seed, a
+/// resumed run replays the exact byte-for-byte trajectory of the
+/// uninterrupted one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitResume {
+    /// Algorithm the checkpoint was written by (`Algorithm::name`
+    /// vocabulary); must match the resuming solver.
+    pub algorithm: String,
+    /// Metric of the checkpointed fit; must match the resuming solver.
+    pub metric: Metric,
+    /// Base seed of the checkpointed fit; must match the resuming solver.
+    pub seed: u64,
+    /// Completed outer iterations.
+    pub iteration: usize,
+    /// Cost at the checkpoint boundary.
+    pub cost: f64,
+    /// Simulated seconds already consumed (added to resumed telemetry).
+    pub sim_seconds: f64,
+    /// Distance evaluations already performed.
+    pub dist_evals: u64,
+    /// Whether the fit had already converged at this boundary; a resumed
+    /// converged fit runs no further iterations.
+    pub converged: bool,
+    /// Medoids at the boundary.
+    pub medoids: Vec<Point>,
+    /// Weighted coreset pool (required to resume the coreset driver).
+    pub coreset: Option<(Vec<Point>, Vec<f64>)>,
 }
 
 /// Initialization flavor (the paper's §3.1 ablation axis, plus the

@@ -10,6 +10,7 @@
 //! after the last iteration event.
 
 use super::ClusterOutcome;
+use crate::geo::{Metric, Point};
 use std::cell::RefCell;
 use std::rc::Rc;
 
@@ -35,6 +36,41 @@ pub struct IterationEvent {
     pub dist_evals: u64,
 }
 
+/// A consistent, resumable snapshot of a fit at an iteration boundary,
+/// borrowed from the solver's live state. Emitted through
+/// [`IterationObserver::on_checkpoint`] right after each
+/// [`IterationEvent`], it carries everything a durable checkpoint needs
+/// that the (telemetry-oriented) event does not: the medoid coordinates,
+/// the weighted coreset pool, the base seed, and whether the fit
+/// converged at this boundary (resuming from a converged snapshot must
+/// not run an extra iteration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitCheckpoint<'a> {
+    /// Algorithm name (same vocabulary as `Algorithm::name`).
+    pub algorithm: &'static str,
+    /// Metric the fit runs under.
+    pub metric: Metric,
+    /// Base seed the fit was started with. Every solver RNG stream is
+    /// reseeded per call from this value, so it alone resumes the run.
+    pub seed: u64,
+    /// Cluster count.
+    pub k: usize,
+    /// 1-based outer iteration index (matches the paired event).
+    pub iteration: usize,
+    /// Total cost after this iteration.
+    pub cost: f64,
+    /// Simulated seconds consumed since the fit started.
+    pub sim_seconds: f64,
+    /// Cumulative distance evaluations.
+    pub dist_evals: u64,
+    /// True when the fit's convergence test fired at this boundary.
+    pub converged: bool,
+    /// Current medoids.
+    pub medoids: &'a [Point],
+    /// Weighted coreset pool (coreset driver only): reps + f64 weights.
+    pub coreset: Option<(&'a [Point], &'a [f64])>,
+}
+
 /// Hook receiving the event stream of a fit. All methods default to
 /// no-ops so observers implement only what they need.
 pub trait IterationObserver {
@@ -42,6 +78,11 @@ pub trait IterationObserver {
     fn on_fit_start(&mut self, _algorithm: &'static str, _n_points: usize, _k: usize) {}
     /// One outer iteration completed.
     fn on_iteration(&mut self, _event: &IterationEvent) {}
+    /// A resumable snapshot is available at an iteration boundary
+    /// (emitted right after `on_iteration`). Durable sinks
+    /// ([`crate::persist::CheckpointSink`]) persist it; telemetry
+    /// observers ignore it.
+    fn on_checkpoint(&mut self, _state: &FitCheckpoint<'_>) {}
     /// The fit finished with `outcome`.
     fn on_fit_end(&mut self, _outcome: &ClusterOutcome) {}
     /// The fit aborted with an error after `on_fit_start`. Every fit
@@ -79,6 +120,11 @@ impl ObserverHub {
     pub fn iteration(&mut self, event: &IterationEvent) {
         for o in &mut self.observers {
             o.on_iteration(event);
+        }
+    }
+    pub fn checkpoint(&mut self, state: &FitCheckpoint<'_>) {
+        for o in &mut self.observers {
+            o.on_checkpoint(state);
         }
     }
     pub fn fit_end(&mut self, outcome: &ClusterOutcome) {

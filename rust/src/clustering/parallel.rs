@@ -22,9 +22,9 @@
 //! the update step, and outputs stay byte-identical across compute
 //! thread counts for every `(dims, metric)` pair (enforced by tests).
 
-use super::observe::{IterationEvent, ObserverHub};
+use super::observe::{FitCheckpoint, IterationEvent, ObserverHub};
 use super::seeding::init_mr;
-use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
+use super::{ClusterOutcome, FitResume, Init, IterParams, UpdateStrategy};
 use crate::geo::{Metric, Point, PointSource};
 use crate::mapreduce::{
     Cluster, Input, JobSpec, MapCtx, Mapper, ReduceCtx, Reducer,
@@ -53,6 +53,11 @@ pub struct ParallelKMedoids {
     /// k-means driver when it falls back to medoid updates for
     /// non-Euclidean metrics).
     pub event_label: Option<&'static str>,
+    /// Restored mid-fit state: skip seeding and continue from this
+    /// checkpoint boundary. Because per-iteration RNG streams are
+    /// reseeded from the base seed, the resumed trajectory is
+    /// byte-identical to the uninterrupted one (chaos-harness enforced).
+    pub resume: Option<FitResume>,
 }
 
 impl ParallelKMedoids {
@@ -65,7 +70,44 @@ impl ParallelKMedoids {
             metric: Metric::SqEuclidean,
             label_pass: false,
             event_label: None,
+            resume: None,
         }
+    }
+
+    /// Reject a checkpoint that was not written by this exact fit
+    /// configuration — resuming across algorithm/metric/seed/k/dims
+    /// would silently produce a different (wrong) trajectory.
+    fn validate_resume(&self, r: &FitResume, dims: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            r.algorithm == self.event_name(),
+            "resume checkpoint was written by '{}' but this fit is '{}'",
+            r.algorithm,
+            self.event_name()
+        );
+        anyhow::ensure!(
+            r.metric == self.metric,
+            "resume checkpoint metric '{}' does not match fit metric '{}'",
+            r.metric.name(),
+            self.metric.name()
+        );
+        anyhow::ensure!(
+            r.seed == self.params.seed,
+            "resume checkpoint seed {} does not match fit seed {} (rerun with --seed {})",
+            r.seed,
+            self.params.seed,
+            r.seed
+        );
+        anyhow::ensure!(
+            r.medoids.len() == self.params.k,
+            "resume checkpoint has {} medoids but k = {}",
+            r.medoids.len(),
+            self.params.k
+        );
+        anyhow::ensure!(
+            r.medoids.iter().all(|m| m.dims() == dims),
+            "resume checkpoint medoids are not {dims}-dimensional like the data"
+        );
+        Ok(())
     }
 
     /// Run to convergence on the simulated cluster. Panics on job-level
@@ -114,17 +156,36 @@ impl ParallelKMedoids {
             self.metric.name()
         );
 
-        // §3.2 step (1): initial medoids.
-        let (mut medoids, _seed_s) = init_mr(
-            self.init,
-            cluster,
-            input,
-            points,
-            &self.backend,
-            k,
-            self.params.seed,
-            self.metric,
-        )?;
+        // §3.2 step (1): initial medoids — or, on resume, the restored
+        // checkpoint boundary (seeding is skipped entirely; its cost was
+        // already paid and is carried in the checkpoint's counters).
+        let (mut medoids, start_iter, start_cost, start_evals, sim_offset, already_converged) =
+            match &self.resume {
+                Some(r) => {
+                    self.validate_resume(r, dims)?;
+                    (
+                        r.medoids.clone(),
+                        r.iteration,
+                        r.cost,
+                        r.dist_evals,
+                        r.sim_seconds,
+                        r.converged,
+                    )
+                }
+                None => {
+                    let (medoids, _seed_s) = init_mr(
+                        self.init,
+                        cluster,
+                        input,
+                        points,
+                        &self.backend,
+                        k,
+                        self.params.seed,
+                        self.metric,
+                    )?;
+                    (medoids, 0, f64::INFINITY, 0, 0.0, false)
+                }
+            };
 
         // The paper's medoids file (HBase cell table).
         if cluster.hmaster.table("__medoids__").is_none() {
@@ -133,12 +194,13 @@ impl ParallelKMedoids {
         write_medoids_file(cluster, &medoids);
 
         let n_reduces = k.min(total_reduce_slots(cluster)).max(1);
-        let mut iterations = 0usize;
-        let mut cost = f64::INFINITY;
-        let mut dist_evals = 0u64;
+        let mut iterations = start_iter;
+        let mut cost = start_cost;
+        let mut dist_evals = start_evals;
 
         let iter_cap = self.params.fixed_iters.unwrap_or(self.params.max_iters);
-        for iter in 0..iter_cap {
+        let first_iter = if already_converged { iter_cap } else { start_iter };
+        for iter in first_iter..iter_cap {
             iterations = iter + 1;
             // One shared, immutable medoid slab per iteration: the mapper
             // and reducer hold `Arc` clones instead of deep-copied
@@ -195,15 +257,33 @@ impl ParallelKMedoids {
                 .sum();
             medoids = new_medoids;
             cost = new_cost;
+            let converged_now = self.params.fixed_iters.is_none() && (unchanged || cost_flat);
             hub.iteration(&IterationEvent {
                 algorithm: self.event_name(),
                 iteration: iterations,
                 cost,
                 medoid_drift: drift,
-                sim_seconds: cluster.now().0 - t_start,
+                sim_seconds: sim_offset + (cluster.now().0 - t_start),
                 dist_evals,
             });
-            if self.params.fixed_iters.is_none() && (unchanged || cost_flat) {
+            // A resumable snapshot exists at every iteration boundary;
+            // `converged` must be recorded so that resuming from the
+            // final snapshot runs zero further iterations (one more
+            // `cost_flat` iteration would move the medoids again).
+            hub.checkpoint(&FitCheckpoint {
+                algorithm: self.event_name(),
+                metric: self.metric,
+                seed: self.params.seed,
+                k,
+                iteration: iterations,
+                cost,
+                sim_seconds: sim_offset + (cluster.now().0 - t_start),
+                dist_evals,
+                converged: converged_now,
+                medoids: &medoids,
+                coreset: None,
+            });
+            if converged_now {
                 break;
             }
         }
@@ -226,7 +306,7 @@ impl ParallelKMedoids {
             labels,
             cost,
             iterations,
-            sim_seconds: cluster.now().0 - t_start,
+            sim_seconds: sim_offset + (cluster.now().0 - t_start),
             dist_evals,
         })
     }

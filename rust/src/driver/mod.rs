@@ -20,13 +20,15 @@ pub mod spec;
 pub mod suites;
 
 use crate::clustering::api::{Clarans, KMeans, KMedoids, SpatialClusterer};
-use crate::clustering::{metrics, Init, UpdateStrategy};
+use crate::clustering::{metrics, FitResume, Init, UpdateStrategy};
 use crate::config::ClusterConfig;
 use crate::geo::datasets::SpatialSpec;
 use crate::geo::Metric;
+use crate::persist::CheckpointStore;
 use crate::runtime::ComputeBackend;
 use crate::session::{ClusterSession, DatasetHandle};
 use anyhow::Result;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 /// Algorithm selector (the rows of Fig. 5 plus ablations).
@@ -116,6 +118,16 @@ pub struct Experiment {
     /// *for* this cell ([`run_experiment`], the CLI, spec files); cells
     /// run through [`run_cell`] inherit the session's setting.
     pub threads: usize,
+    /// Persist a durable [`crate::persist::Checkpoint`] after every
+    /// solver iteration into this directory. Applied when a session is
+    /// built *for* this cell (like `threads`); cells run through
+    /// [`run_cell`] inherit the session's observers, but `resume` still
+    /// loads from here.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Continue from the newest checkpoint in `checkpoint_dir` instead
+    /// of seeding fresh (MR K-Medoids algorithms only). The resumed fit
+    /// is byte-identical to the uninterrupted run.
+    pub resume: bool,
 }
 
 impl Experiment {
@@ -138,6 +150,8 @@ impl Experiment {
             with_quality: false,
             fixed_iters: None,
             threads: 1,
+            checkpoint_dir: None,
+            resume: false,
         }
     }
 
@@ -151,7 +165,13 @@ impl Experiment {
     /// mapping from the [`Algorithm`] grid axis onto [`SpatialClusterer`]
     /// implementations.
     pub fn clusterer(&self) -> Box<dyn SpatialClusterer> {
-        match self.algorithm {
+        self.clusterer_with(None).expect("no resume state: builder mapping is infallible")
+    }
+
+    /// [`Experiment::clusterer`] continuing from `resume` when given.
+    /// Only the MR K-Medoids algorithms can resume; the rest refuse.
+    pub fn clusterer_with(&self, resume: Option<FitResume>) -> Result<Box<dyn SpatialClusterer>> {
+        Ok(match self.algorithm {
             Algorithm::KMedoidsPlusPlusMR
             | Algorithm::KMedoidsRandomMR
             | Algorithm::KMedoidsScalableMR => {
@@ -172,6 +192,9 @@ impl Experiment {
                 if let Some(n) = self.fixed_iters {
                     b = b.fixed_iters(n);
                 }
+                if let Some(r) = resume {
+                    b = b.resume(r);
+                }
                 Box::new(b.build())
             }
             Algorithm::KMedoidsCoresetMR => {
@@ -189,29 +212,69 @@ impl Experiment {
                     // constant either way.
                     b = b.fixed_iters(n);
                 }
+                if let Some(r) = resume {
+                    b = b.resume(r);
+                }
                 Box::new(b.build())
             }
-            Algorithm::KMedoidsSerial => Box::new(
-                KMedoids::serial()
-                    .k(self.k)
-                    .seed(self.seed)
-                    .update(self.update)
-                    .metric(self.metric)
-                    .label_pass(self.with_quality)
-                    .build(),
-            ),
-            Algorithm::Clarans => Box::new(
-                Clarans::serial().k(self.k).seed(self.seed).metric(self.metric).build(),
-            ),
-            Algorithm::KMeansMR => Box::new(
-                KMeans::mapreduce()
-                    .plus_plus()
-                    .k(self.k)
-                    .seed(self.seed)
-                    .metric(self.metric)
-                    .build(),
-            ),
+            Algorithm::KMedoidsSerial => {
+                anyhow::ensure!(
+                    resume.is_none(),
+                    "{} cannot resume from a checkpoint (only the MR K-Medoids drivers \
+                     emit and restore checkpoints)",
+                    self.algorithm.name()
+                );
+                Box::new(
+                    KMedoids::serial()
+                        .k(self.k)
+                        .seed(self.seed)
+                        .update(self.update)
+                        .metric(self.metric)
+                        .label_pass(self.with_quality)
+                        .build(),
+                )
+            }
+            Algorithm::Clarans => {
+                anyhow::ensure!(
+                    resume.is_none(),
+                    "{} cannot resume from a checkpoint (only the MR K-Medoids drivers \
+                     emit and restore checkpoints)",
+                    self.algorithm.name()
+                );
+                Box::new(Clarans::serial().k(self.k).seed(self.seed).metric(self.metric).build())
+            }
+            Algorithm::KMeansMR => {
+                anyhow::ensure!(
+                    resume.is_none(),
+                    "{} cannot resume from a checkpoint (only the MR K-Medoids drivers \
+                     emit and restore checkpoints)",
+                    self.algorithm.name()
+                );
+                Box::new(
+                    KMeans::mapreduce()
+                        .plus_plus()
+                        .k(self.k)
+                        .seed(self.seed)
+                        .metric(self.metric)
+                        .build(),
+                )
+            }
+        })
+    }
+
+    /// Load the newest checkpoint from [`Experiment::checkpoint_dir`]
+    /// when [`Experiment::resume`] is set; `Ok(None)` otherwise. Typed
+    /// [`crate::persist::PersistError`]s from the store (no checkpoint,
+    /// corruption) surface through the `anyhow` chain.
+    pub fn resolve_resume(&self) -> Result<Option<FitResume>> {
+        if !self.resume {
+            return Ok(None);
         }
+        let dir = self.checkpoint_dir.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("resume requires checkpoint_dir (nowhere to load a snapshot from)")
+        })?;
+        let (_, ck) = CheckpointStore::open(dir)?.latest()?;
+        Ok(Some(ck.to_resume()))
     }
 }
 
@@ -251,7 +314,7 @@ pub fn run_cell(
         session.config().nodes.len()
     );
     let wall0 = std::time::Instant::now();
-    let outcome = exp.clusterer().fit(session, data)?;
+    let outcome = exp.clusterer_with(exp.resolve_resume()?)?.fit(session, data)?;
 
     let ari = if exp.with_quality {
         let truth = session.dataset_truth(data).ok_or_else(|| {
@@ -291,13 +354,15 @@ pub fn run_cell(
 /// [`run_cell`] instead, paying cluster construction and ingest once.
 pub fn run_experiment(exp: &Experiment, backend: &Arc<dyn ComputeBackend>) -> ExperimentResult {
     let wall0 = std::time::Instant::now();
-    let mut session = ClusterSession::builder()
+    let mut builder = ClusterSession::builder()
         .cluster(ClusterConfig::paper_cluster().cluster_subset(exp.n_nodes))
         .backend(backend.clone())
         .seed(exp.seed)
-        .threads(exp.threads)
-        .build()
-        .expect("session build cannot fail with an explicit backend");
+        .threads(exp.threads);
+    if let Some(dir) = &exp.checkpoint_dir {
+        builder = builder.checkpoint_dir(dir.clone());
+    }
+    let mut session = builder.build().unwrap_or_else(|e| panic!("session build failed: {e:#}"));
     let data = session.ingest_spec("points", &exp.spec);
     let mut r = run_cell(&mut session, exp, &data)
         .unwrap_or_else(|e| panic!("experiment {} failed: {e:#}", exp.algorithm.name()));
@@ -330,6 +395,8 @@ mod tests {
             seed: 71,
             with_quality: true,
             threads: 1,
+            checkpoint_dir: None,
+            resume: false,
         }
     }
 
@@ -448,6 +515,32 @@ mod tests {
             assert!(r.cost > 0.0, "{}", algorithm.name());
             assert_eq!(r.n_points, 3000);
         }
+    }
+
+    #[test]
+    fn checkpointed_cell_resumes_byte_identically() {
+        use crate::util::tempdir::TempDir;
+        let tmp = TempDir::new("driver-resume");
+        let mut exp = quick_exp(Algorithm::KMedoidsPlusPlusMR, 4);
+        exp.checkpoint_dir = Some(tmp.path().to_path_buf());
+        let full = run_experiment(&exp, &be());
+        // Resume from the newest snapshot (the converged final state):
+        // the fit must report the same numbers without re-iterating.
+        exp.resume = true;
+        let resumed = run_experiment(&exp, &be());
+        assert_eq!(resumed.cost.to_bits(), full.cost.to_bits());
+        assert_eq!(resumed.iterations, full.iterations);
+        assert_eq!(resumed.ari, full.ari);
+    }
+
+    #[test]
+    fn resume_without_checkpoint_dir_is_refused() {
+        let mut session = ClusterSession::builder().test(4).seed(71).build().unwrap();
+        let data = session.ingest_spec("pts", &SpatialSpec::new(2000, 3, 71));
+        let mut exp = quick_exp(Algorithm::KMedoidsPlusPlusMR, 4);
+        exp.resume = true;
+        let e = run_cell(&mut session, &exp, &data).unwrap_err();
+        assert!(format!("{e:#}").contains("checkpoint_dir"), "{e:#}");
     }
 
     #[test]

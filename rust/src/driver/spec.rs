@@ -309,6 +309,20 @@ fn algorithm_uses_coreset_size(a: Algorithm) -> bool {
     matches!(a, Algorithm::KMedoidsCoresetMR)
 }
 
+/// Does this algorithm emit / restore durable checkpoints
+/// ([`crate::persist`])? Only the MR k-medoids drivers fire the
+/// per-iteration checkpoint event, so `checkpoint_dir` / `resume` on any
+/// other cell would be silently inert — refused instead.
+fn algorithm_uses_checkpoints(a: Algorithm) -> bool {
+    matches!(
+        a,
+        Algorithm::KMedoidsPlusPlusMR
+            | Algorithm::KMedoidsRandomMR
+            | Algorithm::KMedoidsScalableMR
+            | Algorithm::KMedoidsCoresetMR
+    )
+}
+
 pub fn experiment_to_json(e: &Experiment) -> Json {
     let mut pairs = vec![
         ("algorithm", Json::Str(e.algorithm.name().to_string())),
@@ -355,6 +369,16 @@ pub fn experiment_to_json(e: &Experiment) -> Json {
             },
         ));
     }
+    if algorithm_uses_checkpoints(e.algorithm) {
+        pairs.push((
+            "checkpoint_dir",
+            match &e.checkpoint_dir {
+                Some(p) => Json::Str(p.to_string_lossy().into_owned()),
+                None => Json::Null,
+            },
+        ));
+        pairs.push(("resume", Json::Bool(e.resume)));
+    }
     obj(pairs)
 }
 
@@ -373,6 +397,8 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
             "fixed_iters",
             "oversample",
             "coreset_size",
+            "checkpoint_dir",
+            "resume",
             "dataset",
             "threads",
         ],
@@ -492,6 +518,51 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
             Some(as_pos_usize(v, "coreset_size")?)
         }
     };
+    let checkpoint_dir = match j.get("checkpoint_dir") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            if !algorithm_uses_checkpoints(algorithm) {
+                bail!(SpecError::bad(
+                    "checkpoint_dir",
+                    format!(
+                        "is ignored by algorithm {:?} (only the MR k-medoids drivers emit \
+                         checkpoints) — remove it from the spec cell",
+                        algorithm.name()
+                    ),
+                ));
+            }
+            let s = v
+                .as_str()
+                .ok_or_else(|| SpecError::bad("checkpoint_dir", "must be a directory path"))?;
+            if s.is_empty() {
+                bail!(SpecError::bad("checkpoint_dir", "must not be empty"));
+            }
+            Some(std::path::PathBuf::from(s))
+        }
+    };
+    let resume = match j.get("resume") {
+        Some(v) => {
+            let b = v.as_bool().ok_or_else(|| SpecError::bad("resume", "must be true or false"))?;
+            if b && !algorithm_uses_checkpoints(algorithm) {
+                bail!(SpecError::bad(
+                    "resume",
+                    format!(
+                        "is ignored by algorithm {:?} (only the MR k-medoids drivers restore \
+                         checkpoints) — remove it from the spec cell",
+                        algorithm.name()
+                    ),
+                ));
+            }
+            if b && checkpoint_dir.is_none() {
+                bail!(SpecError::bad(
+                    "resume",
+                    "requires checkpoint_dir (nowhere to load a snapshot from)",
+                ));
+            }
+            b
+        }
+        None => false,
+    };
     let n_nodes = match j.get("nodes") {
         Some(v) => as_pos_usize(v, "nodes")?,
         None => 7,
@@ -519,6 +590,8 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         metric,
         oversample,
         coreset_size,
+        checkpoint_dir,
+        resume,
         seed,
         with_quality,
         fixed_iters,
@@ -735,6 +808,12 @@ mod tests {
                 } else {
                     None
                 };
+                e.checkpoint_dir = if algorithm_uses_checkpoints(algorithm) && i % 2 == 0 {
+                    Some(std::path::PathBuf::from(format!("ckpts/cell-{i}")))
+                } else {
+                    None
+                };
+                e.resume = e.checkpoint_dir.is_some() && i % 4 == 0;
                 e
             })
             .collect()
@@ -987,6 +1066,61 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{e:#}").contains("update"), "{e:#}");
+    }
+
+    #[test]
+    fn checkpoint_keys_parse_and_validate() {
+        let cells = experiments_from_str(
+            r#"{"algorithm": "kmedoids++-mr", "checkpoint_dir": "out/ckpts",
+                "resume": true, "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].checkpoint_dir, Some(std::path::PathBuf::from("out/ckpts")));
+        assert!(cells[0].resume);
+
+        // Null / absent means "no durability"; resume defaults off.
+        let cells = experiments_from_str(
+            r#"{"algorithm": "kmedoids-coreset-mr", "checkpoint_dir": null,
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].checkpoint_dir, None);
+        assert!(!cells[0].resume);
+
+        // resume without a checkpoint_dir has nowhere to load from.
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids-mr", "resume": true, "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.downcast_ref::<SpecError>().unwrap().key(), "resume");
+
+        // Algorithms without checkpoint support refuse both knobs
+        // rather than silently running non-durable.
+        let e = experiments_from_str(
+            r#"{"algorithm": "clarans", "checkpoint_dir": "c", "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("checkpoint_dir"), "{e:#}");
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmeans-mr", "resume": true, "checkpoint_dir": "c",
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("checkpoint_dir"), "{e:#}");
+
+        // Bad shapes are rejected with the offending key.
+        for bad in [
+            r#"{"algorithm": "kmedoids++-mr", "checkpoint_dir": 3,
+                "dataset": {"n_points": 500}}"#,
+            r#"{"algorithm": "kmedoids++-mr", "checkpoint_dir": "",
+                "dataset": {"n_points": 500}}"#,
+            r#"{"algorithm": "kmedoids++-mr", "checkpoint_dir": "c", "resume": "yes",
+                "dataset": {"n_points": 500}}"#,
+        ] {
+            let e = experiments_from_str(bad).unwrap_err();
+            let s = e.downcast_ref::<SpecError>().expect("typed SpecError");
+            assert!(s.key() == "checkpoint_dir" || s.key() == "resume", "{bad}: {s:?}");
+        }
     }
 
     #[test]

@@ -213,11 +213,20 @@ pub struct PerfOpts {
     pub threads: Vec<usize>,
     /// Tiny-n CI mode: one repeat, small kernels, fast by construction.
     pub smoke: bool,
+    /// Durably checkpoint every e2e sweep fit into this directory
+    /// ([`crate::persist`]); CI uploads it as the recovery artifact.
+    pub checkpoint_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for PerfOpts {
     fn default() -> Self {
-        PerfOpts { scale_div: 10, seed: 42, threads: vec![1, 2, 4], smoke: false }
+        PerfOpts {
+            scale_div: 10,
+            seed: 42,
+            threads: vec![1, 2, 4],
+            smoke: false,
+            checkpoint_dir: None,
+        }
     }
 }
 
@@ -297,14 +306,17 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
     let mut rows: Vec<PerfRow> = Vec::new();
     let mut baseline: Option<(Vec<Point>, f64, f64, u64, usize)> = None;
     for &t in &threads {
-        let mut session = ClusterSession::builder()
+        let mut builder = ClusterSession::builder()
             .cluster(ClusterConfig::paper_cluster())
             .nodes(7)
             .backend(backend.clone())
             .seed(opts.seed)
-            .threads(t)
-            .build()
-            .expect("session build cannot fail with an explicit backend");
+            .threads(t);
+        if let Some(dir) = &opts.checkpoint_dir {
+            builder = builder.checkpoint_dir(dir.clone());
+        }
+        let mut session =
+            builder.build().unwrap_or_else(|e| panic!("perf session build failed: {e:#}"));
         let data = session.ingest_points("points", points.clone());
         let solver = exp.clusterer();
         let mut wall_s = f64::INFINITY;
@@ -1091,7 +1103,13 @@ mod tests {
 
     #[test]
     fn perf_suite_smoke_is_consistent() {
-        let opts = PerfOpts { scale_div: 2000, seed: 5, threads: vec![2], smoke: true };
+        let opts = PerfOpts {
+            scale_div: 2000,
+            seed: 5,
+            threads: vec![2],
+            smoke: true,
+            checkpoint_dir: None,
+        };
         let j = perf_suite(&be(), &opts);
         assert_eq!(j.get("bench").unwrap().as_str(), Some("perf"));
         // 1 thread is added automatically as the speedup base.
@@ -1177,7 +1195,13 @@ mod tests {
 
     #[test]
     fn golden_schema_bench_perf_json() {
-        let opts = PerfOpts { scale_div: 2000, seed: 5, threads: vec![2], smoke: true };
+        let opts = PerfOpts {
+            scale_div: 2000,
+            seed: 5,
+            threads: vec![2],
+            smoke: true,
+            checkpoint_dir: None,
+        };
         let j = perf_suite(&be(), &opts);
         assert_exact_keys(
             &j,

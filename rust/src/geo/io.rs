@@ -7,6 +7,27 @@ use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
+/// Typed rejection for a NaN/infinite coordinate in a CSV row. `"nan"`
+/// and `"inf"` parse as valid `f32`s, so without this check they would
+/// sail through ingest and poison every distance kernel downstream.
+/// [`read_csv`] wraps it with `file:line` context; recover the variant
+/// from the `anyhow` chain with `err.downcast_ref::<NonFiniteCoord>()`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NonFiniteCoord {
+    /// 0-based coordinate index within the row.
+    pub index: usize,
+    /// The offending token as written in the file.
+    pub token: String,
+}
+
+impl std::fmt::Display for NonFiniteCoord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "coordinate {} ({:?}) is not finite", self.index, self.token)
+    }
+}
+
+impl std::error::Error for NonFiniteCoord {}
+
 /// Write points as comma-separated coordinate lines. Returns bytes written.
 pub fn write_csv(path: &Path, points: &[Point]) -> Result<u64> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
@@ -58,7 +79,8 @@ pub fn read_csv(path: &Path) -> Result<Vec<Point>> {
 }
 
 /// Parse one coordinate row: 2 to [`MAX_DIMS`] comma/tab/space-separated
-/// floats.
+/// *finite* floats (NaN/inf rows are refused with a typed
+/// [`NonFiniteCoord`]).
 pub fn parse_line(t: &str) -> Result<Point> {
     let mut coords: Vec<f32> = Vec::with_capacity(2);
     for s in t.split(&[',', '\t', ' '][..]).filter(|s| !s.is_empty()) {
@@ -66,6 +88,10 @@ pub fn parse_line(t: &str) -> Result<Point> {
             bail!("more than {MAX_DIMS} coordinates in {t:?}");
         }
         let v: f32 = s.trim().parse().with_context(|| format!("bad coordinate {s:?}"))?;
+        if !v.is_finite() {
+            let e = NonFiniteCoord { index: coords.len(), token: s.trim().to_string() };
+            return Err(e.into());
+        }
         coords.push(v);
     }
     if coords.len() < 2 {
@@ -126,5 +152,35 @@ mod tests {
         assert!(parse_line("1,abc").is_err());
         assert!(parse_line("1").is_err(), "single coordinate rejected");
         assert!(parse_line("1,2,3,4,5,6,7,8,9").is_err(), "more than MAX_DIMS rejected");
+    }
+
+    #[test]
+    fn non_finite_coordinates_are_typed_errors() {
+        for (row, index, token) in
+            [("nan,1", 0, "nan"), ("1,inf", 1, "inf"), ("0,-inf", 1, "-inf"), ("1,2,NaN", 2, "NaN")]
+        {
+            let e = parse_line(row).unwrap_err();
+            assert_eq!(
+                e.downcast_ref::<NonFiniteCoord>(),
+                Some(&NonFiniteCoord { index, token: token.to_string() }),
+                "row {row:?}: {e:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn read_csv_reports_the_offending_line_for_non_finite_rows() {
+        let dir = std::env::temp_dir().join("kmr_io_test_nonfinite");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "1,2\n# comment\n3,nan\n5,6\n").unwrap();
+        let e = read_csv(&path).unwrap_err();
+        assert!(format!("{e:#}").contains(":3"), "must name line 3: {e:#}");
+        assert_eq!(
+            e.downcast_ref::<NonFiniteCoord>(),
+            Some(&NonFiniteCoord { index: 1, token: "nan".to_string() }),
+            "{e:#}"
+        );
+        std::fs::remove_file(&path).ok();
     }
 }

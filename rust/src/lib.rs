@@ -49,6 +49,7 @@ pub mod driver;
 pub mod geo;
 pub mod hbase;
 pub mod mapreduce;
+pub mod persist;
 pub mod prelude;
 pub mod report;
 pub mod runtime;

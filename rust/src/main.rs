@@ -39,7 +39,8 @@ fn main() {
 
 /// Flags that never take a value; they must not swallow a following
 /// positional (`bench --trace fig5` keeps `fig5` as the suite name).
-const BOOL_FLAGS: &[&str] = &["quality", "trace", "smoke", "latlon", "no-faults", "no-speculation"];
+const BOOL_FLAGS: &[&str] =
+    &["quality", "trace", "smoke", "latlon", "no-faults", "no-speculation", "resume"];
 
 /// Tiny flag parser: `--key value` pairs after the subcommand. Unknown
 /// flags are rejected (with a did-you-mean suggestion) by
@@ -175,14 +176,14 @@ USAGE:
                     [--seed S] --out FILE.csv
   kmedoids-mr run   [--algo ALGO] [--nodes N] [--dataset 0|1|2] [--k K]
                     [--metric METRIC] [--dims D] [--oversample L] [--rounds R]
-                    [--coreset-size C] [--scale DIV] [--seed S]
-                    [--backend auto|pjrt|native]
+                    [--coreset-size C] [--checkpoint-dir DIR] [--resume]
+                    [--scale DIV] [--seed S] [--backend auto|pjrt|native]
                     [--threads N] [--quality] [--trace]
   kmedoids-mr run   --spec CELLS.json [--backend auto|pjrt|native] [--trace]
   kmedoids-mr bench table6|fig4|fig5|ablation [--scale DIV] [--seed S]
                     [--threads N] [--trace]
   kmedoids-mr bench perf [--scale DIV] [--seed S] [--threads 1,2,4]
-                    [--out BENCH_perf.json] [--smoke]
+                    [--checkpoint-dir DIR] [--out BENCH_perf.json] [--smoke]
   kmedoids-mr bench scale [--nodes 1,2,4,8,16] [--scale DIV] [--seed S]
                     [--faults N] [--fail-rate X] [--no-faults]
                     [--no-speculation] [--threads N] [--smoke]
@@ -207,6 +208,12 @@ seeding of kmedoids-scalable-mr (defaults: l = 2k, 5 rounds).
 --coreset-size tunes kmedoids-coreset-mr's weighted-representative
 budget (default O(k log n)); the coreset pipeline runs a constant two
 MR jobs regardless of iteration count.
+
+--checkpoint-dir DIR durably checkpoints every MR iteration (atomic
+write-rename, CRC-checked; see README \"Durability & crash recovery\");
+--resume continues the fit from the newest snapshot in DIR instead of
+seeding fresh, reproducing the uninterrupted run's labels, medoids and
+cost bit-for-bit. MR k-medoids algorithms only.
 
 --threads N runs the map/reduce real compute on N worker threads
 (wallclock only — results and simulated time are identical at any N).
@@ -285,13 +292,16 @@ fn run_one_cell(
     if exp.n_nodes < 1 || exp.n_nodes > paper.nodes.len() {
         bail!("nodes must be between 1 and {} (Table 3 cluster)", paper.nodes.len());
     }
-    let mut session = ClusterSession::builder()
+    let mut builder = ClusterSession::builder()
         .cluster(paper)
         .nodes(exp.n_nodes)
         .backend(backend.clone())
         .seed(exp.seed)
-        .threads(exp.threads)
-        .build()?;
+        .threads(exp.threads);
+    if let Some(dir) = &exp.checkpoint_dir {
+        builder = builder.checkpoint_dir(dir.clone());
+    }
+    let mut session = builder.build()?;
     let log = IterationLog::new();
     session.add_observer(Box::new(log.clone()));
     if trace {
@@ -328,7 +338,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         "run",
         &[
             "spec", "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds",
-            "coreset-size", "scale", "seed", "backend", "threads", "quality", "trace",
+            "coreset-size", "checkpoint-dir", "resume", "scale", "seed", "backend", "threads",
+            "quality", "trace",
         ],
     )?;
     args.check_positionals("run", 0)?;
@@ -338,7 +349,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(path) = args.get("spec") {
         for flag in [
             "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds",
-            "coreset-size", "scale", "seed", "quality", "threads",
+            "coreset-size", "checkpoint-dir", "resume", "scale", "seed", "quality", "threads",
         ] {
             if args.has(flag) {
                 bail!("--{flag} conflicts with --spec (put it in the spec file)");
@@ -418,6 +429,27 @@ fn cmd_run(args: &Args) -> Result<()> {
     if exp.threads == 0 {
         bail!("--threads must be >= 1");
     }
+    if args.has("checkpoint-dir") || args.has("resume") {
+        let durable = matches!(
+            algo,
+            Algorithm::KMedoidsPlusPlusMR
+                | Algorithm::KMedoidsRandomMR
+                | Algorithm::KMedoidsScalableMR
+                | Algorithm::KMedoidsCoresetMR
+        );
+        if !durable {
+            bail!(
+                "--checkpoint-dir/--resume only apply to the MR k-medoids algorithms \
+                 (they emit and restore durable checkpoints); --algo {} does not",
+                algo.name()
+            );
+        }
+        if args.has("resume") && !args.has("checkpoint-dir") {
+            bail!("--resume requires --checkpoint-dir (nowhere to load a snapshot from)");
+        }
+        exp.checkpoint_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
+        exp.resume = args.has("resume");
+    }
     run_one_cell(&exp, &backend, trace)?;
     Ok(())
 }
@@ -446,13 +478,16 @@ const SCALE_ONLY_FLAGS: &[&str] =
 /// Flags that only `bench serve` understands.
 const SERVE_ONLY_FLAGS: &[&str] = &["queries", "update-frac", "batch", "coreset-size"];
 
+/// Flags that only `bench perf` understands.
+const PERF_ONLY_FLAGS: &[&str] = &["checkpoint-dir"];
+
 fn cmd_bench(args: &Args) -> Result<()> {
     args.check_known(
         "bench",
         &[
             "scale", "seed", "backend", "trace", "threads", "out", "smoke", "nodes", "faults",
             "fail-rate", "no-faults", "no-speculation", "spec", "queries", "update-frac", "batch",
-            "coreset-size",
+            "coreset-size", "checkpoint-dir",
         ],
     )?;
     args.check_positionals("bench", 1)?;
@@ -477,12 +512,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 bail!("--{flag} only applies to `bench serve`");
             }
         }
+        for flag in PERF_ONLY_FLAGS {
+            if args.has(flag) {
+                bail!("--{flag} only applies to `bench perf`");
+            }
+        }
         return cmd_bench_scale(args);
     }
     if which == "serve" {
         for flag in SCALE_ONLY_FLAGS {
             if *flag != "spec" && args.has(flag) {
                 bail!("--{flag} only applies to `bench scale`");
+            }
+        }
+        for flag in PERF_ONLY_FLAGS {
+            if args.has(flag) {
+                bail!("--{flag} only applies to `bench perf`");
             }
         }
         return cmd_bench_serve(args);
@@ -500,6 +545,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     for flag in SERVE_ONLY_FLAGS {
         if args.has(flag) {
             bail!("--{flag} only applies to `bench serve`");
+        }
+    }
+    for flag in PERF_ONLY_FLAGS {
+        if args.has(flag) {
+            bail!("--{flag} only applies to `bench perf`");
         }
     }
     let suite_threads = args.get_usize("threads", 1)?;
@@ -731,6 +781,7 @@ fn cmd_bench_perf(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 42)?,
         threads,
         smoke,
+        checkpoint_dir: args.get("checkpoint-dir").map(std::path::PathBuf::from),
     };
     // Kernel staging buffers dominate below the block floor; keep the
     // production block size so the bench reflects the mapper's hot path.

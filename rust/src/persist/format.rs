@@ -1,0 +1,491 @@
+//! The on-disk checkpoint format: versioned, CRC-checked, little-endian.
+//!
+//! ## Layout (format version 1)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"KMDC"
+//! 4       4     format version (u32 LE)
+//! 8       8     payload length (u64 LE)
+//! 16      4     CRC-32 of the payload (u32 LE, IEEE polynomial)
+//! 20      ...   payload
+//! ```
+//!
+//! Payload, in order (all little-endian):
+//!
+//! ```text
+//! u16           algorithm name length, then that many UTF-8 bytes
+//! u8            metric code (0 = sq_euclidean, 1 = manhattan, 2 = haversine)
+//! u8            dims
+//! u32           k
+//! u64           iteration (fit) / update count (serve)
+//! f64           sim-clock seconds consumed so far
+//! 4 x u64       RNG state (word 0 carries the base seed; solver streams
+//!               are reseeded per call, so the base seed alone resumes
+//!               every derived stream exactly)
+//! u8            converged flag (0/1)
+//! f64           cost at this boundary
+//! u64           distance evaluations so far
+//! u64           published model epoch (serve; 0 for fits)
+//! u64           WAL sequence number covered by this snapshot (serve)
+//! u32           medoid count, then count x dims f32 coordinates
+//! u8            coreset-present flag; if 1: u32 count, count x dims f32
+//!               coordinates, then count f64 weights
+//! u32           pending-delta count, then count x dims f32 coordinates
+//! ```
+//!
+//! The decoder is *strict*: every read is length-checked (no panicking
+//! [`crate::util::codec::Dec`] here — these bytes come from disk, not
+//! from our own shuffle), the CRC must match, unknown versions are
+//! refused, and trailing bytes after the payload are an error. The
+//! golden test in `rust/tests/crash_recovery.rs` pins this layout
+//! byte-for-byte so any change must bump [`FORMAT_VERSION`].
+
+use crate::clustering::{FitCheckpoint, FitResume};
+use crate::geo::{Metric, Point, MAX_DIMS};
+use crate::persist::PersistError;
+
+/// File magic: "KMDC" (K-MeDoids Checkpoint).
+pub const MAGIC: [u8; 4] = *b"KMDC";
+
+/// Highest checkpoint format version this build reads and writes.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Fixed-size prefix before the payload: magic, version, length, CRC.
+pub const HEADER_LEN: usize = 20;
+
+/// CRC-32 (IEEE 802.3 polynomial, reflected), bitwise — checkpoints are
+/// kilobytes, so a table is not worth vendoring.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn metric_code(m: Metric) -> u8 {
+    match m {
+        Metric::SqEuclidean => 0,
+        Metric::Manhattan => 1,
+        Metric::Haversine => 2,
+    }
+}
+
+fn metric_from_code(c: u8) -> Option<Metric> {
+    match c {
+        0 => Some(Metric::SqEuclidean),
+        1 => Some(Metric::Manhattan),
+        2 => Some(Metric::Haversine),
+        _ => None,
+    }
+}
+
+/// One durable snapshot of a fit or serving session.
+///
+/// Everything needed to resume exactly: identity (algorithm, metric,
+/// dims, k), progress (iteration, cost, sim-clock, distance-evaluation
+/// counters, convergence flag), randomness (base seed in `rng[0]`), the
+/// medoid coordinates, the weighted coreset pool (coreset fits and
+/// serving), and — for serving — the published epoch, the WAL sequence
+/// number this snapshot covers, and any deltas buffered but not yet
+/// folded into the pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub algorithm: String,
+    pub metric: Metric,
+    pub dims: u8,
+    pub k: u32,
+    pub iteration: u64,
+    pub sim_seconds: f64,
+    pub rng: [u64; 4],
+    pub converged: bool,
+    pub cost: f64,
+    pub dist_evals: u64,
+    pub epoch: u64,
+    pub wal_seq: u64,
+    pub medoids: Vec<Point>,
+    pub coreset: Option<(Vec<Point>, Vec<f64>)>,
+    pub pending: Vec<Point>,
+}
+
+impl Checkpoint {
+    /// Snapshot a fit boundary (what [`crate::persist::CheckpointSink`]
+    /// writes on every `on_checkpoint` callback).
+    pub fn from_fit(s: &FitCheckpoint<'_>) -> Checkpoint {
+        Checkpoint {
+            algorithm: s.algorithm.to_string(),
+            metric: s.metric,
+            dims: s.medoids.first().map(|p| p.dims()).unwrap_or(2) as u8,
+            k: s.k as u32,
+            iteration: s.iteration as u64,
+            sim_seconds: s.sim_seconds,
+            rng: [s.seed, 0, 0, 0],
+            converged: s.converged,
+            cost: s.cost,
+            dist_evals: s.dist_evals,
+            epoch: 0,
+            wal_seq: 0,
+            medoids: s.medoids.to_vec(),
+            coreset: s.coreset.map(|(p, w)| (p.to_vec(), w.to_vec())),
+            pending: Vec::new(),
+        }
+    }
+
+    /// The base seed the snapshotted run was started with.
+    pub fn seed(&self) -> u64 {
+        self.rng[0]
+    }
+
+    /// Convert into the engine-facing resume state consumed by
+    /// `KMedoidsBuilder::resume`.
+    pub fn to_resume(&self) -> FitResume {
+        FitResume {
+            algorithm: self.algorithm.clone(),
+            metric: self.metric,
+            seed: self.seed(),
+            iteration: self.iteration as usize,
+            cost: self.cost,
+            sim_seconds: self.sim_seconds,
+            dist_evals: self.dist_evals,
+            converged: self.converged,
+            medoids: self.medoids.clone(),
+            coreset: self.coreset.clone(),
+        }
+    }
+
+    /// Serialize to the on-disk frame (header + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(256 + self.medoids.len() * self.dims as usize * 4);
+        let alg = self.algorithm.as_bytes();
+        assert!(alg.len() <= u16::MAX as usize, "algorithm name too long");
+        p.extend_from_slice(&(alg.len() as u16).to_le_bytes());
+        p.extend_from_slice(alg);
+        p.push(metric_code(self.metric));
+        p.push(self.dims);
+        p.extend_from_slice(&self.k.to_le_bytes());
+        p.extend_from_slice(&self.iteration.to_le_bytes());
+        p.extend_from_slice(&self.sim_seconds.to_le_bytes());
+        for w in self.rng {
+            p.extend_from_slice(&w.to_le_bytes());
+        }
+        p.push(self.converged as u8);
+        p.extend_from_slice(&self.cost.to_le_bytes());
+        p.extend_from_slice(&self.dist_evals.to_le_bytes());
+        p.extend_from_slice(&self.epoch.to_le_bytes());
+        p.extend_from_slice(&self.wal_seq.to_le_bytes());
+        write_points(&mut p, &self.medoids, self.dims);
+        match &self.coreset {
+            None => p.push(0),
+            Some((reps, weights)) => {
+                assert_eq!(reps.len(), weights.len(), "coreset weight per rep");
+                p.push(1);
+                write_points(&mut p, reps, self.dims);
+                for w in weights {
+                    p.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+        }
+        write_points(&mut p, &self.pending, self.dims);
+
+        let mut out = Vec::with_capacity(HEADER_LEN + p.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        out.extend_from_slice(&crc32(&p).to_le_bytes());
+        out.extend_from_slice(&p);
+        out
+    }
+
+    /// Strict deserialization: every failure mode is a specific
+    /// [`PersistError`] variant, never a panic or a silent partial load.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, PersistError> {
+        if bytes.len() < HEADER_LEN {
+            return Err(PersistError::Truncated { need: HEADER_LEN, have: bytes.len() });
+        }
+        if bytes[0..4] != MAGIC {
+            let mut found = [0u8; 4];
+            found.copy_from_slice(&bytes[0..4]);
+            return Err(PersistError::BadMagic { found });
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            return Err(PersistError::UnsupportedVersion {
+                found: version,
+                supported: FORMAT_VERSION,
+            });
+        }
+        let payload_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let stored_crc = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        let have_payload = (bytes.len() - HEADER_LEN) as u64;
+        if payload_len > have_payload {
+            return Err(PersistError::Truncated {
+                need: HEADER_LEN.saturating_add(payload_len.min(usize::MAX as u64) as usize),
+                have: bytes.len(),
+            });
+        }
+        if payload_len < have_payload {
+            return Err(PersistError::Malformed(format!(
+                "{} trailing bytes after payload",
+                have_payload - payload_len
+            )));
+        }
+        let payload = &bytes[HEADER_LEN..];
+        let computed = crc32(payload);
+        if computed != stored_crc {
+            return Err(PersistError::BadCrc { stored: stored_crc, computed });
+        }
+
+        let mut r = Reader::new(payload);
+        let alg_len = r.u16()? as usize;
+        let alg = r.take(alg_len)?;
+        let algorithm = std::str::from_utf8(alg)
+            .map_err(|_| PersistError::Malformed("algorithm name is not UTF-8".into()))?
+            .to_string();
+        let metric = metric_from_code(r.u8()?)
+            .ok_or_else(|| PersistError::Malformed("unknown metric code".into()))?;
+        let dims = r.u8()?;
+        if !(1..=MAX_DIMS as u8).contains(&dims) {
+            return Err(PersistError::Malformed(format!("dims {dims} out of 1..={MAX_DIMS}")));
+        }
+        let k = r.u32()?;
+        let iteration = r.u64()?;
+        let sim_seconds = r.f64()?;
+        let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        let converged = match r.u8()? {
+            0 => false,
+            1 => true,
+            v => return Err(PersistError::Malformed(format!("converged flag {v} not 0/1"))),
+        };
+        let cost = r.f64()?;
+        let dist_evals = r.u64()?;
+        let epoch = r.u64()?;
+        let wal_seq = r.u64()?;
+        let medoids = read_points(&mut r, dims)?;
+        let coreset = match r.u8()? {
+            0 => None,
+            1 => {
+                let reps = read_points(&mut r, dims)?;
+                let mut weights = Vec::with_capacity(reps.len());
+                for _ in 0..reps.len() {
+                    weights.push(r.f64()?);
+                }
+                Some((reps, weights))
+            }
+            v => return Err(PersistError::Malformed(format!("coreset flag {v} not 0/1"))),
+        };
+        let pending = read_points(&mut r, dims)?;
+        if !r.is_empty() {
+            return Err(PersistError::Malformed(format!(
+                "{} unread bytes inside payload",
+                r.remaining()
+            )));
+        }
+        Ok(Checkpoint {
+            algorithm,
+            metric,
+            dims,
+            k,
+            iteration,
+            sim_seconds,
+            rng,
+            converged,
+            cost,
+            dist_evals,
+            epoch,
+            wal_seq,
+            medoids,
+            coreset,
+            pending,
+        })
+    }
+}
+
+fn write_points(out: &mut Vec<u8>, pts: &[Point], dims: u8) {
+    out.extend_from_slice(&(pts.len() as u32).to_le_bytes());
+    for p in pts {
+        debug_assert_eq!(p.dims(), dims as usize, "checkpoint point dims mismatch");
+        for &c in p.coords() {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+}
+
+fn read_points(r: &mut Reader<'_>, dims: u8) -> Result<Vec<Point>, PersistError> {
+    let n = r.u32()? as usize;
+    let mut pts = Vec::with_capacity(n.min(1 << 20));
+    let mut coords = [0f32; MAX_DIMS];
+    for _ in 0..n {
+        for c in coords.iter_mut().take(dims as usize) {
+            *c = r.f32()?;
+        }
+        pts.push(Point::from_slice(&coords[..dims as usize]));
+    }
+    Ok(pts)
+}
+
+/// Length-checked little-endian reader over untrusted bytes. Unlike the
+/// shuffle-path [`crate::util::codec::Dec`] (which panics, because wire
+/// bugs are programmer errors), every read here returns a typed
+/// [`PersistError::Truncated`].
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], PersistError> {
+        if self.remaining() < n {
+            return Err(PersistError::Truncated {
+                need: self.pos + n,
+                have: self.buf.len(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8, PersistError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u16(&mut self) -> Result<u16, PersistError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32, PersistError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64, PersistError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f32(&mut self) -> Result<f32, PersistError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64, PersistError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            algorithm: "kmedoids-mr".into(),
+            metric: Metric::Haversine,
+            dims: 2,
+            k: 3,
+            iteration: 7,
+            sim_seconds: 12.5,
+            rng: [42, 0, 0, 0],
+            converged: false,
+            cost: 123.456,
+            dist_evals: 9_001,
+            epoch: 0,
+            wal_seq: 0,
+            medoids: vec![Point::new(1.0, 2.0), Point::new(3.0, 4.0), Point::new(5.0, 6.0)],
+            coreset: Some((vec![Point::new(0.5, 0.5)], vec![17.0])),
+            pending: vec![Point::new(-1.0, -2.0)],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = sample();
+        assert_eq!(Checkpoint::decode(&ck.encode()).unwrap(), ck);
+        // No coreset, no pending, 3-D.
+        let ck = Checkpoint {
+            algorithm: "kmedoids++-mr".into(),
+            metric: Metric::SqEuclidean,
+            dims: 3,
+            k: 2,
+            coreset: None,
+            pending: Vec::new(),
+            medoids: vec![Point::from_slice(&[1.0, 2.0, 3.0]), Point::from_slice(&[4.0, 5.0, 6.0])],
+            ..sample()
+        };
+        assert_eq!(Checkpoint::decode(&ck.encode()).unwrap(), ck);
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The IEEE CRC-32 check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn truncation_detected_at_every_length() {
+        let bytes = sample().encode();
+        for cut in 0..bytes.len() {
+            let err = Checkpoint::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, PersistError::Truncated { .. }),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().encode();
+        bytes[0] = b'X';
+        assert!(matches!(
+            Checkpoint::decode(&bytes).unwrap_err(),
+            PersistError::BadMagic { found: [b'X', b'M', b'D', b'C'] }
+        ));
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let mut bytes = sample().encode();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert_eq!(
+            Checkpoint::decode(&bytes).unwrap_err(),
+            PersistError::UnsupportedVersion { found: 99, supported: FORMAT_VERSION }
+        );
+    }
+
+    #[test]
+    fn flipped_payload_bit_fails_crc() {
+        let mut bytes = sample().encode();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        assert!(matches!(
+            Checkpoint::decode(&bytes).unwrap_err(),
+            PersistError::BadCrc { .. }
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = sample().encode();
+        bytes.push(0);
+        assert!(matches!(
+            Checkpoint::decode(&bytes).unwrap_err(),
+            PersistError::Malformed(_)
+        ));
+    }
+}

@@ -1,0 +1,114 @@
+//! Durable checkpoint/restore for fits and serving sessions.
+//!
+//! The simulated cluster already survives task retries, speculation, and
+//! node loss (PR 4) — but the *host process* was all-or-nothing: kill a
+//! long `kmedoids-mr` fit or a [`crate::serve::ServeSession`] writer and
+//! every iteration, ingested delta, and published epoch was gone. This
+//! module makes host-process state durable:
+//!
+//! - [`format`]: a versioned, CRC-checked, little-endian binary
+//!   checkpoint format ([`Checkpoint`]) — magic + header (format
+//!   version, algorithm, metric, dims, k, iteration, sim-clock, RNG
+//!   state) and body (medoid coordinates, the weighted coreset pool,
+//!   pending serve deltas). Decoding is strict: truncation, a foreign
+//!   magic, a CRC mismatch, or a future version each yield their own
+//!   [`PersistError`] variant — never a silent partial load.
+//! - [`store`]: [`CheckpointStore`] writes snapshots with tmp-file →
+//!   `fsync` → rename discipline so a crash mid-write can never clobber
+//!   the last good snapshot, and [`CheckpointStore::latest`] falls back
+//!   past a corrupt newest file to the most recent loadable one.
+//! - [`wal`]: [`DeltaWal`], the write-ahead delta log for serving.
+//!   Every ingested delta batch is appended (CRC-framed, `fdatasync`ed)
+//!   *before* it touches in-memory state; on restore the log is replayed
+//!   on top of the latest snapshot to reconstruct the exact published
+//!   epoch. A torn tail (crash mid-append) is tolerated; corruption
+//!   before the tail is a typed error.
+//! - [`sink`]: [`CheckpointSink`], an [`crate::clustering::IterationObserver`]
+//!   that persists a snapshot at every iteration boundary of a fit.
+//!   Attach it with [`crate::session::SessionBuilder::checkpoint_dir`].
+//!
+//! Because the whole engine is deterministic (same seed ⇒ byte-identical
+//! medoids/costs/labels at any thread count), recovery is *provable*,
+//! not probabilistic: `rust/tests/crash_recovery.rs` kills a run at
+//! every iteration and serve-flush boundary, resumes from disk, and
+//! asserts bitwise-identical final labels, costs, medoids, and epochs.
+
+pub mod format;
+pub mod sink;
+pub mod store;
+pub mod wal;
+
+pub use format::{crc32, Checkpoint, FORMAT_VERSION, HEADER_LEN, MAGIC};
+pub use sink::CheckpointSink;
+pub use store::CheckpointStore;
+pub use wal::{DeltaWal, WalRecord};
+
+use std::path::PathBuf;
+
+/// Typed failure modes of the persistence layer.
+///
+/// Carried inside [`anyhow::Error`] chains; recover the variant with
+/// `err.downcast_ref::<PersistError>()` (the same pattern as
+/// `driver::spec::SpecError`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PersistError {
+    /// The file ended before a complete record could be read.
+    Truncated {
+        /// Bytes the decoder needed.
+        need: usize,
+        /// Bytes actually available.
+        have: usize,
+    },
+    /// The first four bytes are not [`MAGIC`] — not a checkpoint file.
+    BadMagic {
+        /// The four bytes actually found.
+        found: [u8; 4],
+    },
+    /// The file declares a format version this build cannot read.
+    UnsupportedVersion {
+        /// Version stamped in the file.
+        found: u32,
+        /// Highest version this build supports ([`FORMAT_VERSION`]).
+        supported: u32,
+    },
+    /// The payload checksum does not match the header — bit rot or a
+    /// partially overwritten file.
+    BadCrc {
+        /// CRC stored in the header.
+        stored: u32,
+        /// CRC computed over the payload actually read.
+        computed: u32,
+    },
+    /// Structurally invalid content inside a frame that passed the CRC
+    /// (impossible dims, unknown metric code, trailing garbage, …).
+    Malformed(String),
+    /// No loadable checkpoint exists in the directory.
+    NoCheckpoint(PathBuf),
+}
+
+impl std::fmt::Display for PersistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PersistError::Truncated { need, have } => {
+                write!(f, "checkpoint truncated: needed {need} bytes, have {have}")
+            }
+            PersistError::BadMagic { found } => {
+                write!(f, "not a checkpoint file: bad magic {found:02x?}")
+            }
+            PersistError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "checkpoint format version {found} not supported (this build reads <= {supported})"
+            ),
+            PersistError::BadCrc { stored, computed } => write!(
+                f,
+                "checkpoint CRC mismatch: header {stored:#010x} vs payload {computed:#010x}"
+            ),
+            PersistError::Malformed(what) => write!(f, "malformed checkpoint: {what}"),
+            PersistError::NoCheckpoint(dir) => {
+                write!(f, "no loadable checkpoint in {}", dir.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}

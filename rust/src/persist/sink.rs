@@ -1,0 +1,75 @@
+//! [`CheckpointSink`]: the observer that makes fits durable.
+//!
+//! Registered by [`crate::session::SessionBuilder::checkpoint_dir`], it
+//! receives the [`FitCheckpoint`] snapshot emitted at every iteration
+//! boundary and persists it through a [`CheckpointStore`]. Observer
+//! callbacks are infallible by contract, so a failed save is reported on
+//! stderr and the fit continues — durability degrades, computation does
+//! not abort.
+
+use crate::clustering::{FitCheckpoint, IterationObserver};
+use crate::persist::format::Checkpoint;
+use crate::persist::store::CheckpointStore;
+
+/// Persists every iteration-boundary snapshot of a fit to disk.
+pub struct CheckpointSink {
+    store: CheckpointStore,
+}
+
+impl CheckpointSink {
+    pub fn new(store: CheckpointStore) -> CheckpointSink {
+        CheckpointSink { store }
+    }
+}
+
+impl IterationObserver for CheckpointSink {
+    fn on_checkpoint(&mut self, state: &FitCheckpoint<'_>) {
+        let ck = Checkpoint::from_fit(state);
+        if let Err(e) = self.store.save(&ck) {
+            eprintln!(
+                "warning: checkpoint save failed at iteration {} ({}): {e:#}",
+                state.iteration,
+                self.store.dir().display()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geo::{Metric, Point};
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn sink_persists_resumable_snapshots() {
+        let tmp = TempDir::new("persist-sink");
+        let store = CheckpointStore::open(tmp.path()).unwrap().keep_all(true);
+        let mut sink = CheckpointSink::new(store.clone());
+        let medoids = [Point::new(1.0, 2.0), Point::new(3.0, 4.0)];
+        for iter in 1..=3usize {
+            sink.on_checkpoint(&FitCheckpoint {
+                algorithm: "kmedoids-mr",
+                metric: Metric::Manhattan,
+                seed: 99,
+                k: 2,
+                iteration: iter,
+                cost: 50.0 / iter as f64,
+                sim_seconds: iter as f64,
+                dist_evals: 1000 * iter as u64,
+                converged: iter == 3,
+                medoids: &medoids,
+                coreset: None,
+            });
+        }
+        assert_eq!(store.files().unwrap().len(), 3);
+        let (_, ck) = store.latest().unwrap();
+        assert_eq!(ck.iteration, 3);
+        assert!(ck.converged);
+        assert_eq!(ck.seed(), 99);
+        let resume = ck.to_resume();
+        assert_eq!(resume.medoids, medoids.to_vec());
+        assert_eq!(resume.algorithm, "kmedoids-mr");
+        assert_eq!(resume.metric, Metric::Manhattan);
+    }
+}

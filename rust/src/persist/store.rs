@@ -1,0 +1,231 @@
+//! [`CheckpointStore`]: atomic snapshot files in a directory.
+//!
+//! Write discipline: serialize to `.tmp-…` in the same directory,
+//! `fsync` the file, then `rename(2)` over the final name (rename within
+//! a directory is atomic on POSIX), and best-effort `fsync` the
+//! directory so the rename itself is durable. A crash at any instant
+//! leaves either the old snapshot set or the new one — never a torn
+//! final file. [`CheckpointStore::latest`] additionally skips past a
+//! corrupt newest file to the most recent loadable snapshot, so even
+//! bit rot in the last write degrades to "resume from one boundary
+//! earlier" instead of "start over".
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::persist::format::Checkpoint;
+use crate::persist::PersistError;
+
+const EXT: &str = "kmdc";
+
+/// A directory of checkpoint snapshots, named `ckpt-<boundary>.kmdc`
+/// (zero-padded, so lexicographic order is boundary order).
+#[derive(Debug, Clone)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+    keep_all: bool,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) a checkpoint directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<CheckpointStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        Ok(CheckpointStore { dir, keep_all: false })
+    }
+
+    /// Keep every snapshot instead of pruning to the newest two. The
+    /// chaos harness uses this to enumerate every kill point; production
+    /// runs keep the default (current + one fallback).
+    pub fn keep_all(mut self, on: bool) -> CheckpointStore {
+        self.keep_all = on;
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Atomically persist `ck` as `ckpt-<iteration>.kmdc` and return the
+    /// final path. Unless [`keep_all`](CheckpointStore::keep_all) is on,
+    /// older snapshots beyond the newest two are pruned afterwards.
+    pub fn save(&self, ck: &Checkpoint) -> Result<PathBuf> {
+        let name = format!("ckpt-{:010}.{EXT}", ck.iteration);
+        let final_path = self.dir.join(&name);
+        let tmp_path = self.dir.join(format!(".tmp-{name}"));
+        let bytes = ck.encode();
+        {
+            let mut f = fs::File::create(&tmp_path)
+                .with_context(|| format!("creating {}", tmp_path.display()))?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp_path, &final_path)
+            .with_context(|| format!("publishing {}", final_path.display()))?;
+        // Make the rename durable; failure here only weakens durability
+        // of the *directory entry*, not correctness of what it names.
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        if !self.keep_all {
+            self.prune(2)?;
+        }
+        Ok(final_path)
+    }
+
+    fn prune(&self, keep: usize) -> Result<()> {
+        let files = self.files()?;
+        if files.len() > keep {
+            for old in &files[..files.len() - keep] {
+                let _ = fs::remove_file(old);
+            }
+        }
+        Ok(())
+    }
+
+    /// All snapshot files, sorted oldest → newest.
+    pub fn files(&self) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {}", self.dir.display()))?
+        {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.starts_with("ckpt-") && name.ends_with(&format!(".{EXT}")) {
+                out.push(path);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Load one snapshot file, strictly: any truncation/corruption is a
+    /// typed [`PersistError`] inside the error chain (recover it with
+    /// `err.downcast_ref::<PersistError>()`).
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes =
+            fs::read(path).with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Checkpoint::decode(&bytes).map_err(|e| {
+            anyhow::Error::new(e).context(format!("loading checkpoint {}", path.display()))
+        })
+    }
+
+    /// The newest loadable snapshot (path + contents). Skips corrupt
+    /// newer files with a warning on stderr; if nothing loads, returns
+    /// the newest file's typed error, or [`PersistError::NoCheckpoint`]
+    /// when the directory holds no snapshots at all.
+    pub fn latest(&self) -> Result<(PathBuf, Checkpoint)> {
+        let files = self.files()?;
+        let mut first_err: Option<anyhow::Error> = None;
+        for path in files.iter().rev() {
+            match Self::load(path) {
+                Ok(ck) => return Ok((path.clone(), ck)),
+                Err(e) => {
+                    eprintln!("warning: skipping unreadable checkpoint {}: {e:#}", path.display());
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        Err(first_err
+            .unwrap_or_else(|| anyhow::Error::new(PersistError::NoCheckpoint(self.dir.clone()))))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geo::{Metric, Point};
+    use crate::util::tempdir::TempDir;
+
+    fn ck(iter: u64) -> Checkpoint {
+        Checkpoint {
+            algorithm: "kmedoids-mr".into(),
+            metric: Metric::SqEuclidean,
+            dims: 2,
+            k: 2,
+            iteration: iter,
+            sim_seconds: iter as f64,
+            rng: [7, 0, 0, 0],
+            converged: false,
+            cost: 10.0 / (iter + 1) as f64,
+            dist_evals: 100 * iter,
+            epoch: 0,
+            wal_seq: 0,
+            medoids: vec![Point::new(iter as f32, 0.0), Point::new(0.0, iter as f32)],
+            coreset: None,
+            pending: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn save_load_latest_roundtrip() {
+        let tmp = TempDir::new("persist-store");
+        let store = CheckpointStore::open(tmp.path()).unwrap();
+        let p1 = store.save(&ck(1)).unwrap();
+        assert_eq!(CheckpointStore::load(&p1).unwrap(), ck(1));
+        store.save(&ck(2)).unwrap();
+        let (path, latest) = store.latest().unwrap();
+        assert_eq!(latest, ck(2));
+        assert!(path.to_string_lossy().contains("ckpt-0000000002"));
+    }
+
+    #[test]
+    fn prunes_to_two_unless_keep_all() {
+        let tmp = TempDir::new("persist-prune");
+        let store = CheckpointStore::open(tmp.path()).unwrap();
+        for i in 1..=5 {
+            store.save(&ck(i)).unwrap();
+        }
+        assert_eq!(store.files().unwrap().len(), 2);
+
+        let tmp2 = TempDir::new("persist-keep");
+        let store2 = CheckpointStore::open(tmp2.path()).unwrap().keep_all(true);
+        for i in 1..=5 {
+            store2.save(&ck(i)).unwrap();
+        }
+        assert_eq!(store2.files().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn latest_falls_back_past_corrupt_newest() {
+        let tmp = TempDir::new("persist-fallback");
+        let store = CheckpointStore::open(tmp.path()).unwrap().keep_all(true);
+        store.save(&ck(1)).unwrap();
+        let newest = store.save(&ck(2)).unwrap();
+        // Torn newest file: truncate it mid-payload.
+        let bytes = fs::read(&newest).unwrap();
+        fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+        let (_, latest) = store.latest().unwrap();
+        assert_eq!(latest, ck(1), "must fall back to the last good snapshot");
+    }
+
+    #[test]
+    fn empty_dir_is_typed_no_checkpoint() {
+        let tmp = TempDir::new("persist-empty");
+        let store = CheckpointStore::open(tmp.path()).unwrap();
+        let err = store.latest().unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<PersistError>(),
+            Some(PersistError::NoCheckpoint(_))
+        ));
+    }
+
+    #[test]
+    fn no_tmp_droppings_after_save() {
+        let tmp = TempDir::new("persist-tmp");
+        let store = CheckpointStore::open(tmp.path()).unwrap();
+        store.save(&ck(1)).unwrap();
+        let leftovers: Vec<_> = fs::read_dir(tmp.path())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".tmp-"))
+            .collect();
+        assert!(leftovers.is_empty());
+    }
+}

@@ -1,0 +1,243 @@
+//! [`DeltaWal`]: the write-ahead delta log behind serving durability.
+//!
+//! Protocol (see `EXPERIMENTS.md` §Recovery protocol):
+//!
+//! 1. [`crate::serve::ServeSession::ingest`] appends every delta batch
+//!    here — CRC-framed, sequence-stamped, `fdatasync`ed — *before* the
+//!    batch touches in-memory state.
+//! 2. Each flush writes a full checkpoint recording the highest WAL
+//!    sequence number folded into it, *then* truncates the log.
+//! 3. Restore loads the newest checkpoint and replays only records with
+//!    `seq > checkpoint.wal_seq`, so a crash between checkpoint and
+//!    truncate cannot double-apply a batch.
+//!
+//! Frame layout per record (little-endian):
+//!
+//! ```text
+//! u32  body length
+//! u32  CRC-32 of the body
+//! body = u64 seq · u8 dims · u32 count · count x dims f32 coords
+//! ```
+//!
+//! A *torn tail* — the file ends inside a frame, the expected result of
+//! a crash mid-append — is tolerated: replay stops at the last complete
+//! record. A CRC mismatch on a *complete* frame is bit rot, and replay
+//! refuses with a typed [`PersistError::BadCrc`].
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::geo::{Point, MAX_DIMS};
+use crate::persist::format::{crc32, Reader};
+use crate::persist::PersistError;
+
+/// One replayed WAL record: the sequence number it was appended under
+/// and the delta batch it carried.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalRecord {
+    pub seq: u64,
+    pub deltas: Vec<Point>,
+}
+
+/// Append-only write-ahead log of serve delta batches.
+#[derive(Debug)]
+pub struct DeltaWal {
+    path: PathBuf,
+    file: File,
+}
+
+impl DeltaWal {
+    /// Open (creating if needed) the log at `path` for appending.
+    pub fn open(path: impl Into<PathBuf>) -> Result<DeltaWal> {
+        let path = path.into();
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        Ok(DeltaWal { path, file })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one delta batch under sequence number `seq` and `fdatasync`
+    /// it — the batch is durable when this returns.
+    pub fn append(&mut self, seq: u64, deltas: &[Point]) -> Result<()> {
+        let dims = deltas.first().map(|p| p.dims()).unwrap_or(2);
+        let mut body = Vec::with_capacity(13 + deltas.len() * dims * 4);
+        body.extend_from_slice(&seq.to_le_bytes());
+        body.push(dims as u8);
+        body.extend_from_slice(&(deltas.len() as u32).to_le_bytes());
+        for p in deltas {
+            debug_assert_eq!(p.dims(), dims, "WAL batch dims mismatch");
+            for &c in p.coords() {
+                body.extend_from_slice(&c.to_le_bytes());
+            }
+        }
+        let mut frame = Vec::with_capacity(8 + body.len());
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&body).to_le_bytes());
+        frame.extend_from_slice(&body);
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to WAL {}", self.path.display()))?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    /// Truncate the log to empty (called *after* a checkpoint has made
+    /// its contents redundant — never before).
+    pub fn reset(&mut self) -> Result<()> {
+        self.file.set_len(0)?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    /// Replay every complete record in `path`, in append order. A
+    /// missing file is an empty log. The torn-tail / bit-rot policy is
+    /// described at the module level.
+    pub fn replay(path: &Path) -> Result<Vec<WalRecord>> {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e).with_context(|| format!("reading WAL {}", path.display())),
+        };
+        let mut out = Vec::new();
+        let mut pos = 0usize;
+        while pos < bytes.len() {
+            if bytes.len() - pos < 8 {
+                break; // torn tail: header incomplete
+            }
+            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            let stored = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+            if bytes.len() - pos - 8 < len {
+                break; // torn tail: body incomplete
+            }
+            let body = &bytes[pos + 8..pos + 8 + len];
+            let computed = crc32(body);
+            if computed != stored {
+                return Err(anyhow::Error::new(PersistError::BadCrc { stored, computed })
+                    .context(format!("WAL {} record at byte {pos}", path.display())));
+            }
+            out.push(decode_body(body).map_err(|e| {
+                anyhow::Error::new(e)
+                    .context(format!("WAL {} record at byte {pos}", path.display()))
+            })?);
+            pos += 8 + len;
+        }
+        Ok(out)
+    }
+}
+
+fn decode_body(body: &[u8]) -> Result<WalRecord, PersistError> {
+    let mut r = Reader::new(body);
+    let seq = r.u64()?;
+    let dims = r.u8()? as usize;
+    if !(1..=MAX_DIMS).contains(&dims) {
+        return Err(PersistError::Malformed(format!("WAL dims {dims} out of 1..={MAX_DIMS}")));
+    }
+    let n = r.u32()? as usize;
+    let mut deltas = Vec::with_capacity(n.min(1 << 20));
+    let mut coords = [0f32; MAX_DIMS];
+    for _ in 0..n {
+        for c in coords.iter_mut().take(dims) {
+            *c = r.f32()?;
+        }
+        deltas.push(Point::from_slice(&coords[..dims]));
+    }
+    if !r.is_empty() {
+        return Err(PersistError::Malformed(format!(
+            "{} unread bytes in WAL record",
+            r.remaining()
+        )));
+    }
+    Ok(WalRecord { seq, deltas })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    fn batch(tag: f32, n: usize) -> Vec<Point> {
+        (0..n).map(|i| Point::new(tag, i as f32)).collect()
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let tmp = TempDir::new("wal-roundtrip");
+        let path = tmp.join("serve.wal");
+        let mut wal = DeltaWal::open(&path).unwrap();
+        wal.append(1, &batch(1.0, 3)).unwrap();
+        wal.append(2, &batch(2.0, 1)).unwrap();
+        wal.append(3, &[]).unwrap();
+        let records = DeltaWal::replay(&path).unwrap();
+        assert_eq!(records.len(), 3);
+        assert_eq!(records[0], WalRecord { seq: 1, deltas: batch(1.0, 3) });
+        assert_eq!(records[1].seq, 2);
+        assert_eq!(records[2].deltas, Vec::new());
+    }
+
+    #[test]
+    fn missing_file_is_empty_log() {
+        let tmp = TempDir::new("wal-missing");
+        assert_eq!(DeltaWal::replay(&tmp.join("nope.wal")).unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn reset_empties_log() {
+        let tmp = TempDir::new("wal-reset");
+        let path = tmp.join("serve.wal");
+        let mut wal = DeltaWal::open(&path).unwrap();
+        wal.append(1, &batch(1.0, 2)).unwrap();
+        wal.reset().unwrap();
+        assert_eq!(DeltaWal::replay(&path).unwrap(), Vec::new());
+        // Appends after reset land in the now-empty file.
+        wal.append(2, &batch(2.0, 1)).unwrap();
+        let records = DeltaWal::replay(&path).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].seq, 2);
+    }
+
+    #[test]
+    fn torn_tail_tolerated_at_every_cut() {
+        let tmp = TempDir::new("wal-torn");
+        let path = tmp.join("serve.wal");
+        let mut wal = DeltaWal::open(&path).unwrap();
+        wal.append(1, &batch(1.0, 2)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let first_len = full.len();
+        wal.append(2, &batch(2.0, 2)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Cut anywhere strictly inside the second frame: replay returns
+        // exactly the first record, no error.
+        for cut in first_len + 1..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let records = DeltaWal::replay(&path).unwrap();
+            assert_eq!(records.len(), 1, "cut at {cut}");
+            assert_eq!(records[0].seq, 1);
+        }
+    }
+
+    #[test]
+    fn mid_file_corruption_is_typed_error() {
+        let tmp = TempDir::new("wal-rot");
+        let path = tmp.join("serve.wal");
+        let mut wal = DeltaWal::open(&path).unwrap();
+        wal.append(1, &batch(1.0, 2)).unwrap();
+        wal.append(2, &batch(2.0, 2)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[10] ^= 0xFF; // flip a bit inside the FIRST record's body
+        std::fs::write(&path, &bytes).unwrap();
+        let err = DeltaWal::replay(&path).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<PersistError>(), Some(PersistError::BadCrc { .. })),
+            "{err:#}"
+        );
+    }
+}

@@ -5,14 +5,17 @@ pub use crate::clustering::api::{
     Clarans, ClaransBuilder, KMeans, KMeansBuilder, KMedoids, KMedoidsBuilder, SpatialClusterer,
 };
 pub use crate::clustering::observe::{
-    IterationEvent, IterationLog, IterationObserver, ObserverHub, StderrProgress,
+    FitCheckpoint, IterationEvent, IterationLog, IterationObserver, ObserverHub, StderrProgress,
 };
-pub use crate::clustering::{ClusterOutcome, Init, IterParams, UpdateStrategy};
+pub use crate::clustering::{ClusterOutcome, FitResume, Init, IterParams, UpdateStrategy};
 pub use crate::config::ClusterConfig;
 pub use crate::driver::{run_experiment, Algorithm, Experiment, ExperimentResult};
 pub use crate::geo::datasets::{generate, SpatialDataset, SpatialSpec};
 pub use crate::geo::{Metric, Point};
+pub use crate::persist::{Checkpoint, CheckpointSink, CheckpointStore, DeltaWal, PersistError};
 pub use crate::runtime::{load_backend, BackendKind, ComputeBackend, NativeBackend};
-pub use crate::serve::{ClusterModel, ModelHandle, ServeConfig, ServeSession, UpdateReport};
+pub use crate::serve::{
+    ClusterModel, IngestError, ModelHandle, ServeConfig, ServeSession, UpdateReport,
+};
 pub use crate::session::{ClusterSession, DatasetHandle, SessionBuilder};
 pub use crate::sim::FaultPlan;

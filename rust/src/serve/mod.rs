@@ -26,6 +26,12 @@
 //!    refined medoids into the handle, emitting
 //!    [`crate::clustering::observe::IterationObserver`] drift events.
 //!
+//! 4. **Durability** — [`ServeSession::attach_persistence`] write-ahead
+//!    logs every ingested batch and checkpoints the full session state
+//!    at each flush ([`crate::persist`]); [`ServeSession::restore`]
+//!    rebuilds the exact published epoch after a crash by replaying the
+//!    log over the newest snapshot.
+//!
 //! `bench serve` (see `driver::suites::serve_suite`) drives a mixed
 //! query/update workload over a thread sweep and records throughput and
 //! p50/p99/p999 assign latencies into `BENCH_serve.json`.
@@ -34,4 +40,6 @@ mod model;
 mod session;
 
 pub use model::{ClusterModel, ModelHandle};
-pub use session::{ServeConfig, ServeSession, UpdateReport, SERVE_EVENT_NAME};
+pub use session::{
+    IngestError, ServeConfig, ServeSession, UpdateReport, SERVE_EVENT_NAME, WAL_FILE,
+};

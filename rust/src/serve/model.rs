@@ -260,10 +260,19 @@ pub struct ModelHandle {
 impl ModelHandle {
     /// Publish `model` as epoch 1 and return the handle readers share.
     pub fn new(model: ClusterModel) -> ModelHandle {
+        ModelHandle::new_at(model, 1)
+    }
+
+    /// Publish `model` as epoch `first_epoch` (clamped to >= 1). This is
+    /// the restore path: a checkpointed serve session republishes its
+    /// snapshot under the epoch it was checkpointed at, so readers see
+    /// the epoch sequence continue across a crash instead of restarting
+    /// at 1.
+    pub fn new_at(model: ClusterModel, first_epoch: u64) -> ModelHandle {
         let handle = ModelHandle {
             current: AtomicPtr::new(std::ptr::null_mut()),
             published: Mutex::new(Vec::new()),
-            next_epoch: AtomicU64::new(1),
+            next_epoch: AtomicU64::new(first_epoch.max(1)),
         };
         handle.publish(model);
         handle
@@ -407,6 +416,15 @@ mod tests {
         // A snapshot loaded before the swaps is still intact.
         assert_eq!(first.epoch(), 1);
         assert_eq!(first.medoids()[0], Point::new(0.0, 0.0));
+    }
+
+    #[test]
+    fn new_at_continues_a_checkpointed_epoch_sequence() {
+        let m = |x: f32| ClusterModel::new(be(), vec![Point::new(x, 0.0)], Metric::SqEuclidean);
+        let handle = ModelHandle::new_at(m(0.0), 7);
+        assert_eq!(handle.epoch(), 7);
+        assert_eq!(handle.publish(m(1.0)), 8);
+        assert_eq!(ModelHandle::new_at(m(0.0), 0).epoch(), 1, "epoch 0 means unpublished");
     }
 
     #[test]

@@ -8,15 +8,52 @@ use crate::clustering::observe::{IterationEvent, IterationObserver, ObserverHub}
 use crate::clustering::seeding::{min_dists_chunked, plus_plus_serial, recluster_candidates};
 use crate::clustering::ClusterOutcome;
 use crate::geo::{Metric, Point, Weighted};
+use crate::persist::{Checkpoint, CheckpointStore, DeltaWal};
 use crate::runtime::ops::{self, assign_weighted};
 use crate::runtime::ComputeBackend;
 use crate::session::{ClusterSession, DatasetHandle};
 use crate::util::rng::Rng;
+use std::path::Path;
 use std::sync::Arc;
 
 /// `algorithm` tag on the [`IterationEvent`]s a serve session emits —
-/// one event per flushed mini-batch.
+/// one event per flushed mini-batch — and on the [`Checkpoint`]s a
+/// durable serve session writes.
 pub const SERVE_EVENT_NAME: &str = "serve-ingest";
+
+/// File name of the write-ahead delta log inside a serve persistence
+/// directory (next to the `ckpt-*.kmdc` snapshots).
+pub const WAL_FILE: &str = "serve.wal";
+
+/// Typed rejection for [`ServeSession::ingest`]: invalid deltas are
+/// refused before any state (write-ahead log, buffer, model) is touched,
+/// so a failed ingest leaves the session exactly as it was. Recover the
+/// variant from the `anyhow` chain with
+/// `err.downcast_ref::<IngestError>()`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum IngestError {
+    /// A delta coordinate is NaN or infinite.
+    NonFinite { index: usize, value: f32 },
+    /// A delta's dimensionality differs from the served model's.
+    DimsMismatch { index: usize, expected: usize, got: usize },
+}
+
+impl std::fmt::Display for IngestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IngestError::NonFinite { index, value } => {
+                write!(f, "delta {index} has a non-finite coordinate ({value})")
+            }
+            IngestError::DimsMismatch { index, expected, got } => write!(
+                f,
+                "delta {index} dims mismatch (model serves {expected}-dimensional points, \
+                 got {got})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
 
 /// Knobs for the online update loop.
 #[derive(Debug, Clone, Copy)]
@@ -82,6 +119,12 @@ pub struct ServeSession {
     updates: usize,
     dist_evals: u64,
     last: Option<UpdateReport>,
+    /// Durability (see [`ServeSession::attach_persistence`]): sequence
+    /// number of the last write-ahead-logged batch, the log itself, and
+    /// the snapshot store. All `None`/0 until persistence is attached.
+    wal_seq: u64,
+    wal: Option<DeltaWal>,
+    store: Option<CheckpointStore>,
 }
 
 impl ServeSession {
@@ -132,12 +175,26 @@ impl ServeSession {
         reps: Vec<Point>,
         weights: Vec<f64>,
     ) -> anyhow::Result<ServeSession> {
+        ServeSession::build(backend, metric, seed, cfg, medoids, reps, weights, 1)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        backend: Arc<dyn ComputeBackend>,
+        metric: Metric,
+        seed: u64,
+        cfg: ServeConfig,
+        medoids: Vec<Point>,
+        reps: Vec<Point>,
+        weights: Vec<f64>,
+        first_epoch: u64,
+    ) -> anyhow::Result<ServeSession> {
         anyhow::ensure!(!reps.is_empty(), "serving needs a non-empty coreset");
         anyhow::ensure!(reps.len() == weights.len(), "reps/weights length mismatch");
         let k = medoids.len();
         let target = cfg.coreset_size.unwrap_or(reps.len()).max(k).max(1);
         let model = ClusterModel::new(backend.clone(), medoids, metric);
-        let handle = Arc::new(ModelHandle::new(model));
+        let handle = Arc::new(ModelHandle::new_at(model, first_epoch));
         Ok(ServeSession {
             backend,
             metric,
@@ -153,7 +210,123 @@ impl ServeSession {
             updates: 0,
             dist_evals: 0,
             last: None,
+            wal_seq: 0,
+            wal: None,
+            store: None,
         })
+    }
+
+    /// Rebuild a serve session from the durable state in `dir`: load the
+    /// newest good checkpoint, republish its medoids under the
+    /// checkpointed epoch (readers see the epoch sequence continue, not
+    /// restart), then replay write-ahead-logged delta batches the
+    /// checkpoint does not cover (`seq > wal_seq`) through the normal
+    /// ingest path — any flushes they trigger republish exactly the
+    /// epochs the crashed session published. Finally persistence is
+    /// re-attached (fresh snapshot, then WAL truncate), so the restored
+    /// session is immediately durable again.
+    ///
+    /// Pass the same `cfg` the crashed session ran with; in particular an
+    /// explicit [`ServeConfig::coreset_size`] keeps the recompression
+    /// threshold — and therefore the replayed epochs — byte-identical.
+    pub fn restore(
+        backend: Arc<dyn ComputeBackend>,
+        cfg: ServeConfig,
+        dir: impl AsRef<Path>,
+    ) -> anyhow::Result<ServeSession> {
+        let dir = dir.as_ref();
+        let store = CheckpointStore::open(dir)?;
+        let (_, ck) = store.latest()?;
+        anyhow::ensure!(
+            ck.algorithm == SERVE_EVENT_NAME,
+            "checkpoint in {} is a {:?} fit snapshot, not a serve snapshot",
+            dir.display(),
+            ck.algorithm
+        );
+        let (reps, weights) = ck
+            .coreset
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("serve checkpoint carries no coreset pool"))?;
+        let mut serve = ServeSession::build(
+            backend,
+            ck.metric,
+            ck.seed(),
+            cfg,
+            ck.medoids.clone(),
+            reps,
+            weights,
+            ck.epoch,
+        )?;
+        serve.updates = ck.iteration as usize;
+        serve.dist_evals = ck.dist_evals;
+        serve.buffer = ck.pending.clone();
+        serve.wal_seq = ck.wal_seq;
+        for rec in DeltaWal::replay(&dir.join(WAL_FILE))? {
+            if rec.seq <= ck.wal_seq {
+                continue; // already folded into the checkpoint
+            }
+            serve.wal_seq = serve.wal_seq.max(rec.seq);
+            serve.ingest(&rec.deltas)?; // persistence not attached: in-memory replay
+        }
+        serve.attach_persistence(dir)?;
+        Ok(serve)
+    }
+
+    /// Make this session durable in `dir` (created if needed): from now
+    /// on every [`ingest`](ServeSession::ingest) write-ahead-logs its
+    /// batch (CRC-framed, `fdatasync`ed) *before* touching in-memory
+    /// state, and every flush writes an atomic [`Checkpoint`] snapshot
+    /// and then truncates the log. Attaching immediately writes a
+    /// snapshot of the current state, so [`ServeSession::restore`] works
+    /// from this instant onward.
+    pub fn attach_persistence(&mut self, dir: impl AsRef<Path>) -> anyhow::Result<()> {
+        let dir = dir.as_ref();
+        self.store = Some(CheckpointStore::open(dir)?);
+        self.wal = Some(DeltaWal::open(dir.join(WAL_FILE))?);
+        self.persist_snapshot()
+    }
+
+    /// Whether [`attach_persistence`](ServeSession::attach_persistence)
+    /// is active.
+    pub fn is_durable(&self) -> bool {
+        self.store.is_some()
+    }
+
+    /// The full durable state of this instant as a [`Checkpoint`].
+    fn checkpoint(&self) -> Checkpoint {
+        let model = self.handle.load();
+        Checkpoint {
+            algorithm: SERVE_EVENT_NAME.to_string(),
+            metric: self.metric,
+            dims: model.dims() as u8,
+            k: self.k as u32,
+            iteration: self.updates as u64,
+            sim_seconds: 0.0,
+            rng: [self.seed, 0, 0, 0],
+            converged: false,
+            cost: self.last.map(|r| r.cost_after).unwrap_or(0.0),
+            dist_evals: self.dist_evals,
+            epoch: model.epoch(),
+            wal_seq: self.wal_seq,
+            medoids: model.medoids().to_vec(),
+            coreset: Some((self.reps.clone(), self.weights.clone())),
+            pending: self.buffer.clone(),
+        }
+    }
+
+    /// Checkpoint-then-truncate: the snapshot is durable on disk before
+    /// the WAL records it covers are dropped. A crash between the two
+    /// steps only leaves already-covered records behind, and replay
+    /// skips `seq <= wal_seq` — a batch can never be applied twice.
+    fn persist_snapshot(&mut self) -> anyhow::Result<()> {
+        let ck = self.checkpoint();
+        if let Some(store) = &self.store {
+            store.save(&ck)?;
+        }
+        if let Some(wal) = &mut self.wal {
+            wal.reset()?;
+        }
+        Ok(())
     }
 
     /// The shared slot readers load snapshots from (clone freely across
@@ -195,12 +368,27 @@ impl ServeSession {
     /// Buffer delta points; every full mini-batch triggers fold →
     /// recompress → refine → epoch swap. Returns how many epochs were
     /// published by this call.
+    ///
+    /// Invalid deltas (wrong dims, NaN/infinite coordinates) are refused
+    /// with a typed [`IngestError`] before any state is touched. With
+    /// persistence attached, the whole batch is write-ahead logged and
+    /// synced before the buffer moves, so a crash at any later instant
+    /// replays it.
     pub fn ingest(&mut self, deltas: &[Point]) -> anyhow::Result<usize> {
         let dims = self.model().dims();
-        anyhow::ensure!(
-            deltas.iter().all(|p| p.dims() == dims),
-            "delta dims mismatch (model serves {dims}-dimensional points)"
-        );
+        for (i, p) in deltas.iter().enumerate() {
+            if p.dims() != dims {
+                let e = IngestError::DimsMismatch { index: i, expected: dims, got: p.dims() };
+                return Err(e.into());
+            }
+            if let Some(c) = p.coords().iter().copied().find(|c| !c.is_finite()) {
+                return Err(IngestError::NonFinite { index: i, value: c }.into());
+            }
+        }
+        if let Some(wal) = &mut self.wal {
+            self.wal_seq += 1;
+            wal.append(self.wal_seq, deltas)?;
+        }
         self.buffer.extend_from_slice(deltas);
         let mut flushed = 0usize;
         while self.buffer.len() >= self.cfg.batch_size {
@@ -308,6 +496,9 @@ impl ServeSession {
             sim_seconds: 0.0, // serving runs off the simulated cluster
             dist_evals: self.dist_evals,
         });
+        if self.store.is_some() {
+            self.persist_snapshot()?;
+        }
         Ok(())
     }
 }
@@ -492,5 +683,66 @@ mod tests {
         let (mut serve, _, _) = serve_fixture(71, ServeConfig::default());
         let err = serve.ingest(&[Point::from_slice(&[1.0, 2.0, 3.0])]).unwrap_err();
         assert!(err.to_string().contains("dims"), "unexpected error: {err:#}");
+        assert!(
+            matches!(
+                err.downcast_ref::<IngestError>(),
+                Some(IngestError::DimsMismatch { index: 0, expected: 2, got: 3 })
+            ),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn non_finite_deltas_rejected_before_any_state_moves() {
+        let (mut serve, _, _) = serve_fixture(73, ServeConfig::default());
+        let pending = serve.pending();
+        let epoch = serve.model().epoch();
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let err = serve.ingest(&[Point::new(1.0, 1.0), Point::new(bad, 0.0)]).unwrap_err();
+            assert!(
+                matches!(
+                    err.downcast_ref::<IngestError>(),
+                    Some(IngestError::NonFinite { index: 1, .. })
+                ),
+                "{err:#}"
+            );
+        }
+        assert_eq!(serve.pending(), pending, "rejected batch must not buffer");
+        assert_eq!(serve.model().epoch(), epoch);
+    }
+
+    #[test]
+    fn restore_reconstructs_the_published_epoch() {
+        use crate::runtime::NativeBackend;
+        use crate::util::tempdir::TempDir;
+
+        let tmp = TempDir::new("serve-restore");
+        let cfg =
+            ServeConfig { batch_size: 64, coreset_size: Some(48), ..ServeConfig::default() };
+        let (mut serve, _, points) = serve_fixture(79, cfg);
+        serve.attach_persistence(tmp.path()).unwrap();
+        assert!(serve.is_durable());
+        let mut rng = Rng::new(79);
+        // Two full mini-batches (each flush checkpoints) plus a partial
+        // tail that survives only through the checkpointed pending buffer.
+        let deltas = jittered(&points, &mut rng, 2 * 64 + 20, 30.0, -10.0);
+        assert_eq!(serve.ingest(&deltas).unwrap(), 2);
+
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(256, 16));
+        let mut restored = ServeSession::restore(backend, cfg, tmp.path()).unwrap();
+        let live = serve.model();
+        let back = restored.model();
+        assert_eq!(back.epoch(), live.epoch(), "epoch sequence must continue, not restart");
+        assert_eq!(back.medoids(), live.medoids(), "medoids must restore bitwise");
+        assert_eq!(restored.pending(), serve.pending());
+        assert_eq!(restored.coreset_len(), serve.coreset_len());
+        assert_eq!(restored.updates(), serve.updates());
+
+        // The restored session continues byte-identically: same deltas in,
+        // same epochs and medoids out.
+        let more = jittered(&points, &mut rng, 2 * 64, -20.0, 40.0);
+        assert_eq!(serve.ingest(&more).unwrap(), restored.ingest(&more).unwrap());
+        assert_eq!(serve.model().epoch(), restored.model().epoch());
+        assert_eq!(serve.model().medoids(), restored.model().medoids());
     }
 }

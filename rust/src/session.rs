@@ -85,6 +85,7 @@ pub struct SessionBuilder {
     threads: usize,
     faults: Option<FaultPlan>,
     max_attempts: usize,
+    checkpoint_dir: Option<std::path::PathBuf>,
 }
 
 impl SessionBuilder {
@@ -152,6 +153,18 @@ impl SessionBuilder {
         self.threads = n.max(1);
         self
     }
+    /// Persist a durable checkpoint (see [`crate::persist`]) after every
+    /// solver iteration into `dir` (created if missing). Equivalent to
+    /// registering a [`crate::persist::CheckpointSink`] observer by hand;
+    /// resume from the newest snapshot with
+    /// [`crate::persist::CheckpointStore::latest`] +
+    /// [`KMedoidsBuilder::resume`].
+    ///
+    /// [`KMedoidsBuilder::resume`]: crate::clustering::api::KMedoidsBuilder::resume
+    pub fn checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
     /// Small homogeneous test cluster + small-block native backend — the
     /// unit-test convenience.
     pub fn test(mut self, n_nodes: usize) -> Self {
@@ -177,13 +190,18 @@ impl SessionBuilder {
         if let Some(plan) = &self.faults {
             cluster.apply_fault_plan(plan);
         }
+        let mut observers = ObserverHub::default();
+        if let Some(dir) = &self.checkpoint_dir {
+            let store = crate::persist::CheckpointStore::open(dir)?;
+            observers.add(Box::new(crate::persist::CheckpointSink::new(store)));
+        }
         Ok(ClusterSession {
             id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
             cluster,
             backend,
             seed: self.seed,
             datasets: Vec::new(),
-            observers: ObserverHub::default(),
+            observers,
         })
     }
 }
@@ -213,6 +231,7 @@ impl ClusterSession {
             threads: 1,
             faults: None,
             max_attempts: crate::mapreduce::DEFAULT_MAX_ATTEMPTS,
+            checkpoint_dir: None,
         }
     }
 

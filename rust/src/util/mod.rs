@@ -9,3 +9,4 @@ pub mod nearest;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
+pub mod tempdir;

@@ -126,6 +126,25 @@ mod tests {
     }
 
     #[test]
+    fn panic_payload_reaches_the_caller_intact() {
+        // The scope join must hand back the *original* payload (not a
+        // stringified copy) and must not deadlock while the remaining
+        // workers drain the counter.
+        #[derive(Debug, PartialEq)]
+        struct Custom(u32);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_map_indexed(4, 64, |i| {
+                if i == 7 {
+                    std::panic::panic_any(Custom(1234));
+                }
+                i
+            })
+        }));
+        let payload = result.expect_err("worker panic must propagate");
+        assert_eq!(payload.downcast_ref::<Custom>(), Some(&Custom(1234)));
+    }
+
+    #[test]
     fn available_threads_is_positive() {
         assert!(available_threads() >= 1);
     }

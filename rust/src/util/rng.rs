@@ -34,6 +34,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24B_AED4_963E_E407))
     }
 
+    /// The generator's four xoshiro256** state words — what a checkpoint
+    /// stores so a stream can be resumed mid-sequence.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from [`Rng::state`] words; the resumed stream
+    /// continues exactly where the captured one left off.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

@@ -1,0 +1,59 @@
+//! Minimal RAII temporary directory (the offline vendor set has no
+//! `tempfile` crate). Used by persistence tests and the crash-recovery
+//! chaos harness.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static NEXT: AtomicU64 = AtomicU64::new(0);
+
+/// A uniquely named directory under the system temp dir, recursively
+/// deleted on drop. Uniqueness comes from the process id plus a
+/// process-wide counter, so concurrent test threads never collide.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `<tmp>/<prefix>-<pid>-<n>`; panics on I/O failure (this is
+    /// test infrastructure — there is no caller to recover).
+    pub fn new(prefix: &str) -> TempDir {
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!("{prefix}-{}-{n}", std::process::id()));
+        std::fs::create_dir_all(&path).expect("creating temp dir");
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// A path inside the directory (not created).
+    pub fn join(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_unique_dirs_and_cleans_up() {
+        let a = TempDir::new("kmr-tempdir");
+        let b = TempDir::new("kmr-tempdir");
+        assert_ne!(a.path(), b.path());
+        assert!(a.path().is_dir());
+        let kept = a.path().to_path_buf();
+        std::fs::write(a.join("x"), b"x").unwrap();
+        drop(a);
+        assert!(!kept.exists(), "drop must remove the tree");
+    }
+}

@@ -1,0 +1,432 @@
+//! Crash-recovery chaos harness (the durability subsystem's headline
+//! proof).
+//!
+//! The whole engine is deterministic — same seed ⇒ byte-identical
+//! medoids, costs, and labels at any thread count — so recovery can be
+//! *proved*, not sampled: this harness "kills" runs at every durable
+//! boundary and asserts the recovered run is bitwise-indistinguishable
+//! from one that was never interrupted.
+//!
+//! - **Fit side**: every MR k-medoids algorithm × metric fits once with
+//!   a keep-everything [`CheckpointSink`], then re-fits from *every*
+//!   snapshot it left behind; labels, cost bits, medoids, iteration and
+//!   distance-evaluation counters must all match the uninterrupted run.
+//! - **Serve side**: a durable [`ServeSession`]'s directory is copied
+//!   after every ingest round (the copy is exactly what a crashed
+//!   process leaves) and restored; epoch, medoids, pending buffer, and
+//!   query answers must match the still-running writer — and continued
+//!   ingestion must stay identical from there on.
+//! - **Corruption**: every damaged-file shape yields its exact typed
+//!   [`PersistError`] through the store, and the store falls back to the
+//!   last good snapshot.
+//! - **Golden layout**: the on-disk byte layout is pinned field by
+//!   field, so any format change must bump `FORMAT_VERSION` on purpose.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use kmedoids_mr::persist::{crc32, FORMAT_VERSION, HEADER_LEN, MAGIC};
+use kmedoids_mr::prelude::*;
+use kmedoids_mr::util::rng::Rng;
+use kmedoids_mr::util::tempdir::TempDir;
+
+const K: usize = 3;
+
+/// Planted dataset matched to the metric: haversine needs (lat, lon)
+/// degree pairs, the others use the planar map-unit cloud.
+fn spec_for(metric: Metric, seed: u64) -> SpatialSpec {
+    let mut spec = if metric == Metric::Haversine {
+        SpatialSpec::latlon(900, K, seed)
+    } else {
+        SpatialSpec::new(900, K, seed)
+    };
+    spec.outlier_frac = 0.0;
+    spec
+}
+
+/// Builder for one cell of the chaos matrix, labels on so resumed runs
+/// can be compared point by point.
+fn solver(algo: &str, metric: Metric, seed: u64) -> KMedoidsBuilder {
+    let b = match algo {
+        "kmedoids-mr" => KMedoids::mapreduce().random_init(),
+        "kmedoids++-mr" => KMedoids::mapreduce().plus_plus(),
+        "kmedoids-coreset-mr" => KMedoids::coreset(),
+        other => panic!("no such algorithm {other}"),
+    };
+    b.k(K).seed(seed).metric(metric).with_labels()
+}
+
+fn fresh_session(seed: u64) -> ClusterSession {
+    ClusterSession::builder().test(4).seed(seed).build().unwrap()
+}
+
+#[test]
+fn every_fit_boundary_resumes_byte_identically() {
+    let seed = 4242;
+    // Controlled iterations pin the boundary count, so the matrix kills
+    // the run at early, middle, and final snapshots for every cell.
+    let iters = 4;
+    for metric in [Metric::SqEuclidean, Metric::Haversine] {
+        for algo in ["kmedoids-mr", "kmedoids++-mr", "kmedoids-coreset-mr"] {
+            let spec = spec_for(metric, seed);
+
+            // The uninterrupted run, snapshotting every boundary.
+            let tmp = TempDir::new("chaos-fit");
+            let store = CheckpointStore::open(tmp.path()).unwrap().keep_all(true);
+            let mut session = fresh_session(seed);
+            session.add_observer(Box::new(CheckpointSink::new(store.clone())));
+            let data = session.ingest_spec("pts", &spec);
+            let full = solver(algo, metric, seed)
+                .fixed_iters(iters)
+                .build()
+                .fit(&mut session, &data)
+                .unwrap();
+
+            let snapshots = store.files().unwrap();
+            assert_eq!(
+                snapshots.len(),
+                iters,
+                "{algo}/{}: one snapshot per controlled iteration",
+                metric.name()
+            );
+
+            // Kill at every boundary: the resumed fit must replay the
+            // exact trajectory of the uninterrupted one.
+            for snap in &snapshots {
+                let ck = CheckpointStore::load(snap).unwrap();
+                assert_eq!(ck.algorithm, algo);
+                let mut session = fresh_session(seed);
+                let data = session.ingest_spec("pts", &spec);
+                let resumed = solver(algo, metric, seed)
+                    .fixed_iters(iters)
+                    .resume(ck.to_resume())
+                    .build()
+                    .fit(&mut session, &data)
+                    .unwrap();
+                let at = format!("{algo}/{} killed after iter {}", metric.name(), ck.iteration);
+                assert_eq!(resumed.medoids, full.medoids, "{at}: medoids diverged");
+                assert_eq!(resumed.labels, full.labels, "{at}: labels diverged");
+                assert_eq!(resumed.cost.to_bits(), full.cost.to_bits(), "{at}: cost bits");
+                assert_eq!(resumed.iterations, full.iterations, "{at}: iteration count");
+                assert_eq!(resumed.dist_evals, full.dist_evals, "{at}: eval accounting");
+            }
+        }
+    }
+}
+
+#[test]
+fn resuming_the_converged_snapshot_runs_zero_further_iterations() {
+    let seed = 4711;
+    let metric = Metric::SqEuclidean;
+    let spec = spec_for(metric, seed);
+
+    let tmp = TempDir::new("chaos-converged");
+    let store = CheckpointStore::open(tmp.path()).unwrap().keep_all(true);
+    let mut session = fresh_session(seed);
+    session.add_observer(Box::new(CheckpointSink::new(store.clone())));
+    let data = session.ingest_spec("pts", &spec);
+    let full = solver("kmedoids++-mr", metric, seed).build().fit(&mut session, &data).unwrap();
+
+    let (_, last) = store.latest().unwrap();
+    assert!(last.converged, "planted clusters must converge within the default iteration cap");
+    assert_eq!(last.iteration as usize, full.iterations);
+
+    // Had the snapshot dropped the converged flag, the resumed run would
+    // execute one more cost-flat iteration and move the medoids again.
+    let mut session = fresh_session(seed);
+    let data = session.ingest_spec("pts", &spec);
+    let resumed = solver("kmedoids++-mr", metric, seed)
+        .resume(last.to_resume())
+        .build()
+        .fit(&mut session, &data)
+        .unwrap();
+    assert_eq!(resumed.iterations, full.iterations, "converged resume must not re-iterate");
+    assert_eq!(resumed.medoids, full.medoids);
+    assert_eq!(resumed.labels, full.labels);
+    assert_eq!(resumed.cost.to_bits(), full.cost.to_bits());
+    assert_eq!(resumed.dist_evals, full.dist_evals);
+}
+
+#[test]
+fn mismatched_resume_state_is_refused_not_replayed() {
+    let seed = 99;
+    let spec = spec_for(Metric::SqEuclidean, seed);
+    let tmp = TempDir::new("chaos-mismatch");
+    let store = CheckpointStore::open(tmp.path()).unwrap();
+    let mut session = fresh_session(seed);
+    session.add_observer(Box::new(CheckpointSink::new(store.clone())));
+    let data = session.ingest_spec("pts", &spec);
+    solver("kmedoids++-mr", Metric::SqEuclidean, seed).build().fit(&mut session, &data).unwrap();
+    let (_, ck) = store.latest().unwrap();
+
+    // Same checkpoint, wrong algorithm / metric / seed: each must refuse
+    // up front instead of silently producing a different trajectory.
+    let cases: [(&str, Metric, u64, &str); 3] = [
+        ("kmedoids-mr", Metric::SqEuclidean, seed, "written by 'kmedoids++-mr'"),
+        ("kmedoids++-mr", Metric::Manhattan, seed, "metric"),
+        ("kmedoids++-mr", Metric::SqEuclidean, seed + 1, "seed"),
+    ];
+    for (algo, metric, fit_seed, needle) in cases {
+        let mut session = fresh_session(seed);
+        let data = session.ingest_spec("pts", &spec);
+        let err = solver(algo, metric, fit_seed)
+            .resume(ck.to_resume())
+            .build()
+            .fit(&mut session, &data)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(needle), "{algo}/{}/{fit_seed}: {msg}", metric.name());
+    }
+}
+
+/// What a crash leaves behind: a point-in-time copy of the durable dir.
+fn snapshot_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_file() {
+            std::fs::copy(&path, dst.join(path.file_name().unwrap())).unwrap();
+        }
+    }
+}
+
+#[test]
+fn serve_restore_matches_the_uninterrupted_writer_at_every_kill_point() {
+    let seed = 77;
+    // Explicit coreset budget: restore needs the same recompression
+    // threshold as the crashed writer to replay byte-identically.
+    let cfg = ServeConfig { batch_size: 64, refine_iters: 2, coreset_size: Some(48) };
+    let spec = spec_for(Metric::SqEuclidean, seed);
+    let dataset = generate(&spec);
+    let mut session = fresh_session(seed);
+    let data = session.ingest("pts", &dataset);
+    let out = solver("kmedoids-coreset-mr", Metric::SqEuclidean, seed)
+        .build()
+        .fit(&mut session, &data)
+        .unwrap();
+    let mut live = ServeSession::from_fit(&session, &data, &out, Metric::SqEuclidean, cfg).unwrap();
+
+    let dir = TempDir::new("chaos-serve");
+    live.attach_persistence(dir.path()).unwrap();
+    assert!(live.is_durable());
+
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::new(256, 16));
+    let snaps = TempDir::new("chaos-serve-snaps");
+    let mut rng = Rng::new(seed);
+    let mut jittered = |n: usize, dx: f32, dy: f32| -> Vec<Point> {
+        (0..n)
+            .map(|_| {
+                let p = dataset.points[rng.below(dataset.points.len())];
+                Point::new(p.x() + dx, p.y() + dy)
+            })
+            .collect()
+    };
+
+    // Six rounds of 40 deltas against a batch size of 64: rounds
+    // alternate between buffering only (state lives in the WAL) and
+    // triggering a flush (state lives in a fresh snapshot), so the kill
+    // points cover both halves of the checkpoint-then-truncate protocol.
+    let probes = jittered(16, 1.5, -1.5);
+    for round in 0..6u64 {
+        let deltas = jittered(40, 40.0 * round as f32, -25.0);
+        live.ingest(&deltas).unwrap();
+
+        // "Crash": all the dead writer leaves is the directory contents.
+        let snap = snaps.join(&format!("kill-{round}"));
+        snapshot_dir(dir.path(), &snap);
+        let restored = ServeSession::restore(backend.clone(), cfg, &snap).unwrap();
+
+        assert_eq!(restored.model().epoch(), live.model().epoch(), "round {round}: epoch");
+        assert_eq!(restored.model().medoids(), live.model().medoids(), "round {round}: medoids");
+        assert_eq!(restored.pending(), live.pending(), "round {round}: pending deltas");
+        assert_eq!(restored.updates(), live.updates(), "round {round}: flush count");
+        assert_eq!(restored.coreset_len(), live.coreset_len(), "round {round}: pool size");
+        for p in &probes {
+            assert_eq!(
+                restored.model().assign(p).0,
+                live.model().assign(p).0,
+                "round {round}: query answers diverged"
+            );
+        }
+    }
+
+    // The restored writer must also *continue* identically — matching at
+    // the instant of the crash is necessary but not sufficient.
+    let mut restored = ServeSession::restore(backend, cfg, &snaps.join("kill-5")).unwrap();
+    let deltas = jittered(2 * 64, -70.0, 70.0);
+    assert_eq!(live.ingest(&deltas).unwrap(), restored.ingest(&deltas).unwrap());
+    assert_eq!(restored.model().epoch(), live.model().epoch());
+    assert_eq!(restored.model().medoids(), live.model().medoids());
+    assert_eq!(restored.updates(), live.updates());
+}
+
+/// A small but fully populated checkpoint for the corruption fixtures.
+fn fixture_checkpoint(iteration: u64) -> Checkpoint {
+    Checkpoint {
+        algorithm: "kmedoids++-mr".into(),
+        metric: Metric::Manhattan,
+        dims: 2,
+        k: 2,
+        iteration,
+        sim_seconds: 12.5,
+        rng: [1234, 0, 0, 0],
+        converged: false,
+        cost: 1.0 / (iteration + 1) as f64,
+        dist_evals: 5000 * iteration,
+        epoch: 2,
+        wal_seq: 9,
+        medoids: vec![Point::new(0.5, -0.5), Point::new(8.0, 8.0)],
+        coreset: Some((vec![Point::new(1.0, 1.0), Point::new(2.0, 2.0)], vec![3.0, 4.0])),
+        pending: vec![Point::new(9.0, -9.0)],
+    }
+}
+
+#[test]
+fn every_corruption_shape_is_a_typed_error_through_the_store() {
+    let tmp = TempDir::new("chaos-corrupt");
+    let store = CheckpointStore::open(tmp.path()).unwrap().keep_all(true);
+    let path = store.save(&fixture_checkpoint(7)).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // File cut off inside the header.
+    std::fs::write(&path, &good[..HEADER_LEN - 2]).unwrap();
+    let err = CheckpointStore::load(&path).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<PersistError>(),
+            Some(PersistError::Truncated { need: HEADER_LEN, have: 18 })
+        ),
+        "{err:#}"
+    );
+
+    // File cut off inside the payload (header promises more bytes).
+    std::fs::write(&path, &good[..good.len() - 5]).unwrap();
+    let err = CheckpointStore::load(&path).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<PersistError>(),
+            Some(PersistError::Truncated { need, have })
+                if *need == good.len() && *have == good.len() - 5
+        ),
+        "{err:#}"
+    );
+
+    // Foreign magic: some other file format dropped into the directory.
+    let mut bad = good.clone();
+    bad[0..4].copy_from_slice(b"\x7fELF");
+    std::fs::write(&path, &bad).unwrap();
+    let err = CheckpointStore::load(&path).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<PersistError>(),
+            Some(PersistError::BadMagic { found }) if found == b"\x7fELF"
+        ),
+        "{err:#}"
+    );
+
+    // A future format version this build cannot read.
+    let mut bad = good.clone();
+    bad[4..8].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    let err = CheckpointStore::load(&path).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<PersistError>(),
+            Some(PersistError::UnsupportedVersion { found, supported })
+                if *found == FORMAT_VERSION + 1 && *supported == FORMAT_VERSION
+        ),
+        "{err:#}"
+    );
+
+    // One flipped payload bit: the CRC must catch it, and the error must
+    // carry both the stored and the recomputed checksum.
+    let mut bad = good.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x40;
+    std::fs::write(&path, &bad).unwrap();
+    let err = CheckpointStore::load(&path).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<PersistError>(),
+            Some(PersistError::BadCrc { stored, computed })
+                if *stored == crc32(&good[HEADER_LEN..]) && *computed == crc32(&bad[HEADER_LEN..])
+        ),
+        "{err:#}"
+    );
+
+    // With only the corrupt file present, `latest` surfaces its typed
+    // error instead of inventing an empty state...
+    let err = store.latest().unwrap_err();
+    assert!(matches!(err.downcast_ref::<PersistError>(), Some(PersistError::BadCrc { .. })));
+
+    // ...and once an older good snapshot exists, it falls back to it.
+    let older = store.save(&fixture_checkpoint(3)).unwrap();
+    let (found, ck) = store.latest().unwrap();
+    assert_eq!(found, older);
+    assert_eq!(ck, fixture_checkpoint(3));
+
+    // Undamaged bytes still load exactly, so the fixtures above failed
+    // for the injected reasons and not some accident of the setup.
+    std::fs::write(&path, &good).unwrap();
+    assert_eq!(CheckpointStore::load(&path).unwrap(), fixture_checkpoint(7));
+}
+
+#[test]
+fn on_disk_byte_layout_is_golden() {
+    let ck = Checkpoint {
+        algorithm: "kmedoids-mr".into(),
+        metric: Metric::Haversine,
+        dims: 2,
+        k: 2,
+        iteration: 7,
+        sim_seconds: 1.5,
+        rng: [42, 0, 0, 0],
+        converged: true,
+        cost: 8.25,
+        dist_evals: 999,
+        epoch: 3,
+        wal_seq: 5,
+        medoids: vec![Point::new(1.0, 2.0), Point::new(-3.5, 4.25)],
+        coreset: None,
+        pending: Vec::new(),
+    };
+    let bytes = ck.encode();
+
+    // Header: magic, version, payload length, payload CRC — 20 bytes.
+    assert_eq!(bytes[0..4], MAGIC);
+    assert_eq!(&bytes[0..4], b"KMDC");
+    assert_eq!(bytes[4..8], FORMAT_VERSION.to_le_bytes());
+    assert_eq!(bytes[4..8], 1u32.to_le_bytes(), "a version bump must be deliberate");
+    let payload = &bytes[HEADER_LEN..];
+    assert_eq!(u64::from_le_bytes(bytes[8..16].try_into().unwrap()), payload.len() as u64);
+    assert_eq!(u32::from_le_bytes(bytes[16..20].try_into().unwrap()), crc32(payload));
+
+    // Payload, field by field, all little-endian at fixed offsets.
+    assert_eq!(payload[0..2], 11u16.to_le_bytes(), "algorithm name length");
+    assert_eq!(&payload[2..13], b"kmedoids-mr");
+    assert_eq!(payload[13], 2, "haversine metric code");
+    assert_eq!(payload[14], 2, "dims");
+    assert_eq!(payload[15..19], 2u32.to_le_bytes(), "k");
+    assert_eq!(payload[19..27], 7u64.to_le_bytes(), "iteration");
+    assert_eq!(payload[27..35], 1.5f64.to_le_bytes(), "sim clock");
+    assert_eq!(payload[35..43], 42u64.to_le_bytes(), "rng word 0 (base seed)");
+    assert_eq!(payload[43..67], [0u8; 24], "rng words 1-3 (reserved)");
+    assert_eq!(payload[67], 1, "converged flag");
+    assert_eq!(payload[68..76], 8.25f64.to_le_bytes(), "cost");
+    assert_eq!(payload[76..84], 999u64.to_le_bytes(), "dist evals");
+    assert_eq!(payload[84..92], 3u64.to_le_bytes(), "epoch");
+    assert_eq!(payload[92..100], 5u64.to_le_bytes(), "wal seq");
+    // Medoids: u32 count, then dims × f32 coordinates per point.
+    assert_eq!(payload[100..104], 2u32.to_le_bytes(), "medoid count");
+    assert_eq!(payload[104..108], 1.0f32.to_le_bytes());
+    assert_eq!(payload[108..112], 2.0f32.to_le_bytes());
+    assert_eq!(payload[112..116], (-3.5f32).to_le_bytes());
+    assert_eq!(payload[116..120], 4.25f32.to_le_bytes());
+    // Tail: no-coreset flag, empty pending list — and nothing after.
+    assert_eq!(payload[120], 0, "coreset flag");
+    assert_eq!(payload[121..125], 0u32.to_le_bytes(), "pending count");
+    assert_eq!(payload.len(), 125, "payload layout changed — bump FORMAT_VERSION");
+
+    // The pinned frame decodes back to the identical checkpoint.
+    assert_eq!(Checkpoint::decode(&bytes).unwrap(), ck);
+}
