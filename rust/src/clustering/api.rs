@@ -43,7 +43,7 @@ use super::kmeans::ParallelKMeans;
 use super::observe::ObserverHub;
 use super::pam::alternating_kmedoids_observed;
 use super::parallel::ParallelKMedoids;
-use super::{ClusterOutcome, FitResume, Init, IterParams, UpdateStrategy};
+use super::{ClusterOutcome, FitResume, Init, IterParams, PruningMode, UpdateStrategy};
 use crate::config::ClusterConfig;
 use crate::geo::Metric;
 use crate::mapreduce::Cluster;
@@ -195,6 +195,10 @@ pub struct KMedoids {
     /// Checkpointed state to continue from instead of seeding fresh
     /// (see [`crate::persist`]); MR exec modes only.
     resume: Option<FitResume>,
+    /// Triangle-inequality pruned assignment lane (byte-identical
+    /// outputs, fewer distance evaluations). `Auto` defers to the
+    /// durability rule in [`PruningMode::enabled`].
+    pruning: PruningMode,
 }
 
 /// Fluent builder for [`KMedoids`].
@@ -222,6 +226,7 @@ impl KMedoids {
                 label_pass: false,
                 coreset_size: None,
                 resume: None,
+                pruning: PruningMode::Auto,
             },
         }
     }
@@ -326,6 +331,14 @@ impl KMedoidsBuilder {
         self.inner.resume = Some(state);
         self
     }
+    /// Assignment-lane selection: `On` forces the pruned lane, `Off` the
+    /// dense kernels, `Auto` (default) prunes unless the fit writes
+    /// checkpoints or resumes from one. Outputs are byte-identical
+    /// either way.
+    pub fn pruning(mut self, mode: PruningMode) -> Self {
+        self.inner.pruning = mode;
+        self
+    }
     pub fn build(self) -> KMedoids {
         self.inner
     }
@@ -337,6 +350,7 @@ impl KMedoids {
         p.max_iters = self.max_iters;
         p.rel_tol = self.rel_tol;
         p.fixed_iters = self.fixed_iters;
+        p.pruning = self.pruning;
         p
     }
 }
@@ -459,6 +473,7 @@ pub struct KMeans {
     metric: Metric,
     max_iters: usize,
     rel_tol: f64,
+    pruning: PruningMode,
 }
 
 /// Fluent builder for [`KMeans`].
@@ -477,6 +492,7 @@ impl KMeans {
                 metric: Metric::SqEuclidean,
                 max_iters: 30,
                 rel_tol: 1e-3,
+                pruning: PruningMode::Auto,
             },
         }
     }
@@ -517,6 +533,11 @@ impl KMeansBuilder {
         self.inner.rel_tol = tol;
         self
     }
+    /// Assignment-lane selection (see [`KMedoidsBuilder::pruning`]).
+    pub fn pruning(mut self, mode: PruningMode) -> Self {
+        self.inner.pruning = mode;
+        self
+    }
     pub fn build(self) -> KMeans {
         self.inner
     }
@@ -544,6 +565,7 @@ impl SpatialClusterer for KMeans {
         let mut params = IterParams::new(self.k, self.seed);
         params.max_iters = self.max_iters;
         params.rel_tol = self.rel_tol;
+        params.pruning = self.pruning;
         let km = ParallelKMeans {
             backend: session.backend(),
             init: self.init,
@@ -755,6 +777,9 @@ mod tests {
         assert_eq!((p.k, p.seed, p.max_iters), (5, 11, 12));
         assert_eq!(p.fixed_iters, Some(6));
         assert_eq!(p.rel_tol, 1e-4);
+        assert_eq!(p.pruning, PruningMode::Auto, "pruning defaults to Auto");
+        let off = KMedoids::mapreduce().pruning(PruningMode::Off).build();
+        assert_eq!(off.iter_params().pruning, PruningMode::Off);
     }
 
     #[test]

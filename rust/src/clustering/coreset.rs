@@ -37,8 +37,8 @@ use crate::geo::{Metric, Point, PointSource, Weighted, WeightedSource};
 use crate::mapreduce::{Cluster, Input, JobSpec, MapCtx, Mapper, ReduceCtx, Reducer};
 use crate::runtime::{
     assign_points,
-    ops::{self, assign_weighted, weighted_pairwise_costs_src},
-    ComputeBackend,
+    ops::{assign_weighted, weighted_pairwise_costs_src},
+    ComputeBackend, PrunedAssigner,
 };
 use crate::sim::TaskWork;
 use crate::util::codec::{encode_cluster_key, encode_weighted_run, Dec, Enc, PackedPoints};
@@ -301,6 +301,17 @@ impl CoresetKMedoids {
         }
 
         // ---- final pass: exact full-data cost (+ labels) --------------------
+        // Same Auto resolution as the iterative driver: durability
+        // (checkpoints or a resume) pins the dense lane so dist_evals
+        // stay comparable across interrupted and uninterrupted runs.
+        let pruned: Option<Arc<PrunedAssigner>> = self
+            .params
+            .pruning
+            .enabled(hub.wants_checkpoints(), self.resume.is_some())
+            .then(|| Arc::new(PrunedAssigner::new(self.metric)));
+        if let Some(pa) = &pruned {
+            pa.begin_epoch(&medoids);
+        }
         let job = JobSpec::new(
             "kmedoids-coreset-cost",
             input.clone(),
@@ -309,6 +320,7 @@ impl CoresetKMedoids {
                 medoids: Arc::from(medoids.as_slice()),
                 metric: self.metric,
                 with_labels: self.label_pass,
+                pruned,
             }),
         );
         let result = cluster.try_run_job(&job)?;
@@ -370,7 +382,7 @@ pub(crate) fn weighted_refine_step(
 ) -> anyhow::Result<RefineStep> {
     let coreset = Weighted::new(cands, weights_f32);
     let assign = assign_weighted(backend, &coreset, medoids, metric)?;
-    let mut dist_evals = ops::assign_dist_evals(cands.len(), medoids.len());
+    let mut dist_evals = assign.dist_evals;
     let cost: f64 = assign.cluster_cost.iter().sum();
     let mut new_medoids = medoids.to_vec();
     for (j, slot) in new_medoids.iter_mut().enumerate() {
@@ -385,14 +397,14 @@ pub(crate) fn weighted_refine_step(
             let mut cand_pts = Vec::with_capacity(idx.len() + 1);
             cand_pts.push(*slot);
             cand_pts.extend_from_slice(&member_pts);
-            let costs =
+            let (costs, evals) =
                 weighted_pairwise_costs_src(backend, cand_pts.as_slice(), &members, metric)?;
-            dist_evals += ops::pairwise_dist_evals(cand_pts.len(), idx.len());
+            dist_evals += evals;
             *slot = cand_pts[argmin_f64(&costs)];
         } else {
-            let costs =
+            let (costs, evals) =
                 weighted_pairwise_costs_src(backend, member_pts.as_slice(), &members, metric)?;
-            dist_evals += ops::pairwise_dist_evals(idx.len(), idx.len());
+            dist_evals += evals;
             *slot = member_pts[argmin_f64(&costs)];
         }
     }
@@ -433,12 +445,13 @@ impl Mapper for CoresetMapper {
             super::seeding::plus_plus_serial(pts, m, &mut rng, self.metric);
         // One kernel pass weights each representative by the split
         // population it captures.
-        let (labels, _) = min_dists_chunked(self.backend.as_ref(), pts, &reps, self.metric);
+        let (labels, _, assign_evals) =
+            min_dists_chunked(self.backend.as_ref(), pts, &reps, self.metric);
         let mut weights = vec![0f32; reps.len()];
         for &l in &labels {
             weights[l as usize] += 1.0;
         }
-        let evals = seed_evals + ops::assign_dist_evals(pts.len(), reps.len());
+        let evals = seed_evals + assign_evals;
         ctx.charge_dist_evals(evals);
         ctx.counters.inc("work.dist.evals", evals);
         ctx.counters.inc("coreset.reps", reps.len() as u64);
@@ -484,8 +497,9 @@ impl Reducer for CoresetMergeReducer {
         // weights only aggregate).
         let mut rng = Rng::new(self.seed ^ 0xC05ED);
         let reps = recluster_candidates(&pts, &ws, self.target, &pts, &mut rng, self.metric);
-        let (labels, _) = min_dists_chunked(self.backend.as_ref(), &pts, &reps, self.metric);
-        let evals = (self.target as u64) * n as u64 + ops::assign_dist_evals(n, reps.len());
+        let (labels, _, assign_evals) =
+            min_dists_chunked(self.backend.as_ref(), &pts, &reps, self.metric);
+        let evals = (self.target as u64) * n as u64 + assign_evals;
         ctx.charge_dist_evals(evals);
         ctx.counters.inc("work.dist.evals", evals);
         let mut new_ws = vec![0f32; reps.len()];
@@ -504,15 +518,20 @@ struct CostLabelMapper {
     medoids: Arc<[Point]>,
     metric: Metric,
     with_labels: bool,
+    /// One-shot pruned lane: bounds start cold, but the shared spatial
+    /// index still caps each resolve at the cell's candidate list.
+    pruned: Option<Arc<PrunedAssigner>>,
 }
 
 impl Mapper for CostLabelMapper {
     fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
-        let res = assign_points(self.backend.as_ref(), pts, &self.medoids, self.metric)
-            .expect("assign kernel failed in coreset cost pass");
-        let evals = ops::assign_dist_evals(pts.len(), self.medoids.len());
-        ctx.charge_dist_evals(evals);
-        ctx.counters.inc("work.dist.evals", evals);
+        let res = match &self.pruned {
+            Some(pa) => pa.assign_split(self.backend.as_ref(), row_start, pts, &self.medoids),
+            None => assign_points(self.backend.as_ref(), pts, &self.medoids, self.metric),
+        }
+        .expect("assign kernel failed in coreset cost pass");
+        ctx.charge_dist_evals(res.dist_evals);
+        ctx.counters.inc("work.dist.evals", res.dist_evals);
         let split_cost: f64 = res.cluster_cost.iter().sum();
         let mut enc = Enc::with_capacity(8 + 4 * pts.len()).f64(split_cost);
         if self.with_labels {

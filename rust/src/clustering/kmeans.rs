@@ -20,7 +20,7 @@ use super::seeding::{oversample_serial, plus_plus_serial, random_init};
 use super::{ClusterOutcome, Init, IterParams, UpdateStrategy};
 use crate::geo::{Metric, Point};
 use crate::mapreduce::{Cluster, Input, JobSpec, MapCtx, Mapper, ReduceCtx, Reducer, Val};
-use crate::runtime::{assign_points, ops, ComputeBackend};
+use crate::runtime::{assign_points, ComputeBackend, PrunedAssigner};
 use crate::util::codec::{decode_cluster_key, decode_point_coords, encode_cluster_key, Dec, Enc};
 use crate::util::rng::Rng;
 use std::sync::Arc;
@@ -28,15 +28,18 @@ use std::sync::Arc;
 struct KMeansMapper {
     backend: Arc<dyn ComputeBackend>,
     centers: Vec<Point>,
+    pruned: Option<Arc<PrunedAssigner>>,
 }
 
 impl Mapper for KMeansMapper {
-    fn map_points(&self, ctx: &mut MapCtx, _row_start: u64, pts: &[Point]) {
-        let res = assign_points(self.backend.as_ref(), pts, &self.centers, Metric::SqEuclidean)
-            .expect("assign kernel failed");
-        let evals = ops::assign_dist_evals(pts.len(), self.centers.len());
-        ctx.charge_dist_evals(evals);
-        ctx.counters.inc("work.dist.evals", evals);
+    fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
+        let res = match &self.pruned {
+            Some(pa) => pa.assign_split(self.backend.as_ref(), row_start, pts, &self.centers),
+            None => assign_points(self.backend.as_ref(), pts, &self.centers, Metric::SqEuclidean),
+        }
+        .expect("assign kernel failed");
+        ctx.charge_dist_evals(res.dist_evals);
+        ctx.counters.inc("work.dist.evals", res.dist_evals);
         let k = self.centers.len();
         let dims = self.centers[0].dims();
         // Per-cluster per-dimension partial sums + counts (combiner-style
@@ -155,15 +158,31 @@ impl ParallelKMeans {
             }
         };
         let dims = centers[0].dims();
+        // Pruned assignment lane (same Auto resolution as the K-Medoids
+        // driver; k-means has no resume path, so only checkpointing can
+        // veto it). Labels, partial sums and cost bits are identical to
+        // the dense lane by construction — only dist_evals shrink.
+        let pruned: Option<Arc<PrunedAssigner>> = self
+            .params
+            .pruning
+            .enabled(hub.wants_checkpoints(), false)
+            .then(|| Arc::new(PrunedAssigner::new(self.metric)));
         let mut cost = f64::INFINITY;
         let mut iterations = 0;
         let mut dist_evals = 0u64;
         for iter in 0..self.params.max_iters {
             iterations = iter + 1;
+            if let Some(pa) = &pruned {
+                pa.begin_epoch(&centers);
+            }
             let job = JobSpec::new(
                 &format!("kmeans-iter{iter}"),
                 input.clone(),
-                Arc::new(KMeansMapper { backend: self.backend.clone(), centers: centers.clone() }),
+                Arc::new(KMeansMapper {
+                    backend: self.backend.clone(),
+                    centers: centers.clone(),
+                    pruned: pruned.clone(),
+                }),
             )
             .with_combiner(Arc::new(MeanReducer { dims }))
             .with_reducer(Arc::new(MeanReducer { dims }), k.min(4).max(1));

@@ -29,6 +29,7 @@ pub use observe::{
 };
 
 use crate::geo::{Metric, Point};
+pub use crate::runtime::pruned::PruningMode;
 
 /// How a reducer picks the next medoid of a cluster.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -89,6 +90,12 @@ pub struct IterParams {
     /// in EXPERIMENTS.md §Method.
     pub fixed_iters: Option<usize>,
     pub seed: u64,
+    /// Triangle-inequality pruned assignment lane
+    /// ([`crate::runtime::PrunedAssigner`]). Outputs are byte-identical
+    /// either way; only `dist_evals` (and therefore simulated time)
+    /// shrink. `Auto` (the default) enables pruning unless the fit
+    /// writes checkpoints or resumes from one.
+    pub pruning: PruningMode,
 }
 
 impl IterParams {
@@ -96,7 +103,14 @@ impl IterParams {
         // rel_tol 1e-3 ≈ the paper's "total cost remains the same" with
         // a sampled update in the loop (exact equality still fires first
         // for the Exact strategy).
-        IterParams { k, max_iters: 30, rel_tol: 1e-3, fixed_iters: None, seed }
+        IterParams {
+            k,
+            max_iters: 30,
+            rel_tol: 1e-3,
+            fixed_iters: None,
+            seed,
+            pruning: PruningMode::Auto,
+        }
     }
 }
 

@@ -89,6 +89,14 @@ pub trait IterationObserver {
     /// ends in exactly one of `on_fit_end` / `on_fit_error`, so stateful
     /// observers can rely on the start/end pairing.
     fn on_fit_error(&mut self, _algorithm: &'static str, _message: &str) {}
+    /// True for durable checkpoint sinks. Solvers consult
+    /// [`ObserverHub::wants_checkpoints`] to resolve
+    /// `PruningMode::Auto`: pruned-lane bounds are not persisted, so a
+    /// checkpointed fit keeps the dense lane to stay byte-identical
+    /// (including `dist_evals`) with a crash-resumed rerun.
+    fn wants_checkpoints(&self) -> bool {
+        false
+    }
 }
 
 /// Fan-out registry for observers, owned by the `ClusterSession` and
@@ -136,6 +144,10 @@ impl ObserverHub {
         for o in &mut self.observers {
             o.on_fit_error(algorithm, message);
         }
+    }
+    /// Does any registered observer persist durable checkpoints?
+    pub fn wants_checkpoints(&self) -> bool {
+        self.observers.iter().any(|o| o.wants_checkpoints())
     }
 }
 

@@ -102,7 +102,7 @@ pub fn alternating_kmedoids_observed(
         // Assignment pass.
         let res = crate::runtime::assign_points(backend, points, &medoids, metric)
             .expect("assign kernel failed");
-        dist_evals += crate::runtime::ops::assign_dist_evals(points.len(), k);
+        dist_evals += res.dist_evals;
         labels.copy_from_slice(&res.labels);
         let new_cost: f64 = res.cluster_cost.iter().sum();
 

@@ -29,7 +29,7 @@ use crate::geo::{Metric, Point, PointSource};
 use crate::mapreduce::{
     Cluster, Input, JobSpec, MapCtx, Mapper, ReduceCtx, Reducer,
 };
-use crate::runtime::{assign_points, ops, pairwise_costs, ComputeBackend};
+use crate::runtime::{assign_points, ops, ComputeBackend, PrunedAssigner};
 use crate::util::codec::{
     decode_cluster_key, decode_point_coords, encode_cluster_key, encode_point_coords, Dec, Enc,
     PackedPoints,
@@ -193,6 +193,16 @@ impl ParallelKMedoids {
         }
         write_medoids_file(cluster, &medoids);
 
+        // Pruned assignment lane: byte-identical labels/cost either way,
+        // fewer distance evaluations. `Auto` keeps the dense lane for
+        // checkpointed/resumed fits so `dist_evals` stays byte-identical
+        // with a crash-resumed rerun (bounds are not persisted).
+        let pruned: Option<Arc<PrunedAssigner>> = self
+            .params
+            .pruning
+            .enabled(hub.wants_checkpoints(), self.resume.is_some())
+            .then(|| Arc::new(PrunedAssigner::new(self.metric)));
+
         let n_reduces = k.min(total_reduce_slots(cluster)).max(1);
         let mut iterations = start_iter;
         let mut cost = start_cost;
@@ -206,6 +216,9 @@ impl ParallelKMedoids {
             // and reducer hold `Arc` clones instead of deep-copied
             // `Vec<Point>`s (§Perf: no per-job medoid duplication).
             let shared_medoids: Arc<[Point]> = Arc::from(medoids.as_slice());
+            if let Some(pa) = &pruned {
+                pa.begin_epoch(&medoids);
+            }
             let job = JobSpec::new(
                 &format!("kmedoids-iter{iter}"),
                 input.clone(),
@@ -213,6 +226,7 @@ impl ParallelKMedoids {
                     backend: self.backend.clone(),
                     medoids: shared_medoids.clone(),
                     metric: self.metric,
+                    pruned: pruned.clone(),
                 }),
             )
             .with_reducer(
@@ -293,8 +307,18 @@ impl ParallelKMedoids {
         // exactly like every iteration's (they are charged to the
         // simulated clock either way — the accounting must agree).
         let labels = if self.label_pass {
-            let (labels, label_evals) =
-                run_label_pass(cluster, input, points, &self.backend, &medoids, self.metric)?;
+            if let Some(pa) = &pruned {
+                pa.begin_epoch(&medoids);
+            }
+            let (labels, label_evals) = run_label_pass(
+                cluster,
+                input,
+                points,
+                &self.backend,
+                &medoids,
+                self.metric,
+                pruned.clone(),
+            )?;
             dist_evals += label_evals;
             Some(labels)
         } else {
@@ -330,14 +354,21 @@ struct AssignMapper {
     /// Shared with the reducer and the driver — no per-job deep copy.
     medoids: Arc<[Point]>,
     metric: Metric,
+    /// Pruned lane (byte-identical output, fewer evals) — `None` runs
+    /// the dense kernels. Split state is keyed by `row_start`, which is
+    /// stable per split across iterations.
+    pruned: Option<Arc<PrunedAssigner>>,
 }
 
 impl Mapper for AssignMapper {
-    fn map_points(&self, ctx: &mut MapCtx, _row_start: u64, pts: &[Point]) {
-        let res = assign_points(self.backend.as_ref(), pts, &self.medoids, self.metric)
-            .expect("assign kernel failed");
-        ctx.charge_dist_evals(ops::assign_dist_evals(pts.len(), self.medoids.len()));
-        ctx.counters.inc("work.dist.evals", ops::assign_dist_evals(pts.len(), self.medoids.len()));
+    fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
+        let res = match &self.pruned {
+            Some(pa) => pa.assign_split(self.backend.as_ref(), row_start, pts, &self.medoids),
+            None => assign_points(self.backend.as_ref(), pts, &self.medoids, self.metric),
+        }
+        .expect("assign kernel failed");
+        ctx.charge_dist_evals(res.dist_evals);
+        ctx.counters.inc("work.dist.evals", res.dist_evals);
 
         // Pack members per cluster straight into the emit byte buffers
         // (same shuffle bytes as per-point emits, no intermediate
@@ -415,9 +446,8 @@ pub fn choose_medoid<M: PointSource + ?Sized>(
     let m = members.len();
     match update {
         UpdateStrategy::Exact => {
-            let costs = ops::pairwise_costs_src(backend, members, members, metric)
+            let (costs, evals) = ops::pairwise_costs_src(backend, members, members, metric)
                 .expect("pairwise kernel");
-            let evals = ops::pairwise_dist_evals(m, m);
             ctx.charge_dist_evals(evals);
             ctx.counters.inc("work.dist.evals", evals);
             members.get(argmin_f64(&costs))
@@ -449,9 +479,9 @@ pub fn choose_medoid<M: PointSource + ?Sized>(
                     .map(|i| members.get(i))
                     .collect()
             };
-            let costs =
-                pairwise_costs(backend, &cands, &sample, metric).expect("pairwise kernel");
-            let evals = ops::pairwise_dist_evals(cands.len(), sample.len());
+            let (costs, evals) =
+                ops::pairwise_costs_src(backend, cands.as_slice(), sample.as_slice(), metric)
+                    .expect("pairwise kernel");
             ctx.charge_dist_evals(evals);
             ctx.counters.inc("work.dist.evals", evals);
             cands[argmin_f64(&costs)]
@@ -507,17 +537,20 @@ struct LabelMapper {
     backend: Arc<dyn ComputeBackend>,
     medoids: Arc<[Point]>,
     metric: Metric,
+    pruned: Option<Arc<PrunedAssigner>>,
 }
 
 impl Mapper for LabelMapper {
     fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
-        let res = assign_points(self.backend.as_ref(), pts, &self.medoids, self.metric)
-            .expect("assign kernel failed");
+        let res = match &self.pruned {
+            Some(pa) => pa.assign_split(self.backend.as_ref(), row_start, pts, &self.medoids),
+            None => assign_points(self.backend.as_ref(), pts, &self.medoids, self.metric),
+        }
+        .expect("assign kernel failed");
         // Charge the sim *and* the work counter — the label pass's evals
         // must reach `ClusterOutcome::dist_evals` like every other pass.
-        let evals = ops::assign_dist_evals(pts.len(), self.medoids.len());
-        ctx.charge_dist_evals(evals);
-        ctx.counters.inc("work.dist.evals", evals);
+        ctx.charge_dist_evals(res.dist_evals);
+        ctx.counters.inc("work.dist.evals", res.dist_evals);
         let mut enc = Enc::with_capacity(4 * pts.len());
         for &l in &res.labels {
             enc = enc.u32(l);
@@ -536,11 +569,17 @@ fn run_label_pass(
     backend: &Arc<dyn ComputeBackend>,
     medoids: &[Point],
     metric: Metric,
+    pruned: Option<Arc<PrunedAssigner>>,
 ) -> anyhow::Result<(Vec<u32>, u64)> {
     let job = JobSpec::new(
         "kmedoids-labels",
         input.clone(),
-        Arc::new(LabelMapper { backend: backend.clone(), medoids: Arc::from(medoids), metric }),
+        Arc::new(LabelMapper {
+            backend: backend.clone(),
+            medoids: Arc::from(medoids),
+            metric,
+            pruned,
+        }),
     );
     let result = cluster.try_run_job(&job)?;
     let mut labels = vec![0u32; points.len()];
@@ -852,7 +891,8 @@ mod tests {
 
     #[test]
     fn label_pass_evals_are_accounted() {
-        let run = |label_pass: bool| {
+        use crate::clustering::PruningMode;
+        let run = |label_pass: bool, pruning: PruningMode| {
             let mut spec = SpatialSpec::new(2000, 4, 13);
             spec.outlier_frac = 0.0;
             let d = generate(&spec);
@@ -860,17 +900,27 @@ mod tests {
             let input = make_input(&points, 5);
             let mut cluster = Cluster::new(ClusterConfig::test_cluster(4), 13);
             let mut driver = ParallelKMedoids::new(backend(), IterParams::new(4, 13));
+            driver.params.pruning = pruning;
             driver.label_pass = label_pass;
             let out = driver.run(&mut cluster, &input, &points);
             (out, cluster.counters.get("work.dist.evals"))
         };
-        let (without, _) = run(false);
-        let (with, session_evals) = run(true);
+        // Dense lane: the exact n×k arithmetic is checkable.
+        let (without, _) = run(false, PruningMode::Off);
+        let (with, session_evals) = run(true, PruningMode::Off);
         // Same fit, plus exactly one n×k labeling scan on top.
         let label_evals = 2000u64 * 4;
         assert_eq!(with.dist_evals, without.dist_evals + label_evals);
         // And the session-level counter agrees with the outcome total.
         assert_eq!(session_evals, with.dist_evals);
+        // Pruned lane: identical fit, strictly fewer assignment evals,
+        // and the session counter still agrees with the outcome.
+        let (pruned, pruned_session) = run(true, PruningMode::On);
+        assert_eq!(pruned.medoids, with.medoids);
+        assert_eq!(pruned.labels, with.labels);
+        assert_eq!(pruned.cost.to_bits(), with.cost.to_bits());
+        assert!(pruned.dist_evals < with.dist_evals);
+        assert_eq!(pruned_session, pruned.dist_evals);
     }
 
     #[test]

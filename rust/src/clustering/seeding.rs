@@ -30,7 +30,7 @@
 use super::Init;
 use crate::geo::{Metric, Point};
 use crate::mapreduce::{Cluster, Input, JobSpec, MapCtx, Mapper};
-use crate::runtime::{assign_points, ops::assign_dist_evals, ComputeBackend};
+use crate::runtime::{assign_points, ComputeBackend};
 use crate::sim::TaskWork;
 use crate::util::codec::{Dec, Enc};
 use crate::util::rng::Rng;
@@ -221,7 +221,7 @@ impl Mapper for SeedRoundMapper {
     fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
         let res = assign_points(self.backend.as_ref(), pts, &self.medoids, self.metric)
             .expect("assign kernel failed in seeding mapper");
-        ctx.charge_dist_evals(assign_dist_evals(pts.len(), self.medoids.len()));
+        ctx.charge_dist_evals(res.dist_evals);
         // Weighted reservoir (one draw ~ D(p)/S within the split).
         let mut rng = Rng::new(self.seed ^ ((self.round as u64) << 32) ^ row_start);
         let mut total = 0.0f64;
@@ -298,18 +298,20 @@ pub fn plus_plus_mr(
 
 /// Min-distance of every point to a candidate set that may exceed the
 /// backend's padded-k capacity: chunked assign calls, elementwise
-/// first-wins merge (labels are global candidate indices).
+/// first-wins merge (labels are global candidate indices). The third
+/// tuple element is the number of distance evaluations performed.
 pub(crate) fn min_dists_chunked(
     be: &dyn ComputeBackend,
     pts: &[Point],
     cands: &[Point],
     metric: Metric,
-) -> (Vec<u32>, Vec<f32>) {
+) -> (Vec<u32>, Vec<f32>, u64) {
     assert!(!cands.is_empty());
     let chunk = be.kpad().max(1);
     let mut labels = vec![0u32; pts.len()];
     let mut best = vec![f32::INFINITY; pts.len()];
     let mut off = 0u32;
+    let mut evals = 0u64;
     for ch in cands.chunks(chunk) {
         let res = assign_points(be, pts, ch, metric).expect("assign kernel failed");
         for i in 0..pts.len() {
@@ -318,9 +320,10 @@ pub(crate) fn min_dists_chunked(
                 labels[i] = off + res.labels[i];
             }
         }
+        evals += res.dist_evals;
         off += ch.len() as u32;
     }
-    (labels, best)
+    (labels, best, evals)
 }
 
 /// Mapper for one || oversampling round: emits
@@ -340,8 +343,9 @@ struct OverSampleRoundMapper {
 
 impl Mapper for OverSampleRoundMapper {
     fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
-        let (_, mindists) = min_dists_chunked(self.backend.as_ref(), pts, &self.cands, self.metric);
-        ctx.charge_dist_evals(assign_dist_evals(pts.len(), self.cands.len()));
+        let (_, mindists, evals) =
+            min_dists_chunked(self.backend.as_ref(), pts, &self.cands, self.metric);
+        ctx.charge_dist_evals(evals);
         let total: f64 = mindists.iter().map(|&d| d as f64).sum();
         let mut drawn: Vec<Point> = Vec::new();
         if self.sample && self.psi > 0.0 {
@@ -373,8 +377,9 @@ struct CandWeightMapper {
 
 impl Mapper for CandWeightMapper {
     fn map_points(&self, ctx: &mut MapCtx, row_start: u64, pts: &[Point]) {
-        let (labels, _) = min_dists_chunked(self.backend.as_ref(), pts, &self.cands, self.metric);
-        ctx.charge_dist_evals(assign_dist_evals(pts.len(), self.cands.len()));
+        let (labels, _, evals) =
+            min_dists_chunked(self.backend.as_ref(), pts, &self.cands, self.metric);
+        ctx.charge_dist_evals(evals);
         let mut counts = vec![0u64; self.cands.len()];
         for &l in &labels {
             counts[l as usize] += 1;
@@ -701,8 +706,9 @@ mod tests {
         let d = generate(&SpatialSpec::new(800, 4, 71));
         let be_small = NativeBackend::new(64, 4); // kpad 4 forces chunking
         let cands: Vec<Point> = d.points[..11].to_vec();
-        let (labels, dists) =
+        let (labels, dists, evals) =
             min_dists_chunked(&be_small, &d.points, &cands, Metric::SqEuclidean);
+        assert_eq!(evals, (d.points.len() * cands.len()) as u64);
         for (i, p) in d.points.iter().enumerate() {
             let (bj, bd) = cands
                 .iter()

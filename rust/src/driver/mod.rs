@@ -20,7 +20,7 @@ pub mod spec;
 pub mod suites;
 
 use crate::clustering::api::{Clarans, KMeans, KMedoids, SpatialClusterer};
-use crate::clustering::{metrics, FitResume, Init, UpdateStrategy};
+use crate::clustering::{metrics, FitResume, Init, PruningMode, UpdateStrategy};
 use crate::config::ClusterConfig;
 use crate::geo::datasets::SpatialSpec;
 use crate::geo::Metric;
@@ -128,6 +128,11 @@ pub struct Experiment {
     /// of seeding fresh (MR K-Medoids algorithms only). The resumed fit
     /// is byte-identical to the uninterrupted run.
     pub resume: bool,
+    /// Assignment-lane selection (`--pruning on|off|auto`): the pruned
+    /// lane returns byte-identical labels/costs with fewer distance
+    /// evaluations; `Auto` (default) prunes unless the cell checkpoints
+    /// or resumes. Honored by the MR K-Medoids drivers and k-means.
+    pub pruning: PruningMode,
 }
 
 impl Experiment {
@@ -152,6 +157,7 @@ impl Experiment {
             threads: 1,
             checkpoint_dir: None,
             resume: false,
+            pruning: PruningMode::Auto,
         }
     }
 
@@ -180,6 +186,7 @@ impl Experiment {
                     .seed(self.seed)
                     .update(self.update)
                     .metric(self.metric)
+                    .pruning(self.pruning)
                     .label_pass(self.with_quality);
                 b = match self.algorithm {
                     Algorithm::KMedoidsPlusPlusMR => b.plus_plus(),
@@ -202,6 +209,7 @@ impl Experiment {
                     .k(self.k)
                     .seed(self.seed)
                     .metric(self.metric)
+                    .pruning(self.pruning)
                     .label_pass(self.with_quality);
                 if let Some(size) = self.coreset_size {
                     b = b.coreset_size(size);
@@ -256,6 +264,7 @@ impl Experiment {
                         .k(self.k)
                         .seed(self.seed)
                         .metric(self.metric)
+                        .pruning(self.pruning)
                         .build(),
                 )
             }
@@ -397,6 +406,7 @@ mod tests {
             threads: 1,
             checkpoint_dir: None,
             resume: false,
+            pruning: PruningMode::Auto,
         }
     }
 

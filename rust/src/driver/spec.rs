@@ -29,7 +29,7 @@
 
 use super::suites::{ScaleOpts, ServeOpts};
 use super::{Algorithm, Experiment};
-use crate::clustering::UpdateStrategy;
+use crate::clustering::{PruningMode, UpdateStrategy};
 use crate::geo::datasets::SpatialSpec;
 use crate::geo::{Metric, MAX_DIMS};
 use crate::util::json::{obj, Json};
@@ -309,6 +309,20 @@ fn algorithm_uses_coreset_size(a: Algorithm) -> bool {
     matches!(a, Algorithm::KMedoidsCoresetMR)
 }
 
+/// Does this algorithm honor the `pruning` lane toggle? The serial
+/// engines always run dense kernels (their eval counts are part of the
+/// Fig. 5 serial baseline), so the knob would be inert there.
+fn algorithm_uses_pruning(a: Algorithm) -> bool {
+    matches!(
+        a,
+        Algorithm::KMedoidsPlusPlusMR
+            | Algorithm::KMedoidsRandomMR
+            | Algorithm::KMedoidsScalableMR
+            | Algorithm::KMedoidsCoresetMR
+            | Algorithm::KMeansMR
+    )
+}
+
 /// Does this algorithm emit / restore durable checkpoints
 /// ([`crate::persist`])? Only the MR k-medoids drivers fire the
 /// per-iteration checkpoint event, so `checkpoint_dir` / `resume` on any
@@ -369,6 +383,9 @@ pub fn experiment_to_json(e: &Experiment) -> Json {
             },
         ));
     }
+    if algorithm_uses_pruning(e.algorithm) {
+        pairs.push(("pruning", Json::Str(e.pruning.name().to_string())));
+    }
     if algorithm_uses_checkpoints(e.algorithm) {
         pairs.push((
             "checkpoint_dir",
@@ -397,6 +414,7 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
             "fixed_iters",
             "oversample",
             "coreset_size",
+            "pruning",
             "checkpoint_dir",
             "resume",
             "dataset",
@@ -518,6 +536,27 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
             Some(as_pos_usize(v, "coreset_size")?)
         }
     };
+    let pruning = match j.get("pruning") {
+        None | Some(Json::Null) => PruningMode::Auto,
+        Some(v) => {
+            if !algorithm_uses_pruning(algorithm) {
+                bail!(SpecError::bad(
+                    "pruning",
+                    format!(
+                        "is ignored by algorithm {:?} (the serial engines always run the \
+                         dense kernels) — remove it from the spec cell",
+                        algorithm.name()
+                    ),
+                ));
+            }
+            let s = v
+                .as_str()
+                .ok_or_else(|| SpecError::bad("pruning", "must be \"on\", \"off\" or \"auto\""))?;
+            PruningMode::parse(s).ok_or_else(|| {
+                SpecError::bad("pruning", format!("unknown value {s:?} (on|off|auto)"))
+            })?
+        }
+    };
     let checkpoint_dir = match j.get("checkpoint_dir") {
         None | Some(Json::Null) => None,
         Some(v) => {
@@ -596,6 +635,7 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         with_quality,
         fixed_iters,
         threads,
+        pruning,
     })
 }
 
@@ -807,6 +847,11 @@ mod tests {
                     Some(128)
                 } else {
                     None
+                };
+                e.pruning = if algorithm_uses_pruning(algorithm) && i % 2 == 1 {
+                    PruningMode::On
+                } else {
+                    PruningMode::Auto
                 };
                 e.checkpoint_dir = if algorithm_uses_checkpoints(algorithm) && i % 2 == 0 {
                     Some(std::path::PathBuf::from(format!("ckpts/cell-{i}")))
@@ -1066,6 +1111,44 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{e:#}").contains("update"), "{e:#}");
+    }
+
+    #[test]
+    fn pruning_knob_parses_and_validates() {
+        for (text, want) in [
+            ("\"on\"", PruningMode::On),
+            ("\"off\"", PruningMode::Off),
+            ("\"auto\"", PruningMode::Auto),
+        ] {
+            let src = format!(
+                r#"{{"algorithm": "kmedoids++-mr", "pruning": {text},
+                    "dataset": {{"n_points": 500}}}}"#
+            );
+            let cells = experiments_from_str(&src).unwrap();
+            assert_eq!(cells[0].pruning, want, "{text}");
+        }
+
+        // Absent / null means Auto (the durable-run interlock decides).
+        let cells = experiments_from_str(
+            r#"{"algorithm": "kmeans-mr", "pruning": null, "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].pruning, PruningMode::Auto);
+
+        // The serial engines always run dense kernels: the knob is
+        // refused there, as are unknown values anywhere.
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids-serial", "pruning": "on",
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("pruning"), "{e:#}");
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids++-mr", "pruning": "fast",
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("fast"), "{e:#}");
     }
 
     #[test]

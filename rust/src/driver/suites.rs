@@ -19,7 +19,9 @@ use crate::config::ClusterConfig;
 use crate::geo::datasets::{generate, SpatialSpec};
 use crate::geo::{Metric, Point};
 use crate::mapreduce::locality_fraction;
-use crate::runtime::{assign_points, pairwise_costs, ComputeBackend};
+use crate::runtime::{
+    assign_points, pairwise_costs, pairwise_costs_src, ComputeBackend, PruningMode,
+};
 use crate::serve::{ServeConfig, ServeSession};
 use crate::session::{ClusterSession, DatasetHandle};
 use crate::sim::FaultPlan;
@@ -238,6 +240,9 @@ struct PerfRow {
     cost: f64,
     iterations: usize,
     dist_evals: u64,
+    /// Fraction of the dense-lane distance evaluations this row skipped
+    /// (0 when the sweep runs dense, e.g. under `--checkpoint-dir`).
+    pruned_frac: f64,
     identical: bool,
 }
 
@@ -261,6 +266,12 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
     let kn = if opts.smoke { 8_192 } else { 1 << 17 };
     let kdata = generate(&SpatialSpec::new(kn, 9, opts.seed));
     let medoids: Vec<Point> = kdata.points[..9].to_vec();
+    // Exact per-call eval counts come from the counted kernels themselves
+    // (not an n×k formula), so the artifact stays honest if a lane ever
+    // evaluates more or fewer pairs than the closed form.
+    let assign_evals = assign_points(backend.as_ref(), &kdata.points, &medoids, Metric::SqEuclidean)
+        .unwrap()
+        .dist_evals;
     let assign_stats = bench(&format!("assign {kn} pts x 9 medoids"), &bench_opts, || {
         assign_points(backend.as_ref(), &kdata.points, &medoids, Metric::SqEuclidean)
             .unwrap()
@@ -269,6 +280,10 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
     });
     let pm = if opts.smoke { 4_096 } else { 1 << 14 };
     let cands: Vec<Point> = kdata.points[..256.min(kn)].to_vec();
+    let pair_evals =
+        pairwise_costs_src(backend.as_ref(), &cands[..], &kdata.points[..pm], Metric::SqEuclidean)
+            .unwrap()
+            .1;
     let pair_label = format!("pairwise {} cands x {pm} members", cands.len());
     let pair_stats = bench(&pair_label, &bench_opts, || {
         pairwise_costs(backend.as_ref(), &cands, &kdata.points[..pm], Metric::SqEuclidean)
@@ -279,6 +294,10 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
     // kernel path alongside the 2-D squared-Euclidean fast path.
     let gdata = generate(&SpatialSpec::new(kn, 9, opts.seed ^ 0xD3).with_dims(3));
     let gmedoids: Vec<Point> = gdata.points[..9].to_vec();
+    let generic_evals =
+        assign_points(backend.as_ref(), &gdata.points, &gmedoids, Metric::Manhattan)
+            .unwrap()
+            .dist_evals;
     let generic_stats = bench(
         &format!("assign {kn} pts x 9 medoids [d=3 manhattan]"),
         &bench_opts,
@@ -290,9 +309,9 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
         },
     );
     let kernels = Json::Arr(vec![
-        kernel_json(&assign_stats, (kn * 9) as f64),
-        kernel_json(&pair_stats, (cands.len() * pm) as f64),
-        kernel_json(&generic_stats, (kn * 9) as f64),
+        kernel_json(&assign_stats, assign_evals),
+        kernel_json(&pair_stats, pair_evals),
+        kernel_json(&generic_stats, generic_evals),
     ]);
 
     // ---- e2e thread sweep ------------------------------------------------
@@ -301,6 +320,24 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
     exp.fixed_iters = Some(6); // controlled iterations: same work per run
     let points = Arc::new(generate(&exp.spec).points);
     let repeats = if opts.smoke { 1 } else { 2 };
+
+    // Dense-lane reference for the pruned-fraction column: same cell,
+    // pruning forced off, no durability (checkpoint observers never
+    // change eval counts, so this baseline also covers checkpointed
+    // sweeps — where Auto runs dense and the fraction reads 0).
+    let dense_e2e_evals = {
+        let mut dexp = exp.clone();
+        dexp.pruning = PruningMode::Off;
+        let mut session = ClusterSession::builder()
+            .cluster(ClusterConfig::paper_cluster())
+            .nodes(7)
+            .backend(backend.clone())
+            .seed(opts.seed)
+            .build()
+            .expect("session build cannot fail with an explicit backend");
+        let data = session.ingest_points("points", points.clone());
+        dexp.clusterer().fit(&mut session, &data).expect("dense reference fit failed").dist_evals
+    };
 
     header("perf: e2e wall clock vs threads (paper workload)");
     let mut rows: Vec<PerfRow> = Vec::new();
@@ -341,10 +378,14 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
             }
             Some(base) => *base == summary,
         };
+        let pruned_frac =
+            (1.0 - out.dist_evals as f64 / dense_e2e_evals.max(1) as f64).max(0.0);
         eprintln!(
-            "  [perf] threads={t:<3} wall {wall_s:>8.3}s  sim {:.1}s  cost {:.4e}{}",
+            "  [perf] threads={t:<3} wall {wall_s:>8.3}s  sim {:.1}s  cost {:.4e}  \
+             pruned {:.0}%{}",
             out.sim_seconds,
             out.cost,
+            pruned_frac * 100.0,
             if identical { "" } else { "  MISMATCH" }
         );
         rows.push(PerfRow {
@@ -354,6 +395,7 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
             cost: out.cost,
             iterations: out.iterations,
             dist_evals: out.dist_evals,
+            pruned_frac,
             identical,
         });
     }
@@ -380,11 +422,71 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
                     ("cost", Json::Num(r.cost)),
                     ("iterations", Json::Num(r.iterations as f64)),
                     ("dist_evals", Json::Num(r.dist_evals as f64)),
+                    ("pruned_frac", Json::Num(r.pruned_frac)),
                     ("identical_to_1_thread", Json::Bool(r.identical)),
                 ])
             })
             .collect(),
     );
+
+    // ---- pruned vs dense assignment-lane gate ----------------------------
+    // Force the lanes explicitly (never Auto): the e2e sweep above may be
+    // checkpointed (CI passes --checkpoint-dir), which Auto rightly runs
+    // dense, so the gate stands up its own durability-free sessions on a
+    // clustered dataset where bound pruning must pay off. Blocking checks:
+    // the lanes agree byte-for-byte and the pruned lane cuts the exact
+    // distance-eval count by at least PRUNING_EVAL_FLOOR.
+    header("perf: pruned vs dense assignment lane (identity + eval floor)");
+    let gn = if opts.smoke { 4_000 } else { 40_000 };
+    let mut gexp = Experiment::paper_cell(Algorithm::KMedoidsPlusPlusMR, 7, 0, opts.seed);
+    gexp.spec = SpatialSpec::new(gn, 9, opts.seed ^ 0x9E37);
+    gexp.k = 16;
+    gexp.update = UpdateStrategy::CentroidNearest;
+    gexp.fixed_iters = Some(10);
+    gexp.with_quality = true; // labels feed the identity check
+    let gpoints = Arc::new(generate(&gexp.spec).points);
+    let gate_fit = |mode: PruningMode| {
+        let mut session = ClusterSession::builder()
+            .cluster(ClusterConfig::paper_cluster())
+            .nodes(7)
+            .backend(backend.clone())
+            .seed(opts.seed)
+            .build()
+            .expect("session build cannot fail with an explicit backend");
+        let data = session.ingest_points("pruning-gate", gpoints.clone());
+        let mut e = gexp.clone();
+        e.pruning = mode;
+        e.clusterer().fit(&mut session, &data).expect("pruning gate fit failed")
+    };
+    let dense = gate_fit(PruningMode::Off);
+    let pruned = gate_fit(PruningMode::On);
+    let gate_identical = pruned.medoids == dense.medoids
+        && pruned.cost.to_bits() == dense.cost.to_bits()
+        && pruned.iterations == dense.iterations
+        && pruned.labels == dense.labels;
+    let reduction = dense.dist_evals as f64 / pruned.dist_evals.max(1) as f64;
+    let gate_pruned_frac =
+        (1.0 - pruned.dist_evals as f64 / dense.dist_evals.max(1) as f64).max(0.0);
+    let gate_ok = gate_identical && reduction >= PRUNING_EVAL_FLOOR;
+    eprintln!(
+        "  [perf] pruning gate: dense {} evals vs pruned {} evals -> {reduction:.1}x \
+         (floor {PRUNING_EVAL_FLOOR:.1}x), identical={gate_identical}{}",
+        dense.dist_evals,
+        pruned.dist_evals,
+        if gate_ok { "" } else { "  GATE FAILED" }
+    );
+    let pruning_gate = obj(vec![
+        ("n_points", Json::Num(gn as f64)),
+        ("k", Json::Num(gexp.k as f64)),
+        ("iterations", Json::Num(dense.iterations as f64)),
+        ("dense_evals", Json::Num(dense.dist_evals as f64)),
+        ("pruned_evals", Json::Num(pruned.dist_evals as f64)),
+        ("reduction", Json::Num(reduction)),
+        ("floor", Json::Num(PRUNING_EVAL_FLOOR)),
+        ("pruned_frac", Json::Num(gate_pruned_frac)),
+        ("identical", Json::Bool(gate_identical)),
+        ("ok", Json::Bool(gate_ok)),
+    ]);
 
     obj(vec![
         ("bench", Json::Str("perf".into())),
@@ -396,14 +498,23 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
         ("kernels", kernels),
         ("e2e", e2e),
         ("speedup_vs_1_thread", Json::Obj(speedup)),
+        ("pruning", pruning_gate),
         ("identical_outputs", Json::Bool(rows.iter().all(|r| r.identical))),
     ])
 }
 
-fn kernel_json(stats: &crate::util::bench::Stats, evals_per_iter: f64) -> Json {
+/// Minimum dense/pruned exact-eval ratio the `bench perf` gate (and CI's
+/// `--smoke` run) requires on the clustered gate dataset.
+pub const PRUNING_EVAL_FLOOR: f64 = 3.0;
+
+fn kernel_json(stats: &crate::util::bench::Stats, dist_evals_exact: u64) -> Json {
     let mut j = stats.to_json();
     if let Json::Obj(map) = &mut j {
-        map.insert("dist_evals_per_s".into(), Json::Num(evals_per_iter / stats.median_s));
+        map.insert("dist_evals_exact".into(), Json::Num(dist_evals_exact as f64));
+        map.insert(
+            "dist_evals_per_s".into(),
+            Json::Num(dist_evals_exact as f64 / stats.median_s),
+        );
     }
     j
 }
@@ -1120,8 +1231,45 @@ mod tests {
         let s1 = j.get("speedup_vs_1_thread").unwrap().get("1").unwrap().as_f64().unwrap();
         assert!((s1 - 1.0).abs() < 1e-9);
         assert_eq!(j.get("kernels").unwrap().as_arr().unwrap().len(), 3);
+        // Kernel throughput derives from the counted kernels (n×k here by
+        // construction for the dense assign bench).
+        let k0 = &j.get("kernels").unwrap().as_arr().unwrap()[0];
+        assert_eq!(k0.get("dist_evals_exact").unwrap().as_f64(), Some((8_192 * 9) as f64));
+        // The pruning gate holds: byte-identical lanes and the exact eval
+        // count down by at least the declared floor.
+        let gate = j.get("pruning").unwrap();
+        assert_eq!(gate.get("identical").unwrap().as_bool(), Some(true));
+        assert_eq!(gate.get("ok").unwrap().as_bool(), Some(true));
+        let red = gate.get("reduction").unwrap().as_f64().unwrap();
+        assert!(red >= PRUNING_EVAL_FLOOR, "pruning reduction {red:.2}x below floor");
+        // No checkpoint sink in this sweep, so Auto prunes the e2e rows.
+        let e2e0 = &j.get("e2e").unwrap().as_arr().unwrap()[0];
+        assert!(e2e0.get("pruned_frac").unwrap().as_f64().unwrap() > 0.0);
         // The document is valid, re-parseable JSON.
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn perf_suite_checkpointed_sweep_runs_dense() {
+        // CI runs `bench perf --smoke --checkpoint-dir ...`: with a durable
+        // sink attached, Auto must fall back to the dense lane (bounds are
+        // not persisted), so the pruned fraction reads exactly 0 while the
+        // explicit-lane gate still passes.
+        let dir = std::env::temp_dir().join(format!("perf-ckpt-gate-{}", std::process::id()));
+        let opts = PerfOpts {
+            scale_div: 2000,
+            seed: 5,
+            threads: vec![1],
+            smoke: true,
+            checkpoint_dir: Some(dir.clone()),
+        };
+        let j = perf_suite(&be(), &opts);
+        let _ = std::fs::remove_dir_all(&dir);
+        for row in j.get("e2e").unwrap().as_arr().unwrap() {
+            assert_eq!(row.get("pruned_frac").unwrap().as_f64(), Some(0.0));
+        }
+        assert_eq!(j.get("pruning").unwrap().get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("identical_outputs").unwrap().as_bool(), Some(true));
     }
 
     #[test]
@@ -1216,6 +1364,7 @@ mod tests {
                 "kernels",
                 "e2e",
                 "speedup_vs_1_thread",
+                "pruning",
                 "identical_outputs",
             ],
         );
@@ -1230,6 +1379,7 @@ mod tests {
                     "cost",
                     "iterations",
                     "dist_evals",
+                    "pruned_frac",
                     "identical_to_1_thread",
                 ],
             );
@@ -1238,9 +1388,34 @@ mod tests {
             assert_exact_keys(
                 row,
                 "BENCH_perf.json kernel row",
-                &["name", "iters", "min_s", "median_s", "mean_s", "p95_s", "dist_evals_per_s"],
+                &[
+                    "name",
+                    "iters",
+                    "min_s",
+                    "median_s",
+                    "mean_s",
+                    "p95_s",
+                    "dist_evals_exact",
+                    "dist_evals_per_s",
+                ],
             );
         }
+        assert_exact_keys(
+            j.get("pruning").unwrap(),
+            "BENCH_perf.json pruning gate",
+            &[
+                "n_points",
+                "k",
+                "iterations",
+                "dense_evals",
+                "pruned_evals",
+                "reduction",
+                "floor",
+                "pruned_frac",
+                "identical",
+                "ok",
+            ],
+        );
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! Shared conservative spatial index over a medoid set.
+//!
+//! One implementation serves every candidate-pruning consumer in the
+//! repo: [`crate::serve::ClusterModel`] queries, the batch label pass,
+//! and the triangle-inequality pruned assignment lane in
+//! [`crate::runtime::pruned`]. It generalizes the 2-D squared-Euclidean
+//! grid that used to live privately in `serve/model.rs`:
+//!
+//! - **2-D** (both squared-Euclidean and Manhattan): a `g × g` uniform
+//!   grid over the padded medoid bounding box, `g = ⌈√(4k)⌉` clamped to
+//!   `[4, 32]` — byte-for-byte the legacy serve geometry.
+//! - **3 ≤ d ≤ 8**: a conservative rect-bound variant — a uniform
+//!   `g^d` grid (a k-d bisection of fixed depth per axis) with `g`
+//!   chosen so the cell count stays ≤ 4096. Coarser per axis as `d`
+//!   grows, but every bound is still exact rectangle geometry, so the
+//!   pruning guarantee is unchanged.
+//! - **Haversine** has no index (no axis-aligned rect bounds on the
+//!   sphere); `build` returns `None` and callers fall back to the full
+//!   medoid slab.
+//!
+//! Correctness contract (the reason every consumer can share this): a
+//! cell keeps medoid `m` iff the *minimum* rect-to-`m` dissimilarity is
+//! within `slack` of the best medoid's *maximum* over the rect, where
+//! `slack` is 1e-3 of the largest coordinate-norm scale in play — more
+//! than three orders of magnitude above the f32 kernel error. A pruned
+//! medoid therefore can never be the f32 kernel's argmin (not even via
+//! a tie) for any query inside the cell, so candidate-restricted scans
+//! return the dense answer bit-for-bit. Queries outside the padded box
+//! return `None` and must take the full-slab path.
+//!
+//! Each cell additionally records [`IndexCell::excluded_floor`]: a true
+//! lower bound (in *metric* space — square roots for squared Euclidean)
+//! on the distance from anywhere in the cell to the nearest *excluded*
+//! medoid. The pruned assignment lane uses it to keep its per-point
+//! lower bounds sound when a resolve only scanned the candidate list.
+
+use crate::geo::{BBox, Metric, Point, MAX_DIMS};
+
+/// One grid cell: ascending candidate medoid indices (ascending order
+/// preserves the dense kernel's first-wins tie policy) plus the
+/// metric-space floor to the nearest excluded medoid (`INFINITY` when
+/// nothing was excluded).
+pub struct IndexCell {
+    pub cands: Vec<u32>,
+    pub excluded_floor: f64,
+}
+
+/// Conservative per-cell candidate lists over a medoid set. See the
+/// module docs for the geometry and the pruning guarantee.
+pub struct SpatialIndex {
+    dims: usize,
+    lo: [f64; MAX_DIMS],
+    cell: [f64; MAX_DIMS],
+    g: usize,
+    k: usize,
+    cells: Vec<IndexCell>,
+}
+
+impl SpatialIndex {
+    /// Build an index over `medoids`, or `None` when no index applies
+    /// (fewer than two medoids, Haversine, or non-finite geometry).
+    pub fn build(medoids: &[Point], metric: Metric) -> Option<SpatialIndex> {
+        if medoids.len() < 2 || metric == Metric::Haversine {
+            return None;
+        }
+        let dims = medoids[0].dims();
+        debug_assert!(medoids.iter().all(|m| m.dims() == dims));
+        let mut lo = [f64::INFINITY; MAX_DIMS];
+        let mut hi = [f64::NEG_INFINITY; MAX_DIMS];
+        if dims == 2 {
+            // Legacy serve geometry, kept byte-identical: pad by half
+            // the larger f32 extent (floored at 1) so typical queries
+            // near the hull still hit a cell.
+            let bbox = BBox::of(medoids)?;
+            let pad = 0.5 * f32::max(bbox.width(), bbox.height()).max(1.0) as f64;
+            lo[0] = bbox.min_x as f64 - pad;
+            lo[1] = bbox.min_y as f64 - pad;
+            hi[0] = bbox.max_x as f64 + pad;
+            hi[1] = bbox.max_y as f64 + pad;
+        } else {
+            for m in medoids {
+                for (d, &c) in m.coords().iter().enumerate() {
+                    lo[d] = lo[d].min(c as f64);
+                    hi[d] = hi[d].max(c as f64);
+                }
+            }
+            let extent =
+                (0..dims).map(|d| hi[d] - lo[d]).fold(0.0f64, f64::max).max(1.0);
+            let pad = 0.5 * extent;
+            for d in 0..dims {
+                lo[d] -= pad;
+                hi[d] += pad;
+            }
+        }
+        if (0..dims).any(|d| !(lo[d].is_finite() && hi[d].is_finite())) {
+            return None;
+        }
+        let g = if dims == 2 {
+            (((4 * medoids.len()) as f64).sqrt().ceil() as usize).clamp(4, 32)
+        } else {
+            // Keep the total cell count ≤ 4096 (≈ 4096^(1/d) per axis).
+            ((4096f64).powf(1.0 / dims as f64).floor() as usize).clamp(2, 16)
+        };
+        let mut cell = [0.0f64; MAX_DIMS];
+        for d in 0..dims {
+            cell[d] = (hi[d] - lo[d]) / g as f64;
+        }
+
+        // Pruning slack: 1e-3 of the largest coordinate-norm scale among
+        // the medoids and the padded box corners, floored at 1 — the
+        // same margin the serve grid has always used, generalized per
+        // metric (squared norm for sq-Euclidean, L1 norm for Manhattan).
+        let mut scale: f64 = 1.0;
+        for m in medoids {
+            scale = scale.max(norm_scale(metric, m.coords()));
+        }
+        scale = scale.max(corner_norm_scale(metric, dims, &lo, &hi));
+        let slack = 1e-3 * scale;
+
+        let n_cells = g.pow(dims as u32);
+        let mut cells = Vec::with_capacity(n_cells);
+        let mut idx = [0usize; MAX_DIMS];
+        for _ in 0..n_cells {
+            let mut r_lo = [0.0f64; MAX_DIMS];
+            let mut r_hi = [0.0f64; MAX_DIMS];
+            for d in 0..dims {
+                r_lo[d] = lo[d] + idx[d] as f64 * cell[d];
+                r_hi[d] = r_lo[d] + cell[d];
+            }
+            let ub = medoids
+                .iter()
+                .map(|m| rect_max(metric, dims, &r_lo, &r_hi, m))
+                .fold(f64::INFINITY, f64::min);
+            let mut cands = Vec::new();
+            let mut excluded_floor = f64::INFINITY;
+            for (j, m) in medoids.iter().enumerate() {
+                let min_d = rect_min(metric, dims, &r_lo, &r_hi, m);
+                if min_d <= ub + slack {
+                    cands.push(j as u32);
+                } else {
+                    // Metric-space floor: √ for squared Euclidean.
+                    let floor = match metric {
+                        Metric::SqEuclidean => min_d.sqrt(),
+                        _ => min_d,
+                    };
+                    excluded_floor = excluded_floor.min(floor);
+                }
+            }
+            debug_assert!(!cands.is_empty());
+            cells.push(IndexCell { cands, excluded_floor });
+            // Row-major increment, last dim fastest.
+            for d in (0..dims).rev() {
+                idx[d] += 1;
+                if idx[d] < g {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        Some(SpatialIndex { dims, lo, cell, g, k: medoids.len(), cells })
+    }
+
+    /// Number of medoids indexed.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// The cell covering `p`, or `None` when `p` falls outside the
+    /// padded box (callers must then scan the full medoid slab).
+    pub fn cell(&self, p: &Point) -> Option<&IndexCell> {
+        let mut at = 0usize;
+        for d in 0..self.dims {
+            let f = (p.coord(d) as f64 - self.lo[d]) / self.cell[d];
+            if !(0.0..=self.g as f64).contains(&f) {
+                return None;
+            }
+            at = at * self.g + (f as usize).min(self.g - 1);
+        }
+        Some(&self.cells[at])
+    }
+}
+
+/// Squared norm (sq-Euclidean) or L1 norm (Manhattan) of a coordinate
+/// vector — the scale whose 1e-3 multiple dominates f32 kernel error.
+fn norm_scale(metric: Metric, c: &[f32]) -> f64 {
+    match metric {
+        Metric::SqEuclidean => c.iter().map(|&v| (v as f64) * (v as f64)).sum(),
+        _ => c.iter().map(|&v| (v as f64).abs()).sum(),
+    }
+}
+
+/// Largest norm over the 2^d box corners, computed per-axis (the
+/// maximizing corner takes the larger |coordinate| on every axis).
+fn corner_norm_scale(metric: Metric, dims: usize, lo: &[f64], hi: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    for d in 0..dims {
+        let a = lo[d].abs().max(hi[d].abs());
+        acc += match metric {
+            Metric::SqEuclidean => a * a,
+            _ => a,
+        };
+    }
+    acc
+}
+
+/// Minimum dissimilarity from anywhere in the rect to `m` (0 inside).
+fn rect_min(metric: Metric, dims: usize, lo: &[f64], hi: &[f64], m: &Point) -> f64 {
+    let mut acc = 0.0f64;
+    for d in 0..dims {
+        let c = m.coord(d) as f64;
+        let gap = (lo[d] - c).max(0.0).max(c - hi[d]);
+        acc += match metric {
+            Metric::SqEuclidean => gap * gap,
+            _ => gap,
+        };
+    }
+    acc
+}
+
+/// Maximum dissimilarity from anywhere in the rect to `m`.
+fn rect_max(metric: Metric, dims: usize, lo: &[f64], hi: &[f64], m: &Point) -> f64 {
+    let mut acc = 0.0f64;
+    for d in 0..dims {
+        let c = m.coord(d) as f64;
+        let far = (c - lo[d]).abs().max((c - hi[d]).abs());
+        acc += match metric {
+            Metric::SqEuclidean => far * far,
+            _ => far,
+        };
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+
+    fn rand_points(rng: &mut Rng, n: usize, dims: usize, spread: f64) -> Vec<Point> {
+        (0..n)
+            .map(|_| {
+                let c: Vec<f32> = (0..dims)
+                    .map(|_| (rng.f64() * spread - spread / 2.0) as f32)
+                    .collect();
+                Point::from_slice(&c)
+            })
+            .collect()
+    }
+
+    fn brute_argmin(metric: Metric, p: &Point, medoids: &[Point]) -> usize {
+        let mut best = f64::INFINITY;
+        let mut at = 0;
+        for (j, m) in medoids.iter().enumerate() {
+            let d = metric.distance(p, m);
+            if d < best {
+                best = d;
+                at = j;
+            }
+        }
+        at
+    }
+
+    /// The argmin medoid is always in the candidate list, and the
+    /// excluded floor never exceeds the true distance to any excluded
+    /// medoid — for every metric/dims combination that builds an index.
+    #[test]
+    fn candidates_contain_argmin_and_floors_are_sound() {
+        for &(metric, dims) in &[
+            (Metric::SqEuclidean, 2usize),
+            (Metric::SqEuclidean, 3),
+            (Metric::SqEuclidean, 8),
+            (Metric::Manhattan, 2),
+            (Metric::Manhattan, 5),
+        ] {
+            for_all(10, 0x1D3 ^ dims as u64, |rng| {
+                let k = 2 + rng.below(10);
+                let medoids = rand_points(rng, k, dims, 2e4);
+                let ix = SpatialIndex::build(&medoids, metric).expect("index builds");
+                assert_eq!(ix.k(), k);
+                for p in rand_points(rng, 100, dims, 5e4) {
+                    let Some(cell) = ix.cell(&p) else { continue };
+                    let best = brute_argmin(metric, &p, &medoids) as u32;
+                    assert!(
+                        cell.cands.contains(&best),
+                        "{metric:?} d={dims}: argmin {best} pruned from {:?}",
+                        cell.cands
+                    );
+                    assert!(cell.cands.windows(2).all(|w| w[0] < w[1]), "cands not ascending");
+                    for j in 0..k as u32 {
+                        if !cell.cands.contains(&j) {
+                            let d = metric.distance(&p, &medoids[j as usize]);
+                            let d_metric =
+                                if metric == Metric::SqEuclidean { d.sqrt() } else { d };
+                            assert!(
+                                cell.excluded_floor <= d_metric + 1e-9,
+                                "floor {} above excluded medoid {j} at {d_metric}",
+                                cell.excluded_floor
+                            );
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn haversine_and_degenerate_sets_have_no_index() {
+        let two = vec![Point::new(0.0, 0.0), Point::new(1.0, 1.0)];
+        assert!(SpatialIndex::build(&two, Metric::Haversine).is_none());
+        assert!(SpatialIndex::build(&two[..1], Metric::SqEuclidean).is_none());
+        assert!(SpatialIndex::build(&two, Metric::SqEuclidean).is_some());
+    }
+
+    /// Queries far outside the padded box take the `None` (full-slab)
+    /// path instead of a wrong cell.
+    #[test]
+    fn out_of_box_queries_return_none() {
+        let medoids = vec![Point::new(0.0, 0.0), Point::new(10.0, 10.0)];
+        let ix = SpatialIndex::build(&medoids, Metric::SqEuclidean).unwrap();
+        assert!(ix.cell(&Point::new(1e6, 1e6)).is_none());
+        assert!(ix.cell(&Point::new(5.0, 5.0)).is_some());
+    }
+}

@@ -18,6 +18,7 @@
 //! (Mazzetto et al.; Bahmani et al.) becomes expressible.
 
 pub mod datasets;
+pub mod index;
 pub mod io;
 
 /// Maximum inline dimensionality of a [`Point`].

@@ -24,7 +24,7 @@ use kmedoids_mr::driver::{run_cell, spec, Algorithm, Experiment, ExperimentResul
 use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
 use kmedoids_mr::geo::io::write_csv;
 use kmedoids_mr::geo::{Metric, MAX_DIMS};
-use kmedoids_mr::prelude::{ClusterSession, IterationLog, StderrProgress};
+use kmedoids_mr::prelude::{ClusterSession, IterationLog, PruningMode, StderrProgress};
 use kmedoids_mr::report;
 use kmedoids_mr::runtime::{self, BackendKind};
 use kmedoids_mr::util::json::Json;
@@ -176,7 +176,8 @@ USAGE:
                     [--seed S] --out FILE.csv
   kmedoids-mr run   [--algo ALGO] [--nodes N] [--dataset 0|1|2] [--k K]
                     [--metric METRIC] [--dims D] [--oversample L] [--rounds R]
-                    [--coreset-size C] [--checkpoint-dir DIR] [--resume]
+                    [--coreset-size C] [--pruning on|off|auto]
+                    [--checkpoint-dir DIR] [--resume]
                     [--scale DIV] [--seed S] [--backend auto|pjrt|native]
                     [--threads N] [--quality] [--trace]
   kmedoids-mr run   --spec CELLS.json [--backend auto|pjrt|native] [--trace]
@@ -208,6 +209,14 @@ seeding of kmedoids-scalable-mr (defaults: l = 2k, 5 rounds).
 --coreset-size tunes kmedoids-coreset-mr's weighted-representative
 budget (default O(k log n)); the coreset pipeline runs a constant two
 MR jobs regardless of iteration count.
+
+--pruning selects the assignment lane for the MR drivers (see README
+\"Sub-linear assignment\"): `on` caches triangle-inequality bounds and
+skips points whose nearest medoid provably did not move, `off` forces
+the dense kernels, and `auto` (the default) prunes except on
+checkpointed or resumed fits, whose recorded eval counts must match a
+dense replay. Labels, medoids and cost are byte-identical either way —
+only `work.dist.evals` changes.
 
 --checkpoint-dir DIR durably checkpoints every MR iteration (atomic
 write-rename, CRC-checked; see README \"Durability & crash recovery\");
@@ -338,8 +347,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         "run",
         &[
             "spec", "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds",
-            "coreset-size", "checkpoint-dir", "resume", "scale", "seed", "backend", "threads",
-            "quality", "trace",
+            "coreset-size", "pruning", "checkpoint-dir", "resume", "scale", "seed", "backend",
+            "threads", "quality", "trace",
         ],
     )?;
     args.check_positionals("run", 0)?;
@@ -349,7 +358,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(path) = args.get("spec") {
         for flag in [
             "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds",
-            "coreset-size", "checkpoint-dir", "resume", "scale", "seed", "quality", "threads",
+            "coreset-size", "pruning", "checkpoint-dir", "resume", "scale", "seed", "quality",
+            "threads",
         ] {
             if args.has(flag) {
                 bail!("--{flag} conflicts with --spec (put it in the spec file)");
@@ -423,6 +433,25 @@ fn cmd_run(args: &Args) -> Result<()> {
             bail!("--coreset-size must be >= 1");
         }
         exp.coreset_size = Some(size);
+    }
+    if let Some(s) = args.get("pruning") {
+        let honors = matches!(
+            algo,
+            Algorithm::KMedoidsPlusPlusMR
+                | Algorithm::KMedoidsRandomMR
+                | Algorithm::KMedoidsScalableMR
+                | Algorithm::KMedoidsCoresetMR
+                | Algorithm::KMeansMR
+        );
+        if !honors {
+            bail!(
+                "--pruning only applies to the MR drivers (the serial engines always run \
+                 the dense kernels); --algo {} does not",
+                algo.name()
+            );
+        }
+        exp.pruning = PruningMode::parse(s)
+            .with_context(|| format!("bad --pruning {s:?} (on|off|auto)"))?;
     }
     exp.with_quality = args.has("quality");
     exp.threads = args.get_usize("threads", 1)?;
@@ -792,7 +821,7 @@ fn cmd_bench_perf(args: &Args) -> Result<()> {
 
     println!("\nperf summary (full report: {out}):");
     if let Some(rows) = report.get("e2e").and_then(|e| e.as_arr()) {
-        println!("{:>8} {:>12} {:>12}", "threads", "wall(s)", "speedup");
+        println!("{:>8} {:>12} {:>12} {:>10}", "threads", "wall(s)", "speedup", "pruned");
         for row in rows {
             let t = row.get("threads").and_then(|v| v.as_u64()).unwrap_or(0);
             let w = row.get("wall_s").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
@@ -801,14 +830,33 @@ fn cmd_bench_perf(args: &Args) -> Result<()> {
                 .and_then(|m| m.get(&t.to_string()))
                 .and_then(|v| v.as_f64())
                 .unwrap_or(f64::NAN);
-            println!("{t:>8} {w:>12.3} {s:>11.2}x");
+            let p = row.get("pruned_frac").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+            println!("{t:>8} {w:>12.3} {s:>11.2}x {:>9.0}%", p * 100.0);
         }
     }
     match report.get("identical_outputs").and_then(|v| v.as_bool()) {
         Some(true) => println!("outputs identical at every thread count: yes"),
         _ => bail!("outputs diverged across thread counts (determinism bug)"),
     }
-    Ok(())
+    // Blocking pruning gate (CI runs --smoke): dense and pruned lanes
+    // must agree byte-for-byte and the pruned lane must cut the exact
+    // eval count by the declared floor.
+    let gate = report.get("pruning").context("BENCH_perf.json is missing the pruning gate")?;
+    let red = gate.get("reduction").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+    let floor = gate.get("floor").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+    match gate.get("ok").and_then(|v| v.as_bool()) {
+        Some(true) => {
+            println!(
+                "pruned lane byte-identical to dense at {red:.1}x fewer dist evals \
+                 (floor {floor:.1}x): yes"
+            );
+            Ok(())
+        }
+        _ if gate.get("identical").and_then(|v| v.as_bool()) != Some(true) => {
+            bail!("pruned assignment DIVERGED from the dense lane (bound-maintenance bug)")
+        }
+        _ => bail!("pruned lane reduced dist evals only {red:.2}x (< {floor:.1}x floor)"),
+    }
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {

@@ -23,6 +23,9 @@ impl CheckpointSink {
 }
 
 impl IterationObserver for CheckpointSink {
+    fn wants_checkpoints(&self) -> bool {
+        true
+    }
     fn on_checkpoint(&mut self, state: &FitCheckpoint<'_>) {
         let ck = Checkpoint::from_fit(state);
         if let Err(e) = self.store.save(&ck) {

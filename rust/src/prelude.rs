@@ -13,7 +13,9 @@ pub use crate::driver::{run_experiment, Algorithm, Experiment, ExperimentResult}
 pub use crate::geo::datasets::{generate, SpatialDataset, SpatialSpec};
 pub use crate::geo::{Metric, Point};
 pub use crate::persist::{Checkpoint, CheckpointSink, CheckpointStore, DeltaWal, PersistError};
-pub use crate::runtime::{load_backend, BackendKind, ComputeBackend, NativeBackend};
+pub use crate::runtime::{
+    load_backend, BackendKind, ComputeBackend, NativeBackend, PrunedAssigner, PruningMode,
+};
 pub use crate::serve::{
     ClusterModel, IngestError, ModelHandle, ServeConfig, ServeSession, UpdateReport,
 };

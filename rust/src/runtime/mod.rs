@@ -10,6 +10,7 @@ pub mod backend;
 pub mod manifest;
 pub mod ops;
 pub mod pjrt;
+pub mod pruned;
 
 pub use backend::{AssignOut, ComputeBackend, NativeBackend};
 pub use manifest::{default_artifacts_dir, Manifest, UnitKind};
@@ -18,6 +19,7 @@ pub use ops::{
     weighted_pairwise_costs_src, AssignResult, WeightedAssignResult,
 };
 pub use pjrt::PjrtBackend;
+pub use pruned::{PrunedAssigner, PruningMode};
 
 use std::sync::Arc;
 

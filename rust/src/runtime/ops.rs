@@ -62,6 +62,13 @@ pub struct AssignResult {
     pub mindists: Vec<f32>,
     pub cluster_cost: Vec<f64>,
     pub cluster_count: Vec<u64>,
+    /// Distance evaluations actually performed for real points against
+    /// real medoids (padding rows/slots are fixed-shape artifacts, not
+    /// algorithmic work, and are not counted). For the dense lane this
+    /// equals `n × k` by construction; the pruned lane
+    /// ([`super::pruned::PrunedAssigner`]) reports the smaller count it
+    /// actually evaluated.
+    pub dist_evals: u64,
 }
 
 pub fn assign_points(
@@ -89,6 +96,7 @@ pub fn assign_points(
     let mut mindists = Vec::with_capacity(n);
     let mut cost = vec![0f64; medoids.len()];
     let mut count = vec![0u64; medoids.len()];
+    let mut evals = 0u64;
 
     ASSIGN_SCRATCH.with(|scratch| -> Result<()> {
         let mut guard = scratch.borrow_mut();
@@ -133,34 +141,44 @@ pub fn assign_points(
                 cost[j] += out.cluster_cost[j] as f64;
                 count[j] += out.cluster_count[j] as u64;
             }
+            evals += (len * medoids.len()) as u64;
             start += len;
         }
         Ok(())
     })?;
-    Ok(AssignResult { labels, mindists, cluster_cost: cost, cluster_count: count })
+    Ok(AssignResult {
+        labels,
+        mindists,
+        cluster_cost: cost,
+        cluster_count: count,
+        dist_evals: evals,
+    })
 }
 
 /// Exact PAM-update candidate costs: for every candidate, the summed
 /// dissimilarity to all members under `metric`, composed over fixed-size
-/// blocks. Thin `&[Point]` wrapper over [`pairwise_costs_src`].
+/// blocks. Thin `&[Point]` wrapper over [`pairwise_costs_src`] that
+/// drops the evaluation count.
 pub fn pairwise_costs(
     be: &dyn ComputeBackend,
     candidates: &[Point],
     members: &[Point],
     metric: Metric,
 ) -> Result<Vec<f64>> {
-    pairwise_costs_src(be, candidates, members, metric)
+    Ok(pairwise_costs_src(be, candidates, members, metric)?.0)
 }
 
 /// [`pairwise_costs`] over any two [`PointSource`]s — block staging goes
 /// through `fill_coords`, so packed shuffle-byte views feed the kernel
-/// directly without materializing `Vec<Point>`s.
+/// directly without materializing `Vec<Point>`s. Returns the per-candidate
+/// costs plus the number of distance evaluations actually performed
+/// (`n_candidates × n_members` by construction — padding is not counted).
 pub fn pairwise_costs_src<C, M>(
     be: &dyn ComputeBackend,
     candidates: &C,
     members: &M,
     metric: Metric,
-) -> Result<Vec<f64>>
+) -> Result<(Vec<f64>, u64)>
 where
     C: PointSource + ?Sized,
     M: PointSource + ?Sized,
@@ -169,8 +187,9 @@ where
     let nc = candidates.len();
     let nm = members.len();
     let mut out = vec![0f64; nc];
+    let mut evals = 0u64;
     if nc == 0 || nm == 0 {
-        return Ok(out);
+        return Ok((out, evals));
     }
     let dims = candidates.dims();
     assert_eq!(dims, members.dims(), "candidates/members dims mismatch");
@@ -213,13 +232,14 @@ where
                 for i in 0..clen {
                     out[cs + i] += partial[i] as f64;
                 }
+                evals += (clen * mlen) as u64;
                 ms += mlen;
             }
             cs += clen;
         }
         Ok(())
     })?;
-    Ok(out)
+    Ok((out, evals))
 }
 
 /// Result of a weighted assignment: labels are the plain (unweighted)
@@ -232,6 +252,8 @@ pub struct WeightedAssignResult {
     pub cluster_cost: Vec<f64>,
     /// Per-cluster `Σ w` (total member weight).
     pub cluster_weight: Vec<f64>,
+    /// Distance evaluations actually performed (real rows × medoids).
+    pub dist_evals: u64,
 }
 
 /// Weighted assignment of a [`WeightedSource`] to `medoids`
@@ -261,6 +283,7 @@ where
     let mut mindists = Vec::with_capacity(n);
     let mut cost = vec![0f64; medoids.len()];
     let mut weight = vec![0f64; medoids.len()];
+    let mut evals = 0u64;
 
     ASSIGN_SCRATCH.with(|scratch| -> Result<()> {
         let mut guard = scratch.borrow_mut();
@@ -296,6 +319,7 @@ where
                 cost[j] += out.cluster_cost[j] as f64;
                 weight[j] += out.cluster_count[j] as f64;
             }
+            evals += (len * medoids.len()) as u64;
             start += len;
         }
         Ok(())
@@ -305,6 +329,7 @@ where
         weighted_mindists: mindists,
         cluster_cost: cost,
         cluster_weight: weight,
+        dist_evals: evals,
     })
 }
 
@@ -326,7 +351,7 @@ pub fn weighted_pairwise_costs_src<C, M>(
     candidates: &C,
     members: &M,
     metric: Metric,
-) -> Result<Vec<f64>>
+) -> Result<(Vec<f64>, u64)>
 where
     C: PointSource + ?Sized,
     M: WeightedSource + ?Sized,
@@ -335,8 +360,9 @@ where
     let nc = candidates.len();
     let nm = members.len();
     let mut out = vec![0f64; nc];
+    let mut evals = 0u64;
     if nc == 0 || nm == 0 {
-        return Ok(out);
+        return Ok((out, evals));
     }
     let dims = candidates.dims();
     assert_eq!(dims, members.dims(), "candidates/members dims mismatch");
@@ -369,22 +395,14 @@ where
                 for i in 0..clen {
                     out[cs + i] += partial[i] as f64;
                 }
+                evals += (clen * mlen) as u64;
                 ms += mlen;
             }
             cs += clen;
         }
         Ok(())
     })?;
-    Ok(out)
-}
-
-/// Number of distance evaluations the two ops perform (for the cost
-/// model's work accounting).
-pub fn assign_dist_evals(n_points: usize, n_medoids: usize) -> u64 {
-    n_points as u64 * n_medoids as u64
-}
-pub fn pairwise_dist_evals(n_candidates: usize, n_members: usize) -> u64 {
-    n_candidates as u64 * n_members as u64
+    Ok((out, evals))
 }
 
 #[cfg(test)]
@@ -588,9 +606,10 @@ mod tests {
                 assert_eq!(packed.len(), nm);
                 let metric = if dims == 2 { Metric::SqEuclidean } else { Metric::Manhattan };
                 let via_slice = pairwise_costs(&be(), &cands, &membs, metric).unwrap();
-                let via_packed =
+                let (via_packed, evals) =
                     pairwise_costs_src(&be(), cands.as_slice(), &packed, metric).unwrap();
                 assert_eq!(via_slice, via_packed, "packed view must be byte-identical");
+                assert_eq!(evals, (nc * nm) as u64, "pairwise evals are counted exactly");
             });
         }
     }
@@ -606,8 +625,9 @@ mod tests {
                 let membs = rand_points_d(rng, nm, 50.0, dims);
                 let ws: Vec<f32> = (0..nm).map(|_| rng.range_f64(0.0, 4.0) as f32).collect();
                 let view = Weighted::new(membs.as_slice(), &ws);
-                let got =
+                let (got, wev) =
                     weighted_pairwise_costs_src(&be(), cands.as_slice(), &view, metric).unwrap();
+                assert_eq!(wev, (nc * nm) as u64);
                 for (i, c) in cands.iter().enumerate() {
                     let want: f64 = membs
                         .iter()
@@ -623,7 +643,7 @@ mod tests {
                 // Unit weights are byte-identical to the unweighted op.
                 let ones = vec![1.0f32; nm];
                 let unit = Weighted::new(membs.as_slice(), &ones);
-                let w1 =
+                let (w1, _) =
                     weighted_pairwise_costs_src(&be(), cands.as_slice(), &unit, metric).unwrap();
                 let u = pairwise_costs(&be(), &cands, &membs, metric).unwrap();
                 assert_eq!(w1, u, "unit weights must reduce exactly");
@@ -665,6 +685,18 @@ mod tests {
                 );
                 assert!((got.cluster_weight[j] - weight[j]).abs() < 1e-3, "weight {j}");
             }
+        });
+    }
+
+    #[test]
+    fn dense_lane_counts_exactly_n_times_k() {
+        for_all(10, 0xE7A1, |rng| {
+            let n = 1 + rng.below(300);
+            let k = 1 + rng.below(7);
+            let pts = rand_points(rng, n, 100.0);
+            let med = rand_points(rng, k, 100.0);
+            let got = assign_points(&be(), &pts, &med, Metric::SqEuclidean).unwrap();
+            assert_eq!(got.dist_evals, (n * k) as u64);
         });
     }
 

@@ -1,0 +1,736 @@
+//! Triangle-inequality pruned assignment lane (Elkan/Hamerly-style),
+//! byte-identical to the dense kernels by construction.
+//!
+//! ## What it does
+//!
+//! The dense assignment path evaluates every `point × medoid` distance
+//! each iteration. But medoids barely move between iterations, so for
+//! most points the nearest medoid *provably* cannot have changed. This
+//! lane caches per-point bounds across iterations and skips every point
+//! whose bounds certify the cached label, falling back to the dense
+//! kernel arithmetic (which remains the oracle) only for points whose
+//! bounds overlap:
+//!
+//! - `ub[i]` — upper bound on the **true** distance from point `i` to
+//!   its cached nearest medoid.
+//! - `lb[i]` — lower bound on the true distance from point `i` to every
+//!   *other* medoid (Hamerly's single global bound).
+//!
+//! At the start of an epoch (one [`PrunedAssigner::begin_epoch`] per
+//! iteration), each medoid's drift — `Metric::displacement` between its
+//! old and new position, inflated by 1e-9 for f64 rounding — feeds the
+//! bound maintenance exactly as the `IterationEvent::medoid_drift`
+//! telemetry defines it: `ub += drift[label]`, `lb −= max drift over
+//! the other medoids` (triangle inequality both ways). Then per point:
+//!
+//! 1. **Skip test**: if `lb` and `ub` are separated by more than the
+//!    kernel-error margin (below), the cached label is certified. If the
+//!    label's medoid did not move at all, even the cached f32 distance
+//!    is still bitwise-valid — zero evaluations.
+//! 2. **Tighten** (1 evaluation): recompute the distance to the cached
+//!    label with kernel-identical arithmetic, shrink `ub`, re-test.
+//! 3. **Resolve**: scan the medoids — restricted to the shared
+//!    [`SpatialIndex`] cell candidates when the index applies — with
+//!    kernel-identical arithmetic, tracking best and second-best. The
+//!    second-best distance (and the cell's excluded-medoid floor)
+//!    rebuild `lb`; the best rebuilds `ub` and the cached label.
+//!
+//! ## Why outputs are byte-identical
+//!
+//! Each point's scalar arithmetic replicates the dense kernel exactly:
+//! the 2-D squared-Euclidean fast path uses the same expanded
+//! `‖p‖² − 2p·m + ‖m‖²` f32 form (same precomputed `‖m‖²`, clamped at
+//! 0), every other `(dims, metric)` uses `Metric::distance_f32`, ties
+//! break first-wins with strict `<` like the kernels, and the per-block
+//! f32 cost/count accumulation (block size [`ComputeBackend::block`],
+//! point order, f64 fold per block) mirrors `ops::assign_points`. The
+//! only question is whether the *argmin* matches, and that is what the
+//! bounds certify: the skip test demands separation `> 2·s` where `s`
+//! is a slack that dominates the worst-case f32 kernel error by more
+//! than two orders of magnitude (1e-4 of the squared/L1 coordinate
+//! scale, 0.5 km for haversine — same style of margin the spatial
+//! index has always used). Squared Euclidean is not a metric, so its
+//! bounds are maintained in square-root (true Euclidean) space — where
+//! the triangle inequality holds — and the skip test compares back in
+//! squared space: skip iff `lb² − ub² > 2·s`.
+//!
+//! The conformance matrix asserts the resulting labels, `f32::to_bits`
+//! min-distances, and cost bits against the dense oracle in every
+//! `Algorithm × Metric × dims × threads` cell.
+//!
+//! ## Determinism & MR safety
+//!
+//! Per-split state is keyed by the split's `row_start`: the MR engine
+//! computes every map task exactly once per job (fanned over the worker
+//! pool, cached across attempts), so each split advances exactly one
+//! epoch per job regardless of thread count, faults, or speculation —
+//! labels, cost bits, *and* evaluation counts are thread-count- and
+//! fault-invariant. Interior mutability (mutexes around the epoch data
+//! and the split map) makes the assigner shareable from `&self` mapper
+//! methods; contention is one brief lock per split per epoch.
+
+use super::backend::ComputeBackend;
+use super::ops::AssignResult;
+use crate::geo::index::SpatialIndex;
+use crate::geo::{Metric, Point};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// CLI/spec toggle for the pruned lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PruningMode {
+    /// Always prune (eval counts differ from a dense run when resuming
+    /// from a checkpoint, because bounds are not persisted).
+    On,
+    /// Always run the dense kernels.
+    Off,
+    /// Prune unless the fit writes checkpoints or resumes from one —
+    /// bounds are not persisted, so a resumed run would re-resolve
+    /// everything once and its `dist_evals` would diverge from the
+    /// uninterrupted run's, breaking crash-recovery byte-identity.
+    Auto,
+}
+
+impl Default for PruningMode {
+    fn default() -> PruningMode {
+        PruningMode::Auto
+    }
+}
+
+impl PruningMode {
+    pub fn parse(s: &str) -> Option<PruningMode> {
+        match s {
+            "on" => Some(PruningMode::On),
+            "off" => Some(PruningMode::Off),
+            "auto" => Some(PruningMode::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PruningMode::On => "on",
+            PruningMode::Off => "off",
+            PruningMode::Auto => "auto",
+        }
+    }
+
+    /// Resolve the mode against the fit's durability configuration.
+    pub fn enabled(&self, wants_checkpoints: bool, resuming: bool) -> bool {
+        match self {
+            PruningMode::On => true,
+            PruningMode::Off => false,
+            PruningMode::Auto => !wants_checkpoints && !resuming,
+        }
+    }
+}
+
+/// One epoch's shared data: the medoid set, per-medoid drift since the
+/// previous epoch, the spatial index, and the fast-path norms.
+struct EpochData {
+    epoch: u64,
+    medoids: Vec<Point>,
+    dims: usize,
+    /// Precomputed `‖m‖²` in f32 — the fast path's exact staging values.
+    m2: Vec<f32>,
+    /// Inflated true-metric displacement of each medoid vs. last epoch.
+    drift: Vec<f64>,
+    drift_max: f64,
+    drift_max_idx: usize,
+    drift_second: f64,
+    index: Option<SpatialIndex>,
+    /// Largest medoid norm scale (squared norm / L1 norm) for the slack.
+    med_scale: f64,
+}
+
+impl EpochData {
+    /// Max drift over every medoid except `j`.
+    fn drift_excl(&self, j: usize) -> f64 {
+        if j == self.drift_max_idx {
+            self.drift_second
+        } else {
+            self.drift_max
+        }
+    }
+}
+
+/// Cross-epoch bound state for one split.
+struct SplitState {
+    /// Epoch this state was last advanced at.
+    epoch: u64,
+    label: Vec<u32>,
+    /// Cached kernel mindist (bitwise what the dense kernel emitted).
+    md: Vec<f32>,
+    /// Upper bound on the true distance to the labeled medoid
+    /// (metric space; square-root space for squared Euclidean).
+    ub: Vec<f64>,
+    /// Lower bound on the true distance to every other medoid.
+    lb: Vec<f64>,
+    /// Largest point norm scale in the split (constant across epochs).
+    p_scale: f64,
+}
+
+impl SplitState {
+    fn fresh(n: usize, metric: Metric, points: &[Point]) -> SplitState {
+        let p_scale = points
+            .iter()
+            .map(|p| norm_scale(metric, p))
+            .fold(0.0f64, f64::max);
+        SplitState {
+            epoch: 0,
+            label: vec![0; n],
+            md: vec![0.0; n],
+            ub: vec![0.0; n],
+            lb: vec![0.0; n],
+            p_scale,
+        }
+    }
+}
+
+fn norm_scale(metric: Metric, p: &Point) -> f64 {
+    match metric {
+        Metric::SqEuclidean => {
+            p.coords().iter().map(|&c| (c as f64) * (c as f64)).sum()
+        }
+        Metric::Manhattan => p.coords().iter().map(|&c| (c as f64).abs()).sum(),
+        Metric::Haversine => 0.0,
+    }
+}
+
+/// Kernel-identical scalar distance from `p` to medoid `j` — bitwise
+/// the value the dense block kernels compute for the same pair.
+#[inline]
+fn kernel_dist(
+    metric: Metric,
+    dims: usize,
+    fast2d: bool,
+    m2: &[f32],
+    medoids: &[Point],
+    p: &Point,
+    j: usize,
+) -> f32 {
+    if fast2d {
+        let (px, py) = (p.x(), p.y());
+        let p2 = px * px + py * py;
+        let m = &medoids[j];
+        let cross = px * m.x() + py * m.y();
+        (p2 - 2.0 * cross + m2[j]).max(0.0)
+    } else {
+        metric.distance_f32(dims, p.coords(), medoids[j].coords())
+    }
+}
+
+/// Upper bound on the true metric distance given the kernel value `d`
+/// and the kernel-error slack `s` (both in kernel comparison space).
+#[inline]
+fn upper_bound(metric: Metric, d: f32, s: f64) -> f64 {
+    match metric {
+        Metric::SqEuclidean => (d as f64 + s).max(0.0).sqrt(),
+        _ => d as f64 + s,
+    }
+}
+
+/// Lower bound on the true metric distance given the kernel value `d`.
+#[inline]
+fn lower_bound(metric: Metric, d: f32, s: f64) -> f64 {
+    match metric {
+        Metric::SqEuclidean => (d as f64 - s).max(0.0).sqrt(),
+        _ => (d as f64 - s).max(0.0),
+    }
+}
+
+/// The skip test: do `lb`/`ub` separate by more than twice the kernel
+/// slack in comparison space? (Squared space for squared Euclidean.)
+#[inline]
+fn bounds_separate(metric: Metric, lb: f64, ub: f64, s: f64) -> bool {
+    match metric {
+        Metric::SqEuclidean => lb * lb - ub * ub > 2.0 * s,
+        _ => lb - ub > 2.0 * s,
+    }
+}
+
+/// The pruned assignment lane. One instance lives for one fit; the
+/// driver calls [`PrunedAssigner::begin_epoch`] with the iteration's
+/// medoids before each assignment job, and mappers call
+/// [`PrunedAssigner::assign_split`] once per split per epoch.
+pub struct PrunedAssigner {
+    metric: Metric,
+    epoch: Mutex<Arc<EpochData>>,
+    splits: Mutex<HashMap<u64, SplitState>>,
+}
+
+impl PrunedAssigner {
+    pub fn new(metric: Metric) -> PrunedAssigner {
+        PrunedAssigner {
+            metric,
+            epoch: Mutex::new(Arc::new(EpochData {
+                epoch: 0,
+                medoids: Vec::new(),
+                dims: 0,
+                m2: Vec::new(),
+                drift: Vec::new(),
+                drift_max: 0.0,
+                drift_max_idx: usize::MAX,
+                drift_second: 0.0,
+                index: None,
+                med_scale: 0.0,
+            })),
+            splits: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Start a new epoch over `medoids`: compute per-medoid drift vs.
+    /// the previous epoch's medoids, rebuild the spatial index, and
+    /// precompute the fast-path norms. If the medoid set's structure
+    /// changed (k or dims), all cached split bounds are discarded.
+    pub fn begin_epoch(&self, medoids: &[Point]) {
+        assert!(!medoids.is_empty(), "begin_epoch with no medoids");
+        let dims = medoids[0].dims();
+        let mut guard = self.epoch.lock().unwrap();
+        let prev = guard.clone();
+        let structure_ok =
+            prev.epoch > 0 && prev.medoids.len() == medoids.len() && prev.dims == dims;
+        let drift: Vec<f64> = if structure_ok {
+            medoids
+                .iter()
+                .zip(&prev.medoids)
+                .map(|(new, old)| {
+                    // Inflate for f64 rounding so the stored drift can
+                    // never undershoot the true displacement.
+                    self.metric.displacement(old, new) * (1.0 + 1e-9)
+                })
+                .collect()
+        } else {
+            vec![0.0; medoids.len()]
+        };
+        let (mut dmax, mut didx, mut dsecond) = (0.0f64, usize::MAX, 0.0f64);
+        for (j, &d) in drift.iter().enumerate() {
+            if d > dmax {
+                dsecond = dmax;
+                dmax = d;
+                didx = j;
+            } else if d > dsecond {
+                dsecond = d;
+            }
+        }
+        let fast2d = dims == 2 && self.metric == Metric::SqEuclidean;
+        let m2: Vec<f32> = if fast2d {
+            medoids.iter().map(|m| m.x() * m.x() + m.y() * m.y()).collect()
+        } else {
+            Vec::new()
+        };
+        let med_scale = medoids
+            .iter()
+            .map(|m| norm_scale(self.metric, m))
+            .fold(0.0f64, f64::max);
+        *guard = Arc::new(EpochData {
+            epoch: prev.epoch + 1,
+            medoids: medoids.to_vec(),
+            dims,
+            m2,
+            drift,
+            drift_max: dmax,
+            drift_max_idx: didx,
+            drift_second: dsecond,
+            index: SpatialIndex::build(medoids, self.metric),
+            med_scale,
+        });
+        drop(guard);
+        if !structure_ok {
+            self.splits.lock().unwrap().clear();
+        }
+    }
+
+    /// Assign one split's points for the current epoch. `split_key` must
+    /// be stable across epochs for the same point range (the MR drivers
+    /// use the split's `row_start`). Returns the same labels, f32
+    /// min-distance bits, and per-cluster cost/count bits as
+    /// [`super::ops::assign_points`] over the same inputs, with
+    /// `dist_evals` counting the evaluations actually performed.
+    pub fn assign_split(
+        &self,
+        be: &dyn ComputeBackend,
+        split_key: u64,
+        points: &[Point],
+        medoids: &[Point],
+    ) -> Result<AssignResult> {
+        let ep = self.epoch.lock().unwrap().clone();
+        if ep.epoch == 0 {
+            bail!("PrunedAssigner::assign_split before begin_epoch");
+        }
+        debug_assert_eq!(
+            ep.medoids, medoids,
+            "assign_split medoids differ from the current epoch's"
+        );
+        let _ = medoids;
+        let metric = self.metric;
+        let k = ep.medoids.len();
+        let n = points.len();
+        let fast2d = ep.dims == 2 && metric == Metric::SqEuclidean;
+        let b = be.block().max(1);
+
+        let taken = self.splits.lock().unwrap().remove(&split_key);
+        let (mut st, fresh) = match taken {
+            Some(s) if s.epoch + 1 == ep.epoch && s.label.len() == n => (s, false),
+            _ => (SplitState::fresh(n, metric, points), true),
+        };
+
+        // Kernel-error slack in comparison space (squared space for
+        // squared Euclidean): 1e-4 of the coordinate scale dominates
+        // the f32 kernel error by > 100x; 0.5 km dwarfs the f64→f32
+        // haversine rounding (~1e-3 km).
+        let s = match metric {
+            Metric::Haversine => 0.5,
+            _ => 1e-4 * (ep.med_scale + st.p_scale).max(1.0),
+        };
+
+        let mut labels = Vec::with_capacity(n);
+        let mut mindists = Vec::with_capacity(n);
+        let mut cost = vec![0f64; k];
+        let mut count = vec![0u64; k];
+        let mut evals: u64 = 0;
+        // Per-block f32 accumulators, folded to f64 per block — the
+        // exact accumulation granularity of the dense blocking loop.
+        let mut bcost = vec![0f32; k];
+        let mut bcount = vec![0f32; k];
+
+        let mut start = 0usize;
+        while start < n {
+            let len = (n - start).min(b);
+            bcost.iter_mut().for_each(|v| *v = 0.0);
+            bcount.iter_mut().for_each(|v| *v = 0.0);
+            for i in start..start + len {
+                let p = &points[i];
+                let mut need_resolve = fresh;
+                if !fresh {
+                    let lab = st.label[i] as usize;
+                    let dr = ep.drift[lab];
+                    st.ub[i] += dr;
+                    st.lb[i] = (st.lb[i] - ep.drift_excl(lab)).max(0.0);
+                    if bounds_separate(metric, st.lb[i], st.ub[i], s) {
+                        if dr != 0.0 {
+                            // Label certified but its medoid moved:
+                            // refresh the cached kernel distance.
+                            let d = kernel_dist(
+                                metric, ep.dims, fast2d, &ep.m2, &ep.medoids, p, lab,
+                            );
+                            evals += 1;
+                            st.md[i] = d;
+                            st.ub[i] = upper_bound(metric, d, s).min(st.ub[i]);
+                        }
+                    } else {
+                        // Hamerly tighten: one exact evaluation of the
+                        // cached label, then re-test.
+                        let d =
+                            kernel_dist(metric, ep.dims, fast2d, &ep.m2, &ep.medoids, p, lab);
+                        evals += 1;
+                        st.md[i] = d;
+                        st.ub[i] = upper_bound(metric, d, s).min(st.ub[i]);
+                        if !bounds_separate(metric, st.lb[i], st.ub[i], s) {
+                            need_resolve = true;
+                        }
+                    }
+                }
+                if need_resolve {
+                    resolve_point(metric, &ep, fast2d, s, p, &mut st, i, &mut evals);
+                }
+                let lab = st.label[i] as usize;
+                let md = st.md[i];
+                labels.push(st.label[i]);
+                mindists.push(md);
+                bcost[lab] += md;
+                bcount[lab] += 1.0;
+            }
+            for j in 0..k {
+                cost[j] += bcost[j] as f64;
+                count[j] += bcount[j] as u64;
+            }
+            start += len;
+        }
+
+        st.epoch = ep.epoch;
+        self.splits.lock().unwrap().insert(split_key, st);
+        Ok(AssignResult {
+            labels,
+            mindists,
+            cluster_cost: cost,
+            cluster_count: count,
+            dist_evals: evals,
+        })
+    }
+}
+
+/// Full resolve of one point: scan the spatial-index candidates (or all
+/// medoids) with kernel-identical arithmetic, tracking best and
+/// second-best; rebuild label, cached distance, and both bounds.
+#[allow(clippy::too_many_arguments)]
+fn resolve_point(
+    metric: Metric,
+    ep: &EpochData,
+    fast2d: bool,
+    s: f64,
+    p: &Point,
+    st: &mut SplitState,
+    i: usize,
+    evals: &mut u64,
+) {
+    let k = ep.medoids.len();
+    let mut best = f32::INFINITY;
+    let mut best_j = 0usize;
+    let mut second = f32::INFINITY;
+    let mut floor = f64::INFINITY;
+    let cell = ep.index.as_ref().and_then(|ix| ix.cell(p));
+    match cell {
+        Some(cell) => {
+            for &ju in &cell.cands {
+                let j = ju as usize;
+                let d = kernel_dist(metric, ep.dims, fast2d, &ep.m2, &ep.medoids, p, j);
+                if d < best {
+                    second = best;
+                    best = d;
+                    best_j = j;
+                } else if d < second {
+                    second = d;
+                }
+            }
+            *evals += cell.cands.len() as u64;
+            floor = cell.excluded_floor;
+        }
+        None => {
+            for j in 0..k {
+                let d = kernel_dist(metric, ep.dims, fast2d, &ep.m2, &ep.medoids, p, j);
+                if d < best {
+                    second = best;
+                    best = d;
+                    best_j = j;
+                } else if d < second {
+                    second = d;
+                }
+            }
+            *evals += k as u64;
+        }
+    }
+    st.label[i] = best_j as u32;
+    st.md[i] = best;
+    st.ub[i] = upper_bound(metric, best, s);
+    let second_lb = if second.is_finite() {
+        lower_bound(metric, second, s)
+    } else {
+        f64::INFINITY
+    };
+    st.lb[i] = second_lb.min(floor).max(0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::NativeBackend;
+    use super::super::ops::assign_points;
+    use super::*;
+    use crate::util::proptest::for_all;
+    use crate::util::rng::Rng;
+
+    fn be() -> NativeBackend {
+        NativeBackend::new(64, 16)
+    }
+
+    fn rand_points_d(rng: &mut Rng, n: usize, spread: f64, dims: usize) -> Vec<Point> {
+        (0..n)
+            .map(|_| {
+                let c: Vec<f32> =
+                    (0..dims).map(|_| (rng.f64() * spread - spread / 2.0) as f32).collect();
+                Point::from_slice(&c)
+            })
+            .collect()
+    }
+
+    fn latlon_points(rng: &mut Rng, n: usize) -> Vec<Point> {
+        (0..n)
+            .map(|_| {
+                Point::new(
+                    rng.range_f64(-75.0, 75.0) as f32,
+                    rng.range_f64(-170.0, 170.0) as f32,
+                )
+            })
+            .collect()
+    }
+
+    /// Jitter medoids slightly, as converging iterations do; leave a
+    /// random subset exactly in place (drift == 0, the cached-distance
+    /// fast case).
+    fn jitter(rng: &mut Rng, medoids: &mut [Point], step: f64) {
+        for m in medoids.iter_mut() {
+            if rng.below(4) == 0 {
+                continue;
+            }
+            let dims = m.dims();
+            let c: Vec<f32> = (0..dims)
+                .map(|d| m.coord(d) + (rng.f64() * step - step / 2.0) as f32)
+                .collect();
+            *m = Point::from_slice(&c);
+        }
+    }
+
+    fn assert_identical(
+        pruned: &AssignResult,
+        dense: &AssignResult,
+        ctx: &str,
+    ) {
+        assert_eq!(pruned.labels, dense.labels, "{ctx}: labels diverged");
+        assert_eq!(pruned.mindists.len(), dense.mindists.len());
+        for (i, (a, b)) in pruned.mindists.iter().zip(&dense.mindists).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: mindist {i} not bitwise-identical");
+        }
+        for (j, (a, b)) in
+            pruned.cluster_cost.iter().zip(&dense.cluster_cost).enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: cluster cost {j} bits diverged");
+        }
+        assert_eq!(pruned.cluster_count, dense.cluster_count, "{ctx}: counts diverged");
+    }
+
+    /// Core identity property: over multiple epochs of drifting medoids
+    /// and multiple splits, the pruned lane is bitwise-identical to the
+    /// dense oracle (labels, mindist bits, cost bits, counts) for every
+    /// supported `(metric, dims)` combination — while evaluating fewer
+    /// distances once bounds are warm.
+    #[test]
+    fn pruned_lane_is_byte_identical_to_dense_across_epochs() {
+        let combos: &[(Metric, usize, f64)] = &[
+            (Metric::SqEuclidean, 2, 2e4),
+            (Metric::SqEuclidean, 3, 2e4),
+            (Metric::SqEuclidean, 8, 2e4),
+            (Metric::Manhattan, 2, 2e4),
+            (Metric::Manhattan, 3, 2e4),
+            (Metric::Manhattan, 8, 2e4),
+        ];
+        for &(metric, dims, spread) in combos {
+            for_all(4, 0x9F2 ^ (dims as u64) ^ ((metric as u64) << 4), |rng| {
+                let n = 300 + rng.below(200);
+                let k = 2 + rng.below(8);
+                let pts = rand_points_d(rng, n, spread, dims);
+                let mut medoids = rand_points_d(rng, k, spread, dims);
+                let be = be();
+                let pa = PrunedAssigner::new(metric);
+                let split_at = n / 2;
+                let mut pruned_evals = 0u64;
+                let mut dense_evals = 0u64;
+                for epoch in 0..6 {
+                    pa.begin_epoch(&medoids);
+                    for (key, range) in
+                        [(0u64, 0..split_at), (split_at as u64, split_at..n)]
+                    {
+                        let slice = &pts[range];
+                        let got = pa.assign_split(&be, key, slice, &medoids).unwrap();
+                        let want = assign_points(&be, slice, &medoids, metric).unwrap();
+                        assert_identical(
+                            &got,
+                            &want,
+                            &format!("{metric:?} d={dims} epoch {epoch} split {key}"),
+                        );
+                        pruned_evals += got.dist_evals;
+                        dense_evals += want.dist_evals;
+                    }
+                    jitter(rng, &mut medoids, spread * 1e-4);
+                }
+                assert!(
+                    pruned_evals < dense_evals,
+                    "{metric:?} d={dims}: pruned {pruned_evals} >= dense {dense_evals}"
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn pruned_lane_is_byte_identical_for_haversine() {
+        for_all(4, 0x9A7, |rng| {
+            let n = 250 + rng.below(150);
+            let k = 2 + rng.below(6);
+            let pts = latlon_points(rng, n);
+            let mut medoids = latlon_points(rng, k);
+            let be = be();
+            let pa = PrunedAssigner::new(Metric::Haversine);
+            for epoch in 0..5 {
+                pa.begin_epoch(&medoids);
+                let got = pa.assign_split(&be, 0, &pts, &medoids).unwrap();
+                let want = assign_points(&be, &pts, &medoids, Metric::Haversine).unwrap();
+                assert_identical(&got, &want, &format!("haversine epoch {epoch}"));
+                jitter(rng, &mut medoids, 0.01);
+            }
+        });
+    }
+
+    /// On clustered data with converging (small-drift) medoids, warm
+    /// bounds skip the vast majority of points: total evaluations drop
+    /// well past the 3x reduction floor the CI gate enforces.
+    #[test]
+    fn warm_bounds_cut_evals_at_least_3x_on_clustered_data() {
+        let mut rng = Rng::new(0xC1D);
+        let k = 8usize;
+        let per = 150usize;
+        let centers = rand_points_d(&mut rng, k, 4e4, 2);
+        let mut pts = Vec::new();
+        for c in &centers {
+            for _ in 0..per {
+                pts.push(Point::new(
+                    c.x() + (rng.f64() * 200.0 - 100.0) as f32,
+                    c.y() + (rng.f64() * 200.0 - 100.0) as f32,
+                ));
+            }
+        }
+        let mut medoids = centers.clone();
+        let be = be();
+        let pa = PrunedAssigner::new(Metric::SqEuclidean);
+        let mut pruned_evals = 0u64;
+        let mut dense_evals = 0u64;
+        for _ in 0..10 {
+            pa.begin_epoch(&medoids);
+            let got = pa.assign_split(&be, 0, &pts, &medoids).unwrap();
+            let want = assign_points(&be, &pts, &medoids, Metric::SqEuclidean).unwrap();
+            assert_eq!(got.labels, want.labels);
+            pruned_evals += got.dist_evals;
+            dense_evals += want.dist_evals;
+            jitter(&mut rng, &mut medoids, 2.0);
+        }
+        assert!(
+            pruned_evals * 3 <= dense_evals,
+            "pruned {pruned_evals} vs dense {dense_evals}: reduction below 3x"
+        );
+    }
+
+    /// Changing k (or dims) between epochs discards stale bounds
+    /// instead of applying them to the wrong medoid set.
+    #[test]
+    fn structure_change_resets_bounds() {
+        let mut rng = Rng::new(0x57A);
+        let pts = rand_points_d(&mut rng, 200, 1e3, 2);
+        let be = be();
+        let pa = PrunedAssigner::new(Metric::SqEuclidean);
+        for k in [4usize, 6, 3] {
+            let medoids = rand_points_d(&mut rng, k, 1e3, 2);
+            pa.begin_epoch(&medoids);
+            let got = pa.assign_split(&be, 0, &pts, &medoids).unwrap();
+            let want = assign_points(&be, &pts, &medoids, Metric::SqEuclidean).unwrap();
+            assert_identical(&got, &want, &format!("k={k}"));
+            // Fresh structure = full resolves; with the index the count
+            // may undercut n×k but never exceed it.
+            assert!(got.dist_evals <= want.dist_evals);
+        }
+    }
+
+    #[test]
+    fn mode_resolution_honors_durability() {
+        assert!(PruningMode::On.enabled(true, true));
+        assert!(!PruningMode::Off.enabled(false, false));
+        assert!(PruningMode::Auto.enabled(false, false));
+        assert!(!PruningMode::Auto.enabled(true, false));
+        assert!(!PruningMode::Auto.enabled(false, true));
+        assert_eq!(PruningMode::parse("auto"), Some(PruningMode::Auto));
+        assert_eq!(PruningMode::parse("bogus"), None);
+        assert_eq!(PruningMode::default(), PruningMode::Auto);
+    }
+}

@@ -1,7 +1,8 @@
 //! Snapshot + query layers: immutable [`ClusterModel`] publications and
 //! the lock-free [`ModelHandle`] epoch swap.
 
-use crate::geo::{BBox, Metric, Point, PointSource};
+use crate::geo::index::SpatialIndex;
+use crate::geo::{Metric, Point, PointSource};
 use crate::runtime::{assign_points, ComputeBackend};
 use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -25,7 +26,7 @@ pub struct ClusterModel {
     medoids: Vec<Point>,
     metric: Metric,
     dims: usize,
-    grid: Option<GridIndex>,
+    grid: Option<SpatialIndex>,
 }
 
 impl ClusterModel {
@@ -52,7 +53,7 @@ impl ClusterModel {
             backend.kpad()
         );
         let grid = if dims == 2 && metric == Metric::SqEuclidean && medoids.len() > 1 {
-            GridIndex::build(&medoids)
+            SpatialIndex::build(&medoids, metric)
         } else {
             None
         };
@@ -84,16 +85,16 @@ impl ClusterModel {
     /// Nearest-medoid query: `(medoid index, f32 dissimilarity)` exactly
     /// as the batch label pass would report for this point. When the grid
     /// index applies, only the cell's candidate medoids are staged into
-    /// the kernel; the answer is provably identical (see [`GridIndex`]).
+    /// the kernel; the answer is provably identical (see [`SpatialIndex`]).
     pub fn assign(&self, p: &Point) -> (u32, f32) {
         assert_eq!(p.dims(), self.dims, "query dims mismatch");
         if let Some(grid) = &self.grid {
-            if let Some(cands) = grid.candidates(p) {
-                if cands.len() < self.medoids.len() {
+            if let Some(cell) = grid.cell(p) {
+                if cell.cands.len() < self.medoids.len() {
                     let sub: Vec<Point> =
-                        cands.iter().map(|&j| self.medoids[j as usize]).collect();
+                        cell.cands.iter().map(|&j| self.medoids[j as usize]).collect();
                     let (local, dist) = self.kernel_one(p, &sub);
-                    return (cands[local as usize], dist);
+                    return (cell.cands[local as usize], dist);
                 }
             }
         }
@@ -135,100 +136,6 @@ impl ClusterModel {
         }
         (labels, dists)
     }
-}
-
-/// Conservative per-cell candidate lists for 2-D squared-Euclidean
-/// queries: cell `c` keeps medoid `m` iff the *minimum* squared distance
-/// from `c`'s rectangle to `m` is within `slack` of the best medoid's
-/// *maximum* squared distance over the rectangle. `slack` is 1e-3 of the
-/// largest squared coordinate norm in play — more than three orders of
-/// magnitude above the f32 expanded-norm kernel error — so a pruned
-/// medoid can never be the kernel's argmin for any query in the cell,
-/// and pruning cannot change the served answer. Queries outside the
-/// padded bounding box fall back to the full medoid slab.
-struct GridIndex {
-    min_x: f64,
-    min_y: f64,
-    cell_w: f64,
-    cell_h: f64,
-    g: usize,
-    /// Row-major `g × g` candidate lists (ascending medoid indices).
-    cands: Vec<Vec<u32>>,
-}
-
-impl GridIndex {
-    fn build(medoids: &[Point]) -> Option<GridIndex> {
-        let bbox = BBox::of(medoids)?;
-        // Pad so typical queries near (but outside) the medoid hull still
-        // hit a cell; anything farther out takes the full-slab path.
-        let pad = 0.5 * f32::max(bbox.width(), bbox.height()).max(1.0) as f64;
-        let (min_x, min_y) = (bbox.min_x as f64 - pad, bbox.min_y as f64 - pad);
-        let (max_x, max_y) = (bbox.max_x as f64 + pad, bbox.max_y as f64 + pad);
-        if !(min_x.is_finite() && min_y.is_finite() && max_x.is_finite() && max_y.is_finite()) {
-            return None;
-        }
-        let g = (((4 * medoids.len()) as f64).sqrt().ceil() as usize).clamp(4, 32);
-        let cell_w = (max_x - min_x) / g as f64;
-        let cell_h = (max_y - min_y) / g as f64;
-        let mut m2max: f64 = 1.0;
-        for m in medoids {
-            m2max = m2max.max((m.x() as f64).powi(2) + (m.y() as f64).powi(2));
-        }
-        for (cx, cy) in [(min_x, min_y), (min_x, max_y), (max_x, min_y), (max_x, max_y)] {
-            m2max = m2max.max(cx * cx + cy * cy);
-        }
-        let slack = 1e-3 * m2max;
-        let mut cands = Vec::with_capacity(g * g);
-        for row in 0..g {
-            for col in 0..g {
-                let x0 = min_x + col as f64 * cell_w;
-                let y0 = min_y + row as f64 * cell_h;
-                let rect = (x0, y0, x0 + cell_w, y0 + cell_h);
-                let ub = medoids
-                    .iter()
-                    .map(|m| rect_max_d2(rect, m))
-                    .fold(f64::INFINITY, f64::min);
-                let list: Vec<u32> = medoids
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, m)| rect_min_d2(rect, m) <= ub + slack)
-                    .map(|(j, _)| j as u32)
-                    .collect();
-                debug_assert!(!list.is_empty());
-                cands.push(list);
-            }
-        }
-        Some(GridIndex { min_x, min_y, cell_w, cell_h, g, cands })
-    }
-
-    fn candidates(&self, p: &Point) -> Option<&[u32]> {
-        let fx = (p.x() as f64 - self.min_x) / self.cell_w;
-        let fy = (p.y() as f64 - self.min_y) / self.cell_h;
-        if !(0.0..=self.g as f64).contains(&fx) || !(0.0..=self.g as f64).contains(&fy) {
-            return None;
-        }
-        let col = (fx as usize).min(self.g - 1);
-        let row = (fy as usize).min(self.g - 1);
-        Some(&self.cands[row * self.g + col])
-    }
-}
-
-/// Squared distance from the nearest point of `rect` to `m` (0 inside).
-fn rect_min_d2(rect: (f64, f64, f64, f64), m: &Point) -> f64 {
-    let (x0, y0, x1, y1) = rect;
-    let (mx, my) = (m.x() as f64, m.y() as f64);
-    let dx = (x0 - mx).max(0.0).max(mx - x1);
-    let dy = (y0 - my).max(0.0).max(my - y1);
-    dx * dx + dy * dy
-}
-
-/// Squared distance from the farthest corner of `rect` to `m`.
-fn rect_max_d2(rect: (f64, f64, f64, f64), m: &Point) -> f64 {
-    let (x0, y0, x1, y1) = rect;
-    let (mx, my) = (m.x() as f64, m.y() as f64);
-    let dx = (mx - x0).abs().max((mx - x1).abs());
-    let dy = (my - y0).abs().max((my - y1).abs());
-    dx * dx + dy * dy
 }
 
 /// The current-model slot readers share: an atomic pointer to the latest

@@ -9,7 +9,7 @@ use crate::clustering::seeding::{min_dists_chunked, plus_plus_serial, recluster_
 use crate::clustering::ClusterOutcome;
 use crate::geo::{Metric, Point, Weighted};
 use crate::persist::{Checkpoint, CheckpointStore, DeltaWal};
-use crate::runtime::ops::{self, assign_weighted};
+use crate::runtime::ops::assign_weighted;
 use crate::runtime::ComputeBackend;
 use crate::session::{ClusterSession, DatasetHandle};
 use crate::util::rng::Rng;
@@ -148,7 +148,7 @@ impl ServeSession {
         let target = cfg.coreset_size.unwrap_or_else(|| default_coreset_size(k, n)).max(k).min(n);
         let mut rng = Rng::new(seed ^ 0x5E4E);
         let (reps, _) = plus_plus_serial(&points, target, &mut rng, metric);
-        let (labels, _) = min_dists_chunked(backend.as_ref(), &points, &reps, metric);
+        let (labels, _, _) = min_dists_chunked(backend.as_ref(), &points, &reps, metric);
         let mut weights = vec![0f64; reps.len()];
         for &l in &labels {
             weights[l as usize] += 1.0;
@@ -431,10 +431,10 @@ impl ServeSession {
                 &mut rng,
                 self.metric,
             );
-            let (labels, _) =
+            let (labels, _, assign_evals) =
                 min_dists_chunked(self.backend.as_ref(), &self.reps, &new_reps, self.metric);
-            self.dist_evals += (self.target as u64) * self.reps.len() as u64
-                + ops::assign_dist_evals(self.reps.len(), new_reps.len());
+            self.dist_evals +=
+                (self.target as u64) * self.reps.len() as u64 + assign_evals;
             let mut new_ws = vec![0f64; new_reps.len()];
             for (i, &l) in labels.iter().enumerate() {
                 new_ws[l as usize] += self.weights[i];
@@ -467,7 +467,7 @@ impl ServeSession {
         }
         let coreset = Weighted::new(self.reps.as_slice(), &weights_f32);
         let fin = assign_weighted(self.backend.as_ref(), &coreset, &medoids, self.metric)?;
-        self.dist_evals += ops::assign_dist_evals(self.reps.len(), medoids.len());
+        self.dist_evals += fin.dist_evals;
         let cost_after: f64 = fin.cluster_cost.iter().sum();
         let drift: f64 = medoids
             .iter()

@@ -22,6 +22,13 @@
 //! (e) **Serving identity** — a [`ClusterModel`] published from the
 //!     fit's medoids answers `assign`/`assign_batch` byte-identically
 //!     to a fresh batch assign pass over the same medoids.
+//! (f) **Pruned-lane identity** — the default fit (`PruningMode::Auto`
+//!     resolves to the pruned triangle-inequality lane here: no
+//!     durability) matches a dense-forced (`PruningMode::Off`) twin on
+//!     medoids, cost bits, iteration count, and labels, while never
+//!     evaluating more distances. Cost bits seal the per-point f32
+//!     min-distances: the lanes fold them block-by-block in the same
+//!     order, so any mindist bit flip lands in the cost bits.
 //!
 //! Adding an algorithm = adding one row to [`MATRIX`] (the coreset
 //! pipeline entered exactly that way). The declared factors document
@@ -110,6 +117,7 @@ fn fit_once(
     metric: Metric,
     threads: usize,
     seed: u64,
+    pruning: PruningMode,
 ) -> Fit {
     let mut session =
         ClusterSession::builder().test(4).seed(seed).threads(threads).build().unwrap();
@@ -119,6 +127,7 @@ fn fit_once(
     exp.k = K;
     exp.metric = metric;
     exp.update = UpdateStrategy::Exact;
+    exp.pruning = pruning;
     exp.with_quality = true; // label_pass where the solver supports it
     let out = exp
         .clusterer()
@@ -149,9 +158,11 @@ fn run_cell_matrix(metric: Metric, spec: &SpatialSpec) {
     let mut oracle_costs: Vec<(Algorithm, f64, f64)> = Vec::new();
     for row in MATRIX {
         // (a) identity across compute-thread widths.
-        let base = fit_once(row.algorithm, &dataset, &spec, metric, THREADS[0], seed);
+        let base =
+            fit_once(row.algorithm, &dataset, &spec, metric, THREADS[0], seed, PruningMode::Auto);
         for &t in &THREADS[1..] {
-            let other = fit_once(row.algorithm, &dataset, &spec, metric, t, seed);
+            let other =
+                fit_once(row.algorithm, &dataset, &spec, metric, t, seed, PruningMode::Auto);
             let name = row.algorithm.name();
             assert_eq!(base.medoids, other.medoids, "[{cell}] {name}: medoids diverged at t={t}");
             assert_eq!(base.cost, other.cost, "[{cell}] {name}: cost diverged at t={t}");
@@ -169,6 +180,34 @@ fn run_cell_matrix(metric: Metric, spec: &SpatialSpec) {
             );
             assert_eq!(base.labels, other.labels, "[{cell}] {name}: labels diverged at t={t}");
         }
+
+        // (f) pruned vs dense lane byte-identity. `base` already runs the
+        // pruned lane (Auto, no durability); the Off twin forces the dense
+        // kernels. The lanes must agree exactly — and pruning must never
+        // add evaluations. (sim clock and eval counts legitimately differ:
+        // skipped work is skipped simulated work.)
+        let dense =
+            fit_once(row.algorithm, &dataset, &spec, metric, THREADS[0], seed, PruningMode::Off);
+        let name = row.algorithm.name();
+        assert_eq!(base.medoids, dense.medoids, "[{cell}] {name}: pruned medoids diverged");
+        assert_eq!(
+            base.cost.to_bits(),
+            dense.cost.to_bits(),
+            "[{cell}] {name}: pruned cost bits diverged ({} vs {})",
+            base.cost,
+            dense.cost
+        );
+        assert_eq!(
+            base.iterations, dense.iterations,
+            "[{cell}] {name}: pruned iteration count diverged"
+        );
+        assert_eq!(base.labels, dense.labels, "[{cell}] {name}: pruned labels diverged");
+        assert!(
+            base.dist_evals <= dense.dist_evals,
+            "[{cell}] {name}: pruned lane evaluated MORE distances ({} vs {})",
+            base.dist_evals,
+            dense.dist_evals
+        );
 
         // (b) reported cost agrees with the oracle cost of its own medoids.
         assert_eq!(base.medoids.len(), K, "[{cell}] {}", row.algorithm.name());
@@ -326,4 +365,41 @@ fn coreset_runs_fewer_jobs_than_iterative_mr_in_harness_setup() {
     let iterative = jobs_of(Algorithm::KMedoidsRandomMR);
     assert_eq!(coreset, 2, "coreset merge job + exact cost pass");
     assert!(coreset < iterative, "coreset {coreset} jobs vs kmedoids-mr {iterative}");
+}
+
+/// The pruned lane's headline property (the same floor `bench perf`
+/// gates in CI): on clustered data the cached triangle-inequality bounds
+/// cut the exact distance-eval count at least 3x, with byte-identical
+/// output. Iterations are pinned and the centroid-nearest update keeps
+/// the reduce side cheap, so the assignment passes — the lane under
+/// test — dominate the count.
+#[test]
+fn pruned_lane_cuts_dist_evals_at_least_3x_on_clustered_data() {
+    let mut spec = SpatialSpec::new(4_000, 9, 11);
+    spec.outlier_frac = 0.0;
+    let dataset = generate(&spec);
+    let fit_lane = |mode: PruningMode| {
+        let mut session = ClusterSession::builder().test(4).seed(11).build().unwrap();
+        let data = session.ingest("pts", &dataset);
+        let mut exp = Experiment::paper_cell(Algorithm::KMedoidsPlusPlusMR, 4, 0, 11);
+        exp.spec = spec.clone();
+        exp.k = 12;
+        exp.update = UpdateStrategy::CentroidNearest;
+        exp.fixed_iters = Some(8);
+        exp.with_quality = true;
+        exp.pruning = mode;
+        exp.clusterer().fit(&mut session, &data).unwrap()
+    };
+    let dense = fit_lane(PruningMode::Off);
+    let pruned = fit_lane(PruningMode::On);
+    assert_eq!(pruned.medoids, dense.medoids, "pruned medoids diverged");
+    assert_eq!(pruned.cost.to_bits(), dense.cost.to_bits(), "pruned cost bits diverged");
+    assert_eq!(pruned.labels, dense.labels, "pruned labels diverged");
+    let reduction = dense.dist_evals as f64 / pruned.dist_evals.max(1) as f64;
+    assert!(
+        reduction >= 3.0,
+        "dense {} vs pruned {} evals: {reduction:.2}x reduction below the 3x floor",
+        dense.dist_evals,
+        pruned.dist_evals
+    );
 }
