@@ -36,6 +36,15 @@
 //! | `KMedoids::serial()` | `kmedoids-serial` | [`super::pam`] |
 //! | `Clarans::serial()` | `clarans` | [`super::clarans`] |
 //! | `KMeans::mapreduce()` | `kmeans-mr` | [`super::kmeans`] |
+//!
+//! The MR builders additionally take `.lane(Lane)` — a per-fit
+//! [execution lane](crate::mapreduce::Lane) override that runs the fit
+//! on the Hadoop MR scheduler or the in-memory DAG runtime and restores
+//! the session's lane afterwards — and `.exec(&ExecConfig)`, which
+//! applies the solver-level knobs (`lane`, `pruning`) of the
+//! consolidated [`ExecConfig`] group in one call. Outputs are
+//! byte-identical across lanes; only simulated time differs. The serial
+//! engines never submit MR jobs and refuse a lane override.
 
 use super::clarans::{clarans_observed, ClaransParams};
 use super::coreset::CoresetKMedoids;
@@ -46,7 +55,7 @@ use super::parallel::ParallelKMedoids;
 use super::{ClusterOutcome, FitResume, Init, IterParams, PruningMode, UpdateStrategy};
 use crate::config::ClusterConfig;
 use crate::geo::Metric;
-use crate::mapreduce::Cluster;
+use crate::mapreduce::{Cluster, ExecConfig, Lane};
 use crate::session::{ClusterSession, DatasetHandle};
 use crate::sim::CostModel;
 use anyhow::{ensure, Result};
@@ -72,6 +81,25 @@ fn run_mr_fit(
             Err(e)
         }
     }
+}
+
+/// Apply a per-fit execution-lane override around `run`, restoring the
+/// session's lane afterwards (on error too) so a solver-level override
+/// never leaks into later fits on the same session. `None` inherits
+/// the session's lane untouched.
+fn with_lane_override(
+    session: &mut ClusterSession,
+    lane: Option<Lane>,
+    run: impl FnOnce(&mut ClusterSession) -> Result<ClusterOutcome>,
+) -> Result<ClusterOutcome> {
+    let Some(lane) = lane else { return run(session) };
+    let prev = session.lane();
+    session.set_lane(lane)?;
+    let outcome = run(session);
+    // The previous lane was valid for this session a moment ago and a
+    // fit cannot arm a fault plan, so restoration cannot fail.
+    session.set_lane(prev).expect("restoring the previous execution lane is always valid");
+    outcome
 }
 
 /// Shared serial-fit plumbing: same `fit_start`/`fit_end` pairing as
@@ -199,6 +227,9 @@ pub struct KMedoids {
     /// outputs, fewer distance evaluations). `Auto` defers to the
     /// durability rule in [`PruningMode::enabled`].
     pruning: PruningMode,
+    /// Per-fit execution-lane override; `None` inherits the session's
+    /// lane. MR exec modes only — the serial baseline refuses it.
+    lane: Option<Lane>,
 }
 
 /// Fluent builder for [`KMedoids`].
@@ -227,6 +258,7 @@ impl KMedoids {
                 coreset_size: None,
                 resume: None,
                 pruning: PruningMode::Auto,
+                lane: None,
             },
         }
     }
@@ -339,6 +371,24 @@ impl KMedoidsBuilder {
         self.inner.pruning = mode;
         self
     }
+    /// Execution-lane override for this fit: run on the Hadoop MR
+    /// scheduler or the in-memory DAG runtime regardless of the
+    /// session's lane, restoring the session's lane afterwards.
+    /// Outputs are byte-identical across lanes ([`Lane`]); only
+    /// simulated time differs. MR exec modes only.
+    pub fn lane(mut self, lane: Lane) -> Self {
+        self.inner.lane = Some(lane);
+        self
+    }
+    /// Apply the solver-level knobs of a consolidated [`ExecConfig`]
+    /// group — `lane` and `pruning` — in one call. The session-level
+    /// knobs (threads, speculation, faults, …) are consumed by
+    /// [`crate::session::SessionBuilder::exec`].
+    pub fn exec(mut self, exec: &ExecConfig) -> Self {
+        self.inner.lane = Some(exec.lane);
+        self.inner.pruning = exec.pruning;
+        self
+    }
     pub fn build(self) -> KMedoids {
         self.inner
     }
@@ -393,8 +443,10 @@ impl SpatialClusterer for KMedoids {
                     event_label: None,
                     resume: self.resume.clone(),
                 };
-                run_mr_fit(session, name, points.len(), self.k, |cluster, hub| {
-                    drv.run_observed(cluster, &input, &points, hub)
+                with_lane_override(session, self.lane, |session| {
+                    run_mr_fit(session, name, points.len(), self.k, |cluster, hub| {
+                        drv.run_observed(cluster, &input, &points, hub)
+                    })
                 })
             }
             Exec::Coreset => {
@@ -413,8 +465,10 @@ impl SpatialClusterer for KMedoids {
                     label_pass: self.label_pass,
                     resume: self.resume.clone(),
                 };
-                run_mr_fit(session, name, points.len(), self.k, |cluster, hub| {
-                    drv.run_observed(cluster, &input, &points, hub)
+                with_lane_override(session, self.lane, |session| {
+                    run_mr_fit(session, name, points.len(), self.k, |cluster, hub| {
+                        drv.run_observed(cluster, &input, &points, hub)
+                    })
                 })
             }
             Exec::Serial => {
@@ -430,6 +484,11 @@ impl SpatialClusterer for KMedoids {
                     self.resume.is_none(),
                     "kmedoids-serial cannot resume from a checkpoint (only the MR drivers \
                      emit and restore checkpoints)"
+                );
+                ensure!(
+                    self.lane.is_none(),
+                    "kmedoids-serial runs on the master node and never submits MR jobs; \
+                     remove the lane override (only the MR drivers execute on a lane)"
                 );
                 let backend = session.backend();
                 let bytes = session.dataset_bytes(data);
@@ -474,6 +533,9 @@ pub struct KMeans {
     max_iters: usize,
     rel_tol: f64,
     pruning: PruningMode,
+    /// Per-fit execution-lane override; `None` inherits the session's
+    /// lane (see [`KMedoids`]'s field of the same name).
+    lane: Option<Lane>,
 }
 
 /// Fluent builder for [`KMeans`].
@@ -493,6 +555,7 @@ impl KMeans {
                 max_iters: 30,
                 rel_tol: 1e-3,
                 pruning: PruningMode::Auto,
+                lane: None,
             },
         }
     }
@@ -538,6 +601,19 @@ impl KMeansBuilder {
         self.inner.pruning = mode;
         self
     }
+    /// Execution-lane override for this fit (see
+    /// [`KMedoidsBuilder::lane`]).
+    pub fn lane(mut self, lane: Lane) -> Self {
+        self.inner.lane = Some(lane);
+        self
+    }
+    /// Apply the solver-level knobs of an [`ExecConfig`] group (see
+    /// [`KMedoidsBuilder::exec`]).
+    pub fn exec(mut self, exec: &ExecConfig) -> Self {
+        self.inner.lane = Some(exec.lane);
+        self.inner.pruning = exec.pruning;
+        self
+    }
     pub fn build(self) -> KMeans {
         self.inner
     }
@@ -572,8 +648,10 @@ impl SpatialClusterer for KMeans {
             params,
             metric: self.metric,
         };
-        run_mr_fit(session, self.name(), points.len(), self.k, |cluster, hub| {
-            km.run_observed(cluster, &input, &points, hub)
+        with_lane_override(session, self.lane, |session| {
+            run_mr_fit(session, self.name(), points.len(), self.k, |cluster, hub| {
+                km.run_observed(cluster, &input, &points, hub)
+            })
         })
     }
 }
@@ -593,6 +671,9 @@ pub struct Clarans {
     max_neighbor: Option<usize>,
     cost_sample: Option<usize>,
     paper_scale_sampling: bool,
+    /// Accepted for surface uniformity with the MR builders, but
+    /// CLARANS is serial — any explicit lane is refused at fit time.
+    lane: Option<Lane>,
 }
 
 /// Fluent builder for [`Clarans`].
@@ -612,6 +693,7 @@ impl Clarans {
                 max_neighbor: None,
                 cost_sample: None,
                 paper_scale_sampling: true,
+                lane: None,
             },
         }
     }
@@ -673,6 +755,13 @@ impl ClaransBuilder {
         self.inner.paper_scale_sampling = false;
         self
     }
+    /// Present for surface uniformity with the MR builders — CLARANS
+    /// runs serially on the master node, so any explicit lane is
+    /// refused at fit time (same rule the JSON run-spec layer enforces).
+    pub fn lane(mut self, lane: Lane) -> Self {
+        self.inner.lane = Some(lane);
+        self
+    }
     pub fn build(self) -> Clarans {
         self.inner
     }
@@ -697,6 +786,11 @@ impl SpatialClusterer for Clarans {
             points.len()
         );
         ensure_metric_ok(session, data, self.metric)?;
+        ensure!(
+            self.lane.is_none(),
+            "clarans runs serially on the master node and never submits MR jobs; \
+             remove the lane override (only the MR drivers execute on a lane)"
+        );
         let params = self.params_for(points.len());
         let bytes = session.dataset_bytes(data);
         let outcome = run_serial_fit(session, self.name(), points.len(), self.k, |cfg, cost, hub| {
@@ -780,6 +874,54 @@ mod tests {
         assert_eq!(p.pruning, PruningMode::Auto, "pruning defaults to Auto");
         let off = KMedoids::mapreduce().pruning(PruningMode::Off).build();
         assert_eq!(off.iter_params().pruning, PruningMode::Off);
+    }
+
+    #[test]
+    fn lane_overrides_thread_through_and_serial_engines_refuse() {
+        use crate::geo::datasets::SpatialSpec;
+        let m = KMedoids::mapreduce().lane(Lane::InMemoryDag).build();
+        assert_eq!(m.lane, Some(Lane::InMemoryDag));
+        assert_eq!(KMedoids::mapreduce().build().lane, None, "default inherits the session");
+
+        let grouped = ExecConfig {
+            lane: Lane::InMemoryDag,
+            pruning: PruningMode::Off,
+            ..ExecConfig::default()
+        };
+        let via = KMedoids::mapreduce().exec(&grouped).build();
+        assert_eq!(via.lane, Some(Lane::InMemoryDag));
+        assert_eq!(via.pruning, PruningMode::Off);
+        let km = KMeans::mapreduce().exec(&grouped).build();
+        assert_eq!(km.lane, Some(Lane::InMemoryDag));
+        assert_eq!(km.pruning, PruningMode::Off);
+
+        let mut session = ClusterSession::builder().test(3).seed(1).build().unwrap();
+        let data = session.ingest_spec("pts", &SpatialSpec::new(400, 3, 1));
+        let e = KMedoids::serial()
+            .k(3)
+            .lane(Lane::HadoopMr)
+            .build()
+            .fit(&mut session, &data)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("lane override"), "{e:#}");
+        let e = Clarans::serial()
+            .k(3)
+            .lane(Lane::InMemoryDag)
+            .build()
+            .fit(&mut session, &data)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("lane override"), "{e:#}");
+    }
+
+    #[test]
+    fn per_fit_lane_override_restores_the_session_lane() {
+        use crate::geo::datasets::SpatialSpec;
+        let mut session = ClusterSession::builder().test(3).seed(9).build().unwrap();
+        let data = session.ingest_spec("pts", &SpatialSpec::new(600, 3, 9));
+        assert_eq!(session.lane(), Lane::HadoopMr);
+        let solver = KMedoids::mapreduce().k(3).fixed_iters(2).lane(Lane::InMemoryDag).build();
+        solver.fit(&mut session, &data).unwrap();
+        assert_eq!(session.lane(), Lane::HadoopMr, "the override must not leak");
     }
 
     #[test]

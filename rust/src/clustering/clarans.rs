@@ -10,6 +10,10 @@
 //! is documented in DESIGN.md's substitutions. Cost evaluation is
 //! metric-generic; the 2-D squared-Euclidean case keeps its hand-inlined
 //! f32 fast loop (CLARANS cost evaluation dominates its runtime).
+//!
+//! CLARANS is serial (master-node only) and never submits MR jobs, so
+//! execution lanes ([`crate::mapreduce::Lane`]) do not apply — the
+//! fluent API refuses a lane override rather than silently ignoring it.
 
 use super::metrics::total_cost_metric;
 use super::observe::{IterationEvent, ObserverHub};

@@ -29,6 +29,12 @@
 //! shuffle moves O(coreset) bytes instead of O(n) per iteration. The
 //! conformance harness (`rust/tests/conformance.rs`) checks the cost
 //! stays within a declared factor of the brute-force oracle.
+//!
+//! Both jobs go through [`Cluster::try_run_job`], so the pipeline runs
+//! unchanged on either execution lane ([`crate::mapreduce::Lane`]) with
+//! byte-identical output. (With only two jobs it profits least from
+//! the DAG lane's split cache — the interesting lane contrast is the
+//! iterative drivers'.)
 
 use super::observe::{FitCheckpoint, IterationEvent, ObserverHub};
 use super::seeding::{min_dists_chunked, recluster_candidates};

@@ -13,6 +13,11 @@
 //! K-Medoids MR engine), still reported under the `kmeans-mr` event name:
 //! the "centers" are then data points, which is exactly the correct
 //! generalization (there is no closed-form mean under L1/haversine).
+//!
+//! Like the K-Medoids driver, this one submits jobs through
+//! [`Cluster::try_run_job`] and therefore runs unchanged on either
+//! execution lane ([`crate::mapreduce::Lane`]); outputs are
+//! byte-identical across lanes, only simulated time differs.
 
 use super::observe::{IterationEvent, ObserverHub};
 use super::parallel::ParallelKMedoids;

@@ -12,6 +12,11 @@
 //! Both are metric-generic: the run's [`Metric`] drives assignment,
 //! update, and cost exactly as in the MR drivers, so serial-vs-parallel
 //! comparisons stay apples-to-apples for every `(dims, metric)` pair.
+//!
+//! Neither engine submits MR jobs, so execution lanes
+//! ([`crate::mapreduce::Lane`]) do not apply here — the fluent API
+//! refuses a lane override on `kmedoids-serial` rather than silently
+//! ignoring it.
 
 use super::observe::{IterationEvent, ObserverHub};
 use super::seeding::{oversample_serial, plus_plus_serial, random_init};

@@ -21,6 +21,15 @@
 //! format (coordinate runs are `dims` f32s per point), the kernels, and
 //! the update step, and outputs stay byte-identical across compute
 //! thread counts for every `(dims, metric)` pair (enforced by tests).
+//!
+//! The driver is also execution-lane agnostic: it submits [`JobSpec`]s
+//! through [`Cluster::try_run_job`], which dispatches to the cluster's
+//! active [`crate::mapreduce::Lane`] — the Hadoop MR scheduler or the
+//! in-memory DAG runtime. Jobs reuse the same map/reduce compute either
+//! way, so a fit's medoids, labels, cost bits, and dist-eval counters
+//! are byte-identical across lanes; only simulated time differs (the
+//! DAG lane keeps parsed splits resident across the iteration loop,
+//! which is precisely where iterative K-Medoids wins on it).
 
 use super::observe::{FitCheckpoint, IterationEvent, ObserverHub};
 use super::seeding::init_mr;

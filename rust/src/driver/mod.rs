@@ -24,6 +24,7 @@ use crate::clustering::{metrics, FitResume, Init, PruningMode, UpdateStrategy};
 use crate::config::ClusterConfig;
 use crate::geo::datasets::SpatialSpec;
 use crate::geo::Metric;
+use crate::mapreduce::Lane;
 use crate::persist::CheckpointStore;
 use crate::runtime::ComputeBackend;
 use crate::session::{ClusterSession, DatasetHandle};
@@ -133,6 +134,15 @@ pub struct Experiment {
     /// evaluations; `Auto` (default) prunes unless the cell checkpoints
     /// or resumes. Honored by the MR K-Medoids drivers and k-means.
     pub pruning: PruningMode,
+    /// Execution lane the cell's jobs run through (`--lane
+    /// hadoop-mr|in-memory-dag`): outputs are byte-identical across
+    /// lanes, only simulated time differs. MR algorithms only — the
+    /// serial algorithms refuse a non-default lane.
+    pub lane: Lane,
+    /// Transient-failure retry budget per task (`--max-attempts`),
+    /// applied when a session is built *for* this cell (like
+    /// `threads`). Hadoop lane only.
+    pub max_attempts: Option<usize>,
 }
 
 impl Experiment {
@@ -158,6 +168,8 @@ impl Experiment {
             checkpoint_dir: None,
             resume: false,
             pruning: PruningMode::Auto,
+            lane: Lane::HadoopMr,
+            max_attempts: None,
         }
     }
 
@@ -187,6 +199,7 @@ impl Experiment {
                     .update(self.update)
                     .metric(self.metric)
                     .pruning(self.pruning)
+                    .lane(self.lane)
                     .label_pass(self.with_quality);
                 b = match self.algorithm {
                     Algorithm::KMedoidsPlusPlusMR => b.plus_plus(),
@@ -210,6 +223,7 @@ impl Experiment {
                     .seed(self.seed)
                     .metric(self.metric)
                     .pruning(self.pruning)
+                    .lane(self.lane)
                     .label_pass(self.with_quality);
                 if let Some(size) = self.coreset_size {
                     b = b.coreset_size(size);
@@ -232,6 +246,12 @@ impl Experiment {
                      emit and restore checkpoints)",
                     self.algorithm.name()
                 );
+                anyhow::ensure!(
+                    self.lane == Lane::HadoopMr,
+                    "{} runs serially and never submits MR jobs; execution lanes only \
+                     apply to the MR algorithms",
+                    self.algorithm.name()
+                );
                 Box::new(
                     KMedoids::serial()
                         .k(self.k)
@@ -247,6 +267,12 @@ impl Experiment {
                     resume.is_none(),
                     "{} cannot resume from a checkpoint (only the MR K-Medoids drivers \
                      emit and restore checkpoints)",
+                    self.algorithm.name()
+                );
+                anyhow::ensure!(
+                    self.lane == Lane::HadoopMr,
+                    "{} runs serially and never submits MR jobs; execution lanes only \
+                     apply to the MR algorithms",
                     self.algorithm.name()
                 );
                 Box::new(Clarans::serial().k(self.k).seed(self.seed).metric(self.metric).build())
@@ -265,6 +291,7 @@ impl Experiment {
                         .seed(self.seed)
                         .metric(self.metric)
                         .pruning(self.pruning)
+                        .lane(self.lane)
                         .build(),
                 )
             }
@@ -371,6 +398,9 @@ pub fn run_experiment(exp: &Experiment, backend: &Arc<dyn ComputeBackend>) -> Ex
     if let Some(dir) = &exp.checkpoint_dir {
         builder = builder.checkpoint_dir(dir.clone());
     }
+    if let Some(n) = exp.max_attempts {
+        builder = builder.max_attempts(n);
+    }
     let mut session = builder.build().unwrap_or_else(|e| panic!("session build failed: {e:#}"));
     let data = session.ingest_spec("points", &exp.spec);
     let mut r = run_cell(&mut session, exp, &data)
@@ -407,6 +437,8 @@ mod tests {
             checkpoint_dir: None,
             resume: false,
             pruning: PruningMode::Auto,
+            lane: Lane::HadoopMr,
+            max_attempts: None,
         }
     }
 
@@ -524,6 +556,32 @@ mod tests {
             assert!(r.time_ms > 0, "{}", algorithm.name());
             assert!(r.cost > 0.0, "{}", algorithm.name());
             assert_eq!(r.n_points, 3000);
+        }
+    }
+
+    #[test]
+    fn dag_lane_cell_matches_mr_cell_byte_for_byte() {
+        let mut exp = quick_exp(Algorithm::KMedoidsPlusPlusMR, 4);
+        exp.fixed_iters = Some(3);
+        let mr = run_experiment(&exp, &be());
+        exp.lane = Lane::InMemoryDag;
+        let dag = run_experiment(&exp, &be());
+        assert_eq!(dag.cost.to_bits(), mr.cost.to_bits());
+        assert_eq!(dag.dist_evals, mr.dist_evals);
+        assert_eq!(dag.iterations, mr.iterations);
+        assert_eq!(dag.ari, mr.ari);
+        assert!(dag.time_ms < mr.time_ms, "dag {} !< mr {}", dag.time_ms, mr.time_ms);
+    }
+
+    #[test]
+    fn serial_cell_refuses_a_dag_lane() {
+        let mut session = ClusterSession::builder().test(4).seed(71).build().unwrap();
+        let data = session.ingest_spec("pts", &SpatialSpec::new(2000, 3, 71));
+        for algorithm in [Algorithm::Clarans, Algorithm::KMedoidsSerial] {
+            let mut exp = quick_exp(algorithm, 4);
+            exp.lane = Lane::InMemoryDag;
+            let e = run_cell(&mut session, &exp, &data).unwrap_err();
+            assert!(format!("{e:#}").contains("lanes"), "{}: {e:#}", algorithm.name());
         }
     }
 

@@ -32,6 +32,7 @@ use super::{Algorithm, Experiment};
 use crate::clustering::{PruningMode, UpdateStrategy};
 use crate::geo::datasets::SpatialSpec;
 use crate::geo::{Metric, MAX_DIMS};
+use crate::mapreduce::Lane;
 use crate::util::json::{obj, Json};
 use anyhow::{bail, Context, Result};
 
@@ -323,6 +324,20 @@ fn algorithm_uses_pruning(a: Algorithm) -> bool {
     )
 }
 
+/// Does this algorithm honor the execution-`lane` knob (and its
+/// Hadoop-lane companion `max_attempts`)? The serial engines never
+/// submit MR jobs, so a lane there would be inert — refused instead.
+fn algorithm_uses_lane(a: Algorithm) -> bool {
+    matches!(
+        a,
+        Algorithm::KMedoidsPlusPlusMR
+            | Algorithm::KMedoidsRandomMR
+            | Algorithm::KMedoidsScalableMR
+            | Algorithm::KMedoidsCoresetMR
+            | Algorithm::KMeansMR
+    )
+}
+
 /// Does this algorithm emit / restore durable checkpoints
 /// ([`crate::persist`])? Only the MR k-medoids drivers fire the
 /// per-iteration checkpoint event, so `checkpoint_dir` / `resume` on any
@@ -386,6 +401,16 @@ pub fn experiment_to_json(e: &Experiment) -> Json {
     if algorithm_uses_pruning(e.algorithm) {
         pairs.push(("pruning", Json::Str(e.pruning.name().to_string())));
     }
+    if algorithm_uses_lane(e.algorithm) {
+        pairs.push(("lane", Json::Str(e.lane.name().to_string())));
+        pairs.push((
+            "max_attempts",
+            match e.max_attempts {
+                Some(n) => Json::Num(n as f64),
+                None => Json::Null,
+            },
+        ));
+    }
     if algorithm_uses_checkpoints(e.algorithm) {
         pairs.push((
             "checkpoint_dir",
@@ -415,6 +440,8 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
             "oversample",
             "coreset_size",
             "pruning",
+            "lane",
+            "max_attempts",
             "checkpoint_dir",
             "resume",
             "dataset",
@@ -557,6 +584,60 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
             })?
         }
     };
+    let lane = match j.get("lane") {
+        None | Some(Json::Null) => Lane::HadoopMr,
+        Some(v) => {
+            if !algorithm_uses_lane(algorithm) {
+                bail!(SpecError::bad(
+                    "lane",
+                    format!(
+                        "is ignored by algorithm {:?} (the serial engines never submit MR \
+                         jobs) — remove it from the spec cell",
+                        algorithm.name()
+                    ),
+                ));
+            }
+            let s = v.as_str().ok_or_else(|| {
+                SpecError::bad("lane", "must be \"hadoop-mr\" or \"in-memory-dag\"")
+            })?;
+            Lane::parse(s).ok_or_else(|| match Lane::suggest(s) {
+                Some(sugg) => SpecError::bad(
+                    "lane",
+                    format!(
+                        "unknown value {s:?} (hadoop-mr|in-memory-dag) — did you mean \
+                         {sugg:?}?"
+                    ),
+                ),
+                None => SpecError::bad(
+                    "lane",
+                    format!("unknown value {s:?} (hadoop-mr|in-memory-dag)"),
+                ),
+            })?
+        }
+    };
+    let max_attempts = match j.get("max_attempts") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            if !algorithm_uses_lane(algorithm) {
+                bail!(SpecError::bad(
+                    "max_attempts",
+                    format!(
+                        "is ignored by algorithm {:?} (only the MR algorithms schedule \
+                         task attempts) — remove it from the spec cell",
+                        algorithm.name()
+                    ),
+                ));
+            }
+            if lane == Lane::InMemoryDag {
+                bail!(SpecError::bad(
+                    "max_attempts",
+                    "only applies to the hadoop-mr lane (the in-memory DAG lane does not \
+                     model task failures) — remove it or switch lanes",
+                ));
+            }
+            Some(as_pos_usize(v, "max_attempts")?)
+        }
+    };
     let checkpoint_dir = match j.get("checkpoint_dir") {
         None | Some(Json::Null) => None,
         Some(v) => {
@@ -636,6 +717,8 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         fixed_iters,
         threads,
         pruning,
+        lane,
+        max_attempts,
     })
 }
 
@@ -853,6 +936,19 @@ mod tests {
                 } else {
                     PruningMode::Auto
                 };
+                e.lane = if algorithm_uses_lane(algorithm) && i % 2 == 1 {
+                    Lane::InMemoryDag
+                } else {
+                    Lane::HadoopMr
+                };
+                // max_attempts is a Hadoop-lane knob, so only cells that
+                // stayed on that lane may carry it.
+                e.max_attempts =
+                    if algorithm_uses_lane(algorithm) && e.lane == Lane::HadoopMr && i % 3 == 0 {
+                        Some(6)
+                    } else {
+                        None
+                    };
                 e.checkpoint_dir = if algorithm_uses_checkpoints(algorithm) && i % 2 == 0 {
                     Some(std::path::PathBuf::from(format!("ckpts/cell-{i}")))
                 } else {
@@ -1149,6 +1245,74 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{e:#}").contains("fast"), "{e:#}");
+    }
+
+    #[test]
+    fn lane_knob_parses_and_validates() {
+        for (text, want) in [
+            ("\"hadoop-mr\"", Lane::HadoopMr),
+            ("\"in-memory-dag\"", Lane::InMemoryDag),
+            ("\"spark\"", Lane::InMemoryDag),
+        ] {
+            let src = format!(
+                r#"{{"algorithm": "kmedoids++-mr", "lane": {text},
+                    "dataset": {{"n_points": 500}}}}"#
+            );
+            let cells = experiments_from_str(&src).unwrap();
+            assert_eq!(cells[0].lane, want, "{text}");
+        }
+
+        // Absent / null means the Hadoop lane (the default axis).
+        let cells = experiments_from_str(
+            r#"{"algorithm": "kmeans-mr", "lane": null, "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].lane, Lane::HadoopMr);
+
+        // The serial engines never submit MR jobs: the knob is refused
+        // there with a typed error.
+        let e = experiments_from_str(
+            r#"{"algorithm": "clarans", "lane": "hadoop-mr", "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.downcast_ref::<SpecError>().unwrap().key(), "lane");
+
+        // Unknown values get a did-you-mean hint when one is close.
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids++-mr", "lane": "sparkk",
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("did you mean") && msg.contains("in-memory-dag"), "{msg}");
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids++-mr", "lane": "completely-wrong",
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("unknown value") && !msg.contains("did you mean"), "{msg}");
+
+        // max_attempts parses on the Hadoop lane, is refused on the DAG
+        // lane and on algorithms without a lane.
+        let cells = experiments_from_str(
+            r#"{"algorithm": "kmedoids-mr", "max_attempts": 6,
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap();
+        assert_eq!(cells[0].max_attempts, Some(6));
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids-mr", "lane": "in-memory-dag", "max_attempts": 6,
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.downcast_ref::<SpecError>().unwrap().key(), "max_attempts");
+        let e = experiments_from_str(
+            r#"{"algorithm": "kmedoids-serial", "max_attempts": 6,
+                "dataset": {"n_points": 500}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.downcast_ref::<SpecError>().unwrap().key(), "max_attempts");
     }
 
     #[test]

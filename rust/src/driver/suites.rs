@@ -18,7 +18,7 @@ use crate::clustering::{ClusterOutcome, Init, UpdateStrategy};
 use crate::config::ClusterConfig;
 use crate::geo::datasets::{generate, SpatialSpec};
 use crate::geo::{Metric, Point};
-use crate::mapreduce::locality_fraction;
+use crate::mapreduce::{locality_fraction, Lane};
 use crate::runtime::{
     assign_points, pairwise_costs, pairwise_costs_src, ComputeBackend, PruningMode,
 };
@@ -932,6 +932,201 @@ pub fn scale_suite(backend: &Arc<dyn ComputeBackend>, opts: &ScaleOpts) -> Json 
     ])
 }
 
+// ---- lanes bench ------------------------------------------------------------
+
+/// Knobs for the `bench lanes` suite (the Hadoop MR lane vs the
+/// in-memory DAG lane, per MR algorithm, across cluster sizes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LanesOpts {
+    /// Divide the base dataset (Table 5 dataset 1).
+    pub scale_div: usize,
+    pub seed: u64,
+    /// Cluster sizes swept for every algorithm × lane pair.
+    pub nodes_sweep: Vec<usize>,
+    /// Real-compute worker threads (wallclock only).
+    pub threads: usize,
+    /// Tiny-n CI mode.
+    pub smoke: bool,
+}
+
+impl Default for LanesOpts {
+    fn default() -> Self {
+        LanesOpts {
+            scale_div: 32,
+            seed: 42,
+            nodes_sweep: vec![1, 2, 4, 8],
+            threads: 1,
+            smoke: false,
+        }
+    }
+}
+
+impl LanesOpts {
+    /// CI smoke defaults: tiny base n, short sweep, same JSON schema.
+    pub fn smoke() -> LanesOpts {
+        LanesOpts {
+            scale_div: 400,
+            nodes_sweep: vec![1, 2, 4],
+            smoke: true,
+            ..LanesOpts::default()
+        }
+    }
+}
+
+/// Controlled iteration count for every lanes cell (as in `bench
+/// scale`): both lanes must do the same algorithmic work for the
+/// identity gate to mean anything, and pinning the count keeps that
+/// visibly so.
+const LANES_ITERS: usize = 4;
+
+/// What one lane's fit contributes to a lanes cell.
+struct LaneFit {
+    out: ClusterOutcome,
+    jobs: usize,
+    wall_s: f64,
+}
+
+fn lane_fit(
+    backend: &Arc<dyn ComputeBackend>,
+    opts: &LanesOpts,
+    algo: Algorithm,
+    nodes: usize,
+    lane: Lane,
+    points: &Arc<Vec<Point>>,
+) -> LaneFit {
+    let mut session = ClusterSession::builder()
+        .cluster(ClusterConfig::commodity_cluster(nodes))
+        .backend(backend.clone())
+        .seed(opts.seed)
+        .threads(opts.threads)
+        .lane(lane)
+        .build()
+        .expect("session build cannot fail with an explicit backend");
+    let data = session.ingest_points("points", points.clone());
+    let mut exp = Experiment::paper_cell(algo, nodes, 0, opts.seed);
+    exp.spec = SpatialSpec::new(points.len(), 9, opts.seed);
+    exp.fixed_iters = Some(LANES_ITERS);
+    exp.with_quality = true; // labels feed the identity gate
+    exp.lane = lane;
+    let wall0 = Instant::now();
+    let out = exp.clusterer().fit(&mut session, &data).expect("lanes cell failed");
+    LaneFit { jobs: session.jobs_run(), out, wall_s: wall0.elapsed().as_secs_f64() }
+}
+
+/// The MR-vs-DAG comparison (the arXiv 1605.01802 axis): every MR
+/// algorithm × cluster size runs the identical fit once per execution
+/// lane on the same ingested dataset, and the suite gates on two
+/// blocking verdicts — `identity_ok` (the DAG-lane fit is
+/// byte-identical to the Hadoop-lane fit: medoids, cost bits,
+/// iterations, labels, job counts, and exact distance-eval counts) and
+/// `dag_faster_ok` (the DAG lane's simulated time is strictly below the
+/// Hadoop lane's in every cell). Returns the `BENCH_lanes.json`
+/// document.
+pub fn lanes_suite(backend: &Arc<dyn ComputeBackend>, opts: &LanesOpts) -> Json {
+    let mut sweep = opts.nodes_sweep.clone();
+    sweep.retain(|&n| n >= 1);
+    sweep.sort_unstable();
+    sweep.dedup();
+    if sweep.is_empty() {
+        sweep = LanesOpts::default().nodes_sweep;
+    }
+    let algos = [
+        Algorithm::KMedoidsPlusPlusMR,
+        Algorithm::KMedoidsRandomMR,
+        Algorithm::KMedoidsScalableMR,
+        Algorithm::KMedoidsCoresetMR,
+    ];
+    let spec = SpatialSpec::paper_dataset_scaled(0, opts.scale_div.max(1), opts.seed);
+    let points = Arc::new(generate(&spec).points);
+    let k = Experiment::paper_cell(Algorithm::KMedoidsPlusPlusMR, 1, 0, opts.seed).k;
+
+    header("lanes: hadoop-mr vs in-memory-dag (identity + sim time)");
+    let mut cells: Vec<Json> = Vec::new();
+    let mut ratios: BTreeMap<String, Vec<(usize, f64)>> = BTreeMap::new();
+    let mut identity_ok = true;
+    let mut dag_faster_ok = true;
+    for algo in algos {
+        for &nodes in &sweep {
+            let mr = lane_fit(backend, opts, algo, nodes, Lane::HadoopMr, &points);
+            let dag = lane_fit(backend, opts, algo, nodes, Lane::InMemoryDag, &points);
+            let identical = dag.out.medoids == mr.out.medoids
+                && dag.out.cost.to_bits() == mr.out.cost.to_bits()
+                && dag.out.iterations == mr.out.iterations
+                && dag.out.labels == mr.out.labels
+                && dag.out.dist_evals == mr.out.dist_evals
+                && dag.jobs == mr.jobs;
+            let dag_faster = dag.out.sim_seconds < mr.out.sim_seconds;
+            identity_ok &= identical;
+            dag_faster_ok &= dag_faster;
+            let ratio = mr.out.sim_seconds / dag.out.sim_seconds.max(1e-9);
+            ratios.entry(algo.name().to_string()).or_default().push((nodes, ratio));
+            let verdict = match (identical, dag_faster) {
+                (false, _) => "  IDENTITY MISMATCH",
+                (true, false) => "  DAG NOT FASTER",
+                (true, true) => "",
+            };
+            eprintln!(
+                "  [lanes] {:<22} nodes={:<3} -> mr {:>8} ms vs dag {:>8} ms \
+                 ({ratio:.1}x){verdict}",
+                algo.name(),
+                nodes,
+                (mr.out.sim_seconds * 1e3).round() as u64,
+                (dag.out.sim_seconds * 1e3).round() as u64,
+            );
+            cells.push(obj(vec![
+                ("algorithm", Json::Str(algo.name().to_string())),
+                ("nodes", Json::Num(nodes as f64)),
+                ("n_points", Json::Num(points.len() as f64)),
+                ("mr_time_ms", Json::Num((mr.out.sim_seconds * 1e3).round())),
+                ("dag_time_ms", Json::Num((dag.out.sim_seconds * 1e3).round())),
+                ("speedup", Json::Num(ratio)),
+                ("jobs", Json::Num(mr.jobs as f64)),
+                ("iterations", Json::Num(mr.out.iterations as f64)),
+                ("cost", Json::Num(mr.out.cost)),
+                ("dist_evals", Json::Num(mr.out.dist_evals as f64)),
+                ("wall_s", Json::Num(mr.wall_s + dag.wall_s)),
+                ("identical", Json::Bool(identical)),
+                ("dag_faster", Json::Bool(dag_faster)),
+            ]));
+        }
+    }
+
+    // Per-algorithm speedup curves as `[nodes, mr/dag]` pairs in
+    // ascending-nodes order (same shape as the scale bench's curves).
+    let speedup = Json::Obj(
+        ratios
+            .into_iter()
+            .map(|(algo, mut pts)| {
+                pts.sort_unstable_by_key(|&(n, _)| n);
+                let curve: Vec<Json> = pts
+                    .iter()
+                    .map(|&(n, r)| Json::Arr(vec![Json::Num(n as f64), Json::Num(r)]))
+                    .collect();
+                (algo, Json::Arr(curve))
+            })
+            .collect(),
+    );
+
+    obj(vec![
+        ("bench", Json::Str("lanes".into())),
+        ("smoke", Json::Bool(opts.smoke)),
+        ("backend", Json::Str(backend.name().to_string())),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("scale_div", Json::Num(opts.scale_div.max(1) as f64)),
+        ("n_points", Json::Num(points.len() as f64)),
+        ("k", Json::Num(k as f64)),
+        ("fixed_iters", Json::Num(LANES_ITERS as f64)),
+        (
+            "nodes_sweep",
+            Json::Arr(sweep.iter().map(|&n| Json::Num(n as f64)).collect()),
+        ),
+        ("cells", Json::Arr(cells)),
+        ("speedup", speedup),
+        ("identity_ok", Json::Bool(identity_ok)),
+        ("dag_faster_ok", Json::Bool(dag_faster_ok)),
+    ])
+}
+
 // ---------------------------------------------------------------------------
 // Serving bench: mixed nearest-medoid query / mini-batch update workload.
 // ---------------------------------------------------------------------------
@@ -1493,6 +1688,92 @@ mod tests {
                     "n_node_failures",
                     "task_fail_rate",
                     "identical",
+                ],
+            );
+        }
+    }
+
+    #[test]
+    fn lanes_suite_smoke_identity_and_speedup() {
+        let mut opts = LanesOpts::smoke();
+        opts.scale_div = 1600;
+        opts.nodes_sweep = vec![1, 2];
+        opts.seed = 7;
+        let j = lanes_suite(&be(), &opts);
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("lanes"));
+        // Both blocking gates hold at test scale.
+        assert_eq!(j.get("identity_ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("dag_faster_ok").unwrap().as_bool(), Some(true));
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 8, "4 MR algorithms x 2 cluster sizes");
+        for c in cells {
+            assert_eq!(c.get("identical").unwrap().as_bool(), Some(true));
+            assert_eq!(c.get("dag_faster").unwrap().as_bool(), Some(true));
+            assert!(c.get("speedup").unwrap().as_f64().unwrap() > 1.0);
+        }
+        // Every per-algorithm curve stays strictly above 1x at every
+        // swept cluster size.
+        let curves = j.get("speedup").unwrap().as_obj().unwrap();
+        assert_eq!(curves.len(), 4);
+        for (algo, curve) in curves {
+            for pt in curve.as_arr().unwrap() {
+                let pair = pt.as_arr().unwrap();
+                assert!(
+                    pair[1].as_f64().unwrap() > 1.0,
+                    "{algo} @ nodes={:?}: dag must be strictly faster",
+                    pair[0]
+                );
+            }
+        }
+        // The document is valid, re-parseable JSON.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn golden_schema_bench_lanes_json() {
+        let mut opts = LanesOpts::smoke();
+        opts.scale_div = 1600;
+        opts.nodes_sweep = vec![1];
+        let j = lanes_suite(&be(), &opts);
+        assert_exact_keys(
+            &j,
+            "BENCH_lanes.json",
+            &[
+                "bench",
+                "smoke",
+                "backend",
+                "seed",
+                "scale_div",
+                "n_points",
+                "k",
+                "fixed_iters",
+                "nodes_sweep",
+                "cells",
+                "speedup",
+                "identity_ok",
+                "dag_faster_ok",
+            ],
+        );
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        assert!(!cells.is_empty());
+        for c in cells {
+            assert_exact_keys(
+                c,
+                "BENCH_lanes.json cell",
+                &[
+                    "algorithm",
+                    "nodes",
+                    "n_points",
+                    "mr_time_ms",
+                    "dag_time_ms",
+                    "speedup",
+                    "jobs",
+                    "iterations",
+                    "cost",
+                    "dist_evals",
+                    "wall_s",
+                    "identical",
+                    "dag_faster",
                 ],
             );
         }

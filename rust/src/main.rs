@@ -19,11 +19,12 @@
 
 use anyhow::{bail, Context, Result};
 use kmedoids_mr::config::ClusterConfig;
-use kmedoids_mr::driver::suites::{ScaleOpts, ServeOpts, SuiteOpts};
+use kmedoids_mr::driver::suites::{LanesOpts, ScaleOpts, ServeOpts, SuiteOpts};
 use kmedoids_mr::driver::{run_cell, spec, Algorithm, Experiment, ExperimentResult};
 use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
 use kmedoids_mr::geo::io::write_csv;
 use kmedoids_mr::geo::{Metric, MAX_DIMS};
+use kmedoids_mr::mapreduce::Lane;
 use kmedoids_mr::prelude::{ClusterSession, IterationLog, PruningMode, StderrProgress};
 use kmedoids_mr::report;
 use kmedoids_mr::runtime::{self, BackendKind};
@@ -177,6 +178,7 @@ USAGE:
   kmedoids-mr run   [--algo ALGO] [--nodes N] [--dataset 0|1|2] [--k K]
                     [--metric METRIC] [--dims D] [--oversample L] [--rounds R]
                     [--coreset-size C] [--pruning on|off|auto]
+                    [--lane hadoop-mr|in-memory-dag] [--max-attempts N]
                     [--checkpoint-dir DIR] [--resume]
                     [--scale DIV] [--seed S] [--backend auto|pjrt|native]
                     [--threads N] [--quality] [--trace]
@@ -195,6 +197,8 @@ USAGE:
                     [--batch B] [--coreset-size C] [--scale DIV] [--seed S]
                     [--smoke] [--out BENCH_serve.json]
   kmedoids-mr bench serve --spec SERVE.json [--smoke] [--out BENCH_serve.json]
+  kmedoids-mr bench lanes [--nodes 1,2,4,8] [--scale DIV] [--seed S]
+                    [--threads N] [--smoke] [--out BENCH_lanes.json]
   kmedoids-mr inspect-artifacts
 
 ALGO:   kmedoids++-mr | kmedoids-mr | kmedoids-scalable-mr
@@ -217,6 +221,23 @@ the dense kernels, and `auto` (the default) prunes except on
 checkpointed or resumed fits, whose recorded eval counts must match a
 dense replay. Labels, medoids and cost are byte-identical either way —
 only `work.dist.evals` changes.
+
+--lane selects the execution backend the MR jobs run through (see
+README \"Execution lanes\"): `hadoop-mr` (the default) models the Hadoop
+batch runtime — JVM task launch, per-job input parse, disk shuffle —
+while `in-memory-dag` (aliases: dag, spark) models a Spark-style DAG
+engine that caches input splits in executor memory across iterations,
+launches tasks without JVM spin-up, and overlaps a push-based shuffle.
+Labels, medoids, cost and dist-eval counts are byte-identical across
+lanes; only simulated time differs. MR algorithms only. The DAG lane
+does not model task failures, so it refuses fault plans and
+--max-attempts (which sets the Hadoop lane's per-task retry budget).
+
+`bench lanes` runs every MR algorithm x cluster size once per execution
+lane on the same ingested dataset and writes the MR-vs-DAG sim-time
+comparison to BENCH_lanes.json. The command exits non-zero unless the
+DAG-lane fits are byte-identical to the Hadoop-lane fits and strictly
+faster on simulated time in every cell — the blocking CI quality gates.
 
 --checkpoint-dir DIR durably checkpoints every MR iteration (atomic
 write-rename, CRC-checked; see README \"Durability & crash recovery\");
@@ -310,6 +331,9 @@ fn run_one_cell(
     if let Some(dir) = &exp.checkpoint_dir {
         builder = builder.checkpoint_dir(dir.clone());
     }
+    if let Some(n) = exp.max_attempts {
+        builder = builder.max_attempts(n);
+    }
     let mut session = builder.build()?;
     let log = IterationLog::new();
     session.add_observer(Box::new(log.clone()));
@@ -347,8 +371,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         "run",
         &[
             "spec", "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds",
-            "coreset-size", "pruning", "checkpoint-dir", "resume", "scale", "seed", "backend",
-            "threads", "quality", "trace",
+            "coreset-size", "pruning", "lane", "max-attempts", "checkpoint-dir", "resume",
+            "scale", "seed", "backend", "threads", "quality", "trace",
         ],
     )?;
     args.check_positionals("run", 0)?;
@@ -358,8 +382,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(path) = args.get("spec") {
         for flag in [
             "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds",
-            "coreset-size", "pruning", "checkpoint-dir", "resume", "scale", "seed", "quality",
-            "threads",
+            "coreset-size", "pruning", "lane", "max-attempts", "checkpoint-dir", "resume",
+            "scale", "seed", "quality", "threads",
         ] {
             if args.has(flag) {
                 bail!("--{flag} conflicts with --spec (put it in the spec file)");
@@ -452,6 +476,57 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         exp.pruning = PruningMode::parse(s)
             .with_context(|| format!("bad --pruning {s:?} (on|off|auto)"))?;
+    }
+    if let Some(s) = args.get("lane") {
+        let honors = matches!(
+            algo,
+            Algorithm::KMedoidsPlusPlusMR
+                | Algorithm::KMedoidsRandomMR
+                | Algorithm::KMedoidsScalableMR
+                | Algorithm::KMedoidsCoresetMR
+                | Algorithm::KMeansMR
+        );
+        if !honors {
+            bail!(
+                "--lane only applies to the MR drivers (the serial engines never submit \
+                 MR jobs); --algo {} does not",
+                algo.name()
+            );
+        }
+        exp.lane = Lane::parse(s).with_context(|| {
+            let hint = Lane::suggest(s)
+                .map(|canon| format!(" — did you mean {canon:?}?"))
+                .unwrap_or_default();
+            format!("bad --lane {s:?} (hadoop-mr|in-memory-dag){hint}")
+        })?;
+    }
+    if args.has("max-attempts") {
+        let honors = matches!(
+            algo,
+            Algorithm::KMedoidsPlusPlusMR
+                | Algorithm::KMedoidsRandomMR
+                | Algorithm::KMedoidsScalableMR
+                | Algorithm::KMedoidsCoresetMR
+                | Algorithm::KMeansMR
+        );
+        if !honors {
+            bail!(
+                "--max-attempts only applies to the MR drivers (only MR jobs schedule \
+                 task attempts); --algo {} does not",
+                algo.name()
+            );
+        }
+        if exp.lane == Lane::InMemoryDag {
+            bail!(
+                "--max-attempts only applies to the hadoop-mr lane (the in-memory DAG \
+                 lane does not model task failures); drop it or switch --lane"
+            );
+        }
+        let n = args.get_usize("max-attempts", 0)?;
+        if n == 0 {
+            bail!("--max-attempts must be >= 1");
+        }
+        exp.max_attempts = Some(n);
     }
     exp.with_quality = args.has("quality");
     exp.threads = args.get_usize("threads", 1)?;
@@ -561,6 +636,30 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         return cmd_bench_serve(args);
     }
+    if which == "lanes" {
+        // `--nodes` is shared with `bench scale`; the fault/speculation
+        // knobs are not (the DAG lane does not model failures) and
+        // lanes has no spec-file mode.
+        if args.has("spec") {
+            bail!("--spec does not apply to `bench lanes` (pass --nodes/--scale/--seed directly)");
+        }
+        for flag in SCALE_ONLY_FLAGS {
+            if !["nodes", "spec"].contains(flag) && args.has(flag) {
+                bail!("--{flag} only applies to `bench scale`");
+            }
+        }
+        for flag in SERVE_ONLY_FLAGS {
+            if args.has(flag) {
+                bail!("--{flag} only applies to `bench serve`");
+            }
+        }
+        for flag in PERF_ONLY_FLAGS {
+            if args.has(flag) {
+                bail!("--{flag} only applies to `bench perf`");
+            }
+        }
+        return cmd_bench_lanes(args);
+    }
     for flag in ["out", "smoke"] {
         if args.has(flag) {
             bail!("--{flag} only applies to `bench perf`, `bench scale` or `bench serve`");
@@ -623,7 +722,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 );
             }
         }
-        other => bail!("unknown bench {other:?} (table6|fig4|fig5|ablation|perf|scale|serve)"),
+        other => {
+            bail!("unknown bench {other:?} (table6|fig4|fig5|ablation|perf|scale|serve|lanes)")
+        }
     }
     Ok(())
 }
@@ -790,6 +891,64 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             Ok(())
         }
         _ => bail!("an online update INCREASED the weighted coreset cost (refinement bug)"),
+    }
+}
+
+/// `bench lanes`: the Hadoop-MR vs in-memory-DAG execution-lane
+/// comparison for the four MR algorithms across cluster sizes, written
+/// to `BENCH_lanes.json` (see `driver::suites::lanes_suite`). Exits
+/// non-zero unless the DAG-lane fits are byte-identical to the
+/// Hadoop-lane fits AND strictly faster on simulated time in every
+/// cell — the blocking CI quality gates.
+fn cmd_bench_lanes(args: &Args) -> Result<()> {
+    if args.has("trace") {
+        bail!("--trace does not apply to `bench lanes` (it prints its own progress)");
+    }
+    let smoke = args.has("smoke");
+    let mut opts = if smoke { LanesOpts::smoke() } else { LanesOpts::default() };
+    if let Some(s) = args.get("nodes") {
+        opts.nodes_sweep = parse_usize_list("nodes", s)?;
+    }
+    opts.scale_div = args.get_usize("scale", opts.scale_div)?.max(1);
+    opts.seed = args.get_u64("seed", opts.seed)?;
+    opts.threads = args.get_usize("threads", 1)?.max(1);
+    opts.smoke = smoke;
+    let backend = backend_from(args, 2048)?;
+    let report = kmedoids_mr::driver::suites::lanes_suite(&backend, &opts);
+    let out = args.get("out").unwrap_or("BENCH_lanes.json");
+    std::fs::write(out, format!("{report}\n")).with_context(|| format!("write {out:?}"))?;
+
+    println!("\nlanes summary, mr-time / dag-time per cluster size (full report: {out}):");
+    if let Some(curves) = report.get("speedup").and_then(|c| c.as_obj()) {
+        for (algo, curve) in curves {
+            // Curves are ascending-nodes arrays of [nodes, ratio] pairs.
+            let line: Vec<String> = curve
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|pair| {
+                    let p = pair.as_arr()?;
+                    let x = p.first()?.as_u64()?;
+                    let r = p.get(1)?.as_f64()?;
+                    Some(format!("{x}:{r:.2}"))
+                })
+                .collect();
+            println!("  {algo:<22} {}", line.join("  "));
+        }
+    }
+    match report.get("identity_ok").and_then(|v| v.as_bool()) {
+        Some(true) => println!("dag-lane output byte-identical to the hadoop-mr lane: yes"),
+        _ => bail!("dag-lane output DIVERGED from the hadoop-mr lane (lane-identity bug)"),
+    }
+    match report.get("dag_faster_ok").and_then(|v| v.as_bool()) {
+        Some(true) => {
+            println!("dag lane strictly faster on sim time in every cell: yes");
+            Ok(())
+        }
+        _ => bail!(
+            "dag lane was NOT strictly faster than hadoop-mr in every cell \
+             (cost-model regression)"
+        ),
     }
 }
 

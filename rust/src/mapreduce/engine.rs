@@ -26,8 +26,17 @@
 //! are merged in task order, so job output, counters, and simulated
 //! timing are byte-identical at any thread count; only the wall clock
 //! changes.
+//!
+//! **Execution lanes.** [`Cluster::try_run_job`] dispatches through the
+//! [`super::exec::ExecutionBackend`] seam: the event-driven scheduler in
+//! this module is the [`super::exec::Lane::HadoopMr`] lane, and
+//! [`super::dag`] is the in-memory DAG lane, which reuses the same
+//! cached task computations (byte-identical output) under Spark-style
+//! timing.
 
 use super::api::{Counters, InputShapeError, Key, MapCtx, ReduceCtx, Val};
+use super::dag::InMemoryDagBackend;
+use super::exec::{ExecutionBackend, HadoopMrBackend, Lane};
 use super::job::{Input, JobSpec, SplitMeta, SplitOrigin};
 use crate::config::ClusterConfig;
 use crate::dfs::{NameNode, NoLiveDataNodes};
@@ -114,13 +123,14 @@ pub fn locality_fraction(node_local: usize, host_local: usize, remote: usize) ->
     }
 }
 
-/// Cached result of one map task's real computation.
-struct MapOut {
+/// Cached result of one map task's real computation. Shared across
+/// execution lanes: both backends schedule the same precomputed output.
+pub(crate) struct MapOut {
     /// Per-reduce-partition (key, value) lists (post-combiner).
-    partitions: Vec<Vec<(Key, Val)>>,
-    part_bytes: Vec<u64>,
-    work: TaskWork,
-    counters: Counters,
+    pub(crate) partitions: Vec<Vec<(Key, Val)>>,
+    pub(crate) part_bytes: Vec<u64>,
+    pub(crate) work: TaskWork,
+    pub(crate) counters: Counters,
 }
 
 #[derive(Clone, Copy, PartialEq, Debug)]
@@ -199,6 +209,14 @@ pub struct Cluster {
     /// value). Plumbed from `SessionBuilder::threads` / the CLI
     /// `--threads` flag; 1 = serial.
     pub compute_threads: usize,
+    /// Which execution backend [`Cluster::try_run_job`] dispatches to.
+    lane: Lane,
+    /// Both lanes' backends, indexed by [`Lane::index`]. They persist
+    /// across jobs (and across lane switches) so the DAG lane's split
+    /// cache stays warm between the iterations of an iterative driver.
+    /// `Option` so a backend can be taken out while it borrows the
+    /// cluster mutably during execution.
+    backends: [Option<Box<dyn ExecutionBackend>>; 2],
 }
 
 impl Cluster {
@@ -225,6 +243,11 @@ impl Cluster {
             pending_rereplication_s: 0.0,
             rng: Rng::new(seed),
             compute_threads: 1,
+            lane: Lane::default(),
+            backends: [
+                Some(Box::new(HadoopMrBackend)),
+                Some(Box::new(InMemoryDagBackend::default())),
+            ],
         }
     }
 
@@ -280,6 +303,44 @@ impl Cluster {
         self.alive.iter().filter(|a| **a).count()
     }
 
+    /// Per-node liveness, indexed like `config.nodes`.
+    pub(crate) fn alive_nodes(&self) -> &[bool] {
+        &self.alive
+    }
+
+    /// Drain the queued DFS re-replication charge (the completing job
+    /// folds it into its duration).
+    pub(crate) fn take_pending_rereplication(&mut self) -> f64 {
+        std::mem::take(&mut self.pending_rereplication_s)
+    }
+
+    /// Is any fault machinery armed — planned node failures/recoveries
+    /// or a transient task-failure rate? The in-memory DAG lane refuses
+    /// to run while this holds (it does not model faults).
+    pub fn faults_armed(&self) -> bool {
+        !self.failure_plan.is_empty() || !self.recover_plan.is_empty() || self.task_fail_rate > 0.0
+    }
+
+    /// The execution lane jobs currently dispatch to.
+    pub fn lane(&self) -> Lane {
+        self.lane
+    }
+
+    /// Switch the execution lane for subsequent jobs. Both backends
+    /// persist across switches, so flipping back to the DAG lane finds
+    /// its split cache still warm. Validation (e.g. refusing the DAG
+    /// lane while faults are armed) lives at the session layer; the DAG
+    /// backend also rejects the combination defensively at job time.
+    pub fn set_lane(&mut self, lane: Lane) {
+        self.lane = lane;
+    }
+
+    /// Builder-style [`Cluster::set_lane`].
+    pub fn with_lane(mut self, lane: Lane) -> Cluster {
+        self.set_lane(lane);
+        self
+    }
+
     /// Advance the cluster clock by `s` simulated seconds. Used by the
     /// session layer to account serial (off-cluster) work on the same
     /// timeline as MR jobs.
@@ -297,13 +358,31 @@ impl Cluster {
         }
     }
 
-    /// Run one MapReduce job to completion. Advances the cluster clock on
-    /// success; a failed job (mis-wired input shape) returns a
-    /// [`JobError`] naming the job and leaves the clock, history, job
-    /// count, and counters untouched. (Planned node failures/recoveries
-    /// that are already due still apply on the error path — they are
-    /// cluster lifecycle, not job state.)
+    /// Run one MapReduce job to completion through the current
+    /// [`Cluster::lane`]. Advances the cluster clock on success; a failed
+    /// job (mis-wired input shape) returns a [`JobError`] naming the job
+    /// and leaves the clock, history, job count, and counters untouched.
+    /// (On the Hadoop lane, planned node failures/recoveries that are
+    /// already due still apply on the error path — they are cluster
+    /// lifecycle, not job state.)
+    ///
+    /// Both lanes produce byte-identical output and counters for the
+    /// same job (they run the same cached task computations); only the
+    /// simulated timing differs.
     pub fn try_run_job(&mut self, spec: &JobSpec) -> Result<JobResult, JobError> {
+        let slot = self.lane.index();
+        let mut backend =
+            self.backends[slot].take().expect("execution backend re-entered recursively");
+        let result = backend.execute(self, spec);
+        self.backends[slot] = Some(backend);
+        result
+    }
+
+    /// The Hadoop MapReduce lane: the event-driven attempt scheduler with
+    /// locality tiers, speculation, transient-failure retry, and
+    /// fault-plan node loss. This is the engine's original `try_run_job`
+    /// body, extracted verbatim behind [`super::exec::ExecutionBackend`].
+    pub(crate) fn run_job_hadoop(&mut self, spec: &JobSpec) -> Result<JobResult, JobError> {
         let t0 = self.now;
         let splits = spec.input.splits();
         let n_maps = splits.len();
@@ -553,8 +632,9 @@ impl Cluster {
 /// One map task's real computation: a pure function of (spec, split), so
 /// the worker pool can run any subset of tasks on any thread and the
 /// cached result is identical. Returns the task output plus the mapper's
-/// input-shape rejection, if any.
-fn run_map_task(spec: &JobSpec, split: &SplitMeta) -> (MapOut, Option<InputShapeError>) {
+/// input-shape rejection, if any. Shared by both execution lanes — this
+/// is what makes their outputs byte-identical.
+pub(crate) fn run_map_task(spec: &JobSpec, split: &SplitMeta) -> (MapOut, Option<InputShapeError>) {
     let mut ctx = MapCtx::default();
     match &spec.input {
         Input::Points { points, .. } => {
@@ -606,14 +686,15 @@ fn run_map_task(spec: &JobSpec, split: &SplitMeta) -> (MapOut, Option<InputShape
 
 /// One reduce task's real computation over the finalized map outputs
 /// (pure in (spec, map_out, r) — pool-safe like [`run_map_task`]).
-struct ReduceTaskOut {
-    emits: Vec<(Key, Val)>,
-    work: TaskWork,
-    counters: Counters,
-    n_input: usize,
+/// Shared by both execution lanes.
+pub(crate) struct ReduceTaskOut {
+    pub(crate) emits: Vec<(Key, Val)>,
+    pub(crate) work: TaskWork,
+    pub(crate) counters: Counters,
+    pub(crate) n_input: usize,
 }
 
-fn run_reduce_task(spec: &JobSpec, map_out: &[Arc<MapOut>], r: usize) -> ReduceTaskOut {
+pub(crate) fn run_reduce_task(spec: &JobSpec, map_out: &[Arc<MapOut>], r: usize) -> ReduceTaskOut {
     // Merge all maps' partition r, sorted by key (stable across maps).
     let mut recs: Vec<(Key, Val)> = Vec::new();
     for mo in map_out {

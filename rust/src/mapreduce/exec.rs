@@ -1,0 +1,260 @@
+//! Execution lanes: pluggable job execution behind one trait.
+//!
+//! The engine has always executed jobs through the Hadoop-style
+//! scheduler in [`super::engine`] — JVM task launch, per-job input
+//! re-parse, spill + fetch shuffle, speculation, fault plans. The
+//! satellite-image study (arXiv:1605.01802) shows the same iterative
+//! clustering workloads compress dramatically on Spark precisely
+//! because the dataset stays cached in executor memory across
+//! iterations and the per-job fixed costs collapse. This module lifts
+//! the execution decision behind [`ExecutionBackend`] so a
+//! [`Cluster`] can run the same jobs through either lane:
+//!
+//! - [`Lane::HadoopMr`] ([`HadoopMrBackend`]) — the extracted original
+//!   path, behavior- and byte-identical: same sim clock, fault plans,
+//!   speculation, locality charging.
+//! - [`Lane::InMemoryDag`] ([`super::dag::InMemoryDagBackend`]) — an
+//!   in-memory DAG runtime that parses each input split once, keeps it
+//!   resident across jobs, and models push-based shuffle and JVM-less
+//!   task launch. It reuses the exact map/reduce compute functions, so
+//!   labels, medoids, cost bits, and dist-eval counters are
+//!   byte-identical across lanes; only simulated time differs.
+//!
+//! Lane selection is one coherent surface: `Lane` here,
+//! `.lane(..)` on [`crate::session::SessionBuilder`] and the
+//! `clustering::api` builders, the `"lane"` JSON spec key, and the
+//! `--lane` CLI flag. [`ExecConfig`] gathers the execution knobs that
+//! had accreted across those surfaces into one reusable group.
+
+use super::engine::{Cluster, JobError, JobResult, DEFAULT_MAX_ATTEMPTS};
+use super::job::JobSpec;
+use crate::runtime::PruningMode;
+use crate::sim::FaultPlan;
+use std::path::PathBuf;
+
+/// Which execution backend a cluster runs its jobs through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// The Hadoop MapReduce scheduler: JVM task launch, per-job input
+    /// parse, spill + fetch shuffle, speculation, fault tolerance.
+    HadoopMr,
+    /// The in-memory DAG runtime ("Spark lane"): splits parsed once
+    /// and cached in executor memory, push-based shuffle, JVM-less
+    /// task launch. Does not model node loss or task failures.
+    InMemoryDag,
+}
+
+impl Default for Lane {
+    fn default() -> Lane {
+        Lane::HadoopMr
+    }
+}
+
+impl Lane {
+    pub const ALL: [Lane; 2] = [Lane::HadoopMr, Lane::InMemoryDag];
+
+    /// Canonical spec/CLI spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lane::HadoopMr => "hadoop-mr",
+            Lane::InMemoryDag => "in-memory-dag",
+        }
+    }
+
+    /// Parse a spec/CLI spelling (canonical names plus the obvious
+    /// shorthands).
+    pub fn parse(s: &str) -> Option<Lane> {
+        match s {
+            "hadoop-mr" | "hadoop" | "mr" => Some(Lane::HadoopMr),
+            "in-memory-dag" | "dag" | "spark" => Some(Lane::InMemoryDag),
+            _ => None,
+        }
+    }
+
+    /// Closest canonical name for an unknown spelling, for
+    /// did-you-mean hints in spec/CLI errors. `None` when nothing is
+    /// plausibly close.
+    pub fn suggest(s: &str) -> Option<&'static str> {
+        const SPELLINGS: &[(&str, &str)] = &[
+            ("hadoop-mr", "hadoop-mr"),
+            ("hadoop", "hadoop-mr"),
+            ("mr", "hadoop-mr"),
+            ("in-memory-dag", "in-memory-dag"),
+            ("dag", "in-memory-dag"),
+            ("spark", "in-memory-dag"),
+        ];
+        SPELLINGS
+            .iter()
+            .map(|&(sp, canon)| (edit_distance(s, sp), canon))
+            .min()
+            .filter(|&(d, _)| d <= 2)
+            .map(|(_, canon)| canon)
+    }
+
+    /// Stable index into the cluster's backend slots.
+    pub(crate) fn index(&self) -> usize {
+        match self {
+            Lane::HadoopMr => 0,
+            Lane::InMemoryDag => 1,
+        }
+    }
+}
+
+/// Levenshtein distance for [`Lane::suggest`].
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// One job-execution strategy. Both implementations run the *same*
+/// cached task computations ([`super::engine`]'s map/reduce functions),
+/// so job output and record-level counters are byte-identical across
+/// lanes (scheduling-shaped counters — locality tiers, attempt counts —
+/// reflect the lane); a backend only decides how the work is scheduled
+/// and what simulated time it costs. Backends persist across jobs on
+/// the same cluster — that is what lets the DAG lane keep its split
+/// cache warm between the iterations of an iterative driver.
+pub trait ExecutionBackend: Send {
+    /// The lane this backend implements.
+    fn lane(&self) -> Lane;
+
+    /// Run one job to completion on `cluster`, advancing its sim clock
+    /// and recording history/counters exactly as
+    /// [`Cluster::try_run_job`] documents.
+    fn execute(&mut self, cluster: &mut Cluster, spec: &JobSpec) -> Result<JobResult, JobError>;
+}
+
+/// The original Hadoop MapReduce lane, extracted verbatim: the
+/// event-driven attempt scheduler with locality tiers, speculation,
+/// transient-failure retry, and fault-plan node loss.
+#[derive(Debug, Default)]
+pub struct HadoopMrBackend;
+
+impl ExecutionBackend for HadoopMrBackend {
+    fn lane(&self) -> Lane {
+        Lane::HadoopMr
+    }
+
+    fn execute(&mut self, cluster: &mut Cluster, spec: &JobSpec) -> Result<JobResult, JobError> {
+        cluster.run_job_hadoop(spec)
+    }
+}
+
+/// The consolidated execution-knob group: everything that shapes *how*
+/// a fit executes (never *what* it computes) in one reusable struct.
+///
+/// Two surfaces consume it, each taking the knobs that exist at its
+/// layer:
+///
+/// - [`crate::session::SessionBuilder::exec`] applies `lane`,
+///   `threads`, `speculation`, `faults`, `max_attempts`, and
+///   `checkpoint_dir` to the session being built.
+/// - The `clustering::api` builders' `.exec(..)` apply `lane` and
+///   `pruning` — the two knobs a solver resolves per fit.
+///
+/// The historical per-knob setters (`.threads(..)`, `.faults(..)`, …)
+/// remain as thin shims over this struct, so existing callers compile
+/// unchanged.
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    /// Execution lane jobs run through (default [`Lane::HadoopMr`]).
+    pub lane: Lane,
+    /// Real-compute worker threads (wallclock only; results and
+    /// simulated time are identical at any width).
+    pub threads: usize,
+    /// Straggler speculation on the Hadoop lane.
+    pub speculation: bool,
+    /// Seeded fault plan (Hadoop lane only: the DAG lane does not
+    /// model node loss or transient task failures, and
+    /// [`ExecConfig::validate`] rejects the combination).
+    pub faults: Option<FaultPlan>,
+    /// Transient-failure retry budget per task (Hadoop lane).
+    pub max_attempts: usize,
+    /// Assignment-lane pruning mode for the solvers that honor it.
+    pub pruning: PruningMode,
+    /// Durable per-iteration checkpoints, written into this directory.
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl Default for ExecConfig {
+    fn default() -> ExecConfig {
+        ExecConfig {
+            lane: Lane::default(),
+            threads: 1,
+            speculation: true,
+            faults: None,
+            max_attempts: DEFAULT_MAX_ATTEMPTS,
+            pruning: PruningMode::default(),
+            checkpoint_dir: None,
+        }
+    }
+}
+
+impl ExecConfig {
+    /// Reject lane-incompatible combinations: the DAG lane models a
+    /// healthy executor fleet, so arming a fault plan under it would
+    /// silently change nothing — an error is more honest.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !(self.lane == Lane::InMemoryDag && self.faults.is_some()),
+            "the in-memory DAG lane does not model node loss or transient task failures; \
+             drop the fault plan or run the hadoop-mr lane"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_names_round_trip_and_aliases_parse() {
+        for lane in Lane::ALL {
+            assert_eq!(Lane::parse(lane.name()), Some(lane));
+        }
+        assert_eq!(Lane::parse("mr"), Some(Lane::HadoopMr));
+        assert_eq!(Lane::parse("hadoop"), Some(Lane::HadoopMr));
+        assert_eq!(Lane::parse("dag"), Some(Lane::InMemoryDag));
+        assert_eq!(Lane::parse("spark"), Some(Lane::InMemoryDag));
+        assert_eq!(Lane::parse("tez"), None);
+        assert_eq!(Lane::default(), Lane::HadoopMr);
+    }
+
+    #[test]
+    fn lane_suggestions_catch_near_misses() {
+        assert_eq!(Lane::suggest("sparkk"), Some("in-memory-dag"));
+        assert_eq!(Lane::suggest("hadop-mr"), Some("hadoop-mr"));
+        assert_eq!(Lane::suggest("dagg"), Some("in-memory-dag"));
+        assert_eq!(Lane::suggest("completely-wrong"), None);
+    }
+
+    #[test]
+    fn exec_config_rejects_faults_on_the_dag_lane() {
+        let mut cfg = ExecConfig::default();
+        assert!(cfg.validate().is_ok());
+        cfg.faults = Some(FaultPlan {
+            node_failures: vec![(5.0, 1)],
+            node_recoveries: vec![],
+            task_fail_rate: 0.1,
+            seed: 7,
+        });
+        assert!(cfg.validate().is_ok(), "faults are fine on the Hadoop lane");
+        cfg.lane = Lane::InMemoryDag;
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("DAG lane"), "{err:#}");
+        cfg.faults = None;
+        assert!(cfg.validate().is_ok(), "the DAG lane itself is fine without faults");
+    }
+}

@@ -3,17 +3,25 @@
 //! See [`engine::Cluster::run_job`]. Drivers build a [`job::JobSpec`] with
 //! an input from [`input_from_table`] (HBase regions → splits, the paper's
 //! input path) or [`input_from_dfs`] (HDFS blocks → splits) and iterate.
+//!
+//! Jobs execute through one of two [`exec::Lane`]s: the Hadoop MR
+//! scheduler in [`engine`] or the in-memory DAG runtime in [`dag`]
+//! (byte-identical output, Spark-style timing).
 
 pub mod api;
+pub mod dag;
 pub mod engine;
+pub mod exec;
 pub mod job;
 
 pub use api::{
     hash_partition, Counters, InputShapeError, Key, MapCtx, Mapper, ReduceCtx, Reducer, Val,
 };
+pub use dag::InMemoryDagBackend;
 pub use engine::{
     group_sorted, locality_fraction, Cluster, JobError, JobResult, JobStats, DEFAULT_MAX_ATTEMPTS,
 };
+pub use exec::{ExecConfig, ExecutionBackend, HadoopMrBackend, Lane};
 pub use job::{Input, JobSpec, SplitMeta, SplitOrigin};
 
 use crate::dfs::NameNode;

@@ -12,6 +12,7 @@ pub use crate::config::ClusterConfig;
 pub use crate::driver::{run_experiment, Algorithm, Experiment, ExperimentResult};
 pub use crate::geo::datasets::{generate, SpatialDataset, SpatialSpec};
 pub use crate::geo::{Metric, Point};
+pub use crate::mapreduce::{ExecConfig, ExecutionBackend, Lane};
 pub use crate::persist::{Checkpoint, CheckpointSink, CheckpointStore, DeltaWal, PersistError};
 pub use crate::runtime::{
     load_backend, BackendKind, ComputeBackend, NativeBackend, PrunedAssigner, PruningMode,

@@ -34,7 +34,9 @@ use crate::clustering::ClusterOutcome;
 use crate::config::ClusterConfig;
 use crate::geo::datasets::{self, SpatialDataset, SpatialSpec};
 use crate::geo::Point;
-use crate::mapreduce::{input_from_table, Cluster, Counters, Input, JobResult, JobSpec, JobStats};
+use crate::mapreduce::{
+    input_from_table, Cluster, Counters, ExecConfig, Input, JobResult, JobSpec, JobStats, Lane,
+};
 use crate::runtime::{load_backend, BackendKind, ComputeBackend, NativeBackend};
 use crate::sim::{CostModel, FaultPlan};
 use anyhow::Result;
@@ -73,6 +75,11 @@ struct DatasetEntry {
 }
 
 /// Fluent builder for [`ClusterSession`].
+///
+/// Execution knobs (lane, threads, speculation, faults, max_attempts,
+/// checkpoint_dir) live in one consolidated [`ExecConfig`], settable
+/// wholesale via [`SessionBuilder::exec`]; the per-knob setters are thin
+/// shims over it.
 pub struct SessionBuilder {
     cfg: ClusterConfig,
     nodes: Option<usize>,
@@ -81,11 +88,7 @@ pub struct SessionBuilder {
     min_block: usize,
     seed: u64,
     cost: CostModel,
-    speculation: bool,
-    threads: usize,
-    faults: Option<FaultPlan>,
-    max_attempts: usize,
-    checkpoint_dir: Option<std::path::PathBuf>,
+    exec: ExecConfig,
 }
 
 impl SessionBuilder {
@@ -126,9 +129,26 @@ impl SessionBuilder {
         self.cost = cost;
         self
     }
+    /// Set the whole consolidated execution-knob group at once. The
+    /// session consumes `lane`, `threads`, `speculation`, `faults`,
+    /// `max_attempts`, and `checkpoint_dir`; `pruning` is a solver knob
+    /// (hand the same `ExecConfig` to a `clustering::api` builder's
+    /// `.exec(..)` to apply it).
+    pub fn exec(mut self, exec: ExecConfig) -> Self {
+        self.exec = exec;
+        self
+    }
+    /// Execution lane for MR jobs (default [`Lane::HadoopMr`]); the
+    /// in-memory DAG lane runs the same jobs byte-identically with
+    /// Spark-style timing. Incompatible with [`SessionBuilder::faults`]
+    /// — [`SessionBuilder::build`] rejects the combination.
+    pub fn lane(mut self, lane: Lane) -> Self {
+        self.exec.lane = lane;
+        self
+    }
     /// Toggle speculative execution (on by default, as in Hadoop).
     pub fn speculation(mut self, on: bool) -> Self {
-        self.speculation = on;
+        self.exec.speculation = on;
         self
     }
     /// Inject a [`FaultPlan`]: planned node failures/recoveries plus a
@@ -136,13 +156,13 @@ impl SessionBuilder {
     /// byte-identical with and without faults — only the simulated time
     /// and attempt statistics change (the engine's recovery contract).
     pub fn faults(mut self, plan: FaultPlan) -> Self {
-        self.faults = Some(plan);
+        self.exec.faults = Some(plan);
         self
     }
     /// Per-task transient-failure budget before the job is failed
     /// (Hadoop's `mapred.map.max.attempts`; default 4).
     pub fn max_attempts(mut self, n: usize) -> Self {
-        self.max_attempts = n.max(1);
+        self.exec.max_attempts = n.max(1);
         self
     }
     /// Worker threads for map/reduce *real* compute (wallclock only —
@@ -150,7 +170,7 @@ impl SessionBuilder {
     /// value). Default 1; pass
     /// [`crate::util::pool::available_threads`]`()` to use every core.
     pub fn threads(mut self, n: usize) -> Self {
-        self.threads = n.max(1);
+        self.exec.threads = n.max(1);
         self
     }
     /// Persist a durable checkpoint (see [`crate::persist`]) after every
@@ -162,7 +182,7 @@ impl SessionBuilder {
     ///
     /// [`KMedoidsBuilder::resume`]: crate::clustering::api::KMedoidsBuilder::resume
     pub fn checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
-        self.checkpoint_dir = Some(dir.into());
+        self.exec.checkpoint_dir = Some(dir.into());
         self
     }
     /// Small homogeneous test cluster + small-block native backend — the
@@ -175,6 +195,7 @@ impl SessionBuilder {
     }
 
     pub fn build(self) -> Result<ClusterSession> {
+        self.exec.validate()?;
         let cfg = match self.nodes {
             Some(n) => self.cfg.cluster_subset(n),
             None => self.cfg,
@@ -183,15 +204,16 @@ impl SessionBuilder {
             Some(b) => b,
             None => load_backend(self.backend_kind, self.min_block)?,
         };
-        let mut cluster = Cluster::new(cfg, self.seed).with_threads(self.threads);
+        let mut cluster =
+            Cluster::new(cfg, self.seed).with_threads(self.exec.threads).with_lane(self.exec.lane);
         cluster.cost = self.cost;
-        cluster.speculation = self.speculation;
-        cluster.max_attempts = self.max_attempts;
-        if let Some(plan) = &self.faults {
+        cluster.speculation = self.exec.speculation;
+        cluster.max_attempts = self.exec.max_attempts;
+        if let Some(plan) = &self.exec.faults {
             cluster.apply_fault_plan(plan);
         }
         let mut observers = ObserverHub::default();
-        if let Some(dir) = &self.checkpoint_dir {
+        if let Some(dir) = &self.exec.checkpoint_dir {
             let store = crate::persist::CheckpointStore::open(dir)?;
             observers.add(Box::new(crate::persist::CheckpointSink::new(store)));
         }
@@ -227,11 +249,7 @@ impl ClusterSession {
             min_block: 2048,
             seed: 42,
             cost: CostModel::default(),
-            speculation: true,
-            threads: 1,
-            faults: None,
-            max_attempts: crate::mapreduce::DEFAULT_MAX_ATTEMPTS,
-            checkpoint_dir: None,
+            exec: ExecConfig::default(),
         }
     }
 
@@ -378,6 +396,25 @@ impl ClusterSession {
     /// Real-compute worker-pool width (see [`SessionBuilder::threads`]).
     pub fn compute_threads(&self) -> usize {
         self.cluster.compute_threads
+    }
+    /// Execution lane MR jobs currently dispatch to (see
+    /// [`SessionBuilder::lane`]).
+    pub fn lane(&self) -> Lane {
+        self.cluster.lane()
+    }
+    /// Switch the execution lane for subsequent jobs. Both lanes'
+    /// backends persist, so switching back to the DAG lane finds its
+    /// split cache still warm. Fails if the DAG lane is requested while
+    /// fault machinery is armed (the lane does not model node loss or
+    /// task failures).
+    pub fn set_lane(&mut self, lane: Lane) -> Result<()> {
+        anyhow::ensure!(
+            !(lane == Lane::InMemoryDag && self.cluster.faults_armed()),
+            "the in-memory DAG lane does not model node loss or transient task failures; \
+             clear the fault plan or keep the hadoop-mr lane"
+        );
+        self.cluster.set_lane(lane);
+        Ok(())
     }
     /// Hadoop-style counters merged across every job this session ran.
     pub fn counters(&self) -> &Counters {
@@ -638,6 +675,76 @@ mod tests {
         assert_eq!(again.0, m2);
         assert_eq!(again.4, sim_fail);
         assert_eq!(again.5, failed);
+    }
+
+    #[test]
+    fn dag_lane_session_is_byte_identical_and_strictly_faster() {
+        let run = |lane: Lane| {
+            let mut s = ClusterSession::builder().test(4).seed(51).lane(lane).build().unwrap();
+            assert_eq!(s.lane(), lane);
+            let mut spec = SpatialSpec::new(2500, 4, 51);
+            spec.outlier_frac = 0.0;
+            let data = s.ingest_spec("pts", &spec);
+            let out =
+                KMedoids::mapreduce().plus_plus().k(4).seed(51).build().fit(&mut s, &data).unwrap();
+            (out.medoids, out.cost, out.dist_evals, out.iterations, out.sim_seconds)
+        };
+        let mr = run(Lane::HadoopMr);
+        let dag = run(Lane::InMemoryDag);
+        assert_eq!(mr.0, dag.0, "medoids must be byte-identical across lanes");
+        assert_eq!(mr.1, dag.1, "cost bits");
+        assert_eq!(mr.2, dag.2, "dist evals");
+        assert_eq!(mr.3, dag.3, "iterations");
+        assert!(
+            dag.4 < mr.4,
+            "the DAG lane must be strictly cheaper on sim time ({} >= {})",
+            dag.4,
+            mr.4
+        );
+    }
+
+    #[test]
+    fn exec_config_sets_the_whole_group_and_shims_agree() {
+        let exec = ExecConfig {
+            lane: Lane::InMemoryDag,
+            threads: 3,
+            speculation: false,
+            max_attempts: 7,
+            ..ExecConfig::default()
+        };
+        let via_exec = ClusterSession::builder().test(4).exec(exec).build().unwrap();
+        let via_shims = ClusterSession::builder()
+            .test(4)
+            .lane(Lane::InMemoryDag)
+            .threads(3)
+            .speculation(false)
+            .max_attempts(7)
+            .build()
+            .unwrap();
+        for s in [&via_exec, &via_shims] {
+            assert_eq!(s.lane(), Lane::InMemoryDag);
+            assert_eq!(s.compute_threads(), 3);
+            assert_eq!(s.cluster().max_attempts, 7);
+            assert!(!s.cluster().speculation);
+        }
+    }
+
+    #[test]
+    fn dag_lane_with_faults_is_rejected_at_build_and_at_switch() {
+        let plan = FaultPlan { task_fail_rate: 0.1, seed: 3, ..FaultPlan::none() };
+        let err = ClusterSession::builder()
+            .test(4)
+            .lane(Lane::InMemoryDag)
+            .faults(plan.clone())
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("DAG lane"), "{err:#}");
+
+        let mut s = ClusterSession::builder().test(4).faults(plan).build().unwrap();
+        assert_eq!(s.lane(), Lane::HadoopMr);
+        let err = s.set_lane(Lane::InMemoryDag).unwrap_err();
+        assert!(format!("{err:#}").contains("DAG lane"), "{err:#}");
+        assert_eq!(s.lane(), Lane::HadoopMr, "failed switch leaves the lane unchanged");
     }
 
     #[test]

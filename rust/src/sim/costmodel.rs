@@ -67,6 +67,19 @@ pub struct CostModel {
     /// throttles them), so only the non-overlapped remainder lands on
     /// the job timeline.
     pub rereplication_overlap: f64,
+    /// DAG-lane per-task launch cost: dispatching a closure to an
+    /// already-running executor core, replacing the Hadoop lane's JVM
+    /// spawn (`task_overhead_s`) + heartbeat wait (`sched_delay_s`).
+    pub dag_task_launch_s: f64,
+    /// DAG-lane per-job fixed overhead: DAG scheduling on a resident
+    /// driver, replacing the Hadoop lane's `job_overhead_s` (job setup,
+    /// split computation, cleanup).
+    pub dag_job_overhead_s: f64,
+    /// Fraction of DAG-lane shuffle transfer hidden under upstream
+    /// execution. Push-based shuffle streams partitions as they are
+    /// produced, so overlap is much higher than Hadoop's slow-start
+    /// copy phase (`shuffle_overlap`).
+    pub dag_shuffle_overlap: f64,
 }
 
 impl Default for CostModel {
@@ -81,6 +94,9 @@ impl Default for CostModel {
             disk_write_mb_s: 50.0,
             shuffle_overlap: 0.65,
             rereplication_overlap: 0.8,
+            dag_task_launch_s: 0.05,
+            dag_job_overhead_s: 0.3,
+            dag_shuffle_overlap: 0.92,
         }
     }
 }
@@ -94,6 +110,9 @@ impl CostModel {
             task_overhead_s: 0.0,
             sched_delay_s: 0.0,
             shuffle_overlap: 0.0,
+            dag_task_launch_s: 0.0,
+            dag_job_overhead_s: 0.0,
+            dag_shuffle_overlap: 0.0,
             ..CostModel::default()
         }
     }
@@ -174,6 +193,39 @@ impl CostModel {
         };
         (1.0 - self.shuffle_overlap) * self.net_seconds(bytes, mb_s, cluster.net.latency_s)
     }
+
+    /// DAG-lane duration of one task on an executor core: closure
+    /// dispatch instead of JVM spawn + heartbeat scheduling, then the
+    /// same measured CPU/disk work. Map inputs are either cached in
+    /// executor memory or read node-locally, so there is no remote-read
+    /// network term here; reducer shuffle is charged separately via
+    /// [`CostModel::dag_shuffle_seconds`].
+    pub fn dag_task_seconds(&self, cluster: &ClusterConfig, node_idx: usize, work: &TaskWork) -> f64 {
+        let node = &cluster.nodes[node_idx];
+        self.dag_task_launch_s + self.cpu_seconds(node, work) + self.io_seconds(work)
+    }
+
+    /// Push-based shuffle transfer for one reducer pulling `bytes` from
+    /// `src` to `dst`: same network path as the Hadoop lane, but with
+    /// [`CostModel::dag_shuffle_overlap`] of the transfer streamed under
+    /// upstream execution.
+    pub fn dag_shuffle_seconds(
+        &self,
+        cluster: &ClusterConfig,
+        src: usize,
+        dst: usize,
+        bytes: u64,
+    ) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let mb_s = if cluster.nodes[src].host == cluster.nodes[dst].host {
+            cluster.net.intra_host_mb_s
+        } else {
+            cluster.net.inter_host_mb_s
+        };
+        (1.0 - self.dag_shuffle_overlap) * self.net_seconds(bytes, mb_s, cluster.net.latency_s)
+    }
 }
 
 #[cfg(test)]
@@ -238,6 +290,24 @@ mod tests {
         // Overlap credits most of the transfer.
         let full = m.net_seconds(512 << 20, c.net.inter_host_mb_s, c.net.latency_s);
         assert!(large < full, "overlap must hide part of the transfer");
+    }
+
+    #[test]
+    fn dag_lane_tasks_and_shuffle_are_strictly_cheaper() {
+        let m = CostModel::default();
+        let c = cluster();
+        let work = TaskWork { rows_parsed: 100_000, dist_evals: 1_000_000, ..Default::default() };
+        let hadoop = m.task_seconds(&c, 1, None, &work);
+        let dag = m.dag_task_seconds(&c, 1, &work);
+        assert!(dag < hadoop, "{dag} >= {hadoop}");
+        // The gap is exactly the launch-path fixed costs for local work
+        // (sched_delay_s is charged at assignment time, not here).
+        let gap = hadoop - dag;
+        let expect = m.task_overhead_s - m.dag_task_launch_s;
+        assert!((gap - expect).abs() < 1e-9, "{gap} vs {expect}");
+        assert!(m.dag_shuffle_seconds(&c, 0, 1, 1 << 20) < m.shuffle_seconds(&c, 0, 1, 1 << 20));
+        assert_eq!(m.dag_shuffle_seconds(&c, 0, 1, 0), 0.0);
+        assert!(m.dag_job_overhead_s < m.job_overhead_s);
     }
 
     #[test]

@@ -29,6 +29,12 @@
 //!     evaluating more distances. Cost bits seal the per-point f32
 //!     min-distances: the lanes fold them block-by-block in the same
 //!     order, so any mindist bit flip lands in the cost bits.
+//! (g) **Execution-lane identity** — for the MR-engine algorithms, an
+//!     in-memory-DAG-lane twin of the default Hadoop-lane fit matches
+//!     on medoids, cost bits, iteration count, labels, and exact
+//!     distance-eval counts, while finishing strictly cheaper on
+//!     simulated time (the DAG lane drops JVM launch, input re-parse,
+//!     and shuffle-spill costs — never compute).
 //!
 //! Adding an algorithm = adding one row to [`MATRIX`] (the coreset
 //! pipeline entered exactly that way). The declared factors document
@@ -46,6 +52,7 @@ use kmedoids_mr::clustering::metrics::{
     adjusted_rand_index, brute_labels_metric, total_cost_metric,
 };
 use kmedoids_mr::driver::{Algorithm, Experiment};
+use kmedoids_mr::mapreduce::Lane;
 use kmedoids_mr::prelude::*;
 use kmedoids_mr::runtime::assign_points;
 use std::sync::Arc;
@@ -110,6 +117,7 @@ struct Fit {
     labels: Option<Vec<u32>>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn fit_once(
     algorithm: Algorithm,
     dataset: &SpatialDataset,
@@ -118,6 +126,7 @@ fn fit_once(
     threads: usize,
     seed: u64,
     pruning: PruningMode,
+    lane: Lane,
 ) -> Fit {
     let mut session =
         ClusterSession::builder().test(4).seed(seed).threads(threads).build().unwrap();
@@ -128,6 +137,7 @@ fn fit_once(
     exp.metric = metric;
     exp.update = UpdateStrategy::Exact;
     exp.pruning = pruning;
+    exp.lane = lane;
     exp.with_quality = true; // label_pass where the solver supports it
     let out = exp
         .clusterer()
@@ -158,11 +168,27 @@ fn run_cell_matrix(metric: Metric, spec: &SpatialSpec) {
     let mut oracle_costs: Vec<(Algorithm, f64, f64)> = Vec::new();
     for row in MATRIX {
         // (a) identity across compute-thread widths.
-        let base =
-            fit_once(row.algorithm, &dataset, &spec, metric, THREADS[0], seed, PruningMode::Auto);
+        let base = fit_once(
+            row.algorithm,
+            &dataset,
+            &spec,
+            metric,
+            THREADS[0],
+            seed,
+            PruningMode::Auto,
+            Lane::HadoopMr,
+        );
         for &t in &THREADS[1..] {
-            let other =
-                fit_once(row.algorithm, &dataset, &spec, metric, t, seed, PruningMode::Auto);
+            let other = fit_once(
+                row.algorithm,
+                &dataset,
+                &spec,
+                metric,
+                t,
+                seed,
+                PruningMode::Auto,
+                Lane::HadoopMr,
+            );
             let name = row.algorithm.name();
             assert_eq!(base.medoids, other.medoids, "[{cell}] {name}: medoids diverged at t={t}");
             assert_eq!(base.cost, other.cost, "[{cell}] {name}: cost diverged at t={t}");
@@ -186,8 +212,16 @@ fn run_cell_matrix(metric: Metric, spec: &SpatialSpec) {
         // kernels. The lanes must agree exactly — and pruning must never
         // add evaluations. (sim clock and eval counts legitimately differ:
         // skipped work is skipped simulated work.)
-        let dense =
-            fit_once(row.algorithm, &dataset, &spec, metric, THREADS[0], seed, PruningMode::Off);
+        let dense = fit_once(
+            row.algorithm,
+            &dataset,
+            &spec,
+            metric,
+            THREADS[0],
+            seed,
+            PruningMode::Off,
+            Lane::HadoopMr,
+        );
         let name = row.algorithm.name();
         assert_eq!(base.medoids, dense.medoids, "[{cell}] {name}: pruned medoids diverged");
         assert_eq!(
@@ -208,6 +242,56 @@ fn run_cell_matrix(metric: Metric, spec: &SpatialSpec) {
             base.dist_evals,
             dense.dist_evals
         );
+
+        // (g) execution-lane identity: the DAG lane reuses the exact
+        // map/reduce compute functions, so for every MR-engine
+        // algorithm an in-memory-DAG twin must match the Hadoop-lane
+        // fit byte-for-byte — and finish strictly cheaper on simulated
+        // time (no JVM launch, no input re-parse, push shuffle). The
+        // serial engines never submit jobs and refuse lane overrides.
+        let uses_lane = matches!(
+            row.algorithm,
+            Algorithm::KMedoidsPlusPlusMR
+                | Algorithm::KMedoidsRandomMR
+                | Algorithm::KMedoidsScalableMR
+                | Algorithm::KMedoidsCoresetMR
+                | Algorithm::KMeansMR
+        );
+        if uses_lane {
+            let dag = fit_once(
+                row.algorithm,
+                &dataset,
+                &spec,
+                metric,
+                THREADS[0],
+                seed,
+                PruningMode::Auto,
+                Lane::InMemoryDag,
+            );
+            assert_eq!(base.medoids, dag.medoids, "[{cell}] {name}: dag medoids diverged");
+            assert_eq!(
+                base.cost.to_bits(),
+                dag.cost.to_bits(),
+                "[{cell}] {name}: dag cost bits diverged ({} vs {})",
+                base.cost,
+                dag.cost
+            );
+            assert_eq!(
+                base.iterations, dag.iterations,
+                "[{cell}] {name}: dag iteration count diverged"
+            );
+            assert_eq!(base.labels, dag.labels, "[{cell}] {name}: dag labels diverged");
+            assert_eq!(
+                base.dist_evals, dag.dist_evals,
+                "[{cell}] {name}: dag dist evals diverged"
+            );
+            assert!(
+                dag.sim_seconds < base.sim_seconds,
+                "[{cell}] {name}: dag lane not strictly cheaper ({} vs {})",
+                dag.sim_seconds,
+                base.sim_seconds
+            );
+        }
 
         // (b) reported cost agrees with the oracle cost of its own medoids.
         assert_eq!(base.medoids.len(), K, "[{cell}] {}", row.algorithm.name());

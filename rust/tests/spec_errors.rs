@@ -43,6 +43,8 @@ fn good_cells_in_the_same_shapes_still_parse() {
             "dataset": {"n_points": 10}}"#,
         r#"{"algorithm": "kmedoids-scalable-mr", "oversample": {"l": 18, "rounds": 5},
             "dataset": {"n_points": 10}}"#,
+        r#"{"lane": "spark", "dataset": {"n_points": 10}}"#,
+        r#"{"lane": "hadoop-mr", "max_attempts": 6, "dataset": {"n_points": 10}}"#,
     ] {
         experiments_from_str(good).unwrap_or_else(|e| panic!("should parse {good}: {e:#}"));
     }
