@@ -97,6 +97,12 @@ pub struct Experiment {
     pub algorithm: Algorithm,
     pub n_nodes: usize,
     pub spec: SpatialSpec,
+    /// Fit from a dataset file (CSV or [`crate::geo::binfmt`] binary,
+    /// sniffed by magic) instead of generating from `spec` — the
+    /// `dataset: {"file": ...}` spec cell / CLI `run --data FILE`. When
+    /// set, `spec` is only the carrier of generator defaults; the
+    /// session ingests through `ClusterSession::ingest_file`.
+    pub data_file: Option<PathBuf>,
     pub k: usize,
     pub update: UpdateStrategy,
     /// Dissimilarity of the fit (the dataset's dims must be supported).
@@ -156,6 +162,7 @@ impl Experiment {
             algorithm,
             n_nodes,
             spec: SpatialSpec::paper_dataset(dataset, seed),
+            data_file: None,
             k: 9,
             update: UpdateStrategy::paper_scale_default(),
             metric: Metric::SqEuclidean,
@@ -402,7 +409,12 @@ pub fn run_experiment(exp: &Experiment, backend: &Arc<dyn ComputeBackend>) -> Ex
         builder = builder.max_attempts(n);
     }
     let mut session = builder.build().unwrap_or_else(|e| panic!("session build failed: {e:#}"));
-    let data = session.ingest_spec("points", &exp.spec);
+    let data = match &exp.data_file {
+        Some(path) => session
+            .ingest_file("points", path)
+            .unwrap_or_else(|e| panic!("ingest {path:?} failed: {e:#}")),
+        None => session.ingest_spec("points", &exp.spec),
+    };
     let mut r = run_cell(&mut session, exp, &data)
         .unwrap_or_else(|e| panic!("experiment {} failed: {e:#}", exp.algorithm.name()));
     r.wall_s = wall0.elapsed().as_secs_f64();
@@ -425,6 +437,7 @@ mod tests {
             algorithm,
             n_nodes,
             spec,
+            data_file: None,
             fixed_iters: None,
             k: 5,
             update: UpdateStrategy::Sampled { candidates: 64, member_sample: 1024 },

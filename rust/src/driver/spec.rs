@@ -274,6 +274,48 @@ pub fn spatial_spec_from_json(j: &Json, default_seed: u64) -> Result<SpatialSpec
     Ok(s)
 }
 
+/// Parse a `dataset: {"file": ...}` cell: the fit ingests the named
+/// file (CSV or [`crate::geo::binfmt`] binary, sniffed by magic)
+/// instead of generating points. The file is summarized *now* — a
+/// missing or corrupt file, or a `dims` declaration that disagrees with
+/// the file's actual dimensionality, is a typed [`SpecError`] at parse
+/// time, not a panic at fit time. Returns the validation-carrier
+/// [`SpatialSpec`] (n_points/dims filled from the file) plus the path.
+fn file_dataset_from_json(j: &Json, seed: u64) -> Result<(SpatialSpec, std::path::PathBuf)> {
+    check_known_keys(j, "dataset", &["file", "dims", "latlon"])?;
+    let s = j
+        .get("file")
+        .expect("caller checked the file key")
+        .as_str()
+        .ok_or_else(|| SpecError::bad("dataset.file", "must be a path string"))?;
+    if s.is_empty() {
+        bail!(SpecError::bad("dataset.file", "must not be empty"));
+    }
+    let path = std::path::PathBuf::from(s);
+    let summary = crate::geo::binfmt::summarize(&path)
+        .map_err(|e| SpecError::bad("dataset.file", format!("{s:?}: {e:#}")))?;
+    if let Some(v) = j.get("dims") {
+        let d = as_pos_usize(v, "dataset.dims")?;
+        if d != summary.dims {
+            bail!(SpecError::bad(
+                "dataset.dims",
+                format!("file {s:?} has {} dims but the cell declares {d}", summary.dims),
+            ));
+        }
+    }
+    let mut spec = SpatialSpec::new(summary.count, 9, seed);
+    spec.dims = summary.dims;
+    if let Some(v) = j.get("latlon") {
+        spec.latlon = v
+            .as_bool()
+            .ok_or_else(|| SpecError::bad("dataset.latlon", "must be true or false"))?;
+        if spec.latlon && spec.dims != 2 {
+            bail!(SpecError::bad("dataset.latlon", "requires dims = 2 ((lat, lon) pairs)"));
+        }
+    }
+    Ok((spec, path))
+}
+
 // ---- Experiment -------------------------------------------------------------
 
 /// Does this algorithm honor the `update` strategy knob?
@@ -361,7 +403,25 @@ pub fn experiment_to_json(e: &Experiment) -> Json {
         ("metric", Json::Str(e.metric.name().to_string())),
         ("with_quality", Json::Bool(e.with_quality)),
         ("threads", Json::Num(e.threads as f64)),
-        ("dataset", spatial_spec_to_json(&e.spec)),
+        (
+            "dataset",
+            match &e.data_file {
+                Some(p) => {
+                    // File cells re-declare dims (and latlon when set) so
+                    // re-parsing the emitted spec re-checks the file
+                    // against what this cell saw.
+                    let mut d = vec![
+                        ("file", Json::Str(p.to_string_lossy().into_owned())),
+                        ("dims", Json::Num(e.spec.dims as f64)),
+                    ];
+                    if e.spec.latlon {
+                        d.push(("latlon", Json::Bool(true)));
+                    }
+                    obj(d)
+                }
+                None => spatial_spec_to_json(&e.spec),
+            },
+        ),
     ];
     // Only emit knobs the algorithm honors, mirroring the parse-side
     // validation (a cell never claims settings its solver would ignore).
@@ -457,13 +517,16 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         Some(v) => as_nonneg_u64(v, "seed")?,
         None => 42,
     };
-    let spec = spatial_spec_from_json(
-        j.get("dataset").ok_or_else(|| SpecError::MissingKey {
-            key: "dataset".into(),
-            hint: "every spec cell needs a dataset block".into(),
-        })?,
-        seed,
-    )?;
+    let dataset_j = j.get("dataset").ok_or_else(|| SpecError::MissingKey {
+        key: "dataset".into(),
+        hint: "every spec cell needs a dataset block".into(),
+    })?;
+    let (spec, data_file) = if dataset_j.get("file").is_some() {
+        let (s, p) = file_dataset_from_json(dataset_j, seed)?;
+        (s, Some(p))
+    } else {
+        (spatial_spec_from_json(dataset_j, seed)?, None)
+    };
     let metric = match j.get("metric").and_then(|m| m.as_str()) {
         Some(s) => Metric::parse(s).ok_or_else(|| {
             SpecError::bad(
@@ -697,6 +760,12 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
             .ok_or_else(|| SpecError::bad("with_quality", "must be true or false"))?,
         None => false,
     };
+    if with_quality && data_file.is_some() {
+        bail!(SpecError::bad(
+            "with_quality",
+            "file datasets carry no ground-truth labels, so ARI cannot be computed",
+        ));
+    }
     let threads = match j.get("threads") {
         Some(v) => as_pos_usize(v, "threads")?,
         None => 1,
@@ -705,6 +774,7 @@ pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
         algorithm,
         n_nodes,
         spec,
+        data_file,
         k,
         update,
         metric,
@@ -1520,5 +1590,72 @@ mod tests {
         assert_eq!(e.downcast_ref::<SpecError>().unwrap().key(), "queries");
         let e = scale_opts_from_str(r#"{"scale_div": 0}"#, ScaleOpts::default()).unwrap_err();
         assert_eq!(e.downcast_ref::<SpecError>().unwrap().key(), "scale_div");
+    }
+
+    #[test]
+    fn file_datasets_parse_validate_and_roundtrip() {
+        use crate::geo::{binfmt, Point};
+        let dir = crate::util::tempdir::TempDir::new("spec-file-dataset");
+        let pts: Vec<Point> =
+            (0..20).map(|i| Point::from_slice(&[i as f32, -(i as f32)])).collect();
+        let bin = dir.join("pts.bin");
+        binfmt::write_file(&bin, &pts, None).unwrap();
+        let bin_s = bin.to_string_lossy().into_owned();
+
+        // n_points/dims are learned from the file, and the path sticks.
+        let cells =
+            experiments_from_str(&format!(r#"{{"dataset": {{"file": "{bin_s}"}}, "k": 3}}"#))
+                .unwrap();
+        assert_eq!(cells[0].data_file.as_deref(), Some(bin.as_path()));
+        assert_eq!(cells[0].spec.n_points, 20);
+        assert_eq!(cells[0].spec.dims, 2);
+
+        // File cells survive the to_json → from_json round trip.
+        let text = experiment_to_json(&cells[0]).to_string();
+        let back = experiment_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cells[0]);
+
+        // A matching dims declaration is accepted; a mismatch is typed.
+        experiments_from_str(&format!(r#"{{"dataset": {{"file": "{bin_s}", "dims": 2}}}}"#))
+            .unwrap();
+        let e = experiments_from_str(&format!(
+            r#"{{"dataset": {{"file": "{bin_s}", "dims": 3}}}}"#
+        ))
+        .unwrap_err();
+        let s = e.downcast_ref::<SpecError>().expect("typed SpecError");
+        assert_eq!(s.key(), "dataset.dims");
+        assert!(matches!(s, SpecError::BadValue { .. }), "{s:?}");
+
+        // A missing file is a typed error naming dataset.file.
+        let e = experiments_from_str(r#"{"dataset": {"file": "no/such/file.bin"}}"#)
+            .unwrap_err();
+        assert_eq!(e.downcast_ref::<SpecError>().unwrap().key(), "dataset.file");
+
+        // Generator knobs make no sense next to a file.
+        let e = experiments_from_str(&format!(
+            r#"{{"dataset": {{"file": "{bin_s}", "n_points": 5}}}}"#
+        ))
+        .unwrap_err();
+        let s = e.downcast_ref::<SpecError>().expect("typed SpecError");
+        assert!(matches!(s, SpecError::UnknownKey { .. }), "{s:?}");
+
+        // File datasets carry no ground truth, so ARI is refused up front.
+        let e = experiments_from_str(&format!(
+            r#"{{"with_quality": true, "dataset": {{"file": "{bin_s}"}}}}"#
+        ))
+        .unwrap_err();
+        assert_eq!(e.downcast_ref::<SpecError>().unwrap().key(), "with_quality");
+
+        // CSV files come through the same (sniffed) door.
+        let csv = dir.join("pts.csv");
+        crate::geo::io::write_csv(&csv, &pts).unwrap();
+        let cells = experiments_from_str(&format!(
+            r#"{{"dataset": {{"file": "{}"}}}}"#,
+            csv.to_string_lossy()
+        ))
+        .unwrap();
+        assert!(cells[0].data_file.is_some());
+        assert_eq!(cells[0].spec.n_points, 20);
+        assert_eq!(cells[0].spec.dims, 2);
     }
 }

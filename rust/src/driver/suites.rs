@@ -16,6 +16,7 @@ use crate::clustering::api::SpatialClusterer as _;
 use crate::clustering::observe::StderrProgress;
 use crate::clustering::{ClusterOutcome, Init, UpdateStrategy};
 use crate::config::ClusterConfig;
+use crate::geo::binfmt;
 use crate::geo::datasets::{generate, SpatialSpec};
 use crate::geo::{Metric, Point};
 use crate::mapreduce::{locality_fraction, Lane};
@@ -488,6 +489,67 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
         ("ok", Json::Bool(gate_ok)),
     ]);
 
+    // ---- CSV vs binary file-ingest gate ----------------------------------
+    // Twin one generated dataset into a CSV file and a binary dataset
+    // file, decode both back, and require (a) bit-identical points — CSV
+    // floats print shortest-roundtrip, so parsing must reproduce every
+    // f32 exactly — and (b) the binary decode beating the CSV parse by
+    // at least INGEST_SPEEDUP_FLOOR on row rate. The binary file's
+    // manifest is embedded so the artifact names the exact bytes the
+    // cell measured.
+    header("perf: file-ingest throughput, CSV vs binary (identity + speedup floor)");
+    let in_n = if opts.smoke { 20_000 } else { 200_000 };
+    let ingest_spec = SpatialSpec::new(in_n, 9, opts.seed ^ 0x51ED);
+    let ingest_points = generate(&ingest_spec).points;
+    let tmp = crate::util::tempdir::TempDir::new("perf-ingest");
+    let csv_path = tmp.join("ingest.csv");
+    let bin_path = tmp.join("ingest.bin");
+    crate::geo::io::write_csv(&csv_path, &ingest_points).expect("write ingest CSV twin");
+    binfmt::write_file(&bin_path, &ingest_points, None).expect("write ingest binary twin");
+    let manifest = binfmt::emit_manifest(
+        "perf-ingest",
+        &bin_path,
+        obj(vec![("generator", super::spec::spatial_spec_to_json(&ingest_spec))]),
+    )
+    .expect("ingest manifest");
+    let mut csv_s = f64::INFINITY;
+    let mut csv_points = Vec::new();
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        csv_points = crate::geo::io::read_csv(&csv_path).expect("read ingest CSV twin");
+        csv_s = csv_s.min(t0.elapsed().as_secs_f64());
+    }
+    let mut bin_s = f64::INFINITY;
+    let mut bin_points = Vec::new();
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        bin_points =
+            binfmt::DatasetFile::read(&bin_path).expect("read ingest binary twin").points();
+        bin_s = bin_s.min(t0.elapsed().as_secs_f64());
+    }
+    let ingest_identical = csv_points == ingest_points && bin_points == ingest_points;
+    let ingest_speedup = if bin_s > 0.0 { csv_s / bin_s } else { 0.0 };
+    let ingest_ok = ingest_identical && ingest_speedup >= INGEST_SPEEDUP_FLOOR;
+    eprintln!(
+        "  [perf] ingest {in_n} pts: csv {:.0} rows/s vs binary {:.0} rows/s -> \
+         {ingest_speedup:.1}x (floor {INGEST_SPEEDUP_FLOOR:.1}x), identical={ingest_identical}{}",
+        in_n as f64 / csv_s,
+        in_n as f64 / bin_s,
+        if ingest_ok { "" } else { "  GATE FAILED" }
+    );
+    let ingest_cell = obj(vec![
+        ("n_points", Json::Num(in_n as f64)),
+        ("csv_s", Json::Num(csv_s)),
+        ("bin_s", Json::Num(bin_s)),
+        ("csv_rows_per_s", Json::Num(in_n as f64 / csv_s)),
+        ("bin_rows_per_s", Json::Num(in_n as f64 / bin_s)),
+        ("speedup", Json::Num(ingest_speedup)),
+        ("floor", Json::Num(INGEST_SPEEDUP_FLOOR)),
+        ("identical", Json::Bool(ingest_identical)),
+        ("manifest", manifest.to_json()),
+        ("ok", Json::Bool(ingest_ok)),
+    ]);
+
     obj(vec![
         ("bench", Json::Str("perf".into())),
         ("smoke", Json::Bool(opts.smoke)),
@@ -499,6 +561,7 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
         ("e2e", e2e),
         ("speedup_vs_1_thread", Json::Obj(speedup)),
         ("pruning", pruning_gate),
+        ("ingest", ingest_cell),
         ("identical_outputs", Json::Bool(rows.iter().all(|r| r.identical))),
     ])
 }
@@ -506,6 +569,10 @@ pub fn perf_suite(backend: &Arc<dyn ComputeBackend>, opts: &PerfOpts) -> Json {
 /// Minimum dense/pruned exact-eval ratio the `bench perf` gate (and CI's
 /// `--smoke` run) requires on the clustered gate dataset.
 pub const PRUNING_EVAL_FLOOR: f64 = 3.0;
+
+/// Minimum binary-over-CSV row-rate ratio the `bench perf` file-ingest
+/// gate requires when decoding the same dataset from both formats.
+pub const INGEST_SPEEDUP_FLOOR: f64 = 5.0;
 
 fn kernel_json(stats: &crate::util::bench::Stats, dist_evals_exact: u64) -> Json {
     let mut j = stats.to_json();
@@ -1440,6 +1507,17 @@ mod tests {
         // No checkpoint sink in this sweep, so Auto prunes the e2e rows.
         let e2e0 = &j.get("e2e").unwrap().as_arr().unwrap()[0];
         assert!(e2e0.get("pruned_frac").unwrap().as_f64().unwrap() > 0.0);
+        // The file-ingest gate holds: both formats decode the same points
+        // and the binary lane clears the row-rate floor, with a manifest
+        // whose checksum names the measured bytes.
+        let ing = j.get("ingest").unwrap();
+        assert_eq!(ing.get("identical").unwrap().as_bool(), Some(true));
+        assert_eq!(ing.get("ok").unwrap().as_bool(), Some(true));
+        let sp = ing.get("speedup").unwrap().as_f64().unwrap();
+        assert!(sp >= INGEST_SPEEDUP_FLOOR, "ingest speedup {sp:.2}x below floor");
+        let man = ing.get("manifest").unwrap();
+        assert_eq!(man.get("format").unwrap().as_str(), Some(binfmt::FORMAT_BINARY));
+        assert_eq!(man.get("count").unwrap().as_usize(), ing.get("n_points").unwrap().as_usize());
         // The document is valid, re-parseable JSON.
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
@@ -1464,6 +1542,7 @@ mod tests {
             assert_eq!(row.get("pruned_frac").unwrap().as_f64(), Some(0.0));
         }
         assert_eq!(j.get("pruning").unwrap().get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("ingest").unwrap().get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("identical_outputs").unwrap().as_bool(), Some(true));
     }
 
@@ -1560,6 +1639,7 @@ mod tests {
                 "e2e",
                 "speedup_vs_1_thread",
                 "pruning",
+                "ingest",
                 "identical_outputs",
             ],
         );
@@ -1610,6 +1690,27 @@ mod tests {
                 "identical",
                 "ok",
             ],
+        );
+        assert_exact_keys(
+            j.get("ingest").unwrap(),
+            "BENCH_perf.json ingest gate",
+            &[
+                "n_points",
+                "csv_s",
+                "bin_s",
+                "csv_rows_per_s",
+                "bin_rows_per_s",
+                "speedup",
+                "floor",
+                "identical",
+                "manifest",
+                "ok",
+            ],
+        );
+        assert_exact_keys(
+            j.get("ingest").unwrap().get("manifest").unwrap(),
+            "BENCH_perf.json ingest manifest",
+            &["count", "crc32", "dims", "file", "format", "name", "provenance", "weights"],
         );
     }
 

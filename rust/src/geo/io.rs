@@ -28,23 +28,59 @@ impl std::fmt::Display for NonFiniteCoord {
 
 impl std::error::Error for NonFiniteCoord {}
 
+/// Typed rejection for a row whose dimensionality disagrees with the
+/// rows before it. Every dataset surface (CSV, the binary format in
+/// [`crate::geo::binfmt`], the in-memory ingest asserts) requires one
+/// uniform dimensionality; recover the variant from the `anyhow` chain
+/// with `err.downcast_ref::<MixedDims>()`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixedDims {
+    /// 1-based line (CSV) or 0-based point index (in-memory slices).
+    pub line: usize,
+    /// Dimensionality of the offending row.
+    pub got: usize,
+    /// Dimensionality established by the earlier rows.
+    pub expected: usize,
+}
+
+impl std::fmt::Display for MixedDims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "row {} has {} coordinates but earlier rows have {}",
+            self.line, self.got, self.expected
+        )
+    }
+}
+
+impl std::error::Error for MixedDims {}
+
 /// Write points as comma-separated coordinate lines. Returns bytes written.
+///
+/// Non-finite coordinates are refused with the same typed
+/// [`NonFiniteCoord`] that [`read_csv`] raises, so a write-then-read
+/// round trip either succeeds or fails symmetrically — `write_csv` can
+/// never emit a file its own reader rejects.
 pub fn write_csv(path: &Path, points: &[Point]) -> Result<u64> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
     let mut bytes = 0u64;
     let mut line = String::new();
-    for p in points {
+    for (row, p) in points.iter().enumerate() {
         line.clear();
         for (i, c) in p.coords().iter().enumerate() {
+            if !c.is_finite() {
+                let e = NonFiniteCoord { index: i, token: c.to_string() };
+                return Err(anyhow::Error::new(e).context(format!("{path:?}: point {row}")));
+            }
             if i > 0 {
                 line.push(',');
             }
             line.push_str(&c.to_string());
         }
         line.push('\n');
-        bytes += line.len() as u64;
         w.write_all(line.as_bytes())?;
+        bytes += line.len() as u64;
     }
     w.flush()?;
     Ok(bytes)
@@ -65,12 +101,8 @@ pub fn read_csv(path: &Path) -> Result<Vec<Point>> {
         let p = parse_line(t).with_context(|| format!("{path:?}:{}", i + 1))?;
         if let Some(first) = out.first() {
             if first.dims() != p.dims() {
-                bail!(
-                    "{path:?}:{}: row has {} coordinates but earlier rows have {}",
-                    i + 1,
-                    p.dims(),
-                    first.dims()
-                );
+                let e = MixedDims { line: i + 1, got: p.dims(), expected: first.dims() };
+                return Err(anyhow::Error::new(e).context(format!("{path:?}:{}", i + 1)));
             }
         }
         out.push(p);
@@ -139,6 +171,44 @@ mod tests {
         std::fs::write(&path, "1,2\n1,2,3\n").unwrap();
         let e = read_csv(&path).unwrap_err();
         assert!(format!("{e:#}").contains("coordinates"), "{e:#}");
+        // The rejection is a typed error, not a stringly bail: the line,
+        // found dims, and expected dims are all recoverable.
+        assert_eq!(
+            e.downcast_ref::<MixedDims>(),
+            Some(&MixedDims { line: 2, got: 3, expected: 2 }),
+            "{e:#}"
+        );
+        assert!(format!("{e:#}").contains(":2"), "context must name line 2: {e:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_csv_rejects_non_finite_coordinates() {
+        let dir = std::env::temp_dir().join("kmr_io_test_wnf");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("nf.csv");
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let pts = vec![Point::new(1.0, 2.0), Point::new(bad, 4.0)];
+            let e = write_csv(&path, &pts).unwrap_err();
+            let t = e.downcast_ref::<NonFiniteCoord>().expect("typed NonFiniteCoord");
+            assert_eq!(t.index, 0, "{e:#}");
+            assert!(format!("{e:#}").contains("point 1"), "{e:#}");
+        }
+        // Symmetry: whatever write_csv accepts, read_csv accepts back.
+        let good = vec![Point::new(1.0, 2.0), Point::new(3.0, 4.0)];
+        write_csv(&path, &good).unwrap();
+        assert_eq!(read_csv(&path).unwrap(), good);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_csv_byte_count_matches_file_size() {
+        let dir = std::env::temp_dir().join("kmr_io_test_bytes");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sized.csv");
+        let pts = vec![Point::new(1.5, -2.25), Point::from_slice(&[0.125, 9.0])];
+        let n = write_csv(&path, &pts).unwrap();
+        assert_eq!(n, std::fs::metadata(&path).unwrap().len());
         std::fs::remove_file(&path).ok();
     }
 

@@ -17,6 +17,7 @@
 //! paper's workload does not regress while general-metric K-Medoids
 //! (Mazzetto et al.; Bahmani et al.) becomes expressible.
 
+pub mod binfmt;
 pub mod datasets;
 pub mod index;
 pub mod io;

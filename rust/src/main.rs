@@ -21,14 +21,15 @@ use anyhow::{bail, Context, Result};
 use kmedoids_mr::config::ClusterConfig;
 use kmedoids_mr::driver::suites::{LanesOpts, ScaleOpts, ServeOpts, SuiteOpts};
 use kmedoids_mr::driver::{run_cell, spec, Algorithm, Experiment, ExperimentResult};
+use kmedoids_mr::geo::binfmt;
 use kmedoids_mr::geo::datasets::{generate, SpatialSpec};
-use kmedoids_mr::geo::io::write_csv;
+use kmedoids_mr::geo::io::{read_csv, write_csv};
 use kmedoids_mr::geo::{Metric, MAX_DIMS};
 use kmedoids_mr::mapreduce::Lane;
 use kmedoids_mr::prelude::{ClusterSession, IterationLog, PruningMode, StderrProgress};
 use kmedoids_mr::report;
 use kmedoids_mr::runtime::{self, BackendKind};
-use kmedoids_mr::util::json::Json;
+use kmedoids_mr::util::json::{obj, Json};
 use std::collections::HashMap;
 
 fn main() {
@@ -157,6 +158,7 @@ fn real_main() -> Result<()> {
     let args = Args::parse(&argv[1..]);
     match cmd.as_str() {
         "generate" => cmd_generate(&args),
+        "convert" => cmd_convert(&args),
         "run" => cmd_run(&args),
         "bench" => cmd_bench(&args),
         "inspect-artifacts" => cmd_inspect(&args),
@@ -174,8 +176,11 @@ fn print_help() {
 
 USAGE:
   kmedoids-mr generate --points N [--hotspots H] [--dims D] [--latlon]
-                    [--seed S] --out FILE.csv
-  kmedoids-mr run   [--algo ALGO] [--nodes N] [--dataset 0|1|2] [--k K]
+                    [--seed S] --out FILE (.csv extension writes CSV,
+                    anything else the binary dataset format)
+  kmedoids-mr convert IN OUT   (CSV <-> binary, direction sniffed from IN)
+  kmedoids-mr run   [--algo ALGO] [--nodes N] [--dataset 0|1|2 | --data FILE]
+                    [--k K]
                     [--metric METRIC] [--dims D] [--oversample L] [--rounds R]
                     [--coreset-size C] [--pruning on|off|auto]
                     [--lane hadoop-mr|in-memory-dag] [--max-attempts N]
@@ -270,9 +275,19 @@ byte-identical to the batch assign pass and every online update kept the
 weighted coreset cost monotone. A --spec file accepts keys threads /
 queries / update_frac / batch / coreset_size / scale_div / seed.
 
+Dataset files (see README \"Dataset files & manifests\"): `generate
+--out` writes CSV when the extension is .csv and the zero-copy binary
+dataset format otherwise; `convert` flips a file between the two
+formats. Both commands write a content-addressed `*.manifest.json`
+sibling (format, dims, count, CRC-32, provenance). `run --data FILE`
+and a spec cell's `dataset: {{\"file\": ...}}` ingest either format,
+sniffed by magic, and produce labels, medoids and cost bit-identical
+to the in-memory generator path.
+
 Run-spec JSON (one cell object or an array; see driver::spec docs):
   {{\"algorithm\": \"kmedoids++-mr\", \"nodes\": 7, \"k\": 9,
    \"dataset\": {{\"paper_dataset\": 0, \"scale_div\": 100}}}}
+  — or point a cell at a file: \"dataset\": {{\"file\": \"points.bin\"}}
 "
     );
 }
@@ -307,8 +322,56 @@ fn cmd_generate(args: &Args) -> Result<()> {
         spec.latlon = true;
     }
     let d = generate(&spec);
-    let bytes = write_csv(std::path::Path::new(out), &d.points)?;
-    println!("wrote {n} points ({bytes} bytes) to {out}");
+    let out_path = std::path::Path::new(out);
+    let csv = out_path.extension().and_then(|e| e.to_str()) == Some("csv");
+    let bytes = if csv {
+        write_csv(out_path, &d.points)?
+    } else {
+        binfmt::write_file(out_path, &d.points, None)?
+    };
+    let name = out_path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset");
+    let provenance = obj(vec![("generator", spec::spatial_spec_to_json(&spec))]);
+    let m = binfmt::emit_manifest(name, out_path, provenance)?;
+    println!("wrote {n} points ({bytes} bytes, {}) to {out}", m.format);
+    println!("manifest: {} (crc32 {:08x})", binfmt::manifest_path(out_path).display(), m.crc32);
+    Ok(())
+}
+
+/// `convert`: flip a dataset file between the CSV and binary formats
+/// (direction sniffed from the input's magic), writing the output
+/// atomically with a content-addressed manifest sibling that is
+/// verified against the output bytes before the command reports success.
+fn cmd_convert(args: &Args) -> Result<()> {
+    args.check_known("convert", &[])?;
+    args.check_positionals("convert", 2)?;
+    let [input, output] = match args.positional.as_slice() {
+        [i, o] => [i.as_str(), o.as_str()],
+        _ => bail!("usage: kmedoids-mr convert IN OUT (CSV <-> binary, direction sniffed)"),
+    };
+    let (in_path, out_path) = (std::path::Path::new(input), std::path::Path::new(output));
+    let to_csv = binfmt::is_binary(in_path)?;
+    let bytes = if to_csv {
+        let df = binfmt::DatasetFile::read(in_path)?;
+        if df.weighted() {
+            bail!("{input}: carries a weight plane, which CSV cannot represent; keep it binary");
+        }
+        write_csv(out_path, &df.points())?
+    } else {
+        let points = read_csv(in_path)?;
+        binfmt::write_file(out_path, &points, None)?
+    };
+    let name = out_path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset");
+    let provenance = obj(vec![("source", Json::Str(input.to_string()))]);
+    let m = binfmt::emit_manifest(name, out_path, provenance)?;
+    binfmt::verify_manifest(out_path)?;
+    println!(
+        "converted {input} ({}) -> {output} ({}, {bytes} bytes, {} points, crc32 {:08x})",
+        if to_csv { binfmt::FORMAT_BINARY } else { binfmt::FORMAT_CSV },
+        m.format,
+        m.count,
+        m.crc32,
+    );
+    println!("manifest: {}", binfmt::manifest_path(out_path).display());
     Ok(())
 }
 
@@ -351,7 +414,10 @@ fn run_one_cell(
         session.compute_threads(),
         if session.compute_threads() == 1 { "" } else { "s" }
     );
-    let data = session.ingest_spec("points", &exp.spec);
+    let data = match &exp.data_file {
+        Some(path) => session.ingest_file("points", path)?,
+        None => session.ingest_spec("points", &exp.spec),
+    };
     let r = run_cell(&mut session, exp, &data)?;
     print!("\niterations:\n{}", report::iteration_trace(&log.events()));
     println!("\n  simulated time : {} ms", r.time_ms);
@@ -370,9 +436,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(
         "run",
         &[
-            "spec", "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds",
-            "coreset-size", "pruning", "lane", "max-attempts", "checkpoint-dir", "resume",
-            "scale", "seed", "backend", "threads", "quality", "trace",
+            "spec", "algo", "nodes", "dataset", "data", "k", "metric", "dims", "oversample",
+            "rounds", "coreset-size", "pruning", "lane", "max-attempts", "checkpoint-dir",
+            "resume", "scale", "seed", "backend", "threads", "quality", "trace",
         ],
     )?;
     args.check_positionals("run", 0)?;
@@ -381,7 +447,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     // Spec-file mode: drive any cell grid from JSON.
     if let Some(path) = args.get("spec") {
         for flag in [
-            "algo", "nodes", "dataset", "k", "metric", "dims", "oversample", "rounds",
+            "algo", "nodes", "dataset", "data", "k", "metric", "dims", "oversample", "rounds",
             "coreset-size", "pruning", "lane", "max-attempts", "checkpoint-dir", "resume",
             "scale", "seed", "quality", "threads",
         ] {
@@ -436,6 +502,30 @@ fn cmd_run(args: &Args) -> Result<()> {
     if metric == Metric::Haversine {
         // Haversine runs cluster city clouds on the sphere.
         exp.spec.latlon = true;
+    }
+    if let Some(file) = args.get("data") {
+        for flag in ["dataset", "scale", "dims"] {
+            if args.has(flag) {
+                bail!("--{flag} conflicts with --data (the file already fixes the dataset)");
+            }
+        }
+        if args.has("quality") {
+            bail!("--quality conflicts with --data (file datasets carry no ground-truth labels)");
+        }
+        if metric == Metric::Haversine {
+            bail!(
+                "--metric haversine needs declared (lat, lon) data; drive file datasets \
+                 through --spec with dataset.latlon = true"
+            );
+        }
+        let path = std::path::Path::new(file);
+        let summary = binfmt::summarize(path).with_context(|| format!("--data {file}"))?;
+        if !metric.supports_dims(summary.dims) {
+            bail!("--metric {} does not support the file's {} dims", metric.name(), summary.dims);
+        }
+        exp.spec.n_points = summary.count;
+        exp.spec.dims = summary.dims;
+        exp.data_file = Some(path.to_path_buf());
     }
     if args.has("oversample") || args.has("rounds") {
         if algo != Algorithm::KMedoidsScalableMR {
@@ -1009,12 +1099,30 @@ fn cmd_bench_perf(args: &Args) -> Result<()> {
                 "pruned lane byte-identical to dense at {red:.1}x fewer dist evals \
                  (floor {floor:.1}x): yes"
             );
-            Ok(())
         }
         _ if gate.get("identical").and_then(|v| v.as_bool()) != Some(true) => {
             bail!("pruned assignment DIVERGED from the dense lane (bound-maintenance bug)")
         }
         _ => bail!("pruned lane reduced dist evals only {red:.2}x (< {floor:.1}x floor)"),
+    }
+    // Blocking ingest gate: the binary dataset format must decode the
+    // same points as its CSV twin and beat CSV parsing by the declared
+    // throughput floor.
+    let ing = report.get("ingest").context("BENCH_perf.json is missing the ingest cell")?;
+    let speedup = ing.get("speedup").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+    let ing_floor = ing.get("floor").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+    match ing.get("ok").and_then(|v| v.as_bool()) {
+        Some(true) => {
+            println!(
+                "binary ingest identical to CSV at {speedup:.1}x the throughput \
+                 (floor {ing_floor:.1}x): yes"
+            );
+            Ok(())
+        }
+        _ if ing.get("identical").and_then(|v| v.as_bool()) != Some(true) => {
+            bail!("binary ingest decoded DIFFERENT points than its CSV twin (codec bug)")
+        }
+        _ => bail!("binary ingest only {speedup:.2}x faster than CSV (< {ing_floor:.1}x floor)"),
     }
 }
 

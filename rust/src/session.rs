@@ -279,6 +279,19 @@ impl ClusterSession {
         self.ingest_inner(name, points, None, None)
     }
 
+    /// Ingest a dataset file, sniffed by magic: binary
+    /// [`crate::geo::binfmt`] files take the zero-copy decode path,
+    /// anything else parses as CSV ([`crate::geo::io::read_csv`]). Both
+    /// readers fully validate (typed errors for truncation/corruption,
+    /// non-finite coordinates, mixed dims), so a file that ingests is a
+    /// file every fit can trust. No ground truth; no lat/lon claim (the
+    /// solvers fall back to a coordinate-range check for haversine).
+    pub fn ingest_file(&mut self, name: &str, path: &std::path::Path) -> Result<DatasetHandle> {
+        let points = crate::geo::binfmt::read_any(path)?;
+        anyhow::ensure!(!points.is_empty(), "{path:?}: empty dataset");
+        Ok(self.ingest_inner(name, Arc::new(points), None, None))
+    }
+
     fn ingest_inner(
         &mut self,
         name: &str,

@@ -169,8 +169,9 @@ pub struct PackedPoints<'a> {
 }
 
 /// Borrow a little-endian f32 run zero-copy when possible, decode
-/// otherwise (the shared coordinate/weight-run ingestion step).
-fn floats_of(bytes: &[u8]) -> std::borrow::Cow<'_, [f32]> {
+/// otherwise (the shared coordinate/weight-run ingestion step; also the
+/// dataset-file coordinate plane in [`crate::geo::binfmt`]).
+pub(crate) fn floats_of(bytes: &[u8]) -> std::borrow::Cow<'_, [f32]> {
     match f32s_view(bytes) {
         Some(view) => std::borrow::Cow::Borrowed(view),
         None => std::borrow::Cow::Owned(Dec::new(bytes).rest_f32s()),

@@ -326,3 +326,65 @@ fn all_algorithms_share_one_session_with_observers() {
         assert!(names.contains(&expect), "missing events for {expect}");
     }
 }
+
+#[test]
+fn file_ingest_binary_csv_and_generator_fit_identically() {
+    // The same points driven through all three ingest doors — in-memory
+    // generation, a CSV file, a binary dataset file — must produce
+    // byte-identical fits: same medoids, same labels, same cost bits,
+    // same eval counts. This is the contract the CI file-ingest step
+    // re-checks end-to-end through the CLI.
+    use kmedoids_mr::geo::binfmt;
+    use kmedoids_mr::geo::io::write_csv;
+    use kmedoids_mr::util::json::{obj, Json};
+    use kmedoids_mr::util::tempdir::TempDir;
+
+    let spec = clean_spec(4_000, 5, 11);
+    let tmp = TempDir::new("file-ingest-identity");
+    let points = generate(&spec).points;
+    let csv = tmp.join("pts.csv");
+    let bin = tmp.join("pts.bin");
+    write_csv(&csv, &points).unwrap();
+    binfmt::write_file(&bin, &points, None).unwrap();
+
+    let be = || -> Arc<dyn ComputeBackend> { Arc::new(NativeBackend::new(512, 16)) };
+    let solver = || {
+        KMedoids::mapreduce()
+            .plus_plus()
+            .k(5)
+            .seed(11)
+            .update(UpdateStrategy::Exact)
+            .with_labels()
+            .build()
+    };
+
+    let mut s_gen = session_with(5, be(), 11);
+    let d_gen = s_gen.ingest_spec("points", &spec);
+    let out_gen = solver().fit(&mut s_gen, &d_gen).unwrap();
+
+    let mut s_csv = session_with(5, be(), 11);
+    let d_csv = s_csv.ingest_file("points", &csv).unwrap();
+    let out_csv = solver().fit(&mut s_csv, &d_csv).unwrap();
+
+    let mut s_bin = session_with(5, be(), 11);
+    let d_bin = s_bin.ingest_file("points", &bin).unwrap();
+    let out_bin = solver().fit(&mut s_bin, &d_bin).unwrap();
+
+    for (tag, out) in [("csv", &out_csv), ("binary", &out_bin)] {
+        assert_eq!(out.medoids, out_gen.medoids, "{tag}: medoids diverged");
+        assert_eq!(out.labels, out_gen.labels, "{tag}: labels diverged");
+        assert_eq!(out.cost.to_bits(), out_gen.cost.to_bits(), "{tag}: cost bits diverged");
+        assert_eq!(out.iterations, out_gen.iterations, "{tag}: iteration count diverged");
+        assert_eq!(out.dist_evals, out_gen.dist_evals, "{tag}: eval count diverged");
+    }
+
+    // The manifest workflow closes over both formats: emit, then verify
+    // against the bytes on disk.
+    let prov = || obj(vec![("source", Json::Str("integration test".into()))]);
+    for path in [&csv, &bin] {
+        binfmt::emit_manifest("pts", path, prov()).unwrap();
+        let m = binfmt::verify_manifest(path).unwrap();
+        assert_eq!(m.count, 4_000);
+        assert_eq!(m.dims, 2);
+    }
+}
